@@ -1,0 +1,105 @@
+//! Safety-auditing case study (paper App. F.3 analogue).
+//!
+//! The synthetic corpus designates topic 0 as the "unsafe pattern" topic
+//! (the stand-in for the jailbreak-style SFT sample the paper surfaces).
+//! This example shows the paper's workflow:
+//!   1. build the LoRIF index,
+//!   2. attribute a batch of queries drawn from *several* topics,
+//!   3. find training examples that rank top-1 for unusually many
+//!      queries (cross-context proponents),
+//!   4. compare against RepSim retrieval, which surfaces only
+//!      surface-similar examples,
+//!   5. verify actionability with a tail-patch check on the flagged
+//!      examples.
+//!
+//! Run:  cargo run --release --example safety_audit
+
+use std::collections::BTreeMap;
+
+use lorif::app::{build_repsim_scorer, build_store_scorer, ensure_embeddings, Method};
+use lorif::config::Config;
+use lorif::corpus::UNSAFE_TOPIC;
+use lorif::eval::{tail_patch, TailPatchProtocol};
+use lorif::index::{Pipeline, Stage1Options};
+use lorif::query::QueryEngine;
+
+fn main() -> anyhow::Result<()> {
+    lorif::util::logging::init();
+    let mut cfg = Config::default();
+    cfg.n_train = 768;
+    cfg.n_query = 24;
+    cfg.train_steps = 200;
+    cfg.r = 64;
+    cfg.work_dir = "work/safety_audit".into();
+
+    let p = Pipeline::new(cfg)?;
+    let (train, queries) = p.corpus()?;
+    let params = p.base_params(&train)?;
+    let lit = p.params_literal(&params)?;
+    p.stage1(&lit, &train, Stage1Options { write_dense: false, ..Default::default() })?;
+
+    // gradient-based attribution (LoRIF)
+    let scorer = build_store_scorer(&p, Method::Lorif)?;
+    let qg = p.query_grads(&lit, &queries)?;
+    let res = QueryEngine::new(scorer, 3).run(&qg)?;
+
+    // 3. cross-context proponents: training examples appearing in many
+    // different queries' top-3
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for top in &res.topk {
+        for &t in top {
+            *counts.entry(t).or_default() += 1;
+        }
+    }
+    let mut ranked: Vec<(usize, usize)> = counts.into_iter().collect();
+    ranked.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+    println!("== cross-context high-influence training examples ==");
+    let flagged: Vec<usize> = ranked.iter().take(5).map(|&(t, _)| t).collect();
+    for &(t, c) in ranked.iter().take(5) {
+        let marker = if train.topics[t] as usize == UNSAFE_TOPIC { "  <-- UNSAFE topic" } else { "" };
+        println!("  train #{t} (topic {}): top-3 for {c} queries{marker}", train.topics[t]);
+    }
+
+    // 4. RepSim comparison: how often does surface similarity surface the
+    // same examples?
+    ensure_embeddings(&p, &lit, &train)?;
+    let repsim = build_repsim_scorer(&p, &lit, &queries)?;
+    let res_rs = QueryEngine::new(repsim, 3).run(&qg)?;
+    let mut overlap = 0;
+    for (a, b) in res.topk.iter().zip(&res_rs.topk) {
+        if a.iter().any(|x| b.contains(x)) {
+            overlap += 1;
+        }
+    }
+    println!(
+        "RepSim top-3 overlaps LoRIF top-3 on {overlap}/{} queries \
+         (gradient attribution surfaces non-surface-similar proponents)",
+        queries.len()
+    );
+
+    // 5. actionability: tail-patch on the flagged examples for the
+    // unsafe-topic queries
+    let unsafe_queries: Vec<usize> = (0..queries.len())
+        .filter(|&q| queries.topics[q] as usize == UNSAFE_TOPIC)
+        .collect();
+    if !unsafe_queries.is_empty() {
+        let sub = queries.subset(&unsafe_queries);
+        let topk: Vec<Vec<usize>> = unsafe_queries.iter().map(|_| flagged.clone()).collect();
+        let scores = tail_patch(
+            &p,
+            &params,
+            &train,
+            &sub,
+            &topk,
+            TailPatchProtocol { k: flagged.len(), lr: 1e-2 },
+        )?;
+        let mean: f64 = scores.iter().sum::<f64>() / scores.len() as f64;
+        println!(
+            "tail-patch of flagged examples on {} unsafe-topic queries: {:+.3} \
+             (positive = the flagged data causally drives this behaviour)",
+            unsafe_queries.len(),
+            mean
+        );
+    }
+    Ok(())
+}

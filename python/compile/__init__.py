@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX graphs -> HLO text).
+
+Never imported at runtime: the Rust coordinator consumes only the
+artifacts/*.hlo.txt files this package emits.
+"""

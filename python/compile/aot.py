@@ -1,0 +1,211 @@
+"""AOT driver: lower every L2 graph to HLO *text* + emit a JSON manifest.
+
+Run once via ``make artifacts``; the Rust coordinator (L3) is self-
+contained afterwards.  Interchange is HLO text, NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md and aot_recipe).
+
+Artifact sets (env ``LORIF_AOT_SET`` or --set):
+  minimal  smoke set (small tier, f=4) — fast CI builds
+  default  everything the examples + benches need
+  full     adds the wider (f, c) grids for the full paper sweeps
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from . import model, spec
+from .kernels import projgrad as k_projgrad
+from .kernels import poweriter as k_poweriter
+
+MANIFEST_VERSION = 2
+
+# Fixed AOT batch sizes (compiled into the artifacts; Rust pads partial
+# batches).  Small enough for a 1-core CPU, big enough to amortize
+# dispatch.
+BATCH_GRAD = 8
+BATCH_LOSS = 32
+BATCH_TRAIN = 16
+BATCH_EMBED = 32
+BATCH_EKFAC = 8
+BATCH_SCORE = 512
+SCORE_R = 128
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer ELIDES big literals
+    # as `constant({...})`, which xla_extension 0.5.1's text parser reads
+    # back as zeros — silently zeroing the baked projection matrices.
+    text = comp.as_hlo_text(True)
+    assert "constant({...})" not in text, "elided constant survived"
+    return text
+
+
+def grad_extract_jobs(set_name: str):
+    """(tier, f, c) grid per artifact set."""
+    jobs = []
+    if set_name == "minimal":
+        return [("small", 4, 1)]
+    # default: everything benches need at the small tier + the two larger
+    # tiers' main configs
+    jobs += [("small", f, 1) for f in (1, 2, 4, 8, 16)]
+    jobs += [("small", 2, c) for c in (2, 4, 8)]
+    jobs += [("small", 4, 4)]
+    jobs += [("medium", f, 1) for f in (4, 8, 16)]
+    jobs += [("large", f, 1) for f in (8, 16)]
+    if set_name == "full":
+        jobs += [("small", 8, 4), ("small", 16, 4)]
+        jobs += [("medium", 2, 1), ("large", 4, 1)]
+    return jobs
+
+
+def score_jobs(set_name: str):
+    """Pallas scorer artifacts for the small tier's f=4 layer shapes."""
+    tier = spec.TIERS["small"]
+    shapes = sorted({(i // 4, o // 4) for _, _, i, o in tier.tracked_layers()})
+    return [(d1, d2, 1, SCORE_R) for d1, d2 in shapes]
+
+
+def shape_info(x):
+    return {"dtype": str(x.dtype), "shape": list(x.shape)}
+
+
+def lower_one(name: str, fn, example_args, out_dir: str, meta: dict, manifest: list):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    outs = jax.eval_shape(fn, *example_args)
+    entry = {
+        "name": name,
+        "inputs": [shape_info(a) for a in example_args],
+        "outputs": [shape_info(o) for o in jax.tree_util.tree_leaves(outs)],
+        "hlo_bytes": len(text),
+        **meta,
+    }
+    manifest.append(entry)
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO, {time.time()-t0:.1f}s")
+
+
+def tier_meta(tier: spec.TierSpec) -> dict:
+    return {
+        "n_layers": tier.n_layers,
+        "d_model": tier.d_model,
+        "d_ff": tier.d_ff,
+        "n_heads": tier.n_heads,
+        "vocab": tier.vocab,
+        "seq_len": tier.seq_len,
+        "param_count": tier.param_count(),
+        "tracked_layers": [
+            {"name": n, "module": m, "in_dim": i, "out_dim": o}
+            for n, m, i, o in tier.tracked_layers()
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", default=os.environ.get("LORIF_AOT_SET", "default"))
+    ap.add_argument(
+        "--no-pallas", action="store_true",
+        help="lower the jnp reference path instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    use_pallas = not args.no_pallas
+    manifest = []
+    t_start = time.time()
+
+    tiers = ["small"] if args.set == "minimal" else ["small", "medium", "large"]
+    for tname in tiers:
+        tier = spec.TIERS[tname]
+        for kind, batch in (
+            ("loss_eval", BATCH_LOSS),
+            ("train_step", BATCH_TRAIN),
+            ("embed", BATCH_EMBED),
+            ("sgd_step", BATCH_TRAIN),
+        ):
+            fn, ex = model.graph_specs(tier, kind, batch)
+            lower_one(
+                f"{kind}_{tname}", fn, ex, args.out_dir,
+                {"kind": kind, "tier": tname, "batch": batch},
+                manifest,
+            )
+
+    for tname, f, c in grad_extract_jobs(args.set):
+        tier = spec.TIERS[tname]
+        fn, ex = model.graph_specs(
+            tier, "grad_extract", BATCH_GRAD, f=f, c=c, use_pallas=use_pallas
+        )
+        lower_one(
+            f"grad_extract_{tname}_f{f}_c{c}", fn, ex, args.out_dir,
+            {
+                "kind": "grad_extract", "tier": tname, "batch": BATCH_GRAD,
+                "f": f, "c": c,
+                "proj_dims": [[d1, d2] for d1, d2 in tier.proj_dims(f)],
+                "power_iters": spec.power_iters(c),
+            },
+            manifest,
+        )
+
+    # EK-FAC stats: small tier only (the Table 1 contextual baseline)
+    fn, ex = model.graph_specs(spec.TIERS["small"], "ekfac_stats", BATCH_EKFAC)
+    lower_one(
+        "ekfac_stats_small", fn, ex, args.out_dir,
+        {"kind": "ekfac_stats", "tier": "small", "batch": BATCH_EKFAC},
+        manifest,
+    )
+
+    # Pallas scorer artifacts (per distinct layer shape, small tier f=4)
+    for d1, d2, c, r in score_jobs(args.set):
+        fn, ex = model.graph_specs(
+            spec.TIERS["small"], "score_lorif", BATCH_SCORE,
+            d1=d1, d2=d2, c=c, r=r, use_pallas=use_pallas,
+        )
+        lower_one(
+            f"score_{d1}x{d2}_c{c}_r{r}", fn, ex, args.out_dir,
+            {
+                "kind": "score_lorif", "batch": BATCH_SCORE,
+                "d1": d1, "d2": d2, "c": c, "r": r,
+            },
+            manifest,
+        )
+
+    doc = {
+        "version": MANIFEST_VERSION,
+        "set": args.set,
+        "use_pallas": use_pallas,
+        "tiers": {t: tier_meta(spec.TIERS[t]) for t in tiers},
+        "batch_sizes": {
+            "grad_extract": BATCH_GRAD, "loss_eval": BATCH_LOSS,
+            "train_step": BATCH_TRAIN, "embed": BATCH_EMBED,
+            "ekfac_stats": BATCH_EKFAC, "score": BATCH_SCORE,
+        },
+        "graphs": manifest,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(doc, fh, indent=1)
+    print(
+        f"wrote {len(manifest)} artifacts + manifest.json "
+        f"in {time.time()-t_start:.0f}s ({args.set} set)"
+    )
+
+
+if __name__ == "__main__":
+    main()

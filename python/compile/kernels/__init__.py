@@ -1,0 +1,2 @@
+"""L1: Pallas kernels for LoRIF's compute hot-spots + pure-jnp oracles."""
+from . import projgrad, poweriter, ref, score  # noqa: F401

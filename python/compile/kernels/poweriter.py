@@ -1,0 +1,67 @@
+"""Pallas kernel: rank-c factorization of a projected gradient matrix.
+
+Implements paper §3.1: ``G~ ~= u v^T`` via block power (subspace)
+iteration with a fixed, static iteration count (8 for c=1, 16 for c>1 —
+App. B.2), so the kernel has fully static control flow (a requirement for
+Mosaic lowering; the iteration count is compiled in).
+
+The whole (d1, d2) matrix fits in VMEM for every tier in this repo
+(largest layer: 192x576 f32 = 432 KiB << 16 MiB), so the kernel runs as a
+single program; the batch dimension is mapped by ``jax.vmap`` outside.
+Gram-Schmidt is unrolled over the (small, static) rank c.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+EPS = ref.EPS
+
+
+def _orthonormalize_cols(m, c: int):
+    cols = []
+    for k in range(c):
+        v = m[:, k]
+        for q in cols:
+            v = v - jnp.dot(q, v) * q
+        v = v / jnp.sqrt(jnp.dot(v, v) + EPS)
+        cols.append(v)
+    return jnp.stack(cols, axis=1)
+
+
+def _kernel(g_ref, u_ref, v_ref, *, c: int, iters: int):
+    g = g_ref[...]
+    d2 = g.shape[1]
+    i = jax.lax.broadcasted_iota(jnp.float32, (d2, c), 0)
+    j = jax.lax.broadcasted_iota(jnp.float32, (d2, c), 1)
+    v = _orthonormalize_cols(jnp.cos(0.7 * i + 1.3 * j + 1.0), c)
+    # static unroll: `iters` is small (8/16) and compiled in
+    for _ in range(iters):
+        u = _orthonormalize_cols(g @ v, c)
+        v = _orthonormalize_cols(g.T @ u, c)
+    u_ref[...] = g @ v
+    v_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("c", "iters", "interpret"))
+def poweriter(g, c: int, iters: int, interpret: bool = True):
+    """G: (d1, d2) -> (u: (d1, c), v: (d2, c)) with G ~= u v^T."""
+    d1, d2 = g.shape
+    kern = functools.partial(_kernel, c=c, iters=iters)
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((d1, c), jnp.float32),
+            jax.ShapeDtypeStruct((d2, c), jnp.float32),
+        ),
+        interpret=interpret,
+    )(g)
+
+
+def vmem_estimate(d1: int, d2: int, c: int) -> int:
+    """VMEM bytes (f32): G + u + v + one GS scratch column set."""
+    return 4 * (d1 * d2 + (d1 + 2 * d2) * c + max(d1, d2))

@@ -1,0 +1,71 @@
+"""Pallas kernel: projected per-example gradient contraction  G~ = A^T B.
+
+This is the stage-1 compute hot-spot of the indexing pass (paper Eq. 4):
+for every example and every tracked linear layer we contract the projected
+activations ``A = X P_in  (T, d1)`` against the projected output gradients
+``B = dY P_out  (T, d2)`` into the projected gradient matrix ``(d1, d2)``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the *output*
+(d1 x d2); each program holds an (T, bd1) strip of A and an (T, bd2) strip
+of B in VMEM and performs one MXU contraction over the token axis.  The
+paper's CUDA version tiles threadblocks over the same output; BlockSpec
+expresses the identical HBM->VMEM schedule.
+
+Runs under ``interpret=True`` everywhere in this repo (CPU PJRT cannot
+execute Mosaic custom-calls); on a real TPU the same kernel lowers to
+Mosaic unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    # a_ref: (T, bd1) strip, b_ref: (T, bd2) strip -> o_ref: (bd1, bd2)
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (static tiling)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def projgrad(a, b, interpret: bool = True):
+    """A: (T, d1), B: (T, d2) -> (d1, d2) = A^T B."""
+    t, d1 = a.shape
+    t2, d2 = b.shape
+    assert t == t2, (a.shape, b.shape)
+    bd1 = _pick_block(d1, 128)
+    bd2 = _pick_block(d2, 128)
+    grid = (d1 // bd1, d2 // bd2)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, bd1), lambda i, j: (0, i)),
+            pl.BlockSpec((t, bd2), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bd1, bd2), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d1, d2), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+def vmem_estimate(t: int, d1: int, d2: int) -> int:
+    """VMEM bytes per program (f32): A strip + B strip + output tile."""
+    bd1, bd2 = _pick_block(d1, 128), _pick_block(d2, 128)
+    return 4 * (t * bd1 + t * bd2 + bd1 * bd2)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every Pallas kernel in this package has a reference implementation here
+with *identical* math (same iteration counts, same init, same epsilon), so
+pytest/hypothesis can assert tight tolerances.  These functions are also
+used directly by the L2 graphs when ``use_pallas=False`` (useful for
+debugging and for the jnp-vs-pallas perf comparison in EXPERIMENTS.md
+§Perf).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+EPS = 1e-12
+
+
+def projgrad(a, b):
+    """Projected per-example gradient: G~ = A^T B.
+
+    a: (T, d1) projected activations, b: (T, d2) projected output grads.
+    """
+    return a.T @ b
+
+
+def _power_init(d2: int, c: int):
+    """Deterministic pseudo-random init for the power-iteration subspace."""
+    i = lax.broadcasted_iota(jnp.float32, (d2, c), 0)
+    j = lax.broadcasted_iota(jnp.float32, (d2, c), 1)
+    return jnp.cos(0.7 * i + 1.3 * j + 1.0)
+
+
+def _orthonormalize(m):
+    """Modified Gram-Schmidt over columns (c is small and static)."""
+    cols = []
+    for k in range(m.shape[1]):
+        v = m[:, k]
+        for q in cols:
+            v = v - jnp.dot(q, v) * q
+        v = v / jnp.sqrt(jnp.dot(v, v) + EPS)
+        cols.append(v)
+    return jnp.stack(cols, axis=1)
+
+
+def poweriter(g, c: int, iters: int):
+    """Rank-c factorization G ~= u v^T via block power (subspace) iteration.
+
+    Returns (u, v) with v column-orthonormal, u = G v.  Matches paper §3.1:
+    a few block power iterations on the *projected* gradient matrix.
+    """
+    v = _orthonormalize(_power_init(g.shape[1], c))
+    for _ in range(iters):
+        u = _orthonormalize(g @ v)
+        v = _orthonormalize(g.T @ u)
+    u = g @ v
+    return u, v
+
+
+def factor_dot(u_q, v_q, u_t, v_t):
+    """<u_q v_q^T, u_t v_t^T>_F = sum((u_q^T u_t) * (v_q^T v_t))."""
+    return jnp.sum((u_q.T @ u_t) * (v_q.T @ v_t))
+
+
+def score_batch(u_q, v_q, big_u, big_v, gq_r, gt_r, w, lam):
+    """LoRIF influence scores, Eq. (9) of the paper, for one layer.
+
+    u_q:(d1,c) v_q:(d2,c)  query factors
+    big_u:(B,d1,c) big_v:(B,d2,c)  training factors
+    gq_r:(r,) gt_r:(B,r)  V_r-subspace projections of query/train gradients
+    w:(r,)  Woodbury weights sigma_i^2/(lam*(lam+sigma_i^2)) -- precomputed
+    returns (B,) scores: (1/lam) * factor_dot - sum_i w_i gq_i gt_i.
+    """
+    # batched factor dot: einsum over the small c x c inner products
+    dots = jnp.einsum("ak,nal->nkl", u_q, big_u) * jnp.einsum(
+        "bk,nbl->nkl", v_q, big_v
+    )
+    s1 = jnp.sum(dots, axis=(1, 2))
+    corr = gt_r @ (w * gq_r)
+    return s1 / lam - corr
+
+
+def woodbury_weights(sigma, lam):
+    """w_i = sigma_i^2 / (lam * (lam + sigma_i^2)), Eq. (13)."""
+    s2 = sigma * sigma
+    return s2 / (lam * (lam + s2))
+
+
+def dense_influence(g_q, g_t, k_inv):
+    """Full-rank reference: g_q^T (G^T G + lam I)^{-1} g_t with dense K."""
+    return g_q @ k_inv @ g_t

@@ -1,0 +1,315 @@
+"""L2: TinyLM — the JAX compute graphs AOT-lowered for the Rust coordinator.
+
+A decoder-only transformer (RMSNorm, causal MHA, GELU MLP, learned
+positions) standing in for the paper's GPT2-small / OLMo-3-7B /
+Apertus-70B (DESIGN.md §1 substitutions).  All graphs take the parameters
+as one flat ``f32[P]`` vector in the canonical order of
+``spec.TierSpec.param_shapes`` so the Rust side never handles pytrees.
+
+Per-example gradient extraction uses the *zero-probe-bias* trick: every
+tracked linear computes ``y = x W + probe`` with ``probe = 0`` of shape
+(T, O); then ``d loss/d probe = dY`` (the per-token output gradient) and
+the layer input ``X`` is captured as an aux output.  One vjp therefore
+yields everything Eq. (4) needs, with no recomputation (the §Perf L2
+target).  The projected-gradient contraction and the rank-c factorization
+run through the L1 Pallas kernels so they lower into the same HLO module.
+"""
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import projection, spec
+from .kernels import poweriter as k_poweriter
+from .kernels import projgrad as k_projgrad
+from .kernels import ref as k_ref
+from .kernels import score as k_score
+
+NORM_EPS = 1e-6
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# parameter handling
+# ---------------------------------------------------------------------------
+
+def unflatten(tier: spec.TierSpec, flat):
+    """Split the flat f32[P] vector into named parameter arrays."""
+    params = {}
+    off = 0
+    for name, shape in tier.param_shapes():
+        n = spec.int_prod(shape)
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    assert off == tier.param_count()
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + NORM_EPS)
+
+
+def _attention(q, k, v, n_heads):
+    t, d = q.shape
+    hd = d // n_heads
+    q = q.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    k = k.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    v = v.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    scores = (q @ k.transpose(0, 2, 1)) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = probs @ v  # (h, t, hd)
+    return out.transpose(1, 0, 2).reshape(t, d)
+
+
+def forward(tier: spec.TierSpec, params, tokens, probes: Optional[List] = None):
+    """Single-example forward. tokens: i32[T].
+
+    Returns (logits (T, V), xs) where xs are the tracked-linear inputs (in
+    tracked_layers order) — the X_i of Eq. (4).  ``probes`` is a list of
+    (T, O_l) offsets added to each tracked linear's output (zeros at
+    runtime; their gradient is dY_l).
+    """
+    t = tokens.shape[0]
+    x = params["embed"][tokens] + params["pos"][:t]
+    xs = []
+    li = 0
+
+    def linear(inp, w):
+        nonlocal li
+        xs.append(inp)
+        y = inp @ w
+        if probes is not None:
+            y = y + probes[li]
+        li += 1
+        return y
+
+    for b in range(tier.n_layers):
+        h = _rmsnorm(x)
+        qkv = linear(h, params[f"blk{b}.attn_qkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        att = _attention(q, k, v, tier.n_heads)
+        x = x + linear(att, params[f"blk{b}.attn_out"])
+        h = _rmsnorm(x)
+        h = jax.nn.gelu(linear(h, params[f"blk{b}.mlp_in"]))
+        x = x + linear(h, params[f"blk{b}.mlp_out"])
+
+    x = _rmsnorm(x)
+    logits = x @ params["unembed"]
+    return logits, xs, x
+
+
+def example_loss(tier: spec.TierSpec, params, tokens, probes=None):
+    """Mean next-token cross-entropy for one example; aux = (xs, final_h)."""
+    logits, xs, final_h = forward(tier, params, tokens, probes)
+    logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    tgt = tokens[1:]
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll), (xs, final_h)
+
+
+# ---------------------------------------------------------------------------
+# graph builders (each is jitted then AOT-lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_loss_eval(tier: spec.TierSpec, batch: int):
+    def fn(flat, tokens):
+        params = unflatten(tier, flat)
+        losses = jax.vmap(lambda tk: example_loss(tier, params, tk)[0])(tokens)
+        return (losses,)
+
+    return fn
+
+
+def make_embed(tier: spec.TierSpec, batch: int):
+    """RepSim representation: final hidden state of the last token."""
+
+    def fn(flat, tokens):
+        params = unflatten(tier, flat)
+
+        def one(tk):
+            _, _, final_h = forward(tier, params, tk)
+            return final_h[-1]
+
+        return (jax.vmap(one)(tokens),)
+
+    return fn
+
+
+def make_train_step(tier: spec.TierSpec, batch: int):
+    """One Adam step on a batch. State threads through flat vectors."""
+
+    def fn(flat, m, v, step, tokens, lr):
+        params = unflatten(tier, flat)
+        def batch_loss(fl):
+            p = unflatten(tier, fl)
+            losses = jax.vmap(lambda tk: example_loss(tier, p, tk)[0])(tokens)
+            return jnp.mean(losses)
+
+        loss, g = jax.value_and_grad(batch_loss)(flat)
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m2 / (1.0 - ADAM_B1**step)
+        vhat = v2 / (1.0 - ADAM_B2**step)
+        flat2 = flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return flat2, m2, v2, loss
+
+    return fn
+
+
+def make_sgd_step(tier: spec.TierSpec, batch: int):
+    """One plain SGD step — used by the tail-patch evaluation (one
+    gradient step on the retrieved proponents, Chang et al. 2024)."""
+
+    def fn(flat, tokens, lr):
+        def batch_loss(fl):
+            p = unflatten(tier, fl)
+            losses = jax.vmap(lambda tk: example_loss(tier, p, tk)[0])(tokens)
+            return jnp.mean(losses)
+
+        loss, g = jax.value_and_grad(batch_loss)(flat)
+        return flat - lr * g, loss
+
+    return fn
+
+
+def make_grad_extract(
+    tier: spec.TierSpec,
+    f: int,
+    c: int,
+    batch: int,
+    use_pallas: bool = True,
+):
+    """Stage-1 graph: per-example projected gradients + rank-c factors.
+
+    Outputs: (losses (B,), then per tracked layer l:
+              G~_l (B, d1, d2), u_l (B, d1, c), v_l (B, d2, c)).
+    The full G~ is emitted alongside the factors so one artifact serves
+    both the LoGRA baselines (dense store) and LoRIF (factored store);
+    the Rust index builder decides what to persist.
+    """
+    layers = tier.tracked_layers()
+    projs = projection.all_projections(tier.name, f)
+    iters = spec.power_iters(c)
+
+    def per_example(params, tokens):
+        t = tokens.shape[0]
+        probes0 = [jnp.zeros((t, o), jnp.float32) for (_, _, _, o) in layers]
+
+        def lf(probes):
+            loss, aux = example_loss(tier, params, tokens, probes)
+            return loss, (loss, aux[0])
+
+        dys, (loss, xs) = jax.grad(lf, has_aux=True)(probes0)
+        outs = []
+        for idx in range(len(layers)):
+            p_in, p_out = projs[idx]
+            a = xs[idx] if p_in is None else xs[idx] @ p_in
+            bm = dys[idx] if p_out is None else dys[idx] @ p_out
+            if use_pallas:
+                g = k_projgrad.projgrad(a, bm)
+                u, v = k_poweriter.poweriter(g, c, iters)
+            else:
+                g = k_ref.projgrad(a, bm)
+                u, v = k_ref.poweriter(g, c, iters)
+            outs.extend((g, u, v))
+        return (loss, *outs)
+
+    def fn(flat, tokens):
+        params = unflatten(tier, flat)
+        return jax.vmap(lambda tk: per_example(params, tk))(tokens)
+
+    return fn
+
+
+def make_ekfac_stats(tier: spec.TierSpec, batch: int):
+    """K-FAC covariance accumulation for the EK-FAC baseline.
+
+    Returns per layer: A_cov = sum_{b,t} x x^T (I,I) and
+    S_cov = sum_{b,t} dy dy^T (O,O), summed over the batch (the Rust side
+    accumulates across batches and normalizes).
+    """
+    layers = tier.tracked_layers()
+
+    def per_example(params, tokens):
+        t = tokens.shape[0]
+        probes0 = [jnp.zeros((t, o), jnp.float32) for (_, _, _, o) in layers]
+
+        def lf(probes):
+            loss, aux = example_loss(tier, params, tokens, probes)
+            return loss, aux[0]
+
+        dys, xs = jax.grad(lf, has_aux=True)(probes0)
+        outs = []
+        for idx in range(len(layers)):
+            outs.append(xs[idx].T @ xs[idx])
+            outs.append(dys[idx].T @ dys[idx])
+        return tuple(outs)
+
+    def fn(flat, tokens):
+        params = unflatten(tier, flat)
+        per = jax.vmap(lambda tk: per_example(params, tk))(tokens)
+        return tuple(jnp.sum(p, axis=0) for p in per)
+
+    return fn
+
+
+def make_score_lorif(d1: int, d2: int, c: int, r: int, batch: int, use_pallas=True):
+    """Query-time scoring graph for one layer shape (paper Eq. 9)."""
+
+    def fn(u_q, v_q, big_u, big_v, gq_r, gt_r, w, lam):
+        if use_pallas:
+            s = k_score.score_batch(u_q, v_q, big_u, big_v, gq_r, gt_r, w, lam[0])
+        else:
+            s = k_ref.score_batch(u_q, v_q, big_u, big_v, gq_r, gt_r, w, lam[0])
+        return (s,)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# example-arg factories (shape specs for AOT lowering)
+# ---------------------------------------------------------------------------
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def graph_specs(tier: spec.TierSpec, kind: str, batch: int, **kw):
+    """(callable, example_args) for each AOT graph kind."""
+    p = tier.param_count()
+    t = tier.seq_len
+    if kind == "loss_eval":
+        return make_loss_eval(tier, batch), (f32(p), i32(batch, t))
+    if kind == "embed":
+        return make_embed(tier, batch), (f32(p), i32(batch, t))
+    if kind == "sgd_step":
+        return make_sgd_step(tier, batch), (f32(p), i32(batch, t), f32())
+    if kind == "train_step":
+        return make_train_step(tier, batch), (
+            f32(p), f32(p), f32(p), f32(), i32(batch, t), f32(),
+        )
+    if kind == "grad_extract":
+        fn = make_grad_extract(tier, kw["f"], kw["c"], batch, kw.get("use_pallas", True))
+        return fn, (f32(p), i32(batch, t))
+    if kind == "ekfac_stats":
+        return make_ekfac_stats(tier, batch), (f32(p), i32(batch, t))
+    if kind == "score_lorif":
+        d1, d2, c, r = kw["d1"], kw["d2"], kw["c"], kw["r"]
+        fn = make_score_lorif(d1, d2, c, r, batch, kw.get("use_pallas", True))
+        return fn, (
+            f32(d1, c), f32(d2, c), f32(batch, d1, c), f32(batch, d2, c),
+            f32(r), f32(batch, r), f32(r), f32(1),
+        )
+    raise ValueError(f"unknown graph kind {kind!r}")

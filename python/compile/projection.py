@@ -1,0 +1,46 @@
+"""Deterministic two-sided random projections (LoGRA-style).
+
+For every tracked linear layer with dims (I, O) and projection factor f we
+draw ``P_in in R^{I x d1}`` and ``P_out in R^{O x d2}`` with
+``d1 = I/f, d2 = O/f`` and i.i.d. N(0, 1/d) entries (JL scaling, so
+projected gradients preserve Frobenius norm in expectation).
+
+The matrices are baked into the AOT ``grad_extract`` graphs as constants;
+they are seeded deterministically from (tier, layer index, side, f) so
+rebuilding artifacts reproduces the identical index.  ``f == 1`` means no
+projection: the graph uses the raw gradient (identity), used by the EK-FAC
+baseline and the f=1 diagnostics.
+"""
+
+import numpy as np
+
+from . import spec
+
+BASE_SEED = 0x10F1F  # "LoRIF"
+
+
+def layer_seed(tier: str, layer_idx: int, side: str, f: int) -> int:
+    h = BASE_SEED
+    for tok in (tier, str(layer_idx), side, str(f)):
+        for ch in tok:
+            h = (h * 1000003 + ord(ch)) & 0xFFFFFFFF
+    return h
+
+
+def projection_pair(tier_name: str, layer_idx: int, f: int):
+    """Returns (P_in, P_out) as float32 arrays, or (None, None) for f == 1."""
+    tier = spec.TIERS[tier_name]
+    _, _, i_dim, o_dim = tier.tracked_layers()[layer_idx]
+    if f == 1:
+        return None, None
+    d1, d2 = i_dim // f, o_dim // f
+    rng_in = np.random.default_rng(layer_seed(tier_name, layer_idx, "in", f))
+    rng_out = np.random.default_rng(layer_seed(tier_name, layer_idx, "out", f))
+    p_in = rng_in.standard_normal((i_dim, d1), dtype=np.float32) / np.sqrt(d1)
+    p_out = rng_out.standard_normal((o_dim, d2), dtype=np.float32) / np.sqrt(d2)
+    return p_in, p_out
+
+
+def all_projections(tier_name: str, f: int):
+    tier = spec.TIERS[tier_name]
+    return [projection_pair(tier_name, idx, f) for idx in range(len(tier.tracked_layers()))]

@@ -1,0 +1,103 @@
+"""Model tier specifications shared between the Python compile path (L1/L2)
+and the Rust coordinator (L3, see ``rust/src/model/spec.rs``).
+
+The two sides never exchange pytrees: all AOT graphs take the model
+parameters as a single flat ``f32[P]`` vector, and this module defines the
+canonical flattening order.  Any change here must be mirrored in
+``rust/src/model/spec.rs`` (both sides assert on ``param_count``).
+
+Tiers stand in for the paper's three evaluation models (GPT2-small,
+OLMo-3-7B, Apertus-70B); see DESIGN.md §1 for the substitution rationale.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+VOCAB = 64  # byte-level synthetic vocabulary (matches corpus generator)
+SEQ_LEN = 64  # fixed context length for every tier
+
+
+@dataclass(frozen=True)
+class TierSpec:
+    name: str
+    n_layers: int  # transformer blocks
+    d_model: int
+    d_ff: int
+    n_heads: int
+
+    @property
+    def seq_len(self) -> int:
+        return SEQ_LEN
+
+    @property
+    def vocab(self) -> int:
+        return VOCAB
+
+    def tracked_layers(self) -> List[Tuple[str, str, int, int]]:
+        """Linear layers tracked for attribution.
+
+        Returns (name, module_kind, in_dim, out_dim) in canonical order.
+        module_kind is "attn" or "mlp" (used by Tables 9/10).
+        """
+        out = []
+        d, f = self.d_model, self.d_ff
+        for b in range(self.n_layers):
+            out.append((f"blk{b}.attn_qkv", "attn", d, 3 * d))
+            out.append((f"blk{b}.attn_out", "attn", d, d))
+            out.append((f"blk{b}.mlp_in", "mlp", d, f))
+            out.append((f"blk{b}.mlp_out", "mlp", f, d))
+        return out
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Canonical flat-parameter layout (row-major concatenation)."""
+        d, f = self.d_model, self.d_ff
+        shapes = [("embed", (VOCAB, d)), ("pos", (SEQ_LEN, d))]
+        for b in range(self.n_layers):
+            shapes.append((f"blk{b}.attn_qkv", (d, 3 * d)))
+            shapes.append((f"blk{b}.attn_out", (d, d)))
+            shapes.append((f"blk{b}.mlp_in", (d, f)))
+            shapes.append((f"blk{b}.mlp_out", (f, d)))
+        shapes.append(("unembed", (d, VOCAB)))
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(int_prod(s) for _, s in self.param_shapes())
+
+    def proj_dims(self, f: int) -> List[Tuple[int, int]]:
+        """(d1, d2) per tracked layer for projection factor f (f=1: identity)."""
+        dims = []
+        for _, _, i, o in self.tracked_layers():
+            assert i % f == 0 and o % f == 0, f"f={f} must divide dims ({i},{o})"
+            dims.append((i // f, o // f))
+        return dims
+
+    def total_proj_dim(self, f: int) -> int:
+        """Effective projection dimension D summed over tracked layers."""
+        return sum(d1 * d2 for d1, d2 in self.proj_dims(f))
+
+
+def int_prod(shape) -> int:
+    p = 1
+    for s in shape:
+        p *= int(s)
+    return p
+
+
+TIERS = {
+    # stands in for GPT2-small (124M): the LDS-evaluated tier
+    "small": TierSpec("small", n_layers=2, d_model=64, d_ff=128, n_heads=2),
+    # stands in for OLMo-3-7B: tail-patch tier
+    "medium": TierSpec("medium", n_layers=3, d_model=128, d_ff=256, n_heads=4),
+    # stands in for Apertus-70B: tail-patch tier
+    "large": TierSpec("large", n_layers=4, d_model=192, d_ff=384, n_heads=6),
+}
+
+# Power-iteration counts, matching paper App. B.2.
+POWER_ITERS_C1 = 8
+POWER_ITERS_CMULTI = 16
+# Randomized-SVD oversampling, matching paper App. B.2 (p=10).
+RSVD_OVERSAMPLE = 10
+
+
+def power_iters(c: int) -> int:
+    return POWER_ITERS_C1 if c == 1 else POWER_ITERS_CMULTI

@@ -1,0 +1,73 @@
+"""AOT pipeline regression tests.
+
+Covers the xla_extension-0.5.1 interop contract: HLO text interchange,
+manifest schema, and — critically — that large constants (the baked
+projection matrices) are printed in full.  The default HLO printer elides
+literals > 1024 elements as ``constant({...})``, which the 0.5.1 text
+parser silently reads back as ZEROS (loss fine, all gradients zero); see
+EXPERIMENTS.md §Debugging.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model, spec
+
+
+@pytest.fixture(scope="module")
+def lowered_grad_extract():
+    tier = spec.TIERS["small"]
+    fn, ex = model.graph_specs(tier, "grad_extract", 2, f=4, c=1)
+    lowered = jax.jit(fn).lower(*ex)
+    return aot.to_hlo_text(lowered)
+
+
+def test_no_elided_constants(lowered_grad_extract):
+    assert "constant({...})" not in lowered_grad_extract
+
+
+def test_projection_constants_materialized(lowered_grad_extract):
+    # the f=4 graph bakes P_in (64, 16) etc. as full f32 literals: the
+    # text must contain multi-element float constants of that shape
+    assert "f32[64,16]" in lowered_grad_extract
+
+
+def test_entry_tuple_arity(lowered_grad_extract):
+    # 1 loss + 3 outputs per tracked layer
+    tier = spec.TIERS["small"]
+    want = 1 + 3 * len(tier.tracked_layers())
+    # count top-level tuple elements in the ENTRY ROOT
+    import re
+
+    entry = lowered_grad_extract[lowered_grad_extract.index("ENTRY") :]
+    m = re.search(r"ROOT [^=]+ = \(([^)]*)\) tuple\(", entry)
+    assert m, "no ROOT tuple in ENTRY"
+    arity = m.group(1).count("f32[")
+    assert arity == want, (arity, want)
+
+
+def test_manifest_generation(tmp_path):
+    import subprocess
+    import sys
+
+    out = tmp_path / "arts"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--set", "minimal"],
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode == 0, r.stderr
+    doc = json.loads((out / "manifest.json").read_text())
+    assert doc["version"] == aot.MANIFEST_VERSION
+    names = {g["name"] for g in doc["graphs"]}
+    assert "grad_extract_small_f4_c1" in names
+    assert "train_step_small" in names
+    assert "sgd_step_small" in names
+    # tier metadata cross-checks the rust spec
+    assert doc["tiers"]["small"]["param_count"] == spec.TIERS["small"].param_count()
+    for g in doc["graphs"]:
+        assert (out / f"{g['name']}.hlo.txt").exists()
+        assert g["hlo_bytes"] > 0

@@ -1,0 +1,208 @@
+"""L2 graph correctness: shapes, probe-gradient extraction vs autodiff,
+training step behaviour, EK-FAC stats."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, projection, spec
+
+TIER = spec.TIERS["small"]
+RNG = np.random.default_rng(42)
+
+
+def rand_params(scale=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(TIER.param_count()) * scale).astype(np.float32)
+
+
+def rand_tokens(batch, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, spec.VOCAB, (batch, TIER.seq_len)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# spec invariants
+# ---------------------------------------------------------------------------
+
+def test_param_count_matches_shapes():
+    total = sum(spec.int_prod(s) for _, s in TIER.param_shapes())
+    assert total == TIER.param_count()
+
+
+@pytest.mark.parametrize("tier", list(spec.TIERS.values()), ids=lambda t: t.name)
+@pytest.mark.parametrize("f", [1, 2, 4, 8, 16])
+def test_proj_dims_divisible(tier, f):
+    dims = tier.proj_dims(f)
+    assert all(d1 > 0 and d2 > 0 for d1, d2 in dims)
+    assert tier.total_proj_dim(f) == sum(d1 * d2 for d1, d2 in dims)
+
+
+def test_tracked_layer_modules():
+    kinds = {k for _, k, _, _ in TIER.tracked_layers()}
+    assert kinds == {"attn", "mlp"}
+    assert len(TIER.tracked_layers()) == 4 * TIER.n_layers
+
+
+def test_projection_deterministic_and_scaled():
+    p_in, p_out = projection.projection_pair("small", 0, 4)
+    p_in2, _ = projection.projection_pair("small", 0, 4)
+    np.testing.assert_array_equal(p_in, p_in2)
+    # JL scaling: E||P^T x||^2 ~= ||x||^2
+    x = RNG.standard_normal(p_in.shape[0]).astype(np.float32)
+    ratios = []
+    for trial in range(20):
+        xt = np.random.default_rng(trial).standard_normal(p_in.shape[0]).astype(np.float32)
+        ratios.append(np.sum((xt @ p_in) ** 2) / np.sum(xt**2))
+    assert 0.5 < np.mean(ratios) < 1.5
+
+
+def test_projection_f1_is_identity_marker():
+    assert projection.projection_pair("small", 0, 1) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def test_loss_eval_shape_and_range():
+    flat, toks = rand_params(), rand_tokens(4)
+    losses = np.asarray(jax.jit(model.make_loss_eval(TIER, 4))(flat, toks)[0])
+    assert losses.shape == (4,)
+    # near-uniform init => loss ~ log(V)
+    assert np.all(losses > 2.0) and np.all(losses < 8.0)
+
+
+def test_forward_causality():
+    """Changing a future token must not change past logits."""
+    flat = rand_params()
+    params = model.unflatten(TIER, jnp.asarray(flat))
+    toks = rand_tokens(1)[0]
+    logits1, _, _ = model.forward(TIER, params, jnp.asarray(toks))
+    toks2 = toks.copy()
+    toks2[-1] = (toks2[-1] + 1) % spec.VOCAB
+    logits2, _, _ = model.forward(TIER, params, jnp.asarray(toks2))
+    np.testing.assert_allclose(
+        np.asarray(logits1[:-1]), np.asarray(logits2[:-1]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(logits1[-1]), np.asarray(logits2[-1]))
+
+
+def test_embed_shape():
+    flat, toks = rand_params(), rand_tokens(3)
+    emb = np.asarray(jax.jit(model.make_embed(TIER, 3))(flat, toks)[0])
+    assert emb.shape == (3, TIER.d_model)
+    assert np.all(np.isfinite(emb))
+
+
+# ---------------------------------------------------------------------------
+# probe-trick gradient extraction vs direct autodiff
+# ---------------------------------------------------------------------------
+
+def test_probe_gradients_match_weight_gradients():
+    """X^T dY from the probe trick must equal d loss / d W exactly."""
+    flat = rand_params()
+    toks = rand_tokens(1)[0]
+    ge = jax.jit(model.make_grad_extract(TIER, 1, 1, 1, use_pallas=False))
+    outs = ge(flat, toks[None])
+    # direct per-parameter gradient
+    def loss_of_flat(fl):
+        params = model.unflatten(TIER, fl)
+        return model.example_loss(TIER, params, jnp.asarray(toks))[0]
+
+    gflat = jax.grad(loss_of_flat)(jnp.asarray(flat))
+    grads = model.unflatten(TIER, gflat)
+    layers = TIER.tracked_layers()
+    for idx, (name, _, i_dim, o_dim) in enumerate(layers):
+        got = np.asarray(outs[1 + 3 * idx][0])  # G~ with f=1 == X^T dY
+        want = np.asarray(grads[name])
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=1e-6), name
+
+
+def test_projected_gradient_consistency():
+    """f>1 projected gradient == P_in^T (X^T dY) P_out."""
+    flat = rand_params()
+    toks = rand_tokens(2)
+    f = 4
+    full = jax.jit(model.make_grad_extract(TIER, 1, 1, 2, use_pallas=False))(flat, toks)
+    proj = jax.jit(model.make_grad_extract(TIER, f, 1, 2, use_pallas=False))(flat, toks)
+    projs = projection.all_projections("small", f)
+    for idx in range(len(TIER.tracked_layers())):
+        p_in, p_out = projs[idx]
+        g_full = np.asarray(full[1 + 3 * idx])
+        g_proj = np.asarray(proj[1 + 3 * idx])
+        want = np.einsum("nio,ia,ob->nab", g_full, p_in, p_out)
+        np.testing.assert_allclose(g_proj, want, rtol=1e-3, atol=1e-5)
+
+
+def test_grad_extract_pallas_matches_jnp():
+    flat, toks = rand_params(), rand_tokens(2)
+    a = jax.jit(model.make_grad_extract(TIER, 4, 2, 2, use_pallas=True))(flat, toks)
+    b = jax.jit(model.make_grad_extract(TIER, 4, 2, 2, use_pallas=False))(flat, toks)
+    assert len(a) == len(b) == 1 + 3 * len(TIER.tracked_layers())
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=2e-3, atol=2e-3)
+
+
+def test_factor_reconstruction_quality():
+    """rank-c reconstruction error decreases with c (Table 9 behaviour)."""
+    flat, toks = rand_params(), rand_tokens(4)
+    errs = {}
+    for c in (1, 4):
+        outs = jax.jit(model.make_grad_extract(TIER, 2, c, 4, use_pallas=False))(flat, toks)
+        g = np.asarray(outs[1])
+        u, v = np.asarray(outs[2]), np.asarray(outs[3])
+        rec = np.einsum("nac,nbc->nab", u, v)
+        errs[c] = np.linalg.norm(rec - g) / np.linalg.norm(g)
+    assert errs[4] < errs[1] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# training step
+# ---------------------------------------------------------------------------
+
+def test_train_step_decreases_loss():
+    flat = rand_params(scale=0.02)
+    toks = rand_tokens(8)
+    ts = jax.jit(model.make_train_step(TIER, 8))
+    p = jnp.asarray(flat)
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    losses = []
+    for step in range(1, 31):
+        p, m, v, loss = ts(p, m, v, jnp.float32(step), toks, jnp.float32(3e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses[::10]
+
+
+def test_train_step_preserves_shapes_and_finiteness():
+    flat = rand_params()
+    toks = rand_tokens(4)
+    ts = jax.jit(model.make_train_step(TIER, 4))
+    p, m, v, loss = ts(
+        jnp.asarray(flat), jnp.zeros(len(flat)), jnp.zeros(len(flat)),
+        jnp.float32(1), toks, jnp.float32(1e-3),
+    )
+    assert p.shape == (TIER.param_count(),)
+    for arr in (p, m, v):
+        assert np.all(np.isfinite(np.asarray(arr)))
+
+
+# ---------------------------------------------------------------------------
+# EK-FAC stats
+# ---------------------------------------------------------------------------
+
+def test_ekfac_stats_shapes_and_psd():
+    flat, toks = rand_params(), rand_tokens(2)
+    outs = jax.jit(model.make_ekfac_stats(TIER, 2))(flat, toks)
+    layers = TIER.tracked_layers()
+    assert len(outs) == 2 * len(layers)
+    for idx, (_, _, i_dim, o_dim) in enumerate(layers):
+        a_cov = np.asarray(outs[2 * idx])
+        s_cov = np.asarray(outs[2 * idx + 1])
+        assert a_cov.shape == (i_dim, i_dim)
+        assert s_cov.shape == (o_dim, o_dim)
+        # covariances are symmetric PSD
+        np.testing.assert_allclose(a_cov, a_cov.T, atol=1e-3)
+        assert np.linalg.eigvalsh(a_cov).min() > -1e-3

@@ -1,0 +1,57 @@
+//! Figure 2a: attribution quality (LDS) vs effective projection
+//! dimension D, LoGRA (no factorization) vs rank-c factorization.
+//!
+//! Paper setup: GPT2-small/WikiText-103, f in {64,32,16,8} so D = IO/f^2,
+//! c varied at fixed f.  Scaled here to the small tier with
+//! f in {16,8,4,2} and c in {1,2,4,8} at f=2.
+//! Expected shape: LDS rises with D for both; LoRIF-c1 tracks LoGRA from
+//! below at each D (factorization costs some quality at fixed D) and
+//! larger c closes the gap.
+
+use lorif::app::Method;
+use lorif::bench_support::{fmt_pm, Session, Table};
+
+fn main() -> anyhow::Result<()> {
+    let s = Session::new();
+    let mut table = Table::new(
+        "Fig 2a: LDS vs effective projection dimension D (small tier)",
+        &["method", "f", "c", "D", "LDS"],
+    );
+    let spec = lorif::model::spec::Tier::Small.spec();
+
+    for f in [16, 8, 4, 2] {
+        let m = s.measure(Method::Logra, f, 1, 64, true, false)?;
+        table.row(vec![
+            "LoGRA".into(),
+            f.to_string(),
+            "—".into(),
+            spec.total_proj_dim(f).to_string(),
+            fmt_pm(m.lds),
+        ]);
+    }
+    // rank-1 factorization across D; r scales with D
+    for (f, r) in [(16, 32), (8, 64), (4, 128), (2, 256)] {
+        let m = s.measure(Method::Lorif, f, 1, r, true, false)?;
+        table.row(vec![
+            "LoRIF".into(),
+            f.to_string(),
+            "1".into(),
+            spec.total_proj_dim(f).to_string(),
+            fmt_pm(m.lds),
+        ]);
+    }
+    // higher c at the largest D
+    for c in [2, 4] {
+        let m = s.measure(Method::Lorif, 2, c, 256, true, false)?;
+        table.row(vec![
+            "LoRIF".into(),
+            "2".into(),
+            c.to_string(),
+            spec.total_proj_dim(2).to_string(),
+            fmt_pm(m.lds),
+        ]);
+    }
+    table.print();
+    table.save("fig2a")?;
+    Ok(())
+}

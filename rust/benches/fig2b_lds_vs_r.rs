@@ -1,0 +1,73 @@
+//! Figure 2b: truncated-SVD curvature quality — LDS vs truncation rank r
+//! (rank factorization NOT used, exactly like the paper's panel).
+//!
+//! r = 0 discards curvature (reduces to GradDot); the full-rank baseline
+//! is LoGRA's dense Cholesky.  Expected shape: LDS approaches the
+//! full-rank level for r << D.
+
+use lorif::app::{build_store_scorer, Method};
+use lorif::attribution::ablation::DenseWoodburyScorer;
+use lorif::attribution::Scorer;
+use lorif::bench_support::{fmt_pm, lds_protocol, Session, Table};
+use lorif::curvature::TruncatedCurvature;
+use lorif::eval::LdsActuals;
+use lorif::index::Stage1Options;
+use lorif::store::StoreReader;
+
+fn main() -> anyhow::Result<()> {
+    let s = Session::new();
+    let mut table = Table::new(
+        "Fig 2b: LDS vs curvature truncation rank r (no factorization)",
+        &["f", "D", "r", "LDS"],
+    );
+    for f in [8, 4] {
+        let (p, train, queries, params) = s.prepared(f, 1, 64)?;
+        let lit = p.params_literal(&params)?;
+        p.stage1(&lit, &train, Stage1Options::default())?;
+        let qg = p.query_grads(&lit, &queries)?;
+        let actuals = LdsActuals::get(&p, &lds_protocol(), &train, &queries)?;
+        let d_total = p.cfg.tier.spec().total_proj_dim(f);
+
+        // r = 0: GradDot (identity curvature limit)
+        let mut gd = build_store_scorer(&p, Method::GradDot)?;
+        let rep = gd.score(&qg)?;
+        table.row(vec![
+            f.to_string(),
+            d_total.to_string(),
+            "0 (GradDot)".into(),
+            fmt_pm(Some(actuals.lds(&rep.scores))),
+        ]);
+
+        for r in [8, 32, 128, 384] {
+            // curvature from the DENSE store: this panel isolates the
+            // truncated-SVD approximation, factorization unused
+            let reader = StoreReader::open(&p.dense_base())?;
+            let curv = TruncatedCurvature::build(
+                &reader, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
+                p.cfg.lambda_factor, p.cfg.seed,
+            )?;
+            let mut scorer =
+                DenseWoodburyScorer::new(StoreReader::open(&p.dense_base())?, curv);
+            let rep = scorer.score(&qg)?;
+            table.row(vec![
+                f.to_string(),
+                d_total.to_string(),
+                r.to_string(),
+                fmt_pm(Some(actuals.lds(&rep.scores))),
+            ]);
+        }
+
+        // full-rank baseline (dense Cholesky = LoGRA)
+        let mut logra = build_store_scorer(&p, Method::Logra)?;
+        let rep = logra.score(&qg)?;
+        table.row(vec![
+            f.to_string(),
+            d_total.to_string(),
+            "full (LoGRA)".into(),
+            fmt_pm(Some(actuals.lds(&rep.scores))),
+        ]);
+    }
+    table.print();
+    table.save("fig2b")?;
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Figure 3: query-time latency breakdown — loading gradients vs GPU
+//! (here CPU) computation, same effective D for every method.
+//!
+//! Paper: LoGRA is I/O-bound (96% of 211 s loading); rank-1
+//! factorization alone cuts I/O ~40x; adding truncated SVD cuts compute,
+//! 30x total.  Expected shape here: LoGRA load >> LoRIF load (the store
+//! is min(d1,d2)/2 smaller) and "ours" total < "rank-1 only" total.
+
+use lorif::app::{build_store_scorer, Method};
+use lorif::attribution::ablation::FactoredDenseKScorer;
+use lorif::attribution::Scorer;
+use lorif::bench_support::{fmt_mb, fmt_s, Session, Table};
+use lorif::index::Stage1Options;
+use lorif::store::StoreReader;
+
+fn main() -> anyhow::Result<()> {
+    let s = Session::new();
+    let f = 4;
+    let (p, train, queries, params) = s.prepared(f, 1, 128)?;
+    let lit = p.params_literal(&params)?;
+    p.stage1(&lit, &train, Stage1Options::default())?;
+    let qg = p.query_grads(&lit, &queries)?;
+
+    let mut table = Table::new(
+        &format!(
+            "Fig 3: latency breakdown (N={}, Nq={}, f={f}, r=128)",
+            train.len(),
+            queries.len()
+        ),
+        &["method", "load", "compute", "precondition", "total", "index size"],
+    );
+
+    let mut run = |name: &str, scorer: &mut dyn Scorer| -> anyhow::Result<()> {
+        // warm the page cache consistently: one throwaway pass
+        let rep = scorer.score(&qg)?;
+        let rep = { let _ = rep; scorer.score(&qg)? };
+        let load = rep.timer.get("load").as_secs_f64();
+        let compute = rep.timer.get("compute").as_secs_f64();
+        let pre = rep.timer.get("precondition").as_secs_f64();
+        table.row(vec![
+            name.into(),
+            fmt_s(load),
+            fmt_s(compute),
+            fmt_s(pre),
+            fmt_s(load + compute + pre),
+            fmt_mb(rep.bytes_read),
+        ]);
+        Ok(())
+    };
+
+    let mut logra = build_store_scorer(&p, Method::Logra)?;
+    run("LoGRA (dense, dense K)", &mut logra)?;
+
+    let (dense_curv, _) = p.stage2_dense()?;
+    let mut rank1 =
+        FactoredDenseKScorer::new(StoreReader::open(&p.factored_base())?, dense_curv);
+    run("rank-1 factorization only", &mut rank1)?;
+
+    let mut lorif = build_store_scorer(&p, Method::Lorif)?;
+    run("Ours (rank-1 + truncated SVD)", &mut lorif)?;
+
+    // extension over the paper: reuse the stage-2 train projections
+    // (U_r Sigma_r rows are free by-products of the rSVD) instead of
+    // re-projecting reconstructed gradients at query time — removes the
+    // O(N D r) term that dominates compute when r > Nq
+    let (curv, _) = p.stage2_lorif()?;
+    let mut cached = lorif::attribution::LorifScorer::new(
+        StoreReader::open(&p.factored_base())?, curv);
+    cached.cached_projections = true;
+    run("Ours + cached projections", &mut cached)?;
+
+    table.print();
+    table.save("fig3")?;
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Figure 4: the quality–storage Pareto frontier, LoRIF vs LoGRA.
+//!
+//! (a) LDS vs storage on the small tier (GPT2-small stand-in);
+//! (b) tail-patch vs storage on the medium tier (OLMo-3-7B stand-in),
+//!     run with `LORIF_FIG4_TIER=medium`.
+//! Expected shape: at matched storage, LoRIF (larger D via factorized
+//! storage) sits above LoGRA; the frontier improves.
+
+use lorif::app::Method;
+use lorif::bench_support::{fmt_mb, fmt_pm, Session, Table};
+use lorif::model::spec::Tier;
+
+fn main() -> anyhow::Result<()> {
+    let medium = std::env::var("LORIF_FIG4_TIER").as_deref() == Ok("medium");
+    if medium {
+        panel_b()
+    } else {
+        panel_a()?;
+        panel_b()
+    }
+}
+
+fn panel_a() -> anyhow::Result<()> {
+    let s = Session::new();
+    let mut table = Table::new(
+        "Fig 4a: LDS vs storage (small tier)",
+        &["method", "f", "c", "storage", "LDS"],
+    );
+    for f in [16, 8, 4] {
+        let m = s.measure(Method::Logra, f, 1, 64, true, false)?;
+        table.row(vec![
+            "LoGRA".into(), f.to_string(), "—".into(),
+            fmt_mb(m.storage_bytes), fmt_pm(m.lds),
+        ]);
+    }
+    for (f, r) in [(8, 64), (4, 128), (2, 256)] {
+        let m = s.measure(Method::Lorif, f, 1, r, true, false)?;
+        table.row(vec![
+            "LoRIF".into(), f.to_string(), "1".into(),
+            fmt_mb(m.storage_bytes), fmt_pm(m.lds),
+        ]);
+    }
+    for c in [2, 4] {
+        let m = s.measure(Method::Lorif, 2, c, 256, true, false)?;
+        table.row(vec![
+            "LoRIF".into(), "2".into(), c.to_string(),
+            fmt_mb(m.storage_bytes), fmt_pm(m.lds),
+        ]);
+    }
+    table.print();
+    table.save("fig4a")?;
+    Ok(())
+}
+
+fn panel_b() -> anyhow::Result<()> {
+    let s = Session::with_tier(Tier::Medium);
+    let mut table = Table::new(
+        "Fig 4b: tail-patch vs storage (medium tier)",
+        &["method", "f", "c", "storage", "tail-patch"],
+    );
+    for f in [16, 8] {
+        let m = s.measure(Method::Logra, f, 1, 64, false, true)?;
+        table.row(vec![
+            "LoGRA".into(), f.to_string(), "—".into(),
+            fmt_mb(m.storage_bytes), fmt_pm(m.tail_patch),
+        ]);
+    }
+    for (f, r) in [(8, 64), (4, 128)] {
+        let m = s.measure(Method::Lorif, f, 1, r, false, true)?;
+        table.row(vec![
+            "LoRIF".into(), f.to_string(), "1".into(),
+            fmt_mb(m.storage_bytes), fmt_pm(m.tail_patch),
+        ]);
+    }
+    table.print();
+    table.save("fig4b")?;
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Figure 5: LDS vs tail-patch alignment across method–configuration
+//! pairs (small tier, where both metrics are computable).
+//!
+//! Expected shape: strong positive linear trend across gradient-based
+//! methods; RepSim (non-gradient) deviates furthest from the trend line.
+
+use lorif::app::Method;
+use lorif::bench_support::{Session, Table};
+
+fn main() -> anyhow::Result<()> {
+    let s = Session::new();
+    let mut table = Table::new(
+        "Fig 5: LDS vs tail-patch per method-config pair (small tier)",
+        &["method", "f", "c/r", "LDS", "tail-patch"],
+    );
+    let mut points: Vec<(f64, f64, String)> = Vec::new();
+    let configs: Vec<(Method, usize, usize, usize)> = vec![
+        (Method::RepSim, 4, 1, 64),
+        (Method::GradDot, 4, 1, 64),
+        (Method::GradDot, 2, 1, 64),
+        (Method::TrackStar, 4, 1, 64),
+        (Method::Logra, 8, 1, 64),
+        (Method::Logra, 4, 1, 64),
+        (Method::Logra, 2, 1, 64),
+        (Method::Lorif, 4, 1, 128),
+        (Method::Lorif, 2, 1, 256),
+        (Method::Lorif, 2, 4, 384),
+    ];
+    for (method, f, c, r) in configs {
+        let m = s.measure(method, f, c, r, true, true)?;
+        let lds = m.lds.unwrap().0;
+        let tp = m.tail_patch.unwrap().0;
+        points.push((lds, tp, method.name().to_string()));
+        table.row(vec![
+            method.name().into(),
+            f.to_string(),
+            format!("c={c} r={r}"),
+            format!("{lds:.4}"),
+            format!("{tp:.3}"),
+        ]);
+    }
+    table.print();
+
+    // linear fit + per-method residuals (RepSim should deviate most)
+    let grad_pts: Vec<&(f64, f64, String)> =
+        points.iter().filter(|p| p.2 != "repsim").collect();
+    let n = grad_pts.len() as f64;
+    let mx = grad_pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = grad_pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let sxy: f64 = grad_pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let sxx: f64 = grad_pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    let slope = sxy / sxx.max(1e-12);
+    let icept = my - slope * mx;
+    let corr = {
+        let syy: f64 = grad_pts.iter().map(|p| (p.1 - my) * (p.1 - my)).sum();
+        sxy / (sxx.sqrt() * syy.sqrt()).max(1e-12)
+    };
+    println!("\nlinear fit over gradient-based methods: tail-patch = {slope:.2} * LDS + {icept:.3} (pearson r = {corr:.3})");
+    for (lds, tp, name) in &points {
+        let resid = tp - (slope * lds + icept);
+        println!("  {name:10} residual {resid:+.3}{}", if name == "repsim" { "  <-- non-gradient" } else { "" });
+    }
+    table.save("fig5")?;
+    Ok(())
+}

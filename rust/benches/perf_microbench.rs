@@ -1,0 +1,181 @@
+//! §Perf microbenchmarks: the L3 hot-path primitives in isolation.
+//!
+//! Measures: bf16 decode throughput, blocked GEMM GFLOP/s, factor-dot
+//! scoring throughput, reconstruct+project throughput, store streaming
+//! bandwidth (sync vs prefetch), and the XLA-executable scorer vs the
+//! Rust-native scorer.  The before/after log lives in EXPERIMENTS.md
+//! §Perf.
+
+use std::time::Instant;
+
+use lorif::attribution::lorif::factor_dots;
+use lorif::linalg::Mat;
+use lorif::util::bf16;
+use lorif::util::prng::Rng;
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(1);
+    println!("=== §Perf microbenchmarks (1 iteration values) ===");
+
+    // bf16 decode
+    {
+        let n = 1 << 20;
+        let src: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut bytes = Vec::new();
+        bf16::encode_slice(&src, &mut bytes);
+        let mut dst = vec![0.0f32; n];
+        let t = time(20, || bf16::decode_into(&bytes, &mut dst));
+        println!(
+            "bf16 decode: {:.2} GB/s out ({:.3} ms / 4 MiB)",
+            (n * 4) as f64 / t / 1e9,
+            t * 1e3
+        );
+    }
+
+    // GEMM
+    for (m, k, n) in [(512, 768, 48), (2048, 768, 128), (512, 512, 512)] {
+        let a = Mat::random_normal(m, k, 1.0, &mut rng);
+        let b = Mat::random_normal(k, n, 1.0, &mut rng);
+        let t = time(5, || {
+            let _ = a.matmul(&b);
+        });
+        println!(
+            "gemm {m}x{k}x{n}: {:.2} GFLOP/s ({:.2} ms)",
+            2.0 * (m * k * n) as f64 / t / 1e9,
+            t * 1e3
+        );
+    }
+
+    // factor dots (c = 1 fast path): B x Nq pairings
+    {
+        let (b, nq, d1, d2) = (2048, 48, 16, 48);
+        let u = Mat::random_normal(b, d1, 1.0, &mut rng);
+        let v = Mat::random_normal(b, d2, 1.0, &mut rng);
+        let uq = Mat::random_normal(nq, d1, 1.0, &mut rng);
+        let vq = Mat::random_normal(nq, d2, 1.0, &mut rng);
+        let t = time(10, || {
+            let _ = factor_dots(&u, &v, &uq, &vq, d1, d2, 1);
+        });
+        println!(
+            "factor-dot c=1 ({b}x{nq} pairs): {:.1} Mpairs/s ({:.2} ms)",
+            (b * nq) as f64 / t / 1e6,
+            t * 1e3
+        );
+    }
+
+    // reconstruct + project (the faithful Woodbury path)
+    {
+        let (b, d1, d2, r) = (512, 16, 48, 128);
+        let u = Mat::random_normal(b, d1, 1.0, &mut rng);
+        let v = Mat::random_normal(b, d2, 1.0, &mut rng);
+        let vr = Mat::random_normal(d1 * d2, r, 1.0, &mut rng);
+        let mut scratch = Mat::zeros(b, d1 * d2);
+        let t = time(5, || {
+            for ex in 0..b {
+                lorif::curvature::reconstruct_row(
+                    u.row(ex), v.row(ex), d1, d2, 1, scratch.row_mut(ex),
+                );
+            }
+            let _ = scratch.matmul(&vr);
+        });
+        println!(
+            "reconstruct+project B={b} D={} r={r}: {:.1} ex/ms ({:.2} ms)",
+            d1 * d2,
+            b as f64 / (t * 1e3),
+            t * 1e3
+        );
+    }
+
+    // store streaming: sync vs prefetch
+    {
+        use lorif::runtime::{ExtractBatch, LayerGrads};
+        use lorif::store::{StoreKind, StoreMeta, StoreReader, StoreWriter};
+        let dir = std::env::temp_dir().join("lorif_perf_store");
+        std::fs::create_dir_all(&dir)?;
+        let base = dir.join("perf");
+        let layers = vec![(16usize, 48usize), (16, 16), (16, 32), (32, 16)];
+        let n = 4096;
+        if !StoreMeta::meta_path(&base).exists() {
+            let meta = StoreMeta {
+                kind: StoreKind::Dense,
+                tier: "small".into(),
+                f: 4,
+                c: 1,
+                layers: layers.clone(),
+                n_examples: 0,
+            };
+            let mut w = StoreWriter::create(&base, meta)?;
+            let lg: Vec<LayerGrads> = layers
+                .iter()
+                .map(|&(d1, d2)| LayerGrads {
+                    g: Mat::random_normal(n, d1 * d2, 1.0, &mut rng),
+                    u: Mat::zeros(n, d1),
+                    v: Mat::zeros(n, d2),
+                })
+                .collect();
+            w.append(&ExtractBatch { losses: vec![0.0; n], layers: lg, valid: n })?;
+            w.finalize()?;
+        }
+        let reader = StoreReader::open(&base)?;
+        for prefetch in [false, true] {
+            let t = time(3, || {
+                let mut acc = 0.0f32;
+                reader
+                    .stream(512, prefetch, |chunk| {
+                        acc += chunk.layers[0].dense().data[0];
+                        Ok(())
+                    })
+                    .unwrap();
+                std::hint::black_box(acc);
+            });
+            println!(
+                "store stream (prefetch={prefetch}): {:.2} GB/s ({:.1} ms / {:.1} MB)",
+                reader.meta.total_bytes() as f64 / t / 1e9,
+                t * 1e3,
+                reader.meta.total_bytes() as f64 / 1e6
+            );
+        }
+    }
+
+    // XLA scorer artifact vs Rust-native scorer (single layer shape)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = lorif::runtime::Runtime::new(std::path::Path::new("artifacts"))?;
+        if let Ok(exe) = rt.load("score_16x48_c1_r128") {
+            let (b, d1, d2, c, r) = (512usize, 16usize, 48usize, 1usize, 128usize);
+            let mk = |n: usize, rng: &mut Rng| -> Vec<f32> {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            };
+            let uq = lorif::runtime::lit_f32(&mk(d1 * c, &mut rng), &[d1 as i64, c as i64])?;
+            let vq = lorif::runtime::lit_f32(&mk(d2 * c, &mut rng), &[d2 as i64, c as i64])?;
+            let bu = lorif::runtime::lit_f32(&mk(b * d1 * c, &mut rng), &[b as i64, d1 as i64, c as i64])?;
+            let bv = lorif::runtime::lit_f32(&mk(b * d2 * c, &mut rng), &[b as i64, d2 as i64, c as i64])?;
+            let gq = lorif::runtime::lit_f32(&mk(r, &mut rng), &[r as i64])?;
+            let gt = lorif::runtime::lit_f32(&mk(b * r, &mut rng), &[b as i64, r as i64])?;
+            let w = lorif::runtime::lit_f32(&mk(r, &mut rng), &[r as i64])?;
+            let lam = lorif::runtime::lit_f32(&[0.5], &[1])?;
+            let t = time(20, || {
+                let _ = rt.exec(&exe, &[&uq, &vq, &bu, &bv, &gq, &gt, &w, &lam]).unwrap();
+            });
+            println!(
+                "XLA pallas scorer (B={b}, one layer): {:.1} Mpairs/s ({:.3} ms)",
+                b as f64 / t / 1e6,
+                t * 1e3
+            );
+        }
+    } else {
+        println!("(artifacts missing: skipping XLA scorer comparison)");
+    }
+    Ok(())
+}

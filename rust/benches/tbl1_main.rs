@@ -1,0 +1,57 @@
+//! Table 1: main comparison on the small tier (GPT2-small stand-in) —
+//! LDS, persistent storage, and query latency across storage regimes.
+//!
+//! Regime mapping (paper f in {8,16,32} at GPT2 scale -> ours):
+//!   high   f=2  | medium f=4 | low f=8, with LoRIF using a smaller
+//! factored store (or higher D at matched storage) in each regime.
+//! Expected shape: EK-FAC best LDS but ~10^3x slower; RepSim tiny+fast
+//! but near-zero LDS; LoRIF matches/beats LoGRA per regime with ~5-10x
+//! less storage.
+
+use lorif::app::Method;
+use lorif::bench_support::{fmt_mb, fmt_pm, fmt_s, Session, Table};
+
+fn main() -> anyhow::Result<()> {
+    let s = Session::new();
+    let mut table = Table::new(
+        "Table 1: main comparison (small tier)",
+        &["method", "f", "c", "r", "LDS", "storage", "latency"],
+    );
+    let mut add = |m: lorif::bench_support::Measurement| {
+        let c = if m.method == "lorif" { m.c.to_string() } else { "—".into() };
+        let r = if m.method == "lorif" { m.r.to_string() } else { "—".into() };
+        table.row(vec![
+            m.method.clone(),
+            m.f.to_string(),
+            c,
+            r,
+            fmt_pm(m.lds),
+            fmt_mb(m.storage_bytes),
+            fmt_s(m.latency_total()),
+        ]);
+    };
+
+    // contextual baselines
+    add(s.measure(Method::Ekfac, 1, 1, 64, true, false)?);
+    add(s.measure(Method::RepSim, 4, 1, 64, true, false)?);
+
+    // high storage regime (f = 2)
+    add(s.measure(Method::GradDot, 2, 1, 64, true, false)?);
+    add(s.measure(Method::TrackStar, 2, 1, 64, true, false)?);
+    add(s.measure(Method::Logra, 2, 1, 64, true, false)?);
+    add(s.measure(Method::Lorif, 2, 4, 384, true, false)?);
+
+    // medium storage regime (f = 4)
+    add(s.measure(Method::TrackStar, 4, 1, 64, true, false)?);
+    add(s.measure(Method::Logra, 4, 1, 64, true, false)?);
+    add(s.measure(Method::Lorif, 2, 1, 256, true, false)?);
+
+    // low storage regime (f = 8)
+    add(s.measure(Method::TrackStar, 8, 1, 64, true, false)?);
+    add(s.measure(Method::Logra, 8, 1, 64, true, false)?);
+    add(s.measure(Method::Lorif, 4, 1, 128, true, false)?);
+
+    table.print();
+    table.save("tbl1")?;
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Table 2: large-scale attribution — tail-patch score on the medium
+//! (OLMo-3-7B stand-in) and large (Apertus-70B stand-in) tiers, where
+//! repeated subset retraining for LDS would be infeasible.
+//!
+//! Expected shape (per tier): RepSim cheapest but lowest tail-patch;
+//! LoRIF at matched f ~matches LoGRA with far less storage/latency; LoRIF
+//! at smaller f (larger D) wins outright while still using less storage.
+
+use lorif::app::Method;
+use lorif::bench_support::{fmt_mb, fmt_pm, fmt_s, Session, Table};
+use lorif::model::spec::Tier;
+
+fn main() -> anyhow::Result<()> {
+    for tier in [Tier::Medium, Tier::Large] {
+        let s = Session::with_tier(tier);
+        let mut table = Table::new(
+            &format!("Table 2: tail-patch comparison ({} tier)", tier.name()),
+            &["method", "f", "c", "r", "tail-patch", "storage", "latency"],
+        );
+        let mut add = |m: lorif::bench_support::Measurement| {
+            let c = if m.method == "lorif" { m.c.to_string() } else { "—".into() };
+            let r = if m.method == "lorif" { m.r.to_string() } else { "—".into() };
+            table.row(vec![
+                m.method.clone(),
+                m.f.to_string(),
+                c,
+                r,
+                fmt_pm(m.tail_patch),
+                fmt_mb(m.storage_bytes),
+                fmt_s(m.latency_total()),
+            ]);
+        };
+        // artifact grid: medium has f {4,8,16}, large has f {8,16}
+        let (f_base, f_big_d) = match tier {
+            Tier::Medium => (8, 4),
+            _ => (16, 8),
+        };
+        add(s.measure(Method::RepSim, f_base, 1, 64, false, true)?);
+        add(s.measure(Method::GradDot, f_base, 1, 64, false, true)?);
+        add(s.measure(Method::Logra, f_base, 1, 64, false, true)?);
+        add(s.measure(Method::Lorif, f_base, 1, 64, false, true)?);
+        add(s.measure(Method::Lorif, f_big_d, 1, 128, false, true)?);
+        table.print();
+        table.save(&format!("tbl2_{}", tier.name()))?;
+    }
+    Ok(())
+}

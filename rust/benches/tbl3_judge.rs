@@ -1,0 +1,97 @@
+//! Tables 3 / 12 / 13: top-1 retrieval evaluation with the programmatic
+//! relevance judge (Claude-Haiku stand-in; see eval::judge).
+//!
+//! LoRIF uses a smaller f (larger effective D, possible because the
+//! factored store stays small) vs LoGRA at its storage-feasible f —
+//! matching the paper's evaluated configurations (LoRIF f=16 vs LoGRA
+//! f=128 on OLMo).  Expected shape: LoRIF higher average relevance,
+//! much lower score-1 rate, and most non-tied comparisons won.
+
+use lorif::app::{build_store_scorer, Method};
+use lorif::attribution::Scorer;
+use lorif::bench_support::{Session, Table};
+use lorif::eval::judge;
+use lorif::index::Stage1Options;
+use lorif::model::spec::Tier;
+
+fn main() -> anyhow::Result<()> {
+    for tier in [Tier::Medium, Tier::Large] {
+        let s = Session::with_tier(tier);
+        // LoRIF at larger D (smaller f), LoGRA at the storage-limited f
+        let (f_logra, f_lorif) = match tier {
+            Tier::Medium => (8, 4),
+            _ => (16, 8),
+        };
+        // LoGRA pipeline at its f
+        let (p_logra, train, queries, params) = s.prepared(f_logra, 1, 64)?;
+        let lit = p_logra.params_literal(&params)?;
+        p_logra.stage1(&lit, &train, Stage1Options::default())?;
+        let qg_logra = p_logra.query_grads(&lit, &queries)?;
+        let mut logra = build_store_scorer(&p_logra, Method::Logra)?;
+        let top_logra: Vec<usize> =
+            logra.score(&qg_logra)?.topk(1).iter().map(|t| t[0]).collect();
+
+        // LoRIF pipeline at its (smaller) f
+        let (p_lorif, _, _, _) = s.prepared(f_lorif, 1, 128)?;
+        p_lorif.stage1(&lit, &train, Stage1Options { write_dense: false, ..Default::default() })?;
+        let qg_lorif = p_lorif.query_grads(&lit, &queries)?;
+        let mut lorif = build_store_scorer(&p_lorif, Method::Lorif)?;
+        let top_lorif: Vec<usize> =
+            lorif.score(&qg_lorif)?.topk(1).iter().map(|t| t[0]).collect();
+
+        let tm = p_logra.topic_model();
+        let sa = judge::judge_top1(&tm, &queries, &train, &top_lorif);
+        let sb = judge::judge_top1(&tm, &queries, &train, &top_logra);
+        let (aw, bw, tie) = judge::preference(&tm, &queries, &train, &top_lorif, &top_logra);
+
+        let mut t3 = Table::new(
+            &format!("Table 3/12: top-1 relevance ({} tier)", tier.name()),
+            &["metric", "LoRIF", "LoGRA"],
+        );
+        t3.row(vec![
+            format!("config"),
+            format!("f={f_lorif} c=1"),
+            format!("f={f_logra}"),
+        ]);
+        t3.row(vec![
+            "avg relevance".into(),
+            format!("{:.2}", sa.avg_score),
+            format!("{:.2}", sb.avg_score),
+        ]);
+        t3.row(vec![
+            "score-1 rate".into(),
+            format!("{:.1}%", 100.0 * sa.score1_rate),
+            format!("{:.1}%", 100.0 * sb.score1_rate),
+        ]);
+        t3.row(vec![
+            "score>=4 rate".into(),
+            format!("{:.1}%", 100.0 * sa.score_ge4_rate),
+            format!("{:.1}%", 100.0 * sb.score_ge4_rate),
+        ]);
+        t3.row(vec![
+            "preference".into(),
+            format!("{:.1}%", 100.0 * aw),
+            format!("{:.1}% (tie {:.1}%)", 100.0 * bw, 100.0 * tie),
+        ]);
+        t3.print();
+        t3.save(&format!("tbl3_{}", tier.name()))?;
+
+        let mut t13 = Table::new(
+            &format!("Table 13: relevance distribution ({} tier)", tier.name()),
+            &["score", "meaning", "LoRIF", "LoGRA"],
+        );
+        let meanings =
+            ["completely irrelevant", "vaguely related", "same broad topic", "closely related", "nearly identical"];
+        for i in 0..5 {
+            t13.row(vec![
+                (i + 1).to_string(),
+                meanings[i].into(),
+                format!("{:.1}%", 100.0 * sa.dist[i]),
+                format!("{:.1}%", 100.0 * sb.dist[i]),
+            ]);
+        }
+        t13.print();
+        t13.save(&format!("tbl13_{}", tier.name()))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Tables 5/6/7: preprocessing time — stage 1 (gradient computation +
+//! factorization + storage) and stage 2 (inverse-Hessian approximation)
+//! for every tier.
+//!
+//! Expected shape (per paper App. C): stage 1 is nearly flat in f and c=1
+//! factorization adds negligible time; stage 2 grows steeply as f drops
+//! (D grows) and is far cheaper for LoRIF's rSVD than LoGRA's dense
+//! assembly at large D.
+
+use lorif::bench_support::{fmt_s, Session, Table};
+use lorif::index::Stage1Options;
+use lorif::model::spec::Tier;
+
+fn main() -> anyhow::Result<()> {
+    // small tier: the Table 5 grid
+    let s = Session::new();
+    let mut table = Table::new(
+        "Table 5: preprocessing time (small tier)",
+        &["method", "f", "c", "r", "stage 1", "stage 2", "total"],
+    );
+    let grid: &[(&str, usize, usize, usize)] = &[
+        ("LoGRA", 16, 1, 0),
+        ("LoGRA", 8, 1, 0),
+        ("LoGRA", 4, 1, 0),
+        ("LoGRA", 2, 1, 0),
+        ("LoRIF", 8, 1, 64),
+        ("LoRIF", 4, 1, 128),
+        ("LoRIF", 2, 1, 256),
+        ("LoRIF", 2, 4, 384),
+    ];
+    for &(method, f, c, r) in grid {
+        let p = s.pipeline(f, c, r.max(1))?;
+        let (train, _) = p.corpus()?;
+        let params = p.base_params(&train)?;
+        let lit = p.params_literal(&params)?;
+        // clear cached index for THIS config so times are real
+        let _ = std::fs::remove_dir_all(p.cfg.index_dir());
+        let is_lorif = method == "LoRIF";
+        let s1 = p.stage1(
+            &lit,
+            &train,
+            Stage1Options {
+                write_factored: is_lorif,
+                write_dense: !is_lorif,
+                write_embeddings: false,
+            },
+        )?;
+        let (t2_secs, r_str) = if is_lorif {
+            let (_, d) = p.stage2_lorif()?;
+            (d.as_secs_f64(), r.to_string())
+        } else {
+            let (_, d) = p.stage2_dense()?;
+            (d.as_secs_f64(), "—".to_string())
+        };
+        table.row(vec![
+            method.into(),
+            f.to_string(),
+            if is_lorif { c.to_string() } else { "—".into() },
+            r_str,
+            fmt_s(s1.wall.as_secs_f64()),
+            fmt_s(t2_secs),
+            fmt_s(s1.wall.as_secs_f64() + t2_secs),
+        ]);
+    }
+    table.print();
+    table.save("tbl5")?;
+
+    // medium/large tiers: Tables 6/7 (reduced grid)
+    for tier in [Tier::Medium, Tier::Large] {
+        let s = Session::with_tier(tier);
+        let mut table = Table::new(
+            &format!("Table {}: preprocessing time ({} tier)", if tier == Tier::Medium { 6 } else { 7 }, tier.name()),
+            &["method", "f", "c", "r", "stage 1", "stage 2", "total"],
+        );
+        let (f_a, f_b) = if tier == Tier::Medium { (8, 4) } else { (16, 8) };
+        for &(method, f, r) in
+            &[("LoGRA", f_a, 0usize), ("LoRIF", f_a, 64), ("LoRIF", f_b, 128)]
+        {
+            let p = s.pipeline(f, 1, r.max(1))?;
+            let (train, _) = p.corpus()?;
+            let params = p.base_params(&train)?;
+            let lit = p.params_literal(&params)?;
+            let _ = std::fs::remove_dir_all(p.cfg.index_dir());
+            let is_lorif = method == "LoRIF";
+            let s1 = p.stage1(
+                &lit,
+                &train,
+                Stage1Options {
+                    write_factored: is_lorif,
+                    write_dense: !is_lorif,
+                    write_embeddings: false,
+                },
+            )?;
+            let t2 = if is_lorif {
+                p.stage2_lorif()?.1.as_secs_f64()
+            } else {
+                p.stage2_dense()?.1.as_secs_f64()
+            };
+            table.row(vec![
+                method.into(),
+                f.to_string(),
+                if is_lorif { "1".into() } else { "—".into() },
+                if is_lorif { r.to_string() } else { "—".into() },
+                fmt_s(s1.wall.as_secs_f64()),
+                fmt_s(t2),
+                fmt_s(s1.wall.as_secs_f64() + t2),
+            ]);
+        }
+        table.print();
+        table.save(&format!("tbl_preproc_{}", tier.name()))?;
+    }
+    Ok(())
+}

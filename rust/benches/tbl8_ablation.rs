@@ -1,0 +1,103 @@
+//! Table 8: separating LoRIF's two low-rank components.
+//!
+//!   LoRIF w/o truncated SVD  = rank-c factors + dense Cholesky K
+//!                              (OOM above the dense limit — demonstrated
+//!                              by dropping LORIF_DENSE_LIMIT);
+//!   LoRIF w/o factorization  = dense gradients + Woodbury curvature;
+//!   LoRIF                    = both components.
+//!
+//! Expected shape: w/o-SVD keeps storage small but hits OOM at large D;
+//! w/o-fact keeps quality but restores O(D) storage; full LoRIF gets
+//! both cheap.
+
+use lorif::app::{build_store_scorer, Method};
+use lorif::attribution::ablation::{DenseWoodburyScorer, FactoredDenseKScorer};
+use lorif::attribution::Scorer;
+use lorif::bench_support::{fmt_mb, fmt_pm, fmt_s, lds_protocol, Session, Table};
+use lorif::eval::LdsActuals;
+use lorif::index::Stage1Options;
+use lorif::store::StoreReader;
+
+fn main() -> anyhow::Result<()> {
+    let s = Session::new();
+    let mut table = Table::new(
+        "Table 8: component ablation (small tier)",
+        &["variant", "f", "c", "r", "LDS", "storage", "latency"],
+    );
+    for (f, c, r) in [(4usize, 1usize, 128usize), (2, 1, 256)] {
+        let (p, train, queries, params) = s.prepared(f, c, r)?;
+        let lit = p.params_literal(&params)?;
+        p.stage1(&lit, &train, Stage1Options::default())?;
+        let qg = p.query_grads(&lit, &queries)?;
+        let actuals = LdsActuals::get(&p, &lds_protocol(), &train, &queries)?;
+
+        // w/o truncated SVD (factors + dense K)
+        let row = match p.stage2_dense() {
+            Ok((curv, _)) => {
+                let mut sc =
+                    FactoredDenseKScorer::new(StoreReader::open(&p.factored_base())?, curv);
+                let rep = sc.score(&qg)?;
+                vec![
+                    "LoRIF w/o truncated SVD".into(),
+                    f.to_string(), c.to_string(), "—".into(),
+                    fmt_pm(Some(actuals.lds(&rep.scores))),
+                    fmt_mb(sc.index_bytes()),
+                    fmt_s(rep.timer.total().as_secs_f64()),
+                ]
+            }
+            Err(e) => vec![
+                "LoRIF w/o truncated SVD".into(),
+                f.to_string(), c.to_string(), "—".into(),
+                format!("OOM ({e})"), "—".into(), "—".into(),
+            ],
+        };
+        table.row(row);
+
+        // w/o rank factorization (dense + Woodbury)
+        let reader = StoreReader::open(&p.dense_base())?;
+        let curv = lorif::curvature::TruncatedCurvature::build(
+            &reader, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
+            p.cfg.lambda_factor, p.cfg.seed,
+        )?;
+        let mut sc = DenseWoodburyScorer::new(StoreReader::open(&p.dense_base())?, curv);
+        let rep = sc.score(&qg)?;
+        table.row(vec![
+            "LoRIF w/o factorization".into(),
+            f.to_string(), "—".into(), r.to_string(),
+            fmt_pm(Some(actuals.lds(&rep.scores))),
+            fmt_mb(sc.index_bytes()),
+            fmt_s(rep.timer.total().as_secs_f64()),
+        ]);
+
+        // full LoRIF
+        let mut sc = build_store_scorer(&p, Method::Lorif)?;
+        let rep = sc.score(&qg)?;
+        table.row(vec![
+            "LoRIF".into(),
+            f.to_string(), c.to_string(), r.to_string(),
+            fmt_pm(Some(actuals.lds(&rep.scores))),
+            fmt_mb(sc.index_bytes()),
+            fmt_s(rep.timer.total().as_secs_f64()),
+        ]);
+    }
+
+    // OOM demonstration: the dense-K path refuses at large D under a
+    // memory budget (the paper's "OOM" rows)
+    {
+        std::env::set_var("LORIF_DENSE_LIMIT", "2000000"); // 8 MB of f32
+        let (p, train, _, params) = s.prepared(2, 1, 256)?;
+        let lit = p.params_literal(&params)?;
+        p.stage1(&lit, &train, Stage1Options::default())?;
+        let err = p.stage2_dense().err();
+        std::env::remove_var("LORIF_DENSE_LIMIT");
+        table.row(vec![
+            "w/o SVD @ 8MB budget".into(),
+            "2".into(), "1".into(), "—".into(),
+            err.map(|e| format!("OOM: {e}")).unwrap_or("unexpected OK".into()),
+            "—".into(), "—".into(),
+        ]);
+    }
+    table.print();
+    table.save("tbl8")?;
+    Ok(())
+}

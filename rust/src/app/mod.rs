@@ -1,0 +1,144 @@
+//! High-level composition used by the CLI, examples, and benches:
+//! build any paper method end-to-end from a `Pipeline`.
+
+use crate::attribution::ekfac::EkfacScorer;
+use crate::attribution::graddot::GradDotScorer;
+use crate::attribution::logra::LograScorer;
+use crate::attribution::lorif::LorifScorer;
+use crate::attribution::repsim::{EmbedStore, RepSimScorer};
+use crate::attribution::trackstar::TrackStarScorer;
+use crate::attribution::Scorer;
+use crate::corpus::Dataset;
+use crate::index::Pipeline;
+use crate::runtime::{Embedder, GradExtractor};
+use crate::store::StoreReader;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Lorif,
+    Logra,
+    GradDot,
+    TrackStar,
+    RepSim,
+    Ekfac,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        Ok(match s {
+            "lorif" => Method::Lorif,
+            "logra" => Method::Logra,
+            "graddot" => Method::GradDot,
+            "trackstar" => Method::TrackStar,
+            "repsim" => Method::RepSim,
+            "ekfac" => Method::Ekfac,
+            _ => anyhow::bail!("unknown method '{s}' (lorif|logra|graddot|trackstar|repsim|ekfac)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Lorif => "lorif",
+            Method::Logra => "logra",
+            Method::GradDot => "graddot",
+            Method::TrackStar => "trackstar",
+            Method::RepSim => "repsim",
+            Method::Ekfac => "ekfac",
+        }
+    }
+
+    pub fn needs_dense_store(self) -> bool {
+        matches!(self, Method::Logra | Method::GradDot | Method::TrackStar)
+    }
+}
+
+/// Build a boxed scorer for the simple (store-backed) methods.
+/// EK-FAC and RepSim have extra dependencies — see the dedicated fns.
+pub fn build_store_scorer(
+    p: &Pipeline,
+    method: Method,
+) -> anyhow::Result<Box<dyn Scorer>> {
+    match method {
+        Method::Lorif => {
+            let (curv, _) = p.stage2_lorif()?;
+            let reader = StoreReader::open(&p.factored_base())?;
+            Ok(Box::new(LorifScorer::new(reader, curv)))
+        }
+        Method::Logra => {
+            let (curv, _) = p.stage2_dense()?;
+            let reader = StoreReader::open(&p.dense_base())?;
+            Ok(Box::new(LograScorer::new(reader, curv)))
+        }
+        Method::GradDot => {
+            let reader = StoreReader::open(&p.dense_base())?;
+            Ok(Box::new(GradDotScorer::new(reader)))
+        }
+        Method::TrackStar => {
+            let (curv, _) = p.stage2_dense()?;
+            let reader = StoreReader::open(&p.dense_base())?;
+            Ok(Box::new(TrackStarScorer::new(reader, curv)))
+        }
+        Method::RepSim | Method::Ekfac => {
+            anyhow::bail!("use build_repsim_scorer / build_ekfac_scorer for {method:?}")
+        }
+    }
+}
+
+/// RepSim needs query embeddings computed with the same model.
+pub fn build_repsim_scorer(
+    p: &Pipeline,
+    params: &xla::Literal,
+    queries: &Dataset,
+) -> anyhow::Result<RepSimScorer> {
+    let embedder = Embedder::new(&p.rt, p.cfg.tier)?;
+    let qemb = embedder.embed_all(&p.rt, params, queries)?;
+    RepSimScorer::new(&p.embed_path(), qemb)
+}
+
+/// EK-FAC: covariance fit + eigenvalue-correction pass (stage 1'), then
+/// the recomputation-based scorer.  `corr_examples` bounds the correction
+/// pass (paper uses the full corpus; we default to min(n, 512)).
+pub fn build_ekfac_scorer<'a>(
+    p: &'a Pipeline,
+    extractor_f1: &'a GradExtractor,
+    params: &'a xla::Literal,
+    train: &'a Dataset,
+    corr_examples: usize,
+) -> anyhow::Result<EkfacScorer<'a>> {
+    let stats = crate::runtime::EkfacStats::new(&p.rt, p.cfg.tier)?;
+    let covs = stats.accumulate(&p.rt, params, train, train.len())?;
+    let ekfac = crate::curvature::Ekfac::from_covariances(&covs, p.cfg.lambda_factor);
+    let layer_dims = p
+        .cfg
+        .tier
+        .spec()
+        .tracked_layers()
+        .iter()
+        .map(|l| (l.in_dim, l.out_dim))
+        .collect();
+    let mut scorer = EkfacScorer {
+        rt: &p.rt,
+        extractor: extractor_f1,
+        params,
+        train,
+        ekfac,
+        layer_dims,
+    };
+    scorer.fit_corrections(corr_examples, p.cfg.lambda_factor)?;
+    Ok(scorer)
+}
+
+/// Ensure the embedding store exists (stage 1 for RepSim).
+pub fn ensure_embeddings(
+    p: &Pipeline,
+    params: &xla::Literal,
+    train: &Dataset,
+) -> anyhow::Result<()> {
+    let path = p.embed_path();
+    if !path.exists() {
+        let embedder = Embedder::new(&p.rt, p.cfg.tier)?;
+        let emb = embedder.embed_all(&p.rt, params, train)?;
+        EmbedStore::save(&path, &emb)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Ablation scorers for Table 8 ("Separating the Two Low-Rank
+//! Components"):
+//!
+//!  * `DenseWoodburyScorer`  — "LoRIF w/o rank factorization": dense
+//!    projected gradients scored with the truncated-SVD + Woodbury
+//!    curvature.  Isolates the curvature approximation (should track
+//!    LoGRA closely for adequate r).
+//!  * `FactoredDenseKScorer` — "LoRIF w/o truncated SVD": rank-c factors
+//!    scored against the dense Cholesky curvature (requires O(D^2)
+//!    memory — trips the same OOM guard as LoGRA at large D).  Isolates
+//!    the factorization error.
+
+use super::{QueryGrads, ScoreReport, Scorer};
+use crate::curvature::{reconstruct_row, DenseCurvature, TruncatedCurvature};
+use crate::linalg::Mat;
+use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::util::timer::PhaseTimer;
+
+pub struct DenseWoodburyScorer {
+    pub reader: StoreReader,
+    pub curv: TruncatedCurvature,
+    pub prefetch: bool,
+    pub chunk_size: usize,
+}
+
+impl DenseWoodburyScorer {
+    pub fn new(reader: StoreReader, curv: TruncatedCurvature) -> Self {
+        DenseWoodburyScorer { reader, curv, prefetch: true, chunk_size: 512 }
+    }
+}
+
+impl Scorer for DenseWoodburyScorer {
+    fn name(&self) -> &'static str {
+        "lorif-no-fact"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        self.reader.meta.total_bytes()
+    }
+
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        anyhow::ensure!(self.reader.meta.kind == StoreKind::Dense, "needs dense store");
+        let n = self.reader.meta.n_examples;
+        let nq = queries.n_query;
+        let n_layers = queries.n_layers();
+        let mut timer = PhaseTimer::new();
+        // query projections with folded Woodbury weights
+        let gqw: Vec<Mat> = timer.time("precondition", || {
+            (0..n_layers)
+                .map(|l| {
+                    let mut proj = queries.layers[l].g.matmul(&self.curv.layers[l].v);
+                    for row in 0..proj.rows {
+                        for (x, w) in proj.row_mut(row).iter_mut().zip(&self.curv.weights[l]) {
+                            *x *= w;
+                        }
+                    }
+                    proj
+                })
+                .collect()
+        });
+        let mut scores = Mat::zeros(nq, n);
+        let mut compute = std::time::Duration::ZERO;
+        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
+            let t0 = std::time::Instant::now();
+            for l in 0..n_layers {
+                let g = match &chunk.layers[l] {
+                    ChunkLayer::Dense { g } => g,
+                    _ => anyhow::bail!("expected dense chunk"),
+                };
+                let inv_lambda = 1.0 / self.curv.lambdas[l];
+                let dots = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
+                let proj = g.matmul(&self.curv.layers[l].v); // (B, r)
+                let corr = proj.matmul_nt(&gqw[l]); // (B, Nq)
+                for nn in 0..chunk.count {
+                    let drow = dots.row(nn);
+                    let crow = corr.row(nn);
+                    for q in 0..nq {
+                        *scores.at_mut(q, chunk.start + nn) += drow[q] * inv_lambda - crow[q];
+                    }
+                }
+            }
+            compute += t0.elapsed();
+            Ok(())
+        })?;
+        timer.add("load", io_time);
+        timer.add("compute", compute);
+        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+    }
+}
+
+pub struct FactoredDenseKScorer {
+    pub reader: StoreReader,
+    pub curv: DenseCurvature,
+    pub prefetch: bool,
+    pub chunk_size: usize,
+}
+
+impl FactoredDenseKScorer {
+    pub fn new(reader: StoreReader, curv: DenseCurvature) -> Self {
+        FactoredDenseKScorer { reader, curv, prefetch: true, chunk_size: 512 }
+    }
+}
+
+impl Scorer for FactoredDenseKScorer {
+    fn name(&self) -> &'static str {
+        "lorif-no-svd"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        self.reader.meta.total_bytes()
+    }
+
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        anyhow::ensure!(self.reader.meta.kind == StoreKind::Factored, "needs factored store");
+        let c = self.reader.meta.c;
+        let n = self.reader.meta.n_examples;
+        let nq = queries.n_query;
+        let n_layers = queries.n_layers();
+        let mut timer = PhaseTimer::new();
+        // K^{-1} g_q per layer
+        let pre: Vec<Mat> = timer.time("precondition", || {
+            (0..n_layers)
+                .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
+                .collect()
+        });
+        let mut scores = Mat::zeros(nq, n);
+        let mut compute = std::time::Duration::ZERO;
+        let mut scratch: Vec<f32> = Vec::new();
+        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
+            let t0 = std::time::Instant::now();
+            for l in 0..n_layers {
+                let (d1, d2) = self.reader.meta.layers[l];
+                let (u, v) = match &chunk.layers[l] {
+                    ChunkLayer::Factored { u, v } => (u, v),
+                    _ => anyhow::bail!("expected factored chunk"),
+                };
+                scratch.resize(d1 * d2, 0.0);
+                for nn in 0..chunk.count {
+                    reconstruct_row(u.row(nn), v.row(nn), d1, d2, c, &mut scratch);
+                    for q in 0..nq {
+                        let s = crate::linalg::mat::dot(&scratch, pre[l].row(q));
+                        *scores.at_mut(q, chunk.start + nn) += s;
+                    }
+                }
+            }
+            compute += t0.elapsed();
+            Ok(())
+        })?;
+        timer.add("load", io_time);
+        timer.add("compute", compute);
+        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::testutil::make_fixture;
+    use crate::attribution::logra::LograScorer;
+
+    #[test]
+    fn dense_woodbury_tracks_logra_at_full_rank() {
+        // with r ~= min(N, D) the Woodbury route must equal the dense
+        // Cholesky route (the algebraic identity behind §3.2)
+        let fx = make_fixture(20, 2, &[(4, 4)], 1, StoreKind::Dense, "abl_full_rank");
+        let reader = StoreReader::open(&fx.base).unwrap();
+        let tsvd = TruncatedCurvature::build(&reader, 15, 5, 4, 0.1, 0).unwrap();
+        let lambda_t = tsvd.lambdas[0];
+        let mut a = DenseWoodburyScorer::new(StoreReader::open(&fx.base).unwrap(), tsvd);
+        let ra = a.score(&fx.queries).unwrap();
+
+        // dense reference with the SAME lambda
+        let dense = DenseCurvature::build(&StoreReader::open(&fx.base).unwrap(), 0.1).unwrap();
+        // rebuild with matched lambda: reconstruct Gram from store
+        let chunk = StoreReader::open(&fx.base).unwrap().read_range(0, 20).unwrap();
+        let g = chunk.layers[0].dense().clone();
+        let mut gram = g.matmul_tn(&g);
+        for i in 0..gram.rows {
+            *gram.at_mut(i, i) += lambda_t;
+        }
+        let ch = crate::linalg::Chol::factor(&gram).unwrap();
+        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for q in 0..2 {
+            let kq = ch.solve(fx.queries.layers[0].g.row(q));
+            for t in 0..20 {
+                let want: f32 = g.row(t).iter().zip(&kq).map(|(a, b)| a * b).sum();
+                let got = ra.scores.at(q, t);
+                assert!(
+                    (got - want).abs() < 0.03 * scale + 1e-4,
+                    "q{q} t{t}: {got} vs {want}"
+                );
+            }
+        }
+        let _ = dense; // silence: dense built only to assert it CAN build
+    }
+
+    #[test]
+    fn factored_dense_k_matches_direct_formula() {
+        // internal consistency: the scorer must equal the direct formula
+        // reconstruct(u_t v_t^T) . K^{-1} g_q computed from the SAME
+        // stored (bf16) factors.  Cross-method agreement (vs LoGRA) is
+        // data-dependent — the damped-GN inverse amplifies whatever the
+        // factorization drops — and is *measured* by the Table 8 bench,
+        // not asserted here.
+        let fx = make_fixture(25, 2, &[(5, 6)], 2, StoreKind::Factored, "abl_fdk");
+        let curv = DenseCurvature::build(&StoreReader::open(&fx.base).unwrap(), 0.1).unwrap();
+        let lambda = curv.lambdas[0];
+        let mut fdk = FactoredDenseKScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        fdk.chunk_size = 7;
+        let ra = fdk.score(&fx.queries).unwrap();
+
+        // direct reference from the stored factors
+        let reader = StoreReader::open(&fx.base).unwrap();
+        let chunk = reader.read_range(0, 25).unwrap();
+        let (u, v) = chunk.layers[0].factors();
+        let mut g = Mat::zeros(25, 30);
+        for t in 0..25 {
+            reconstruct_row(u.row(t), v.row(t), 5, 6, 2, g.row_mut(t));
+        }
+        let mut gram = g.matmul_tn(&g);
+        // NB: the scorer's K came from the same factored store, so the
+        // Gram matches; rebuild with the scorer's lambda
+        for i in 0..30 {
+            *gram.at_mut(i, i) += lambda;
+        }
+        let ch = crate::linalg::Chol::factor(&gram).unwrap();
+        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for q in 0..2 {
+            let kq = ch.solve(fx.queries.layers[0].g.row(q));
+            for t in 0..25 {
+                let want: f32 = g.row(t).iter().zip(&kq).map(|(a, b)| a * b).sum();
+                let got = ra.scores.at(q, t);
+                assert!((got - want).abs() < 0.01 * scale + 1e-4, "{got} vs {want}");
+            }
+        }
+        let _ = LograScorer::new; // keep the import meaningful
+    }
+}

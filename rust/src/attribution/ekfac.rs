@@ -1,0 +1,133 @@
+//! EK-FAC scorer (Grosse et al. 2023) — parameter-space influence with
+//! per-query training-gradient *recomputation* (no stored index).
+//!
+//! This is the Table 1 contextual baseline: highest LDS, tiny persistent
+//! storage (only the covariance eigenbases), but orders of magnitude
+//! slower at query time because every query batch re-runs gradient
+//! extraction (f = 1, unprojected) over the training corpus.
+
+use super::{QueryGrads, ScoreReport, Scorer};
+use crate::corpus::Dataset;
+use crate::curvature::Ekfac;
+use crate::linalg::Mat;
+use crate::runtime::{GradExtractor, Runtime};
+use crate::util::timer::PhaseTimer;
+
+pub struct EkfacScorer<'a> {
+    pub rt: &'a Runtime,
+    pub extractor: &'a GradExtractor,
+    pub params: &'a xla::Literal,
+    pub train: &'a Dataset,
+    pub ekfac: Ekfac,
+    /// (I, O) dims per layer (f = 1)
+    pub layer_dims: Vec<(usize, usize)>,
+}
+
+impl<'a> EkfacScorer<'a> {
+    /// Eigenvalue-correction pass (the "EK" in EK-FAC): average the
+    /// squared rotated gradients over up to `max_examples` training
+    /// examples, then install them as corrected eigenvalues.
+    pub fn fit_corrections(
+        &mut self,
+        max_examples: usize,
+        lambda_factor: f32,
+    ) -> anyhow::Result<()> {
+        let n = self.train.len().min(max_examples);
+        let mut acc: Vec<Mat> = self
+            .layer_dims
+            .iter()
+            .map(|&(i, o)| Mat::zeros(i, o))
+            .collect();
+        let mut i = 0;
+        while i < n {
+            let take = self.extractor.batch.min(n - i);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let batch = self.extractor.run(self.rt, self.params, self.train, &idx)?;
+            for (l, lg) in batch.layers.iter().enumerate() {
+                let (di, doo) = self.layer_dims[l];
+                for ex in 0..take {
+                    let g = Mat::from_vec(di, doo, lg.g.row(ex).to_vec());
+                    let rot = self.ekfac.rotate(l, &g);
+                    for (a, r) in acc[l].data.iter_mut().zip(&rot.data) {
+                        *a += r * r;
+                    }
+                }
+            }
+            i += take;
+        }
+        for (l, mut m) in acc.into_iter().enumerate() {
+            m.scale(1.0 / n as f32);
+            self.ekfac.set_corrections(l, m, lambda_factor);
+        }
+        Ok(())
+    }
+}
+
+impl Scorer for EkfacScorer<'_> {
+    fn name(&self) -> &'static str {
+        "ekfac"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        // persistent artifacts: eigenbases + corrected eigenvalues
+        self.ekfac
+            .layers
+            .iter()
+            .map(|l| {
+                4 * (l.q_a.data.len() + l.q_s.data.len() + l.lambda_corr.data.len()) as u64
+            })
+            .sum()
+    }
+
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        let nq = queries.n_query;
+        let n = self.train.len();
+        let mut timer = PhaseTimer::new();
+
+        // precondition queries (iHVP) once
+        let pre: Vec<Mat> = timer.time("precondition", || {
+            (0..self.layer_dims.len())
+                .map(|l| {
+                    let (di, doo) = self.layer_dims[l];
+                    let mut out = Mat::zeros(nq, di * doo);
+                    for q in 0..nq {
+                        let g = Mat::from_vec(di, doo, queries.layers[l].g.row(q).to_vec());
+                        let p = self.ekfac.precondition(l, &g);
+                        out.row_mut(q).copy_from_slice(&p.data);
+                    }
+                    out
+                })
+                .collect()
+        });
+
+        // recompute training gradients batch-by-batch (the expensive part)
+        let mut scores = Mat::zeros(nq, n);
+        let mut i = 0;
+        while i < n {
+            let take = self.extractor.batch.min(n - i);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let batch = timer.time("recompute", || {
+                self.extractor.run(self.rt, self.params, self.train, &idx)
+            })?;
+            timer.time("compute", || {
+                for (l, lg) in batch.layers.iter().enumerate() {
+                    // scores[q, i+ex] += <pre_q, g_ex>
+                    for ex in 0..take {
+                        let gt = lg.g.row(ex);
+                        for q in 0..nq {
+                            let s: f32 = pre[l]
+                                .row(q)
+                                .iter()
+                                .zip(gt)
+                                .map(|(a, b)| a * b)
+                                .sum();
+                            *scores.at_mut(q, i + ex) += s;
+                        }
+                    }
+                }
+            });
+            i += take;
+        }
+        Ok(ScoreReport { scores, timer, bytes_read: 0 })
+    }
+}

@@ -1,0 +1,93 @@
+//! GradDot baseline (Charpiat et al. 2019 / TracIn-style): plain dot
+//! products of projected gradients — the identity-curvature limit of
+//! Eq. (3), equivalently LoRIF with r = 0 (Fig 2b's leftmost point).
+
+use super::{QueryGrads, ScoreReport, Scorer};
+use crate::linalg::Mat;
+use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::util::timer::PhaseTimer;
+
+pub struct GradDotScorer {
+    pub reader: StoreReader,
+    pub prefetch: bool,
+    pub chunk_size: usize,
+}
+
+impl GradDotScorer {
+    pub fn new(reader: StoreReader) -> GradDotScorer {
+        GradDotScorer { reader, prefetch: true, chunk_size: 512 }
+    }
+}
+
+impl Scorer for GradDotScorer {
+    fn name(&self) -> &'static str {
+        "graddot"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        self.reader.meta.total_bytes()
+    }
+
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        anyhow::ensure!(
+            self.reader.meta.kind == StoreKind::Dense,
+            "GradDot scorer needs a dense store"
+        );
+        let n = self.reader.meta.n_examples;
+        let nq = queries.n_query;
+        let mut timer = PhaseTimer::new();
+        let mut scores = Mat::zeros(nq, n);
+        let mut compute = std::time::Duration::ZERO;
+        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
+            let t0 = std::time::Instant::now();
+            for (l, layer) in chunk.layers.iter().enumerate() {
+                let g = match layer {
+                    ChunkLayer::Dense { g } => g,
+                    _ => anyhow::bail!("expected dense chunk"),
+                };
+                let part = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
+                for nn in 0..chunk.count {
+                    let row = part.row(nn);
+                    for q in 0..nq {
+                        *scores.at_mut(q, chunk.start + nn) += row[q];
+                    }
+                }
+            }
+            compute += t0.elapsed();
+            Ok(())
+        })?;
+        timer.add("load", io_time);
+        timer.add("compute", compute);
+        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::testutil::make_fixture;
+
+    #[test]
+    fn matches_plain_dot() {
+        let fx = make_fixture(15, 2, &[(4, 4), (3, 5)], 1, StoreKind::Dense, "graddot");
+        let mut scorer = GradDotScorer::new(StoreReader::open(&fx.base).unwrap());
+        scorer.chunk_size = 4;
+        let report = scorer.score(&fx.queries).unwrap();
+        let scale = report.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for q in 0..2 {
+            for t in 0..15 {
+                let mut want = 0.0f32;
+                for l in 0..2 {
+                    want += fx.train_g[l]
+                        .row(t)
+                        .iter()
+                        .zip(fx.queries.layers[l].g.row(q))
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>();
+                }
+                let got = report.scores.at(q, t);
+                assert!((got - want).abs() < 0.05 * scale + 1e-4, "{got} vs {want}");
+            }
+        }
+    }
+}

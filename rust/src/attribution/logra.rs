@@ -1,0 +1,126 @@
+//! LoGRA scorer (Choe et al. 2024) — the primary baseline.
+//!
+//! Stores *dense* projected gradients and scores with the dense damped
+//! Gauss–Newton inverse (paper Eq. 3): queries are preconditioned once
+//! per layer by solving `K x = g_q` (Cholesky), then every training
+//! example contributes a D-dim dot product — the O(D)-per-pair I/O and
+//! compute profile that Fig 3 shows is I/O-bound.
+
+use super::{QueryGrads, ScoreReport, Scorer};
+use crate::curvature::DenseCurvature;
+use crate::linalg::Mat;
+use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::util::timer::PhaseTimer;
+
+pub struct LograScorer {
+    pub reader: StoreReader,
+    pub curv: DenseCurvature,
+    pub prefetch: bool,
+    pub chunk_size: usize,
+}
+
+impl LograScorer {
+    pub fn new(reader: StoreReader, curv: DenseCurvature) -> LograScorer {
+        LograScorer { reader, curv, prefetch: true, chunk_size: 512 }
+    }
+}
+
+impl Scorer for LograScorer {
+    fn name(&self) -> &'static str {
+        "logra"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        self.reader.meta.total_bytes()
+    }
+
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        anyhow::ensure!(
+            self.reader.meta.kind == StoreKind::Dense,
+            "LoGRA scorer needs a dense store"
+        );
+        let n = self.reader.meta.n_examples;
+        let nq = queries.n_query;
+        let n_layers = queries.n_layers();
+        let mut timer = PhaseTimer::new();
+
+        // precondition queries per layer: rows = K^{-1} g_q
+        let pre: Vec<Mat> = timer.time("precondition", || {
+            (0..n_layers)
+                .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
+                .collect()
+        });
+
+        let mut scores = Mat::zeros(nq, n);
+        let mut compute = std::time::Duration::ZERO;
+        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
+            let t0 = std::time::Instant::now();
+            for l in 0..n_layers {
+                let g = match &chunk.layers[l] {
+                    ChunkLayer::Dense { g } => g,
+                    _ => anyhow::bail!("expected dense chunk"),
+                };
+                let part = g.matmul_nt(&pre[l]); // (B, Nq)
+                for nn in 0..chunk.count {
+                    let row = part.row(nn);
+                    let global = chunk.start + nn;
+                    for q in 0..nq {
+                        *scores.at_mut(q, global) += row[q];
+                    }
+                }
+            }
+            compute += t0.elapsed();
+            Ok(())
+        })?;
+        timer.add("load", io_time);
+        timer.add("compute", compute);
+        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::testutil::make_fixture;
+
+    #[test]
+    fn matches_direct_formula() {
+        let fx = make_fixture(25, 2, &[(4, 5)], 1, StoreKind::Dense, "logra_direct");
+        let reader = StoreReader::open(&fx.base).unwrap();
+        let curv = DenseCurvature::build(&reader, 0.1).unwrap();
+        let lambda = curv.lambdas[0];
+        let mut scorer = LograScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        scorer.chunk_size = 7;
+        let report = scorer.score(&fx.queries).unwrap();
+
+        // direct: g_q^T (G^T G + lam I)^{-1} g_t using the *stored*
+        // (bf16-quantized) gradients so the reference sees the same data
+        let stored = scorer.reader.read_range(0, 25).unwrap();
+        let g = stored.layers[0].dense().clone();
+        let mut gram = g.matmul_tn(&g);
+        for i in 0..gram.rows {
+            *gram.at_mut(i, i) += lambda;
+        }
+        let ch = crate::linalg::Chol::factor(&gram).unwrap();
+        let scale = report.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for q in 0..2 {
+            let kq = ch.solve(fx.queries.layers[0].g.row(q));
+            for t in 0..25 {
+                let want: f32 = g.row(t).iter().zip(&kq).map(|(a, b)| a * b).sum();
+                let got = report.scores.at(q, t);
+                assert!((got - want).abs() < 0.01 * scale + 1e-4, "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_factored_store() {
+        let fx = make_fixture(10, 1, &[(4, 4)], 1, StoreKind::Factored, "logra_reject");
+        let reader = StoreReader::open(&fx.base).unwrap();
+        // dense curvature can build from factored (reconstructs), but the
+        // scorer itself requires dense records
+        let curv = DenseCurvature::build(&reader, 0.1).unwrap();
+        let mut scorer = LograScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        assert!(scorer.score(&fx.queries).is_err());
+    }
+}

@@ -1,0 +1,323 @@
+//! LoRIF scorer — the paper's method (Eq. 9) on the streaming hot path.
+//!
+//! Per layer, per store chunk:
+//!   1. factor dots: S1[n, q] = <u_q v_q^T, u_n v_n^T>_F computed from
+//!      the (c x c) inner-product blocks — O(c^2 (d1+d2)) per pair;
+//!   2. Woodbury correction: project train gradients into the r-dim
+//!      subspace (faithful mode reconstructs + GEMMs with V_r at query
+//!      time, exactly like the paper; cached mode reuses the stage-2
+//!      train projections) and subtract `sum_i w_i g'_q,i g'_n,i`;
+//!   3. scores[q, n] += S1/lambda_l - corr.
+//!
+//! All heavy steps are GEMMs on the chunk — the compute half of Fig 3.
+
+use super::{QueryGrads, ScoreReport, Scorer};
+use crate::curvature::{reconstruct_row, TruncatedCurvature};
+use crate::linalg::Mat;
+use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::util::timer::PhaseTimer;
+
+pub struct LorifScorer {
+    pub reader: StoreReader,
+    pub curv: TruncatedCurvature,
+    /// use stage-2 train projections instead of query-time projection
+    /// (extension; the paper recomputes at query time)
+    pub cached_projections: bool,
+    pub prefetch: bool,
+    pub chunk_size: usize,
+}
+
+impl LorifScorer {
+    pub fn new(reader: StoreReader, curv: TruncatedCurvature) -> LorifScorer {
+        LorifScorer {
+            reader,
+            curv,
+            cached_projections: false,
+            prefetch: true,
+            chunk_size: 512,
+        }
+    }
+}
+
+/// Batched factor dot: S1[n, q] = sum_{k,l} (u_q^T u_n)[k,l] (v_q^T v_n)[k,l].
+///
+/// u_chunk (B, d1*c) row-major-(d1, c) per row; uq (Nq, d1*c) likewise.
+/// Implemented as two GEMMs over "factor-column expanded" matrices:
+/// rows (n, l) x cols (q, k), then a (c x c)-block reduction.
+pub fn factor_dots(
+    u_chunk: &Mat,
+    v_chunk: &Mat,
+    uq: &Mat,
+    vq: &Mat,
+    d1: usize,
+    d2: usize,
+    c: usize,
+) -> Mat {
+    let b = u_chunk.rows;
+    let nq = uq.rows;
+    if c == 1 {
+        // fast path: S1 = (U u_q^T) .* (V v_q^T), two plain GEMMs
+        let a = u_chunk.matmul_nt(uq); // (B, Nq)
+        let bb = v_chunk.matmul_nt(vq); // (B, Nq)
+        let mut s = a;
+        for (x, y) in s.data.iter_mut().zip(&bb.data) {
+            *x *= y;
+        }
+        return s;
+    }
+    // general c: expand rows to (B*c) x d1 with row (n, l) = u_n[:, l]
+    let expand = |m: &Mat, d: usize| -> Mat {
+        let mut out = Mat::zeros(m.rows * c, d);
+        for n in 0..m.rows {
+            let row = m.row(n); // (d, c) row-major
+            for l in 0..c {
+                let dst = out.row_mut(n * c + l);
+                for a in 0..d {
+                    dst[a] = row[a * c + l];
+                }
+            }
+        }
+        out
+    };
+    let u2 = expand(u_chunk, d1); // (B*c, d1)
+    let uq2 = expand(uq, d1); // (Nq*c, d1)
+    let v2 = expand(v_chunk, d2);
+    let vq2 = expand(vq, d2);
+    let a2 = u2.matmul_nt(&uq2); // (B*c, Nq*c): [(n,l),(q,k)]
+    let b2 = v2.matmul_nt(&vq2);
+    let mut s = Mat::zeros(b, nq);
+    for n in 0..b {
+        for l in 0..c {
+            let arow = a2.row(n * c + l);
+            let brow = b2.row(n * c + l);
+            for q in 0..nq {
+                let mut acc = 0.0f32;
+                for k in 0..c {
+                    acc += arow[q * c + k] * brow[q * c + k];
+                }
+                *s.at_mut(n, q) += acc;
+            }
+        }
+    }
+    s
+}
+
+impl Scorer for LorifScorer {
+    fn name(&self) -> &'static str {
+        "lorif"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        self.reader.meta.total_bytes()
+    }
+
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        anyhow::ensure!(
+            self.reader.meta.kind == StoreKind::Factored,
+            "LoRIF scorer needs a factored store"
+        );
+        anyhow::ensure!(queries.proj_dims == self.reader.meta.layers, "layer dims mismatch");
+        let c = self.reader.meta.c;
+        anyhow::ensure!(queries.c == c, "factor rank mismatch");
+        let n = self.reader.meta.n_examples;
+        let nq = queries.n_query;
+        let n_layers = queries.n_layers();
+        let mut timer = PhaseTimer::new();
+
+        // precondition queries: g'_q = V_r^T g~_q, folded with Woodbury
+        // weights -> gqw (per layer: (Nq, r)).
+        //
+        // CONSISTENCY NOTE: g~_q is the *factor-reconstructed* query
+        // gradient, not the exact one.  Both terms of Eq. (9) must see
+        // the same query representation: the factor-dot term only
+        // carries the rank-c part of g_q, so projecting the exact g_q
+        // into the curvature subspace over-subtracts the dominant
+        // directions and anti-correlates the scores (see the component
+        // diagnosis in EXPERIMENTS.md §Debugging).
+        let gqw: Vec<Mat> = timer.time("precondition", || {
+            (0..n_layers)
+                .map(|l| {
+                    let (d1, d2) = self.reader.meta.layers[l];
+                    let svd = &self.curv.layers[l];
+                    let ql = &queries.layers[l];
+                    let mut rec = Mat::zeros(nq, d1 * d2);
+                    for q in 0..nq {
+                        reconstruct_row(ql.u.row(q), ql.v.row(q), d1, d2, c, rec.row_mut(q));
+                    }
+                    let mut proj = rec.matmul(&svd.v); // (Nq, r)
+                    let w = &self.curv.weights[l];
+                    for row in 0..proj.rows {
+                        let r = proj.row_mut(row);
+                        for (x, wi) in r.iter_mut().zip(w) {
+                            *x *= wi;
+                        }
+                    }
+                    proj
+                })
+                .collect()
+        });
+
+        let mut scores = Mat::zeros(nq, n);
+        let mut compute = std::time::Duration::ZERO;
+        let mut scratch = Mat::zeros(0, 0);
+        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
+            let t0 = std::time::Instant::now();
+            for l in 0..n_layers {
+                let (d1, d2) = self.reader.meta.layers[l];
+                let (u, v) = match &chunk.layers[l] {
+                    ChunkLayer::Factored { u, v } => (u, v),
+                    _ => anyhow::bail!("expected factored chunk"),
+                };
+                let ql = &queries.layers[l];
+                // term 1: factor dots / lambda
+                let s1 = factor_dots(u, v, &ql.u, &ql.v, d1, d2, c);
+                let inv_lambda = 1.0 / self.curv.lambdas[l];
+                // term 2: Woodbury correction
+                let gt: Mat = if self.cached_projections {
+                    let idx: Vec<usize> = (chunk.start..chunk.start + chunk.count).collect();
+                    self.curv.layers[l].train_proj.select_rows(&idx)
+                } else {
+                    // faithful: reconstruct rows and project at query time
+                    if scratch.rows != chunk.count || scratch.cols != d1 * d2 {
+                        scratch = Mat::zeros(chunk.count, d1 * d2);
+                    }
+                    for ex in 0..chunk.count {
+                        reconstruct_row(u.row(ex), v.row(ex), d1, d2, c, scratch.row_mut(ex));
+                    }
+                    scratch.matmul(&self.curv.layers[l].v) // (B, r)
+                };
+                let corr = gt.matmul_nt(&gqw[l]); // (B, Nq)
+                for nn in 0..chunk.count {
+                    let s1r = s1.row(nn);
+                    let cr = corr.row(nn);
+                    let global = chunk.start + nn;
+                    for q in 0..nq {
+                        *scores.at_mut(q, global) += s1r[q] * inv_lambda - cr[q];
+                    }
+                }
+            }
+            compute += t0.elapsed();
+            Ok(())
+        })?;
+        timer.add("load", io_time);
+        timer.add("compute", compute);
+        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::testutil::make_fixture;
+    use crate::linalg::rsvd::MatSource;
+    use crate::store::StoreKind;
+
+    fn build_scorer(name: &str, r: usize, cached: bool) -> (LorifScorer, crate::attribution::testutil::Fixture) {
+        let fx = make_fixture(40, 3, &[(6, 8), (5, 5)], 2, StoreKind::Factored, name);
+        let reader = StoreReader::open(&fx.base).unwrap();
+        let curv = TruncatedCurvature::build(&reader, r, 8, 3, 0.1, 0).unwrap();
+        let mut s = LorifScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        s.cached_projections = cached;
+        s.chunk_size = 13;
+        (s, fx)
+    }
+
+    /// Dense reference for Eq. (9) with the same truncated curvature.
+    fn dense_reference(
+        fx: &crate::attribution::testutil::Fixture,
+        curv: &TruncatedCurvature,
+        c: usize,
+    ) -> Mat {
+        let nq = fx.queries.n_query;
+        let n = fx.train_g[0].rows;
+        let mut scores = Mat::zeros(nq, n);
+        for l in 0..fx.layer_dims.len() {
+            let (d1, d2) = fx.layer_dims[l];
+            let lambda = curv.lambdas[l];
+            let w = &curv.weights[l];
+            for q in 0..nq {
+                // reconstruct query from ITS factors (the scorer never
+                // sees the exact query gradient on the factor-dot path)
+                let uq = fx.queries.layers[l].u.row(q);
+                let vq = fx.queries.layers[l].v.row(q);
+                let mut gq = vec![0.0f32; d1 * d2];
+                reconstruct_row(uq, vq, d1, d2, c, &mut gq);
+                let gq_r = curv.layers[l].v.matvec_t(&gq);
+                for t in 0..n {
+                    let ut = |ex: usize| -> Vec<f32> {
+                        let mut g = vec![0.0f32; d1 * d2];
+                        // train side: reconstruct from factors (bf16-free
+                        // here; the store adds bf16 noise)
+                        let gm = Mat::from_vec(d1, d2, fx.train_g[l].row(ex).to_vec());
+                        let (u, v) = crate::grads::factorize::poweriter(&gm, c, 16);
+                        reconstruct_row(&u.data, &v.data, d1, d2, c, &mut g);
+                        g
+                    };
+                    let gt = ut(t);
+                    let dot: f32 = gq.iter().zip(&gt).map(|(a, b)| a * b).sum();
+                    let gt_r = curv.layers[l].v.matvec_t(&gt);
+                    let corr: f32 = (0..w.len()).map(|i| w[i] * gq_r[i] * gt_r[i]).sum();
+                    *scores.at_mut(q, t) += dot / lambda - corr;
+                }
+            }
+        }
+        scores
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        let (mut scorer, fx) = build_scorer("lorif_ref", 12, false);
+        let report = scorer.score(&fx.queries).unwrap();
+        let want = dense_reference(&fx, &scorer.curv, 2);
+        let scale = want.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in report.scores.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 0.05 * scale + 1e-4, "{a} vs {b} (scale {scale})");
+        }
+    }
+
+    #[test]
+    fn cached_projections_close_to_faithful() {
+        let (mut s1, fx) = build_scorer("lorif_cached_a", 12, false);
+        let (mut s2, _) = build_scorer("lorif_cached_a", 12, true);
+        let r1 = s1.score(&fx.queries).unwrap();
+        let r2 = s2.score(&fx.queries).unwrap();
+        let scale = r1.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in r1.scores.data.iter().zip(&r2.scores.data) {
+            // cached projections come from the rSVD of the *bf16* store,
+            // faithful from query-time reconstruction: close but not equal
+            assert!((a - b).abs() < 0.1 * scale + 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn factor_dots_c1_matches_general() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(5);
+        let (b, nq, d1, d2) = (7, 3, 5, 6);
+        let u = Mat::random_normal(b, d1, 1.0, &mut rng);
+        let v = Mat::random_normal(b, d2, 1.0, &mut rng);
+        let uq = Mat::random_normal(nq, d1, 1.0, &mut rng);
+        let vq = Mat::random_normal(nq, d2, 1.0, &mut rng);
+        let fast = factor_dots(&u, &v, &uq, &vq, d1, d2, 1);
+        // brute force
+        for n in 0..b {
+            for q in 0..nq {
+                let du: f32 = u.row(n).iter().zip(uq.row(q)).map(|(a, b)| a * b).sum();
+                let dv: f32 = v.row(n).iter().zip(vq.row(q)).map(|(a, b)| a * b).sum();
+                assert!((fast.at(n, q) - du * dv).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn report_phases_populated() {
+        let (mut scorer, fx) = build_scorer("lorif_phases", 8, false);
+        let report = scorer.score(&fx.queries).unwrap();
+        assert!(report.bytes_read > 0);
+        assert!(report.timer.get("load") > std::time::Duration::ZERO);
+        assert!(report.timer.get("compute") > std::time::Duration::ZERO);
+        let tk = report.topk(5);
+        assert_eq!(tk.len(), 3);
+        assert_eq!(tk[0].len(), 5);
+    }
+}

@@ -1,0 +1,245 @@
+//! Attribution scorers: LoRIF and every baseline the paper compares
+//! against (LoGRA, TrackStar, GradDot, EK-FAC, RepSim).
+//!
+//! A scorer consumes query gradients and produces an (n_query, n_train)
+//! score matrix plus a phase-timed report separating index I/O from
+//! compute — the measurement Figure 3 and the latency columns of
+//! Tables 1–2 are built on.
+
+pub mod ablation;
+pub mod ekfac;
+pub mod graddot;
+pub mod logra;
+pub mod lorif;
+pub mod repsim;
+pub mod trackstar;
+
+use crate::corpus::Dataset;
+use crate::linalg::Mat;
+use crate::runtime::{GradExtractor, Runtime};
+use crate::util::timer::PhaseTimer;
+
+pub use lorif::LorifScorer;
+
+/// Per-layer query gradients (dense + rank-c factors), rows = queries.
+pub struct QueryLayer {
+    /// (Nq, d1*d2) dense projected gradients
+    pub g: Mat,
+    /// (Nq, d1*c) left factors
+    pub u: Mat,
+    /// (Nq, d2*c) right factors
+    pub v: Mat,
+}
+
+pub struct QueryGrads {
+    pub n_query: usize,
+    pub c: usize,
+    pub proj_dims: Vec<(usize, usize)>,
+    pub layers: Vec<QueryLayer>,
+}
+
+impl QueryGrads {
+    /// Extract gradients for every example of `queries` via the AOT graph.
+    pub fn extract(
+        rt: &Runtime,
+        extractor: &GradExtractor,
+        params: &xla::Literal,
+        queries: &Dataset,
+    ) -> anyhow::Result<QueryGrads> {
+        let nq = queries.len();
+        let dims = extractor.proj_dims.clone();
+        let c = extractor.c;
+        let mut layers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::zeros(nq, d1 * d2),
+                u: Mat::zeros(nq, d1 * c),
+                v: Mat::zeros(nq, d2 * c),
+            })
+            .collect();
+        let mut i = 0;
+        while i < nq {
+            let take = extractor.batch.min(nq - i);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let batch = extractor.run(rt, params, queries, &idx)?;
+            for (l, lg) in batch.layers.iter().enumerate() {
+                for k in 0..take {
+                    layers[l].g.row_mut(i + k).copy_from_slice(lg.g.row(k));
+                    layers[l].u.row_mut(i + k).copy_from_slice(lg.u.row(k));
+                    layers[l].v.row_mut(i + k).copy_from_slice(lg.v.row(k));
+                }
+            }
+            i += take;
+        }
+        Ok(QueryGrads { n_query: nq, c, proj_dims: dims, layers })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+/// Result of scoring all training examples for a batch of queries.
+pub struct ScoreReport {
+    /// (n_query, n_train)
+    pub scores: Mat,
+    /// phases: "load" (store I/O + decode), "compute", "precondition"
+    pub timer: PhaseTimer,
+    pub bytes_read: u64,
+}
+
+impl ScoreReport {
+    /// Top-k training indices per query (descending score).
+    pub fn topk(&self, k: usize) -> Vec<Vec<usize>> {
+        (0..self.scores.rows)
+            .map(|q| {
+                let row = self.scores.row(q);
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+                idx.truncate(k);
+                idx
+            })
+            .collect()
+    }
+}
+
+/// Common scorer interface (the L3 query engine is generic over this).
+pub trait Scorer {
+    fn name(&self) -> &'static str;
+    /// Persistent index bytes this scorer reads per full pass.
+    fn index_bytes(&self) -> u64;
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport>;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::runtime::{ExtractBatch, LayerGrads};
+    use crate::store::{StoreKind, StoreMeta, StoreWriter};
+    use crate::util::prng::Rng;
+
+    /// Build an in-temp-dir store with known gradients (rank-`true_rank`
+    /// structure + noise) and matching QueryGrads computed with exact
+    /// rank-c power iteration on the CPU.
+    pub struct Fixture {
+        pub base: std::path::PathBuf,
+        pub layer_dims: Vec<(usize, usize)>,
+        /// exact dense gradients per layer (n_train rows)
+        pub train_g: Vec<Mat>,
+        pub queries: QueryGrads,
+    }
+
+    pub fn make_fixture(
+        n_train: usize,
+        n_query: usize,
+        layer_dims: &[(usize, usize)],
+        c: usize,
+        kind: StoreKind,
+        name: &str,
+    ) -> Fixture {
+        make_fixture_noise(n_train, n_query, layer_dims, c, kind, name, 0.05)
+    }
+
+    pub fn make_fixture_noise(
+        n_train: usize,
+        n_query: usize,
+        layer_dims: &[(usize, usize)],
+        c: usize,
+        kind: StoreKind,
+        name: &str,
+        noise: f32,
+    ) -> Fixture {
+        let dir = std::env::temp_dir().join("lorif_attr_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join(name);
+        let mut rng = Rng::new(42);
+        // low-rank-ish gradients: rank-3 + small noise (realistic for the
+        // factorization paths)
+        let gen = |n: usize, rng: &mut Rng| -> Vec<Mat> {
+            layer_dims
+                .iter()
+                .map(|&(d1, d2)| {
+                    let a = Mat::random_normal(n, 3, 1.0, rng);
+                    let b = Mat::random_normal(3, d1 * d2, 1.0, rng);
+                    let mut g = a.matmul(&b);
+                    if noise > 0.0 {
+                        let e = Mat::random_normal(n, d1 * d2, noise, rng);
+                        for (x, ee) in g.data.iter_mut().zip(&e.data) {
+                            *x += ee;
+                        }
+                    }
+                    g
+                })
+                .collect()
+        };
+        let train_g = gen(n_train, &mut rng);
+        let query_g = gen(n_query, &mut rng);
+
+        // factorize on CPU (same math as the kernel)
+        let fac = |g: &Mat, d1: usize, d2: usize| -> (Mat, Mat) {
+            let mut u = Mat::zeros(g.rows, d1 * c);
+            let mut v = Mat::zeros(g.rows, d2 * c);
+            for ex in 0..g.rows {
+                let gm = Mat::from_vec(d1, d2, g.row(ex).to_vec());
+                let (ue, ve) = crate::grads::factorize::poweriter(&gm, c, 16);
+                u.row_mut(ex).copy_from_slice(&ue.data);
+                v.row_mut(ex).copy_from_slice(&ve.data);
+            }
+            (u, v)
+        };
+
+        // write the store
+        let meta = StoreMeta {
+            kind,
+            tier: "small".into(),
+            f: 4,
+            c,
+            layers: layer_dims.to_vec(),
+            n_examples: 0,
+        };
+        let mut w = StoreWriter::create(&base, meta).unwrap();
+        let layers: Vec<LayerGrads> = layer_dims
+            .iter()
+            .zip(&train_g)
+            .map(|(&(d1, d2), g)| {
+                let (u, v) = fac(g, d1, d2);
+                LayerGrads { g: g.clone(), u, v }
+            })
+            .collect();
+        w.append(&ExtractBatch { losses: vec![0.0; n_train], layers, valid: n_train })
+            .unwrap();
+        w.finalize().unwrap();
+
+        let qlayers: Vec<QueryLayer> = layer_dims
+            .iter()
+            .zip(&query_g)
+            .map(|(&(d1, d2), g)| {
+                let (u, v) = fac(g, d1, d2);
+                QueryLayer { g: g.clone(), u, v }
+            })
+            .collect();
+        Fixture {
+            base,
+            layer_dims: layer_dims.to_vec(),
+            train_g,
+            queries: QueryGrads {
+                n_query,
+                c,
+                proj_dims: layer_dims.to_vec(),
+                layers: qlayers,
+            },
+        }
+    }
+}
+
+impl Scorer for Box<dyn Scorer + '_> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn index_bytes(&self) -> u64 {
+        (**self).index_bytes()
+    }
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        (**self).score(queries)
+    }
+}

@@ -1,0 +1,126 @@
+//! RepSim baseline (Hanawa et al. 2020): cosine similarity of final
+//! hidden states (last token, last layer) — the representation-retrieval
+//! contextual baseline of Tables 1–2 and the App. F.2 comparison.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::{QueryGrads, ScoreReport, Scorer};
+use crate::linalg::Mat;
+use crate::util::timer::PhaseTimer;
+
+/// Embedding store: a plain (N, d) f32 matrix on disk.
+pub struct EmbedStore;
+
+impl EmbedStore {
+    pub fn save(path: &Path, emb: &Mat) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"LORIFEM1")?;
+        f.write_all(&(emb.rows as u64).to_le_bytes())?;
+        f.write_all(&(emb.cols as u64).to_le_bytes())?;
+        let mut buf = Vec::with_capacity(emb.data.len() * 4);
+        for &x in &emb.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Mat> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"LORIFEM1", "bad embed-store magic");
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let rows = u64::from_le_bytes(b8) as usize;
+        f.read_exact(&mut b8)?;
+        let cols = u64::from_le_bytes(b8) as usize;
+        let mut buf = vec![0u8; rows * cols * 4];
+        f.read_exact(&mut buf)?;
+        let data = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+}
+
+pub struct RepSimScorer {
+    path: std::path::PathBuf,
+    /// query embeddings (Nq, d), set before scoring
+    pub query_emb: Mat,
+    bytes: u64,
+}
+
+impl RepSimScorer {
+    pub fn new(path: &Path, query_emb: Mat) -> anyhow::Result<RepSimScorer> {
+        let bytes = std::fs::metadata(path)?.len();
+        Ok(RepSimScorer { path: path.to_path_buf(), query_emb, bytes })
+    }
+}
+
+fn normalize_rows(m: &mut Mat) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let n = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        for x in row.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+impl Scorer for RepSimScorer {
+    fn name(&self) -> &'static str {
+        "repsim"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// `queries` is unused (RepSim is not gradient-based) but kept for the
+    /// uniform engine interface; its n_query must match query_emb.
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        anyhow::ensure!(queries.n_query == self.query_emb.rows, "query count mismatch");
+        let mut timer = PhaseTimer::new();
+        let mut train = timer.time("load", || EmbedStore::load(&self.path))?;
+        let scores = timer.time("compute", || {
+            normalize_rows(&mut train);
+            let mut q = self.query_emb.clone();
+            normalize_rows(&mut q);
+            q.matmul_nt(&train) // (Nq, N) cosine similarities
+        });
+        Ok(ScoreReport { scores, timer, bytes_read: self.bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn store_roundtrip_and_cosine() {
+        let dir = std::env::temp_dir().join("lorif_repsim_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("emb.bin");
+        let mut rng = Rng::new(1);
+        let train = Mat::random_normal(10, 6, 1.0, &mut rng);
+        EmbedStore::save(&path, &train).unwrap();
+        let q = train.select_rows(&[3]); // query identical to train ex 3
+        let mut scorer = RepSimScorer::new(&path, q).unwrap();
+        let queries = QueryGrads {
+            n_query: 1,
+            c: 1,
+            proj_dims: vec![],
+            layers: vec![],
+        };
+        let report = scorer.score(&queries).unwrap();
+        // cosine with itself = 1, and it's the argmax
+        assert!((report.scores.at(0, 3) - 1.0).abs() < 1e-4);
+        let top = report.topk(1);
+        assert_eq!(top[0][0], 3);
+        std::fs::remove_file(path).ok();
+    }
+}

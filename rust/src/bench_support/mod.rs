@@ -1,0 +1,326 @@
+//! Shared harness for the paper-reproduction benches (`benches/`).
+//!
+//! Each bench binary regenerates one table or figure.  They share a work
+//! directory, corpus, base model, and LDS retraining actuals (all keyed
+//! by config and cached on disk), so the expensive steps are paid once
+//! across the whole `cargo bench` run.
+//!
+//! Scale: defaults are sized for the single-core CPU testbed; set
+//! `LORIF_SCALE=full` for larger corpora / more subsets (closer to the
+//! paper's protocol, much slower).
+
+use std::time::Duration;
+
+use crate::app::{self, Method};
+use crate::attribution::{QueryGrads, Scorer};
+use crate::config::Config;
+use crate::corpus::Dataset;
+use crate::eval::{LdsActuals, LdsProtocol, TailPatchProtocol};
+use crate::index::{Pipeline, Stage1Options};
+use crate::query::{LatencyBreakdown, QueryEngine};
+
+pub fn full_scale() -> bool {
+    std::env::var("LORIF_SCALE").as_deref() == Ok("full")
+}
+
+/// Base bench configuration (small tier unless overridden).
+pub fn bench_config() -> Config {
+    let mut cfg = Config::default();
+    if full_scale() {
+        cfg.n_train = 8192;
+        cfg.n_query = 96;
+        cfg.train_steps = 600;
+    } else {
+        cfg.n_train = 1024;
+        cfg.n_query = 32;
+        cfg.train_steps = 250;
+    }
+    cfg.work_dir = "work/bench".into();
+    cfg
+}
+
+pub fn lds_protocol() -> LdsProtocol {
+    let mut p = LdsProtocol::default();
+    if full_scale() {
+        p.n_subsets = 48;
+        p.steps = 300;
+    } else {
+        p.n_subsets = 12;
+        p.steps = 100;
+    }
+    p
+}
+
+pub fn tailpatch_protocol() -> TailPatchProtocol {
+    TailPatchProtocol { k: 8, lr: 1e-2 }
+}
+
+/// One measured configuration: everything the paper tables report.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub method: String,
+    pub f: usize,
+    pub c: usize,
+    pub r: usize,
+    pub lds: Option<(f64, f64)>,
+    pub tail_patch: Option<(f64, f64)>,
+    pub storage_bytes: u64,
+    pub latency: Option<LatencyBreakdownLite>,
+    pub stage1: Duration,
+    pub stage2: Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct LatencyBreakdownLite {
+    pub load_s: f64,
+    pub compute_s: f64,
+    pub pre_s: f64,
+}
+
+impl From<&LatencyBreakdown> for LatencyBreakdownLite {
+    fn from(l: &LatencyBreakdown) -> Self {
+        LatencyBreakdownLite { load_s: l.load_s, compute_s: l.compute_s, pre_s: l.precondition_s }
+    }
+}
+
+impl Measurement {
+    pub fn latency_total(&self) -> f64 {
+        self.latency.as_ref().map(|l| l.load_s + l.compute_s + l.pre_s).unwrap_or(0.0)
+    }
+
+    pub fn storage_mb(&self) -> f64 {
+        self.storage_bytes as f64 / 1e6
+    }
+}
+
+/// Bench session: shared pipeline state across configurations.
+pub struct Session {
+    base_cfg: Config,
+}
+
+impl Session {
+    pub fn new() -> Session {
+        crate::util::logging::init();
+        Session { base_cfg: bench_config() }
+    }
+
+    pub fn with_tier(tier: crate::model::spec::Tier) -> Session {
+        crate::util::logging::init();
+        let mut cfg = bench_config();
+        cfg.tier = tier;
+        // larger tiers: smaller corpus (CPU budget)
+        if tier != crate::model::spec::Tier::Small {
+            cfg.n_train = cfg.n_train / 2;
+        }
+        Session { base_cfg: cfg }
+    }
+
+    pub fn config(&self, f: usize, c: usize, r: usize) -> Config {
+        let mut cfg = self.base_cfg.clone();
+        cfg.f = f;
+        cfg.c = c;
+        cfg.r = r;
+        cfg
+    }
+
+    /// Run one (method, f, c, r) configuration end-to-end and measure.
+    pub fn measure(
+        &self,
+        method: Method,
+        f: usize,
+        c: usize,
+        r: usize,
+        want_lds: bool,
+        want_tailpatch: bool,
+    ) -> anyhow::Result<Measurement> {
+        let cfg = self.config(f, c, r);
+        let p = Pipeline::new(cfg)?;
+        let (train, queries) = p.corpus()?;
+        let params = p.base_params(&train)?;
+        let lit = p.params_literal(&params)?;
+        let s1 = p.stage1(
+            &lit,
+            &train,
+            Stage1Options {
+                write_factored: true,
+                write_dense: method.needs_dense_store()
+                    || matches!(method, Method::RepSim | Method::Ekfac),
+                write_embeddings: true,
+            },
+        )?;
+
+        let mut stage2 = Duration::ZERO;
+        let qg = p.query_grads(&lit, &queries)?;
+        let (scores, latency, storage) = match method {
+            Method::RepSim => {
+                let scorer = app::build_repsim_scorer(&p, &lit, &queries)?;
+                let bytes = scorer.index_bytes();
+                let res = QueryEngine::new(scorer, 10).run(&qg)?;
+                (res.scores, res.latency, bytes)
+            }
+            Method::Ekfac => {
+                let extractor =
+                    crate::runtime::GradExtractor::new(&p.rt, p.cfg.tier, 1, 1)?;
+                let qg1 = QueryGrads::extract(&p.rt, &extractor, &lit, &queries)?;
+                let t0 = std::time::Instant::now();
+                let scorer = app::build_ekfac_scorer(&p, &extractor, &lit, &train, 256)?;
+                stage2 = t0.elapsed();
+                let bytes = scorer.index_bytes();
+                let res = QueryEngine::new(scorer, 10).run(&qg1)?;
+                (res.scores, res.latency, bytes)
+            }
+            _ => {
+                let t0 = std::time::Instant::now();
+                let scorer = app::build_store_scorer(&p, method)?;
+                stage2 = t0.elapsed();
+                let bytes = scorer.index_bytes();
+                let res = QueryEngine::new(scorer, 10).run(&qg)?;
+                (res.scores, res.latency, bytes)
+            }
+        };
+
+        let lds = if want_lds {
+            let actuals = LdsActuals::get(&p, &lds_protocol(), &train, &queries)?;
+            Some(actuals.lds(&scores))
+        } else {
+            None
+        };
+        let tail_patch = if want_tailpatch {
+            let proto = tailpatch_protocol();
+            let topk = {
+                let rep = crate::attribution::ScoreReport {
+                    scores: scores.clone(),
+                    timer: Default::default(),
+                    bytes_read: 0,
+                };
+                rep.topk(proto.k)
+            };
+            let tp = crate::eval::tail_patch(&p, &params, &train, &queries, &topk, proto)?;
+            Some(crate::eval::tail_patch_mean(&tp))
+        } else {
+            None
+        };
+
+        Ok(Measurement {
+            method: method.name().to_string(),
+            f,
+            c,
+            r,
+            lds,
+            tail_patch,
+            storage_bytes: storage,
+            latency: Some(LatencyBreakdownLite::from(&latency)),
+            stage1: s1.wall,
+            stage2,
+        })
+    }
+
+    /// Access to the underlying pieces for custom benches.
+    pub fn pipeline(&self, f: usize, c: usize, r: usize) -> anyhow::Result<Pipeline> {
+        Pipeline::new(self.config(f, c, r))
+    }
+
+    pub fn prepared(
+        &self,
+        f: usize,
+        c: usize,
+        r: usize,
+    ) -> anyhow::Result<(Pipeline, Dataset, Dataset, Vec<f32>)> {
+        let p = self.pipeline(f, c, r)?;
+        let (train, queries) = p.corpus()?;
+        let params = p.base_params(&train)?;
+        Ok((p, train, queries, params))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// table printer
+// ---------------------------------------------------------------------------
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> =
+                cells.iter().enumerate().map(|(i, c)| format!("{:>w$}", c, w = widths[i])).collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also persist as JSON under work/bench/results/.
+    pub fn save(&self, name: &str) -> anyhow::Result<()> {
+        let dir = std::path::PathBuf::from("work/bench/results");
+        std::fs::create_dir_all(&dir)?;
+        let rows: Vec<crate::util::json::Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                crate::util::json::Value::Obj(
+                    self.headers
+                        .iter()
+                        .zip(r)
+                        .map(|(h, c)| (h.clone(), crate::util::json::Value::Str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        let doc = crate::util::json::obj([
+            ("title", self.title.as_str().into()),
+            ("rows", crate::util::json::Value::Arr(rows)),
+        ]);
+        std::fs::write(dir.join(format!("{name}.json")), doc.to_string())?;
+        Ok(())
+    }
+}
+
+pub fn fmt_pm(v: Option<(f64, f64)>) -> String {
+    match v {
+        Some((m, ci)) => format!("{m:.4} ± {ci:.4}"),
+        None => "—".into(),
+    }
+}
+
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.1} MB", bytes as f64 / 1e6)
+}
+
+pub fn fmt_s(secs: f64) -> String {
+    if secs < 0.1 {
+        format!("{:.1} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}

@@ -1,0 +1,157 @@
+//! Hand-rolled CLI argument parsing (the offline vendor set has no clap).
+//!
+//! Grammar: `lorif <subcommand> [--flag value | --switch] [positional...]`.
+//! Flags may also be written `--flag=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// Flags that take no value.
+const SWITCHES: &[&str] = &["help", "verbose", "cached-projections", "no-prefetch", "full"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(sub) = it.peek() {
+            if !sub.starts_with("--") {
+                a.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&stripped) {
+                    a.switches.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("flag --{stripped} needs a value"))?;
+                    a.flags.insert(stripped.to_string(), v.clone());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f32(&self, key: &str) -> anyhow::Result<Option<f32>> {
+        self.get(key)
+            .map(|v| v.parse::<f32>().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> anyhow::Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    /// Apply the standard config-affecting flags onto a Config.
+    pub fn apply_to_config(&self, cfg: &mut crate::config::Config) -> anyhow::Result<()> {
+        if let Some(path) = self.get("config") {
+            *cfg = crate::config::Config::from_file(std::path::Path::new(path))?;
+        }
+        if let Some(t) = self.get("tier") {
+            cfg.tier = crate::model::spec::Tier::parse(t)?;
+        }
+        macro_rules! take {
+            ($field:ident, $key:literal, $getter:ident) => {
+                if let Some(v) = self.$getter($key)? {
+                    cfg.$field = v;
+                }
+            };
+        }
+        take!(f, "f", get_usize);
+        take!(c, "c", get_usize);
+        take!(r, "r", get_usize);
+        take!(n_train, "n-train", get_usize);
+        take!(n_query, "n-query", get_usize);
+        take!(n_topics, "n-topics", get_usize);
+        take!(seed, "seed", get_u64);
+        take!(train_steps, "train-steps", get_usize);
+        take!(train_lr, "train-lr", get_f32);
+        take!(lambda_factor, "lambda-factor", get_f32);
+        take!(rsvd_power_iters, "rsvd-power-iters", get_usize);
+        if let Some(d) = self.get("artifacts-dir") {
+            cfg.artifacts_dir = d.into();
+        }
+        if let Some(d) = self.get("work-dir") {
+            cfg.work_dir = d.into();
+        }
+        cfg.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = parse(&["query", "--f", "8", "--tier=medium", "--verbose", "q.bin"]);
+        assert_eq!(a.subcommand, "query");
+        assert_eq!(a.get("f"), Some("8"));
+        assert_eq!(a.get("tier"), Some("medium"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["q.bin"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--r", "256", "--train-lr", "0.003"]);
+        assert_eq!(a.get_usize("r").unwrap(), Some(256));
+        assert!((a.get_f32("train-lr").unwrap().unwrap() - 0.003).abs() < 1e-9);
+        assert_eq!(a.get_usize("missing").unwrap(), None);
+        assert!(parse(&["x", "--r", "abc"]).get_usize("r").is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let argv: Vec<String> = vec!["x".into(), "--f".into()];
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn applies_to_config() {
+        let a = parse(&["x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512"]);
+        let mut cfg = crate::config::Config::default();
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.f, 8);
+        assert_eq!(cfg.c, 2);
+        assert_eq!(cfg.n_train, 512);
+        assert_eq!(cfg.tier, crate::model::spec::Tier::Medium);
+    }
+}

@@ -1,0 +1,207 @@
+//! Experiment configuration: one struct that every pipeline stage reads.
+//!
+//! Defaults are 1-core-CPU-sized; a JSON config file and/or CLI flags
+//! override them.  `lambda_factor` is the paper's damping rule
+//! (lambda = 0.1 * mean eigenvalue, App. B.2); `rsvd_power_iters = 3`
+//! and `rsvd_oversample = 10` also follow App. B.2.
+
+use std::path::{Path, PathBuf};
+
+use crate::model::spec::Tier;
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub tier: Tier,
+    /// projection factor: d1 = I/f, d2 = O/f (f = 1 means no projection)
+    pub f: usize,
+    /// rank of the per-example gradient factorization (LoRIF §3.1)
+    pub c: usize,
+    /// truncation rank of the curvature SVD (LoRIF §3.2)
+    pub r: usize,
+    /// damping = lambda_factor * mean(retained eigenvalues)
+    pub lambda_factor: f32,
+    pub rsvd_power_iters: usize,
+    pub rsvd_oversample: usize,
+
+    pub n_train: usize,
+    pub n_query: usize,
+    pub n_topics: usize,
+    pub seed: u64,
+
+    /// training steps & lr for the base model
+    pub train_steps: usize,
+    pub train_lr: f32,
+
+    pub artifacts_dir: PathBuf,
+    pub work_dir: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            tier: Tier::Small,
+            f: 4,
+            c: 1,
+            r: 128,
+            lambda_factor: 0.1,
+            rsvd_power_iters: 3,
+            rsvd_oversample: 10,
+            n_train: 2048,
+            n_query: 64,
+            n_topics: 8,
+            seed: 17,
+            train_steps: 300,
+            train_lr: 3e-3,
+            artifacts_dir: PathBuf::from("artifacts"),
+            work_dir: PathBuf::from("work"),
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file; missing fields keep defaults.
+    pub fn from_file(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Config::default();
+        cfg.apply_json(&v)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, v: &Value) -> anyhow::Result<()> {
+        if let Some(t) = v.get("tier").and_then(Value::as_str) {
+            self.tier = Tier::parse(t)?;
+        }
+        macro_rules! num {
+            ($field:ident, $key:literal, $ty:ty) => {
+                if let Some(n) = v.get($key).and_then(Value::as_f64) {
+                    self.$field = n as $ty;
+                }
+            };
+        }
+        num!(f, "f", usize);
+        num!(c, "c", usize);
+        num!(r, "r", usize);
+        num!(lambda_factor, "lambda_factor", f32);
+        num!(rsvd_power_iters, "rsvd_power_iters", usize);
+        num!(rsvd_oversample, "rsvd_oversample", usize);
+        num!(n_train, "n_train", usize);
+        num!(n_query, "n_query", usize);
+        num!(n_topics, "n_topics", usize);
+        num!(seed, "seed", u64);
+        num!(train_steps, "train_steps", usize);
+        num!(train_lr, "train_lr", f32);
+        if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
+            self.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = v.get("work_dir").and_then(Value::as_str) {
+            self.work_dir = PathBuf::from(s);
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let spec = self.tier.spec();
+        for l in spec.tracked_layers() {
+            anyhow::ensure!(
+                l.in_dim % self.f == 0 && l.out_dim % self.f == 0,
+                "f={} does not divide layer ({}, {})",
+                self.f,
+                l.in_dim,
+                l.out_dim
+            );
+        }
+        let min_side = spec
+            .proj_dims(self.f)
+            .iter()
+            .map(|&(a, b)| a.min(b))
+            .min()
+            .unwrap();
+        anyhow::ensure!(
+            self.c >= 1 && self.c <= min_side,
+            "c={} out of range [1, {min_side}] at f={}",
+            self.c,
+            self.f
+        );
+        anyhow::ensure!(self.r >= 1, "r must be >= 1");
+        anyhow::ensure!(self.n_train >= 8 && self.n_query >= 1, "dataset too small");
+        Ok(())
+    }
+
+    /// Subdirectory for this configuration's index.
+    pub fn index_dir(&self) -> PathBuf {
+        self.work_dir.join(format!(
+            "index_{}_f{}_c{}",
+            self.tier.name(),
+            self.f,
+            self.c
+        ))
+    }
+
+    pub fn to_json(&self) -> Value {
+        crate::util::json::obj([
+            ("tier", self.tier.name().into()),
+            ("f", self.f.into()),
+            ("c", self.c.into()),
+            ("r", self.r.into()),
+            ("lambda_factor", (self.lambda_factor as f64).into()),
+            ("rsvd_power_iters", self.rsvd_power_iters.into()),
+            ("rsvd_oversample", self.rsvd_oversample.into()),
+            ("n_train", self.n_train.into()),
+            ("n_query", self.n_query.into()),
+            ("n_topics", self.n_topics.into()),
+            ("seed", (self.seed as usize).into()),
+            ("train_steps", self.train_steps.into()),
+            ("train_lr", (self.train_lr as f64).into()),
+            ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
+            ("work_dir", self.work_dir.display().to_string().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = Config::default();
+        cfg.f = 8;
+        cfg.r = 64;
+        cfg.tier = Tier::Medium;
+        let v = cfg.to_json();
+        let mut back = Config::default();
+        back.apply_json(&v).unwrap();
+        assert_eq!(back.f, 8);
+        assert_eq!(back.r, 64);
+        assert_eq!(back.tier, Tier::Medium);
+    }
+
+    #[test]
+    fn rejects_bad_f() {
+        let mut cfg = Config::default();
+        cfg.f = 7; // does not divide 64
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_c() {
+        let mut cfg = Config::default();
+        cfg.f = 16;
+        cfg.c = 100;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn index_dir_encodes_config() {
+        let cfg = Config::default();
+        let d = cfg.index_dir();
+        assert!(d.display().to_string().contains("index_small_f4_c1"));
+    }
+}

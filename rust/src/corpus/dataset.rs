@@ -1,0 +1,203 @@
+//! Token datasets: generation, binary save/load, splits.
+//!
+//! A dataset is (N, T) token ids plus per-example latent metadata (topic
+//! id, inserted template ids).  The metadata is *never* visible to the
+//! model — it exists so LDS/tail-patch/judge evaluations have ground
+//! truth (DESIGN.md §1).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::topics::TopicModel;
+use crate::util::prng::Rng;
+
+const MAGIC: &[u8; 8] = b"LORIFDS1";
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub seq_len: usize,
+    /// (N * seq_len) row-major token ids
+    pub tokens: Vec<i32>,
+    /// latent topic per example
+    pub topics: Vec<u16>,
+    /// template ids inserted per example (topic-local ids)
+    pub templates: Vec<Vec<u16>>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.topics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn example(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// Generate `n` examples with topics drawn round-robin + jitter so
+    /// every topic is well represented.
+    pub fn generate(tm: &TopicModel, n: usize, seq_len: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::labeled(seed, "dataset");
+        let k = tm.n_topics();
+        let mut tokens = Vec::with_capacity(n * seq_len);
+        let mut topics = Vec::with_capacity(n);
+        let mut templates = Vec::with_capacity(n);
+        for i in 0..n {
+            let topic = if rng.uniform() < 0.15 { rng.below(k) } else { i % k };
+            let (toks, tpls) = tm.generate(topic, seq_len, &mut rng);
+            tokens.extend_from_slice(&toks);
+            topics.push(topic as u16);
+            templates.push(tpls.into_iter().map(|t| t as u16).collect());
+        }
+        Dataset { seq_len, tokens, topics, templates }
+    }
+
+    /// Gather a token batch (B, T) for examples `idx`, padding by
+    /// repeating the last index to fill fixed AOT batch shapes.
+    pub fn batch(&self, idx: &[usize], batch: usize) -> Vec<i32> {
+        assert!(!idx.is_empty() && idx.len() <= batch);
+        let mut out = Vec::with_capacity(batch * self.seq_len);
+        for i in 0..batch {
+            let ex = idx[i.min(idx.len() - 1)];
+            out.extend_from_slice(self.example(ex));
+        }
+        out
+    }
+
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut tokens = Vec::with_capacity(idx.len() * self.seq_len);
+        let mut topics = Vec::with_capacity(idx.len());
+        let mut templates = Vec::with_capacity(idx.len());
+        for &i in idx {
+            tokens.extend_from_slice(self.example(i));
+            topics.push(self.topics[i]);
+            templates.push(self.templates[i].clone());
+        }
+        Dataset { seq_len: self.seq_len, tokens, topics, templates }
+    }
+
+    // -- binary persistence -------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        let n = self.len() as u64;
+        f.write_all(&n.to_le_bytes())?;
+        f.write_all(&(self.seq_len as u64).to_le_bytes())?;
+        for &t in &self.tokens {
+            f.write_all(&t.to_le_bytes())?;
+        }
+        for &t in &self.topics {
+            f.write_all(&t.to_le_bytes())?;
+        }
+        for tpl in &self.templates {
+            f.write_all(&(tpl.len() as u16).to_le_bytes())?;
+            for &t in tpl {
+                f.write_all(&t.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Dataset> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad dataset magic in {}", path.display());
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        f.read_exact(&mut b8)?;
+        let seq_len = u64::from_le_bytes(b8) as usize;
+        let mut tokens = vec![0i32; n * seq_len];
+        let mut b4 = [0u8; 4];
+        for t in tokens.iter_mut() {
+            f.read_exact(&mut b4)?;
+            *t = i32::from_le_bytes(b4);
+        }
+        let mut b2 = [0u8; 2];
+        let mut topics = vec![0u16; n];
+        for t in topics.iter_mut() {
+            f.read_exact(&mut b2)?;
+            *t = u16::from_le_bytes(b2);
+        }
+        let mut templates = Vec::with_capacity(n);
+        for _ in 0..n {
+            f.read_exact(&mut b2)?;
+            let len = u16::from_le_bytes(b2) as usize;
+            let mut tpl = vec![0u16; len];
+            for t in tpl.iter_mut() {
+                f.read_exact(&mut b2)?;
+                *t = u16::from_le_bytes(b2);
+            }
+            templates.push(tpl);
+        }
+        Ok(Dataset { seq_len, tokens, topics, templates })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let tm = TopicModel::new(4, 1);
+        Dataset::generate(&tm, 20, 16, 2)
+    }
+
+    #[test]
+    fn generate_covers_topics() {
+        let ds = tiny();
+        assert_eq!(ds.len(), 20);
+        let mut seen = [false; 4];
+        for &t in &ds.topics {
+            seen[t as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn batch_pads_with_last() {
+        let ds = tiny();
+        let b = ds.batch(&[3, 5], 4);
+        assert_eq!(b.len(), 4 * 16);
+        assert_eq!(&b[16..32], ds.example(5));
+        assert_eq!(&b[48..64], ds.example(5));
+    }
+
+    #[test]
+    fn subset_selects() {
+        let ds = tiny();
+        let s = ds.subset(&[1, 4, 7]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.example(1), ds.example(4));
+        assert_eq!(s.topics[2], ds.topics[7]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = tiny();
+        let dir = std::env::temp_dir().join("lorif_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(ds.tokens, back.tokens);
+        assert_eq!(ds.topics, back.topics);
+        assert_eq!(ds.templates, back.templates);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("lorif_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,8 @@
+//! Synthetic topic-Markov corpus: the WikiText/SFT stand-in with latent
+//! attribution ground truth (topics + templates).
+
+pub mod dataset;
+pub mod topics;
+
+pub use dataset::Dataset;
+pub use topics::{TopicModel, UNSAFE_TOPIC, VOCAB};

@@ -1,0 +1,193 @@
+//! Latent-topic Markov text model — the synthetic stand-in for
+//! WikiText-103 / SFT corpora (DESIGN.md §1 substitutions).
+//!
+//! Each topic owns (a) a preferred token subset with a cyclic bigram
+//! structure and (b) a handful of fixed template phrases.  Sequences mix
+//! topic-bigram steps, template insertions, and uniform noise, so a
+//! language model genuinely learns per-topic structure — which is what
+//! gives attribution a ground truth: training examples of the query's
+//! topic are the true proponents, and the programmatic judge
+//! (`eval::judge`) can grade retrievals on the paper's 1–5 rubric.
+
+use crate::util::prng::Rng;
+
+pub const VOCAB: usize = 64;
+
+#[derive(Clone, Debug)]
+pub struct Topic {
+    pub id: usize,
+    /// preferred token subset (the topic's "vocabulary")
+    pub tokens: Vec<i32>,
+    /// cyclic successor within the preferred subset: bigram backbone
+    pub successor: Vec<i32>, // indexed by vocab token; -1 if not preferred
+    /// fixed template phrases (n-grams) characteristic of the topic
+    pub templates: Vec<Vec<i32>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TopicModel {
+    pub topics: Vec<Topic>,
+    pub seed: u64,
+}
+
+/// Index of the designated "unsafe pattern" topic used by the
+/// safety-auditing example (paper App. F.3 analogue).
+pub const UNSAFE_TOPIC: usize = 0;
+
+impl TopicModel {
+    pub fn new(n_topics: usize, seed: u64) -> Self {
+        assert!(n_topics >= 2 && n_topics <= 16);
+        let mut topics = Vec::with_capacity(n_topics);
+        for t in 0..n_topics {
+            let mut rng = Rng::labeled(seed, &format!("topic-{t}"));
+            // preferred subset: 16 tokens; overlapping subsets across
+            // topics keep the task non-trivial
+            let mut all: Vec<i32> = (0..VOCAB as i32).collect();
+            rng.shuffle(&mut all);
+            let tokens: Vec<i32> = all[..16].to_vec();
+            // cyclic successor over a shuffled order of the subset
+            let mut order = tokens.clone();
+            rng.shuffle(&mut order);
+            let mut successor = vec![-1i32; VOCAB];
+            for i in 0..order.len() {
+                successor[order[i] as usize] = order[(i + 1) % order.len()];
+            }
+            // templates: 4 phrases of 6 tokens from the preferred subset
+            let templates = (0..4)
+                .map(|_| (0..6).map(|_| tokens[rng.below(tokens.len())]).collect())
+                .collect();
+            topics.push(Topic { id: t, tokens, successor, templates });
+        }
+        TopicModel { topics, seed }
+    }
+
+    pub fn n_topics(&self) -> usize {
+        self.topics.len()
+    }
+
+    /// Generate one sequence of `len` tokens from `topic`, returning the
+    /// tokens and the ids of templates that were inserted.
+    pub fn generate(&self, topic: usize, len: usize, rng: &mut Rng) -> (Vec<i32>, Vec<usize>) {
+        let t = &self.topics[topic];
+        let mut out = Vec::with_capacity(len);
+        let mut used_templates = Vec::new();
+        let mut cur = t.tokens[rng.below(t.tokens.len())];
+        out.push(cur);
+        while out.len() < len {
+            let roll = rng.uniform();
+            if roll < 0.12 {
+                // insert a template phrase
+                let ti = rng.below(t.templates.len());
+                used_templates.push(ti);
+                for &tok in &t.templates[ti] {
+                    if out.len() < len {
+                        out.push(tok);
+                    }
+                }
+                cur = *out.last().unwrap();
+            } else if roll < 0.80 {
+                // bigram backbone step
+                let succ = t.successor[cur as usize];
+                cur = if succ >= 0 { succ } else { t.tokens[rng.below(t.tokens.len())] };
+                out.push(cur);
+            } else if roll < 0.92 {
+                // in-topic jump
+                cur = t.tokens[rng.below(t.tokens.len())];
+                out.push(cur);
+            } else {
+                // uniform noise
+                cur = rng.below(VOCAB) as i32;
+                out.push(cur);
+            }
+        }
+        (out, used_templates)
+    }
+
+    /// Fraction of bigrams in `tokens` that follow this topic's backbone —
+    /// used by the programmatic judge to measure topical agreement.
+    pub fn topic_affinity(&self, topic: usize, tokens: &[i32]) -> f64 {
+        let t = &self.topics[topic];
+        if tokens.len() < 2 {
+            return 0.0;
+        }
+        let hits = tokens
+            .windows(2)
+            .filter(|w| t.successor[w[0] as usize] == w[1])
+            .count();
+        hits as f64 / (tokens.len() - 1) as f64
+    }
+
+    /// Most likely topic for a sequence by backbone affinity.
+    pub fn classify(&self, tokens: &[i32]) -> usize {
+        (0..self.n_topics())
+            .max_by(|&a, &b| {
+                self.topic_affinity(a, tokens)
+                    .partial_cmp(&self.topic_affinity(b, tokens))
+                    .unwrap()
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_model() {
+        let a = TopicModel::new(8, 42);
+        let b = TopicModel::new(8, 42);
+        assert_eq!(a.topics[3].tokens, b.topics[3].tokens);
+        assert_eq!(a.topics[5].templates, b.topics[5].templates);
+    }
+
+    #[test]
+    fn generate_respects_length_and_vocab() {
+        let tm = TopicModel::new(4, 1);
+        let mut rng = Rng::new(2);
+        let (toks, _) = tm.generate(1, 64, &mut rng);
+        assert_eq!(toks.len(), 64);
+        assert!(toks.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn affinity_separates_topics() {
+        let tm = TopicModel::new(8, 7);
+        let mut rng = Rng::new(3);
+        for topic in 0..8 {
+            let (toks, _) = tm.generate(topic, 64, &mut rng);
+            let own = tm.topic_affinity(topic, &toks);
+            let other_max = (0..8)
+                .filter(|&o| o != topic)
+                .map(|o| tm.topic_affinity(o, &toks))
+                .fold(0.0f64, f64::max);
+            assert!(own > other_max, "topic {topic}: own {own} other {other_max}");
+        }
+    }
+
+    #[test]
+    fn classify_recovers_topic() {
+        let tm = TopicModel::new(6, 9);
+        let mut rng = Rng::new(4);
+        let mut correct = 0;
+        for _ in 0..60 {
+            let topic = rng.below(6);
+            let (toks, _) = tm.generate(topic, 64, &mut rng);
+            if tm.classify(&toks) == topic {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 55, "classification accuracy too low: {correct}/60");
+    }
+
+    #[test]
+    fn templates_within_vocab() {
+        let tm = TopicModel::new(8, 11);
+        for t in &tm.topics {
+            for tpl in &t.templates {
+                assert_eq!(tpl.len(), 6);
+                assert!(tpl.iter().all(|&x| (0..VOCAB as i32).contains(&x)));
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Dense Gauss–Newton curvature for the LoGRA/TrackStar baselines
+//! (paper Eq. 2–3): per layer, `K = (G^T G + lambda I)` factored with
+//! Cholesky; queries are preconditioned by solving `K x = g_q`.
+//!
+//! Memory is O(D^2) per layer by construction — this is exactly the
+//! bottleneck LoRIF removes, and the Table 8 "w/o truncated SVD OOM"
+//! rows come from the guard below.
+
+use crate::linalg::{Chol, Mat};
+use crate::store::{ChunkLayer, StoreReader};
+
+/// Refuse to build dense curvature above this many f32 elements per layer
+/// (simulates the paper's OOM wall; override with LORIF_DENSE_LIMIT).
+pub fn dense_limit() -> usize {
+    std::env::var("LORIF_DENSE_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64_000_000) // 256 MB of f32
+}
+
+pub struct DenseCurvature {
+    /// per layer Cholesky factor of (G^T G + lambda I)
+    pub chols: Vec<Chol>,
+    pub lambdas: Vec<f32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("dense curvature for layer {layer} needs {need} floats > limit {limit} (OOM)")]
+pub struct OomError {
+    pub layer: usize,
+    pub need: usize,
+    pub limit: usize,
+}
+
+impl DenseCurvature {
+    /// Stream the (dense) store once, accumulating G^T G per layer.
+    pub fn build(reader: &StoreReader, lambda_factor: f32) -> anyhow::Result<DenseCurvature> {
+        let dims = reader.meta.layers.clone();
+        // OOM guard (Table 8 behaviour)
+        let limit = dense_limit();
+        for (l, &(d1, d2)) in dims.iter().enumerate() {
+            let need = (d1 * d2) * (d1 * d2);
+            if need > limit {
+                return Err(OomError { layer: l, need, limit }.into());
+            }
+        }
+        let mut grams: Vec<Mat> =
+            dims.iter().map(|&(d1, d2)| Mat::zeros(d1 * d2, d1 * d2)).collect();
+        let c = reader.meta.c;
+        reader.stream(256, false, |chunk| {
+            for (l, layer) in chunk.layers.iter().enumerate() {
+                let (d1, d2) = dims[l];
+                match layer {
+                    ChunkLayer::Dense { g } => {
+                        crate::linalg::mat::gemm_tn_acc(&mut grams[l], g, g, 1.0);
+                    }
+                    ChunkLayer::Factored { u, v } => {
+                        let mut g = Mat::zeros(chunk.count, d1 * d2);
+                        for ex in 0..chunk.count {
+                            super::truncated::reconstruct_row(
+                                u.row(ex),
+                                v.row(ex),
+                                d1,
+                                d2,
+                                c,
+                                g.row_mut(ex),
+                            );
+                        }
+                        crate::linalg::mat::gemm_tn_acc(&mut grams[l], &g, &g, 1.0);
+                    }
+                }
+            }
+            Ok(())
+        })?;
+
+        let mut chols = Vec::with_capacity(grams.len());
+        let mut lambdas = Vec::with_capacity(grams.len());
+        for mut gram in grams {
+            let d = gram.rows;
+            // App. B.2 damping: lambda = factor * mean(eigenvalues) =
+            // factor * trace / D (no eigendecomposition needed)
+            let trace: f32 = (0..d).map(|i| gram.at(i, i)).sum();
+            let lambda = (lambda_factor * trace / d as f32).max(1e-12);
+            for i in 0..d {
+                *gram.at_mut(i, i) += lambda;
+            }
+            chols.push(Chol::factor(&gram).map_err(|e| anyhow::anyhow!("{e}"))?);
+            lambdas.push(lambda);
+        }
+        Ok(DenseCurvature { chols, lambdas })
+    }
+
+    /// Precondition a query gradient: x = K^{-1} g (per layer).
+    pub fn precondition(&self, layer: usize, g: &[f32]) -> Vec<f32> {
+        self.chols[layer].solve(g)
+    }
+
+    pub fn memory_floats(&self) -> usize {
+        self.chols.iter().map(|c| c.dim() * c.dim()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::runtime::{ExtractBatch, LayerGrads};
+    use crate::store::{StoreKind, StoreMeta, StoreWriter};
+    use crate::util::prng::Rng;
+
+    fn dense_store(n: usize, layers: &[(usize, usize)]) -> (std::path::PathBuf, Vec<Mat>) {
+        let dir = std::env::temp_dir().join("lorif_curv_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join(format!("dense_{n}"));
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: layers.to_vec(),
+            n_examples: 0,
+        };
+        let mut rng = Rng::new(7);
+        let gs: Vec<Mat> =
+            layers.iter().map(|&(d1, d2)| Mat::random_normal(n, d1 * d2, 1.0, &mut rng)).collect();
+        let mut w = StoreWriter::create(&base, meta).unwrap();
+        let batch = ExtractBatch {
+            losses: vec![0.0; n],
+            layers: gs
+                .iter()
+                .map(|g| LayerGrads {
+                    g: g.clone(),
+                    u: Mat::zeros(n, 1),
+                    v: Mat::zeros(n, 1),
+                })
+                .collect(),
+            valid: n,
+        };
+        w.append(&batch).unwrap();
+        w.finalize().unwrap();
+        (base, gs)
+    }
+
+    #[test]
+    fn gram_solve_matches_direct() {
+        let (base, gs) = dense_store(30, &[(4, 5)]);
+        let reader = StoreReader::open(&base).unwrap();
+        let curv = DenseCurvature::build(&reader, 0.1).unwrap();
+        // direct: K = G^T G + lambda I (within bf16 noise)
+        let g = &gs[0];
+        let mut gram = g.matmul_tn(g);
+        let lambda = curv.lambdas[0];
+        for i in 0..gram.rows {
+            *gram.at_mut(i, i) += lambda;
+        }
+        let mut rng = Rng::new(9);
+        let q = Mat::random_normal(20, 1, 1.0, &mut rng);
+        let x = curv.precondition(0, &q.data);
+        let kx = gram.matvec(&x);
+        for i in 0..20 {
+            // bf16 storage noise propagates; tolerance is loose but the
+            // structure must hold: K x ~= q
+            assert!((kx[i] - q.data[i]).abs() < 0.15 * (1.0 + q.data[i].abs()), "{i}");
+        }
+    }
+
+    #[test]
+    fn oom_guard_trips() {
+        std::env::set_var("LORIF_DENSE_LIMIT", "1000");
+        let (base, _) = dense_store(5, &[(8, 8)]);
+        let reader = StoreReader::open(&base).unwrap();
+        let err = DenseCurvature::build(&reader, 0.1);
+        std::env::remove_var("LORIF_DENSE_LIMIT");
+        assert!(err.is_err());
+        let msg = format!("{}", err.err().unwrap());
+        assert!(msg.contains("OOM"), "{msg}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Curvature approximations: dense Gauss-Newton (LoGRA baseline,
+//! O(D^2)), truncated SVD + Woodbury (LoRIF, O(Dr)), and EK-FAC
+//! (parameter-space contextual baseline).
+
+pub mod dense;
+pub mod ekfac;
+pub mod truncated;
+
+pub use dense::DenseCurvature;
+pub use ekfac::Ekfac;
+pub use truncated::{reconstruct_row, StoreLayerSource, TruncatedCurvature};

@@ -1,0 +1,256 @@
+//! LoRIF curvature: truncated SVD + Woodbury (paper §3.2).
+//!
+//! Stage 2 streams the factor store once per rSVD pass, reconstructing
+//! rows of `G` from the rank-c factors without materializing the matrix
+//! (paper: "reconstructing rows of G batch-by-batch from the stored
+//! low-rank factors").  Per layer we keep only `sigma (r)` and
+//! `V_r (D, r)` — O(Dr) memory instead of O(D^2) — plus, optionally, the
+//! free `train_proj (N, r)` by-product for the cached-projection serving
+//! mode (an extension over the paper; off by default).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::linalg::rsvd::{rsvd, RowChunkSource, TruncatedSvd};
+use crate::linalg::Mat;
+use crate::store::{ChunkLayer, StoreKind, StoreReader};
+
+/// Adapter: one layer of a gradient store as a stream of G-row chunks.
+pub struct StoreLayerSource<'a> {
+    pub reader: &'a StoreReader,
+    pub layer: usize,
+    pub chunk_size: usize,
+}
+
+impl RowChunkSource for StoreLayerSource<'_> {
+    fn n_rows(&self) -> usize {
+        self.reader.meta.n_examples
+    }
+
+    fn dim(&self) -> usize {
+        let (d1, d2) = self.reader.meta.layers[self.layer];
+        d1 * d2
+    }
+
+    fn for_each_chunk(&mut self, f: &mut dyn FnMut(usize, &Mat)) -> anyhow::Result<()> {
+        let (d1, d2) = self.reader.meta.layers[self.layer];
+        let c = self.reader.meta.c;
+        let layer = self.layer;
+        self.reader
+            .stream(self.chunk_size, false, |chunk| {
+                match &chunk.layers[layer] {
+                    ChunkLayer::Dense { g } => f(chunk.start, g),
+                    ChunkLayer::Factored { u, v } => {
+                        // reconstruct rows: vec(u_i v_i^T) for each example
+                        let mut g = Mat::zeros(chunk.count, d1 * d2);
+                        for ex in 0..chunk.count {
+                            reconstruct_row(
+                                u.row(ex),
+                                v.row(ex),
+                                d1,
+                                d2,
+                                c,
+                                g.row_mut(ex),
+                            );
+                        }
+                        f(chunk.start, &g);
+                    }
+                }
+                Ok(())
+            })
+            .map(|_| ())
+    }
+}
+
+/// vec(u v^T) with u (d1*c), v (d2*c) in column-major factor layout
+/// (row-major (d1, c) / (d2, c) matrices as written by the store).
+#[inline]
+pub fn reconstruct_row(u: &[f32], v: &[f32], d1: usize, d2: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), d1 * d2);
+    out.fill(0.0);
+    for a in 0..d1 {
+        let dst = &mut out[a * d2..(a + 1) * d2];
+        for k in 0..c {
+            let ua = u[a * c + k];
+            if ua != 0.0 {
+                // v column k: strided access v[b*c + k]
+                for b in 0..d2 {
+                    dst[b] += ua * v[b * c + k];
+                }
+            }
+        }
+    }
+}
+
+/// Truncated curvature for all layers of an index.
+pub struct TruncatedCurvature {
+    /// per layer: the truncated SVD
+    pub layers: Vec<TruncatedSvd>,
+    /// per layer damping lambda (App. B.2 rule)
+    pub lambdas: Vec<f32>,
+    /// per layer Woodbury weights w_i = sigma_i^2/(lambda(lambda+sigma_i^2))
+    pub weights: Vec<Vec<f32>>,
+    pub r: usize,
+}
+
+impl TruncatedCurvature {
+    /// Stage 2: run the streaming rSVD per layer over the store.
+    pub fn build(
+        reader: &StoreReader,
+        r: usize,
+        oversample: usize,
+        power_iters: usize,
+        lambda_factor: f32,
+        seed: u64,
+    ) -> anyhow::Result<TruncatedCurvature> {
+        anyhow::ensure!(
+            reader.meta.kind == StoreKind::Factored || reader.meta.kind == StoreKind::Dense,
+            "unsupported store kind"
+        );
+        let n_layers = reader.meta.layers.len();
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut lambdas = Vec::with_capacity(n_layers);
+        let mut weights = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let (d1, d2) = reader.meta.layers[l];
+            let r_l = r.min(d1 * d2).min(reader.meta.n_examples.saturating_sub(1)).max(1);
+            let mut src = StoreLayerSource { reader, layer: l, chunk_size: 256 };
+            let t0 = std::time::Instant::now();
+            let svd = rsvd(&mut src, r_l, oversample, power_iters, seed ^ l as u64)?;
+            let lambda = svd.damping(lambda_factor);
+            log::debug!(
+                "layer {l}: rsvd r={r_l} D={} sigma0={:.3} lambda={:.4} ({:?})",
+                d1 * d2,
+                svd.sigma[0],
+                lambda,
+                t0.elapsed()
+            );
+            weights.push(svd.woodbury_weights(lambda));
+            lambdas.push(lambda);
+            layers.push(svd);
+        }
+        Ok(TruncatedCurvature { layers, lambdas, weights, r })
+    }
+
+    /// Project a dense per-layer gradient into the r-dim subspace:
+    /// g' = V_r^T g (paper Eq. 8).
+    pub fn project(&self, layer: usize, g: &[f32]) -> Vec<f32> {
+        self.layers[layer].v.matvec_t(g)
+    }
+
+    /// Memory of the curvature representation in f32 counts (O(Dr)).
+    pub fn memory_floats(&self) -> usize {
+        self.layers.iter().map(|s| s.v.rows * s.v.cols + s.sigma.len()).sum()
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    pub fn save(&self, path: &Path, with_train_proj: bool) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"LORIFCV1")?;
+        f.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        f.write_all(&(self.r as u32).to_le_bytes())?;
+        f.write_all(&[with_train_proj as u8, 0, 0, 0])?;
+        for (l, svd) in self.layers.iter().enumerate() {
+            f.write_all(&self.lambdas[l].to_le_bytes())?;
+            f.write_all(&(svd.sigma.len() as u32).to_le_bytes())?;
+            f.write_all(&(svd.v.rows as u32).to_le_bytes())?;
+            for &s in &svd.sigma {
+                f.write_all(&s.to_le_bytes())?;
+            }
+            write_f32s(&mut f, &svd.v.data)?;
+            if with_train_proj {
+                f.write_all(&(svd.train_proj.rows as u32).to_le_bytes())?;
+                write_f32s(&mut f, &svd.train_proj.data)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<TruncatedCurvature> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"LORIFCV1", "bad curvature magic");
+        let n_layers = read_u32(&mut f)? as usize;
+        let r = read_u32(&mut f)? as usize;
+        let mut flags = [0u8; 4];
+        f.read_exact(&mut flags)?;
+        let with_proj = flags[0] != 0;
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut lambdas = Vec::with_capacity(n_layers);
+        let mut weights = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let mut b4 = [0u8; 4];
+            f.read_exact(&mut b4)?;
+            let lambda = f32::from_le_bytes(b4);
+            let rl = read_u32(&mut f)? as usize;
+            let d = read_u32(&mut f)? as usize;
+            let mut sigma = vec![0.0f32; rl];
+            for s in sigma.iter_mut() {
+                f.read_exact(&mut b4)?;
+                *s = f32::from_le_bytes(b4);
+            }
+            let v = Mat::from_vec(d, rl, read_f32s(&mut f, d * rl)?);
+            let train_proj = if with_proj {
+                let n = read_u32(&mut f)? as usize;
+                Mat::from_vec(n, rl, read_f32s(&mut f, n * rl)?)
+            } else {
+                Mat::zeros(0, rl)
+            };
+            let svd = TruncatedSvd { sigma, v, train_proj };
+            weights.push(svd.woodbury_weights(lambda));
+            lambdas.push(lambda);
+            layers.push(svd);
+        }
+        Ok(TruncatedCurvature { layers, lambdas, weights, r })
+    }
+}
+
+fn write_f32s(f: &mut impl Write, xs: &[f32]) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(f: &mut impl Read, n: usize) -> anyhow::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconstruct_row_matches_outer_product() {
+        // u: (d1, c) row-major, v: (d2, c) row-major
+        let (d1, d2, c) = (3, 4, 2);
+        let u: Vec<f32> = (0..d1 * c).map(|i| i as f32 * 0.5).collect();
+        let v: Vec<f32> = (0..d2 * c).map(|i| 1.0 - i as f32 * 0.1).collect();
+        let mut out = vec![0.0f32; d1 * d2];
+        reconstruct_row(&u, &v, d1, d2, c, &mut out);
+        for a in 0..d1 {
+            for b in 0..d2 {
+                let mut want = 0.0;
+                for k in 0..c {
+                    want += u[a * c + k] * v[b * c + k];
+                }
+                assert!((out[a * d2 + b] - want).abs() < 1e-6);
+            }
+        }
+    }
+}

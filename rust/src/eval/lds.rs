@@ -1,0 +1,217 @@
+//! Linear Datamodeling Score (Park et al. 2023) — the retraining-based
+//! attribution-quality metric of Figures 2/4/7 and Table 1.
+//!
+//! Protocol (App. B.5): sample M random half-subsets of the training
+//! data; retrain a model on each (averaging `models_per_subset` seeds);
+//! measure every query's loss under each retrained model; LDS for a
+//! query = Spearman(actual losses, predicted losses) where the predicted
+//! loss of subset S is `-sum_{i in S} score_i` (more included proponents
+//! -> lower loss; the sign makes good methods score positive).
+//!
+//! The expensive part — the (M x Nq) actual-loss matrix — depends only on
+//! (tier, corpus, subsets, training), NOT on the attribution method, so
+//! it is computed once and cached on disk; every method/config then pays
+//! only a Spearman.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+use crate::index::Pipeline;
+use crate::corpus::Dataset;
+use crate::linalg::Mat;
+use crate::runtime::Trainer;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LdsProtocol {
+    /// number of subsets M
+    pub n_subsets: usize,
+    /// subset fraction alpha
+    pub alpha: f64,
+    /// models averaged per subset
+    pub models_per_subset: usize,
+    /// retraining steps per model
+    pub steps: usize,
+    pub lr: f32,
+}
+
+impl Default for LdsProtocol {
+    fn default() -> Self {
+        // paper: M=100, alpha=0.5, 5 models, full training.  Scaled to the
+        // 1-core testbed; LORIF_SCALE=full benches raise M.
+        LdsProtocol { n_subsets: 24, alpha: 0.5, models_per_subset: 1, steps: 150, lr: 3e-3 }
+    }
+}
+
+/// The cached retraining ground truth.
+pub struct LdsActuals {
+    /// (M, Nq) query losses under each retrained subset model
+    pub losses: Mat,
+    /// subset membership: per subset, sorted training indices
+    pub subsets: Vec<Vec<usize>>,
+}
+
+impl LdsActuals {
+    fn cache_path(p: &Pipeline, proto: &LdsProtocol) -> PathBuf {
+        p.cfg.work_dir.join(format!(
+            "lds_actuals_{}_s{}_m{}_a{}_st{}_k{}.bin",
+            p.cfg.tier.name(),
+            p.cfg.seed,
+            proto.n_subsets,
+            (proto.alpha * 100.0) as usize,
+            proto.steps,
+            proto.models_per_subset,
+        ))
+    }
+
+    /// Compute (or load) the actual-loss matrix by subset retraining.
+    pub fn get(
+        p: &Pipeline,
+        proto: &LdsProtocol,
+        train: &Dataset,
+        queries: &Dataset,
+    ) -> anyhow::Result<LdsActuals> {
+        let path = Self::cache_path(p, proto);
+        let mut rng = Rng::labeled(p.cfg.seed, "lds-subsets");
+        let k = (train.len() as f64 * proto.alpha) as usize;
+        let subsets: Vec<Vec<usize>> = (0..proto.n_subsets)
+            .map(|_| rng.sample_indices(train.len(), k))
+            .collect();
+        if path.exists() {
+            let losses = load_mat(&path)?;
+            anyhow::ensure!(
+                losses.rows == proto.n_subsets && losses.cols == queries.len(),
+                "stale LDS cache shape"
+            );
+            return Ok(LdsActuals { losses, subsets });
+        }
+        let mut losses = Mat::zeros(proto.n_subsets, queries.len());
+        let t0 = std::time::Instant::now();
+        for (m, subset) in subsets.iter().enumerate() {
+            let sub = train.subset(subset);
+            let mut acc = vec![0.0f32; queries.len()];
+            for rep in 0..proto.models_per_subset {
+                let seed = p.cfg.seed ^ (m as u64) << 8 ^ (rep as u64) << 20 ^ 0x1D5;
+                let init = p.cfg.tier.spec().init_params(seed);
+                let mut trainer = Trainer::new(&p.rt, p.cfg.tier, init)?;
+                let mut trng = Rng::labeled(seed, "lds-train");
+                trainer.train(&p.rt, &sub, proto.steps, proto.lr, &mut trng)?;
+                let ql = {
+                    let lit = p.params_literal(&trainer.params)?;
+                    let le = crate::runtime::LossEval::new(&p.rt, p.cfg.tier)?;
+                    le.losses(&p.rt, &lit, queries)?
+                };
+                for (a, l) in acc.iter_mut().zip(&ql) {
+                    *a += l / proto.models_per_subset as f32;
+                }
+            }
+            losses.row_mut(m).copy_from_slice(&acc);
+            log::info!(
+                "LDS retraining {}/{} ({:.0}s elapsed)",
+                m + 1,
+                proto.n_subsets,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        save_mat(&path, &losses)?;
+        Ok(LdsActuals { losses, subsets })
+    }
+
+    /// LDS per query for a given score matrix (Nq, N).
+    pub fn lds_per_query(&self, scores: &Mat) -> Vec<f64> {
+        let nq = scores.rows;
+        let m = self.subsets.len();
+        (0..nq)
+            .map(|q| {
+                let actual: Vec<f32> = (0..m).map(|s| self.losses.at(s, q)).collect();
+                let predicted: Vec<f32> = self
+                    .subsets
+                    .iter()
+                    .map(|subset| {
+                        let srow = scores.row(q);
+                        -subset.iter().map(|&i| srow[i]).sum::<f32>()
+                    })
+                    .collect();
+                crate::eval::spearman::spearman(&actual, &predicted)
+            })
+            .collect()
+    }
+
+    /// Mean LDS with bootstrap CI (the Table 1 numbers).
+    pub fn lds(&self, scores: &Mat) -> (f64, f64) {
+        let per_query = self.lds_per_query(scores);
+        crate::eval::spearman::bootstrap_mean(&per_query, 500, 7)
+    }
+}
+
+fn save_mat(path: &PathBuf, m: &Mat) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&(m.rows as u64).to_le_bytes())?;
+    f.write_all(&(m.cols as u64).to_le_bytes())?;
+    for &x in &m.data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn load_mat(path: &PathBuf) -> anyhow::Result<Mat> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8) as usize;
+    f.read_exact(&mut b8)?;
+    let cols = u64::from_le_bytes(b8) as usize;
+    let mut buf = vec![0u8; rows * cols * 4];
+    f.read_exact(&mut buf)?;
+    Ok(Mat::from_vec(
+        rows,
+        cols,
+        buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic sanity: if actual losses are exactly -sum of a "true"
+    /// score vector over subsets, a scorer equal to the truth gets LDS 1
+    /// and an anti-correlated scorer gets LDS -1.
+    #[test]
+    fn lds_identity_on_synthetic() {
+        let n = 50;
+        let nq = 4;
+        let m = 16;
+        let mut rng = Rng::new(3);
+        let truth = Mat::random_normal(nq, n, 1.0, &mut rng);
+        let subsets: Vec<Vec<usize>> =
+            (0..m).map(|_| rng.sample_indices(n, 25)).collect();
+        let mut losses = Mat::zeros(m, nq);
+        for (s, subset) in subsets.iter().enumerate() {
+            for q in 0..nq {
+                let sum: f32 = subset.iter().map(|&i| truth.at(q, i)).sum();
+                *losses.at_mut(s, q) = -sum + 10.0;
+            }
+        }
+        let actuals = LdsActuals { losses, subsets };
+        let (lds, _) = actuals.lds(&truth);
+        assert!(lds > 0.999, "{lds}");
+        let mut anti = truth.clone();
+        anti.scale(-1.0);
+        let (lds_anti, _) = actuals.lds(&anti);
+        assert!(lds_anti < -0.999, "{lds_anti}");
+    }
+
+    #[test]
+    fn lds_random_scores_near_zero() {
+        let n = 60;
+        let mut rng = Rng::new(4);
+        let subsets: Vec<Vec<usize>> = (0..40).map(|_| rng.sample_indices(n, 30)).collect();
+        let mut losses = Mat::zeros(40, 2);
+        rng.fill_normal(&mut losses.data, 1.0);
+        let actuals = LdsActuals { losses, subsets };
+        let scores = Mat::random_normal(2, n, 1.0, &mut rng);
+        let (lds, _) = actuals.lds(&scores);
+        assert!(lds.abs() < 0.35, "{lds}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness: LDS (subset retraining), tail-patch, the
+//! programmatic relevance judge, and rank-correlation utilities.
+
+pub mod judge;
+pub mod lds;
+pub mod spearman;
+pub mod tailpatch;
+
+pub use lds::{LdsActuals, LdsProtocol};
+pub use tailpatch::{tail_patch, tail_patch_mean, TailPatchProtocol};

@@ -1,0 +1,123 @@
+//! Spearman rank correlation (the rho inside LDS) + bootstrap CIs
+//! (the paper's ± values are bootstrap half-widths over the query set).
+
+/// Ranks with average ties.
+fn ranks(xs: &[f32]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut r = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            r[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Spearman rank correlation.
+pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.len() < 2 {
+        return 0.0;
+    }
+    pearson(&ranks(a), &ranks(b))
+}
+
+/// Mean of per-query values with a bootstrap CI half-width
+/// (resampling the query set, matching the paper's ± convention).
+pub fn bootstrap_mean(values: &[f64], n_boot: usize, seed: u64) -> (f64, f64) {
+    let n = values.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mean = values.iter().sum::<f64>() / n as f64;
+    let mut rng = crate::util::prng::Rng::labeled(seed, "bootstrap");
+    let mut means: Vec<f64> = (0..n_boot)
+        .map(|_| {
+            let mut s = 0.0;
+            for _ in 0..n {
+                s += values[rng.below(n)];
+            }
+            s / n as f64
+        })
+        .collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = means[(0.025 * n_boot as f64) as usize];
+    let hi = means[((0.975 * n_boot as f64) as usize).min(n_boot - 1)];
+    (mean, (hi - lo) / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_correlation() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [10.0f32, 20.0, 30.0, 40.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [40.0f32, 30.0, 20.0, 10.0];
+        assert!((spearman(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_invariance() {
+        // monotone transform does not change spearman
+        let a = [0.1f32, 0.5, 0.3, 0.9, 0.7];
+        let b = [1.0f32, 3.0, 2.0, 8.0, 4.0];
+        let b_exp: Vec<f32> = b.iter().map(|x| x.exp()).collect();
+        assert!((spearman(&a, &b) - spearman(&a, &b_exp)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ties_handled() {
+        let a = [1.0f32, 1.0, 2.0, 3.0];
+        let b = [1.0f32, 1.0, 2.0, 3.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uncorrelated_near_zero() {
+        let mut rng = crate::util::prng::Rng::new(1);
+        let a: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        assert!(spearman(&a, &b).abs() < 0.07);
+    }
+
+    #[test]
+    fn bootstrap_shrinks_with_consensus() {
+        let tight: Vec<f64> = vec![0.5; 50];
+        let (m, ci) = bootstrap_mean(&tight, 200, 0);
+        assert!((m - 0.5).abs() < 1e-12);
+        assert!(ci < 1e-12);
+        let wide: Vec<f64> = (0..50).map(|i| (i % 2) as f64).collect();
+        let (_, ci_wide) = bootstrap_mean(&wide, 200, 0);
+        assert!(ci_wide > 0.05);
+    }
+}

@@ -1,0 +1,65 @@
+//! Tail-patch score (Chang et al. 2024) — the retraining-free quality
+//! metric for the larger tiers (Table 2, Fig 4b).
+//!
+//! For each query: take the method's top-k proponents, apply ONE plain
+//! SGD step on them (batched, following Li et al. 2025), and measure the
+//! increase in the query's mean token log-probability.  We report
+//! `100 * (loss_before - loss_after)` (nats x 100), averaged over
+//! queries, with a bootstrap CI.
+
+use crate::corpus::Dataset;
+use crate::index::Pipeline;
+use crate::runtime::{lit_f32, lit_i32, LossEval};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TailPatchProtocol {
+    pub k: usize,
+    pub lr: f32,
+}
+
+impl Default for TailPatchProtocol {
+    fn default() -> Self {
+        TailPatchProtocol { k: 8, lr: 1e-2 }
+    }
+}
+
+/// Tail-patch scores per query.
+pub fn tail_patch(
+    p: &Pipeline,
+    params: &[f32],
+    train: &Dataset,
+    queries: &Dataset,
+    topk: &[Vec<usize>],
+    proto: TailPatchProtocol,
+) -> anyhow::Result<Vec<f64>> {
+    anyhow::ensure!(topk.len() == queries.len(), "topk/query mismatch");
+    let sgd_name = format!("sgd_step_{}", p.cfg.tier.name());
+    let meta = p.rt.manifest.graph(&sgd_name)?.clone();
+    let exe = p.rt.load(&sgd_name)?;
+    let le = LossEval::new(&p.rt, p.cfg.tier)?;
+    let base_lit = p.params_literal(params)?;
+    let before = le.losses(&p.rt, &base_lit, queries)?;
+    let seq = crate::model::spec::SEQ_LEN;
+
+    let mut scores = Vec::with_capacity(queries.len());
+    for (q, prop) in topk.iter().enumerate() {
+        anyhow::ensure!(!prop.is_empty(), "empty proponent list for query {q}");
+        let take: Vec<usize> = prop.iter().copied().take(proto.k.min(meta.batch)).collect();
+        let toks = train.batch(&take, meta.batch);
+        let tokens = lit_i32(&toks, &[meta.batch as i64, seq as i64])?;
+        let lr = xla::Literal::scalar(proto.lr);
+        let outs = p.rt.exec(&exe, &[&base_lit, &tokens, &lr])?;
+        let patched = crate::runtime::lit_to_vec_f32(&outs[0])?;
+        let patched_lit = lit_f32(&patched, &[patched.len() as i64])?;
+        // single-query loss re-eval: build a one-example dataset view
+        let qset = queries.subset(&[q]);
+        let after = le.losses(&p.rt, &patched_lit, &qset)?[0];
+        scores.push(100.0 * (before[q] as f64 - after as f64));
+    }
+    Ok(scores)
+}
+
+/// Mean with bootstrap CI (Table 2 convention).
+pub fn tail_patch_mean(scores: &[f64]) -> (f64, f64) {
+    crate::eval::spearman::bootstrap_mean(scores, 500, 11)
+}

@@ -1,0 +1,136 @@
+//! CPU rank-c factorization via block power iteration — identical math
+//! to the L1 Pallas kernel (`python/compile/kernels/poweriter.py`), used
+//! for diagnostics (Table 9 rank sweeps without re-running extraction)
+//! and as the test oracle on the Rust side.
+
+use crate::linalg::Mat;
+
+const EPS: f32 = 1e-12;
+
+fn orthonormalize_cols(m: &mut Mat) {
+    let (rows, cols) = (m.rows, m.cols);
+    for k in 0..cols {
+        let mut col: Vec<f32> = (0..rows).map(|r| m.at(r, k)).collect();
+        for q in 0..k {
+            let mut dot = 0.0f32;
+            for r in 0..rows {
+                dot += m.at(r, q) * col[r];
+            }
+            for r in 0..rows {
+                col[r] -= dot * m.at(r, q);
+            }
+        }
+        let norm = (col.iter().map(|x| x * x).sum::<f32>() + EPS).sqrt();
+        for r in 0..rows {
+            *m.at_mut(r, k) = col[r] / norm;
+        }
+    }
+}
+
+/// Deterministic init matching the Pallas kernel: cos(0.7 i + 1.3 j + 1).
+fn power_init(d2: usize, c: usize) -> Mat {
+    let mut v = Mat::zeros(d2, c);
+    for i in 0..d2 {
+        for j in 0..c {
+            *v.at_mut(i, j) = (0.7 * i as f32 + 1.3 * j as f32 + 1.0).cos();
+        }
+    }
+    v
+}
+
+/// G (d1, d2) ~= u v^T with u (d1, c) = G v, v (d2, c) orthonormal.
+pub fn poweriter(g: &Mat, c: usize, iters: usize) -> (Mat, Mat) {
+    let mut v = power_init(g.cols, c);
+    orthonormalize_cols(&mut v);
+    for _ in 0..iters {
+        let mut u = g.matmul(&v);
+        orthonormalize_cols(&mut u);
+        v = g.matmul_tn(&u);
+        orthonormalize_cols(&mut v);
+    }
+    let u = g.matmul(&v);
+    (u, v)
+}
+
+/// Relative Frobenius reconstruction error ||uv^T - G|| / ||G||
+/// and the explained-variance ratio (Table 9 columns).
+pub fn reconstruction_error(g: &Mat, u: &Mat, v: &Mat) -> (f32, f32) {
+    let rec = u.matmul_nt(v);
+    let mut err2 = 0.0f32;
+    let mut tot2 = 0.0f32;
+    for (x, y) in rec.data.iter().zip(&g.data) {
+        err2 += (x - y) * (x - y);
+        tot2 += y * y;
+    }
+    if tot2 == 0.0 {
+        return (0.0, 1.0);
+    }
+    let rel = (err2 / tot2).sqrt();
+    let evr = 1.0 - err2 / tot2;
+    (rel, evr.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn exact_on_rank_c() {
+        let mut rng = Rng::new(1);
+        for c in [1, 2, 3] {
+            let a = Mat::random_normal(10, c, 1.0, &mut rng);
+            let b = Mat::random_normal(c, 14, 1.0, &mut rng);
+            let g = a.matmul(&b);
+            let (u, v) = poweriter(&g, c, 24);
+            let (rel, evr) = reconstruction_error(&g, &u, &v);
+            assert!(rel < 1e-2, "c={c} rel={rel}");
+            assert!(evr > 0.999);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_c() {
+        let mut rng = Rng::new(2);
+        let g = Mat::random_normal(12, 16, 1.0, &mut rng);
+        let errs: Vec<f32> = [1, 2, 4, 8]
+            .iter()
+            .map(|&c| {
+                let (u, v) = poweriter(&g, c, 16);
+                reconstruction_error(&g, &u, &v).0
+            })
+            .collect();
+        assert!(errs.windows(2).all(|w| w[1] <= w[0] + 1e-5), "{errs:?}");
+    }
+
+    #[test]
+    fn v_orthonormal() {
+        let mut rng = Rng::new(3);
+        let g = Mat::random_normal(9, 11, 1.0, &mut rng);
+        let (_, v) = poweriter(&g, 3, 16);
+        let vtv = v.matmul_tn(&v);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn near_eckart_young() {
+        let mut rng = Rng::new(4);
+        let g = Mat::random_normal(16, 20, 1.0, &mut rng);
+        for c in [1, 2] {
+            let (u, v) = poweriter(&g, c, 32);
+            let rec = u.matmul_nt(&v);
+            let mut err2 = 0.0;
+            for (x, y) in rec.data.iter().zip(&g.data) {
+                err2 += (x - y) * (x - y);
+            }
+            let (_, s, _) = crate::linalg::eigh::svd_small(&g);
+            let opt2: f32 = s[c..].iter().map(|x| x * x).sum();
+            assert!(err2.sqrt() <= opt2.sqrt() * 1.05 + 1e-4, "c={c}");
+        }
+    }
+}

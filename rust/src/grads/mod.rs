@@ -1,0 +1,4 @@
+//! Gradient-side utilities: CPU factorization oracle and extraction
+//! drivers (the AOT-graph wrappers live in runtime::graphs).
+
+pub mod factorize;

@@ -1,0 +1,300 @@
+//! The `Pipeline`: one object that owns the runtime + config and exposes
+//! every preprocessing stage with caching on disk.
+//!
+//! Everything is keyed by config so benches can reuse expensive steps
+//! (base-model training, LDS retraining actuals) across attribution
+//! configurations.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::attribution::repsim::EmbedStore;
+use crate::attribution::QueryGrads;
+use crate::config::Config;
+use crate::corpus::{Dataset, TopicModel};
+use crate::curvature::{DenseCurvature, TruncatedCurvature};
+use crate::model::checkpoint::Checkpoint;
+use crate::model::spec::SEQ_LEN;
+use crate::runtime::{lit_f32, Embedder, GradExtractor, LossEval, Runtime, Trainer};
+use crate::store::{StoreKind, StoreMeta, StoreReader, StoreWriter};
+use crate::util::prng::Rng;
+
+pub struct Pipeline {
+    pub cfg: Config,
+    pub rt: Runtime,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Stage1Options {
+    pub write_factored: bool,
+    pub write_dense: bool,
+    pub write_embeddings: bool,
+}
+
+impl Default for Stage1Options {
+    fn default() -> Self {
+        Stage1Options { write_factored: true, write_dense: true, write_embeddings: true }
+    }
+}
+
+#[derive(Debug)]
+pub struct Stage1Report {
+    pub factored_base: Option<PathBuf>,
+    pub dense_base: Option<PathBuf>,
+    pub embed_path: Option<PathBuf>,
+    pub wall: Duration,
+    pub n_examples: usize,
+}
+
+impl Pipeline {
+    pub fn new(cfg: Config) -> anyhow::Result<Pipeline> {
+        cfg.validate()?;
+        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        std::fs::create_dir_all(&cfg.work_dir)?;
+        Ok(Pipeline { cfg, rt })
+    }
+
+    pub fn topic_model(&self) -> TopicModel {
+        TopicModel::new(self.cfg.n_topics, self.cfg.seed)
+    }
+
+    /// Train + query datasets (cached on disk).
+    pub fn corpus(&self) -> anyhow::Result<(Dataset, Dataset)> {
+        let tm = self.topic_model();
+        let train_path = self.cfg.work_dir.join(format!(
+            "corpus_train_{}_{}.bin",
+            self.cfg.n_train, self.cfg.seed
+        ));
+        let query_path = self.cfg.work_dir.join(format!(
+            "corpus_query_{}_{}.bin",
+            self.cfg.n_query, self.cfg.seed
+        ));
+        let train = if train_path.exists() {
+            Dataset::load(&train_path)?
+        } else {
+            let d = Dataset::generate(&tm, self.cfg.n_train, SEQ_LEN, self.cfg.seed);
+            d.save(&train_path)?;
+            d
+        };
+        let queries = if query_path.exists() {
+            Dataset::load(&query_path)?
+        } else {
+            // distinct stream: queries are held out
+            let d = Dataset::generate(&tm, self.cfg.n_query, SEQ_LEN, self.cfg.seed ^ 0xABCD);
+            d.save(&query_path)?;
+            d
+        };
+        Ok((train, queries))
+    }
+
+    fn ckpt_path(&self) -> PathBuf {
+        self.cfg.work_dir.join(format!(
+            "model_{}_s{}_t{}.ckpt",
+            self.cfg.tier.name(),
+            self.cfg.seed,
+            self.cfg.train_steps
+        ))
+    }
+
+    /// Train the base model on the training corpus (cached checkpoint).
+    pub fn base_params(&self, train: &Dataset) -> anyhow::Result<Vec<f32>> {
+        let path = self.ckpt_path();
+        if path.exists() {
+            let ck = Checkpoint::load(&path)?;
+            anyhow::ensure!(ck.tier == self.cfg.tier.name(), "checkpoint tier mismatch");
+            return Ok(ck.params);
+        }
+        let spec = self.cfg.tier.spec();
+        let init = spec.init_params(self.cfg.seed);
+        let mut trainer = Trainer::new(&self.rt, self.cfg.tier, init)?;
+        let mut rng = Rng::labeled(self.cfg.seed, "base-train");
+        let t0 = Instant::now();
+        let losses =
+            trainer.train(&self.rt, train, self.cfg.train_steps, self.cfg.train_lr, &mut rng)?;
+        log::info!(
+            "base model: {} steps, loss {:.3} -> {:.3} ({:?})",
+            self.cfg.train_steps,
+            losses.first().unwrap_or(&0.0),
+            losses.last().unwrap_or(&0.0),
+            t0.elapsed()
+        );
+        let ck = Checkpoint {
+            tier: self.cfg.tier.name().to_string(),
+            step: trainer.step,
+            params: trainer.params.clone(),
+        };
+        ck.save(&path)?;
+        Ok(ck.params)
+    }
+
+    pub fn params_literal(&self, params: &[f32]) -> anyhow::Result<xla::Literal> {
+        lit_f32(params, &[params.len() as i64])
+    }
+
+    // ---- stage 1 -----------------------------------------------------------
+
+    pub fn factored_base(&self) -> PathBuf {
+        self.cfg.index_dir().join("factored")
+    }
+
+    pub fn dense_base(&self) -> PathBuf {
+        // dense store does not depend on c
+        self.cfg.work_dir.join(format!(
+            "index_{}_f{}_c{}",
+            self.cfg.tier.name(),
+            self.cfg.f,
+            self.cfg.c
+        )).join("dense")
+    }
+
+    pub fn embed_path(&self) -> PathBuf {
+        self.cfg
+            .work_dir
+            .join(format!("embed_{}_{}.bin", self.cfg.tier.name(), self.cfg.n_train))
+    }
+
+    /// Stage 1: extract per-example gradients for the whole training set
+    /// and persist the requested stores.  Skips work that already exists.
+    pub fn stage1(
+        &self,
+        params: &xla::Literal,
+        train: &Dataset,
+        opts: Stage1Options,
+    ) -> anyhow::Result<Stage1Report> {
+        let t0 = Instant::now();
+        let spec = self.cfg.tier.spec();
+        let layers = spec.proj_dims(self.cfg.f);
+        let fac_base = self.factored_base();
+        let dense_base = self.dense_base();
+        let embed_path = self.embed_path();
+
+        let need_fac = opts.write_factored && !StoreMeta::meta_path(&fac_base).exists();
+        let need_dense = opts.write_dense && !StoreMeta::meta_path(&dense_base).exists();
+        let need_embed = opts.write_embeddings && !embed_path.exists();
+
+        if need_fac || need_dense {
+            let extractor = GradExtractor::new(&self.rt, self.cfg.tier, self.cfg.f, self.cfg.c)?;
+            let mut fac_writer = if need_fac {
+                Some(StoreWriter::create(
+                    &fac_base,
+                    StoreMeta {
+                        kind: StoreKind::Factored,
+                        tier: self.cfg.tier.name().to_string(),
+                        f: self.cfg.f,
+                        c: self.cfg.c,
+                        layers: layers.clone(),
+                        n_examples: 0,
+                    },
+                )?)
+            } else {
+                None
+            };
+            let mut dense_writer = if need_dense {
+                Some(StoreWriter::create(
+                    &dense_base,
+                    StoreMeta {
+                        kind: StoreKind::Dense,
+                        tier: self.cfg.tier.name().to_string(),
+                        f: self.cfg.f,
+                        c: self.cfg.c,
+                        layers: layers.clone(),
+                        n_examples: 0,
+                    },
+                )?)
+            } else {
+                None
+            };
+            let mut i = 0;
+            while i < train.len() {
+                let take = extractor.batch.min(train.len() - i);
+                let idx: Vec<usize> = (i..i + take).collect();
+                let batch = extractor.run(&self.rt, params, train, &idx)?;
+                if let Some(w) = fac_writer.as_mut() {
+                    w.append(&batch)?;
+                }
+                if let Some(w) = dense_writer.as_mut() {
+                    w.append(&batch)?;
+                }
+                i += take;
+                if i % 1024 == 0 {
+                    log::debug!("stage1: {i}/{} examples", train.len());
+                }
+            }
+            if let Some(w) = fac_writer {
+                w.finalize()?;
+            }
+            if let Some(w) = dense_writer {
+                w.finalize()?;
+            }
+        }
+
+        if need_embed {
+            let embedder = Embedder::new(&self.rt, self.cfg.tier)?;
+            let emb = embedder.embed_all(&self.rt, params, train)?;
+            EmbedStore::save(&embed_path, &emb)?;
+        }
+
+        Ok(Stage1Report {
+            factored_base: opts.write_factored.then(|| fac_base),
+            dense_base: opts.write_dense.then(|| dense_base),
+            embed_path: opts.write_embeddings.then(|| embed_path),
+            wall: t0.elapsed(),
+            n_examples: train.len(),
+        })
+    }
+
+    // ---- stage 2 -----------------------------------------------------------
+
+    fn curvature_path(&self) -> PathBuf {
+        self.cfg.index_dir().join(format!("curvature_r{}.bin", self.cfg.r))
+    }
+
+    /// Stage 2 for LoRIF: streaming rSVD over the factor store (cached).
+    pub fn stage2_lorif(&self) -> anyhow::Result<(TruncatedCurvature, Duration)> {
+        let path = self.curvature_path();
+        let t0 = Instant::now();
+        if path.exists() {
+            return Ok((TruncatedCurvature::load(&path)?, t0.elapsed()));
+        }
+        let reader = StoreReader::open(&self.factored_base())?;
+        let curv = TruncatedCurvature::build(
+            &reader,
+            self.cfg.r,
+            self.cfg.rsvd_oversample,
+            self.cfg.rsvd_power_iters,
+            self.cfg.lambda_factor,
+            self.cfg.seed,
+        )?;
+        curv.save(&path, true)?;
+        Ok((curv, t0.elapsed()))
+    }
+
+    /// Stage 2 for LoGRA/TrackStar: dense Gram assembly + Cholesky.
+    pub fn stage2_dense(&self) -> anyhow::Result<(DenseCurvature, Duration)> {
+        let t0 = Instant::now();
+        let reader = StoreReader::open(&self.dense_base())?;
+        let curv = DenseCurvature::build(&reader, self.cfg.lambda_factor)?;
+        Ok((curv, t0.elapsed()))
+    }
+
+    // ---- query-side helpers -------------------------------------------------
+
+    pub fn query_grads(
+        &self,
+        params: &xla::Literal,
+        queries: &Dataset,
+    ) -> anyhow::Result<QueryGrads> {
+        let extractor = GradExtractor::new(&self.rt, self.cfg.tier, self.cfg.f, self.cfg.c)?;
+        QueryGrads::extract(&self.rt, &extractor, params, queries)
+    }
+
+    pub fn query_losses(
+        &self,
+        params: &[f32],
+        queries: &Dataset,
+    ) -> anyhow::Result<Vec<f32>> {
+        let le = LossEval::new(&self.rt, self.cfg.tier)?;
+        let lit = self.params_literal(params)?;
+        le.losses(&self.rt, &lit, queries)
+    }
+}

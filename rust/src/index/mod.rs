@@ -1,0 +1,12 @@
+//! Index-building pipeline: corpus -> base model -> stage 1 (extract +
+//! factorize + persist) -> stage 2 (curvature).
+//!
+//! Mirrors the paper's preprocessing (App. C): stage 1 computes and
+//! stores per-example gradients (dense for the baselines, rank-c factors
+//! for LoRIF, embeddings for RepSim); stage 2 builds the inverse-Hessian
+//! approximation (streaming rSVD for LoRIF; the dense Gram assembly is
+//! timed on demand for LoGRA).  All stage timings feed Tables 5–7.
+
+pub mod builder;
+
+pub use builder::{Pipeline, Stage1Options, Stage1Report};

@@ -1,0 +1,21 @@
+//! LoRIF: Low-Rank Influence Functions for scalable training data
+//! attribution — full-system reproduction (Rust L3 coordinator).
+//!
+//! See DESIGN.md for the architecture and README.md for usage.
+
+pub mod app;
+pub mod attribution;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod corpus;
+pub mod curvature;
+pub mod eval;
+pub mod grads;
+pub mod index;
+pub mod linalg;
+pub mod model;
+pub mod query;
+pub mod runtime;
+pub mod store;
+pub mod util;

@@ -1,0 +1,204 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Used for: the small Gram matrix inside the randomized SVD
+//! ((r+p) x (r+p)), the EK-FAC per-layer covariance eigenbases
+//! (<= O_max x O_max), and exactness tests.  Jacobi is O(n^3) per sweep
+//! but unconditionally stable and dependency-free; all our inputs are a
+//! few hundred wide.
+
+use super::mat::Mat;
+
+/// Eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues ascending, eigenvectors as columns of `vecs`).
+pub fn eigh(a: &Mat) -> (Vec<f32>, Mat) {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += (m.at(i, j) as f64).powi(2);
+            }
+        }
+        if off.sqrt() < 1e-9 * (1.0 + frob(&m) as f64) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = 0.5 * (aqq - app) as f64 / apq as f64;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                let (c, s) = (c as f32, s as f32);
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    *m.at_mut(k, p) = c * mkp - s * mkq;
+                    *m.at_mut(k, q) = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * mpk - s * mqk;
+                    *m.at_mut(q, k) = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // sort ascending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m.at(i, i).partial_cmp(&m.at(j, j)).unwrap());
+    let vals: Vec<f32> = order.iter().map(|&i| m.at(i, i)).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            *vecs.at_mut(r, new_c) = v.at(r, old_c);
+        }
+    }
+    (vals, vecs)
+}
+
+fn frob(m: &Mat) -> f32 {
+    m.frob_norm()
+}
+
+/// Small dense SVD via eigh of the Gram matrix (for tests & diagnostics).
+/// A (m, n) -> (U (m, k), sigma desc (k), V (n, k)) with k = min(m, n).
+pub fn svd_small(a: &Mat) -> (Mat, Vec<f32>, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    if m >= n {
+        let gram = a.matmul_tn(a); // (n, n) = A^T A
+        let (vals, vecs) = eigh(&gram);
+        // descending
+        let k = n;
+        let mut sigma = vec![0.0f32; k];
+        let mut v = Mat::zeros(n, k);
+        for i in 0..k {
+            let src = k - 1 - i;
+            sigma[i] = vals[src].max(0.0).sqrt();
+            for r in 0..n {
+                *v.at_mut(r, i) = vecs.at(r, src);
+            }
+        }
+        // U = A V / sigma
+        let av = a.matmul(&v);
+        let mut u = Mat::zeros(m, k);
+        for i in 0..k {
+            let s = if sigma[i] > 1e-12 { 1.0 / sigma[i] } else { 0.0 };
+            for r in 0..m {
+                *u.at_mut(r, i) = av.at(r, i) * s;
+            }
+        }
+        (u, sigma, v)
+    } else {
+        let (v, sigma, u) = svd_small(&a.transpose());
+        (u, sigma, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::random_normal(n, n, 1.0, rng);
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                *s.at_mut(i, j) = 0.5 * (a.at(i, j) + a.at(j, i));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [2, 5, 17, 40] {
+            let a = random_symmetric(n, &mut rng);
+            let (vals, vecs) = eigh(&a);
+            // A V = V diag(vals)
+            let av = a.matmul(&vecs);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = vecs.at(i, j) * vals[j];
+                    assert!((av.at(i, j) - want).abs() < 1e-3, "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_orthonormal_vectors() {
+        let mut rng = Rng::new(2);
+        let a = random_symmetric(12, &mut rng);
+        let (_, vecs) = eigh(&a);
+        let vtv = vecs.matmul_tn(&vecs);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_known_values() {
+        // [[2, 1], [1, 2]] has eigenvalues 1 and 3
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (vals, _) = eigh(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-5);
+        assert!((vals[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eigh_diagonal_fast_path() {
+        let a = Mat::from_vec(3, 3, vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let (vals, _) = eigh(&a);
+        assert_eq!(vals.len(), 3);
+        assert!((vals[0] - 1.0).abs() < 1e-6);
+        assert!((vals[2] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn svd_small_reconstructs() {
+        let mut rng = Rng::new(3);
+        for (m, n) in [(10, 6), (6, 10), (8, 8)] {
+            let a = Mat::random_normal(m, n, 1.0, &mut rng);
+            let (u, s, v) = svd_small(&a);
+            // A = U diag(s) V^T
+            let mut us = u.clone();
+            for i in 0..us.rows {
+                for j in 0..s.len() {
+                    *us.at_mut(i, j) *= s[j];
+                }
+            }
+            let rec = us.matmul_nt(&v);
+            for (x, y) in a.data.iter().zip(&rec.data) {
+                assert!((x - y).abs() < 2e-3, "{m}x{n}");
+            }
+            // descending singular values
+            assert!(s.windows(2).all(|w| w[0] >= w[1] - 1e-5));
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Dense row-major f32 matrix + the blocked GEMM the whole repo runs on.
+//!
+//! This replaces cuBLAS for everything the paper's pipeline does on the
+//! CPU side: curvature assembly, Woodbury projections, randomized-SVD
+//! passes, and the Rust-native scoring fallback.  The GEMM uses an
+//! i-k-j loop order with a contiguous inner axpy so LLVM auto-vectorizes
+//! it; the §Perf pass tunes the blocking (see EXPERIMENTS.md).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn random_normal(rows: usize, cols: usize, sigma: f32, rng: &mut crate::util::prng::Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    /// Select a subset of rows (used by LDS subset training / ablations).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    // -- products -----------------------------------------------------------
+
+    /// self @ other.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims");
+        let mut c = Mat::zeros(self.rows, other.cols);
+        gemm_acc(&mut c, self, other, 1.0);
+        c
+    }
+
+    /// self^T @ other.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn dims");
+        let mut c = Mat::zeros(self.cols, other.cols);
+        gemm_tn_acc(&mut c, self, other, 1.0);
+        c
+    }
+
+    /// self @ other^T.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt dims");
+        let mut c = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a = self.row(i);
+            for j in 0..other.rows {
+                c.data[i * other.rows + j] = dot(a, other.row(j));
+            }
+        }
+        c
+    }
+
+    /// self @ v for a vector v.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+
+    /// self^T @ v.
+    pub fn matvec_t(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.rows, v.len());
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            axpy(v[r], self.row(r), &mut out);
+        }
+        out
+    }
+}
+
+/// c[i] += a * b[i] — the vectorized inner kernel.
+#[inline]
+pub fn axpy(a: f32, b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(b.len(), c.len());
+    for (ci, bi) in c.iter_mut().zip(b.iter()) {
+        *ci += a * *bi;
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4 independent accumulators let LLVM keep the FMA pipes full
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// C += alpha * A @ B (row-major, i-k-j order: contiguous axpy on C rows).
+pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f32) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            let s = alpha * aik;
+            if s != 0.0 {
+                axpy(s, &b.data[k * n..(k + 1) * n], crow);
+            }
+        }
+    }
+}
+
+/// C += alpha * A^T @ B where A is (m, ka) and B is (m, n): C is (ka, n).
+pub fn gemm_tn_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f32) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(c.rows, a.cols);
+    assert_eq!(c.cols, b.cols);
+    let n = b.cols;
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for (k, &ark) in arow.iter().enumerate() {
+            let s = alpha * ark;
+            if s != 0.0 {
+                axpy(s, brow, &mut c.data[k * n..(k + 1) * n]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        let a = Mat::random_normal(17, 23, 1.0, &mut rng);
+        let b = Mat::random_normal(23, 11, 1.0, &mut rng);
+        assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::random_normal(19, 7, 1.0, &mut rng);
+        let b = Mat::random_normal(19, 13, 1.0, &mut rng);
+        assert_close(&a.matmul_tn(&b), &a.transpose().matmul(&b), 1e-4);
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Mat::random_normal(9, 21, 1.0, &mut rng);
+        let b = Mat::random_normal(14, 21, 1.0, &mut rng);
+        assert_close(&a.matmul_nt(&b), &a.matmul(&b.transpose()), 1e-4);
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Mat::random_normal(8, 12, 1.0, &mut rng);
+        let v = Mat::random_normal(12, 1, 1.0, &mut rng);
+        let mv = a.matvec(&v.data);
+        let mm = a.matmul(&v);
+        for i in 0..8 {
+            assert!((mv[i] - mm.data[i]).abs() < 1e-4);
+        }
+        let vt = Mat::random_normal(8, 1, 1.0, &mut rng);
+        let mvt = a.matvec_t(&vt.data);
+        let mmt = a.transpose().matmul(&vt);
+        for i in 0..12 {
+            assert!((mvt[i] - mmt.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_and_transpose() {
+        let mut rng = Rng::new(5);
+        let a = Mat::random_normal(6, 6, 1.0, &mut rng);
+        assert_close(&a.matmul(&Mat::eye(6)), &a, 1e-6);
+        assert_close(&a.transpose().transpose(), &a, 0.0);
+    }
+
+    #[test]
+    fn select_rows_picks() {
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = a.select_rows(&[2, 0]);
+        assert_eq!(s.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn dot_matches_scalar_loop() {
+        let mut rng = Rng::new(6);
+        let a = Mat::random_normal(1, 103, 1.0, &mut rng);
+        let b = Mat::random_normal(1, 103, 1.0, &mut rng);
+        let want: f32 = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
+        assert!((dot(&a.data, &b.data) - want).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear algebra substrate (the repo's cuBLAS/cuSOLVER stand-in):
+//! row-major matrices + GEMM, Householder QR, Jacobi eigendecomposition,
+//! Cholesky SPD solves, and the streaming randomized SVD of paper §3.2.
+
+pub mod chol;
+pub mod eigh;
+pub mod mat;
+pub mod qr;
+pub mod rsvd;
+
+pub use chol::Chol;
+pub use mat::Mat;
+pub use rsvd::{rsvd, RowChunkSource, TruncatedSvd};

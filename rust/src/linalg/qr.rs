@@ -1,0 +1,139 @@
+//! Thin Householder QR, used to orthonormalize the randomized-SVD range
+//! basis (paper App. B.2: randomized SVD with power iterations).
+//!
+//! Shapes here are tall-skinny: (N, r+p) with N up to the corpus size and
+//! r+p a few hundred, so the O(2 m n^2) Householder cost is fine.
+
+use super::mat::{axpy, dot, Mat};
+
+/// Thin QR: A (m, n) with m >= n -> (Q (m, n) with orthonormal columns,
+/// R (n, n) upper triangular) such that A = Q R.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin expects tall matrices ({m}x{n})");
+    // Work on the transpose so each Householder vector is contiguous.
+    let mut at = a.transpose(); // (n, m): row k = column k of A
+    let mut r = Mat::zeros(n, n);
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // apply to column k: the stored reflectors
+        // column k currently lives in at.row(k)
+        // (reflectors were already applied in-place below)
+        let colk = at.row(k).to_vec();
+        // build Householder v from colk[k..]
+        let x = &colk[k..];
+        let alpha = -x[0].signum() * dot(x, x).sqrt();
+        let mut v = x.to_vec();
+        v[0] -= alpha;
+        let vnorm2 = dot(&v, &v);
+        r.data[k * n + k] = alpha;
+        if vnorm2 > 0.0 {
+            // apply reflector to remaining columns (rows of at)
+            for j in (k + 1)..n {
+                let rowj = &mut at.row_mut(j)[k..];
+                let beta = 2.0 * dot(rowj, &v) / vnorm2;
+                axpy(-beta, &v, rowj);
+            }
+        }
+        // record R entries for this column from already-applied state
+        for j in (k + 1)..n {
+            r.data[k * n + j] = at.at(j, k);
+        }
+        vs.push(v);
+    }
+
+    // Build Q explicitly by applying reflectors to the identity columns.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        // e_j, then apply H_k ... H_0 in reverse
+        let mut col = vec![0.0f32; m];
+        col[j] = 1.0;
+        for k in (0..=j.min(n - 1)).rev() {
+            let v = &vs[k];
+            let vnorm2 = dot(v, v);
+            if vnorm2 > 0.0 {
+                let seg = &mut col[k..];
+                let beta = 2.0 * dot(seg, v) / vnorm2;
+                axpy(-beta, v, seg);
+            }
+        }
+        for i in 0..m {
+            q.data[i * n + j] = col[i];
+        }
+    }
+    (q, r)
+}
+
+/// Orthonormalize the columns of A in place-ish (returns Q of the thin QR).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn reconstruct(q: &Mat, r: &Mat) -> Mat {
+        q.matmul(r)
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(1);
+        for (m, n) in [(10, 4), (50, 13), (7, 7)] {
+            let a = Mat::random_normal(m, n, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let rec = reconstruct(&q, &r);
+            for (x, y) in a.data.iter().zip(&rec.data) {
+                assert!((x - y).abs() < 1e-3, "{m}x{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = Mat::random_normal(40, 9, 1.0, &mut rng);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.matmul_tn(&q);
+        for i in 0..9 {
+            for j in 0..9 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(3);
+        let a = Mat::random_normal(20, 6, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert!(r.at(i, j).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficient() {
+        // duplicate columns: QR must still produce finite output
+        let mut rng = Rng::new(4);
+        let base = Mat::random_normal(15, 1, 1.0, &mut rng);
+        let mut a = Mat::zeros(15, 3);
+        for i in 0..15 {
+            for j in 0..3 {
+                *a.at_mut(i, j) = base.data[i];
+            }
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+        let rec = reconstruct(&q, &r);
+        for (x, y) in a.data.iter().zip(&rec.data) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+}

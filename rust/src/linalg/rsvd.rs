@@ -1,0 +1,301 @@
+//! Streaming randomized SVD (Halko et al.) over a row-chunked gradient
+//! matrix — paper §3.2, stage 2 of preprocessing.
+//!
+//! The gradient matrix `G in R^{N x D}` never materializes: chunks of
+//! rows are reconstructed on the fly from the rank-c factor store (or
+//! read from the dense store for the baselines) and streamed through the
+//! sketch.  Matches App. B.2: oversampling p = 10, a configurable number
+//! of power iterations (default 3), and the damping rule
+//! `lambda = 0.1 * mean(top r+p eigenvalues)`.
+
+use super::mat::{gemm_tn_acc, Mat};
+use super::{eigh, qr};
+
+/// A source of row chunks of the (N, D) gradient matrix.  `for_each_chunk`
+/// must yield chunks in row order covering all N rows; it may be called
+/// multiple times (once per streaming pass).
+pub trait RowChunkSource {
+    fn n_rows(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn for_each_chunk(&mut self, f: &mut dyn FnMut(usize, &Mat)) -> anyhow::Result<()>;
+}
+
+/// In-memory source (tests, small benches).
+pub struct MatSource<'a> {
+    pub mat: &'a Mat,
+    pub chunk: usize,
+}
+
+impl RowChunkSource for MatSource<'_> {
+    fn n_rows(&self) -> usize {
+        self.mat.rows
+    }
+    fn dim(&self) -> usize {
+        self.mat.cols
+    }
+    fn for_each_chunk(&mut self, f: &mut dyn FnMut(usize, &Mat)) -> anyhow::Result<()> {
+        let mut row = 0;
+        while row < self.mat.rows {
+            let take = self.chunk.min(self.mat.rows - row);
+            let idx: Vec<usize> = (row..row + take).collect();
+            let m = self.mat.select_rows(&idx);
+            f(row, &m);
+            row += take;
+        }
+        Ok(())
+    }
+}
+
+/// Result of the truncated SVD: `G ~= U_r diag(sigma) V_r^T`.
+pub struct TruncatedSvd {
+    /// top-r singular values, descending
+    pub sigma: Vec<f32>,
+    /// right singular vectors, (D, r)
+    pub v: Mat,
+    /// left singular vectors scaled by sigma, (N, r): row i = sigma * U[i]
+    /// = V_r^T g_i — the curvature-subspace projections of the training
+    /// gradients, free by-product of the decomposition.
+    pub train_proj: Mat,
+}
+
+/// Streaming randomized SVD with `q` power iterations.
+///
+/// Passes over the source: 1 (sketch) + 2q (power) + 1 (project) = 2q+2.
+pub fn rsvd(
+    src: &mut dyn RowChunkSource,
+    r: usize,
+    oversample: usize,
+    power_iters: usize,
+    seed: u64,
+) -> anyhow::Result<TruncatedSvd> {
+    let n = src.n_rows();
+    let d = src.dim();
+    let k = (r + oversample).min(n).min(d);
+    anyhow::ensure!(r > 0 && r <= k, "rank {r} out of range (k={k})");
+
+    // Omega: (D, k) gaussian test matrix
+    let mut rng = crate::util::prng::Rng::labeled(seed, "rsvd-omega");
+    let omega = Mat::random_normal(d, k, 1.0, &mut rng);
+
+    // Y = G Omega  (N, k)
+    let mut y = Mat::zeros(n, k);
+    src.for_each_chunk(&mut |row0, chunk| {
+        let yc = chunk.matmul(&omega);
+        for (i, src_row) in (0..yc.rows).enumerate() {
+            y.row_mut(row0 + i).copy_from_slice(yc.row(src_row));
+        }
+    })?;
+
+    // power iterations: Y <- G (G^T Q_y), re-orthonormalizing each half-step
+    for _ in 0..power_iters {
+        let qy = qr::orthonormalize(&y); // (N, k)
+        let mut z = Mat::zeros(d, k);
+        src.for_each_chunk(&mut |row0, chunk| {
+            // Z += chunk^T Q_y[rows]
+            let idx: Vec<usize> = (row0..row0 + chunk.rows).collect();
+            let qrows = qy.select_rows(&idx);
+            gemm_tn_acc(&mut z, chunk, &qrows, 1.0);
+        })?;
+        let qz = qr::orthonormalize(&z); // (D, k)
+        let mut y2 = Mat::zeros(n, k);
+        src.for_each_chunk(&mut |row0, chunk| {
+            let yc = chunk.matmul(&qz);
+            for i in 0..yc.rows {
+                y2.row_mut(row0 + i).copy_from_slice(yc.row(i));
+            }
+        })?;
+        y = y2;
+    }
+
+    // Q = orth(Y)  (N, k);  B = Q^T G  (k, D)
+    let q = qr::orthonormalize(&y);
+    let mut b = Mat::zeros(k, d);
+    src.for_each_chunk(&mut |row0, chunk| {
+        let idx: Vec<usize> = (row0..row0 + chunk.rows).collect();
+        let qrows = q.select_rows(&idx);
+        gemm_tn_acc(&mut b, &qrows, chunk, 1.0);
+    })?;
+
+    // small SVD of B via eigh(B B^T): B = W diag(s) V^T
+    let gram = b.matmul_nt(&b); // (k, k)
+    let (vals, vecs) = eigh::eigh(&gram);
+    // top-r, descending
+    let mut sigma = Vec::with_capacity(r);
+    let mut w = Mat::zeros(k, r); // left vectors of B
+    for i in 0..r {
+        let srcc = k - 1 - i;
+        sigma.push(vals[srcc].max(0.0).sqrt());
+        for row in 0..k {
+            *w.at_mut(row, i) = vecs.at(row, srcc);
+        }
+    }
+    // V = B^T W / sigma  (D, r)
+    let btw = b.matmul_tn(&w); // (D, r): B^T (k,D)^T x ... => (D, r)
+    let mut v = Mat::zeros(d, r);
+    for i in 0..r {
+        let inv = if sigma[i] > 1e-12 { 1.0 / sigma[i] } else { 0.0 };
+        for row in 0..d {
+            *v.at_mut(row, i) = btw.at(row, i) * inv;
+        }
+    }
+    // train projections: V_r^T g_i for every row  = (Q W) diag(sigma) rows
+    let qw = q.matmul(&w); // (N, r) = U_r
+    let mut train_proj = qw;
+    for row in 0..n {
+        let rrow = train_proj.row_mut(row);
+        for i in 0..r {
+            rrow[i] *= sigma[i];
+        }
+    }
+
+    Ok(TruncatedSvd { sigma, v, train_proj })
+}
+
+impl TruncatedSvd {
+    /// Damping per App. B.2: lambda = 0.1 * mean(top r+p eigenvalues of H),
+    /// approximated here with the retained spectrum (sigma_i^2).
+    pub fn damping(&self, factor: f32) -> f32 {
+        let mean: f32 =
+            self.sigma.iter().map(|s| s * s).sum::<f32>() / self.sigma.len().max(1) as f32;
+        (factor * mean).max(1e-12)
+    }
+
+    /// Woodbury weights w_i = sigma_i^2 / (lambda (lambda + sigma_i^2)).
+    pub fn woodbury_weights(&self, lambda: f32) -> Vec<f32> {
+        self.sigma
+            .iter()
+            .map(|&s| {
+                let s2 = s * s;
+                s2 / (lambda * (lambda + s2))
+            })
+            .collect()
+    }
+
+    /// Cumulative explained-variance ratio EVR(r') for r' = 1..=r
+    /// relative to the *retained* spectrum (Fig 6 / Table 10 use the
+    /// full spectrum from `svd_small` on diagnostics-sized problems).
+    pub fn evr_curve(&self) -> Vec<f32> {
+        let total: f32 = self.sigma.iter().map(|s| s * s).sum();
+        let mut acc = 0.0;
+        self.sigma
+            .iter()
+            .map(|s| {
+                acc += s * s;
+                if total > 0.0 { acc / total } else { 0.0 }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn low_rank_matrix(n: usize, d: usize, rank: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::random_normal(n, rank, 1.0, rng);
+        let b = Mat::random_normal(rank, d, 1.0, rng);
+        a.matmul(&b)
+    }
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let mut rng = Rng::new(1);
+        let g = low_rank_matrix(60, 40, 5, &mut rng);
+        let mut src = MatSource { mat: &g, chunk: 17 };
+        let svd = rsvd(&mut src, 5, 5, 2, 0).unwrap();
+        // reconstruct: G ~= train_proj @ V^T  (since train_proj = U Sigma)
+        let rec = svd.train_proj.matmul_nt(&svd.v);
+        let err = {
+            let mut e = 0.0f32;
+            for (x, y) in g.data.iter().zip(&rec.data) {
+                e += (x - y) * (x - y);
+            }
+            e.sqrt() / g.frob_norm()
+        };
+        assert!(err < 1e-2, "rel err {err}");
+    }
+
+    #[test]
+    fn sigma_descending_and_matches_svd() {
+        let mut rng = Rng::new(2);
+        let g = Mat::random_normal(50, 30, 1.0, &mut rng);
+        let mut src = MatSource { mat: &g, chunk: 16 };
+        let svd = rsvd(&mut src, 8, 10, 3, 0).unwrap();
+        assert!(svd.sigma.windows(2).all(|w| w[0] >= w[1] - 1e-4));
+        let (_, s_true, _) = eigh::svd_small(&g);
+        for i in 0..8 {
+            assert!(
+                (svd.sigma[i] - s_true[i]).abs() < 0.05 * s_true[0],
+                "sigma[{i}]: {} vs {}",
+                svd.sigma[i],
+                s_true[i]
+            );
+        }
+    }
+
+    #[test]
+    fn v_columns_orthonormal() {
+        let mut rng = Rng::new(3);
+        let g = Mat::random_normal(40, 25, 1.0, &mut rng);
+        let mut src = MatSource { mat: &g, chunk: 9 };
+        let svd = rsvd(&mut src, 6, 8, 2, 0).unwrap();
+        let vtv = svd.v.matmul_tn(&svd.v);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - want).abs() < 2e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn train_proj_equals_vt_g() {
+        let mut rng = Rng::new(4);
+        let g = low_rank_matrix(30, 20, 4, &mut rng);
+        let mut src = MatSource { mat: &g, chunk: 7 };
+        let svd = rsvd(&mut src, 4, 6, 3, 0).unwrap();
+        let want = g.matmul(&svd.v); // (N, r) = rows V^T g_i
+        for (x, y) in svd.train_proj.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 2e-2 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn woodbury_weights_match_formula() {
+        let svd = TruncatedSvd {
+            sigma: vec![2.0, 1.0],
+            v: Mat::eye(2),
+            train_proj: Mat::zeros(1, 2),
+        };
+        let w = svd.woodbury_weights(0.5);
+        assert!((w[0] - 4.0 / (0.5 * 4.5)).abs() < 1e-6);
+        assert!((w[1] - 1.0 / (0.5 * 1.5)).abs() < 1e-6);
+        let lam = svd.damping(0.1);
+        assert!((lam - 0.1 * 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn evr_curve_monotone_to_one() {
+        let mut rng = Rng::new(5);
+        let g = Mat::random_normal(30, 20, 1.0, &mut rng);
+        let mut src = MatSource { mat: &g, chunk: 30 };
+        let svd = rsvd(&mut src, 10, 5, 2, 0).unwrap();
+        let evr = svd.evr_curve();
+        assert!(evr.windows(2).all(|w| w[1] >= w[0] - 1e-6));
+        assert!((evr.last().unwrap() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn chunk_size_invariance() {
+        let mut rng = Rng::new(6);
+        let g = low_rank_matrix(40, 24, 3, &mut rng);
+        let mut s1 = MatSource { mat: &g, chunk: 40 };
+        let mut s2 = MatSource { mat: &g, chunk: 7 };
+        let a = rsvd(&mut s1, 3, 5, 2, 9).unwrap();
+        let b = rsvd(&mut s2, 3, 5, 2, 9).unwrap();
+        for i in 0..3 {
+            assert!((a.sigma[i] - b.sigma[i]).abs() < 1e-2 * (1.0 + a.sigma[i]));
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! `lorif` — CLI for the LoRIF training-data-attribution system.
+//!
+//! Subcommands:
+//!   info            print config, tier dims, storage estimates
+//!   gen-corpus      generate + persist the synthetic topic corpus
+//!   train           train the base model (cached checkpoint)
+//!   build-index     stage 1 (gradient stores) + stage 2 (curvature)
+//!   query           offline attribution for the held-out query set
+//!   serve           TCP attribution service with dynamic batching
+//!   eval-lds        LDS for a method (subset retraining, cached)
+//!   eval-tailpatch  tail-patch score for a method
+//!   judge           programmatic top-1 relevance judge (LoRIF vs LoGRA)
+//!
+//! Common flags: --tier small|medium|large --f N --c N --r N
+//!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
+//!   --method lorif|logra|graddot|trackstar|repsim|ekfac
+
+use lorif::app::{self, Method};
+use lorif::cli::Args;
+use lorif::config::Config;
+use lorif::eval::{LdsActuals, LdsProtocol, TailPatchProtocol};
+use lorif::index::{Pipeline, Stage1Options};
+use lorif::query::{QueryEngine, ServerConfig};
+use lorif::runtime::GradExtractor;
+
+fn main() {
+    lorif::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    if args.subcommand.is_empty() || args.has("help") {
+        print_help();
+        return Ok(());
+    }
+    let mut cfg = Config::default();
+    args.apply_to_config(&mut cfg)?;
+
+    match args.subcommand.as_str() {
+        "info" => info(&cfg),
+        "gen-corpus" => {
+            let p = Pipeline::new(cfg)?;
+            let (train, queries) = p.corpus()?;
+            println!(
+                "corpus: {} train / {} query examples, {} topics, seq_len {}",
+                train.len(),
+                queries.len(),
+                p.cfg.n_topics,
+                train.seq_len
+            );
+            Ok(())
+        }
+        "train" => {
+            let p = Pipeline::new(cfg)?;
+            let (train, _) = p.corpus()?;
+            let params = p.base_params(&train)?;
+            println!("trained base model ({} params)", params.len());
+            Ok(())
+        }
+        "build-index" => build_index(cfg, &args),
+        "query" => query(cfg, &args),
+        "serve" => serve(cfg, &args),
+        "eval-lds" => eval_lds(cfg, &args),
+        "eval-tailpatch" => eval_tailpatch(cfg, &args),
+        "judge" => judge(cfg, &args),
+        other => anyhow::bail!("unknown subcommand '{other}' (--help for usage)"),
+    }
+}
+
+fn info(cfg: &Config) -> anyhow::Result<()> {
+    let spec = cfg.tier.spec();
+    println!(
+        "tier {} | layers {} | d_model {} | params {}",
+        cfg.tier.name(),
+        spec.n_layers,
+        spec.d_model,
+        spec.param_count()
+    );
+    println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
+    let dense = spec.dense_floats_per_example(cfg.f) * 2;
+    let fact = spec.factored_floats_per_example(cfg.f, cfg.c) * 2;
+    println!(
+        "per-example storage: dense {} B, factored {} B (ratio {:.1}x)",
+        dense,
+        fact,
+        dense as f64 / fact as f64
+    );
+    println!(
+        "index for n_train={}: dense {:.1} MB, factored {:.1} MB",
+        cfg.n_train,
+        dense as f64 * cfg.n_train as f64 / 1e6,
+        fact as f64 * cfg.n_train as f64 / 1e6
+    );
+    for (i, l) in spec.tracked_layers().iter().enumerate() {
+        let (d1, d2) = spec.proj_dims(cfg.f)[i];
+        println!(
+            "  layer {i}: {} [{}] ({}, {}) -> ({d1}, {d2})",
+            l.name,
+            l.module.as_str(),
+            l.in_dim,
+            l.out_dim
+        );
+    }
+    Ok(())
+}
+
+fn prepared(
+    cfg: Config,
+) -> anyhow::Result<(Pipeline, lorif::corpus::Dataset, lorif::corpus::Dataset, Vec<f32>)> {
+    let p = Pipeline::new(cfg)?;
+    let (train, queries) = p.corpus()?;
+    let params = p.base_params(&train)?;
+    Ok((p, train, queries, params))
+}
+
+fn build_index(cfg: Config, args: &Args) -> anyhow::Result<()> {
+    let (p, train, _, params) = prepared(cfg)?;
+    let lit = p.params_literal(&params)?;
+    let dense = args.get("stores").map(|s| s.contains("dense")).unwrap_or(true);
+    let opts = Stage1Options { write_factored: true, write_dense: dense, write_embeddings: true };
+    let rep = p.stage1(&lit, &train, opts)?;
+    println!(
+        "stage 1: {} examples in {:.1}s -> {:?}",
+        rep.n_examples,
+        rep.wall.as_secs_f64(),
+        p.cfg.index_dir()
+    );
+    let (curv, d2) = p.stage2_lorif()?;
+    println!(
+        "stage 2: rSVD r={} in {:.1}s (curvature memory {:.2} MB, O(Dr))",
+        p.cfg.r,
+        d2.as_secs_f64(),
+        curv.memory_floats() as f64 * 4.0 / 1e6
+    );
+    Ok(())
+}
+
+fn make_query_grads(
+    p: &Pipeline,
+    params: &[f32],
+    queries: &lorif::corpus::Dataset,
+) -> anyhow::Result<lorif::attribution::QueryGrads> {
+    let lit = p.params_literal(params)?;
+    p.query_grads(&lit, queries)
+}
+
+/// Score the query set with a named method; returns scores + topk + latency.
+pub fn score_with_method(
+    p: &Pipeline,
+    method: Method,
+    params: &[f32],
+    train: &lorif::corpus::Dataset,
+    queries: &lorif::corpus::Dataset,
+    k: usize,
+) -> anyhow::Result<lorif::query::QueryResult> {
+    let lit = p.params_literal(params)?;
+    match method {
+        Method::RepSim => {
+            app::ensure_embeddings(p, &lit, train)?;
+            let scorer = app::build_repsim_scorer(p, &lit, queries)?;
+            let qg = make_query_grads(p, params, queries)?;
+            QueryEngine::new(scorer, k).run(&qg)
+        }
+        Method::Ekfac => {
+            let extractor = GradExtractor::new(&p.rt, p.cfg.tier, 1, 1)?;
+            let scorer = app::build_ekfac_scorer(p, &extractor, &lit, train, 512)?;
+            let qg = lorif::attribution::QueryGrads::extract(&p.rt, &extractor, &lit, queries)?;
+            QueryEngine::new(scorer, k).run(&qg)
+        }
+        _ => {
+            let scorer = app::build_store_scorer(p, method)?;
+            let qg = make_query_grads(p, params, queries)?;
+            QueryEngine::new(scorer, k).run(&qg)
+        }
+    }
+}
+
+fn query(cfg: Config, args: &Args) -> anyhow::Result<()> {
+    let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
+    let k = args.get_usize("topk")?.unwrap_or(10);
+    let (p, train, queries, params) = prepared(cfg)?;
+    // ensure index
+    let lit = p.params_literal(&params)?;
+    p.stage1(
+        &lit,
+        &train,
+        Stage1Options { write_dense: method.needs_dense_store(), ..Default::default() },
+    )?;
+    let res = score_with_method(&p, method, &params, &train, &queries, k)?;
+    println!(
+        "{}: {} queries x {} train | load {:.3}s compute {:.3}s pre {:.3}s | {:.1} MB read",
+        method.name(),
+        queries.len(),
+        train.len(),
+        res.latency.load_s,
+        res.latency.compute_s,
+        res.latency.precondition_s,
+        res.latency.bytes_read as f64 / 1e6
+    );
+    let show = args.get_usize("show")?.unwrap_or(3).min(queries.len());
+    let tm = p.topic_model();
+    for q in 0..show {
+        let top = &res.topk[q];
+        println!(
+            "query {q} (topic {}): top-{k} = {:?}",
+            queries.topics[q],
+            top.iter().map(|&t| format!("{t}[t{}]", train.topics[t])).collect::<Vec<_>>()
+        );
+        let rel = lorif::eval::judge::relevance(&tm, &queries, &train, q, top[0]);
+        println!("  judge relevance of top-1: {rel}/5");
+    }
+    Ok(())
+}
+
+fn serve(cfg: Config, args: &Args) -> anyhow::Result<()> {
+    let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
+    anyhow::ensure!(
+        !matches!(method, Method::Ekfac | Method::RepSim),
+        "serve supports the store-backed methods"
+    );
+    let (p, train, _, params) = prepared(cfg)?;
+    let lit = p.params_literal(&params)?;
+    p.stage1(
+        &lit,
+        &train,
+        Stage1Options { write_dense: method.needs_dense_store(), ..Default::default() },
+    )?;
+    let scorer = app::build_store_scorer(&p, method)?;
+    let extractor = GradExtractor::new(&p.rt, p.cfg.tier, p.cfg.f, p.cfg.c)?;
+    let sc = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7979").to_string(),
+        max_batch: args.get_usize("max-batch")?.unwrap_or(16),
+        window_ms: args.get_u64("window-ms")?.unwrap_or(20),
+        topk: args.get_usize("topk")?.unwrap_or(10),
+    };
+    let served = lorif::query::serve(&p.rt, &extractor, &lit, scorer, sc)?;
+    println!("served {served} queries");
+    Ok(())
+}
+
+fn eval_lds(cfg: Config, args: &Args) -> anyhow::Result<()> {
+    let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
+    let (p, train, queries, params) = prepared(cfg)?;
+    let lit = p.params_literal(&params)?;
+    p.stage1(&lit, &train, Stage1Options::default())?;
+    let res = score_with_method(&p, method, &params, &train, &queries, 10)?;
+    let mut proto = LdsProtocol::default();
+    if let Some(m) = args.get_usize("subsets")? {
+        proto.n_subsets = m;
+    }
+    if let Some(s) = args.get_usize("retrain-steps")? {
+        proto.steps = s;
+    }
+    let actuals = LdsActuals::get(&p, &proto, &train, &queries)?;
+    let (lds, ci) = actuals.lds(&res.scores);
+    println!(
+        "{} LDS = {:.4} ± {:.4} (M={} subsets, latency {:.3}s, index {:.1} MB)",
+        method.name(),
+        lds,
+        ci,
+        proto.n_subsets,
+        res.latency.total_s,
+        res.latency.bytes_read as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn eval_tailpatch(cfg: Config, args: &Args) -> anyhow::Result<()> {
+    let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
+    let (p, train, queries, params) = prepared(cfg)?;
+    let lit = p.params_literal(&params)?;
+    p.stage1(&lit, &train, Stage1Options::default())?;
+    let mut proto = TailPatchProtocol::default();
+    if let Some(k) = args.get_usize("k")? {
+        proto.k = k;
+    }
+    if let Some(lr) = args.get_f32("patch-lr")? {
+        proto.lr = lr;
+    }
+    let res = score_with_method(&p, method, &params, &train, &queries, proto.k)?;
+    let scores = lorif::eval::tail_patch(&p, &params, &train, &queries, &res.topk, proto)?;
+    let (mean, ci) = lorif::eval::tail_patch_mean(&scores);
+    println!(
+        "{} tail-patch = {:.3} ± {:.3} (k={}, lr={}, latency {:.3}s)",
+        method.name(),
+        mean,
+        ci,
+        proto.k,
+        proto.lr,
+        res.latency.total_s
+    );
+    Ok(())
+}
+
+fn judge(cfg: Config, args: &Args) -> anyhow::Result<()> {
+    let (p, train, queries, params) = prepared(cfg)?;
+    let lit = p.params_literal(&params)?;
+    p.stage1(&lit, &train, Stage1Options::default())?;
+    let tm = p.topic_model();
+    let a = Method::parse(args.get("method-a").unwrap_or("lorif"))?;
+    let b = Method::parse(args.get("method-b").unwrap_or("logra"))?;
+    let ra = score_with_method(&p, a, &params, &train, &queries, 1)?;
+    let rb = score_with_method(&p, b, &params, &train, &queries, 1)?;
+    let top_a: Vec<usize> = ra.topk.iter().map(|t| t[0]).collect();
+    let top_b: Vec<usize> = rb.topk.iter().map(|t| t[0]).collect();
+    let sa = lorif::eval::judge::judge_top1(&tm, &queries, &train, &top_a);
+    let sb = lorif::eval::judge::judge_top1(&tm, &queries, &train, &top_b);
+    let (aw, bw, tie) = lorif::eval::judge::preference(&tm, &queries, &train, &top_a, &top_b);
+    println!(
+        "judge avg relevance: {} {:.2} vs {} {:.2}",
+        a.name(),
+        sa.avg_score,
+        b.name(),
+        sb.avg_score
+    );
+    println!(
+        "preference: {} {:.1}% / {} {:.1}% / tie {:.1}%",
+        a.name(),
+        100.0 * aw,
+        b.name(),
+        100.0 * bw,
+        100.0 * tie
+    );
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "lorif — low-rank influence functions (paper reproduction)\n\
+         usage: lorif <subcommand> [flags]\n\
+         subcommands: info gen-corpus train build-index query serve\n\
+                      eval-lds eval-tailpatch judge\n\
+         common flags: --tier small|medium|large --f N --c N --r N\n\
+                       --n-train N --n-query N --seed S --method NAME\n\
+                       --work-dir DIR --artifacts-dir DIR\n\
+         see README.md for a walkthrough."
+    );
+}

@@ -1,0 +1,92 @@
+//! Flat-parameter checkpoints (raw f32 LE + tiny header).
+//!
+//! Stores the trained base model, the LDS subset-retrained models, and
+//! optimizer state between pipeline stages.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LORIFCK1";
+
+pub struct Checkpoint {
+    pub tier: String,
+    pub step: u64,
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        let name = self.tier.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        // bulk write: reinterpret as LE bytes
+        let mut buf = Vec::with_capacity(self.params.len() * 4);
+        for &x in &self.params {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic in {}", path.display());
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let name_len = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(name_len < 256, "suspicious tier-name length");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let step = u64::from_le_bytes(b8);
+        f.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        let params = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint { tier: String::from_utf8_lossy(&name).into_owned(), step, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            tier: "small".into(),
+            step: 300,
+            params: (0..1000).map(|i| i as f32 * 0.5).collect(),
+        };
+        let dir = std::env::temp_dir().join("lorif_test_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tier, "small");
+        assert_eq!(back.step, 300);
+        assert_eq!(back.params, ck.params);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("lorif_test_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"LORIFDS1xxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

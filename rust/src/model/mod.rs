@@ -1,0 +1,7 @@
+//! Model-side substrate: tier specs (mirroring python/compile/spec.py),
+//! parameter init, and checkpoint persistence.
+
+pub mod checkpoint;
+pub mod spec;
+
+pub use spec::{Tier, TierSpec};

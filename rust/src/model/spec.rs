@@ -1,0 +1,246 @@
+//! Rust mirror of `python/compile/spec.py`: tier definitions, canonical
+//! flat-parameter layout, tracked attribution layers.
+//!
+//! Cross-checked against the artifact manifest at load time (both sides
+//! assert on `param_count`), so drift between the two spec files fails
+//! loudly instead of silently mis-slicing parameters.
+
+pub const VOCAB: usize = 64;
+pub const SEQ_LEN: usize = 64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Module {
+    Attn,
+    Mlp,
+}
+
+impl Module {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Module::Attn => "attn",
+            Module::Mlp => "mlp",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrackedLayer {
+    pub name: String,
+    pub module: Module,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Small,
+    Medium,
+    Large,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> anyhow::Result<Tier> {
+        match s {
+            "small" => Ok(Tier::Small),
+            "medium" => Ok(Tier::Medium),
+            "large" => Ok(Tier::Large),
+            _ => anyhow::bail!("unknown tier '{s}' (small|medium|large)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Small => "small",
+            Tier::Medium => "medium",
+            Tier::Large => "large",
+        }
+    }
+
+    pub fn spec(self) -> TierSpec {
+        match self {
+            // stands in for GPT2-small / OLMo-3-7B / Apertus-70B
+            Tier::Small => TierSpec::new(self, 2, 64, 128, 2),
+            Tier::Medium => TierSpec::new(self, 3, 128, 256, 4),
+            Tier::Large => TierSpec::new(self, 4, 192, 384, 6),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TierSpec {
+    pub tier: Tier,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+}
+
+impl TierSpec {
+    fn new(tier: Tier, n_layers: usize, d_model: usize, d_ff: usize, n_heads: usize) -> Self {
+        TierSpec { tier, n_layers, d_model, d_ff, n_heads }
+    }
+
+    /// Linear layers tracked for attribution, canonical order.
+    pub fn tracked_layers(&self) -> Vec<TrackedLayer> {
+        let (d, f) = (self.d_model, self.d_ff);
+        let mut out = Vec::with_capacity(4 * self.n_layers);
+        for b in 0..self.n_layers {
+            out.push(TrackedLayer {
+                name: format!("blk{b}.attn_qkv"),
+                module: Module::Attn,
+                in_dim: d,
+                out_dim: 3 * d,
+            });
+            out.push(TrackedLayer {
+                name: format!("blk{b}.attn_out"),
+                module: Module::Attn,
+                in_dim: d,
+                out_dim: d,
+            });
+            out.push(TrackedLayer {
+                name: format!("blk{b}.mlp_in"),
+                module: Module::Mlp,
+                in_dim: d,
+                out_dim: f,
+            });
+            out.push(TrackedLayer {
+                name: format!("blk{b}.mlp_out"),
+                module: Module::Mlp,
+                in_dim: f,
+                out_dim: d,
+            });
+        }
+        out
+    }
+
+    /// Canonical flat parameter layout: (name, rows, cols).
+    pub fn param_shapes(&self) -> Vec<(String, usize, usize)> {
+        let (d, f) = (self.d_model, self.d_ff);
+        let mut shapes = vec![
+            ("embed".to_string(), VOCAB, d),
+            ("pos".to_string(), SEQ_LEN, d),
+        ];
+        for b in 0..self.n_layers {
+            shapes.push((format!("blk{b}.attn_qkv"), d, 3 * d));
+            shapes.push((format!("blk{b}.attn_out"), d, d));
+            shapes.push((format!("blk{b}.mlp_in"), d, f));
+            shapes.push((format!("blk{b}.mlp_out"), f, d));
+        }
+        shapes.push(("unembed".to_string(), d, VOCAB));
+        shapes
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes().iter().map(|(_, r, c)| r * c).sum()
+    }
+
+    /// (d1, d2) per tracked layer under projection factor f (f=1: raw dims).
+    pub fn proj_dims(&self, f: usize) -> Vec<(usize, usize)> {
+        self.tracked_layers()
+            .iter()
+            .map(|l| {
+                assert!(
+                    l.in_dim % f == 0 && l.out_dim % f == 0,
+                    "f={f} must divide layer dims ({}, {})",
+                    l.in_dim,
+                    l.out_dim
+                );
+                (l.in_dim / f, l.out_dim / f)
+            })
+            .collect()
+    }
+
+    /// Effective projection dimension D = sum_l d1 d2.
+    pub fn total_proj_dim(&self, f: usize) -> usize {
+        self.proj_dims(f).iter().map(|(a, b)| a * b).sum()
+    }
+
+    /// Per-example f32 count when stored densely (LoGRA) vs factored
+    /// rank-c (LoRIF): the Table 1/2 storage columns.
+    pub fn dense_floats_per_example(&self, f: usize) -> usize {
+        self.total_proj_dim(f)
+    }
+
+    pub fn factored_floats_per_example(&self, f: usize, c: usize) -> usize {
+        self.proj_dims(f).iter().map(|(d1, d2)| c * (d1 + d2)).sum()
+    }
+
+    /// Initialize parameters: N(0, 0.05) everywhere — matches the scale
+    /// the python tests validate training against.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::prng::Rng::labeled(seed, "init");
+        let mut flat = vec![0.0f32; self.param_count()];
+        rng.fill_normal(&mut flat, 0.05);
+        flat
+    }
+}
+
+/// Paper App. B.2 power-iteration counts.
+pub fn power_iters(c: usize) -> usize {
+    if c == 1 {
+        8
+    } else {
+        16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_python() {
+        // values asserted by python/tests and the manifest
+        assert_eq!(Tier::Small.spec().param_count(), 77_824);
+        // medium: 2*128*(64)+... compute expected analytically
+        let m = Tier::Medium.spec();
+        let expect: usize = (VOCAB * 128)
+            + (SEQ_LEN * 128)
+            + 3 * (128 * 384 + 128 * 128 + 128 * 256 + 256 * 128)
+            + 128 * VOCAB;
+        assert_eq!(m.param_count(), expect);
+    }
+
+    #[test]
+    fn tracked_layers_shape() {
+        let s = Tier::Small.spec();
+        let layers = s.tracked_layers();
+        assert_eq!(layers.len(), 8);
+        assert_eq!(layers[0].out_dim, 192);
+        assert_eq!(layers[2].module, Module::Mlp);
+    }
+
+    #[test]
+    fn proj_dims_divide() {
+        for tier in [Tier::Small, Tier::Medium, Tier::Large] {
+            for f in [1, 2, 4, 8, 16] {
+                let dims = tier.spec().proj_dims(f);
+                assert!(dims.iter().all(|&(a, b)| a > 0 && b > 0), "{tier:?} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn factored_smaller_than_dense() {
+        let s = Tier::Small.spec();
+        for f in [2, 4, 8] {
+            assert!(s.factored_floats_per_example(f, 1) < s.dense_floats_per_example(f));
+        }
+        // compression ratio ~ min(d1,d2)/2c (paper §3.3)
+        let f = 4;
+        let ratio =
+            s.dense_floats_per_example(f) as f64 / s.factored_floats_per_example(f, 1) as f64;
+        assert!(ratio > 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn init_deterministic_nonzero() {
+        let s = Tier::Small.spec();
+        let a = s.init_params(1);
+        let b = s.init_params(1);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x != 0.0));
+        let c = s.init_params(2);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,8 @@
+//! Query-time serving: the engine (scorer + top-k + latency breakdown)
+//! and the TCP attribution service with dynamic batching.
+
+pub mod engine;
+pub mod server;
+
+pub use engine::{LatencyBreakdown, QueryEngine, QueryResult};
+pub use server::{serve, ServerConfig};

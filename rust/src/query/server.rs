@@ -1,0 +1,191 @@
+//! Attribution service: TCP line-protocol server with dynamic batching.
+//!
+//! The serving-side payoff of LoRIF's design is that one streaming pass
+//! over the factor store answers a whole *batch* of queries (the store
+//! read amortizes across queries).  The batcher therefore collects
+//! concurrent requests for up to `window_ms` (or `max_batch`), extracts
+//! their gradients, and runs one scorer pass.
+//!
+//! Protocol (newline-delimited JSON):
+//!   -> {"tokens": [t0, t1, ...]}            (seq_len token ids)
+//!   <- {"topk": [...], "scores": [...], "latency_s": x, "batch": b}
+//! Send `{"cmd": "shutdown"}` to stop the server (used by tests).
+//!
+//! XLA executables live on the serving thread; socket threads only parse
+//! requests and forward them over channels.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::attribution::{QueryGrads, Scorer};
+use crate::corpus::Dataset;
+use crate::model::spec::SEQ_LEN;
+use crate::runtime::{GradExtractor, Runtime};
+use crate::util::json::{obj, Value};
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub max_batch: usize,
+    pub window_ms: u64,
+    pub topk: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7979".into(), max_batch: 16, window_ms: 20, topk: 10 }
+    }
+}
+
+enum Incoming {
+    Query { tokens: Vec<i32>, reply: mpsc::Sender<String> },
+    Shutdown,
+}
+
+/// Run the attribution service until a shutdown command arrives.
+/// Returns the number of queries served.
+pub fn serve<S: Scorer>(
+    rt: &Runtime,
+    extractor: &GradExtractor,
+    params: &xla::Literal,
+    mut scorer: S,
+    cfg: ServerConfig,
+) -> anyhow::Result<usize> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let local = listener.local_addr()?;
+    log::info!("attribution service on {local} (batch<= {}, window {}ms)", cfg.max_batch, cfg.window_ms);
+    let (tx, rx) = mpsc::channel::<Incoming>();
+
+    // acceptor thread: one handler thread per connection
+    let acceptor = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, tx);
+            });
+        }
+    });
+
+    let mut served = 0usize;
+    'outer: loop {
+        // block for the first query of a batch
+        let first = match rx.recv() {
+            Ok(Incoming::Query { tokens, reply }) => (tokens, reply),
+            Ok(Incoming::Shutdown) | Err(_) => break 'outer,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + Duration::from_millis(cfg.window_ms);
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Incoming::Query { tokens, reply }) => batch.push((tokens, reply)),
+                Ok(Incoming::Shutdown) => {
+                    respond_batch(rt, extractor, params, &mut scorer, &cfg, &batch)?;
+                    served += batch.len();
+                    break 'outer;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(_) => break 'outer,
+            }
+        }
+        respond_batch(rt, extractor, params, &mut scorer, &cfg, &batch)?;
+        served += batch.len();
+    }
+    drop(acceptor); // acceptor thread exits when process does; not joined
+    Ok(served)
+}
+
+fn respond_batch<S: Scorer>(
+    rt: &Runtime,
+    extractor: &GradExtractor,
+    params: &xla::Literal,
+    scorer: &mut S,
+    cfg: &ServerConfig,
+    batch: &[(Vec<i32>, mpsc::Sender<String>)],
+) -> anyhow::Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    let t0 = Instant::now();
+    // build an ad-hoc dataset from the batched query tokens
+    let mut tokens = Vec::with_capacity(batch.len() * SEQ_LEN);
+    for (t, _) in batch {
+        tokens.extend_from_slice(t);
+    }
+    let ds = Dataset {
+        seq_len: SEQ_LEN,
+        tokens,
+        topics: vec![0; batch.len()],
+        templates: vec![vec![]; batch.len()],
+    };
+    let queries = QueryGrads::extract(rt, extractor, params, &ds)?;
+    let report = scorer.score(&queries)?;
+    let topk = report.topk(cfg.topk);
+    let latency = t0.elapsed().as_secs_f64();
+    for (q, (_, reply)) in batch.iter().enumerate() {
+        let top = &topk[q];
+        let scores: Vec<Value> = top
+            .iter()
+            .map(|&i| (report.scores.at(q, i) as f64).into())
+            .collect();
+        let resp = obj([
+            ("topk", Value::Arr(top.iter().map(|&i| i.into()).collect())),
+            ("scores", Value::Arr(scores)),
+            ("latency_s", latency.into()),
+            ("batch", batch.len().into()),
+        ]);
+        let _ = reply.send(resp.to_string());
+    }
+    log::info!("served batch of {} in {:.3}s", batch.len(), latency);
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>) -> anyhow::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        let v = match Value::parse(line.trim()) {
+            Ok(v) => v,
+            Err(e) => {
+                let _ = writeln!(stream, "{}", obj([("error", format!("{e}").into())]));
+                continue;
+            }
+        };
+        if v.get("cmd").and_then(Value::as_str) == Some("shutdown") {
+            let _ = tx.send(Incoming::Shutdown);
+            let _ = writeln!(stream, "{}", obj([("ok", true.into())]));
+            return Ok(());
+        }
+        let Some(toks) = v.get("tokens").and_then(Value::as_arr) else {
+            let _ = writeln!(stream, "{}", obj([("error", "missing tokens".into())]));
+            continue;
+        };
+        let mut tokens: Vec<i32> =
+            toks.iter().filter_map(|t| t.as_f64().map(|x| x as i32)).collect();
+        // pad/truncate to the fixed context length
+        tokens.resize(SEQ_LEN, 0);
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(Incoming::Query { tokens, reply: rtx }).is_err() {
+            return Ok(());
+        }
+        match rrx.recv() {
+            Ok(resp) => writeln!(stream, "{resp}")?,
+            Err(_) => {
+                let _ = writeln!(stream, "{}", obj([("error", "server stopped".into())]));
+                return Ok(());
+            }
+        }
+        log::debug!("answered query from {peer}");
+    }
+}

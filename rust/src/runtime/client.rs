@@ -1,0 +1,92 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! L3 hot path.  Pattern follows /opt/xla-example/load_hlo.
+//!
+//! All graphs are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal that we decompose.  Executables are cached
+//! by artifact name; XLA compilation happens once per process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::manifest::Manifest;
+use crate::linalg::Mat;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &std::path::Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client: platform={} ({} artifacts)",
+            client.platform_name(),
+            manifest.graphs.len()
+        );
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(name);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        log::debug!("compiled {name} in {:?}", t0.elapsed());
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute and decompose the output tuple into literals.
+    pub fn exec(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// ---- literal helpers -------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract an f32 literal into a Vec, converting if needed.
+pub fn lit_to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a literal shaped (rows, cols...) into a Mat with `cols` =
+/// product of trailing dims.
+pub fn lit_to_mat(lit: &xla::Literal, rows: usize) -> anyhow::Result<Mat> {
+    let data = lit_to_vec_f32(lit)?;
+    anyhow::ensure!(data.len() % rows == 0, "literal not divisible into {rows} rows");
+    let cols = data.len() / rows;
+    Ok(Mat::from_vec(rows, cols, data))
+}

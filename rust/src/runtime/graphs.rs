@@ -1,0 +1,313 @@
+//! Typed wrappers over the AOT graphs: gradient extraction, training,
+//! loss evaluation, embeddings, EK-FAC statistics.
+//!
+//! Each wrapper owns its compiled executable, knows the fixed AOT batch
+//! size, and handles padding partial batches (the graphs were lowered
+//! with static shapes).
+
+use std::rc::Rc;
+
+use super::client::{lit_f32, lit_i32, lit_to_mat, lit_to_vec_f32, Runtime};
+use super::manifest::Manifest;
+use crate::corpus::Dataset;
+use crate::linalg::Mat;
+use crate::model::spec::Tier;
+
+/// Per-layer outputs of one grad-extract batch.
+pub struct LayerGrads {
+    /// dense projected gradients, rows = examples, cols = d1*d2
+    pub g: Mat,
+    /// rank-c left factors, rows = examples, cols = d1*c
+    pub u: Mat,
+    /// rank-c right factors, rows = examples, cols = d2*c
+    pub v: Mat,
+}
+
+pub struct ExtractBatch {
+    pub losses: Vec<f32>,
+    pub layers: Vec<LayerGrads>,
+    /// number of valid (non-padding) examples
+    pub valid: usize,
+}
+
+/// Gradient extractor for a fixed (tier, f, c).
+pub struct GradExtractor {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub c: usize,
+    pub proj_dims: Vec<(usize, usize)>,
+}
+
+impl GradExtractor {
+    pub fn new(rt: &Runtime, tier: Tier, f: usize, c: usize) -> anyhow::Result<Self> {
+        let name = Manifest::grad_extract_name(tier, f, c);
+        let meta = rt.manifest.graph(&name)?.clone();
+        let exe = rt.load(&name)?;
+        let spec = tier.spec();
+        let proj_dims = if meta.proj_dims.is_empty() {
+            spec.proj_dims(f)
+        } else {
+            meta.proj_dims.clone()
+        };
+        anyhow::ensure!(proj_dims == spec.proj_dims(f), "proj_dims drift for {name}");
+        Ok(GradExtractor {
+            exe,
+            batch: meta.batch,
+            seq_len: crate::model::spec::SEQ_LEN,
+            c: meta.c.unwrap_or(c),
+            proj_dims,
+        })
+    }
+
+    /// Extract for `idx` examples (<= batch; padded internally).
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        params: &xla::Literal,
+        data: &Dataset,
+        idx: &[usize],
+    ) -> anyhow::Result<ExtractBatch> {
+        anyhow::ensure!(!idx.is_empty() && idx.len() <= self.batch);
+        let toks = data.batch(idx, self.batch);
+        let tokens = lit_i32(&toks, &[self.batch as i64, self.seq_len as i64])?;
+        let outs = rt.exec(&self.exe, &[params, &tokens])?;
+        anyhow::ensure!(
+            outs.len() == 1 + 3 * self.proj_dims.len(),
+            "grad_extract output arity mismatch: {} vs {}",
+            outs.len(),
+            1 + 3 * self.proj_dims.len()
+        );
+        let losses = lit_to_vec_f32(&outs[0])?;
+        let mut layers = Vec::with_capacity(self.proj_dims.len());
+        for (l, &(_d1, _d2)) in self.proj_dims.iter().enumerate() {
+            let g = lit_to_mat(&outs[1 + 3 * l], self.batch)?;
+            let u = lit_to_mat(&outs[2 + 3 * l], self.batch)?;
+            let v = lit_to_mat(&outs[3 + 3 * l], self.batch)?;
+            layers.push(LayerGrads { g, u, v });
+        }
+        Ok(ExtractBatch { losses, layers, valid: idx.len() })
+    }
+}
+
+/// Adam trainer around the train_step graph.
+pub struct Trainer {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    seq_len: usize,
+    pub params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    pub step: u64,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, tier: Tier, params: Vec<f32>) -> anyhow::Result<Trainer> {
+        let name = format!("train_step_{}", tier.name());
+        let meta = rt.manifest.graph(&name)?.clone();
+        let exe = rt.load(&name)?;
+        let n = params.len();
+        anyhow::ensure!(n == tier.spec().param_count(), "param vector size mismatch");
+        Ok(Trainer {
+            exe,
+            batch: meta.batch,
+            seq_len: crate::model::spec::SEQ_LEN,
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+        })
+    }
+
+    /// One optimizer step on the given examples; returns the batch loss.
+    pub fn step(
+        &mut self,
+        rt: &Runtime,
+        data: &Dataset,
+        idx: &[usize],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        self.step += 1;
+        let toks = data.batch(idx, self.batch);
+        let p = lit_f32(&self.params, &[self.params.len() as i64])?;
+        let m = lit_f32(&self.m, &[self.m.len() as i64])?;
+        let v = lit_f32(&self.v, &[self.v.len() as i64])?;
+        let step = xla::Literal::scalar(self.step as f32);
+        let tokens = lit_i32(&toks, &[self.batch as i64, self.seq_len as i64])?;
+        let lr = xla::Literal::scalar(lr);
+        let outs = rt.exec(&self.exe, &[&p, &m, &v, &step, &tokens, &lr])?;
+        anyhow::ensure!(outs.len() == 4, "train_step arity");
+        self.params = lit_to_vec_f32(&outs[0])?;
+        self.m = lit_to_vec_f32(&outs[1])?;
+        self.v = lit_to_vec_f32(&outs[2])?;
+        Ok(outs[3].to_vec::<f32>()?[0])
+    }
+
+    /// Train `steps` steps sampling batches from `data`.
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        data: &Dataset,
+        steps: usize,
+        lr: f32,
+        rng: &mut crate::util::prng::Rng,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let idx: Vec<usize> = (0..self.batch).map(|_| rng.below(data.len())).collect();
+            losses.push(self.step(rt, data, &idx, lr)?);
+        }
+        Ok(losses)
+    }
+}
+
+/// Per-example loss evaluation.
+pub struct LossEval {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    seq_len: usize,
+}
+
+impl LossEval {
+    pub fn new(rt: &Runtime, tier: Tier) -> anyhow::Result<LossEval> {
+        let name = format!("loss_eval_{}", tier.name());
+        let meta = rt.manifest.graph(&name)?.clone();
+        Ok(LossEval { exe: rt.load(&name)?, batch: meta.batch, seq_len: crate::model::spec::SEQ_LEN })
+    }
+
+    /// Losses for all examples of `data` (handles batching internally).
+    pub fn losses(
+        &self,
+        rt: &Runtime,
+        params: &xla::Literal,
+        data: &Dataset,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(data.len());
+        let mut i = 0;
+        while i < data.len() {
+            let take = self.batch.min(data.len() - i);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let toks = data.batch(&idx, self.batch);
+            let tokens = lit_i32(&toks, &[self.batch as i64, self.seq_len as i64])?;
+            let outs = rt.exec(&self.exe, &[params, &tokens])?;
+            let losses = lit_to_vec_f32(&outs[0])?;
+            out.extend_from_slice(&losses[..take]);
+            i += take;
+        }
+        Ok(out)
+    }
+}
+
+/// RepSim embeddings (last-token final hidden state).
+pub struct Embedder {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    seq_len: usize,
+    pub d_model: usize,
+}
+
+impl Embedder {
+    pub fn new(rt: &Runtime, tier: Tier) -> anyhow::Result<Embedder> {
+        let name = format!("embed_{}", tier.name());
+        let meta = rt.manifest.graph(&name)?.clone();
+        Ok(Embedder {
+            exe: rt.load(&name)?,
+            batch: meta.batch,
+            seq_len: crate::model::spec::SEQ_LEN,
+            d_model: tier.spec().d_model,
+        })
+    }
+
+    pub fn embed_all(
+        &self,
+        rt: &Runtime,
+        params: &xla::Literal,
+        data: &Dataset,
+    ) -> anyhow::Result<Mat> {
+        let mut out = Mat::zeros(data.len(), self.d_model);
+        let mut i = 0;
+        while i < data.len() {
+            let take = self.batch.min(data.len() - i);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let toks = data.batch(&idx, self.batch);
+            let tokens = lit_i32(&toks, &[self.batch as i64, self.seq_len as i64])?;
+            let outs = rt.exec(&self.exe, &[params, &tokens])?;
+            let emb = lit_to_mat(&outs[0], self.batch)?;
+            for k in 0..take {
+                out.row_mut(i + k).copy_from_slice(emb.row(k));
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+}
+
+/// EK-FAC covariance statistics accumulator.
+pub struct EkfacStats {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    seq_len: usize,
+    layer_dims: Vec<(usize, usize)>,
+}
+
+impl EkfacStats {
+    pub fn new(rt: &Runtime, tier: Tier) -> anyhow::Result<EkfacStats> {
+        let name = format!("ekfac_stats_{}", tier.name());
+        let meta = rt.manifest.graph(&name)?.clone();
+        let layer_dims = tier
+            .spec()
+            .tracked_layers()
+            .iter()
+            .map(|l| (l.in_dim, l.out_dim))
+            .collect();
+        Ok(EkfacStats {
+            exe: rt.load(&name)?,
+            batch: meta.batch,
+            seq_len: crate::model::spec::SEQ_LEN,
+            layer_dims,
+        })
+    }
+
+    /// Accumulate (A_cov, S_cov) per layer over all of `data`.
+    pub fn accumulate(
+        &self,
+        rt: &Runtime,
+        params: &xla::Literal,
+        data: &Dataset,
+        max_examples: usize,
+    ) -> anyhow::Result<Vec<(Mat, Mat)>> {
+        let mut covs: Vec<(Mat, Mat)> = self
+            .layer_dims
+            .iter()
+            .map(|&(i, o)| (Mat::zeros(i, i), Mat::zeros(o, o)))
+            .collect();
+        let n = data.len().min(max_examples);
+        let mut i = 0;
+        while i < n {
+            let take = self.batch.min(n - i);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let toks = data.batch(&idx, self.batch);
+            let tokens = lit_i32(&toks, &[self.batch as i64, self.seq_len as i64])?;
+            let outs = rt.exec(&self.exe, &[params, &tokens])?;
+            for (l, &(di, do_)) in self.layer_dims.iter().enumerate() {
+                let a = lit_to_mat(&outs[2 * l], di)?;
+                let s = lit_to_mat(&outs[2 * l + 1], do_)?;
+                // padding repeats the last example — acceptable bias for
+                // covariance estimation on the last partial batch
+                for (dst, src) in covs[l].0.data.iter_mut().zip(&a.data) {
+                    *dst += src;
+                }
+                for (dst, src) in covs[l].1.data.iter_mut().zip(&s.data) {
+                    *dst += src;
+                }
+            }
+            i += take;
+        }
+        let scale = 1.0 / n as f32;
+        for (a, s) in &mut covs {
+            a.scale(scale);
+            s.scale(scale);
+        }
+        Ok(covs)
+    }
+}

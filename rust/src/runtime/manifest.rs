@@ -1,0 +1,171 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (L2)
+//! and the Rust runtime.
+//!
+//! Loaded from `artifacts/manifest.json`; cross-checked against the Rust
+//! model spec so any drift between `spec.py` and `spec.rs` fails at
+//! startup, not as silent numerical garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::spec::Tier;
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct GraphMeta {
+    pub name: String,
+    pub kind: String,
+    pub tier: Option<String>,
+    pub batch: usize,
+    pub f: Option<usize>,
+    pub c: Option<usize>,
+    pub proj_dims: Vec<(usize, usize)>,
+    pub n_outputs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: usize,
+    pub graphs: BTreeMap<String, GraphMeta>,
+    pub batch_sizes: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = v.req_usize("version")?;
+        anyhow::ensure!(version == 2, "manifest version {version} unsupported");
+
+        // cross-check tier metadata against the Rust spec
+        if let Some(tiers) = v.get("tiers").and_then(Value::as_obj) {
+            for (name, meta) in tiers {
+                let tier = Tier::parse(name)?;
+                let want = tier.spec().param_count();
+                let got = meta.req_usize("param_count")?;
+                anyhow::ensure!(
+                    want == got,
+                    "param_count mismatch for tier {name}: rust {want} vs python {got} \
+                     — spec.rs and spec.py have drifted"
+                );
+                let layers = meta.req("tracked_layers")?.as_arr().unwrap_or(&[]);
+                let rust_layers = tier.spec().tracked_layers();
+                anyhow::ensure!(layers.len() == rust_layers.len(), "layer count drift");
+                for (jl, rl) in layers.iter().zip(&rust_layers) {
+                    anyhow::ensure!(
+                        jl.req_usize("in_dim")? == rl.in_dim
+                            && jl.req_usize("out_dim")? == rl.out_dim,
+                        "layer dim drift at {}",
+                        rl.name
+                    );
+                }
+            }
+        }
+
+        let mut graphs = BTreeMap::new();
+        for g in v.req("graphs")?.as_arr().unwrap_or(&[]) {
+            let name = g.req_str("name")?.to_string();
+            let proj_dims = g
+                .get("proj_dims")
+                .and_then(Value::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|p| {
+                            let p = p.as_arr()?;
+                            Some((p[0].as_usize()?, p[1].as_usize()?))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            graphs.insert(
+                name.clone(),
+                GraphMeta {
+                    name,
+                    kind: g.req_str("kind")?.to_string(),
+                    tier: g.get("tier").and_then(Value::as_str).map(String::from),
+                    batch: g.get("batch").and_then(Value::as_usize).unwrap_or(1),
+                    f: g.get("f").and_then(Value::as_usize),
+                    c: g.get("c").and_then(Value::as_usize),
+                    proj_dims,
+                    n_outputs: g
+                        .get("outputs")
+                        .and_then(Value::as_arr)
+                        .map(|a| a.len())
+                        .unwrap_or(0),
+                },
+            );
+        }
+        let batch_sizes = v
+            .get("batch_sizes")
+            .and_then(Value::as_obj)
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| Some((k.clone(), v.as_usize()?)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest { dir: dir.to_path_buf(), version, graphs, batch_sizes })
+    }
+
+    pub fn graph(&self, name: &str) -> anyhow::Result<&GraphMeta> {
+        self.graphs.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not in manifest — rebuild with \
+                 LORIF_AOT_SET=default (or full) make artifacts"
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Name of the grad_extract artifact for (tier, f, c).
+    pub fn grad_extract_name(tier: Tier, f: usize, c: usize) -> String {
+        format!("grad_extract_{}_f{f}_c{c}", tier.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let doc = r#"{"version": 2, "batch_sizes": {"score": 512},
+          "graphs": [{"name": "g1", "kind": "loss_eval", "tier": "small",
+                      "batch": 32, "outputs": [{"dtype":"float32","shape":[32]}]}]}"#;
+        let dir = std::env::temp_dir().join("lorif_test_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.graph("g1").unwrap().batch, 32);
+        assert_eq!(m.batch_sizes["score"], 512);
+        assert!(m.graph("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_param_count_drift() {
+        let doc = r#"{"version": 2, "graphs": [],
+          "tiers": {"small": {"param_count": 1, "tracked_layers": []}}}"#;
+        let dir = std::env::temp_dir().join("lorif_test_manifest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn grad_extract_naming() {
+        assert_eq!(
+            Manifest::grad_extract_name(Tier::Small, 4, 1),
+            "grad_extract_small_f4_c1"
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime: PJRT client wrapper loading AOT artifacts (HLO text) and the
+//! typed graph interfaces the coordinator calls on the hot path.
+
+pub mod client;
+pub mod graphs;
+pub mod manifest;
+
+pub use client::{lit_f32, lit_i32, lit_to_mat, lit_to_vec_f32, Runtime};
+pub use graphs::{Embedder, EkfacStats, ExtractBatch, GradExtractor, LayerGrads, LossEval, Trainer};
+pub use manifest::Manifest;

@@ -1,0 +1,205 @@
+//! On-disk gradient store format.
+//!
+//! A store is a pair of files:
+//!   `<name>.grads`  — fixed-stride bf16 records, one per training example
+//!   `<name>.json`   — metadata (kind, tier, f, c, layer dims, count)
+//!
+//! Two kinds (paper Fig 1):
+//!   * `Dense`    — per layer, the full projected gradient `d1*d2` (LoGRA,
+//!                  TrackStar, GradDot baselines): O(D) per example.
+//!   * `Factored` — per layer, rank-c factors `u (d1*c)` then `v (d2*c)`
+//!                  (LoRIF §3.1): O(c(d1+d2)) per example.
+//!
+//! The record stride is constant, so batched sequential reads are a
+//! single `read_exact` — the I/O path the paper's Figure 3 measures.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{obj, Value};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    Dense,
+    Factored,
+}
+
+impl StoreKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StoreKind::Dense => "dense",
+            StoreKind::Factored => "factored",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<StoreKind> {
+        match s {
+            "dense" => Ok(StoreKind::Dense),
+            "factored" => Ok(StoreKind::Factored),
+            _ => anyhow::bail!("unknown store kind '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StoreMeta {
+    pub kind: StoreKind,
+    pub tier: String,
+    pub f: usize,
+    pub c: usize,
+    /// (d1, d2) per tracked layer
+    pub layers: Vec<(usize, usize)>,
+    pub n_examples: usize,
+}
+
+impl StoreMeta {
+    /// f32 element count of one example's record.
+    pub fn floats_per_example(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|&(d1, d2)| match self.kind {
+                StoreKind::Dense => d1 * d2,
+                StoreKind::Factored => self.c * (d1 + d2),
+            })
+            .sum()
+    }
+
+    /// bf16 byte stride of one record.
+    pub fn bytes_per_example(&self) -> usize {
+        self.floats_per_example() * 2
+    }
+
+    /// Byte offset of layer `l` within a record, plus its float length.
+    pub fn layer_span(&self, l: usize) -> (usize, usize) {
+        let mut off = 0;
+        for (i, &(d1, d2)) in self.layers.iter().enumerate() {
+            let len = match self.kind {
+                StoreKind::Dense => d1 * d2,
+                StoreKind::Factored => self.c * (d1 + d2),
+            };
+            if i == l {
+                return (off * 2, len);
+            }
+            off += len;
+        }
+        panic!("layer index {l} out of range");
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_per_example() as u64 * self.n_examples as u64
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj([
+            ("kind", self.kind.as_str().into()),
+            ("tier", self.tier.as_str().into()),
+            ("f", self.f.into()),
+            ("c", self.c.into()),
+            (
+                "layers",
+                Value::Arr(
+                    self.layers
+                        .iter()
+                        .map(|&(a, b)| Value::Arr(vec![a.into(), b.into()]))
+                        .collect(),
+                ),
+            ),
+            ("n_examples", self.n_examples.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<StoreMeta> {
+        let layers = v
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("layers not array"))?
+            .iter()
+            .map(|p| {
+                let p = p.as_arr().ok_or_else(|| anyhow::anyhow!("layer not pair"))?;
+                Ok((
+                    p[0].as_usize().ok_or_else(|| anyhow::anyhow!("bad d1"))?,
+                    p[1].as_usize().ok_or_else(|| anyhow::anyhow!("bad d2"))?,
+                ))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(StoreMeta {
+            kind: StoreKind::parse(v.req_str("kind")?)?,
+            tier: v.req_str("tier")?.to_string(),
+            f: v.req_usize("f")?,
+            c: v.req_usize("c")?,
+            layers,
+            n_examples: v.req_usize("n_examples")?,
+        })
+    }
+
+    pub fn meta_path(base: &Path) -> PathBuf {
+        base.with_extension("json")
+    }
+
+    pub fn data_path(base: &Path) -> PathBuf {
+        base.with_extension("grads")
+    }
+
+    pub fn save(&self, base: &Path) -> anyhow::Result<()> {
+        std::fs::write(Self::meta_path(base), self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(base: &Path) -> anyhow::Result<StoreMeta> {
+        let text = std::fs::read_to_string(Self::meta_path(base))?;
+        Self::from_json(&Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(kind: StoreKind) -> StoreMeta {
+        StoreMeta {
+            kind,
+            tier: "small".into(),
+            f: 4,
+            c: 2,
+            layers: vec![(16, 48), (16, 16)],
+            n_examples: 100,
+        }
+    }
+
+    #[test]
+    fn stride_math() {
+        let d = meta(StoreKind::Dense);
+        assert_eq!(d.floats_per_example(), 16 * 48 + 16 * 16);
+        let f = meta(StoreKind::Factored);
+        assert_eq!(f.floats_per_example(), 2 * (16 + 48) + 2 * (16 + 16));
+        assert_eq!(f.bytes_per_example(), f.floats_per_example() * 2);
+    }
+
+    #[test]
+    fn layer_spans_tile_record() {
+        let m = meta(StoreKind::Factored);
+        let (o0, l0) = m.layer_span(0);
+        let (o1, l1) = m.layer_span(1);
+        assert_eq!(o0, 0);
+        assert_eq!(o1, l0 * 2);
+        assert_eq!((l0 + l1) * 2, m.bytes_per_example());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = meta(StoreKind::Dense);
+        let back = StoreMeta::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.kind, StoreKind::Dense);
+        assert_eq!(back.layers, m.layers);
+        assert_eq!(back.n_examples, 100);
+    }
+
+    #[test]
+    fn compression_ratio_matches_paper() {
+        // paper §3.3: ratio d1 d2 / c(d1+d2) ~= min(d1,d2)/2 for c=1
+        let mut m = meta(StoreKind::Factored);
+        m.c = 1;
+        let dense = meta(StoreKind::Dense);
+        let ratio = dense.floats_per_example() as f64 / m.floats_per_example() as f64;
+        assert!(ratio > 4.0 && ratio < 16.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Gradient store: the persistent per-example index (paper's central
+//! storage/IO bottleneck).  bf16 fixed-stride records + JSON sidecar;
+//! dense (LoGRA) and rank-c factored (LoRIF) layouts share one reader.
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use format::{StoreKind, StoreMeta};
+pub use reader::{Chunk, ChunkLayer, StoreReader};
+pub use writer::StoreWriter;

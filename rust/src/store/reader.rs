@@ -1,0 +1,318 @@
+//! Store reader: sequential batched reads with optional prefetch.
+//!
+//! The query hot path streams the whole store once per query batch.  The
+//! prefetch thread reads the next chunk from disk while the scorer
+//! consumes the current one, overlapping I/O and compute — the reader
+//! reports the two times separately, which is what Figure 3 plots.
+
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::format::{StoreKind, StoreMeta};
+use crate::linalg::Mat;
+use crate::util::bf16;
+
+/// A decoded chunk of consecutive examples.
+pub struct Chunk {
+    /// index of the first example in this chunk
+    pub start: usize,
+    pub count: usize,
+    /// per layer: matrices with `count` rows
+    pub layers: Vec<ChunkLayer>,
+    /// wall time spent on disk reads + decode for this chunk
+    pub io_time: Duration,
+}
+
+pub enum ChunkLayer {
+    Dense { g: Mat },
+    Factored { u: Mat, v: Mat },
+}
+
+impl ChunkLayer {
+    pub fn dense(&self) -> &Mat {
+        match self {
+            ChunkLayer::Dense { g } => g,
+            _ => panic!("expected dense layer"),
+        }
+    }
+
+    pub fn factors(&self) -> (&Mat, &Mat) {
+        match self {
+            ChunkLayer::Factored { u, v } => (u, v),
+            _ => panic!("expected factored layer"),
+        }
+    }
+}
+
+pub struct StoreReader {
+    pub meta: StoreMeta,
+    path: PathBuf,
+}
+
+impl StoreReader {
+    pub fn open(base: &Path) -> anyhow::Result<StoreReader> {
+        let meta = StoreMeta::load(base)?;
+        let path = StoreMeta::data_path(base);
+        let size = std::fs::metadata(&path)?.len();
+        anyhow::ensure!(
+            size == meta.total_bytes(),
+            "store size mismatch: {} vs expected {}",
+            size,
+            meta.total_bytes()
+        );
+        Ok(StoreReader { meta, path })
+    }
+
+    fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> Chunk {
+        let stride = meta.bytes_per_example();
+        let count = raw.len() / stride;
+        let t0 = Instant::now();
+        let mut layers = Vec::with_capacity(meta.layers.len());
+        for (l, &(d1, d2)) in meta.layers.iter().enumerate() {
+            let (off, len) = meta.layer_span(l);
+            match meta.kind {
+                StoreKind::Dense => {
+                    let mut g = Mat::zeros(count, d1 * d2);
+                    for ex in 0..count {
+                        let src = &raw[ex * stride + off..ex * stride + off + len * 2];
+                        bf16::decode_into(src, g.row_mut(ex));
+                    }
+                    layers.push(ChunkLayer::Dense { g });
+                }
+                StoreKind::Factored => {
+                    let cu = d1 * meta.c;
+                    let cv = d2 * meta.c;
+                    let mut u = Mat::zeros(count, cu);
+                    let mut v = Mat::zeros(count, cv);
+                    for ex in 0..count {
+                        let base = ex * stride + off;
+                        bf16::decode_into(&raw[base..base + cu * 2], u.row_mut(ex));
+                        bf16::decode_into(
+                            &raw[base + cu * 2..base + (cu + cv) * 2],
+                            v.row_mut(ex),
+                        );
+                    }
+                    layers.push(ChunkLayer::Factored { u, v });
+                }
+            }
+        }
+        Chunk { start, count, layers, io_time: t0.elapsed() }
+    }
+
+    /// Stream all examples in chunks of `chunk_size`, calling `f` for each.
+    /// Returns (io_time, total_bytes_read).  `io_time` covers read+decode.
+    pub fn stream(
+        &self,
+        chunk_size: usize,
+        prefetch: bool,
+        mut f: impl FnMut(Chunk) -> anyhow::Result<()>,
+    ) -> anyhow::Result<(Duration, u64)> {
+        let n = self.meta.n_examples;
+        if n == 0 {
+            return Ok((Duration::ZERO, 0));
+        }
+        let stride = self.meta.bytes_per_example();
+        let total_bytes = self.meta.total_bytes();
+        if !prefetch {
+            let mut file = std::fs::File::open(&self.path)?;
+            let mut io_total = Duration::ZERO;
+            let mut start = 0usize;
+            let mut raw = vec![0u8; chunk_size * stride];
+            while start < n {
+                let count = chunk_size.min(n - start);
+                let t0 = Instant::now();
+                let buf = &mut raw[..count * stride];
+                file.read_exact(buf)?;
+                let chunk = Self::decode_chunk(&self.meta, start, buf);
+                io_total += t0.elapsed();
+                f(chunk)?;
+                start += count;
+            }
+            return Ok((io_total, total_bytes));
+        }
+
+        // prefetch thread: reads + decodes ahead, bounded queue of 2
+        let (tx, rx) = mpsc::sync_channel::<anyhow::Result<Chunk>>(2);
+        let meta = self.meta.clone();
+        let path = self.path.clone();
+        let handle = std::thread::spawn(move || {
+            let run = || -> anyhow::Result<()> {
+                let mut file = std::fs::File::open(&path)?;
+                file.seek(SeekFrom::Start(0))?;
+                let mut start = 0usize;
+                while start < n {
+                    let count = chunk_size.min(n - start);
+                    let t0 = Instant::now();
+                    let mut raw = vec![0u8; count * stride];
+                    file.read_exact(&mut raw)?;
+                    let mut chunk = Self::decode_chunk(&meta, start, &raw);
+                    chunk.io_time = t0.elapsed();
+                    if tx.send(Ok(chunk)).is_err() {
+                        return Ok(()); // consumer hung up
+                    }
+                    start += count;
+                }
+                Ok(())
+            };
+            if let Err(e) = run() {
+                let _ = tx.send(Err(e));
+            }
+        });
+
+        let mut io_total = Duration::ZERO;
+        for chunk in rx {
+            let chunk = chunk?;
+            io_total += chunk.io_time;
+            f(chunk)?;
+        }
+        handle.join().map_err(|_| anyhow::anyhow!("prefetch thread panicked"))?;
+        Ok((io_total, total_bytes))
+    }
+
+    /// Read a specific contiguous range (used by tests and diagnostics).
+    pub fn read_range(&self, start: usize, count: usize) -> anyhow::Result<Chunk> {
+        anyhow::ensure!(start + count <= self.meta.n_examples, "range out of bounds");
+        let stride = self.meta.bytes_per_example();
+        let mut file = std::fs::File::open(&self.path)?;
+        file.seek(SeekFrom::Start((start * stride) as u64))?;
+        let mut raw = vec![0u8; count * stride];
+        file.read_exact(&mut raw)?;
+        Ok(Self::decode_chunk(&self.meta, start, &raw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ExtractBatch, LayerGrads};
+    use crate::store::writer::StoreWriter;
+    use crate::util::prng::Rng;
+
+    fn fake_batch(n: usize, layers: &[(usize, usize)], c: usize, seed: u64) -> ExtractBatch {
+        let mut rng = Rng::new(seed);
+        let layers = layers
+            .iter()
+            .map(|&(d1, d2)| LayerGrads {
+                g: Mat::random_normal(n, d1 * d2, 1.0, &mut rng),
+                u: Mat::random_normal(n, d1 * c, 1.0, &mut rng),
+                v: Mat::random_normal(n, d2 * c, 1.0, &mut rng),
+            })
+            .collect();
+        ExtractBatch { losses: vec![0.0; n], layers, valid: n }
+    }
+
+    fn write_store(kind: StoreKind, n: usize, c: usize) -> (tempdir::TempBase, StoreMeta) {
+        let layers = vec![(8, 12), (8, 8)];
+        let base = tempdir::base(&format!("store_{}_{}", kind.as_str(), n));
+        let meta = StoreMeta {
+            kind,
+            tier: "small".into(),
+            f: 4,
+            c,
+            layers: layers.clone(),
+            n_examples: 0,
+        };
+        let mut w = StoreWriter::create(&base.path, meta).unwrap();
+        let mut written = 0;
+        while written < n {
+            let take = 5.min(n - written);
+            let b = fake_batch(take, &layers, c, written as u64);
+            w.append(&b).unwrap();
+            written += take;
+        }
+        let meta = w.finalize().unwrap();
+        (base, meta)
+    }
+
+    // tiny temp-dir helper
+    mod tempdir {
+        use std::path::PathBuf;
+
+        pub struct TempBase {
+            pub path: PathBuf,
+        }
+
+        impl Drop for TempBase {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_file(self.path.with_extension("grads"));
+                let _ = std::fs::remove_file(self.path.with_extension("json"));
+            }
+        }
+
+        pub fn base(name: &str) -> TempBase {
+            let dir = std::env::temp_dir().join("lorif_store_tests");
+            std::fs::create_dir_all(&dir).unwrap();
+            TempBase { path: dir.join(name) }
+        }
+    }
+
+    #[test]
+    fn roundtrip_factored() {
+        let (base, meta) = write_store(StoreKind::Factored, 17, 2);
+        assert_eq!(meta.n_examples, 17);
+        let r = StoreReader::open(&base.path).unwrap();
+        let mut seen = 0;
+        r.stream(6, false, |chunk| {
+            let (u, v) = chunk.layers[0].factors();
+            assert_eq!(u.rows, chunk.count);
+            assert_eq!(u.cols, 8 * 2);
+            assert_eq!(v.cols, 12 * 2);
+            seen += chunk.count;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, 17);
+    }
+
+    #[test]
+    fn roundtrip_dense_values() {
+        let (base, _) = write_store(StoreKind::Dense, 9, 1);
+        let r = StoreReader::open(&base.path).unwrap();
+        // regenerate the same fake data and compare within bf16 tolerance
+        let b0 = fake_batch(5, &[(8, 12), (8, 8)], 1, 0);
+        let chunk = r.read_range(0, 5).unwrap();
+        let g = chunk.layers[0].dense();
+        for ex in 0..5 {
+            for (a, b) in g.row(ex).iter().zip(b0.layers[0].g.row(ex)) {
+                assert!((a - b).abs() <= b.abs() / 128.0 + 1e-2, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_matches_sync() {
+        let (base, _) = write_store(StoreKind::Factored, 23, 1);
+        let r = StoreReader::open(&base.path).unwrap();
+        let collect = |prefetch: bool| {
+            let mut rows: Vec<f32> = Vec::new();
+            r.stream(7, prefetch, |chunk| {
+                let (u, _) = chunk.layers[1].factors();
+                rows.extend(u.data.iter());
+                Ok(())
+            })
+            .unwrap();
+            rows
+        };
+        assert_eq!(collect(false), collect(true));
+    }
+
+    #[test]
+    fn detects_truncated_file() {
+        let (base, _) = write_store(StoreKind::Dense, 6, 1);
+        // truncate the data file
+        let data = StoreMeta::data_path(&base.path);
+        let full = std::fs::read(&data).unwrap();
+        std::fs::write(&data, &full[..full.len() - 10]).unwrap();
+        assert!(StoreReader::open(&base.path).is_err());
+    }
+
+    #[test]
+    fn read_range_bounds() {
+        let (base, _) = write_store(StoreKind::Factored, 10, 1);
+        let r = StoreReader::open(&base.path).unwrap();
+        assert!(r.read_range(8, 3).is_err());
+        assert!(r.read_range(8, 2).is_ok());
+    }
+}

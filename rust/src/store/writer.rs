@@ -1,0 +1,85 @@
+//! Store writer: appends per-example records during stage 1.
+
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use super::format::{StoreKind, StoreMeta};
+use crate::runtime::ExtractBatch;
+use crate::util::bf16;
+
+pub struct StoreWriter {
+    base: PathBuf,
+    meta: StoreMeta,
+    file: BufWriter<std::fs::File>,
+    written: usize,
+    scratch: Vec<u8>,
+}
+
+impl StoreWriter {
+    pub fn create(base: &Path, mut meta: StoreMeta) -> anyhow::Result<StoreWriter> {
+        if let Some(parent) = base.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        meta.n_examples = 0;
+        let file = BufWriter::new(std::fs::File::create(StoreMeta::data_path(base))?);
+        Ok(StoreWriter { base: base.to_path_buf(), meta, file, written: 0, scratch: Vec::new() })
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    /// Append the valid examples of an extract batch.
+    pub fn append(&mut self, batch: &ExtractBatch) -> anyhow::Result<()> {
+        anyhow::ensure!(batch.layers.len() == self.meta.layers.len(), "layer count");
+        for ex in 0..batch.valid {
+            self.scratch.clear();
+            for (l, lg) in batch.layers.iter().enumerate() {
+                let (d1, d2) = self.meta.layers[l];
+                match self.meta.kind {
+                    StoreKind::Dense => {
+                        let row = lg.g.row(ex);
+                        anyhow::ensure!(row.len() == d1 * d2, "dense row len");
+                        bf16::encode_slice(row, &mut self.scratch);
+                    }
+                    StoreKind::Factored => {
+                        let u = lg.u.row(ex);
+                        let v = lg.v.row(ex);
+                        anyhow::ensure!(
+                            u.len() == d1 * self.meta.c && v.len() == d2 * self.meta.c,
+                            "factor row len"
+                        );
+                        bf16::encode_slice(u, &mut self.scratch);
+                        bf16::encode_slice(v, &mut self.scratch);
+                    }
+                }
+            }
+            debug_assert_eq!(self.scratch.len(), self.meta.bytes_per_example());
+            self.file.write_all(&self.scratch)?;
+            self.written += 1;
+        }
+        Ok(())
+    }
+
+    /// Append one example given raw per-layer f32 slices (dense kind).
+    pub fn append_dense_row(&mut self, per_layer: &[&[f32]]) -> anyhow::Result<()> {
+        anyhow::ensure!(self.meta.kind == StoreKind::Dense);
+        self.scratch.clear();
+        for (l, row) in per_layer.iter().enumerate() {
+            let (d1, d2) = self.meta.layers[l];
+            anyhow::ensure!(row.len() == d1 * d2, "dense row len");
+            bf16::encode_slice(row, &mut self.scratch);
+        }
+        self.file.write_all(&self.scratch)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Flush data and write the metadata sidecar.
+    pub fn finalize(mut self) -> anyhow::Result<StoreMeta> {
+        self.file.flush()?;
+        self.meta.n_examples = self.written;
+        self.meta.save(&self.base)?;
+        Ok(self.meta)
+    }
+}

@@ -1,0 +1,116 @@
+//! bfloat16 encode/decode for the gradient store.
+//!
+//! The paper stores projected gradients and rank-c factors in 16-bit
+//! formats; we use bf16 (same exponent range as f32, 8-bit mantissa) with
+//! round-to-nearest-even, matching what XLA's `Bf16` type does.  The
+//! store reader decodes shards back to f32 on the query hot path, so both
+//! directions are written to be auto-vectorizable.
+
+/// Convert one f32 to bf16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest even: add 0x7fff + lsb of the truncated result
+    let round_bit = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7fff + round_bit)) >> 16) as u16
+}
+
+/// Convert bf16 bits back to f32 (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Encode a slice of f32 into bf16 bytes (little-endian u16s).
+pub fn encode_slice(src: &[f32], dst: &mut Vec<u8>) {
+    dst.reserve(src.len() * 2);
+    for &x in src {
+        let b = f32_to_bf16(x);
+        dst.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// Decode bf16 bytes into an f32 buffer. `dst` is resized to fit.
+pub fn decode_slice(src: &[u8], dst: &mut Vec<f32>) {
+    assert!(src.len() % 2 == 0, "bf16 byte stream must have even length");
+    let n = src.len() / 2;
+    dst.clear();
+    dst.reserve(n);
+    // chunks_exact lets LLVM vectorize the widening shift
+    for ch in src.chunks_exact(2) {
+        let b = u16::from_le_bytes([ch[0], ch[1]]);
+        dst.push(bf16_to_f32(b));
+    }
+}
+
+/// Decode into a pre-sized slice (no allocation on the hot path).
+pub fn decode_into(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len() * 2, "bf16 src/dst length mismatch");
+    for (ch, d) in src.chunks_exact(2).zip(dst.iter_mut()) {
+        *d = bf16_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        // values with <= 8 mantissa bits are exact in bf16
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1.5, 3.0, 256.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        // relative error of bf16 rounding is <= 2^-8
+        let mut x = -10.0f32;
+        while x < 10.0 {
+            let y = bf16_to_f32(f32_to_bf16(x));
+            if x != 0.0 {
+                assert!(((y - x) / x).abs() <= 1.0 / 256.0 + 1e-7, "{x} -> {y}");
+            }
+            x += 0.0137;
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between bf16(1.0) and the next
+        // representable; must round to even (1.0)
+        let x = 1.0f32 + f32::powi(2.0, -9);
+        assert_eq!(bf16_to_f32(f32_to_bf16(x)), 1.0);
+        // 1.0 + 3*2^-9 is halfway above 1.0+2^-8 -> rounds up to 1.0+2^-7
+        let x = 1.0f32 + 3.0 * f32::powi(2.0, -9);
+        assert_eq!(bf16_to_f32(f32_to_bf16(x)), 1.0 + f32::powi(2.0, -7));
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let src: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.01).collect();
+        let mut bytes = Vec::new();
+        encode_slice(&src, &mut bytes);
+        assert_eq!(bytes.len(), 2000);
+        let mut back = Vec::new();
+        decode_slice(&bytes, &mut back);
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() / 256.0 + 1e-6);
+        }
+        let mut fixed = vec![0.0f32; src.len()];
+        decode_into(&bytes, &mut fixed);
+        assert_eq!(back, fixed);
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared substrates: bf16 codec, PRNG, JSON, logging, phase timers.
+
+pub mod bf16;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod timer;

@@ -1,0 +1,119 @@
+//! Phase timers for the latency breakdowns (Fig 3) and preprocessing
+//! tables (Tables 5–7).
+//!
+//! A `PhaseTimer` accumulates wall time into named phases; the query
+//! engine uses one to separate "loading gradients" from "computation",
+//! which is exactly the split the paper's Figure 3 reports.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a named phase.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.acc.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.values().sum()
+    }
+
+    /// Merge another timer's phases into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// "load 1.23s (82%) | score 0.27s (18%)" style summary.
+    pub fn summary(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        self.acc
+            .iter()
+            .map(|(k, v)| {
+                let s = v.as_secs_f64();
+                format!("{k} {s:.3}s ({:.0}%)", 100.0 * s / total)
+            })
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+/// RAII scope timer: adds elapsed time to the phase on drop.
+pub struct Scoped<'a> {
+    timer: &'a mut PhaseTimer,
+    phase: &'static str,
+    start: Instant,
+}
+
+impl<'a> Scoped<'a> {
+    pub fn new(timer: &'a mut PhaseTimer, phase: &'static str) -> Self {
+        Scoped { timer, phase, start: Instant::now() }
+    }
+}
+
+impl Drop for Scoped<'_> {
+    fn drop(&mut self) {
+        self.timer.add(self.phase, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut t = PhaseTimer::new();
+        t.time("a", || std::thread::sleep(Duration::from_millis(5)));
+        t.time("a", || std::thread::sleep(Duration::from_millis(5)));
+        t.time("b", || ());
+        assert!(t.get("a") >= Duration::from_millis(10));
+        assert!(t.total() >= t.get("a"));
+        assert!(t.summary().contains("a "));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(3));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn scoped_records_on_drop() {
+        let mut t = PhaseTimer::new();
+        {
+            let _s = Scoped::new(&mut t, "scope");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(t.get("scope") >= Duration::from_millis(2));
+    }
+}

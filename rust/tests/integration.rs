@@ -1,0 +1,220 @@
+//! Integration tests over the real AOT artifacts: runtime loading,
+//! gradient extraction vs the CPU oracle, full index build, and
+//! cross-method scoring on a small live pipeline.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use lorif::app::{build_store_scorer, Method};
+use lorif::attribution::{QueryGrads, Scorer};
+use lorif::config::Config;
+use lorif::index::{Pipeline, Stage1Options};
+use lorif::model::spec::Tier;
+use lorif::query::QueryEngine;
+use lorif::runtime::{GradExtractor, LossEval, Runtime, Trainer};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn test_config(name: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.n_train = 128;
+    cfg.n_query = 8;
+    cfg.train_steps = 40;
+    cfg.r = 24;
+    cfg.work_dir = std::env::temp_dir().join("lorif_itest").join(name);
+    cfg
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    assert!(rt.manifest.graphs.len() >= 20);
+    assert!(rt.manifest.graph("grad_extract_small_f4_c1").is_ok());
+    assert!(rt.manifest.graph("nonexistent").is_err());
+}
+
+#[test]
+fn extraction_matches_cpu_factorization_oracle() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let tier = Tier::Small;
+    let spec = tier.spec();
+    let params = spec.init_params(3);
+    let lit = lorif::runtime::lit_f32(&params, &[params.len() as i64]).unwrap();
+    let tm = lorif::corpus::TopicModel::new(4, 9);
+    let data = lorif::corpus::Dataset::generate(&tm, 8, 64, 10);
+    let ex = GradExtractor::new(&rt, tier, 4, 1).unwrap();
+    let batch = ex.run(&rt, &lit, &data, &(0..8).collect::<Vec<_>>()).unwrap();
+    assert_eq!(batch.losses.len(), 8);
+    assert!(batch.losses.iter().all(|&l| l > 2.0 && l < 8.0));
+    // the kernel's u,v must match the CPU power-iteration oracle run on
+    // the kernel's own G
+    for (l, lg) in batch.layers.iter().enumerate() {
+        let (d1, d2) = ex.proj_dims[l];
+        for e in [0usize, 3, 7] {
+            let g = lorif::linalg::Mat::from_vec(d1, d2, lg.g.row(e).to_vec());
+            assert!(g.frob_norm() > 0.0, "zero gradient at layer {l}");
+            let (u_cpu, v_cpu) = lorif::grads::factorize::poweriter(&g, 1, 8);
+            let rec_cpu = u_cpu.matmul_nt(&v_cpu);
+            let u = lorif::linalg::Mat::from_vec(d1, 1, lg.u.row(e).to_vec());
+            let v = lorif::linalg::Mat::from_vec(d2, 1, lg.v.row(e).to_vec());
+            let rec_kernel = u.matmul_nt(&v);
+            // compare reconstruction errors (direction-stable invariant)
+            let err = |r: &lorif::linalg::Mat| {
+                let mut e2 = 0.0f32;
+                for (x, y) in r.data.iter().zip(&g.data) {
+                    e2 += (x - y) * (x - y);
+                }
+                e2.sqrt() / g.frob_norm()
+            };
+            let (ek, ec) = (err(&rec_kernel), err(&rec_cpu));
+            assert!((ek - ec).abs() < 0.05, "layer {l} ex {e}: kernel {ek} vs cpu {ec}");
+        }
+    }
+}
+
+#[test]
+fn training_reduces_loss_and_is_deterministic() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let tier = Tier::Small;
+    let tm = lorif::corpus::TopicModel::new(4, 2);
+    let data = lorif::corpus::Dataset::generate(&tm, 64, 64, 3);
+    let run = || {
+        let mut trainer = Trainer::new(&rt, tier, tier.spec().init_params(5)).unwrap();
+        let mut rng = lorif::util::prng::Rng::new(6);
+        trainer.train(&rt, &data, 30, 3e-3, &mut rng).unwrap()
+    };
+    let l1 = run();
+    let l2 = run();
+    assert_eq!(l1, l2, "training must be deterministic");
+    assert!(l1.last().unwrap() < &(l1[0] - 0.5), "{:?}", &l1[..3]);
+}
+
+#[test]
+fn full_pipeline_lorif_vs_logra_agree_on_top_proponents() {
+    let _dir = require_artifacts!();
+    let cfg = test_config("pipeline");
+    let p = Pipeline::new(cfg).unwrap();
+    let (train, queries) = p.corpus().unwrap();
+    let params = p.base_params(&train).unwrap();
+    let lit = p.params_literal(&params).unwrap();
+    p.stage1(&lit, &train, Stage1Options::default()).unwrap();
+
+    let qg = p.query_grads(&lit, &queries).unwrap();
+    let lorif = build_store_scorer(&p, Method::Lorif).unwrap();
+    let logra = build_store_scorer(&p, Method::Logra).unwrap();
+    let r1 = QueryEngine::new(lorif, 10).run(&qg).unwrap();
+    let r2 = QueryEngine::new(logra, 10).run(&qg).unwrap();
+
+    // per-query score correlation between LoRIF (approx) and LoGRA
+    // (dense): must be clearly positive
+    let mut mean_rho = 0.0;
+    for q in 0..queries.len() {
+        let rho = lorif::eval::spearman::spearman(r1.scores.row(q), r2.scores.row(q));
+        mean_rho += rho / queries.len() as f64;
+    }
+    assert!(mean_rho > 0.35, "lorif-logra rank correlation too low: {mean_rho}");
+    // the factored index must be much smaller
+    assert!(r1.latency.bytes_read * 4 < r2.latency.bytes_read);
+}
+
+#[test]
+fn graddot_equals_lorif_with_zero_curvature() {
+    let _dir = require_artifacts!();
+    let cfg = test_config("graddot_limit");
+    let p = Pipeline::new(cfg).unwrap();
+    let (train, queries) = p.corpus().unwrap();
+    let params = p.base_params(&train).unwrap();
+    let lit = p.params_literal(&params).unwrap();
+    p.stage1(&lit, &train, Stage1Options::default()).unwrap();
+    let qg = p.query_grads(&lit, &queries).unwrap();
+
+    // graddot on the dense store
+    let graddot = build_store_scorer(&p, Method::GradDot).unwrap();
+    let rd = QueryEngine::new(graddot, 5).run(&qg).unwrap();
+
+    // lorif with weights zeroed (r -> 0 limit) and lambda = 1
+    let (curv, _) = p.stage2_lorif().unwrap();
+    let mut curv = curv;
+    for w in &mut curv.weights {
+        w.iter_mut().for_each(|x| *x = 0.0);
+    }
+    for l in &mut curv.lambdas {
+        *l = 1.0;
+    }
+    let reader = lorif::store::StoreReader::open(&p.factored_base()).unwrap();
+    let mut scorer = lorif::attribution::LorifScorer::new(reader, curv);
+    scorer.prefetch = false;
+    let rl = scorer.score(&qg).unwrap();
+
+    // rank-1 factor dots approximate the dense dots: positive rank corr
+    let mut mean_rho = 0.0;
+    for q in 0..queries.len() {
+        mean_rho += lorif::eval::spearman::spearman(rl.scores.row(q), rd.scores.row(q))
+            / queries.len() as f64;
+    }
+    assert!(mean_rho > 0.3, "zero-curvature lorif vs graddot: {mean_rho}");
+}
+
+#[test]
+fn loss_eval_consistent_with_training_loss() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let tier = Tier::Small;
+    let tm = lorif::corpus::TopicModel::new(4, 2);
+    let data = lorif::corpus::Dataset::generate(&tm, 32, 64, 3);
+    let params = tier.spec().init_params(1);
+    let lit = lorif::runtime::lit_f32(&params, &[params.len() as i64]).unwrap();
+    let le = LossEval::new(&rt, tier).unwrap();
+    let losses = le.losses(&rt, &lit, &data).unwrap();
+    assert_eq!(losses.len(), 32);
+    // untrained model on 64-token vocab: loss near ln(64)=4.16
+    let mean: f32 = losses.iter().sum::<f32>() / 32.0;
+    assert!((mean - 4.16).abs() < 0.5, "{mean}");
+}
+
+#[test]
+fn tail_patch_improves_query_probability_for_true_proponents() {
+    let _dir = require_artifacts!();
+    let mut cfg = test_config("tailpatch");
+    cfg.train_steps = 80;
+    let p = Pipeline::new(cfg).unwrap();
+    let (train, queries) = p.corpus().unwrap();
+    let params = p.base_params(&train).unwrap();
+    // oracle proponents: same-topic training examples
+    let topk: Vec<Vec<usize>> = (0..queries.len())
+        .map(|q| {
+            (0..train.len())
+                .filter(|&t| train.topics[t] == queries.topics[q])
+                .take(8)
+                .collect()
+        })
+        .collect();
+    let scores = lorif::eval::tail_patch(
+        &p,
+        &params,
+        &train,
+        &queries,
+        &topk,
+        lorif::eval::TailPatchProtocol { k: 8, lr: 1e-2 },
+    )
+    .unwrap();
+    let mean: f64 = scores.iter().sum::<f64>() / scores.len() as f64;
+    assert!(mean > 0.0, "oracle tail-patch should be positive: {mean}");
+}

@@ -1,0 +1,345 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The offline vendor set has no proptest, so this file uses an in-repo
+//! randomized-property harness: each property runs over many seeded
+//! random cases; on failure it reports the seed (re-run with
+//! `LORIF_PROP_SEED=<seed>` to reproduce a single case).  No shrinking —
+//! cases are kept small enough to debug directly.
+
+use lorif::linalg::{eigh, qr, rsvd, Chol, Mat};
+use lorif::store::{StoreKind, StoreMeta};
+use lorif::util::bf16;
+use lorif::util::json::Value;
+use lorif::util::prng::Rng;
+
+const CASES: usize = 40;
+
+fn for_each_case(name: &str, mut f: impl FnMut(u64, &mut Rng)) {
+    if let Ok(s) = std::env::var("LORIF_PROP_SEED") {
+        let seed: u64 = s.parse().unwrap();
+        let mut rng = Rng::labeled(seed, name);
+        f(seed, &mut rng);
+        return;
+    }
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::labeled(seed, name);
+        f(seed, &mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// storage invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_store_layout_bijective() {
+    // layer_span offsets tile the record exactly, for random layer sets
+    for_each_case("store-layout", |seed, rng| {
+        let n_layers = 1 + rng.below(6);
+        let layers: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (1 + rng.below(64), 1 + rng.below(64))).collect();
+        let c = 1 + rng.below(4);
+        for kind in [StoreKind::Dense, StoreKind::Factored] {
+            let meta = StoreMeta {
+                kind,
+                tier: "small".into(),
+                f: 4,
+                c,
+                layers: layers.clone(),
+                n_examples: 7,
+            };
+            let mut end = 0;
+            for l in 0..n_layers {
+                let (off, len) = meta.layer_span(l);
+                assert_eq!(off, end, "seed {seed}: layer {l} not contiguous");
+                end = off + len * 2;
+            }
+            assert_eq!(end, meta.bytes_per_example(), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_bf16_roundtrip_error_bound() {
+    // |decode(encode(x)) - x| <= |x| * 2^-8 for all finite x
+    for_each_case("bf16", |seed, rng| {
+        for _ in 0..100 {
+            let x = (rng.normal() * 10f64.powi(rng.below(9) as i32 - 4)) as f32;
+            let y = bf16::bf16_to_f32(bf16::f32_to_bf16(x));
+            assert!(
+                (y - x).abs() <= x.abs() / 256.0 + f32::MIN_POSITIVE,
+                "seed {seed}: {x} -> {y}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_factorization_compression_ratio() {
+    // factored storage < dense storage whenever c < min(d1,d2)/2, and the
+    // ratio matches the paper's min(d1,d2)/2c rule within 2x
+    for_each_case("compression", |seed, rng| {
+        let d1 = 4 + rng.below(60);
+        let d2 = 4 + rng.below(60);
+        let c = 1 + rng.below(d1.min(d2) / 2);
+        let dense = d1 * d2;
+        let fact = c * (d1 + d2);
+        if c <= d1.min(d2) / 2 {
+            let ratio = dense as f64 / fact as f64;
+            let paper = d1.min(d2) as f64 / (2.0 * c as f64);
+            assert!(
+                ratio >= paper / 2.0 && ratio <= paper * 2.5,
+                "seed {seed}: ratio {ratio} vs paper-rule {paper} (d1={d1} d2={d2} c={c})"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// linalg invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qr_orthogonality_and_reconstruction() {
+    for_each_case("qr", |seed, rng| {
+        let m = 5 + rng.below(40);
+        let n = 1 + rng.below(m.min(12));
+        let a = Mat::random_normal(m, n, 1.0, rng);
+        let (q, r) = qr::qr_thin(&a);
+        let qtq = q.matmul_tn(&q);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at(i, j) - want).abs() < 1e-3, "seed {seed}");
+            }
+        }
+        let rec = q.matmul(&r);
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_residual() {
+    for_each_case("chol", |seed, rng| {
+        let n = 2 + rng.below(24);
+        let a = Mat::random_normal(n, n, 1.0, rng);
+        let mut spd = a.matmul_tn(&a);
+        for i in 0..n {
+            *spd.at_mut(i, i) += 1.0;
+        }
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let x = Chol::factor(&spd).unwrap().solve(&b);
+        let ax = spd.matvec(&x);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-2 * (1.0 + b[i].abs()), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_eigh_trace_and_psd() {
+    // trace(A) == sum of eigenvalues; A PSD -> eigenvalues >= 0
+    for_each_case("eigh", |seed, rng| {
+        let n = 2 + rng.below(16);
+        let a = Mat::random_normal(n, n, 1.0, rng);
+        let psd = a.matmul_tn(&a);
+        let (vals, _) = eigh::eigh(&psd);
+        let trace: f32 = (0..n).map(|i| psd.at(i, i)).sum();
+        let sum: f32 = vals.iter().sum();
+        assert!((trace - sum).abs() < 1e-2 * (1.0 + trace.abs()), "seed {seed}");
+        assert!(vals.iter().all(|&v| v > -1e-3), "seed {seed}: {vals:?}");
+    });
+}
+
+#[test]
+fn prop_rsvd_eckart_young_within_slack() {
+    // randomized SVD reconstruction error is within 1.6x of the optimal
+    // rank-r error (standard rSVD guarantee with oversampling + power its)
+    for_each_case("rsvd", |seed, rng| {
+        let n = 12 + rng.below(24);
+        let d = 8 + rng.below(16);
+        let a = Mat::random_normal(n, d, 1.0, rng);
+        let r = 1 + rng.below(d.min(n) / 2);
+        let mut src = rsvd::MatSource { mat: &a, chunk: 7 };
+        let svd = rsvd::rsvd(&mut src, r, 6, 2, seed).unwrap();
+        let rec = svd.train_proj.matmul_nt(&svd.v);
+        let mut err2 = 0.0f32;
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            err2 += (x - y) * (x - y);
+        }
+        let (_, s, _) = eigh::svd_small(&a);
+        let opt2: f32 = s[r..].iter().map(|x| x * x).sum();
+        assert!(
+            err2.sqrt() <= opt2.sqrt() * 1.6 + 1e-3,
+            "seed {seed}: err {} vs opt {} (r={r})",
+            err2.sqrt(),
+            opt2.sqrt()
+        );
+    });
+}
+
+#[test]
+fn prop_woodbury_identity_exact() {
+    // (V S^2 V^T + lam I)^{-1} == I/lam - V diag(w) V^T for orthonormal V
+    for_each_case("woodbury", |seed, rng| {
+        let d = 4 + rng.below(12);
+        let r = 1 + rng.below(d / 2 + 1);
+        let raw = Mat::random_normal(d, r, 1.0, rng);
+        let v = qr::orthonormalize(&raw);
+        let sigma: Vec<f32> = (0..r).map(|_| 0.2 + rng.uniform() as f32 * 3.0).collect();
+        let lam = 0.1 + rng.uniform() as f32;
+        // H = V S^2 V^T + lam I
+        let mut h = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..r {
+                    s += v.at(i, k) * sigma[k] * sigma[k] * v.at(j, k);
+                }
+                *h.at_mut(i, j) = s + if i == j { lam } else { 0.0 };
+            }
+        }
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let direct = Chol::factor(&h).unwrap().solve(&x);
+        // woodbury route
+        let w: Vec<f32> =
+            sigma.iter().map(|&s| s * s / (lam * (lam + s * s))).collect();
+        let vx = v.matvec_t(&x);
+        let mut wood: Vec<f32> = x.iter().map(|&xi| xi / lam).collect();
+        for i in 0..d {
+            let mut corr = 0.0;
+            for k in 0..r {
+                corr += v.at(i, k) * w[k] * vx[k];
+            }
+            wood[i] -= corr;
+        }
+        for i in 0..d {
+            assert!(
+                (direct[i] - wood[i]).abs() < 2e-3 * (1.0 + direct[i].abs()),
+                "seed {seed}: {} vs {}",
+                direct[i],
+                wood[i]
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants (routing / batching / state)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_topk_sorted_and_within_range() {
+    use lorif::attribution::ScoreReport;
+    use lorif::util::timer::PhaseTimer;
+    for_each_case("topk", |seed, rng| {
+        let nq = 1 + rng.below(5);
+        let n = 5 + rng.below(200);
+        let scores = Mat::random_normal(nq, n, 1.0, rng);
+        let rep = ScoreReport { scores, timer: PhaseTimer::new(), bytes_read: 0 };
+        let k = 1 + rng.below(n);
+        let topk = rep.topk(k);
+        for (q, top) in topk.iter().enumerate() {
+            assert_eq!(top.len(), k.min(n), "seed {seed}");
+            for w in top.windows(2) {
+                assert!(
+                    rep.scores.at(q, w[0]) >= rep.scores.at(q, w[1]),
+                    "seed {seed}: not sorted"
+                );
+            }
+            let max = (0..n).map(|i| rep.scores.at(q, i)).fold(f32::MIN, f32::max);
+            assert_eq!(rep.scores.at(q, top[0]), max, "seed {seed}: wrong argmax");
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_batch_padding_stable() {
+    use lorif::corpus::{Dataset, TopicModel};
+    for_each_case("batch-pad", |seed, rng| {
+        let tm = TopicModel::new(4, seed);
+        let ds = Dataset::generate(&tm, 10 + rng.below(30), 16, seed ^ 1);
+        let batch = 4 + rng.below(12);
+        let take = 1 + rng.below(batch);
+        let idx: Vec<usize> = (0..take).map(|_| rng.below(ds.len())).collect();
+        let b = ds.batch(&idx, batch);
+        assert_eq!(b.len(), batch * 16, "seed {seed}");
+        // padding repeats the last valid example
+        let last = idx[idx.len() - 1];
+        for pad in take..batch {
+            assert_eq!(&b[pad * 16..(pad + 1) * 16], ds.example(last), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_spearman_bounds_and_symmetry() {
+    use lorif::eval::spearman::spearman;
+    for_each_case("spearman", |seed, rng| {
+        let n = 3 + rng.below(50);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let r = spearman(&a, &b);
+        assert!((-1.0..=1.0).contains(&r), "seed {seed}: {r}");
+        assert!((spearman(&b, &a) - r).abs() < 1e-12, "seed {seed}: asymmetric");
+        assert!((spearman(&a, &a) - 1.0).abs() < 1e-9, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary() {
+    // random JSON value -> to_string -> parse == identity
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => Value::Num((rng.normal() * 100.0 * 64.0).round() / 64.0),
+            3 => {
+                let n = rng.below(8);
+                Value::Str((0..n).map(|_| "ab\"\\\nπ8".chars().nth(rng.below(7)).unwrap()).collect())
+            }
+            4 => Value::Arr((0..rng.below(4)).map(|_| random_value(rng, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_each_case("json", |seed, rng| {
+        let v = random_value(rng, 3);
+        let text = v.to_string();
+        let back = Value::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {seed}: {text}");
+    });
+}
+
+#[test]
+fn prop_reconstruct_row_rank_additivity() {
+    // reconstruct(u, v, c) == sum_k reconstruct(u_k, v_k, 1)
+    use lorif::curvature::reconstruct_row;
+    for_each_case("reconstruct", |seed, rng| {
+        let d1 = 2 + rng.below(10);
+        let d2 = 2 + rng.below(10);
+        let c = 1 + rng.below(4);
+        let u: Vec<f32> = (0..d1 * c).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..d2 * c).map(|_| rng.normal() as f32).collect();
+        let mut full = vec![0.0f32; d1 * d2];
+        reconstruct_row(&u, &v, d1, d2, c, &mut full);
+        let mut acc = vec![0.0f32; d1 * d2];
+        for k in 0..c {
+            let uk: Vec<f32> = (0..d1).map(|a| u[a * c + k]).collect();
+            let vk: Vec<f32> = (0..d2).map(|b| v[b * c + k]).collect();
+            let mut one = vec![0.0f32; d1 * d2];
+            reconstruct_row(&uk, &vk, d1, d2, 1, &mut one);
+            for (a, o) in acc.iter_mut().zip(&one) {
+                *a += o;
+            }
+        }
+        for (x, y) in full.iter().zip(&acc) {
+            assert!((x - y).abs() < 1e-4, "seed {seed}");
+        }
+    });
+}
