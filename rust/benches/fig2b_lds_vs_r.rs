@@ -12,7 +12,6 @@ use lorif::bench_support::{fmt_pm, lds_protocol, Session, Table};
 use lorif::curvature::TruncatedCurvature;
 use lorif::eval::LdsActuals;
 use lorif::index::Stage1Options;
-use lorif::store::StoreReader;
 
 fn main() -> anyhow::Result<()> {
     let s = Session::new();
@@ -41,13 +40,13 @@ fn main() -> anyhow::Result<()> {
         for r in [8, 32, 128, 384] {
             // curvature from the DENSE store: this panel isolates the
             // truncated-SVD approximation, factorization unused
-            let reader = StoreReader::open(&p.dense_base())?;
+            let set = lorif::store::ShardSet::open(&p.dense_base())?;
             let curv = TruncatedCurvature::build(
-                &reader, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
+                &set, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
                 p.cfg.lambda_factor, p.cfg.seed,
             )?;
             let mut scorer =
-                DenseWoodburyScorer::new(StoreReader::open(&p.dense_base())?, curv);
+                DenseWoodburyScorer::new(lorif::store::ShardSet::open(&p.dense_base())?, curv);
             let rep = scorer.score(&qg)?;
             table.row(vec![
                 f.to_string(),

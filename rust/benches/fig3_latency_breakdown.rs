@@ -11,7 +11,7 @@ use lorif::attribution::ablation::FactoredDenseKScorer;
 use lorif::attribution::Scorer;
 use lorif::bench_support::{fmt_mb, fmt_s, Session, Table};
 use lorif::index::Stage1Options;
-use lorif::store::StoreReader;
+use lorif::store::ShardSet;
 
 fn main() -> anyhow::Result<()> {
     let s = Session::new();
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
 
     let (dense_curv, _) = p.stage2_dense()?;
     let mut rank1 =
-        FactoredDenseKScorer::new(StoreReader::open(&p.factored_base())?, dense_curv);
+        FactoredDenseKScorer::new(ShardSet::open(&p.factored_base())?, dense_curv);
     run("rank-1 factorization only", &mut rank1)?;
 
     let mut lorif = build_store_scorer(&p, Method::Lorif)?;
@@ -64,8 +64,8 @@ fn main() -> anyhow::Result<()> {
     // re-projecting reconstructed gradients at query time — removes the
     // O(N D r) term that dominates compute when r > Nq
     let (curv, _) = p.stage2_lorif()?;
-    let mut cached = lorif::attribution::LorifScorer::new(
-        StoreReader::open(&p.factored_base())?, curv);
+    let mut cached =
+        lorif::attribution::LorifScorer::new(ShardSet::open(&p.factored_base())?, curv);
     cached.cached_projections = true;
     run("Ours + cached projections", &mut cached)?;
 

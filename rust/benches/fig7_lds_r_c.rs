@@ -10,7 +10,6 @@ use lorif::bench_support::{fmt_pm, lds_protocol, Session, Table};
 use lorif::curvature::TruncatedCurvature;
 use lorif::eval::LdsActuals;
 use lorif::index::Stage1Options;
-use lorif::store::StoreReader;
 
 fn main() -> anyhow::Result<()> {
     let s = Session::new();
@@ -25,13 +24,15 @@ fn main() -> anyhow::Result<()> {
         let qg = p.query_grads(&lit, &queries)?;
         let actuals = LdsActuals::get(&p, &lds_protocol(), &train, &queries)?;
         for r in [8, 32, 128, 384] {
-            let reader = StoreReader::open(&p.factored_base())?;
+            let set = lorif::store::ShardSet::open(&p.factored_base())?;
             let curv = TruncatedCurvature::build(
-                &reader, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
+                &set, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
                 p.cfg.lambda_factor, p.cfg.seed,
             )?;
-            let mut scorer =
-                lorif::attribution::LorifScorer::new(StoreReader::open(&p.factored_base())?, curv);
+            let mut scorer = lorif::attribution::LorifScorer::new(
+                lorif::store::ShardSet::open(&p.factored_base())?,
+                curv,
+            );
             let rep = scorer.score(&qg)?;
             table.row(vec![
                 f.to_string(),

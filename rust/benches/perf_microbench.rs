@@ -2,9 +2,10 @@
 //!
 //! Measures: bf16 decode throughput, blocked GEMM GFLOP/s, factor-dot
 //! scoring throughput, reconstruct+project throughput, store streaming
-//! bandwidth (sync vs prefetch), and the XLA-executable scorer vs the
-//! Rust-native scorer.  The before/after log lives in EXPERIMENTS.md
-//! §Perf.
+//! bandwidth (sync vs prefetch), sharded multi-threaded scoring vs the
+//! single-reader monolithic path, and (with `--features xla`) the
+//! XLA-executable scorer vs the Rust-native scorer.  The before/after
+//! log lives in EXPERIMENTS.md §Perf.
 
 use std::time::Instant;
 
@@ -113,6 +114,7 @@ fn main() -> anyhow::Result<()> {
                 c: 1,
                 layers: layers.clone(),
                 n_examples: 0,
+                shards: None,
             };
             let mut w = StoreWriter::create(&base, meta)?;
             let lg: Vec<LayerGrads> = layers
@@ -147,35 +149,139 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // XLA scorer artifact vs Rust-native scorer (single layer shape)
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let rt = lorif::runtime::Runtime::new(std::path::Path::new("artifacts"))?;
-        if let Ok(exe) = rt.load("score_16x48_c1_r128") {
-            let (b, d1, d2, c, r) = (512usize, 16usize, 48usize, 1usize, 128usize);
-            let mk = |n: usize, rng: &mut Rng| -> Vec<f32> {
-                let mut v = vec![0.0f32; n];
-                rng.fill_normal(&mut v, 1.0);
-                v
-            };
-            let uq = lorif::runtime::lit_f32(&mk(d1 * c, &mut rng), &[d1 as i64, c as i64])?;
-            let vq = lorif::runtime::lit_f32(&mk(d2 * c, &mut rng), &[d2 as i64, c as i64])?;
-            let bu = lorif::runtime::lit_f32(&mk(b * d1 * c, &mut rng), &[b as i64, d1 as i64, c as i64])?;
-            let bv = lorif::runtime::lit_f32(&mk(b * d2 * c, &mut rng), &[b as i64, d2 as i64, c as i64])?;
-            let gq = lorif::runtime::lit_f32(&mk(r, &mut rng), &[r as i64])?;
-            let gt = lorif::runtime::lit_f32(&mk(b * r, &mut rng), &[b as i64, r as i64])?;
-            let w = lorif::runtime::lit_f32(&mk(r, &mut rng), &[r as i64])?;
-            let lam = lorif::runtime::lit_f32(&[0.5], &[1])?;
-            let t = time(20, || {
-                let _ = rt.exec(&exe, &[&uq, &vq, &bu, &bv, &gq, &gt, &w, &lam]).unwrap();
-            });
-            println!(
-                "XLA pallas scorer (B={b}, one layer): {:.1} Mpairs/s ({:.3} ms)",
-                b as f64 / t / 1e6,
-                t * 1e3
-            );
+    // sharded multi-threaded scoring vs the single-reader monolithic path
+    // (GradDot over identical dense records; Fig 3's I/O-bound pass)
+    {
+        use lorif::attribution::graddot::GradDotScorer;
+        use lorif::attribution::{QueryGrads, QueryLayer, Scorer};
+        use lorif::runtime::{ExtractBatch, LayerGrads};
+        use lorif::store::{ShardSet, ShardedWriter, StoreKind, StoreMeta, StoreWriter};
+
+        let dir = std::env::temp_dir().join("lorif_perf_sharded");
+        std::fs::create_dir_all(&dir)?;
+        let layers = vec![(16usize, 48usize), (16, 16), (16, 32), (32, 16)];
+        let (n, nq) = (4096usize, 32usize);
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let shards = cores.clamp(2, 8);
+
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: layers.clone(),
+            n_examples: 0,
+            shards: None,
+        };
+        let lg: Vec<LayerGrads> = layers
+            .iter()
+            .map(|&(d1, d2)| LayerGrads {
+                g: Mat::random_normal(n, d1 * d2, 1.0, &mut rng),
+                u: Mat::zeros(n, d1),
+                v: Mat::zeros(n, d2),
+            })
+            .collect();
+        let batch = ExtractBatch { losses: vec![0.0; n], layers: lg, valid: n };
+
+        let mono_base = dir.join("mono");
+        let mut w = StoreWriter::create(&mono_base, meta.clone())?;
+        w.append(&batch)?;
+        w.finalize()?;
+        let shard_base = dir.join("sharded");
+        let mut w = ShardedWriter::create(&shard_base, meta, shards, n)?;
+        w.append(&batch)?;
+        w.finalize()?;
+
+        let qlayers: Vec<QueryLayer> = layers
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::random_normal(nq, d1 * d2, 1.0, &mut rng),
+                u: Mat::zeros(nq, d1),
+                v: Mat::zeros(nq, d2),
+            })
+            .collect();
+        let qg = QueryGrads {
+            n_query: nq,
+            c: 1,
+            proj_dims: layers.clone(),
+            layers: qlayers,
+        };
+
+        let mut mono = GradDotScorer::new(ShardSet::open(&mono_base)?);
+        mono.score_threads = 1;
+        let mut sharded = GradDotScorer::new(ShardSet::open(&shard_base)?);
+        sharded.score_threads = 0; // all cores
+
+        // correctness first: identical records must score identically
+        let ra = mono.score(&qg)?;
+        let rb = sharded.score(&qg)?;
+        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+            assert!((a - b).abs() <= 1e-4 * scale.max(1.0), "{a} vs {b}");
         }
-    } else {
-        println!("(artifacts missing: skipping XLA scorer comparison)");
+
+        let t_mono = time(3, || {
+            let _ = mono.score(&qg).unwrap();
+        });
+        let t_shard = time(3, || {
+            let _ = sharded.score(&qg).unwrap();
+        });
+        println!(
+            "graddot scoring {n}x{nq}: monolithic 1-thread {:.1} ms | {shards} shards \
+             on {cores} cores {:.1} ms | speedup {:.2}x",
+            t_mono * 1e3,
+            t_shard * 1e3,
+            t_mono / t_shard
+        );
     }
+
+    xla_scorer_bench(&mut rng);
     Ok(())
+}
+
+/// XLA scorer artifact vs Rust-native scorer (single layer shape).
+#[cfg(feature = "xla")]
+fn xla_scorer_bench(rng: &mut Rng) {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("(artifacts missing: skipping XLA scorer comparison)");
+        return;
+    }
+    let mut run = || -> anyhow::Result<()> {
+        let rt = lorif::runtime::Runtime::new(std::path::Path::new("artifacts"))?;
+        let exe = match rt.load("score_16x48_c1_r128") {
+            Ok(exe) => exe,
+            Err(_) => return Ok(()),
+        };
+        let (b, d1, d2, c, r) = (512usize, 16usize, 48usize, 1usize, 128usize);
+        let mk = |n: usize, rng: &mut Rng| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        };
+        let uq = lorif::runtime::lit_f32(&mk(d1 * c, rng), &[d1 as i64, c as i64])?;
+        let vq = lorif::runtime::lit_f32(&mk(d2 * c, rng), &[d2 as i64, c as i64])?;
+        let bu = lorif::runtime::lit_f32(&mk(b * d1 * c, rng), &[b as i64, d1 as i64, c as i64])?;
+        let bv = lorif::runtime::lit_f32(&mk(b * d2 * c, rng), &[b as i64, d2 as i64, c as i64])?;
+        let gq = lorif::runtime::lit_f32(&mk(r, rng), &[r as i64])?;
+        let gt = lorif::runtime::lit_f32(&mk(b * r, rng), &[b as i64, r as i64])?;
+        let w = lorif::runtime::lit_f32(&mk(r, rng), &[r as i64])?;
+        let lam = lorif::runtime::lit_f32(&[0.5], &[1])?;
+        let t = time(20, || {
+            let _ = rt.exec(&exe, &[&uq, &vq, &bu, &bv, &gq, &gt, &w, &lam]).unwrap();
+        });
+        println!(
+            "XLA pallas scorer (B={b}, one layer): {:.1} Mpairs/s ({:.3} ms)",
+            b as f64 / t / 1e6,
+            t * 1e3
+        );
+        Ok(())
+    };
+    if let Err(e) = run() {
+        println!("(XLA scorer comparison failed: {e})");
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_scorer_bench(_rng: &mut Rng) {
+    println!("(built without the xla feature: skipping XLA scorer comparison)");
 }

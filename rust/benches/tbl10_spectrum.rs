@@ -13,7 +13,6 @@ use lorif::bench_support::{Session, Table};
 use lorif::index::Stage1Options;
 use lorif::linalg::eigh;
 use lorif::model::spec::{Module, Tier};
-use lorif::store::StoreReader;
 
 fn spectrum_evr(evals_desc: &[f32], frac: f64) -> f64 {
     let total: f64 = evals_desc.iter().map(|&x| x.max(0.0) as f64).sum();
@@ -37,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         let (p, train, _, params) = s.prepared(f, 1, 64)?;
         let lit = p.params_literal(&params)?;
         p.stage1(&lit, &train, Stage1Options::default())?;
-        let reader = StoreReader::open(&p.dense_base())?;
+        let reader = lorif::store::ShardSet::open(&p.dense_base())?;
         let n = 192.min(reader.meta.n_examples);
         let chunk = reader.read_range(0, n)?;
         let layers = p.cfg.tier.spec().tracked_layers();

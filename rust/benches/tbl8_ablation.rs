@@ -16,7 +16,6 @@ use lorif::attribution::Scorer;
 use lorif::bench_support::{fmt_mb, fmt_pm, fmt_s, lds_protocol, Session, Table};
 use lorif::eval::LdsActuals;
 use lorif::index::Stage1Options;
-use lorif::store::StoreReader;
 
 fn main() -> anyhow::Result<()> {
     let s = Session::new();
@@ -35,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         let row = match p.stage2_dense() {
             Ok((curv, _)) => {
                 let mut sc =
-                    FactoredDenseKScorer::new(StoreReader::open(&p.factored_base())?, curv);
+                    FactoredDenseKScorer::new(lorif::store::ShardSet::open(&p.factored_base())?, curv);
                 let rep = sc.score(&qg)?;
                 vec![
                     "LoRIF w/o truncated SVD".into(),
@@ -54,12 +53,12 @@ fn main() -> anyhow::Result<()> {
         table.row(row);
 
         // w/o rank factorization (dense + Woodbury)
-        let reader = StoreReader::open(&p.dense_base())?;
+        let set = lorif::store::ShardSet::open(&p.dense_base())?;
         let curv = lorif::curvature::TruncatedCurvature::build(
-            &reader, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
+            &set, r, p.cfg.rsvd_oversample, p.cfg.rsvd_power_iters,
             p.cfg.lambda_factor, p.cfg.seed,
         )?;
-        let mut sc = DenseWoodburyScorer::new(StoreReader::open(&p.dense_base())?, curv);
+        let mut sc = DenseWoodburyScorer::new(lorif::store::ShardSet::open(&p.dense_base())?, curv);
         let rep = sc.score(&qg)?;
         table.row(vec![
             "LoRIF w/o factorization".into(),

@@ -11,7 +11,6 @@ use lorif::grads::factorize;
 use lorif::index::Stage1Options;
 use lorif::linalg::Mat;
 use lorif::model::spec::{Module, Tier};
-use lorif::store::StoreReader;
 
 fn main() -> anyhow::Result<()> {
     let mut table = Table::new(
@@ -24,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         let (p, train, _, params) = s.prepared(f, 1, 64)?;
         let lit = p.params_literal(&params)?;
         p.stage1(&lit, &train, Stage1Options::default())?;
-        let reader = StoreReader::open(&p.dense_base())?;
+        let reader = lorif::store::ShardSet::open(&p.dense_base())?;
         let sample = 256.min(reader.meta.n_examples);
         let chunk = reader.read_range(0, sample)?;
 

@@ -1,17 +1,32 @@
 //! High-level composition used by the CLI, examples, and benches:
 //! build any paper method end-to-end from a `Pipeline`.
+//!
+//! The `Method` enum and its parsing are plain CPU code; everything that
+//! needs the PJRT runtime (the builders below) sits behind the `xla`
+//! cargo feature.
 
+#[cfg(feature = "xla")]
 use crate::attribution::ekfac::EkfacScorer;
+#[cfg(feature = "xla")]
 use crate::attribution::graddot::GradDotScorer;
+#[cfg(feature = "xla")]
 use crate::attribution::logra::LograScorer;
+#[cfg(feature = "xla")]
 use crate::attribution::lorif::LorifScorer;
+#[cfg(feature = "xla")]
 use crate::attribution::repsim::{EmbedStore, RepSimScorer};
+#[cfg(feature = "xla")]
 use crate::attribution::trackstar::TrackStarScorer;
+#[cfg(feature = "xla")]
 use crate::attribution::Scorer;
+#[cfg(feature = "xla")]
 use crate::corpus::Dataset;
+#[cfg(feature = "xla")]
 use crate::index::Pipeline;
+#[cfg(feature = "xla")]
 use crate::runtime::{Embedder, GradExtractor};
-use crate::store::StoreReader;
+#[cfg(feature = "xla")]
+use crate::store::ShardSet;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -52,31 +67,43 @@ impl Method {
     }
 }
 
-/// Build a boxed scorer for the simple (store-backed) methods.
+/// Build a boxed scorer for the simple (store-backed) methods.  Opens
+/// the store as a `ShardSet` (v1 or v2 layout) and hands the configured
+/// shard-scoring thread count through.
 /// EK-FAC and RepSim have extra dependencies — see the dedicated fns.
+#[cfg(feature = "xla")]
 pub fn build_store_scorer(
     p: &Pipeline,
     method: Method,
 ) -> anyhow::Result<Box<dyn Scorer>> {
+    let threads = p.cfg.score_threads;
     match method {
         Method::Lorif => {
             let (curv, _) = p.stage2_lorif()?;
-            let reader = StoreReader::open(&p.factored_base())?;
-            Ok(Box::new(LorifScorer::new(reader, curv)))
+            let shards = ShardSet::open(&p.factored_base())?;
+            let mut s = LorifScorer::new(shards, curv);
+            s.score_threads = threads;
+            Ok(Box::new(s))
         }
         Method::Logra => {
             let (curv, _) = p.stage2_dense()?;
-            let reader = StoreReader::open(&p.dense_base())?;
-            Ok(Box::new(LograScorer::new(reader, curv)))
+            let shards = ShardSet::open(&p.dense_base())?;
+            let mut s = LograScorer::new(shards, curv);
+            s.score_threads = threads;
+            Ok(Box::new(s))
         }
         Method::GradDot => {
-            let reader = StoreReader::open(&p.dense_base())?;
-            Ok(Box::new(GradDotScorer::new(reader)))
+            let shards = ShardSet::open(&p.dense_base())?;
+            let mut s = GradDotScorer::new(shards);
+            s.score_threads = threads;
+            Ok(Box::new(s))
         }
         Method::TrackStar => {
             let (curv, _) = p.stage2_dense()?;
-            let reader = StoreReader::open(&p.dense_base())?;
-            Ok(Box::new(TrackStarScorer::new(reader, curv)))
+            let shards = ShardSet::open(&p.dense_base())?;
+            let mut s = TrackStarScorer::new(shards, curv);
+            s.score_threads = threads;
+            Ok(Box::new(s))
         }
         Method::RepSim | Method::Ekfac => {
             anyhow::bail!("use build_repsim_scorer / build_ekfac_scorer for {method:?}")
@@ -85,6 +112,7 @@ pub fn build_store_scorer(
 }
 
 /// RepSim needs query embeddings computed with the same model.
+#[cfg(feature = "xla")]
 pub fn build_repsim_scorer(
     p: &Pipeline,
     params: &xla::Literal,
@@ -98,6 +126,7 @@ pub fn build_repsim_scorer(
 /// EK-FAC: covariance fit + eigenvalue-correction pass (stage 1'), then
 /// the recomputation-based scorer.  `corr_examples` bounds the correction
 /// pass (paper uses the full corpus; we default to min(n, 512)).
+#[cfg(feature = "xla")]
 pub fn build_ekfac_scorer<'a>(
     p: &'a Pipeline,
     extractor_f1: &'a GradExtractor,
@@ -129,6 +158,7 @@ pub fn build_ekfac_scorer<'a>(
 }
 
 /// Ensure the embedding store exists (stage 1 for RepSim).
+#[cfg(feature = "xla")]
 pub fn ensure_embeddings(
     p: &Pipeline,
     params: &xla::Literal,

@@ -13,19 +13,19 @@
 use super::{QueryGrads, ScoreReport, Scorer};
 use crate::curvature::{reconstruct_row, DenseCurvature, TruncatedCurvature};
 use crate::linalg::Mat;
-use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::store::{ChunkLayer, ShardSet, StoreKind};
 use crate::util::timer::PhaseTimer;
 
 pub struct DenseWoodburyScorer {
-    pub reader: StoreReader,
+    pub shards: ShardSet,
     pub curv: TruncatedCurvature,
     pub prefetch: bool,
     pub chunk_size: usize,
 }
 
 impl DenseWoodburyScorer {
-    pub fn new(reader: StoreReader, curv: TruncatedCurvature) -> Self {
-        DenseWoodburyScorer { reader, curv, prefetch: true, chunk_size: 512 }
+    pub fn new(shards: ShardSet, curv: TruncatedCurvature) -> Self {
+        DenseWoodburyScorer { shards, curv, prefetch: true, chunk_size: 512 }
     }
 }
 
@@ -35,12 +35,12 @@ impl Scorer for DenseWoodburyScorer {
     }
 
     fn index_bytes(&self) -> u64 {
-        self.reader.meta.total_bytes()
+        self.shards.meta.total_bytes()
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(self.reader.meta.kind == StoreKind::Dense, "needs dense store");
-        let n = self.reader.meta.n_examples;
+        anyhow::ensure!(self.shards.meta.kind == StoreKind::Dense, "needs dense store");
+        let n = self.shards.meta.n_examples;
         let nq = queries.n_query;
         let n_layers = queries.n_layers();
         let mut timer = PhaseTimer::new();
@@ -60,7 +60,7 @@ impl Scorer for DenseWoodburyScorer {
         });
         let mut scores = Mat::zeros(nq, n);
         let mut compute = std::time::Duration::ZERO;
-        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
+        let (io_time, bytes) = self.shards.stream(self.chunk_size, self.prefetch, |chunk| {
             let t0 = std::time::Instant::now();
             for l in 0..n_layers {
                 let g = match &chunk.layers[l] {
@@ -89,15 +89,15 @@ impl Scorer for DenseWoodburyScorer {
 }
 
 pub struct FactoredDenseKScorer {
-    pub reader: StoreReader,
+    pub shards: ShardSet,
     pub curv: DenseCurvature,
     pub prefetch: bool,
     pub chunk_size: usize,
 }
 
 impl FactoredDenseKScorer {
-    pub fn new(reader: StoreReader, curv: DenseCurvature) -> Self {
-        FactoredDenseKScorer { reader, curv, prefetch: true, chunk_size: 512 }
+    pub fn new(shards: ShardSet, curv: DenseCurvature) -> Self {
+        FactoredDenseKScorer { shards, curv, prefetch: true, chunk_size: 512 }
     }
 }
 
@@ -107,13 +107,13 @@ impl Scorer for FactoredDenseKScorer {
     }
 
     fn index_bytes(&self) -> u64 {
-        self.reader.meta.total_bytes()
+        self.shards.meta.total_bytes()
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(self.reader.meta.kind == StoreKind::Factored, "needs factored store");
-        let c = self.reader.meta.c;
-        let n = self.reader.meta.n_examples;
+        anyhow::ensure!(self.shards.meta.kind == StoreKind::Factored, "needs factored store");
+        let c = self.shards.meta.c;
+        let n = self.shards.meta.n_examples;
         let nq = queries.n_query;
         let n_layers = queries.n_layers();
         let mut timer = PhaseTimer::new();
@@ -126,10 +126,10 @@ impl Scorer for FactoredDenseKScorer {
         let mut scores = Mat::zeros(nq, n);
         let mut compute = std::time::Duration::ZERO;
         let mut scratch: Vec<f32> = Vec::new();
-        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
+        let (io_time, bytes) = self.shards.stream(self.chunk_size, self.prefetch, |chunk| {
             let t0 = std::time::Instant::now();
             for l in 0..n_layers {
-                let (d1, d2) = self.reader.meta.layers[l];
+                let (d1, d2) = self.shards.meta.layers[l];
                 let (u, v) = match &chunk.layers[l] {
                     ChunkLayer::Factored { u, v } => (u, v),
                     _ => anyhow::bail!("expected factored chunk"),
@@ -163,16 +163,17 @@ mod tests {
         // with r ~= min(N, D) the Woodbury route must equal the dense
         // Cholesky route (the algebraic identity behind §3.2)
         let fx = make_fixture(20, 2, &[(4, 4)], 1, StoreKind::Dense, "abl_full_rank");
-        let reader = StoreReader::open(&fx.base).unwrap();
-        let tsvd = TruncatedCurvature::build(&reader, 15, 5, 4, 0.1, 0).unwrap();
+        let set = crate::store::ShardSet::open(&fx.base).unwrap();
+        let tsvd = TruncatedCurvature::build(&set, 15, 5, 4, 0.1, 0).unwrap();
         let lambda_t = tsvd.lambdas[0];
-        let mut a = DenseWoodburyScorer::new(StoreReader::open(&fx.base).unwrap(), tsvd);
+        let mut a = DenseWoodburyScorer::new(crate::store::ShardSet::open(&fx.base).unwrap(), tsvd);
         let ra = a.score(&fx.queries).unwrap();
 
         // dense reference with the SAME lambda
-        let dense = DenseCurvature::build(&StoreReader::open(&fx.base).unwrap(), 0.1).unwrap();
+        let dense =
+            DenseCurvature::build(&crate::store::ShardSet::open(&fx.base).unwrap(), 0.1).unwrap();
         // rebuild with matched lambda: reconstruct Gram from store
-        let chunk = StoreReader::open(&fx.base).unwrap().read_range(0, 20).unwrap();
+        let chunk = crate::store::ShardSet::open(&fx.base).unwrap().read_range(0, 20).unwrap();
         let g = chunk.layers[0].dense().clone();
         let mut gram = g.matmul_tn(&g);
         for i in 0..gram.rows {
@@ -203,15 +204,16 @@ mod tests {
         // factorization drops — and is *measured* by the Table 8 bench,
         // not asserted here.
         let fx = make_fixture(25, 2, &[(5, 6)], 2, StoreKind::Factored, "abl_fdk");
-        let curv = DenseCurvature::build(&StoreReader::open(&fx.base).unwrap(), 0.1).unwrap();
+        let curv =
+            DenseCurvature::build(&crate::store::ShardSet::open(&fx.base).unwrap(), 0.1).unwrap();
         let lambda = curv.lambdas[0];
-        let mut fdk = FactoredDenseKScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        let mut fdk = FactoredDenseKScorer::new(crate::store::ShardSet::open(&fx.base).unwrap(), curv);
         fdk.chunk_size = 7;
         let ra = fdk.score(&fx.queries).unwrap();
 
         // direct reference from the stored factors
-        let reader = StoreReader::open(&fx.base).unwrap();
-        let chunk = reader.read_range(0, 25).unwrap();
+        let set = crate::store::ShardSet::open(&fx.base).unwrap();
+        let chunk = set.read_range(0, 25).unwrap();
         let (u, v) = chunk.layers[0].factors();
         let mut g = Mat::zeros(25, 30);
         for t in 0..25 {

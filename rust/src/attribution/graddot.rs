@@ -1,21 +1,25 @@
 //! GradDot baseline (Charpiat et al. 2019 / TracIn-style): plain dot
 //! products of projected gradients — the identity-curvature limit of
 //! Eq. (3), equivalently LoRIF with r = 0 (Fig 2b's leftmost point).
+//! Streams per shard on the worker pool like the other store scorers.
 
 use super::{QueryGrads, ScoreReport, Scorer};
 use crate::linalg::Mat;
-use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::query::parallel::{self, ShardScores};
+use crate::store::{ChunkLayer, ShardSet, StoreKind};
 use crate::util::timer::PhaseTimer;
 
 pub struct GradDotScorer {
-    pub reader: StoreReader,
+    pub shards: ShardSet,
     pub prefetch: bool,
     pub chunk_size: usize,
+    /// worker threads for shard scoring (0 = all cores)
+    pub score_threads: usize,
 }
 
 impl GradDotScorer {
-    pub fn new(reader: StoreReader) -> GradDotScorer {
-        GradDotScorer { reader, prefetch: true, chunk_size: 512 }
+    pub fn new(shards: ShardSet) -> GradDotScorer {
+        GradDotScorer { shards, prefetch: true, chunk_size: 512, score_threads: 0 }
     }
 }
 
@@ -25,39 +29,51 @@ impl Scorer for GradDotScorer {
     }
 
     fn index_bytes(&self) -> u64 {
-        self.reader.meta.total_bytes()
+        self.shards.meta.total_bytes()
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
         anyhow::ensure!(
-            self.reader.meta.kind == StoreKind::Dense,
+            self.shards.meta.kind == StoreKind::Dense,
             "GradDot scorer needs a dense store"
         );
-        let n = self.reader.meta.n_examples;
+        let n = self.shards.meta.n_examples;
         let nq = queries.n_query;
         let mut timer = PhaseTimer::new();
-        let mut scores = Mat::zeros(nq, n);
-        let mut compute = std::time::Duration::ZERO;
-        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
-            let t0 = std::time::Instant::now();
-            for (l, layer) in chunk.layers.iter().enumerate() {
-                let g = match layer {
-                    ChunkLayer::Dense { g } => g,
-                    _ => anyhow::bail!("expected dense chunk"),
-                };
-                let part = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
-                for nn in 0..chunk.count {
-                    let row = part.row(nn);
-                    for q in 0..nq {
-                        *scores.at_mut(q, chunk.start + nn) += row[q];
+        let chunk_size = self.chunk_size;
+        // with multiple shard workers the workers themselves overlap I/O
+        // and compute, so per-shard prefetch threads would only
+        // oversubscribe the cores; prefetch only on the 1-worker path
+        let workers =
+            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
+        let prefetch = self.prefetch && workers <= 1;
+        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
+            let shard_start = reader.start;
+            let mut local = Mat::zeros(nq, reader.count);
+            let mut compute = std::time::Duration::ZERO;
+            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
+                let t0 = std::time::Instant::now();
+                for (l, layer) in chunk.layers.iter().enumerate() {
+                    let g = match layer {
+                        ChunkLayer::Dense { g } => g,
+                        _ => anyhow::bail!("expected dense chunk"),
+                    };
+                    let part = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
+                    for nn in 0..chunk.count {
+                        let row = part.row(nn);
+                        let col = chunk.start - shard_start + nn;
+                        for q in 0..nq {
+                            *local.at_mut(q, col) += row[q];
+                        }
                     }
                 }
-            }
-            compute += t0.elapsed();
-            Ok(())
+                compute += t0.elapsed();
+                Ok(())
+            })?;
+            Ok(ShardScores { start: shard_start, scores: local, io, compute, bytes })
         })?;
-        timer.add("load", io_time);
-        timer.add("compute", compute);
+        let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
+        timer.merge(&shard_timer);
         Ok(ScoreReport { scores, timer, bytes_read: bytes })
     }
 }
@@ -70,7 +86,7 @@ mod tests {
     #[test]
     fn matches_plain_dot() {
         let fx = make_fixture(15, 2, &[(4, 4), (3, 5)], 1, StoreKind::Dense, "graddot");
-        let mut scorer = GradDotScorer::new(StoreReader::open(&fx.base).unwrap());
+        let mut scorer = GradDotScorer::new(ShardSet::open(&fx.base).unwrap());
         scorer.chunk_size = 4;
         let report = scorer.score(&fx.queries).unwrap();
         let scale = report.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));

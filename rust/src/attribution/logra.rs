@@ -4,24 +4,28 @@
 //! Gauss–Newton inverse (paper Eq. 3): queries are preconditioned once
 //! per layer by solving `K x = g_q` (Cholesky), then every training
 //! example contributes a D-dim dot product — the O(D)-per-pair I/O and
-//! compute profile that Fig 3 shows is I/O-bound.
+//! compute profile that Fig 3 shows is I/O-bound.  Like LoRIF, the
+//! streaming pass runs per shard on the worker pool.
 
 use super::{QueryGrads, ScoreReport, Scorer};
 use crate::curvature::DenseCurvature;
 use crate::linalg::Mat;
-use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::query::parallel::{self, ShardScores};
+use crate::store::{ChunkLayer, ShardSet, StoreKind};
 use crate::util::timer::PhaseTimer;
 
 pub struct LograScorer {
-    pub reader: StoreReader,
+    pub shards: ShardSet,
     pub curv: DenseCurvature,
     pub prefetch: bool,
     pub chunk_size: usize,
+    /// worker threads for shard scoring (0 = all cores)
+    pub score_threads: usize,
 }
 
 impl LograScorer {
-    pub fn new(reader: StoreReader, curv: DenseCurvature) -> LograScorer {
-        LograScorer { reader, curv, prefetch: true, chunk_size: 512 }
+    pub fn new(shards: ShardSet, curv: DenseCurvature) -> LograScorer {
+        LograScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
     }
 }
 
@@ -31,15 +35,15 @@ impl Scorer for LograScorer {
     }
 
     fn index_bytes(&self) -> u64 {
-        self.reader.meta.total_bytes()
+        self.shards.meta.total_bytes()
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
         anyhow::ensure!(
-            self.reader.meta.kind == StoreKind::Dense,
+            self.shards.meta.kind == StoreKind::Dense,
             "LoGRA scorer needs a dense store"
         );
-        let n = self.reader.meta.n_examples;
+        let n = self.shards.meta.n_examples;
         let nq = queries.n_query;
         let n_layers = queries.n_layers();
         let mut timer = PhaseTimer::new();
@@ -51,29 +55,40 @@ impl Scorer for LograScorer {
                 .collect()
         });
 
-        let mut scores = Mat::zeros(nq, n);
-        let mut compute = std::time::Duration::ZERO;
-        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
-            let t0 = std::time::Instant::now();
-            for l in 0..n_layers {
-                let g = match &chunk.layers[l] {
-                    ChunkLayer::Dense { g } => g,
-                    _ => anyhow::bail!("expected dense chunk"),
-                };
-                let part = g.matmul_nt(&pre[l]); // (B, Nq)
-                for nn in 0..chunk.count {
-                    let row = part.row(nn);
-                    let global = chunk.start + nn;
-                    for q in 0..nq {
-                        *scores.at_mut(q, global) += row[q];
+        let chunk_size = self.chunk_size;
+        // with multiple shard workers the workers themselves overlap I/O
+        // and compute, so per-shard prefetch threads would only
+        // oversubscribe the cores; prefetch only on the 1-worker path
+        let workers =
+            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
+        let prefetch = self.prefetch && workers <= 1;
+        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
+            let shard_start = reader.start;
+            let mut local = Mat::zeros(nq, reader.count);
+            let mut compute = std::time::Duration::ZERO;
+            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
+                let t0 = std::time::Instant::now();
+                for (l, pre_l) in pre.iter().enumerate() {
+                    let g = match &chunk.layers[l] {
+                        ChunkLayer::Dense { g } => g,
+                        _ => anyhow::bail!("expected dense chunk"),
+                    };
+                    let part = g.matmul_nt(pre_l); // (B, Nq)
+                    for nn in 0..chunk.count {
+                        let row = part.row(nn);
+                        let col = chunk.start - shard_start + nn;
+                        for q in 0..nq {
+                            *local.at_mut(q, col) += row[q];
+                        }
                     }
                 }
-            }
-            compute += t0.elapsed();
-            Ok(())
+                compute += t0.elapsed();
+                Ok(())
+            })?;
+            Ok(ShardScores { start: shard_start, scores: local, io, compute, bytes })
         })?;
-        timer.add("load", io_time);
-        timer.add("compute", compute);
+        let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
+        timer.merge(&shard_timer);
         Ok(ScoreReport { scores, timer, bytes_read: bytes })
     }
 }
@@ -81,21 +96,21 @@ impl Scorer for LograScorer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attribution::testutil::make_fixture;
+    use crate::attribution::testutil::{make_fixture, make_fixture_sharded};
 
     #[test]
     fn matches_direct_formula() {
         let fx = make_fixture(25, 2, &[(4, 5)], 1, StoreKind::Dense, "logra_direct");
-        let reader = StoreReader::open(&fx.base).unwrap();
-        let curv = DenseCurvature::build(&reader, 0.1).unwrap();
+        let set = ShardSet::open(&fx.base).unwrap();
+        let curv = DenseCurvature::build(&set, 0.1).unwrap();
         let lambda = curv.lambdas[0];
-        let mut scorer = LograScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        let mut scorer = LograScorer::new(ShardSet::open(&fx.base).unwrap(), curv);
         scorer.chunk_size = 7;
         let report = scorer.score(&fx.queries).unwrap();
 
         // direct: g_q^T (G^T G + lam I)^{-1} g_t using the *stored*
         // (bf16-quantized) gradients so the reference sees the same data
-        let stored = scorer.reader.read_range(0, 25).unwrap();
+        let stored = scorer.shards.read_range(0, 25).unwrap();
         let g = stored.layers[0].dense().clone();
         let mut gram = g.matmul_tn(&g);
         for i in 0..gram.rows {
@@ -116,11 +131,40 @@ mod tests {
     #[test]
     fn rejects_factored_store() {
         let fx = make_fixture(10, 1, &[(4, 4)], 1, StoreKind::Factored, "logra_reject");
-        let reader = StoreReader::open(&fx.base).unwrap();
+        let set = ShardSet::open(&fx.base).unwrap();
         // dense curvature can build from factored (reconstructs), but the
         // scorer itself requires dense records
-        let curv = DenseCurvature::build(&reader, 0.1).unwrap();
-        let mut scorer = LograScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        let curv = DenseCurvature::build(&set, 0.1).unwrap();
+        let mut scorer = LograScorer::new(ShardSet::open(&fx.base).unwrap(), curv);
         assert!(scorer.score(&fx.queries).is_err());
+    }
+
+    #[test]
+    fn sharded_store_matches_monolithic() {
+        let fx = make_fixture(30, 2, &[(4, 5), (3, 3)], 1, StoreKind::Dense, "logra_mono");
+        let sharded_fx = make_fixture_sharded(
+            30,
+            2,
+            &[(4, 5), (3, 3)],
+            1,
+            StoreKind::Dense,
+            3,
+            "logra_split",
+        );
+        let curv_a = DenseCurvature::build(&ShardSet::open(&fx.base).unwrap(), 0.1).unwrap();
+        let curv_b = DenseCurvature::build(&ShardSet::open(&fx.base).unwrap(), 0.1).unwrap();
+        let mut mono = LograScorer::new(ShardSet::open(&fx.base).unwrap(), curv_a);
+        mono.chunk_size = 7;
+        let mut sharded =
+            LograScorer::new(ShardSet::open(&sharded_fx.base).unwrap(), curv_b);
+        sharded.chunk_size = 4;
+        sharded.score_threads = 2;
+        assert_eq!(sharded.shards.n_shards(), 3);
+        let ra = mono.score(&fx.queries).unwrap();
+        let rb = sharded.score(&fx.queries).unwrap();
+        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+            assert!((a - b).abs() <= 1e-5 * scale.max(1.0), "{a} vs {b}");
+        }
     }
 }

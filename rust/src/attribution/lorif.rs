@@ -10,31 +10,39 @@
 //!   3. scores[q, n] += S1/lambda_l - corr.
 //!
 //! All heavy steps are GEMMs on the chunk — the compute half of Fig 3.
+//! The pass runs per shard on the worker pool (`query::parallel`):
+//! every shard fills its own column block of the score matrix, so a v2
+//! store scores on all cores while a v1 store degenerates to the
+//! single-threaded path.
 
 use super::{QueryGrads, ScoreReport, Scorer};
 use crate::curvature::{reconstruct_row, TruncatedCurvature};
 use crate::linalg::Mat;
-use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::query::parallel::{self, ShardScores};
+use crate::store::{ChunkLayer, ShardSet, StoreKind};
 use crate::util::timer::PhaseTimer;
 
 pub struct LorifScorer {
-    pub reader: StoreReader,
+    pub shards: ShardSet,
     pub curv: TruncatedCurvature,
     /// use stage-2 train projections instead of query-time projection
     /// (extension; the paper recomputes at query time)
     pub cached_projections: bool,
     pub prefetch: bool,
     pub chunk_size: usize,
+    /// worker threads for shard scoring (0 = all cores)
+    pub score_threads: usize,
 }
 
 impl LorifScorer {
-    pub fn new(reader: StoreReader, curv: TruncatedCurvature) -> LorifScorer {
+    pub fn new(shards: ShardSet, curv: TruncatedCurvature) -> LorifScorer {
         LorifScorer {
-            reader,
+            shards,
             curv,
             cached_projections: false,
             prefetch: true,
             chunk_size: 512,
+            score_threads: 0,
         }
     }
 }
@@ -108,20 +116,21 @@ impl Scorer for LorifScorer {
     }
 
     fn index_bytes(&self) -> u64 {
-        self.reader.meta.total_bytes()
+        self.shards.meta.total_bytes()
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
         anyhow::ensure!(
-            self.reader.meta.kind == StoreKind::Factored,
+            self.shards.meta.kind == StoreKind::Factored,
             "LoRIF scorer needs a factored store"
         );
-        anyhow::ensure!(queries.proj_dims == self.reader.meta.layers, "layer dims mismatch");
-        let c = self.reader.meta.c;
+        anyhow::ensure!(queries.proj_dims == self.shards.meta.layers, "layer dims mismatch");
+        let c = self.shards.meta.c;
         anyhow::ensure!(queries.c == c, "factor rank mismatch");
-        let n = self.reader.meta.n_examples;
+        let n = self.shards.meta.n_examples;
         let nq = queries.n_query;
         let n_layers = queries.n_layers();
+        let layer_dims = self.shards.meta.layers.clone();
         let mut timer = PhaseTimer::new();
 
         // precondition queries: g'_q = V_r^T g~_q, folded with Woodbury
@@ -137,7 +146,7 @@ impl Scorer for LorifScorer {
         let gqw: Vec<Mat> = timer.time("precondition", || {
             (0..n_layers)
                 .map(|l| {
-                    let (d1, d2) = self.reader.meta.layers[l];
+                    let (d1, d2) = layer_dims[l];
                     let svd = &self.curv.layers[l];
                     let ql = &queries.layers[l];
                     let mut rec = Mat::zeros(nq, d1 * d2);
@@ -157,50 +166,64 @@ impl Scorer for LorifScorer {
                 .collect()
         });
 
-        let mut scores = Mat::zeros(nq, n);
-        let mut compute = std::time::Duration::ZERO;
-        let mut scratch = Mat::zeros(0, 0);
-        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
-            let t0 = std::time::Instant::now();
-            for l in 0..n_layers {
-                let (d1, d2) = self.reader.meta.layers[l];
-                let (u, v) = match &chunk.layers[l] {
-                    ChunkLayer::Factored { u, v } => (u, v),
-                    _ => anyhow::bail!("expected factored chunk"),
-                };
-                let ql = &queries.layers[l];
-                // term 1: factor dots / lambda
-                let s1 = factor_dots(u, v, &ql.u, &ql.v, d1, d2, c);
-                let inv_lambda = 1.0 / self.curv.lambdas[l];
-                // term 2: Woodbury correction
-                let gt: Mat = if self.cached_projections {
-                    let idx: Vec<usize> = (chunk.start..chunk.start + chunk.count).collect();
-                    self.curv.layers[l].train_proj.select_rows(&idx)
-                } else {
-                    // faithful: reconstruct rows and project at query time
-                    if scratch.rows != chunk.count || scratch.cols != d1 * d2 {
-                        scratch = Mat::zeros(chunk.count, d1 * d2);
-                    }
-                    for ex in 0..chunk.count {
-                        reconstruct_row(u.row(ex), v.row(ex), d1, d2, c, scratch.row_mut(ex));
-                    }
-                    scratch.matmul(&self.curv.layers[l].v) // (B, r)
-                };
-                let corr = gt.matmul_nt(&gqw[l]); // (B, Nq)
-                for nn in 0..chunk.count {
-                    let s1r = s1.row(nn);
-                    let cr = corr.row(nn);
-                    let global = chunk.start + nn;
-                    for q in 0..nq {
-                        *scores.at_mut(q, global) += s1r[q] * inv_lambda - cr[q];
+        let curv = &self.curv;
+        let cached = self.cached_projections;
+        let chunk_size = self.chunk_size;
+        // with multiple shard workers the workers themselves overlap I/O
+        // and compute, so per-shard prefetch threads would only
+        // oversubscribe the cores; prefetch only on the 1-worker path
+        let workers =
+            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
+        let prefetch = self.prefetch && workers <= 1;
+        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
+            let shard_start = reader.start;
+            let mut local = Mat::zeros(nq, reader.count);
+            let mut compute = std::time::Duration::ZERO;
+            let mut scratch = Mat::zeros(0, 0);
+            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
+                let t0 = std::time::Instant::now();
+                for l in 0..n_layers {
+                    let (d1, d2) = layer_dims[l];
+                    let (u, v) = match &chunk.layers[l] {
+                        ChunkLayer::Factored { u, v } => (u, v),
+                        _ => anyhow::bail!("expected factored chunk"),
+                    };
+                    let ql = &queries.layers[l];
+                    // term 1: factor dots / lambda
+                    let s1 = factor_dots(u, v, &ql.u, &ql.v, d1, d2, c);
+                    let inv_lambda = 1.0 / curv.lambdas[l];
+                    // term 2: Woodbury correction
+                    let gt: Mat = if cached {
+                        let idx: Vec<usize> =
+                            (chunk.start..chunk.start + chunk.count).collect();
+                        curv.layers[l].train_proj.select_rows(&idx)
+                    } else {
+                        // faithful: reconstruct rows and project at query time
+                        if scratch.rows != chunk.count || scratch.cols != d1 * d2 {
+                            scratch = Mat::zeros(chunk.count, d1 * d2);
+                        }
+                        for ex in 0..chunk.count {
+                            reconstruct_row(u.row(ex), v.row(ex), d1, d2, c, scratch.row_mut(ex));
+                        }
+                        scratch.matmul(&curv.layers[l].v) // (B, r)
+                    };
+                    let corr = gt.matmul_nt(&gqw[l]); // (B, Nq)
+                    for nn in 0..chunk.count {
+                        let s1r = s1.row(nn);
+                        let cr = corr.row(nn);
+                        let col = chunk.start - shard_start + nn;
+                        for q in 0..nq {
+                            *local.at_mut(q, col) += s1r[q] * inv_lambda - cr[q];
+                        }
                     }
                 }
-            }
-            compute += t0.elapsed();
-            Ok(())
+                compute += t0.elapsed();
+                Ok(())
+            })?;
+            Ok(ShardScores { start: shard_start, scores: local, io, compute, bytes })
         })?;
-        timer.add("load", io_time);
-        timer.add("compute", compute);
+        let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
+        timer.merge(&shard_timer);
         Ok(ScoreReport { scores, timer, bytes_read: bytes })
     }
 }
@@ -208,15 +231,18 @@ impl Scorer for LorifScorer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attribution::testutil::make_fixture;
-    use crate::linalg::rsvd::MatSource;
+    use crate::attribution::testutil::{make_fixture, make_fixture_sharded};
     use crate::store::StoreKind;
 
-    fn build_scorer(name: &str, r: usize, cached: bool) -> (LorifScorer, crate::attribution::testutil::Fixture) {
+    fn build_scorer(
+        name: &str,
+        r: usize,
+        cached: bool,
+    ) -> (LorifScorer, crate::attribution::testutil::Fixture) {
         let fx = make_fixture(40, 3, &[(6, 8), (5, 5)], 2, StoreKind::Factored, name);
-        let reader = StoreReader::open(&fx.base).unwrap();
-        let curv = TruncatedCurvature::build(&reader, r, 8, 3, 0.1, 0).unwrap();
-        let mut s = LorifScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        let set = ShardSet::open(&fx.base).unwrap();
+        let curv = TruncatedCurvature::build(&set, r, 8, 3, 0.1, 0).unwrap();
+        let mut s = LorifScorer::new(ShardSet::open(&fx.base).unwrap(), curv);
         s.cached_projections = cached;
         s.chunk_size = 13;
         (s, fx)
@@ -287,6 +313,45 @@ mod tests {
             // faithful from query-time reconstruction: close but not equal
             assert!((a - b).abs() < 0.1 * scale + 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn sharded_store_matches_monolithic() {
+        // same records, one store monolithic and one in 4 shards scored
+        // on 3 workers: Eq. (9) scores must agree to float round-off
+        let (mut mono, fx) = build_scorer("lorif_shard_mono", 10, false);
+        let sharded_fx = make_fixture_sharded(
+            40,
+            3,
+            &[(6, 8), (5, 5)],
+            2,
+            StoreKind::Factored,
+            4,
+            "lorif_shard_split",
+        );
+        let set = ShardSet::open(&sharded_fx.base).unwrap();
+        assert_eq!(set.n_shards(), 4);
+        let curv = TruncatedCurvature::build(
+            &ShardSet::open(&fx.base).unwrap(),
+            10,
+            8,
+            3,
+            0.1,
+            0,
+        )
+        .unwrap();
+        let mut sharded = LorifScorer::new(set, curv);
+        sharded.chunk_size = 13;
+        sharded.score_threads = 3;
+        let ra = mono.score(&fx.queries).unwrap();
+        let rb = sharded.score(&fx.queries).unwrap();
+        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+            assert!((a - b).abs() <= 1e-5 * scale.max(1.0), "{a} vs {b}");
+        }
+        assert_eq!(rb.scores.rows, 3);
+        assert_eq!(rb.scores.cols, 40);
+        assert!(rb.bytes_read == ra.bytes_read, "same records, same bytes");
     }
 
     #[test]

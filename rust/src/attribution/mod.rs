@@ -7,6 +7,7 @@
 //! Tables 1–2 are built on.
 
 pub mod ablation;
+#[cfg(feature = "xla")]
 pub mod ekfac;
 pub mod graddot;
 pub mod logra;
@@ -14,9 +15,7 @@ pub mod lorif;
 pub mod repsim;
 pub mod trackstar;
 
-use crate::corpus::Dataset;
 use crate::linalg::Mat;
-use crate::runtime::{GradExtractor, Runtime};
 use crate::util::timer::PhaseTimer;
 
 pub use lorif::LorifScorer;
@@ -40,11 +39,12 @@ pub struct QueryGrads {
 
 impl QueryGrads {
     /// Extract gradients for every example of `queries` via the AOT graph.
+    #[cfg(feature = "xla")]
     pub fn extract(
-        rt: &Runtime,
-        extractor: &GradExtractor,
+        rt: &crate::runtime::Runtime,
+        extractor: &crate::runtime::GradExtractor,
         params: &xla::Literal,
-        queries: &Dataset,
+        queries: &crate::corpus::Dataset,
     ) -> anyhow::Result<QueryGrads> {
         let nq = queries.len();
         let dims = extractor.proj_dims.clone();
@@ -115,7 +115,7 @@ pub trait Scorer {
 pub(crate) mod testutil {
     use super::*;
     use crate::runtime::{ExtractBatch, LayerGrads};
-    use crate::store::{StoreKind, StoreMeta, StoreWriter};
+    use crate::store::{ShardedWriter, StoreKind, StoreMeta, StoreWriter};
     use crate::util::prng::Rng;
 
     /// Build an in-temp-dir store with known gradients (rank-`true_rank`
@@ -137,7 +137,7 @@ pub(crate) mod testutil {
         kind: StoreKind,
         name: &str,
     ) -> Fixture {
-        make_fixture_noise(n_train, n_query, layer_dims, c, kind, name, 0.05)
+        build_fixture(n_train, n_query, layer_dims, c, kind, name, 0.05, 1)
     }
 
     pub fn make_fixture_noise(
@@ -148,6 +148,34 @@ pub(crate) mod testutil {
         kind: StoreKind,
         name: &str,
         noise: f32,
+    ) -> Fixture {
+        build_fixture(n_train, n_query, layer_dims, c, kind, name, noise, 1)
+    }
+
+    /// Same deterministic data as `make_fixture`, persisted in the v2
+    /// sharded layout (`shards` >= 2).
+    pub fn make_fixture_sharded(
+        n_train: usize,
+        n_query: usize,
+        layer_dims: &[(usize, usize)],
+        c: usize,
+        kind: StoreKind,
+        shards: usize,
+        name: &str,
+    ) -> Fixture {
+        build_fixture(n_train, n_query, layer_dims, c, kind, name, 0.05, shards)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_fixture(
+        n_train: usize,
+        n_query: usize,
+        layer_dims: &[(usize, usize)],
+        c: usize,
+        kind: StoreKind,
+        name: &str,
+        noise: f32,
+        shards: usize,
     ) -> Fixture {
         let dir = std::env::temp_dir().join("lorif_attr_tests");
         std::fs::create_dir_all(&dir).unwrap();
@@ -188,7 +216,7 @@ pub(crate) mod testutil {
             (u, v)
         };
 
-        // write the store
+        // write the store (v1 monolithic, or v2 sharded for shards >= 2)
         let meta = StoreMeta {
             kind,
             tier: "small".into(),
@@ -196,8 +224,8 @@ pub(crate) mod testutil {
             c,
             layers: layer_dims.to_vec(),
             n_examples: 0,
+            shards: None,
         };
-        let mut w = StoreWriter::create(&base, meta).unwrap();
         let layers: Vec<LayerGrads> = layer_dims
             .iter()
             .zip(&train_g)
@@ -206,9 +234,16 @@ pub(crate) mod testutil {
                 LayerGrads { g: g.clone(), u, v }
             })
             .collect();
-        w.append(&ExtractBatch { losses: vec![0.0; n_train], layers, valid: n_train })
-            .unwrap();
-        w.finalize().unwrap();
+        let batch = ExtractBatch { losses: vec![0.0; n_train], layers, valid: n_train };
+        if shards <= 1 {
+            let mut w = StoreWriter::create(&base, meta).unwrap();
+            w.append(&batch).unwrap();
+            w.finalize().unwrap();
+        } else {
+            let mut w = ShardedWriter::create(&base, meta, shards, n_train).unwrap();
+            w.append(&batch).unwrap();
+            w.finalize().unwrap();
+        }
 
         let qlayers: Vec<QueryLayer> = layer_dims
             .iter()

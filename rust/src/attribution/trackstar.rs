@@ -7,23 +7,30 @@
 //! the query side also normalized — on top of the same damped GN
 //! curvature; the full per-example K^{-1}-norm would need one solve per
 //! training example and is noted as a divergence in DESIGN.md.
+//!
+//! The streaming pass runs per shard on the worker pool; each shard also
+//! returns its slice of the train-side squared norms, merged before the
+//! final normalization.
 
 use super::{QueryGrads, ScoreReport, Scorer};
 use crate::curvature::DenseCurvature;
 use crate::linalg::Mat;
-use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::query::parallel::{self, ShardScores};
+use crate::store::{ChunkLayer, ShardSet, StoreKind};
 use crate::util::timer::PhaseTimer;
 
 pub struct TrackStarScorer {
-    pub reader: StoreReader,
+    pub shards: ShardSet,
     pub curv: DenseCurvature,
     pub prefetch: bool,
     pub chunk_size: usize,
+    /// worker threads for shard scoring (0 = all cores)
+    pub score_threads: usize,
 }
 
 impl TrackStarScorer {
-    pub fn new(reader: StoreReader, curv: DenseCurvature) -> TrackStarScorer {
-        TrackStarScorer { reader, curv, prefetch: true, chunk_size: 512 }
+    pub fn new(shards: ShardSet, curv: DenseCurvature) -> TrackStarScorer {
+        TrackStarScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
     }
 }
 
@@ -33,15 +40,15 @@ impl Scorer for TrackStarScorer {
     }
 
     fn index_bytes(&self) -> u64 {
-        self.reader.meta.total_bytes()
+        self.shards.meta.total_bytes()
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
         anyhow::ensure!(
-            self.reader.meta.kind == StoreKind::Dense,
+            self.shards.meta.kind == StoreKind::Dense,
             "TrackStar scorer needs a dense store"
         );
-        let n = self.reader.meta.n_examples;
+        let n = self.shards.meta.n_examples;
         let nq = queries.n_query;
         let n_layers = queries.n_layers();
         let mut timer = PhaseTimer::new();
@@ -63,40 +70,62 @@ impl Scorer for TrackStarScorer {
                 .collect()
         });
 
-        let mut scores = Mat::zeros(nq, n);
-        // accumulate per-example squared norms across all layers for the
-        // train-side unit normalization
-        let mut norms2 = vec![0.0f32; n];
-        let mut partial = Mat::zeros(nq, n);
-        let mut compute = std::time::Duration::ZERO;
-        let (io_time, bytes) = self.reader.stream(self.chunk_size, self.prefetch, |chunk| {
-            let t0 = std::time::Instant::now();
-            for l in 0..n_layers {
-                let g = match &chunk.layers[l] {
-                    ChunkLayer::Dense { g } => g,
-                    _ => anyhow::bail!("expected dense chunk"),
-                };
-                let part = g.matmul_nt(&pre[l]); // (B, Nq)
-                for nn in 0..chunk.count {
-                    let global = chunk.start + nn;
-                    let row = part.row(nn);
-                    for q in 0..nq {
-                        *partial.at_mut(q, global) += row[q];
+        let chunk_size = self.chunk_size;
+        // with multiple shard workers the workers themselves overlap I/O
+        // and compute, so per-shard prefetch threads would only
+        // oversubscribe the cores; prefetch only on the 1-worker path
+        let workers =
+            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
+        let prefetch = self.prefetch && workers <= 1;
+        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
+            let shard_start = reader.start;
+            let mut local = Mat::zeros(nq, reader.count);
+            // per-example squared norms across all layers, for the
+            // train-side unit normalization
+            let mut norms2 = vec![0.0f32; reader.count];
+            let mut compute = std::time::Duration::ZERO;
+            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
+                let t0 = std::time::Instant::now();
+                for (l, pre_l) in pre.iter().enumerate() {
+                    let g = match &chunk.layers[l] {
+                        ChunkLayer::Dense { g } => g,
+                        _ => anyhow::bail!("expected dense chunk"),
+                    };
+                    let part = g.matmul_nt(pre_l); // (B, Nq)
+                    for nn in 0..chunk.count {
+                        let col = chunk.start - shard_start + nn;
+                        let row = part.row(nn);
+                        for q in 0..nq {
+                            *local.at_mut(q, col) += row[q];
+                        }
+                        norms2[col] += g.row(nn).iter().map(|x| x * x).sum::<f32>();
                     }
-                    norms2[global] += g.row(nn).iter().map(|x| x * x).sum::<f32>();
                 }
-            }
-            compute += t0.elapsed();
-            Ok(())
+                compute += t0.elapsed();
+                Ok(())
+            })?;
+            Ok((
+                ShardScores { start: shard_start, scores: local, io, compute, bytes },
+                norms2,
+            ))
         })?;
+
+        let mut norms2 = vec![0.0f32; n];
+        let mut score_parts = Vec::with_capacity(parts.len());
+        for (p, local_norms) in parts {
+            norms2[p.start..p.start + local_norms.len()].copy_from_slice(&local_norms);
+            score_parts.push(p);
+        }
+        let (partial, shard_timer, bytes) = parallel::merge_scores(nq, n, score_parts);
+        timer.merge(&shard_timer);
+
         // final normalization by the train-side gradient norm
+        let mut scores = Mat::zeros(nq, n);
         for q in 0..nq {
             for t in 0..n {
                 *scores.at_mut(q, t) = partial.at(q, t) / norms2[t].sqrt().max(1e-12);
             }
         }
-        timer.add("load", io_time);
-        timer.add("compute", compute);
         Ok(ScoreReport { scores, timer, bytes_read: bytes })
     }
 }
@@ -111,9 +140,9 @@ mod tests {
         // scaling a training gradient must not change its TrackStar score
         // (unit normalization) — verify via the formula on the fixture
         let fx = make_fixture(12, 1, &[(4, 4)], 1, StoreKind::Dense, "trackstar");
-        let reader = StoreReader::open(&fx.base).unwrap();
-        let curv = DenseCurvature::build(&reader, 0.1).unwrap();
-        let mut scorer = TrackStarScorer::new(StoreReader::open(&fx.base).unwrap(), curv);
+        let set = ShardSet::open(&fx.base).unwrap();
+        let curv = DenseCurvature::build(&set, 0.1).unwrap();
+        let mut scorer = TrackStarScorer::new(ShardSet::open(&fx.base).unwrap(), curv);
         let report = scorer.score(&fx.queries).unwrap();
         // direct check: score = <pre_q, g_t>/||g_t||
         let g = &fx.train_g[0];

@@ -11,13 +11,21 @@
 
 use std::time::Duration;
 
-use crate::app::{self, Method};
-use crate::attribution::{QueryGrads, Scorer};
 use crate::config::Config;
+use crate::query::LatencyBreakdown;
+
+#[cfg(feature = "xla")]
+use crate::app::{self, Method};
+#[cfg(feature = "xla")]
+use crate::attribution::{QueryGrads, Scorer};
+#[cfg(feature = "xla")]
 use crate::corpus::Dataset;
+#[cfg(feature = "xla")]
 use crate::eval::{LdsActuals, LdsProtocol, TailPatchProtocol};
+#[cfg(feature = "xla")]
 use crate::index::{Pipeline, Stage1Options};
-use crate::query::{LatencyBreakdown, QueryEngine};
+#[cfg(feature = "xla")]
+use crate::query::QueryEngine;
 
 pub fn full_scale() -> bool {
     std::env::var("LORIF_SCALE").as_deref() == Ok("full")
@@ -39,6 +47,7 @@ pub fn bench_config() -> Config {
     cfg
 }
 
+#[cfg(feature = "xla")]
 pub fn lds_protocol() -> LdsProtocol {
     let mut p = LdsProtocol::default();
     if full_scale() {
@@ -51,6 +60,7 @@ pub fn lds_protocol() -> LdsProtocol {
     p
 }
 
+#[cfg(feature = "xla")]
 pub fn tailpatch_protocol() -> TailPatchProtocol {
     TailPatchProtocol { k: 8, lr: 1e-2 }
 }
@@ -94,10 +104,12 @@ impl Measurement {
 }
 
 /// Bench session: shared pipeline state across configurations.
+#[cfg(feature = "xla")]
 pub struct Session {
     base_cfg: Config,
 }
 
+#[cfg(feature = "xla")]
 impl Session {
     pub fn new() -> Session {
         crate::util::logging::init();
@@ -155,7 +167,9 @@ impl Session {
             Method::RepSim => {
                 let scorer = app::build_repsim_scorer(&p, &lit, &queries)?;
                 let bytes = scorer.index_bytes();
-                let res = QueryEngine::new(scorer, 10).run(&qg)?;
+                let mut e = QueryEngine::new(scorer, 10);
+                e.topk_threads = p.cfg.score_threads;
+                let res = e.run(&qg)?;
                 (res.scores, res.latency, bytes)
             }
             Method::Ekfac => {
@@ -166,7 +180,9 @@ impl Session {
                 let scorer = app::build_ekfac_scorer(&p, &extractor, &lit, &train, 256)?;
                 stage2 = t0.elapsed();
                 let bytes = scorer.index_bytes();
-                let res = QueryEngine::new(scorer, 10).run(&qg1)?;
+                let mut e = QueryEngine::new(scorer, 10);
+                e.topk_threads = p.cfg.score_threads;
+                let res = e.run(&qg1)?;
                 (res.scores, res.latency, bytes)
             }
             _ => {
@@ -174,7 +190,9 @@ impl Session {
                 let scorer = app::build_store_scorer(&p, method)?;
                 stage2 = t0.elapsed();
                 let bytes = scorer.index_bytes();
-                let res = QueryEngine::new(scorer, 10).run(&qg)?;
+                let mut e = QueryEngine::new(scorer, 10);
+                e.topk_threads = p.cfg.score_threads;
+                let res = e.run(&qg)?;
                 (res.scores, res.latency, bytes)
             }
         };

@@ -101,6 +101,8 @@ impl Args {
         take!(train_lr, "train-lr", get_f32);
         take!(lambda_factor, "lambda-factor", get_f32);
         take!(rsvd_power_iters, "rsvd-power-iters", get_usize);
+        take!(shards, "shards", get_usize);
+        take!(score_threads, "score-threads", get_usize);
         if let Some(d) = self.get("artifacts-dir") {
             cfg.artifacts_dir = d.into();
         }
@@ -146,12 +148,17 @@ mod tests {
 
     #[test]
     fn applies_to_config() {
-        let a = parse(&["x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512"]);
+        let a = parse(&[
+            "x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512", "--shards",
+            "4", "--score-threads", "2",
+        ]);
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
         assert_eq!(cfg.f, 8);
         assert_eq!(cfg.c, 2);
         assert_eq!(cfg.n_train, 512);
         assert_eq!(cfg.tier, crate::model::spec::Tier::Medium);
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.score_threads, 2);
     }
 }

@@ -33,6 +33,12 @@ pub struct Config {
     pub train_steps: usize,
     pub train_lr: f32,
 
+    /// gradient-store shards written by stage 1 (1 = v1 single file;
+    /// >= 2 = v2 sharded layout for the parallel query path)
+    pub shards: usize,
+    /// worker threads for shard scoring and top-k (0 = all cores)
+    pub score_threads: usize,
+
     pub artifacts_dir: PathBuf,
     pub work_dir: PathBuf,
 }
@@ -53,6 +59,8 @@ impl Default for Config {
             seed: 17,
             train_steps: 300,
             train_lr: 3e-3,
+            shards: 1,
+            score_threads: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             work_dir: PathBuf::from("work"),
         }
@@ -92,6 +100,8 @@ impl Config {
         num!(seed, "seed", u64);
         num!(train_steps, "train_steps", usize);
         num!(train_lr, "train_lr", f32);
+        num!(shards, "shards", usize);
+        num!(score_threads, "score_threads", usize);
         if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
             self.artifacts_dir = PathBuf::from(s);
         }
@@ -126,6 +136,7 @@ impl Config {
         );
         anyhow::ensure!(self.r >= 1, "r must be >= 1");
         anyhow::ensure!(self.n_train >= 8 && self.n_query >= 1, "dataset too small");
+        anyhow::ensure!(self.shards >= 1, "shards must be >= 1");
         Ok(())
     }
 
@@ -154,6 +165,8 @@ impl Config {
             ("seed", (self.seed as usize).into()),
             ("train_steps", self.train_steps.into()),
             ("train_lr", (self.train_lr as f64).into()),
+            ("shards", self.shards.into()),
+            ("score_threads", self.score_threads.into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
             ("work_dir", self.work_dir.display().to_string().into()),
         ])
@@ -175,12 +188,23 @@ mod tests {
         cfg.f = 8;
         cfg.r = 64;
         cfg.tier = Tier::Medium;
+        cfg.shards = 6;
+        cfg.score_threads = 3;
         let v = cfg.to_json();
         let mut back = Config::default();
         back.apply_json(&v).unwrap();
         assert_eq!(back.f, 8);
         assert_eq!(back.r, 64);
         assert_eq!(back.tier, Tier::Medium);
+        assert_eq!(back.shards, 6);
+        assert_eq!(back.score_threads, 3);
+    }
+
+    #[test]
+    fn rejects_zero_shards() {
+        let mut cfg = Config::default();
+        cfg.shards = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! rows come from the guard below.
 
 use crate::linalg::{Chol, Mat};
-use crate::store::{ChunkLayer, StoreReader};
+use crate::store::{ChunkLayer, ShardSet};
 
 /// Refuse to build dense curvature above this many f32 elements per layer
 /// (simulates the paper's OOM wall; override with LORIF_DENSE_LIMIT).
@@ -24,18 +24,29 @@ pub struct DenseCurvature {
     pub lambdas: Vec<f32>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("dense curvature for layer {layer} needs {need} floats > limit {limit} (OOM)")]
+#[derive(Debug)]
 pub struct OomError {
     pub layer: usize,
     pub need: usize,
     pub limit: usize,
 }
 
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dense curvature for layer {} needs {} floats > limit {} (OOM)",
+            self.layer, self.need, self.limit
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
+
 impl DenseCurvature {
     /// Stream the (dense) store once, accumulating G^T G per layer.
-    pub fn build(reader: &StoreReader, lambda_factor: f32) -> anyhow::Result<DenseCurvature> {
-        let dims = reader.meta.layers.clone();
+    pub fn build(set: &ShardSet, lambda_factor: f32) -> anyhow::Result<DenseCurvature> {
+        let dims = set.meta.layers.clone();
         // OOM guard (Table 8 behaviour)
         let limit = dense_limit();
         for (l, &(d1, d2)) in dims.iter().enumerate() {
@@ -46,8 +57,8 @@ impl DenseCurvature {
         }
         let mut grams: Vec<Mat> =
             dims.iter().map(|&(d1, d2)| Mat::zeros(d1 * d2, d1 * d2)).collect();
-        let c = reader.meta.c;
-        reader.stream(256, false, |chunk| {
+        let c = set.meta.c;
+        set.stream(256, false, |chunk| {
             for (l, layer) in chunk.layers.iter().enumerate() {
                 let (d1, d2) = dims[l];
                 match layer {
@@ -105,7 +116,7 @@ mod tests {
     use super::*;
     use crate::linalg::Mat;
     use crate::runtime::{ExtractBatch, LayerGrads};
-    use crate::store::{StoreKind, StoreMeta, StoreWriter};
+    use crate::store::{ShardSet, StoreKind, StoreMeta, StoreWriter};
     use crate::util::prng::Rng;
 
     fn dense_store(n: usize, layers: &[(usize, usize)]) -> (std::path::PathBuf, Vec<Mat>) {
@@ -119,6 +130,7 @@ mod tests {
             c: 1,
             layers: layers.to_vec(),
             n_examples: 0,
+            shards: None,
         };
         let mut rng = Rng::new(7);
         let gs: Vec<Mat> =
@@ -144,8 +156,8 @@ mod tests {
     #[test]
     fn gram_solve_matches_direct() {
         let (base, gs) = dense_store(30, &[(4, 5)]);
-        let reader = StoreReader::open(&base).unwrap();
-        let curv = DenseCurvature::build(&reader, 0.1).unwrap();
+        let set = ShardSet::open(&base).unwrap();
+        let curv = DenseCurvature::build(&set, 0.1).unwrap();
         // direct: K = G^T G + lambda I (within bf16 noise)
         let g = &gs[0];
         let mut gram = g.matmul_tn(g);
@@ -168,8 +180,8 @@ mod tests {
     fn oom_guard_trips() {
         std::env::set_var("LORIF_DENSE_LIMIT", "1000");
         let (base, _) = dense_store(5, &[(8, 8)]);
-        let reader = StoreReader::open(&base).unwrap();
-        let err = DenseCurvature::build(&reader, 0.1);
+        let set = ShardSet::open(&base).unwrap();
+        let err = DenseCurvature::build(&set, 0.1);
         std::env::remove_var("LORIF_DENSE_LIMIT");
         assert!(err.is_err());
         let msg = format!("{}", err.err().unwrap());

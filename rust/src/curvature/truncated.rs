@@ -13,30 +13,31 @@ use std::path::Path;
 
 use crate::linalg::rsvd::{rsvd, RowChunkSource, TruncatedSvd};
 use crate::linalg::Mat;
-use crate::store::{ChunkLayer, StoreKind, StoreReader};
+use crate::store::{ChunkLayer, ShardSet, StoreKind};
 
 /// Adapter: one layer of a gradient store as a stream of G-row chunks.
+/// Streams shards sequentially in order, so chunk starts are global.
 pub struct StoreLayerSource<'a> {
-    pub reader: &'a StoreReader,
+    pub set: &'a ShardSet,
     pub layer: usize,
     pub chunk_size: usize,
 }
 
 impl RowChunkSource for StoreLayerSource<'_> {
     fn n_rows(&self) -> usize {
-        self.reader.meta.n_examples
+        self.set.meta.n_examples
     }
 
     fn dim(&self) -> usize {
-        let (d1, d2) = self.reader.meta.layers[self.layer];
+        let (d1, d2) = self.set.meta.layers[self.layer];
         d1 * d2
     }
 
     fn for_each_chunk(&mut self, f: &mut dyn FnMut(usize, &Mat)) -> anyhow::Result<()> {
-        let (d1, d2) = self.reader.meta.layers[self.layer];
-        let c = self.reader.meta.c;
+        let (d1, d2) = self.set.meta.layers[self.layer];
+        let c = self.set.meta.c;
         let layer = self.layer;
-        self.reader
+        self.set
             .stream(self.chunk_size, false, |chunk| {
                 match &chunk.layers[layer] {
                     ChunkLayer::Dense { g } => f(chunk.start, g),
@@ -94,9 +95,11 @@ pub struct TruncatedCurvature {
 }
 
 impl TruncatedCurvature {
-    /// Stage 2: run the streaming rSVD per layer over the store.
+    /// Stage 2: run the streaming rSVD per layer over the store (either
+    /// layout; shards are streamed in order, so the result is identical
+    /// to the monolithic pass).
     pub fn build(
-        reader: &StoreReader,
+        set: &ShardSet,
         r: usize,
         oversample: usize,
         power_iters: usize,
@@ -104,17 +107,17 @@ impl TruncatedCurvature {
         seed: u64,
     ) -> anyhow::Result<TruncatedCurvature> {
         anyhow::ensure!(
-            reader.meta.kind == StoreKind::Factored || reader.meta.kind == StoreKind::Dense,
+            set.meta.kind == StoreKind::Factored || set.meta.kind == StoreKind::Dense,
             "unsupported store kind"
         );
-        let n_layers = reader.meta.layers.len();
+        let n_layers = set.meta.layers.len();
         let mut layers = Vec::with_capacity(n_layers);
         let mut lambdas = Vec::with_capacity(n_layers);
         let mut weights = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
-            let (d1, d2) = reader.meta.layers[l];
-            let r_l = r.min(d1 * d2).min(reader.meta.n_examples.saturating_sub(1)).max(1);
-            let mut src = StoreLayerSource { reader, layer: l, chunk_size: 256 };
+            let (d1, d2) = set.meta.layers[l];
+            let r_l = r.min(d1 * d2).min(set.meta.n_examples.saturating_sub(1)).max(1);
+            let mut src = StoreLayerSource { set, layer: l, chunk_size: 256 };
             let t0 = std::time::Instant::now();
             let svd = rsvd(&mut src, r_l, oversample, power_iters, seed ^ l as u64)?;
             let lambda = svd.damping(lambda_factor);

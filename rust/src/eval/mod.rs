@@ -1,10 +1,18 @@
 //! Evaluation harness: LDS (subset retraining), tail-patch, the
 //! programmatic relevance judge, and rank-correlation utilities.
+//!
+//! LDS and tail-patch retrain/re-evaluate models through the PJRT
+//! runtime, so they sit behind the `xla` cargo feature; the judge and
+//! Spearman utilities are plain CPU code.
 
 pub mod judge;
+#[cfg(feature = "xla")]
 pub mod lds;
 pub mod spearman;
+#[cfg(feature = "xla")]
 pub mod tailpatch;
 
+#[cfg(feature = "xla")]
 pub use lds::{LdsActuals, LdsProtocol};
+#[cfg(feature = "xla")]
 pub use tailpatch::{tail_patch, tail_patch_mean, TailPatchProtocol};

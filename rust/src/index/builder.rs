@@ -16,8 +16,44 @@ use crate::curvature::{DenseCurvature, TruncatedCurvature};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::spec::SEQ_LEN;
 use crate::runtime::{lit_f32, Embedder, GradExtractor, LossEval, Runtime, Trainer};
-use crate::store::{StoreKind, StoreMeta, StoreReader, StoreWriter};
+use crate::runtime::ExtractBatch;
+use crate::store::{ShardSet, ShardedWriter, StoreKind, StoreMeta, StoreWriter};
 use crate::util::prng::Rng;
+
+/// Stage-1 writer over either store layout, picked by `Config::shards`.
+enum Stage1Writer {
+    Mono(StoreWriter),
+    Sharded(ShardedWriter),
+}
+
+impl Stage1Writer {
+    fn create(
+        base: &std::path::Path,
+        meta: StoreMeta,
+        shards: usize,
+        n_expected: usize,
+    ) -> anyhow::Result<Stage1Writer> {
+        if shards <= 1 {
+            Ok(Stage1Writer::Mono(StoreWriter::create(base, meta)?))
+        } else {
+            Ok(Stage1Writer::Sharded(ShardedWriter::create(base, meta, shards, n_expected)?))
+        }
+    }
+
+    fn append(&mut self, batch: &ExtractBatch) -> anyhow::Result<()> {
+        match self {
+            Stage1Writer::Mono(w) => w.append(batch),
+            Stage1Writer::Sharded(w) => w.append(batch),
+        }
+    }
+
+    fn finalize(self) -> anyhow::Result<StoreMeta> {
+        match self {
+            Stage1Writer::Mono(w) => w.finalize(),
+            Stage1Writer::Sharded(w) => w.finalize(),
+        }
+    }
+}
 
 pub struct Pipeline {
     pub cfg: Config,
@@ -153,8 +189,33 @@ impl Pipeline {
             .join(format!("embed_{}_{}.bin", self.cfg.tier.name(), self.cfg.n_train))
     }
 
+    /// Does an existing store at `base` already have the layout the
+    /// current config asks for?  A missing or unreadable manifest, or a
+    /// v1/v2 (or shard-count) mismatch, means stage 1 must rewrite it —
+    /// otherwise `--shards` would be silently ignored by the cache.
+    fn store_layout_current(&self, base: &PathBuf) -> bool {
+        let Ok(meta) = StoreMeta::load(base) else { return false };
+        let current = match &meta.shards {
+            None => self.cfg.shards <= 1,
+            Some(counts) => {
+                self.cfg.shards > 1
+                    && counts.len()
+                        == ShardedWriter::expected_shards(meta.n_examples, self.cfg.shards)
+            }
+        };
+        if !current {
+            log::info!(
+                "stage1: store {} has a different shard layout than --shards {}; rebuilding",
+                base.display(),
+                self.cfg.shards
+            );
+        }
+        current
+    }
+
     /// Stage 1: extract per-example gradients for the whole training set
-    /// and persist the requested stores.  Skips work that already exists.
+    /// and persist the requested stores.  Skips stores that already
+    /// exist with the configured shard layout.
     pub fn stage1(
         &self,
         params: &xla::Literal,
@@ -168,14 +229,14 @@ impl Pipeline {
         let dense_base = self.dense_base();
         let embed_path = self.embed_path();
 
-        let need_fac = opts.write_factored && !StoreMeta::meta_path(&fac_base).exists();
-        let need_dense = opts.write_dense && !StoreMeta::meta_path(&dense_base).exists();
+        let need_fac = opts.write_factored && !self.store_layout_current(&fac_base);
+        let need_dense = opts.write_dense && !self.store_layout_current(&dense_base);
         let need_embed = opts.write_embeddings && !embed_path.exists();
 
         if need_fac || need_dense {
             let extractor = GradExtractor::new(&self.rt, self.cfg.tier, self.cfg.f, self.cfg.c)?;
             let mut fac_writer = if need_fac {
-                Some(StoreWriter::create(
+                Some(Stage1Writer::create(
                     &fac_base,
                     StoreMeta {
                         kind: StoreKind::Factored,
@@ -184,13 +245,16 @@ impl Pipeline {
                         c: self.cfg.c,
                         layers: layers.clone(),
                         n_examples: 0,
+                        shards: None,
                     },
+                    self.cfg.shards,
+                    train.len(),
                 )?)
             } else {
                 None
             };
             let mut dense_writer = if need_dense {
-                Some(StoreWriter::create(
+                Some(Stage1Writer::create(
                     &dense_base,
                     StoreMeta {
                         kind: StoreKind::Dense,
@@ -199,7 +263,10 @@ impl Pipeline {
                         c: self.cfg.c,
                         layers: layers.clone(),
                         n_examples: 0,
+                        shards: None,
                     },
+                    self.cfg.shards,
+                    train.len(),
                 )?)
             } else {
                 None
@@ -256,9 +323,9 @@ impl Pipeline {
         if path.exists() {
             return Ok((TruncatedCurvature::load(&path)?, t0.elapsed()));
         }
-        let reader = StoreReader::open(&self.factored_base())?;
+        let set = ShardSet::open(&self.factored_base())?;
         let curv = TruncatedCurvature::build(
-            &reader,
+            &set,
             self.cfg.r,
             self.cfg.rsvd_oversample,
             self.cfg.rsvd_power_iters,
@@ -272,8 +339,8 @@ impl Pipeline {
     /// Stage 2 for LoGRA/TrackStar: dense Gram assembly + Cholesky.
     pub fn stage2_dense(&self) -> anyhow::Result<(DenseCurvature, Duration)> {
         let t0 = Instant::now();
-        let reader = StoreReader::open(&self.dense_base())?;
-        let curv = DenseCurvature::build(&reader, self.cfg.lambda_factor)?;
+        let set = ShardSet::open(&self.dense_base())?;
+        let curv = DenseCurvature::build(&set, self.cfg.lambda_factor)?;
         Ok((curv, t0.elapsed()))
     }
 

@@ -6,7 +6,13 @@
 //! for LoRIF, embeddings for RepSim); stage 2 builds the inverse-Hessian
 //! approximation (streaming rSVD for LoRIF; the dense Gram assembly is
 //! timed on demand for LoGRA).  All stage timings feed Tables 5–7.
+//!
+//! Stage 1 needs the PJRT runtime, so the whole pipeline sits behind the
+//! `xla` cargo feature.  With `shards > 1` in the config, stage 1 writes
+//! the v2 sharded store layout consumed by the parallel query path.
 
+#[cfg(feature = "xla")]
 pub mod builder;
 
+#[cfg(feature = "xla")]
 pub use builder::{Pipeline, Stage1Options, Stage1Report};

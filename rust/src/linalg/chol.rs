@@ -8,9 +8,16 @@
 
 use super::mat::{dot, Mat};
 
-#[derive(Debug, thiserror::Error)]
-#[error("matrix not positive definite at pivot {0}")]
+#[derive(Debug)]
 pub struct NotSpd(pub usize);
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite at pivot {}", self.0)
+    }
+}
+
+impl std::error::Error for NotSpd {}
 
 /// Lower-triangular Cholesky factor of an SPD matrix.
 pub struct Chol {

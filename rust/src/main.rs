@@ -2,26 +2,48 @@
 //!
 //! Subcommands:
 //!   info            print config, tier dims, storage estimates
-//!   gen-corpus      generate + persist the synthetic topic corpus
-//!   train           train the base model (cached checkpoint)
-//!   build-index     stage 1 (gradient stores) + stage 2 (curvature)
-//!   query           offline attribution for the held-out query set
-//!   serve           TCP attribution service with dynamic batching
-//!   eval-lds        LDS for a method (subset retraining, cached)
-//!   eval-tailpatch  tail-patch score for a method
-//!   judge           programmatic top-1 relevance judge (LoRIF vs LoGRA)
+//!   gen-corpus      generate + persist the synthetic topic corpus [xla]
+//!   train           train the base model (cached checkpoint)      [xla]
+//!   build-index     stage 1 (gradient stores) + stage 2 (curvature) [xla]
+//!   query           offline attribution for the held-out query set  [xla]
+//!   serve           TCP attribution service with dynamic batching   [xla]
+//!   eval-lds        LDS for a method (subset retraining, cached)    [xla]
+//!   eval-tailpatch  tail-patch score for a method                   [xla]
+//!   judge           programmatic top-1 relevance judge              [xla]
+//!
+//! Subcommands marked [xla] drive the PJRT runtime and need the `xla`
+//! cargo feature plus `make artifacts`; the default pure-CPU build
+//! reports a clear error for them.
 //!
 //! Common flags: --tier small|medium|large --f N --c N --r N
 //!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
+//!   --shards S --score-threads T
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 
-use lorif::app::{self, Method};
 use lorif::cli::Args;
 use lorif::config::Config;
+
+#[cfg(feature = "xla")]
+use lorif::app::{self, Method};
+#[cfg(feature = "xla")]
 use lorif::eval::{LdsActuals, LdsProtocol, TailPatchProtocol};
+#[cfg(feature = "xla")]
 use lorif::index::{Pipeline, Stage1Options};
+#[cfg(feature = "xla")]
 use lorif::query::{QueryEngine, ServerConfig};
+#[cfg(feature = "xla")]
 use lorif::runtime::GradExtractor;
+
+const XLA_SUBCOMMANDS: &[&str] = &[
+    "gen-corpus",
+    "train",
+    "build-index",
+    "query",
+    "serve",
+    "eval-lds",
+    "eval-tailpatch",
+    "judge",
+];
 
 fn main() {
     lorif::util::logging::init();
@@ -42,6 +64,7 @@ fn run() -> anyhow::Result<()> {
 
     match args.subcommand.as_str() {
         "info" => info(&cfg),
+        #[cfg(feature = "xla")]
         "gen-corpus" => {
             let p = Pipeline::new(cfg)?;
             let (train, queries) = p.corpus()?;
@@ -54,6 +77,7 @@ fn run() -> anyhow::Result<()> {
             );
             Ok(())
         }
+        #[cfg(feature = "xla")]
         "train" => {
             let p = Pipeline::new(cfg)?;
             let (train, _) = p.corpus()?;
@@ -61,12 +85,22 @@ fn run() -> anyhow::Result<()> {
             println!("trained base model ({} params)", params.len());
             Ok(())
         }
+        #[cfg(feature = "xla")]
         "build-index" => build_index(cfg, &args),
+        #[cfg(feature = "xla")]
         "query" => query(cfg, &args),
+        #[cfg(feature = "xla")]
         "serve" => serve(cfg, &args),
+        #[cfg(feature = "xla")]
         "eval-lds" => eval_lds(cfg, &args),
+        #[cfg(feature = "xla")]
         "eval-tailpatch" => eval_tailpatch(cfg, &args),
+        #[cfg(feature = "xla")]
         "judge" => judge(cfg, &args),
+        other if XLA_SUBCOMMANDS.contains(&other) => anyhow::bail!(
+            "subcommand '{other}' needs the PJRT runtime: rebuild with \
+             `cargo build --release --features xla` (see rust/README.md)"
+        ),
         other => anyhow::bail!("unknown subcommand '{other}' (--help for usage)"),
     }
 }
@@ -81,6 +115,11 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
         spec.param_count()
     );
     println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
+    println!(
+        "store layout: {} shard(s), score threads {}",
+        cfg.shards,
+        if cfg.score_threads == 0 { "auto".to_string() } else { cfg.score_threads.to_string() }
+    );
     let dense = spec.dense_floats_per_example(cfg.f) * 2;
     let fact = spec.factored_floats_per_example(cfg.f, cfg.c) * 2;
     println!(
@@ -108,6 +147,7 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn prepared(
     cfg: Config,
 ) -> anyhow::Result<(Pipeline, lorif::corpus::Dataset, lorif::corpus::Dataset, Vec<f32>)> {
@@ -117,6 +157,7 @@ fn prepared(
     Ok((p, train, queries, params))
 }
 
+#[cfg(feature = "xla")]
 fn build_index(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let (p, train, _, params) = prepared(cfg)?;
     let lit = p.params_literal(&params)?;
@@ -124,9 +165,10 @@ fn build_index(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let opts = Stage1Options { write_factored: true, write_dense: dense, write_embeddings: true };
     let rep = p.stage1(&lit, &train, opts)?;
     println!(
-        "stage 1: {} examples in {:.1}s -> {:?}",
+        "stage 1: {} examples in {:.1}s ({} shard(s)) -> {:?}",
         rep.n_examples,
         rep.wall.as_secs_f64(),
+        p.cfg.shards,
         p.cfg.index_dir()
     );
     let (curv, d2) = p.stage2_lorif()?;
@@ -139,6 +181,7 @@ fn build_index(cfg: Config, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn make_query_grads(
     p: &Pipeline,
     params: &[f32],
@@ -149,6 +192,7 @@ fn make_query_grads(
 }
 
 /// Score the query set with a named method; returns scores + topk + latency.
+#[cfg(feature = "xla")]
 pub fn score_with_method(
     p: &Pipeline,
     method: Method,
@@ -163,22 +207,29 @@ pub fn score_with_method(
             app::ensure_embeddings(p, &lit, train)?;
             let scorer = app::build_repsim_scorer(p, &lit, queries)?;
             let qg = make_query_grads(p, params, queries)?;
-            QueryEngine::new(scorer, k).run(&qg)
+            let mut e = QueryEngine::new(scorer, k);
+            e.topk_threads = p.cfg.score_threads;
+            e.run(&qg)
         }
         Method::Ekfac => {
             let extractor = GradExtractor::new(&p.rt, p.cfg.tier, 1, 1)?;
             let scorer = app::build_ekfac_scorer(p, &extractor, &lit, train, 512)?;
             let qg = lorif::attribution::QueryGrads::extract(&p.rt, &extractor, &lit, queries)?;
-            QueryEngine::new(scorer, k).run(&qg)
+            let mut e = QueryEngine::new(scorer, k);
+            e.topk_threads = p.cfg.score_threads;
+            e.run(&qg)
         }
         _ => {
             let scorer = app::build_store_scorer(p, method)?;
             let qg = make_query_grads(p, params, queries)?;
-            QueryEngine::new(scorer, k).run(&qg)
+            let mut e = QueryEngine::new(scorer, k);
+            e.topk_threads = p.cfg.score_threads;
+            e.run(&qg)
         }
     }
 }
 
+#[cfg(feature = "xla")]
 fn query(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
     let k = args.get_usize("topk")?.unwrap_or(10);
@@ -216,6 +267,7 @@ fn query(cfg: Config, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn serve(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
     anyhow::ensure!(
@@ -242,6 +294,7 @@ fn serve(cfg: Config, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn eval_lds(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
     let (p, train, queries, params) = prepared(cfg)?;
@@ -269,6 +322,7 @@ fn eval_lds(cfg: Config, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn eval_tailpatch(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let method = Method::parse(args.get("method").unwrap_or("lorif"))?;
     let (p, train, queries, params) = prepared(cfg)?;
@@ -296,6 +350,7 @@ fn eval_tailpatch(cfg: Config, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn judge(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let (p, train, queries, params) = prepared(cfg)?;
     let lit = p.params_literal(&params)?;
@@ -336,7 +391,9 @@ fn print_help() {
                       eval-lds eval-tailpatch judge\n\
          common flags: --tier small|medium|large --f N --c N --r N\n\
                        --n-train N --n-query N --seed S --method NAME\n\
+                       --shards S --score-threads T\n\
                        --work-dir DIR --artifacts-dir DIR\n\
-         see README.md for a walkthrough."
+         pure-CPU builds support `info`; the rest need --features xla\n\
+         see rust/README.md for a walkthrough."
     );
 }

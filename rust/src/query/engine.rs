@@ -28,6 +28,18 @@ impl LatencyBreakdown {
         }
     }
 
+    /// Field-wise aggregation utility for rolling up breakdowns (e.g.
+    /// per-shard or per-batch figures in reporting code).  The scorers'
+    /// own shard aggregation happens earlier, at the `PhaseTimer` level
+    /// in `query::parallel::merge_scores`.
+    pub fn merge(&mut self, other: &LatencyBreakdown) {
+        self.load_s += other.load_s;
+        self.compute_s += other.compute_s;
+        self.precondition_s += other.precondition_s;
+        self.total_s += other.total_s;
+        self.bytes_read += other.bytes_read;
+    }
+
     pub fn io_fraction(&self) -> f64 {
         if self.total_s <= 0.0 {
             0.0
@@ -46,11 +58,13 @@ pub struct QueryResult {
 pub struct QueryEngine<S: Scorer> {
     pub scorer: S,
     pub k: usize,
+    /// worker threads for the top-k selection (0 = all cores)
+    pub topk_threads: usize,
 }
 
 impl<S: Scorer> QueryEngine<S> {
     pub fn new(scorer: S, k: usize) -> Self {
-        QueryEngine { scorer, k }
+        QueryEngine { scorer, k, topk_threads: 0 }
     }
 
     pub fn run(&mut self, queries: &QueryGrads) -> anyhow::Result<QueryResult> {
@@ -64,7 +78,7 @@ impl<S: Scorer> QueryEngine<S> {
             latency.total_s,
             report.timer.summary()
         );
-        let topk = report.topk(self.k);
+        let topk = super::parallel::topk(&report.scores, self.k, self.topk_threads);
         Ok(QueryResult { scores: report.scores, topk, latency })
     }
 }
@@ -102,5 +116,44 @@ mod tests {
         assert_eq!(r.topk[0], vec![4, 3, 2]);
         assert!((r.latency.io_fraction() - 0.75).abs() < 0.05);
         assert_eq!(r.latency.bytes_read, 42);
+    }
+
+    fn breakdown(load: f64, compute: f64, pre: f64, bytes: u64) -> LatencyBreakdown {
+        LatencyBreakdown {
+            load_s: load,
+            compute_s: compute,
+            precondition_s: pre,
+            total_s: load + compute + pre,
+            bytes_read: bytes,
+        }
+    }
+
+    #[test]
+    fn breakdown_merge_sums_shards() {
+        // three shards' worth of latency aggregates field-wise
+        let mut total = breakdown(0.0, 0.0, 0.0, 0);
+        for b in [
+            breakdown(0.3, 0.1, 0.05, 1000),
+            breakdown(0.2, 0.2, 0.0, 2000),
+            breakdown(0.5, 0.1, 0.05, 3000),
+        ] {
+            total.merge(&b);
+        }
+        assert!((total.load_s - 1.0).abs() < 1e-12);
+        assert!((total.compute_s - 0.4).abs() < 1e-12);
+        assert!((total.precondition_s - 0.1).abs() < 1e-12);
+        assert!((total.total_s - 1.5).abs() < 1e-12);
+        assert_eq!(total.bytes_read, 6000);
+        assert!((total.io_fraction() - 1.0 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn io_fraction_zero_total_is_zero() {
+        let b = breakdown(0.0, 0.0, 0.0, 0);
+        assert_eq!(b.io_fraction(), 0.0);
+        // a merge of empty breakdowns stays well-defined
+        let mut m = breakdown(0.0, 0.0, 0.0, 0);
+        m.merge(&b);
+        assert_eq!(m.io_fraction(), 0.0);
     }
 }

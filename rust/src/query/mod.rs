@@ -1,8 +1,13 @@
-//! Query-time serving: the engine (scorer + top-k + latency breakdown)
-//! and the TCP attribution service with dynamic batching.
+//! Query-time serving: the engine (scorer + top-k + latency breakdown),
+//! the parallel shard-scoring machinery, and — with the `xla` feature —
+//! the TCP attribution service with dynamic batching.
 
 pub mod engine;
+pub mod parallel;
+#[cfg(feature = "xla")]
 pub mod server;
 
 pub use engine::{LatencyBreakdown, QueryEngine, QueryResult};
+pub use parallel::{map_shards, merge_scores, ShardScores, TopK};
+#[cfg(feature = "xla")]
 pub use server::{serve, ServerConfig};

@@ -1,0 +1,243 @@
+//! Parallel shard-scoring execution.
+//!
+//! The paper's Figure 3 shows query latency dominated by streaming the
+//! gradient store; a single reader thread leaves every other core idle.
+//! This module runs a scorer's streaming pass over the shards of a v2
+//! store on the worker pool: each shard produces a column block of the
+//! score matrix plus its own latency figures, which are merged into the
+//! global `ScoreReport` (score columns copied into place, per-phase
+//! times and bytes summed across shards).
+//!
+//! It also provides the bounded top-k accumulator used to merge
+//! per-shard (or per-column-block) top-k heaps into the global top-k —
+//! provably equal to a stable descending sort of the full score row
+//! (see `tests/prop.rs`).
+
+use std::time::Duration;
+
+use crate::linalg::Mat;
+use crate::store::{ShardSet, StoreReader};
+use crate::util::pool;
+use crate::util::timer::PhaseTimer;
+
+/// Per-shard partial result of a scorer's streaming pass.
+pub struct ShardScores {
+    /// global index of the shard's first example (column offset)
+    pub start: usize,
+    /// (n_query, shard_count) score columns
+    pub scores: Mat,
+    /// disk read + decode time for this shard
+    pub io: Duration,
+    /// scoring compute time for this shard
+    pub compute: Duration,
+    pub bytes: u64,
+}
+
+/// Run `f` once per shard on the worker pool (threads = 0 means all
+/// cores), returning results in shard order.
+pub fn map_shards<T, F>(set: &ShardSet, threads: usize, f: F) -> anyhow::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, StoreReader) -> anyhow::Result<T> + Sync,
+{
+    pool::run(threads, set.n_shards(), |i| f(i, set.reader(i)))
+}
+
+/// Merge per-shard score columns and timings into the global score
+/// matrix.  Phase times SUM across shards (CPU time, matching how the
+/// sequential path accounts a full pass), as does `bytes`.
+pub fn merge_scores(nq: usize, n_total: usize, parts: Vec<ShardScores>) -> (Mat, PhaseTimer, u64) {
+    let mut scores = Mat::zeros(nq, n_total);
+    let mut io = Duration::ZERO;
+    let mut compute = Duration::ZERO;
+    let mut bytes = 0u64;
+    for p in parts {
+        debug_assert_eq!(p.scores.rows, nq);
+        for q in 0..nq {
+            let cols = p.scores.cols;
+            scores.row_mut(q)[p.start..p.start + cols].copy_from_slice(p.scores.row(q));
+        }
+        io += p.io;
+        compute += p.compute;
+        bytes += p.bytes;
+    }
+    let mut timer = PhaseTimer::new();
+    timer.add("load", io);
+    timer.add("compute", compute);
+    (scores, timer, bytes)
+}
+
+/// Bounded top-k accumulator over (index, score) pairs.
+///
+/// Keeps the `k` highest-scoring entries, ordered descending by score
+/// with ties broken toward the LOWER index — exactly the order a stable
+/// descending sort of the full score row produces, so merged per-shard
+/// accumulators reproduce the global top-k bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    /// sorted: descending score, ascending index on ties
+    entries: Vec<(f32, usize)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        TopK { k, entries: Vec::with_capacity(k.min(1024) + 1) }
+    }
+
+    pub fn push(&mut self, index: usize, score: f32) {
+        if self.k == 0 {
+            return;
+        }
+        // NaN has no place in a ranking; fail loudly like the argsort
+        // path (`ScoreReport::topk`'s partial_cmp().unwrap()) does
+        // instead of silently ranking the corrupted example first.
+        assert!(!score.is_nan(), "NaN score for training example {index}");
+        let pos = self
+            .entries
+            .partition_point(|&(s, i)| s > score || (s == score && i < index));
+        if pos >= self.k {
+            return;
+        }
+        self.entries.insert(pos, (score, index));
+        self.entries.truncate(self.k);
+    }
+
+    /// Fold another accumulator's entries into this one.
+    pub fn merge(&mut self, other: &TopK) {
+        for &(s, i) in &other.entries {
+            self.push(i, s);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The accumulated indices, best first.
+    pub fn into_indices(self) -> Vec<usize> {
+        self.entries.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+/// Top-k training indices per query, computed by splitting the score
+/// columns into per-worker blocks, building block-local accumulators in
+/// parallel, and merging — the same merge the sharded scorers rely on.
+/// Equivalent to `ScoreReport::topk` (a stable descending argsort).
+pub fn topk(scores: &Mat, k: usize, threads: usize) -> Vec<Vec<usize>> {
+    let nq = scores.rows;
+    let n = scores.cols;
+    let k = k.min(n);
+    if nq == 0 || n == 0 || k == 0 {
+        return vec![Vec::new(); nq];
+    }
+    let workers = pool::effective_threads(threads).min(n).max(1);
+    let block = (n + workers - 1) / workers;
+    let parts: Vec<Vec<TopK>> = pool::run(threads, workers, |b| {
+        let lo = b * block;
+        let hi = (lo + block).min(n);
+        let mut local: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+        for q in 0..nq {
+            let row = scores.row(q);
+            let acc = &mut local[q];
+            for t in lo..hi {
+                acc.push(t, row[t]);
+            }
+        }
+        Ok(local)
+    })
+    .expect("topk blocks are infallible");
+    let mut merged: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+    for part in &parts {
+        for (q, acc) in part.iter().enumerate() {
+            merged[q].merge(acc);
+        }
+    }
+    merged.into_iter().map(TopK::into_indices).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::ScoreReport;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn topk_accumulator_keeps_best_sorted() {
+        let mut acc = TopK::new(3);
+        for (i, s) in [(0, 1.0f32), (1, 5.0), (2, -2.0), (3, 5.0), (4, 3.0)] {
+            acc.push(i, s);
+        }
+        // ties (1 and 3 at 5.0) resolve toward the lower index
+        assert_eq!(acc.into_indices(), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn topk_merge_equals_single_pass() {
+        let mut rng = Rng::new(3);
+        let scores: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+        let mut whole = TopK::new(7);
+        for (i, &s) in scores.iter().enumerate() {
+            whole.push(i, s);
+        }
+        let mut left = TopK::new(7);
+        let mut right = TopK::new(7);
+        for (i, &s) in scores.iter().enumerate() {
+            if i < 40 {
+                left.push(i, s);
+            } else {
+                right.push(i, s);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left.into_indices(), whole.into_indices());
+    }
+
+    #[test]
+    fn parallel_topk_matches_report_argsort() {
+        let mut rng = Rng::new(11);
+        let scores = Mat::random_normal(4, 333, 1.0, &mut rng);
+        let rep = ScoreReport {
+            scores: scores.clone(),
+            timer: Default::default(),
+            bytes_read: 0,
+        };
+        let want = rep.topk(10);
+        for threads in [1, 2, 5] {
+            assert_eq!(topk(&scores, 10, threads), want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn topk_edge_cases() {
+        let m = Mat::zeros(2, 0);
+        assert_eq!(topk(&m, 5, 2), vec![Vec::<usize>::new(), Vec::new()]);
+        let mut rng = Rng::new(1);
+        let m = Mat::random_normal(1, 5, 1.0, &mut rng);
+        // k larger than n clamps
+        assert_eq!(topk(&m, 50, 3)[0].len(), 5);
+        assert_eq!(topk(&m, 0, 3), vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn merge_scores_places_columns_and_sums_latency() {
+        let mk = |start: usize, cols: usize, fill: f32| ShardScores {
+            start,
+            scores: Mat::from_vec(2, cols, vec![fill; 2 * cols]),
+            io: Duration::from_millis(10),
+            compute: Duration::from_millis(5),
+            bytes: 100,
+        };
+        let (scores, timer, bytes) =
+            merge_scores(2, 7, vec![mk(0, 3, 1.0), mk(3, 2, 2.0), mk(5, 2, 3.0)]);
+        assert_eq!(scores.row(0), &[1.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        assert_eq!(scores.row(1), &[1.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        assert_eq!(timer.get("load"), Duration::from_millis(30));
+        assert_eq!(timer.get("compute"), Duration::from_millis(15));
+        assert_eq!(bytes, 300);
+    }
+}

@@ -9,26 +9,10 @@ use std::rc::Rc;
 
 use super::client::{lit_f32, lit_i32, lit_to_mat, lit_to_vec_f32, Runtime};
 use super::manifest::Manifest;
+use super::types::{ExtractBatch, LayerGrads};
 use crate::corpus::Dataset;
 use crate::linalg::Mat;
 use crate::model::spec::Tier;
-
-/// Per-layer outputs of one grad-extract batch.
-pub struct LayerGrads {
-    /// dense projected gradients, rows = examples, cols = d1*d2
-    pub g: Mat,
-    /// rank-c left factors, rows = examples, cols = d1*c
-    pub u: Mat,
-    /// rank-c right factors, rows = examples, cols = d2*c
-    pub v: Mat,
-}
-
-pub struct ExtractBatch {
-    pub losses: Vec<f32>,
-    pub layers: Vec<LayerGrads>,
-    /// number of valid (non-padding) examples
-    pub valid: usize,
-}
 
 /// Gradient extractor for a fixed (tier, f, c).
 pub struct GradExtractor {

@@ -1,10 +1,20 @@
 //! Runtime: PJRT client wrapper loading AOT artifacts (HLO text) and the
 //! typed graph interfaces the coordinator calls on the hot path.
+//!
+//! The PJRT-backed pieces (`client`, `graphs`) sit behind the `xla`
+//! cargo feature; the artifact manifest and the extract-batch data types
+//! are plain Rust and always available (the store layer consumes them).
 
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod graphs;
 pub mod manifest;
+pub mod types;
 
+#[cfg(feature = "xla")]
 pub use client::{lit_f32, lit_i32, lit_to_mat, lit_to_vec_f32, Runtime};
-pub use graphs::{Embedder, EkfacStats, ExtractBatch, GradExtractor, LayerGrads, LossEval, Trainer};
+#[cfg(feature = "xla")]
+pub use graphs::{Embedder, EkfacStats, GradExtractor, LossEval, Trainer};
 pub use manifest::Manifest;
+pub use types::{ExtractBatch, LayerGrads};

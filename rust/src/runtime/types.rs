@@ -1,0 +1,22 @@
+//! Plain data types shared between the (xla-gated) graph runtime and the
+//! CPU-only store/scoring stack.  Kept outside the `xla` feature so
+//! writers, fixtures, and tests build without the PJRT bindings.
+
+use crate::linalg::Mat;
+
+/// Per-layer outputs of one grad-extract batch.
+pub struct LayerGrads {
+    /// dense projected gradients, rows = examples, cols = d1*d2
+    pub g: Mat,
+    /// rank-c left factors, rows = examples, cols = d1*c
+    pub u: Mat,
+    /// rank-c right factors, rows = examples, cols = d2*c
+    pub v: Mat,
+}
+
+pub struct ExtractBatch {
+    pub losses: Vec<f32>,
+    pub layers: Vec<LayerGrads>,
+    /// number of valid (non-padding) examples
+    pub valid: usize,
+}

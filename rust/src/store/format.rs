@@ -1,8 +1,18 @@
 //! On-disk gradient store format.
 //!
-//! A store is a pair of files:
+//! A v1 store is a pair of files:
 //!   `<name>.grads`  — fixed-stride bf16 records, one per training example
 //!   `<name>.json`   — metadata (kind, tier, f, c, layer dims, count)
+//!
+//! A v2 store shards the records into contiguous files:
+//!   `<name>.shard{i}.grads` — records for examples [start_i, start_i + n_i)
+//!   `<name>.json`           — v1 metadata plus `"version": 2` and
+//!                             `"shards": [n_0, n_1, ...]` example counts
+//!
+//! The sidecar is backward compatible: a v1 reader field set (no
+//! `shards` key) means a single `<name>.grads` file, and `ShardSet`
+//! opens both layouts.  Sharding exists so the query hot path can score
+//! shards on parallel workers (see `query::parallel`).
 //!
 //! Two kinds (paper Fig 1):
 //!   * `Dense`    — per layer, the full projected gradient `d1*d2` (LoGRA,
@@ -49,6 +59,9 @@ pub struct StoreMeta {
     /// (d1, d2) per tracked layer
     pub layers: Vec<(usize, usize)>,
     pub n_examples: usize,
+    /// `None` = v1 single-file layout; `Some(counts)` = v2 layout with
+    /// one `<name>.shard{i}.grads` file of `counts[i]` examples each.
+    pub shards: Option<Vec<usize>>,
 }
 
 impl StoreMeta {
@@ -89,7 +102,7 @@ impl StoreMeta {
     }
 
     pub fn to_json(&self) -> Value {
-        obj([
+        let mut fields = vec![
             ("kind", self.kind.as_str().into()),
             ("tier", self.tier.as_str().into()),
             ("f", self.f.into()),
@@ -104,10 +117,24 @@ impl StoreMeta {
                 ),
             ),
             ("n_examples", self.n_examples.into()),
-        ])
+        ];
+        if let Some(counts) = &self.shards {
+            fields.push(("version", 2usize.into()));
+            fields.push((
+                "shards",
+                Value::Arr(counts.iter().map(|&n| n.into()).collect()),
+            ));
+        }
+        obj(fields)
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<StoreMeta> {
+        if let Some(version) = v.get("version").and_then(Value::as_usize) {
+            anyhow::ensure!(
+                version <= 2,
+                "unsupported store version {version} (this build reads v1 and v2)"
+            );
+        }
         let layers = v
             .req("layers")?
             .as_arr()
@@ -121,13 +148,38 @@ impl StoreMeta {
                 ))
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
+        let shards = match v.get("shards") {
+            None => None,
+            Some(s) => {
+                let arr = s
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("shards not array"))?;
+                anyhow::ensure!(!arr.is_empty(), "empty shard list");
+                Some(
+                    arr.iter()
+                        .map(|x| {
+                            x.as_usize().ok_or_else(|| anyhow::anyhow!("bad shard count"))
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                )
+            }
+        };
+        let n_examples = v.req_usize("n_examples")?;
+        if let Some(counts) = &shards {
+            let total: usize = counts.iter().sum();
+            anyhow::ensure!(
+                total == n_examples,
+                "shard counts sum to {total}, expected n_examples = {n_examples}"
+            );
+        }
         Ok(StoreMeta {
             kind: StoreKind::parse(v.req_str("kind")?)?,
             tier: v.req_str("tier")?.to_string(),
             f: v.req_usize("f")?,
             c: v.req_usize("c")?,
             layers,
-            n_examples: v.req_usize("n_examples")?,
+            n_examples,
+            shards,
         })
     }
 
@@ -137,6 +189,11 @@ impl StoreMeta {
 
     pub fn data_path(base: &Path) -> PathBuf {
         base.with_extension("grads")
+    }
+
+    /// Data file of shard `i` in the v2 layout.
+    pub fn shard_data_path(base: &Path, i: usize) -> PathBuf {
+        base.with_extension(format!("shard{i}.grads"))
     }
 
     pub fn save(&self, base: &Path) -> anyhow::Result<()> {
@@ -162,6 +219,7 @@ mod tests {
             c: 2,
             layers: vec![(16, 48), (16, 16)],
             n_examples: 100,
+            shards: None,
         }
     }
 
@@ -191,6 +249,45 @@ mod tests {
         assert_eq!(back.kind, StoreKind::Dense);
         assert_eq!(back.layers, m.layers);
         assert_eq!(back.n_examples, 100);
+        assert_eq!(back.shards, None);
+    }
+
+    #[test]
+    fn json_roundtrip_v2_shards() {
+        let mut m = meta(StoreKind::Factored);
+        m.shards = Some(vec![40, 40, 20]);
+        let doc = m.to_json();
+        assert_eq!(doc.get("version").and_then(|v| v.as_usize()), Some(2));
+        let back = StoreMeta::from_json(&doc).unwrap();
+        assert_eq!(back.shards, Some(vec![40, 40, 20]));
+    }
+
+    #[test]
+    fn rejects_shard_counts_not_summing_to_total() {
+        let mut m = meta(StoreKind::Dense);
+        m.shards = Some(vec![40, 40]); // 80 != 100
+        assert!(StoreMeta::from_json(&m.to_json()).is_err());
+    }
+
+    #[test]
+    fn rejects_future_store_version() {
+        let m = meta(StoreKind::Dense);
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("version".into(), 3usize.into());
+        }
+        let err = StoreMeta::from_json(&doc).unwrap_err();
+        assert!(format!("{err}").contains("unsupported store version"), "{err}");
+    }
+
+    #[test]
+    fn shard_paths_are_distinct() {
+        let base = Path::new("/tmp/idx/factored");
+        assert_eq!(
+            StoreMeta::shard_data_path(base, 0),
+            PathBuf::from("/tmp/idx/factored.shard0.grads")
+        );
+        assert_ne!(StoreMeta::shard_data_path(base, 1), StoreMeta::data_path(base));
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Gradient store: the persistent per-example index (paper's central
 //! storage/IO bottleneck).  bf16 fixed-stride records + JSON sidecar;
 //! dense (LoGRA) and rank-c factored (LoRIF) layouts share one reader.
+//!
+//! Stores come in two on-disk layouts: v1 (one `.grads` file) and v2
+//! (contiguous `.shard{i}.grads` files + a shard manifest).  `ShardSet`
+//! opens both; the v2 layout feeds the parallel scoring path in
+//! `query::parallel`.
 
 pub mod format;
 pub mod reader;
 pub mod writer;
 
 pub use format::{StoreKind, StoreMeta};
-pub use reader::{Chunk, ChunkLayer, StoreReader};
-pub use writer::StoreWriter;
+pub use reader::{Chunk, ChunkLayer, ShardSet, ShardSpan, StoreReader};
+pub use writer::{ShardedWriter, StoreWriter};

@@ -1,9 +1,14 @@
-//! Store reader: sequential batched reads with optional prefetch.
+//! Store readers: sequential batched reads with optional prefetch.
 //!
-//! The query hot path streams the whole store once per query batch.  The
+//! `StoreReader` streams one data file (a v1 store, or a single shard of
+//! a v2 store) and reports example indices in GLOBAL coordinates.  The
 //! prefetch thread reads the next chunk from disk while the scorer
 //! consumes the current one, overlapping I/O and compute — the reader
 //! reports the two times separately, which is what Figure 3 plots.
+//!
+//! `ShardSet` opens a whole store (either layout), validates every data
+//! file against the manifest, and hands out per-shard readers for the
+//! parallel query path (`query::parallel`).
 
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
@@ -16,7 +21,7 @@ use crate::util::bf16;
 
 /// A decoded chunk of consecutive examples.
 pub struct Chunk {
-    /// index of the first example in this chunk
+    /// global index of the first example in this chunk
     pub start: usize,
     pub count: usize,
     /// per layer: matrices with `count` rows
@@ -46,14 +51,60 @@ impl ChunkLayer {
     }
 }
 
+/// Decode `raw` (a whole number of records) into a chunk starting at
+/// global example index `start`.
+fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> Chunk {
+    let stride = meta.bytes_per_example();
+    let count = raw.len() / stride;
+    let t0 = Instant::now();
+    let mut layers = Vec::with_capacity(meta.layers.len());
+    for (l, &(d1, d2)) in meta.layers.iter().enumerate() {
+        let (off, len) = meta.layer_span(l);
+        match meta.kind {
+            StoreKind::Dense => {
+                let mut g = Mat::zeros(count, d1 * d2);
+                for ex in 0..count {
+                    let src = &raw[ex * stride + off..ex * stride + off + len * 2];
+                    bf16::decode_into(src, g.row_mut(ex));
+                }
+                layers.push(ChunkLayer::Dense { g });
+            }
+            StoreKind::Factored => {
+                let cu = d1 * meta.c;
+                let cv = d2 * meta.c;
+                let mut u = Mat::zeros(count, cu);
+                let mut v = Mat::zeros(count, cv);
+                for ex in 0..count {
+                    let base = ex * stride + off;
+                    bf16::decode_into(&raw[base..base + cu * 2], u.row_mut(ex));
+                    bf16::decode_into(&raw[base + cu * 2..base + (cu + cv) * 2], v.row_mut(ex));
+                }
+                layers.push(ChunkLayer::Factored { u, v });
+            }
+        }
+    }
+    Chunk { start, count, layers, io_time: t0.elapsed() }
+}
+
+/// Reader over one data file holding examples [start, start + count).
 pub struct StoreReader {
     pub meta: StoreMeta,
     path: PathBuf,
+    /// global index of this file's first example (0 for a v1 store)
+    pub start: usize,
+    /// number of examples in this file
+    pub count: usize,
 }
 
 impl StoreReader {
+    /// Open a v1 (single-file) store.  Sharded stores must be opened
+    /// with [`ShardSet::open`].
     pub fn open(base: &Path) -> anyhow::Result<StoreReader> {
         let meta = StoreMeta::load(base)?;
+        anyhow::ensure!(
+            meta.shards.is_none(),
+            "sharded store manifest: open it with ShardSet::open"
+        );
         let path = StoreMeta::data_path(base);
         let size = std::fs::metadata(&path)?.len();
         anyhow::ensure!(
@@ -62,46 +113,12 @@ impl StoreReader {
             size,
             meta.total_bytes()
         );
-        Ok(StoreReader { meta, path })
+        let count = meta.n_examples;
+        Ok(StoreReader { meta, path, start: 0, count })
     }
 
-    fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> Chunk {
-        let stride = meta.bytes_per_example();
-        let count = raw.len() / stride;
-        let t0 = Instant::now();
-        let mut layers = Vec::with_capacity(meta.layers.len());
-        for (l, &(d1, d2)) in meta.layers.iter().enumerate() {
-            let (off, len) = meta.layer_span(l);
-            match meta.kind {
-                StoreKind::Dense => {
-                    let mut g = Mat::zeros(count, d1 * d2);
-                    for ex in 0..count {
-                        let src = &raw[ex * stride + off..ex * stride + off + len * 2];
-                        bf16::decode_into(src, g.row_mut(ex));
-                    }
-                    layers.push(ChunkLayer::Dense { g });
-                }
-                StoreKind::Factored => {
-                    let cu = d1 * meta.c;
-                    let cv = d2 * meta.c;
-                    let mut u = Mat::zeros(count, cu);
-                    let mut v = Mat::zeros(count, cv);
-                    for ex in 0..count {
-                        let base = ex * stride + off;
-                        bf16::decode_into(&raw[base..base + cu * 2], u.row_mut(ex));
-                        bf16::decode_into(
-                            &raw[base + cu * 2..base + (cu + cv) * 2],
-                            v.row_mut(ex),
-                        );
-                    }
-                    layers.push(ChunkLayer::Factored { u, v });
-                }
-            }
-        }
-        Chunk { start, count, layers, io_time: t0.elapsed() }
-    }
-
-    /// Stream all examples in chunks of `chunk_size`, calling `f` for each.
+    /// Stream this file's examples in chunks of `chunk_size`, calling `f`
+    /// for each.  Chunk `start` fields are global example indices.
     /// Returns (io_time, total_bytes_read).  `io_time` covers read+decode.
     pub fn stream(
         &self,
@@ -109,12 +126,13 @@ impl StoreReader {
         prefetch: bool,
         mut f: impl FnMut(Chunk) -> anyhow::Result<()>,
     ) -> anyhow::Result<(Duration, u64)> {
-        let n = self.meta.n_examples;
+        let n = self.count;
         if n == 0 {
             return Ok((Duration::ZERO, 0));
         }
         let stride = self.meta.bytes_per_example();
-        let total_bytes = self.meta.total_bytes();
+        let total_bytes = stride as u64 * n as u64;
+        let global_off = self.start;
         if !prefetch {
             let mut file = std::fs::File::open(&self.path)?;
             let mut io_total = Duration::ZERO;
@@ -125,7 +143,7 @@ impl StoreReader {
                 let t0 = Instant::now();
                 let buf = &mut raw[..count * stride];
                 file.read_exact(buf)?;
-                let chunk = Self::decode_chunk(&self.meta, start, buf);
+                let chunk = decode_chunk(&self.meta, global_off + start, buf);
                 io_total += t0.elapsed();
                 f(chunk)?;
                 start += count;
@@ -147,7 +165,7 @@ impl StoreReader {
                     let t0 = Instant::now();
                     let mut raw = vec![0u8; count * stride];
                     file.read_exact(&mut raw)?;
-                    let mut chunk = Self::decode_chunk(&meta, start, &raw);
+                    let mut chunk = decode_chunk(&meta, global_off + start, &raw);
                     chunk.io_time = t0.elapsed();
                     if tx.send(Ok(chunk)).is_err() {
                         return Ok(()); // consumer hung up
@@ -171,15 +189,127 @@ impl StoreReader {
         Ok((io_total, total_bytes))
     }
 
-    /// Read a specific contiguous range (used by tests and diagnostics).
+    /// Read a specific contiguous range of GLOBAL example indices, which
+    /// must lie inside this file (used by tests and diagnostics).
+    pub fn read_range(&self, start: usize, count: usize) -> anyhow::Result<Chunk> {
+        anyhow::ensure!(
+            start >= self.start && start + count <= self.start + self.count,
+            "range out of bounds"
+        );
+        let stride = self.meta.bytes_per_example();
+        let mut file = std::fs::File::open(&self.path)?;
+        file.seek(SeekFrom::Start(((start - self.start) * stride) as u64))?;
+        let mut raw = vec![0u8; count * stride];
+        file.read_exact(&mut raw)?;
+        Ok(decode_chunk(&self.meta, start, &raw))
+    }
+}
+
+/// One shard's location within the global example range.
+#[derive(Clone, Debug)]
+pub struct ShardSpan {
+    pub path: PathBuf,
+    pub start: usize,
+    pub count: usize,
+}
+
+/// An opened store: v1 single file (one pseudo-shard) or v2 shard files.
+/// Every data file is validated against the manifest at open time.
+pub struct ShardSet {
+    pub meta: StoreMeta,
+    spans: Vec<ShardSpan>,
+}
+
+impl ShardSet {
+    pub fn open(base: &Path) -> anyhow::Result<ShardSet> {
+        let meta = StoreMeta::load(base)?;
+        let stride = meta.bytes_per_example() as u64;
+        let mut spans = Vec::new();
+        match meta.shards.clone() {
+            None => {
+                let path = StoreMeta::data_path(base);
+                let size = std::fs::metadata(&path)?.len();
+                anyhow::ensure!(
+                    size == meta.total_bytes(),
+                    "store size mismatch: {} vs expected {}",
+                    size,
+                    meta.total_bytes()
+                );
+                spans.push(ShardSpan { path, start: 0, count: meta.n_examples });
+            }
+            Some(counts) => {
+                let mut start = 0usize;
+                for (i, &count) in counts.iter().enumerate() {
+                    let path = StoreMeta::shard_data_path(base, i);
+                    let size = std::fs::metadata(&path)?.len();
+                    anyhow::ensure!(
+                        size == count as u64 * stride,
+                        "shard {i} size mismatch: {size} B on disk vs {count} examples \
+                         x {stride} B/example in the manifest"
+                    );
+                    spans.push(ShardSpan { path, start, count });
+                    start += count;
+                }
+            }
+        }
+        Ok(ShardSet { meta, spans })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &ShardSpan {
+        &self.spans[i]
+    }
+
+    /// A reader over shard `i`, reporting global example indices.
+    pub fn reader(&self, i: usize) -> StoreReader {
+        let s = &self.spans[i];
+        StoreReader {
+            meta: self.meta.clone(),
+            path: s.path.clone(),
+            start: s.start,
+            count: s.count,
+        }
+    }
+
+    /// Sequential stream over every shard in order — same contract as
+    /// `StoreReader::stream` on a v1 store (used by the stage-2 builders
+    /// and anything else that wants a single-threaded full pass).
+    pub fn stream(
+        &self,
+        chunk_size: usize,
+        prefetch: bool,
+        mut f: impl FnMut(Chunk) -> anyhow::Result<()>,
+    ) -> anyhow::Result<(Duration, u64)> {
+        let mut io = Duration::ZERO;
+        let mut bytes = 0u64;
+        for i in 0..self.spans.len() {
+            let (d, b) = self.reader(i).stream(chunk_size, prefetch, &mut f)?;
+            io += d;
+            bytes += b;
+        }
+        Ok((io, bytes))
+    }
+
+    /// Read a contiguous global range, stitching across shard boundaries.
     pub fn read_range(&self, start: usize, count: usize) -> anyhow::Result<Chunk> {
         anyhow::ensure!(start + count <= self.meta.n_examples, "range out of bounds");
         let stride = self.meta.bytes_per_example();
-        let mut file = std::fs::File::open(&self.path)?;
-        file.seek(SeekFrom::Start((start * stride) as u64))?;
         let mut raw = vec![0u8; count * stride];
-        file.read_exact(&mut raw)?;
-        Ok(Self::decode_chunk(&self.meta, start, &raw))
+        for s in &self.spans {
+            let lo = start.max(s.start);
+            let hi = (start + count).min(s.start + s.count);
+            if lo >= hi {
+                continue;
+            }
+            let mut file = std::fs::File::open(&s.path)?;
+            file.seek(SeekFrom::Start(((lo - s.start) * stride) as u64))?;
+            let dst = &mut raw[(lo - start) * stride..(hi - start) * stride];
+            file.read_exact(dst)?;
+        }
+        Ok(decode_chunk(&self.meta, start, &raw))
     }
 }
 
@@ -187,7 +317,7 @@ impl StoreReader {
 mod tests {
     use super::*;
     use crate::runtime::{ExtractBatch, LayerGrads};
-    use crate::store::writer::StoreWriter;
+    use crate::store::writer::{ShardedWriter, StoreWriter};
     use crate::util::prng::Rng;
 
     fn fake_batch(n: usize, layers: &[(usize, usize)], c: usize, seed: u64) -> ExtractBatch {
@@ -203,18 +333,44 @@ mod tests {
         ExtractBatch { losses: vec![0.0; n], layers, valid: n }
     }
 
-    fn write_store(kind: StoreKind, n: usize, c: usize) -> (tempdir::TempBase, StoreMeta) {
-        let layers = vec![(8, 12), (8, 8)];
-        let base = tempdir::base(&format!("store_{}_{}", kind.as_str(), n));
-        let meta = StoreMeta {
+    fn meta_for(kind: StoreKind, layers: &[(usize, usize)], c: usize) -> StoreMeta {
+        StoreMeta {
             kind,
             tier: "small".into(),
             f: 4,
             c,
-            layers: layers.clone(),
+            layers: layers.to_vec(),
             n_examples: 0,
-        };
-        let mut w = StoreWriter::create(&base.path, meta).unwrap();
+            shards: None,
+        }
+    }
+
+    fn write_store(kind: StoreKind, n: usize, c: usize) -> (tempdir::TempBase, StoreMeta) {
+        let layers = vec![(8, 12), (8, 8)];
+        let base = tempdir::base(&format!("store_{}_{}", kind.as_str(), n));
+        let mut w = StoreWriter::create(&base.path, meta_for(kind, &layers, c)).unwrap();
+        let mut written = 0;
+        while written < n {
+            let take = 5.min(n - written);
+            let b = fake_batch(take, &layers, c, written as u64);
+            w.append(&b).unwrap();
+            written += take;
+        }
+        let meta = w.finalize().unwrap();
+        (base, meta)
+    }
+
+    fn write_sharded(
+        kind: StoreKind,
+        n: usize,
+        c: usize,
+        shards: usize,
+        name: &str,
+    ) -> (tempdir::TempBase, StoreMeta) {
+        let layers = vec![(8, 12), (8, 8)];
+        let base = tempdir::base(name);
+        let mut w =
+            ShardedWriter::create(&base.path, meta_for(kind, &layers, c), shards, n).unwrap();
         let mut written = 0;
         while written < n {
             let take = 5.min(n - written);
@@ -238,6 +394,11 @@ mod tests {
             fn drop(&mut self) {
                 let _ = std::fs::remove_file(self.path.with_extension("grads"));
                 let _ = std::fs::remove_file(self.path.with_extension("json"));
+                for i in 0..64 {
+                    let _ = std::fs::remove_file(
+                        self.path.with_extension(format!("shard{i}.grads")),
+                    );
+                }
             }
         }
 
@@ -306,6 +467,7 @@ mod tests {
         let full = std::fs::read(&data).unwrap();
         std::fs::write(&data, &full[..full.len() - 10]).unwrap();
         assert!(StoreReader::open(&base.path).is_err());
+        assert!(ShardSet::open(&base.path).is_err());
     }
 
     #[test]
@@ -314,5 +476,115 @@ mod tests {
         let r = StoreReader::open(&base.path).unwrap();
         assert!(r.read_range(8, 3).is_err());
         assert!(r.read_range(8, 2).is_ok());
+    }
+
+    #[test]
+    fn sharded_roundtrip_matches_monolithic() {
+        let (mono, _) = write_store(StoreKind::Factored, 27, 2);
+        let (shard, meta) =
+            write_sharded(StoreKind::Factored, 27, 2, 4, "sharded_vs_mono");
+        assert_eq!(meta.shards.as_ref().unwrap().len(), 4);
+        assert_eq!(meta.shards.as_ref().unwrap().iter().sum::<usize>(), 27);
+
+        let collect = |set: &ShardSet, chunk: usize| {
+            let mut rows: Vec<(usize, Vec<f32>)> = Vec::new();
+            set.stream(chunk, false, |c| {
+                let (u, _) = c.layers[0].factors();
+                for ex in 0..c.count {
+                    rows.push((c.start + ex, u.row(ex).to_vec()));
+                }
+                Ok(())
+            })
+            .unwrap();
+            rows
+        };
+        let a = collect(&ShardSet::open(&mono.path).unwrap(), 6);
+        let b = collect(&ShardSet::open(&shard.path).unwrap(), 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shard_set_opens_v1_as_single_shard() {
+        let (base, _) = write_store(StoreKind::Dense, 11, 1);
+        let set = ShardSet::open(&base.path).unwrap();
+        assert_eq!(set.n_shards(), 1);
+        assert_eq!(set.shard(0).start, 0);
+        assert_eq!(set.shard(0).count, 11);
+        // the per-shard reader equals the plain v1 reader
+        let direct = StoreReader::open(&base.path).unwrap();
+        let via_set = set.reader(0);
+        let a = direct.read_range(2, 4).unwrap();
+        let b = via_set.read_range(2, 4).unwrap();
+        assert_eq!(a.layers[0].dense().data, b.layers[0].dense().data);
+    }
+
+    #[test]
+    fn shard_readers_report_global_offsets() {
+        let (base, meta) = write_sharded(StoreKind::Dense, 20, 1, 3, "global_offsets");
+        let set = ShardSet::open(&base.path).unwrap();
+        assert_eq!(set.n_shards(), meta.shards.as_ref().unwrap().len());
+        let mut starts = Vec::new();
+        for i in 0..set.n_shards() {
+            let r = set.reader(i);
+            r.stream(64, false, |chunk| {
+                starts.push(chunk.start);
+                assert_eq!(chunk.start, r.start);
+                Ok(())
+            })
+            .unwrap();
+        }
+        assert_eq!(starts[0], 0);
+        assert!(starts.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn sharded_read_range_stitches_across_shards() {
+        let (base, _) = write_sharded(StoreKind::Dense, 20, 1, 3, "stitch_range");
+        let set = ShardSet::open(&base.path).unwrap();
+        // shards hold 7/7/6 examples; [5, 11) crosses the first boundary
+        let chunk = set.read_range(5, 6).unwrap();
+        assert_eq!(chunk.start, 5);
+        assert_eq!(chunk.count, 6);
+        let full = set.read_range(0, 20).unwrap();
+        for ex in 0..6 {
+            assert_eq!(
+                chunk.layers[0].dense().row(ex),
+                full.layers[0].dense().row(5 + ex)
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_shard_size_disagreeing_with_manifest() {
+        let (base, _) = write_sharded(StoreKind::Dense, 20, 1, 3, "bad_shard_size");
+        assert!(ShardSet::open(&base.path).is_ok());
+        // truncate shard 1 by one record
+        let p = StoreMeta::shard_data_path(&base.path, 1);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        let err = ShardSet::open(&base.path).unwrap_err();
+        assert!(format!("{err}").contains("shard 1 size mismatch"), "{err}");
+    }
+
+    #[test]
+    fn v1_reader_refuses_v2_manifest() {
+        let (base, _) = write_sharded(StoreKind::Dense, 10, 1, 2, "v2_refuse");
+        let err = StoreReader::open(&base.path).unwrap_err();
+        assert!(format!("{err}").contains("ShardSet"), "{err}");
+    }
+
+    #[test]
+    fn sharded_writer_with_one_shard_still_v2() {
+        let (base, meta) = write_sharded(StoreKind::Dense, 8, 1, 1, "one_shard");
+        assert_eq!(meta.shards, Some(vec![8]));
+        let set = ShardSet::open(&base.path).unwrap();
+        assert_eq!(set.n_shards(), 1);
+        let mut seen = 0;
+        set.stream(3, false, |c| {
+            seen += c.count;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, 8);
     }
 }

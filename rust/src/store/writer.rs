@@ -1,4 +1,10 @@
-//! Store writer: appends per-example records during stage 1.
+//! Store writers: append per-example records during stage 1.
+//!
+//! `StoreWriter` produces the v1 single-file layout; `ShardedWriter`
+//! splits the same record stream into `S` contiguous shard files plus a
+//! v2 manifest, so the query path can score shards on parallel workers.
+//! Both share one record encoder, so a sharded store holds bit-identical
+//! records to its monolithic counterpart.
 
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
@@ -6,6 +12,51 @@ use std::path::{Path, PathBuf};
 use super::format::{StoreKind, StoreMeta};
 use crate::runtime::ExtractBatch;
 use crate::util::bf16;
+
+/// Encode example `ex` of an extract batch into `out` (appends).
+fn encode_batch_example(
+    meta: &StoreMeta,
+    batch: &ExtractBatch,
+    ex: usize,
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    for (l, lg) in batch.layers.iter().enumerate() {
+        let (d1, d2) = meta.layers[l];
+        match meta.kind {
+            StoreKind::Dense => {
+                let row = lg.g.row(ex);
+                anyhow::ensure!(row.len() == d1 * d2, "dense row len");
+                bf16::encode_slice(row, out);
+            }
+            StoreKind::Factored => {
+                let u = lg.u.row(ex);
+                let v = lg.v.row(ex);
+                anyhow::ensure!(
+                    u.len() == d1 * meta.c && v.len() == d2 * meta.c,
+                    "factor row len"
+                );
+                bf16::encode_slice(u, out);
+                bf16::encode_slice(v, out);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Encode one dense example given raw per-layer f32 slices (appends).
+fn encode_dense_row(
+    meta: &StoreMeta,
+    per_layer: &[&[f32]],
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(meta.kind == StoreKind::Dense);
+    for (l, row) in per_layer.iter().enumerate() {
+        let (d1, d2) = meta.layers[l];
+        anyhow::ensure!(row.len() == d1 * d2, "dense row len");
+        bf16::encode_slice(row, out);
+    }
+    Ok(())
+}
 
 pub struct StoreWriter {
     base: PathBuf,
@@ -21,6 +72,7 @@ impl StoreWriter {
             std::fs::create_dir_all(parent)?;
         }
         meta.n_examples = 0;
+        meta.shards = None;
         let file = BufWriter::new(std::fs::File::create(StoreMeta::data_path(base))?);
         Ok(StoreWriter { base: base.to_path_buf(), meta, file, written: 0, scratch: Vec::new() })
     }
@@ -34,26 +86,7 @@ impl StoreWriter {
         anyhow::ensure!(batch.layers.len() == self.meta.layers.len(), "layer count");
         for ex in 0..batch.valid {
             self.scratch.clear();
-            for (l, lg) in batch.layers.iter().enumerate() {
-                let (d1, d2) = self.meta.layers[l];
-                match self.meta.kind {
-                    StoreKind::Dense => {
-                        let row = lg.g.row(ex);
-                        anyhow::ensure!(row.len() == d1 * d2, "dense row len");
-                        bf16::encode_slice(row, &mut self.scratch);
-                    }
-                    StoreKind::Factored => {
-                        let u = lg.u.row(ex);
-                        let v = lg.v.row(ex);
-                        anyhow::ensure!(
-                            u.len() == d1 * self.meta.c && v.len() == d2 * self.meta.c,
-                            "factor row len"
-                        );
-                        bf16::encode_slice(u, &mut self.scratch);
-                        bf16::encode_slice(v, &mut self.scratch);
-                    }
-                }
-            }
+            encode_batch_example(&self.meta, batch, ex, &mut self.scratch)?;
             debug_assert_eq!(self.scratch.len(), self.meta.bytes_per_example());
             self.file.write_all(&self.scratch)?;
             self.written += 1;
@@ -63,13 +96,8 @@ impl StoreWriter {
 
     /// Append one example given raw per-layer f32 slices (dense kind).
     pub fn append_dense_row(&mut self, per_layer: &[&[f32]]) -> anyhow::Result<()> {
-        anyhow::ensure!(self.meta.kind == StoreKind::Dense);
         self.scratch.clear();
-        for (l, row) in per_layer.iter().enumerate() {
-            let (d1, d2) = self.meta.layers[l];
-            anyhow::ensure!(row.len() == d1 * d2, "dense row len");
-            bf16::encode_slice(row, &mut self.scratch);
-        }
+        encode_dense_row(&self.meta, per_layer, &mut self.scratch)?;
         self.file.write_all(&self.scratch)?;
         self.written += 1;
         Ok(())
@@ -79,6 +107,119 @@ impl StoreWriter {
     pub fn finalize(mut self) -> anyhow::Result<StoreMeta> {
         self.file.flush()?;
         self.meta.n_examples = self.written;
+        self.meta.save(&self.base)?;
+        Ok(self.meta)
+    }
+}
+
+/// Writer for the v2 sharded layout: `N` examples split into at most
+/// `shards` contiguous files of `ceil(n_expected / shards)` examples
+/// each (the last shard absorbs any overflow if more than `n_expected`
+/// examples arrive; trailing shards are dropped if fewer do).
+pub struct ShardedWriter {
+    base: PathBuf,
+    meta: StoreMeta,
+    max_shards: usize,
+    per_shard: usize,
+    file: BufWriter<std::fs::File>,
+    /// examples written per shard; the last entry is the open shard
+    counts: Vec<usize>,
+    scratch: Vec<u8>,
+}
+
+impl ShardedWriter {
+    pub fn create(
+        base: &Path,
+        mut meta: StoreMeta,
+        shards: usize,
+        n_expected: usize,
+    ) -> anyhow::Result<ShardedWriter> {
+        anyhow::ensure!(shards >= 1, "shards must be >= 1");
+        if let Some(parent) = base.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        meta.n_examples = 0;
+        meta.shards = None;
+        let per_shard = ((n_expected + shards - 1) / shards).max(1);
+        let file =
+            BufWriter::new(std::fs::File::create(StoreMeta::shard_data_path(base, 0))?);
+        Ok(ShardedWriter {
+            base: base.to_path_buf(),
+            meta,
+            max_shards: shards,
+            per_shard,
+            file,
+            counts: vec![0],
+            scratch: Vec::new(),
+        })
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Number of shard files this writer produces for `n` examples at a
+    /// requested shard count — the companion of `roll_if_full`'s
+    /// splitting rule, used by the stage-1 cache-validity check.
+    pub fn expected_shards(n: usize, shards: usize) -> usize {
+        if shards <= 1 || n == 0 {
+            return 1;
+        }
+        let per = ((n + shards - 1) / shards).max(1);
+        ((n + per - 1) / per).max(1)
+    }
+
+    /// Roll to the next shard file when the open one is full (and more
+    /// shards are allowed).
+    fn roll_if_full(&mut self) -> anyhow::Result<()> {
+        let open = self.counts.len() - 1;
+        if self.counts[open] >= self.per_shard && self.counts.len() < self.max_shards {
+            self.file.flush()?;
+            let next = self.counts.len();
+            self.file = BufWriter::new(std::fs::File::create(StoreMeta::shard_data_path(
+                &self.base, next,
+            ))?);
+            self.counts.push(0);
+        }
+        Ok(())
+    }
+
+    fn write_record(&mut self) -> anyhow::Result<()> {
+        debug_assert_eq!(self.scratch.len(), self.meta.bytes_per_example());
+        self.roll_if_full()?;
+        self.file.write_all(&self.scratch)?;
+        *self.counts.last_mut().unwrap() += 1;
+        Ok(())
+    }
+
+    /// Append the valid examples of an extract batch (examples may span
+    /// shard boundaries).
+    pub fn append(&mut self, batch: &ExtractBatch) -> anyhow::Result<()> {
+        anyhow::ensure!(batch.layers.len() == self.meta.layers.len(), "layer count");
+        for ex in 0..batch.valid {
+            self.scratch.clear();
+            encode_batch_example(&self.meta, batch, ex, &mut self.scratch)?;
+            self.write_record()?;
+        }
+        Ok(())
+    }
+
+    /// Append one example given raw per-layer f32 slices (dense kind).
+    pub fn append_dense_row(&mut self, per_layer: &[&[f32]]) -> anyhow::Result<()> {
+        self.scratch.clear();
+        encode_dense_row(&self.meta, per_layer, &mut self.scratch)?;
+        self.write_record()
+    }
+
+    /// Flush data and write the v2 manifest with the actual shard sizes.
+    pub fn finalize(mut self) -> anyhow::Result<StoreMeta> {
+        self.file.flush()?;
+        self.meta.n_examples = self.counts.iter().sum();
+        self.meta.shards = Some(self.counts.clone());
         self.meta.save(&self.base)?;
         Ok(self.meta)
     }

@@ -1,7 +1,9 @@
-//! Shared substrates: bf16 codec, PRNG, JSON, logging, phase timers.
+//! Shared substrates: bf16 codec, PRNG, JSON, logging, phase timers,
+//! and the scoped worker pool behind the parallel query path.
 
 pub mod bf16;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod prng;
 pub mod timer;

@@ -1,0 +1,121 @@
+//! Minimal scoped worker pool (std-only, no extra dependencies) for the
+//! parallel shard-scoring path.
+//!
+//! Jobs are claimed from a shared atomic counter, so uneven shard costs
+//! balance across workers; results come back in job order.  Borrowed
+//! captures are fine — workers run inside `std::thread::scope`.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a requested worker count: 0 means "all available cores".
+pub fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Run `jobs` closures on up to `threads` workers (0 = auto), returning
+/// results in job order.  The first job error stops further jobs from
+/// being claimed (in-flight ones finish) and is propagated; a panicking
+/// job propagates the panic.
+pub fn run<T, F>(threads: usize, jobs: usize, f: F) -> anyhow::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> anyhow::Result<T> + Sync,
+{
+    if jobs == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = effective_threads(threads).min(jobs);
+    if workers <= 1 {
+        return (0..jobs).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<anyhow::Result<T>>>> =
+        (0..jobs).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs {
+                    break;
+                }
+                let out = f(i);
+                if out.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    // claims are sequential, so filled slots form a prefix; the first
+    // non-Ok entry in order is the error to report
+    let mut out = Vec::with_capacity(jobs);
+    for m in slots {
+        match m.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => {
+                return Err(anyhow::anyhow!("worker pool aborted after an earlier job failed"))
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_in_job_order() {
+        let out = run(4, 17, |i| Ok(i * i)).unwrap();
+        assert_eq!(out.len(), 17);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let hits = AtomicUsize::new(0);
+        let out = run(3, 25, |i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            Ok(i)
+        })
+        .unwrap();
+        assert_eq!(out.len(), 25);
+        assert_eq!(hits.load(Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn propagates_job_errors() {
+        let r: anyhow::Result<Vec<usize>> = run(2, 8, |i| {
+            if i == 5 {
+                anyhow::bail!("job {i} failed");
+            }
+            Ok(i)
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zero_jobs_and_single_thread() {
+        assert!(run(0, 0, |i| Ok(i)).unwrap().is_empty());
+        assert_eq!(run(1, 3, |i| Ok(i + 1)).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(7), 7);
+    }
+}

@@ -2,7 +2,10 @@
 //! gradient extraction vs the CPU oracle, full index build, and
 //! cross-method scoring on a small live pipeline.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires the `xla` cargo feature (compiled out otherwise) and
+//! `make artifacts` (skipped with a clear message otherwise).
+
+#![cfg(feature = "xla")]
 
 use lorif::app::{build_store_scorer, Method};
 use lorif::attribution::{QueryGrads, Scorer};
@@ -158,8 +161,8 @@ fn graddot_equals_lorif_with_zero_curvature() {
     for l in &mut curv.lambdas {
         *l = 1.0;
     }
-    let reader = lorif::store::StoreReader::open(&p.factored_base()).unwrap();
-    let mut scorer = lorif::attribution::LorifScorer::new(reader, curv);
+    let shards = lorif::store::ShardSet::open(&p.factored_base()).unwrap();
+    let mut scorer = lorif::attribution::LorifScorer::new(shards, curv);
     scorer.prefetch = false;
     let rl = scorer.score(&qg).unwrap();
 

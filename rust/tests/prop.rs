@@ -7,7 +7,8 @@
 //! cases are kept small enough to debug directly.
 
 use lorif::linalg::{eigh, qr, rsvd, Chol, Mat};
-use lorif::store::{StoreKind, StoreMeta};
+use lorif::runtime::{ExtractBatch, LayerGrads};
+use lorif::store::{ShardSet, ShardedWriter, StoreKind, StoreMeta, StoreReader, StoreWriter};
 use lorif::util::bf16;
 use lorif::util::json::Value;
 use lorif::util::prng::Rng;
@@ -15,15 +16,18 @@ use lorif::util::prng::Rng;
 const CASES: usize = 40;
 
 fn for_each_case(name: &str, mut f: impl FnMut(u64, &mut Rng)) {
-    if let Ok(s) = std::env::var("LORIF_PROP_SEED") {
-        let seed: u64 = s.parse().unwrap();
-        let mut rng = Rng::labeled(seed, name);
-        f(seed, &mut rng);
-        return;
-    }
-    for seed in 0..CASES as u64 {
-        let mut rng = Rng::labeled(seed, name);
-        f(seed, &mut rng);
+    match std::env::var("LORIF_PROP_SEED") {
+        Ok(s) if !s.trim().is_empty() => {
+            let seed: u64 = s.trim().parse().expect("LORIF_PROP_SEED must be a u64");
+            let mut rng = Rng::labeled(seed, name);
+            f(seed, &mut rng);
+        }
+        _ => {
+            for seed in 0..CASES as u64 {
+                let mut rng = Rng::labeled(seed, name);
+                f(seed, &mut rng);
+            }
+        }
     }
 }
 
@@ -47,6 +51,7 @@ fn prop_store_layout_bijective() {
                 c,
                 layers: layers.clone(),
                 n_examples: 7,
+                shards: None,
             };
             let mut end = 0;
             for l in 0..n_layers {
@@ -313,6 +318,320 @@ fn prop_json_roundtrip_arbitrary() {
         let text = v.to_string();
         let back = Value::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
         assert_eq!(v, back, "seed {seed}: {text}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sharded-store invariants
+// ---------------------------------------------------------------------------
+
+fn prop_tmp_base(prefix: &str, seed: u64) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("lorif_prop_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{prefix}_{seed}"))
+}
+
+/// Random per-layer train data for `n` examples.
+fn random_layers(n: usize, dims: &[(usize, usize)], c: usize, rng: &mut Rng) -> Vec<LayerGrads> {
+    dims.iter()
+        .map(|&(d1, d2)| LayerGrads {
+            g: Mat::random_normal(n, d1 * d2, 1.0, rng),
+            u: Mat::random_normal(n, d1 * c, 1.0, rng),
+            v: Mat::random_normal(n, d2 * c, 1.0, rng),
+        })
+        .collect()
+}
+
+/// Append `data` in batches of random (non-divisor) sizes.
+fn append_in_batches(
+    data: &[LayerGrads],
+    n: usize,
+    rng: &mut Rng,
+    mut push: impl FnMut(&ExtractBatch),
+) {
+    let mut at = 0usize;
+    while at < n {
+        let take = (1 + rng.below(7)).min(n - at);
+        let idx: Vec<usize> = (at..at + take).collect();
+        let layers: Vec<LayerGrads> = data
+            .iter()
+            .map(|lg| LayerGrads {
+                g: lg.g.select_rows(&idx),
+                u: lg.u.select_rows(&idx),
+                v: lg.v.select_rows(&idx),
+            })
+            .collect();
+        push(&ExtractBatch { losses: vec![0.0; take], layers, valid: take });
+        at += take;
+    }
+}
+
+#[test]
+fn prop_store_roundtrip_v1_and_v2() {
+    // writer -> reader roundtrip across Dense/Factored kinds, random
+    // layer shapes, non-divisor batch sizes, and both layouts: every
+    // value read back equals the bf16 quantization of what was written,
+    // and the v2 sharded store holds exactly the v1 records.
+    for_each_case("store-roundtrip", |seed, rng| {
+        let n_layers = 1 + rng.below(3);
+        let dims: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (1 + rng.below(9), 1 + rng.below(9))).collect();
+        let c = 1 + rng.below(3.min(dims.iter().map(|&(a, b)| a.min(b)).min().unwrap()));
+        let n = 3 + rng.below(40);
+        let shards = 1 + rng.below(5);
+        let kind = if rng.below(2) == 0 { StoreKind::Dense } else { StoreKind::Factored };
+        let meta = StoreMeta {
+            kind,
+            tier: "small".into(),
+            f: 4,
+            c,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+        };
+        let data = random_layers(n, &dims, c, rng);
+
+        let v1_base = prop_tmp_base("rt_v1", seed);
+        let mut w = StoreWriter::create(&v1_base, meta.clone()).unwrap();
+        append_in_batches(&data, n, &mut Rng::labeled(seed, "batches"), |b| {
+            w.append(b).unwrap()
+        });
+        let v1_meta = w.finalize().unwrap();
+        assert_eq!(v1_meta.n_examples, n, "seed {seed}");
+        assert_eq!(v1_meta.shards, None, "seed {seed}");
+
+        let v2_base = prop_tmp_base("rt_v2", seed);
+        let mut w = ShardedWriter::create(&v2_base, meta, shards, n).unwrap();
+        append_in_batches(&data, n, &mut Rng::labeled(seed, "batches"), |b| {
+            w.append(b).unwrap()
+        });
+        let v2_meta = w.finalize().unwrap();
+        assert_eq!(v2_meta.n_examples, n, "seed {seed}");
+        let counts = v2_meta.shards.clone().unwrap();
+        assert!(counts.len() <= shards, "seed {seed}");
+        assert_eq!(counts.iter().sum::<usize>(), n, "seed {seed}");
+
+        // reference: bf16-quantized originals
+        let quant = |m: &Mat, row: usize| -> Vec<f32> {
+            m.row(row).iter().map(|&x| bf16::bf16_to_f32(bf16::f32_to_bf16(x))).collect()
+        };
+        let chunk_size = 1 + rng.below(2 * n);
+        for base in [&v1_base, &v2_base] {
+            let set = ShardSet::open(base).unwrap();
+            assert_eq!(set.meta.n_examples, n, "seed {seed}");
+            let mut seen = 0usize;
+            set.stream(chunk_size, false, |chunk| {
+                assert_eq!(chunk.start, seen, "seed {seed}: chunks in order");
+                for (l, layer) in chunk.layers.iter().enumerate() {
+                    for ex in 0..chunk.count {
+                        let global = chunk.start + ex;
+                        match kind {
+                            StoreKind::Dense => {
+                                assert_eq!(
+                                    layer.dense().row(ex),
+                                    &quant(&data[l].g, global)[..],
+                                    "seed {seed}: layer {l} example {global}"
+                                );
+                            }
+                            StoreKind::Factored => {
+                                let (u, v) = layer.factors();
+                                assert_eq!(
+                                    u.row(ex),
+                                    &quant(&data[l].u, global)[..],
+                                    "seed {seed}: u layer {l} example {global}"
+                                );
+                                assert_eq!(
+                                    v.row(ex),
+                                    &quant(&data[l].v, global)[..],
+                                    "seed {seed}: v layer {l} example {global}"
+                                );
+                            }
+                        }
+                    }
+                }
+                seen += chunk.count;
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(seen, n, "seed {seed}");
+        }
+
+        // v1-file/v2-manifest compatibility: the plain v1 reader and the
+        // shard-set view of the v1 store agree record-for-record
+        let direct = StoreReader::open(&v1_base).unwrap();
+        let via_set = ShardSet::open(&v1_base).unwrap();
+        let a = direct.read_range(0, n).unwrap();
+        let b = via_set.read_range(0, n).unwrap();
+        for l in 0..n_layers {
+            match kind {
+                StoreKind::Dense => {
+                    assert_eq!(a.layers[l].dense().data, b.layers[l].dense().data);
+                }
+                StoreKind::Factored => {
+                    assert_eq!(a.layers[l].factors().0.data, b.layers[l].factors().0.data);
+                    assert_eq!(a.layers[l].factors().1.data, b.layers[l].factors().1.data);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_scoring_equals_monolithic() {
+    // For random (n_examples, shards, layers, c): scoring a sharded
+    // store on a multi-threaded worker pool equals scoring the
+    // monolithic store single-threaded, within bf16-noise-free float
+    // tolerance, and the merged top-k equals the global top-k computed
+    // from the full score matrix.
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, ScoreReport, Scorer};
+    use lorif::util::timer::PhaseTimer;
+
+    for_each_case("sharded-scoring", |seed, rng| {
+        let n_layers = 1 + rng.below(2);
+        let dims: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (1 + rng.below(6), 1 + rng.below(6))).collect();
+        let n = 8 + rng.below(50);
+        let nq = 1 + rng.below(4);
+        let shards = 1 + rng.below(5);
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+        };
+        let data = random_layers(n, &dims, 1, rng);
+        let batch_layers: Vec<LayerGrads> = data
+            .iter()
+            .map(|lg| LayerGrads { g: lg.g.clone(), u: lg.u.clone(), v: lg.v.clone() })
+            .collect();
+        let batch = ExtractBatch { losses: vec![0.0; n], layers: batch_layers, valid: n };
+
+        let mono_base = prop_tmp_base("score_mono", seed);
+        let mut w = StoreWriter::create(&mono_base, meta.clone()).unwrap();
+        w.append(&batch).unwrap();
+        w.finalize().unwrap();
+        let shard_base = prop_tmp_base("score_shard", seed);
+        let mut w = ShardedWriter::create(&shard_base, meta, shards, n).unwrap();
+        w.append(&batch).unwrap();
+        w.finalize().unwrap();
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::random_normal(nq, d1 * d2, 1.0, rng),
+                u: Mat::zeros(nq, d1),
+                v: Mat::zeros(nq, d2),
+            })
+            .collect();
+        let qg =
+            QueryGrads { n_query: nq, c: 1, proj_dims: dims.clone(), layers: qlayers };
+
+        let mut mono = GradDotScorer::new(ShardSet::open(&mono_base).unwrap());
+        mono.score_threads = 1;
+        mono.chunk_size = 1 + rng.below(n);
+        mono.prefetch = rng.below(2) == 0;
+        let mut sharded = GradDotScorer::new(ShardSet::open(&shard_base).unwrap());
+        sharded.score_threads = 1 + rng.below(4);
+        sharded.chunk_size = 1 + rng.below(n);
+        sharded.prefetch = rng.below(2) == 0;
+
+        let ra = mono.score(&qg).unwrap();
+        let rb = sharded.score(&qg).unwrap();
+        assert_eq!(ra.bytes_read, rb.bytes_read, "seed {seed}");
+        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+            assert!(
+                (a - b).abs() <= 1e-5 * scale.max(1.0),
+                "seed {seed}: {a} vs {b}"
+            );
+        }
+
+        // merged top-k (parallel column-block heaps over the sharded
+        // scores) == global top-k from the full monolithic matrix
+        let k = 1 + rng.below(n);
+        let global = ScoreReport {
+            scores: ra.scores,
+            timer: PhaseTimer::new(),
+            bytes_read: 0,
+        }
+        .topk(k);
+        let merged = lorif::query::parallel::topk(&rb.scores, k, 1 + rng.below(4));
+        assert_eq!(merged, global, "seed {seed} (k={k})");
+    });
+}
+
+#[test]
+fn prop_parallel_topk_equals_stable_argsort() {
+    use lorif::attribution::ScoreReport;
+    use lorif::util::timer::PhaseTimer;
+    for_each_case("parallel-topk", |seed, rng| {
+        let nq = 1 + rng.below(4);
+        let n = 1 + rng.below(300);
+        let scores = Mat::random_normal(nq, n, 1.0, rng);
+        let k = 1 + rng.below(n + 5); // may exceed n: must clamp
+        let threads = 1 + rng.below(4);
+        let want = ScoreReport {
+            scores: scores.clone(),
+            timer: PhaseTimer::new(),
+            bytes_read: 0,
+        }
+        .topk(k.min(n));
+        let got = lorif::query::parallel::topk(&scores, k, threads);
+        assert_eq!(got, want, "seed {seed} (n={n} k={k} threads={threads})");
+    });
+}
+
+#[test]
+fn prop_shard_boundaries_partition_examples() {
+    // ShardedWriter splits N examples into contiguous shards that
+    // partition [0, N): sizes sum to N, every shard (except possibly
+    // the last) is equally sized, and ShardSet spans are contiguous.
+    for_each_case("shard-partition", |seed, rng| {
+        let dims = vec![(1 + rng.below(5), 1 + rng.below(5))];
+        let n = 1 + rng.below(60);
+        let shards = 1 + rng.below(8);
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+        };
+        let data = random_layers(n, &dims, 1, rng);
+        let base = prop_tmp_base("partition", seed);
+        let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+        append_in_batches(&data, n, &mut Rng::labeled(seed, "batches"), |b| {
+            w.append(b).unwrap()
+        });
+        let meta = w.finalize().unwrap();
+        let counts = meta.shards.clone().unwrap();
+        let per = (n + shards - 1) / shards;
+        assert_eq!(
+            counts.len(),
+            ShardedWriter::expected_shards(n, shards),
+            "seed {seed}: predicted shard count"
+        );
+        assert_eq!(counts.iter().sum::<usize>(), n, "seed {seed}");
+        for (i, &cnt) in counts.iter().enumerate() {
+            if i + 1 < counts.len() {
+                assert_eq!(cnt, per, "seed {seed}: shard {i}");
+            } else {
+                assert!(cnt >= 1 && cnt <= per, "seed {seed}: last shard {cnt}");
+            }
+        }
+        let set = ShardSet::open(&base).unwrap();
+        let mut expect_start = 0usize;
+        for i in 0..set.n_shards() {
+            assert_eq!(set.shard(i).start, expect_start, "seed {seed}");
+            expect_start += set.shard(i).count;
+        }
+        assert_eq!(expect_start, n, "seed {seed}");
     });
 }
 

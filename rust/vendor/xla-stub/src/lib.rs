@@ -1,0 +1,112 @@
+//! Type-level stub of the PJRT/XLA bindings the `xla` cargo feature
+//! expects.  It satisfies the compile-time surface (`Literal`,
+//! `PjRtClient`, executables, HLO protos) so `cargo build --features
+//! xla` type-checks in environments without the real rust_pallas
+//! toolchain; every runtime entry point returns a clear error.
+//!
+//! To actually execute AOT artifacts, replace this path dependency with
+//! the real `xla` crate (see rust/README.md).
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} is unavailable (link the real rust_pallas `xla` crate)"
+    )))
+}
+
+/// Scalar element types a literal can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        "xla-stub"
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
