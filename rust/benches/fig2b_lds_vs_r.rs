@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
             f.to_string(),
             d_total.to_string(),
             "0 (GradDot)".into(),
-            fmt_pm(Some(actuals.lds(&rep.scores))),
+            fmt_pm(Some(actuals.lds(rep.scores()))),
         ]);
 
         for r in [8, 32, 128, 384] {
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
                 f.to_string(),
                 d_total.to_string(),
                 r.to_string(),
-                fmt_pm(Some(actuals.lds(&rep.scores))),
+                fmt_pm(Some(actuals.lds(rep.scores()))),
             ]);
         }
 
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
             f.to_string(),
             d_total.to_string(),
             "full (LoGRA)".into(),
-            fmt_pm(Some(actuals.lds(&rep.scores))),
+            fmt_pm(Some(actuals.lds(rep.scores()))),
         ]);
     }
     table.print();

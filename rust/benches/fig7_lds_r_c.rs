@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
                 f.to_string(),
                 c.to_string(),
                 r.to_string(),
-                fmt_pm(Some(actuals.lds(&rep.scores))),
+                fmt_pm(Some(actuals.lds(rep.scores()))),
             ]);
         }
     }

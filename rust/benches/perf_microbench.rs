@@ -3,9 +3,15 @@
 //! Measures: bf16 decode throughput, blocked GEMM GFLOP/s, factor-dot
 //! scoring throughput, reconstruct+project throughput, store streaming
 //! bandwidth (sync vs prefetch), sharded multi-threaded scoring vs the
-//! single-reader monolithic path, and (with `--features xla`) the
+//! single-reader monolithic path, full-matrix vs streaming-top-k score
+//! sinks (latency + peak score memory), and (with `--features xla`) the
 //! XLA-executable scorer vs the Rust-native scorer.  The before/after
 //! log lives in EXPERIMENTS.md §Perf.
+//!
+//! `LORIF_PERF_QUICK=1` shrinks sizes and iteration counts for the CI
+//! perf-smoke job; the sink comparison is also persisted as JSON to
+//! `work/bench/results/perf_smoke.json` so the memory/latency win is
+//! tracked per PR.
 
 use std::time::Instant;
 
@@ -14,9 +20,14 @@ use lorif::linalg::Mat;
 use lorif::util::bf16;
 use lorif::util::prng::Rng;
 
+fn quick() -> bool {
+    std::env::var("LORIF_PERF_QUICK").as_deref() == Ok("1")
+}
+
 fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     // warmup
     f();
+    let iters = if quick() { (iters / 2).max(1) } else { iters };
     let t0 = Instant::now();
     for _ in 0..iters {
         f();
@@ -150,17 +161,18 @@ fn main() -> anyhow::Result<()> {
     }
 
     // sharded multi-threaded scoring vs the single-reader monolithic path
-    // (GradDot over identical dense records; Fig 3's I/O-bound pass)
+    // (GradDot over identical dense records; Fig 3's I/O-bound pass),
+    // plus the full-matrix vs streaming-top-k sink comparison
     {
         use lorif::attribution::graddot::GradDotScorer;
-        use lorif::attribution::{QueryGrads, QueryLayer, Scorer};
+        use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
         use lorif::runtime::{ExtractBatch, LayerGrads};
         use lorif::store::{ShardSet, ShardedWriter, StoreKind, StoreMeta, StoreWriter};
 
         let dir = std::env::temp_dir().join("lorif_perf_sharded");
         std::fs::create_dir_all(&dir)?;
         let layers = vec![(16usize, 48usize), (16, 16), (16, 32), (32, 16)];
-        let (n, nq) = (4096usize, 32usize);
+        let (n, nq) = (if quick() { 1024usize } else { 4096 }, 32usize);
         let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
         let shards = cores.clamp(2, 8);
 
@@ -215,8 +227,8 @@ fn main() -> anyhow::Result<()> {
         // correctness first: identical records must score identically
         let ra = mono.score(&qg)?;
         let rb = sharded.score(&qg)?;
-        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+        let scale = ra.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores().data.iter().zip(&rb.scores().data) {
             assert!((a - b).abs() <= 1e-4 * scale.max(1.0), "{a} vs {b}");
         }
 
@@ -233,6 +245,48 @@ fn main() -> anyhow::Result<()> {
             t_shard * 1e3,
             t_mono / t_shard
         );
+
+        // full-matrix vs streaming-top-k sink: same kernel, same store;
+        // the streaming path must hold <= Nq*k*shards score elements
+        // while the full path materializes Nq*N
+        let k = 10usize;
+        let r_full = sharded.score_sink(&qg, SinkSpec::Full)?;
+        let r_topk = sharded.score_sink(&qg, SinkSpec::TopK(k))?;
+        assert_eq!(r_topk.topk(k), r_full.topk(k), "sink results diverged");
+        assert!(r_topk.peak_sink_elems <= nq * k * shards);
+        let t_full = time(3, || {
+            let _ = sharded.score_sink(&qg, SinkSpec::Full).unwrap();
+        });
+        let t_topk = time(3, || {
+            let _ = sharded.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+        });
+        println!(
+            "score sinks {n}x{nq} (k={k}): full {:.1} ms / {} elems | streaming top-k \
+             {:.1} ms / {} elems ({:.0}x less score memory)",
+            t_full * 1e3,
+            r_full.peak_sink_elems,
+            t_topk * 1e3,
+            r_topk.peak_sink_elems,
+            r_full.peak_sink_elems as f64 / r_topk.peak_sink_elems.max(1) as f64
+        );
+
+        // persist the sink comparison for the CI perf-smoke artifact
+        let doc = lorif::util::json::obj([
+            ("n_train", n.into()),
+            ("n_query", nq.into()),
+            ("k", k.into()),
+            ("shards", shards.into()),
+            ("quick", quick().into()),
+            ("full_ms", (t_full * 1e3).into()),
+            ("topk_ms", (t_topk * 1e3).into()),
+            ("full_peak_elems", r_full.peak_sink_elems.into()),
+            ("topk_peak_elems", r_topk.peak_sink_elems.into()),
+        ]);
+        let out_dir = std::path::PathBuf::from("work/bench/results");
+        std::fs::create_dir_all(&out_dir)?;
+        let out = out_dir.join("perf_smoke.json");
+        std::fs::write(&out, doc.to_string())?;
+        println!("sink comparison saved to {}", out.display());
     }
 
     xla_scorer_bench(&mut rng);

@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
                 vec![
                     "LoRIF w/o truncated SVD".into(),
                     f.to_string(), c.to_string(), "—".into(),
-                    fmt_pm(Some(actuals.lds(&rep.scores))),
+                    fmt_pm(Some(actuals.lds(rep.scores()))),
                     fmt_mb(sc.index_bytes()),
                     fmt_s(rep.timer.total().as_secs_f64()),
                 ]
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         table.row(vec![
             "LoRIF w/o factorization".into(),
             f.to_string(), "—".into(), r.to_string(),
-            fmt_pm(Some(actuals.lds(&rep.scores))),
+            fmt_pm(Some(actuals.lds(rep.scores()))),
             fmt_mb(sc.index_bytes()),
             fmt_s(rep.timer.total().as_secs_f64()),
         ]);
@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
         table.row(vec![
             "LoRIF".into(),
             f.to_string(), c.to_string(), r.to_string(),
-            fmt_pm(Some(actuals.lds(&rep.scores))),
+            fmt_pm(Some(actuals.lds(rep.scores()))),
             fmt_mb(sc.index_bytes()),
             fmt_s(rep.timer.total().as_secs_f64()),
         ]);

@@ -69,7 +69,10 @@ impl Method {
 
 /// Build a boxed scorer for the simple (store-backed) methods.  Opens
 /// the store as a `ShardSet` (v1 or v2 layout) and hands the configured
-/// shard-scoring thread count through.
+/// shard-scoring thread count through.  Every scorer built here is a
+/// `ChunkKernel` run by the shared streaming executor, so it supports
+/// both the full-matrix and the streaming top-k sink
+/// (`Scorer::score_sink`).
 /// EK-FAC and RepSim have extra dependencies — see the dedicated fns.
 #[cfg(feature = "xla")]
 pub fn build_store_scorer(

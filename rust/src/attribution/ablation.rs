@@ -9,23 +9,84 @@
 //!    scored against the dense Cholesky curvature (requires O(D^2)
 //!    memory — trips the same OOM guard as LoGRA at large D).  Isolates
 //!    the factorization error.
+//!
+//! Both ride the shared streaming executor (`attribution::exec`), so
+//! they score shards on the worker pool and support the streaming
+//! top-k sink exactly like the headline methods.
 
-use super::{QueryGrads, ScoreReport, Scorer};
+use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
+use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::{reconstruct_row, DenseCurvature, TruncatedCurvature};
 use crate::linalg::Mat;
-use crate::store::{ChunkLayer, ShardSet, StoreKind};
-use crate::util::timer::PhaseTimer;
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
 
 pub struct DenseWoodburyScorer {
     pub shards: ShardSet,
     pub curv: TruncatedCurvature,
     pub prefetch: bool,
     pub chunk_size: usize,
+    /// worker threads for shard scoring (0 = all cores)
+    pub score_threads: usize,
 }
 
 impl DenseWoodburyScorer {
     pub fn new(shards: ShardSet, curv: TruncatedCurvature) -> Self {
-        DenseWoodburyScorer { shards, curv, prefetch: true, chunk_size: 512 }
+        DenseWoodburyScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
+    }
+}
+
+/// Dense gradients against the Woodbury-form truncated curvature.
+struct DenseWoodburyKernel<'a> {
+    curv: &'a TruncatedCurvature,
+    /// per layer (Nq, r): query projections with Woodbury weights folded
+    gqw: Vec<Mat>,
+}
+
+impl ChunkKernel for DenseWoodburyKernel<'_> {
+    fn name(&self) -> &'static str {
+        "lorif-no-fact"
+    }
+
+    fn store_kind(&self) -> StoreKind {
+        StoreKind::Dense
+    }
+
+    fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+        self.gqw = (0..queries.n_layers())
+            .map(|l| {
+                let mut proj = queries.layers[l].g.matmul(&self.curv.layers[l].v);
+                for row in 0..proj.rows {
+                    for (x, w) in proj.row_mut(row).iter_mut().zip(&self.curv.weights[l]) {
+                        *x *= w;
+                    }
+                }
+                proj
+            })
+            .collect();
+        Ok(())
+    }
+
+    fn score_chunk(
+        &self,
+        chunk: &Chunk,
+        queries: &QueryGrads,
+        out: &mut Mat,
+        _scratch: &mut Scratch,
+    ) -> anyhow::Result<()> {
+        for l in 0..queries.n_layers() {
+            let g = match &chunk.layers[l] {
+                ChunkLayer::Dense { g } => g,
+                _ => anyhow::bail!("expected dense chunk"),
+            };
+            let inv_lambda = 1.0 / self.curv.lambdas[l];
+            let dots = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
+            let proj = g.matmul(&self.curv.layers[l].v); // (B, r)
+            let corr = proj.matmul_nt(&self.gqw[l]); // (B, Nq)
+            for ((o, &d), &c) in out.data.iter_mut().zip(&dots.data).zip(&corr.data) {
+                *o += d * inv_lambda - c;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -39,52 +100,17 @@ impl Scorer for DenseWoodburyScorer {
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(self.shards.meta.kind == StoreKind::Dense, "needs dense store");
-        let n = self.shards.meta.n_examples;
-        let nq = queries.n_query;
-        let n_layers = queries.n_layers();
-        let mut timer = PhaseTimer::new();
-        // query projections with folded Woodbury weights
-        let gqw: Vec<Mat> = timer.time("precondition", || {
-            (0..n_layers)
-                .map(|l| {
-                    let mut proj = queries.layers[l].g.matmul(&self.curv.layers[l].v);
-                    for row in 0..proj.rows {
-                        for (x, w) in proj.row_mut(row).iter_mut().zip(&self.curv.weights[l]) {
-                            *x *= w;
-                        }
-                    }
-                    proj
-                })
-                .collect()
-        });
-        let mut scores = Mat::zeros(nq, n);
-        let mut compute = std::time::Duration::ZERO;
-        let (io_time, bytes) = self.shards.stream(self.chunk_size, self.prefetch, |chunk| {
-            let t0 = std::time::Instant::now();
-            for l in 0..n_layers {
-                let g = match &chunk.layers[l] {
-                    ChunkLayer::Dense { g } => g,
-                    _ => anyhow::bail!("expected dense chunk"),
-                };
-                let inv_lambda = 1.0 / self.curv.lambdas[l];
-                let dots = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
-                let proj = g.matmul(&self.curv.layers[l].v); // (B, r)
-                let corr = proj.matmul_nt(&gqw[l]); // (B, Nq)
-                for nn in 0..chunk.count {
-                    let drow = dots.row(nn);
-                    let crow = corr.row(nn);
-                    for q in 0..nq {
-                        *scores.at_mut(q, chunk.start + nn) += drow[q] * inv_lambda - crow[q];
-                    }
-                }
-            }
-            compute += t0.elapsed();
-            Ok(())
-        })?;
-        timer.add("load", io_time);
-        timer.add("compute", compute);
-        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+        self.score_sink(queries, SinkSpec::Full)
+    }
+
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        let mut kernel = DenseWoodburyKernel { curv: &self.curv, gqw: Vec::new() };
+        let opts = ExecOptions {
+            chunk_size: self.chunk_size,
+            prefetch: self.prefetch,
+            threads: self.score_threads,
+        };
+        exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
 }
 
@@ -93,11 +119,71 @@ pub struct FactoredDenseKScorer {
     pub curv: DenseCurvature,
     pub prefetch: bool,
     pub chunk_size: usize,
+    /// worker threads for shard scoring (0 = all cores)
+    pub score_threads: usize,
 }
 
 impl FactoredDenseKScorer {
     pub fn new(shards: ShardSet, curv: DenseCurvature) -> Self {
-        FactoredDenseKScorer { shards, curv, prefetch: true, chunk_size: 512 }
+        FactoredDenseKScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
+    }
+}
+
+/// Rank-c factors reconstructed per chunk against the dense Cholesky
+/// curvature.
+struct FactoredDenseKKernel<'a> {
+    curv: &'a DenseCurvature,
+    layer_dims: Vec<(usize, usize)>,
+    c: usize,
+    /// per layer (Nq, D): K^{-1} g_q
+    pre: Vec<Mat>,
+}
+
+impl ChunkKernel for FactoredDenseKKernel<'_> {
+    fn name(&self) -> &'static str {
+        "lorif-no-svd"
+    }
+
+    fn store_kind(&self) -> StoreKind {
+        StoreKind::Factored
+    }
+
+    fn precondition(&mut self, meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+        self.layer_dims = meta.layers.clone();
+        self.c = meta.c;
+        self.pre = (0..queries.n_layers())
+            .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
+            .collect();
+        Ok(())
+    }
+
+    fn score_chunk(
+        &self,
+        chunk: &Chunk,
+        queries: &QueryGrads,
+        out: &mut Mat,
+        scratch: &mut Scratch,
+    ) -> anyhow::Result<()> {
+        let nq = out.cols;
+        for l in 0..queries.n_layers() {
+            let (d1, d2) = self.layer_dims[l];
+            let (u, v) = match &chunk.layers[l] {
+                ChunkLayer::Factored { u, v } => (u, v),
+                _ => anyhow::bail!("expected factored chunk"),
+            };
+            let rec = &mut scratch.mat;
+            if rec.rows != 1 || rec.cols != d1 * d2 {
+                *rec = Mat::zeros(1, d1 * d2);
+            }
+            for nn in 0..chunk.count {
+                reconstruct_row(u.row(nn), v.row(nn), d1, d2, self.c, rec.row_mut(0));
+                for q in 0..nq {
+                    let s = crate::linalg::mat::dot(rec.row(0), self.pre[l].row(q));
+                    *out.at_mut(nn, q) += s;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -111,52 +197,30 @@ impl Scorer for FactoredDenseKScorer {
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(self.shards.meta.kind == StoreKind::Factored, "needs factored store");
-        let c = self.shards.meta.c;
-        let n = self.shards.meta.n_examples;
-        let nq = queries.n_query;
-        let n_layers = queries.n_layers();
-        let mut timer = PhaseTimer::new();
-        // K^{-1} g_q per layer
-        let pre: Vec<Mat> = timer.time("precondition", || {
-            (0..n_layers)
-                .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
-                .collect()
-        });
-        let mut scores = Mat::zeros(nq, n);
-        let mut compute = std::time::Duration::ZERO;
-        let mut scratch: Vec<f32> = Vec::new();
-        let (io_time, bytes) = self.shards.stream(self.chunk_size, self.prefetch, |chunk| {
-            let t0 = std::time::Instant::now();
-            for l in 0..n_layers {
-                let (d1, d2) = self.shards.meta.layers[l];
-                let (u, v) = match &chunk.layers[l] {
-                    ChunkLayer::Factored { u, v } => (u, v),
-                    _ => anyhow::bail!("expected factored chunk"),
-                };
-                scratch.resize(d1 * d2, 0.0);
-                for nn in 0..chunk.count {
-                    reconstruct_row(u.row(nn), v.row(nn), d1, d2, c, &mut scratch);
-                    for q in 0..nq {
-                        let s = crate::linalg::mat::dot(&scratch, pre[l].row(q));
-                        *scores.at_mut(q, chunk.start + nn) += s;
-                    }
-                }
-            }
-            compute += t0.elapsed();
-            Ok(())
-        })?;
-        timer.add("load", io_time);
-        timer.add("compute", compute);
-        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+        self.score_sink(queries, SinkSpec::Full)
+    }
+
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        let mut kernel = FactoredDenseKKernel {
+            curv: &self.curv,
+            layer_dims: Vec::new(),
+            c: 0,
+            pre: Vec::new(),
+        };
+        let opts = ExecOptions {
+            chunk_size: self.chunk_size,
+            prefetch: self.prefetch,
+            threads: self.score_threads,
+        };
+        exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attribution::testutil::make_fixture;
     use crate::attribution::logra::LograScorer;
+    use crate::attribution::testutil::make_fixture;
 
     #[test]
     fn dense_woodbury_tracks_logra_at_full_rank() {
@@ -180,12 +244,12 @@ mod tests {
             *gram.at_mut(i, i) += lambda_t;
         }
         let ch = crate::linalg::Chol::factor(&gram).unwrap();
-        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = ra.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
         for q in 0..2 {
             let kq = ch.solve(fx.queries.layers[0].g.row(q));
             for t in 0..20 {
                 let want: f32 = g.row(t).iter().zip(&kq).map(|(a, b)| a * b).sum();
-                let got = ra.scores.at(q, t);
+                let got = ra.scores().at(q, t);
                 assert!(
                     (got - want).abs() < 0.03 * scale + 1e-4,
                     "q{q} t{t}: {got} vs {want}"
@@ -226,15 +290,39 @@ mod tests {
             *gram.at_mut(i, i) += lambda;
         }
         let ch = crate::linalg::Chol::factor(&gram).unwrap();
-        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = ra.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
         for q in 0..2 {
             let kq = ch.solve(fx.queries.layers[0].g.row(q));
             for t in 0..25 {
                 let want: f32 = g.row(t).iter().zip(&kq).map(|(a, b)| a * b).sum();
-                let got = ra.scores.at(q, t);
+                let got = ra.scores().at(q, t);
                 assert!((got - want).abs() < 0.01 * scale + 1e-4, "{got} vs {want}");
             }
         }
         let _ = LograScorer::new; // keep the import meaningful
+    }
+
+    #[test]
+    fn ablation_scorers_support_streaming_topk() {
+        // ablations ride the same executor, so the streaming sink must
+        // agree with the full argsort for both of them
+        let fx = make_fixture(16, 2, &[(4, 4)], 1, StoreKind::Dense, "abl_sink_dw");
+        let set = crate::store::ShardSet::open(&fx.base).unwrap();
+        let tsvd = TruncatedCurvature::build(&set, 8, 5, 3, 0.1, 0).unwrap();
+        let mut dw = DenseWoodburyScorer::new(crate::store::ShardSet::open(&fx.base).unwrap(), tsvd);
+        dw.chunk_size = 5;
+        let full = dw.score(&fx.queries).unwrap();
+        let streamed = dw.score_sink(&fx.queries, SinkSpec::TopK(3)).unwrap();
+        assert_eq!(streamed.topk(3), full.topk(3));
+
+        let fx2 = make_fixture(16, 2, &[(4, 4)], 1, StoreKind::Factored, "abl_sink_fdk");
+        let curv =
+            DenseCurvature::build(&crate::store::ShardSet::open(&fx2.base).unwrap(), 0.1).unwrap();
+        let mut fdk =
+            FactoredDenseKScorer::new(crate::store::ShardSet::open(&fx2.base).unwrap(), curv);
+        fdk.chunk_size = 5;
+        let full = fdk.score(&fx2.queries).unwrap();
+        let streamed = fdk.score_sink(&fx2.queries, SinkSpec::TopK(3)).unwrap();
+        assert_eq!(streamed.topk(3), full.topk(3));
     }
 }

@@ -128,6 +128,6 @@ impl Scorer for EkfacScorer<'_> {
             });
             i += take;
         }
-        Ok(ScoreReport { scores, timer, bytes_read: 0 })
+        Ok(ScoreReport::full(scores, timer, 0))
     }
 }

@@ -1,0 +1,326 @@
+//! Shared streaming executor for all store-backed scorers.
+//!
+//! Every attribution method over a gradient store reduces to the same
+//! shape: precondition the query batch once, then stream the store in
+//! chunks and score each chunk against the preconditioned queries.
+//! `ChunkKernel` captures exactly that pair of operations; `execute`
+//! owns everything around it — store-kind validation, the per-shard
+//! worker loop (`query::parallel::map_shards`), the prefetch heuristic,
+//! chunk iteration, and the load/compute phase accounting — so a new
+//! scorer is one kernel in one file, and hot-path improvements land
+//! once instead of once per method.
+//!
+//! The kernel's output flows into a `ScoreSink`.  `FullMatrixSink`
+//! materializes the classic `(n_query, n_train)` matrix (eval, LDS, and
+//! the figure benches need the whole thing); `StreamingTopK` folds each
+//! `(B, n_query)` block into per-query bounded heaps, so a top-k query
+//! holds O(Nq·k) score elements per shard no matter how large the store
+//! is — the memory model that lets the engine, server, and CLI serve
+//! top-k proponents against stores far larger than RAM.
+
+use std::time::{Duration, Instant};
+
+use super::{QueryGrads, ScoreOutput, ScoreReport, SinkSpec};
+use crate::linalg::Mat;
+use crate::query::parallel::{self, ShardScores, TopK};
+use crate::store::{Chunk, ShardSet, StoreKind, StoreMeta, StoreReader};
+use crate::util::pool;
+use crate::util::timer::PhaseTimer;
+
+/// Reusable per-worker scratch buffer (e.g. for gradient reconstruction
+/// on the faithful Woodbury path).  Kernels may resize it freely; the
+/// executor keeps it alive across chunks so the allocation is paid once
+/// per shard, not once per chunk.
+pub struct Scratch {
+    pub mat: Mat,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { mat: Mat::zeros(0, 0) }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Scratch {
+        Scratch::new()
+    }
+}
+
+/// One attribution method on the streaming hot path.
+///
+/// `precondition` runs once per query batch (timed under the
+/// "precondition" phase); `score_chunk` runs once per decoded chunk on
+/// the shard workers and must ACCUMULATE (`+=`) into `out`, a zeroed
+/// `(chunk.count, n_query)` block — row `b` holds the scores of
+/// training example `chunk.start + b` against every query.
+pub trait ChunkKernel: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Store kind this kernel consumes (validated by the executor).
+    fn store_kind(&self) -> StoreKind;
+
+    /// Validate the query batch against the store and precondition the
+    /// query side, stashing prepared state in `self`.
+    fn precondition(&mut self, meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()>;
+
+    /// Score one decoded chunk against the preconditioned queries.
+    fn score_chunk(
+        &self,
+        chunk: &Chunk,
+        queries: &QueryGrads,
+        out: &mut Mat,
+        scratch: &mut Scratch,
+    ) -> anyhow::Result<()>;
+}
+
+/// Where a scorer pass puts its scores.  Implementations consume
+/// `(B, n_query)` blocks in stream order within a shard; one sink
+/// instance exists per shard, merged by the executor afterwards.
+pub trait ScoreSink: Send {
+    /// Consume the score block for training examples
+    /// `[start, start + block.rows)`.
+    fn consume(&mut self, start: usize, block: &Mat);
+
+    /// Score elements this sink currently holds (memory accounting; the
+    /// streaming-top-k O(Nq·k) guarantee is asserted through this).
+    fn allocated_elems(&self) -> usize;
+}
+
+/// Materializes this shard's `(n_query, shard_count)` column block.
+pub struct FullMatrixSink {
+    pub start: usize,
+    pub scores: Mat,
+}
+
+impl FullMatrixSink {
+    pub fn new(nq: usize, start: usize, count: usize) -> FullMatrixSink {
+        FullMatrixSink { start, scores: Mat::zeros(nq, count) }
+    }
+}
+
+impl ScoreSink for FullMatrixSink {
+    fn consume(&mut self, start: usize, block: &Mat) {
+        for b in 0..block.rows {
+            let col = start - self.start + b;
+            let row = block.row(b);
+            for (q, &s) in row.iter().enumerate() {
+                *self.scores.at_mut(q, col) = s;
+            }
+        }
+    }
+
+    fn allocated_elems(&self) -> usize {
+        self.scores.rows * self.scores.cols
+    }
+}
+
+/// Folds score blocks into per-query bounded top-k heaps: O(Nq·k)
+/// memory per shard, independent of the store size.
+pub struct StreamingTopK {
+    pub heaps: Vec<TopK>,
+}
+
+impl StreamingTopK {
+    pub fn new(nq: usize, k: usize) -> StreamingTopK {
+        StreamingTopK { heaps: (0..nq).map(|_| TopK::new(k)).collect() }
+    }
+}
+
+impl ScoreSink for StreamingTopK {
+    fn consume(&mut self, start: usize, block: &Mat) {
+        for b in 0..block.rows {
+            let row = block.row(b);
+            for (q, heap) in self.heaps.iter_mut().enumerate() {
+                heap.push(start + b, row[q]);
+            }
+        }
+    }
+
+    fn allocated_elems(&self) -> usize {
+        self.heaps.iter().map(TopK::len).sum()
+    }
+}
+
+/// Streaming knobs shared by every store scorer.
+pub struct ExecOptions {
+    pub chunk_size: usize,
+    pub prefetch: bool,
+    /// worker threads for shard scoring (0 = all cores)
+    pub threads: usize,
+}
+
+struct ShardRun<S> {
+    sink: S,
+    io: Duration,
+    compute: Duration,
+    bytes: u64,
+    /// peak score elements the sink held during this shard's pass
+    peak: usize,
+}
+
+/// Run `kernel` over every shard of `set`, folding scores into the
+/// requested sink.  This is the single streaming scaffold behind all
+/// store scorers: kind validation, preconditioning, the worker loop,
+/// prefetch gating, and phase-time merging live here and only here.
+pub fn execute<K: ChunkKernel>(
+    set: &ShardSet,
+    opts: &ExecOptions,
+    kernel: &mut K,
+    queries: &QueryGrads,
+    sink: SinkSpec,
+) -> anyhow::Result<ScoreReport> {
+    anyhow::ensure!(
+        set.meta.kind == kernel.store_kind(),
+        "{} scorer needs a {} store",
+        kernel.name(),
+        kernel.store_kind().as_str()
+    );
+    anyhow::ensure!(
+        queries.n_layers() == set.meta.layers.len(),
+        "query batch has {} layers, store has {}",
+        queries.n_layers(),
+        set.meta.layers.len()
+    );
+    let n = set.meta.n_examples;
+    let nq = queries.n_query;
+    let mut timer = PhaseTimer::new();
+    timer.time("precondition", || kernel.precondition(&set.meta, queries))?;
+
+    // with multiple shard workers the workers themselves overlap I/O
+    // and compute, so per-shard prefetch threads would only
+    // oversubscribe the cores; prefetch only on the 1-worker path
+    let workers = pool::effective_threads(opts.threads).min(set.n_shards());
+    let prefetch = opts.prefetch && workers <= 1;
+    let kernel: &K = kernel;
+
+    match sink {
+        SinkSpec::Full => {
+            let runs = run_shards(set, opts, prefetch, kernel, queries, |r| {
+                FullMatrixSink::new(nq, r.start, r.count)
+            })?;
+            let peak: usize = runs.iter().map(|r| r.peak).sum();
+            let parts: Vec<ShardScores> = runs
+                .into_iter()
+                .map(|r| ShardScores {
+                    start: r.sink.start,
+                    scores: r.sink.scores,
+                    io: r.io,
+                    compute: r.compute,
+                    bytes: r.bytes,
+                })
+                .collect();
+            let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
+            timer.merge(&shard_timer);
+            Ok(ScoreReport {
+                output: ScoreOutput::Full(scores),
+                n_train: n,
+                timer,
+                bytes_read: bytes,
+                peak_sink_elems: peak,
+            })
+        }
+        SinkSpec::TopK(k) => {
+            let runs =
+                run_shards(set, opts, prefetch, kernel, queries, |_| StreamingTopK::new(nq, k))?;
+            let mut io = Duration::ZERO;
+            let mut compute = Duration::ZERO;
+            let mut bytes = 0u64;
+            let mut peak = 0usize;
+            let mut shard_heaps = Vec::with_capacity(runs.len());
+            for r in runs {
+                io += r.io;
+                compute += r.compute;
+                bytes += r.bytes;
+                peak += r.peak;
+                shard_heaps.push(r.sink.heaps);
+            }
+            let heaps = parallel::merge_topk(nq, k, shard_heaps);
+            timer.add("load", io);
+            timer.add("compute", compute);
+            Ok(ScoreReport {
+                output: ScoreOutput::TopK(heaps),
+                n_train: n,
+                timer,
+                bytes_read: bytes,
+                peak_sink_elems: peak,
+            })
+        }
+    }
+}
+
+/// The one worker loop: stream each shard in chunks, score, sink.
+fn run_shards<K, S, F>(
+    set: &ShardSet,
+    opts: &ExecOptions,
+    prefetch: bool,
+    kernel: &K,
+    queries: &QueryGrads,
+    make_sink: F,
+) -> anyhow::Result<Vec<ShardRun<S>>>
+where
+    K: ChunkKernel,
+    S: ScoreSink,
+    F: Fn(&StoreReader) -> S + Sync,
+{
+    let nq = queries.n_query;
+    parallel::map_shards(set, opts.threads, |_, reader| {
+        let mut sink = make_sink(&reader);
+        let mut compute = Duration::ZERO;
+        let mut scratch = Scratch::new();
+        let mut block = Mat::zeros(0, 0);
+        let mut peak = 0usize;
+        let (io, bytes) = reader.stream(opts.chunk_size, prefetch, |chunk| {
+            let t0 = Instant::now();
+            if block.rows != chunk.count || block.cols != nq {
+                block = Mat::zeros(chunk.count, nq);
+            } else {
+                block.data.iter_mut().for_each(|x| *x = 0.0);
+            }
+            kernel.score_chunk(&chunk, queries, &mut block, &mut scratch)?;
+            sink.consume(chunk.start, &block);
+            peak = peak.max(sink.allocated_elems());
+            compute += t0.elapsed();
+            Ok(())
+        })?;
+        Ok(ShardRun { sink, io, compute, bytes, peak })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_matrix_sink_places_blocks_in_shard_coordinates() {
+        let mut sink = FullMatrixSink::new(2, 10, 5);
+        // two blocks: global [10, 13) and [13, 15)
+        let b1 = Mat::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b2 = Mat::from_vec(2, 2, vec![7.0, 8.0, 9.0, 10.0]);
+        sink.consume(10, &b1);
+        sink.consume(13, &b2);
+        assert_eq!(sink.scores.row(0), &[1.0, 3.0, 5.0, 7.0, 9.0]);
+        assert_eq!(sink.scores.row(1), &[2.0, 4.0, 6.0, 8.0, 10.0]);
+        assert_eq!(sink.allocated_elems(), 10);
+    }
+
+    #[test]
+    fn streaming_topk_sink_is_bounded() {
+        let nq = 3;
+        let k = 4;
+        let mut sink = StreamingTopK::new(nq, k);
+        let mut rng = crate::util::prng::Rng::new(7);
+        let mut at = 0usize;
+        let mut peak = 0usize;
+        for _ in 0..20 {
+            let block = Mat::random_normal(8, nq, 1.0, &mut rng);
+            sink.consume(at, &block);
+            at += 8;
+            peak = peak.max(sink.allocated_elems());
+        }
+        assert!(peak <= nq * k, "peak {peak} > {}", nq * k);
+        for heap in &sink.heaps {
+            assert_eq!(heap.len(), k);
+        }
+    }
+}

@@ -1,13 +1,14 @@
 //! GradDot baseline (Charpiat et al. 2019 / TracIn-style): plain dot
 //! products of projected gradients — the identity-curvature limit of
 //! Eq. (3), equivalently LoRIF with r = 0 (Fig 2b's leftmost point).
-//! Streams per shard on the worker pool like the other store scorers.
+//! The streaming pass is the shared executor in `attribution::exec`;
+//! this file only supplies the kernel (the simplest one in the repo —
+//! a template for adding new scorers).
 
-use super::{QueryGrads, ScoreReport, Scorer};
+use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
+use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::linalg::Mat;
-use crate::query::parallel::{self, ShardScores};
-use crate::store::{ChunkLayer, ShardSet, StoreKind};
-use crate::util::timer::PhaseTimer;
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
 
 pub struct GradDotScorer {
     pub shards: ShardSet,
@@ -23,6 +24,44 @@ impl GradDotScorer {
     }
 }
 
+/// The GradDot `ChunkKernel`: raw gradient dot products, no
+/// preconditioned state at all.
+struct GradDotKernel;
+
+impl ChunkKernel for GradDotKernel {
+    fn name(&self) -> &'static str {
+        "graddot"
+    }
+
+    fn store_kind(&self) -> StoreKind {
+        StoreKind::Dense
+    }
+
+    fn precondition(&mut self, _meta: &StoreMeta, _queries: &QueryGrads) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn score_chunk(
+        &self,
+        chunk: &Chunk,
+        queries: &QueryGrads,
+        out: &mut Mat,
+        _scratch: &mut Scratch,
+    ) -> anyhow::Result<()> {
+        for (l, layer) in chunk.layers.iter().enumerate() {
+            let g = match layer {
+                ChunkLayer::Dense { g } => g,
+                _ => anyhow::bail!("expected dense chunk"),
+            };
+            let part = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
+            for (o, p) in out.data.iter_mut().zip(&part.data) {
+                *o += p;
+            }
+        }
+        Ok(())
+    }
+}
+
 impl Scorer for GradDotScorer {
     fn name(&self) -> &'static str {
         "graddot"
@@ -33,48 +72,16 @@ impl Scorer for GradDotScorer {
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(
-            self.shards.meta.kind == StoreKind::Dense,
-            "GradDot scorer needs a dense store"
-        );
-        let n = self.shards.meta.n_examples;
-        let nq = queries.n_query;
-        let mut timer = PhaseTimer::new();
-        let chunk_size = self.chunk_size;
-        // with multiple shard workers the workers themselves overlap I/O
-        // and compute, so per-shard prefetch threads would only
-        // oversubscribe the cores; prefetch only on the 1-worker path
-        let workers =
-            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
-        let prefetch = self.prefetch && workers <= 1;
-        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
-            let shard_start = reader.start;
-            let mut local = Mat::zeros(nq, reader.count);
-            let mut compute = std::time::Duration::ZERO;
-            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
-                let t0 = std::time::Instant::now();
-                for (l, layer) in chunk.layers.iter().enumerate() {
-                    let g = match layer {
-                        ChunkLayer::Dense { g } => g,
-                        _ => anyhow::bail!("expected dense chunk"),
-                    };
-                    let part = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
-                    for nn in 0..chunk.count {
-                        let row = part.row(nn);
-                        let col = chunk.start - shard_start + nn;
-                        for q in 0..nq {
-                            *local.at_mut(q, col) += row[q];
-                        }
-                    }
-                }
-                compute += t0.elapsed();
-                Ok(())
-            })?;
-            Ok(ShardScores { start: shard_start, scores: local, io, compute, bytes })
-        })?;
-        let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
-        timer.merge(&shard_timer);
-        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+        self.score_sink(queries, SinkSpec::Full)
+    }
+
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        let opts = ExecOptions {
+            chunk_size: self.chunk_size,
+            prefetch: self.prefetch,
+            threads: self.score_threads,
+        };
+        exec::execute(&self.shards, &opts, &mut GradDotKernel, queries, sink)
     }
 }
 
@@ -89,7 +96,7 @@ mod tests {
         let mut scorer = GradDotScorer::new(ShardSet::open(&fx.base).unwrap());
         scorer.chunk_size = 4;
         let report = scorer.score(&fx.queries).unwrap();
-        let scale = report.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = report.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
         for q in 0..2 {
             for t in 0..15 {
                 let mut want = 0.0f32;
@@ -101,9 +108,29 @@ mod tests {
                         .map(|(a, b)| a * b)
                         .sum::<f32>();
                 }
-                let got = report.scores.at(q, t);
+                let got = report.scores().at(q, t);
                 assert!((got - want).abs() < 0.05 * scale + 1e-4, "{got} vs {want}");
             }
         }
+    }
+
+    #[test]
+    fn rejects_factored_store() {
+        let fx = make_fixture(10, 1, &[(4, 4)], 1, StoreKind::Factored, "graddot_reject");
+        let mut scorer = GradDotScorer::new(ShardSet::open(&fx.base).unwrap());
+        let err = scorer.score(&fx.queries).unwrap_err();
+        assert!(format!("{err}").contains("dense store"), "{err}");
+    }
+
+    #[test]
+    fn streaming_topk_equals_full_argsort() {
+        let fx = make_fixture(20, 3, &[(4, 4)], 1, StoreKind::Dense, "graddot_sink");
+        let mut scorer = GradDotScorer::new(ShardSet::open(&fx.base).unwrap());
+        scorer.chunk_size = 6;
+        let full = scorer.score(&fx.queries).unwrap();
+        let streamed = scorer.score_sink(&fx.queries, SinkSpec::TopK(4)).unwrap();
+        assert_eq!(streamed.topk(4), full.topk(4));
+        assert_eq!(streamed.bytes_read, full.bytes_read);
+        assert!(streamed.peak_sink_elems <= 3 * 4);
     }
 }

@@ -4,15 +4,15 @@
 //! Gauss–Newton inverse (paper Eq. 3): queries are preconditioned once
 //! per layer by solving `K x = g_q` (Cholesky), then every training
 //! example contributes a D-dim dot product — the O(D)-per-pair I/O and
-//! compute profile that Fig 3 shows is I/O-bound.  Like LoRIF, the
-//! streaming pass runs per shard on the worker pool.
+//! compute profile that Fig 3 shows is I/O-bound.  Like every store
+//! scorer, the streaming pass is the shared executor in
+//! `attribution::exec`; this file only supplies the kernel.
 
-use super::{QueryGrads, ScoreReport, Scorer};
+use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
+use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
 use crate::linalg::Mat;
-use crate::query::parallel::{self, ShardScores};
-use crate::store::{ChunkLayer, ShardSet, StoreKind};
-use crate::util::timer::PhaseTimer;
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
 
 pub struct LograScorer {
     pub shards: ShardSet,
@@ -29,6 +29,50 @@ impl LograScorer {
     }
 }
 
+/// The LoGRA `ChunkKernel`: preconditioned dot products per chunk.
+struct LograKernel<'a> {
+    curv: &'a DenseCurvature,
+    /// per layer (Nq, D): K^{-1} g_q
+    pre: Vec<Mat>,
+}
+
+impl ChunkKernel for LograKernel<'_> {
+    fn name(&self) -> &'static str {
+        "logra"
+    }
+
+    fn store_kind(&self) -> StoreKind {
+        StoreKind::Dense
+    }
+
+    fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+        self.pre = (0..queries.n_layers())
+            .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
+            .collect();
+        Ok(())
+    }
+
+    fn score_chunk(
+        &self,
+        chunk: &Chunk,
+        _queries: &QueryGrads,
+        out: &mut Mat,
+        _scratch: &mut Scratch,
+    ) -> anyhow::Result<()> {
+        for (l, pre_l) in self.pre.iter().enumerate() {
+            let g = match &chunk.layers[l] {
+                ChunkLayer::Dense { g } => g,
+                _ => anyhow::bail!("expected dense chunk"),
+            };
+            let part = g.matmul_nt(pre_l); // (B, Nq)
+            for (o, p) in out.data.iter_mut().zip(&part.data) {
+                *o += p;
+            }
+        }
+        Ok(())
+    }
+}
+
 impl Scorer for LograScorer {
     fn name(&self) -> &'static str {
         "logra"
@@ -39,57 +83,17 @@ impl Scorer for LograScorer {
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(
-            self.shards.meta.kind == StoreKind::Dense,
-            "LoGRA scorer needs a dense store"
-        );
-        let n = self.shards.meta.n_examples;
-        let nq = queries.n_query;
-        let n_layers = queries.n_layers();
-        let mut timer = PhaseTimer::new();
+        self.score_sink(queries, SinkSpec::Full)
+    }
 
-        // precondition queries per layer: rows = K^{-1} g_q
-        let pre: Vec<Mat> = timer.time("precondition", || {
-            (0..n_layers)
-                .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
-                .collect()
-        });
-
-        let chunk_size = self.chunk_size;
-        // with multiple shard workers the workers themselves overlap I/O
-        // and compute, so per-shard prefetch threads would only
-        // oversubscribe the cores; prefetch only on the 1-worker path
-        let workers =
-            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
-        let prefetch = self.prefetch && workers <= 1;
-        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
-            let shard_start = reader.start;
-            let mut local = Mat::zeros(nq, reader.count);
-            let mut compute = std::time::Duration::ZERO;
-            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
-                let t0 = std::time::Instant::now();
-                for (l, pre_l) in pre.iter().enumerate() {
-                    let g = match &chunk.layers[l] {
-                        ChunkLayer::Dense { g } => g,
-                        _ => anyhow::bail!("expected dense chunk"),
-                    };
-                    let part = g.matmul_nt(pre_l); // (B, Nq)
-                    for nn in 0..chunk.count {
-                        let row = part.row(nn);
-                        let col = chunk.start - shard_start + nn;
-                        for q in 0..nq {
-                            *local.at_mut(q, col) += row[q];
-                        }
-                    }
-                }
-                compute += t0.elapsed();
-                Ok(())
-            })?;
-            Ok(ShardScores { start: shard_start, scores: local, io, compute, bytes })
-        })?;
-        let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
-        timer.merge(&shard_timer);
-        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        let mut kernel = LograKernel { curv: &self.curv, pre: Vec::new() };
+        let opts = ExecOptions {
+            chunk_size: self.chunk_size,
+            prefetch: self.prefetch,
+            threads: self.score_threads,
+        };
+        exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
 }
 
@@ -117,12 +121,12 @@ mod tests {
             *gram.at_mut(i, i) += lambda;
         }
         let ch = crate::linalg::Chol::factor(&gram).unwrap();
-        let scale = report.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = report.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
         for q in 0..2 {
             let kq = ch.solve(fx.queries.layers[0].g.row(q));
             for t in 0..25 {
                 let want: f32 = g.row(t).iter().zip(&kq).map(|(a, b)| a * b).sum();
-                let got = report.scores.at(q, t);
+                let got = report.scores().at(q, t);
                 assert!((got - want).abs() < 0.01 * scale + 1e-4, "{got} vs {want}");
             }
         }
@@ -162,8 +166,8 @@ mod tests {
         assert_eq!(sharded.shards.n_shards(), 3);
         let ra = mono.score(&fx.queries).unwrap();
         let rb = sharded.score(&fx.queries).unwrap();
-        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+        let scale = ra.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores().data.iter().zip(&rb.scores().data) {
             assert!((a - b).abs() <= 1e-5 * scale.max(1.0), "{a} vs {b}");
         }
     }

@@ -10,17 +10,15 @@
 //!   3. scores[q, n] += S1/lambda_l - corr.
 //!
 //! All heavy steps are GEMMs on the chunk — the compute half of Fig 3.
-//! The pass runs per shard on the worker pool (`query::parallel`):
-//! every shard fills its own column block of the score matrix, so a v2
-//! store scores on all cores while a v1 store degenerates to the
-//! single-threaded path.
+//! The streaming pass itself (shard workers, prefetch gating, chunk
+//! iteration, sinks) is the shared executor in `attribution::exec`;
+//! this file only supplies the LoRIF `ChunkKernel`.
 
-use super::{QueryGrads, ScoreReport, Scorer};
+use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
+use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::{reconstruct_row, TruncatedCurvature};
 use crate::linalg::Mat;
-use crate::query::parallel::{self, ShardScores};
-use crate::store::{ChunkLayer, ShardSet, StoreKind};
-use crate::util::timer::PhaseTimer;
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
 
 pub struct LorifScorer {
     pub shards: ShardSet,
@@ -110,28 +108,33 @@ pub fn factor_dots(
     s
 }
 
-impl Scorer for LorifScorer {
+/// The LoRIF `ChunkKernel`: Eq. (9) per chunk, preconditioned queries
+/// held in `gqw`.
+struct LorifKernel<'a> {
+    curv: &'a TruncatedCurvature,
+    /// reuse stage-2 train projections instead of query-time projection
+    cached: bool,
+    layer_dims: Vec<(usize, usize)>,
+    c: usize,
+    /// per layer (Nq, r): g'_q = V_r^T g~_q with Woodbury weights folded
+    gqw: Vec<Mat>,
+}
+
+impl ChunkKernel for LorifKernel<'_> {
     fn name(&self) -> &'static str {
         "lorif"
     }
 
-    fn index_bytes(&self) -> u64 {
-        self.shards.meta.total_bytes()
+    fn store_kind(&self) -> StoreKind {
+        StoreKind::Factored
     }
 
-    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(
-            self.shards.meta.kind == StoreKind::Factored,
-            "LoRIF scorer needs a factored store"
-        );
-        anyhow::ensure!(queries.proj_dims == self.shards.meta.layers, "layer dims mismatch");
-        let c = self.shards.meta.c;
-        anyhow::ensure!(queries.c == c, "factor rank mismatch");
-        let n = self.shards.meta.n_examples;
-        let nq = queries.n_query;
-        let n_layers = queries.n_layers();
-        let layer_dims = self.shards.meta.layers.clone();
-        let mut timer = PhaseTimer::new();
+    fn precondition(&mut self, meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+        anyhow::ensure!(queries.proj_dims == meta.layers, "layer dims mismatch");
+        anyhow::ensure!(queries.c == meta.c, "factor rank mismatch");
+        self.layer_dims = meta.layers.clone();
+        self.c = meta.c;
+        let (c, nq) = (self.c, queries.n_query);
 
         // precondition queries: g'_q = V_r^T g~_q, folded with Woodbury
         // weights -> gqw (per layer: (Nq, r)).
@@ -143,88 +146,98 @@ impl Scorer for LorifScorer {
         // into the curvature subspace over-subtracts the dominant
         // directions and anti-correlates the scores (see the component
         // diagnosis in EXPERIMENTS.md §Debugging).
-        let gqw: Vec<Mat> = timer.time("precondition", || {
-            (0..n_layers)
-                .map(|l| {
-                    let (d1, d2) = layer_dims[l];
-                    let svd = &self.curv.layers[l];
-                    let ql = &queries.layers[l];
-                    let mut rec = Mat::zeros(nq, d1 * d2);
-                    for q in 0..nq {
-                        reconstruct_row(ql.u.row(q), ql.v.row(q), d1, d2, c, rec.row_mut(q));
-                    }
-                    let mut proj = rec.matmul(&svd.v); // (Nq, r)
-                    let w = &self.curv.weights[l];
-                    for row in 0..proj.rows {
-                        let r = proj.row_mut(row);
-                        for (x, wi) in r.iter_mut().zip(w) {
-                            *x *= wi;
-                        }
-                    }
-                    proj
-                })
-                .collect()
-        });
-
-        let curv = &self.curv;
-        let cached = self.cached_projections;
-        let chunk_size = self.chunk_size;
-        // with multiple shard workers the workers themselves overlap I/O
-        // and compute, so per-shard prefetch threads would only
-        // oversubscribe the cores; prefetch only on the 1-worker path
-        let workers =
-            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
-        let prefetch = self.prefetch && workers <= 1;
-        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
-            let shard_start = reader.start;
-            let mut local = Mat::zeros(nq, reader.count);
-            let mut compute = std::time::Duration::ZERO;
-            let mut scratch = Mat::zeros(0, 0);
-            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
-                let t0 = std::time::Instant::now();
-                for l in 0..n_layers {
-                    let (d1, d2) = layer_dims[l];
-                    let (u, v) = match &chunk.layers[l] {
-                        ChunkLayer::Factored { u, v } => (u, v),
-                        _ => anyhow::bail!("expected factored chunk"),
-                    };
-                    let ql = &queries.layers[l];
-                    // term 1: factor dots / lambda
-                    let s1 = factor_dots(u, v, &ql.u, &ql.v, d1, d2, c);
-                    let inv_lambda = 1.0 / curv.lambdas[l];
-                    // term 2: Woodbury correction
-                    let gt: Mat = if cached {
-                        let idx: Vec<usize> =
-                            (chunk.start..chunk.start + chunk.count).collect();
-                        curv.layers[l].train_proj.select_rows(&idx)
-                    } else {
-                        // faithful: reconstruct rows and project at query time
-                        if scratch.rows != chunk.count || scratch.cols != d1 * d2 {
-                            scratch = Mat::zeros(chunk.count, d1 * d2);
-                        }
-                        for ex in 0..chunk.count {
-                            reconstruct_row(u.row(ex), v.row(ex), d1, d2, c, scratch.row_mut(ex));
-                        }
-                        scratch.matmul(&curv.layers[l].v) // (B, r)
-                    };
-                    let corr = gt.matmul_nt(&gqw[l]); // (B, Nq)
-                    for nn in 0..chunk.count {
-                        let s1r = s1.row(nn);
-                        let cr = corr.row(nn);
-                        let col = chunk.start - shard_start + nn;
-                        for q in 0..nq {
-                            *local.at_mut(q, col) += s1r[q] * inv_lambda - cr[q];
-                        }
+        self.gqw = (0..queries.n_layers())
+            .map(|l| {
+                let (d1, d2) = self.layer_dims[l];
+                let svd = &self.curv.layers[l];
+                let ql = &queries.layers[l];
+                let mut rec = Mat::zeros(nq, d1 * d2);
+                for q in 0..nq {
+                    reconstruct_row(ql.u.row(q), ql.v.row(q), d1, d2, c, rec.row_mut(q));
+                }
+                let mut proj = rec.matmul(&svd.v); // (Nq, r)
+                let w = &self.curv.weights[l];
+                for row in 0..proj.rows {
+                    let r = proj.row_mut(row);
+                    for (x, wi) in r.iter_mut().zip(w) {
+                        *x *= wi;
                     }
                 }
-                compute += t0.elapsed();
-                Ok(())
-            })?;
-            Ok(ShardScores { start: shard_start, scores: local, io, compute, bytes })
-        })?;
-        let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
-        timer.merge(&shard_timer);
-        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+                proj
+            })
+            .collect();
+        Ok(())
+    }
+
+    fn score_chunk(
+        &self,
+        chunk: &Chunk,
+        queries: &QueryGrads,
+        out: &mut Mat,
+        scratch: &mut Scratch,
+    ) -> anyhow::Result<()> {
+        let c = self.c;
+        for l in 0..queries.n_layers() {
+            let (d1, d2) = self.layer_dims[l];
+            let (u, v) = match &chunk.layers[l] {
+                ChunkLayer::Factored { u, v } => (u, v),
+                _ => anyhow::bail!("expected factored chunk"),
+            };
+            let ql = &queries.layers[l];
+            // term 1: factor dots / lambda
+            let s1 = factor_dots(u, v, &ql.u, &ql.v, d1, d2, c);
+            let inv_lambda = 1.0 / self.curv.lambdas[l];
+            // term 2: Woodbury correction
+            let gt: Mat = if self.cached {
+                let idx: Vec<usize> = (chunk.start..chunk.start + chunk.count).collect();
+                self.curv.layers[l].train_proj.select_rows(&idx)
+            } else {
+                // faithful: reconstruct rows and project at query time
+                let rec = &mut scratch.mat;
+                if rec.rows != chunk.count || rec.cols != d1 * d2 {
+                    *rec = Mat::zeros(chunk.count, d1 * d2);
+                }
+                for ex in 0..chunk.count {
+                    reconstruct_row(u.row(ex), v.row(ex), d1, d2, c, rec.row_mut(ex));
+                }
+                rec.matmul(&self.curv.layers[l].v) // (B, r)
+            };
+            let corr = gt.matmul_nt(&self.gqw[l]); // (B, Nq)
+            for ((o, &a), &b) in out.data.iter_mut().zip(&s1.data).zip(&corr.data) {
+                *o += a * inv_lambda - b;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Scorer for LorifScorer {
+    fn name(&self) -> &'static str {
+        "lorif"
+    }
+
+    fn index_bytes(&self) -> u64 {
+        self.shards.meta.total_bytes()
+    }
+
+    fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
+        self.score_sink(queries, SinkSpec::Full)
+    }
+
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        let mut kernel = LorifKernel {
+            curv: &self.curv,
+            cached: self.cached_projections,
+            layer_dims: Vec::new(),
+            c: 0,
+            gqw: Vec::new(),
+        };
+        let opts = ExecOptions {
+            chunk_size: self.chunk_size,
+            prefetch: self.prefetch,
+            threads: self.score_threads,
+        };
+        exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
 }
 
@@ -296,7 +309,7 @@ mod tests {
         let report = scorer.score(&fx.queries).unwrap();
         let want = dense_reference(&fx, &scorer.curv, 2);
         let scale = want.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        for (a, b) in report.scores.data.iter().zip(&want.data) {
+        for (a, b) in report.scores().data.iter().zip(&want.data) {
             assert!((a - b).abs() < 0.05 * scale + 1e-4, "{a} vs {b} (scale {scale})");
         }
     }
@@ -307,8 +320,8 @@ mod tests {
         let (mut s2, _) = build_scorer("lorif_cached_a", 12, true);
         let r1 = s1.score(&fx.queries).unwrap();
         let r2 = s2.score(&fx.queries).unwrap();
-        let scale = r1.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        for (a, b) in r1.scores.data.iter().zip(&r2.scores.data) {
+        let scale = r1.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in r1.scores().data.iter().zip(&r2.scores().data) {
             // cached projections come from the rSVD of the *bf16* store,
             // faithful from query-time reconstruction: close but not equal
             assert!((a - b).abs() < 0.1 * scale + 1e-4, "{a} vs {b}");
@@ -345,13 +358,24 @@ mod tests {
         sharded.score_threads = 3;
         let ra = mono.score(&fx.queries).unwrap();
         let rb = sharded.score(&fx.queries).unwrap();
-        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+        let scale = ra.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores().data.iter().zip(&rb.scores().data) {
             assert!((a - b).abs() <= 1e-5 * scale.max(1.0), "{a} vs {b}");
         }
-        assert_eq!(rb.scores.rows, 3);
-        assert_eq!(rb.scores.cols, 40);
+        assert_eq!(rb.scores().rows, 3);
+        assert_eq!(rb.scores().cols, 40);
         assert!(rb.bytes_read == ra.bytes_read, "same records, same bytes");
+
+        // streaming top-k sink over the sharded store: identical top-k
+        // indices to the full-matrix argsort, without the (Nq, N) matrix
+        let rt = sharded.score_sink(&fx.queries, SinkSpec::TopK(7)).unwrap();
+        assert_eq!(rt.topk(7), rb.topk(7));
+        assert!(
+            rt.peak_sink_elems <= 3 * 7 * 4,
+            "streaming sink held {} score elements (> Nq*k*shards)",
+            rt.peak_sink_elems
+        );
+        assert!(rb.peak_sink_elems >= 3 * 40, "full sink materializes Nq*N");
     }
 
     #[test]

@@ -1,14 +1,20 @@
 //! Attribution scorers: LoRIF and every baseline the paper compares
 //! against (LoGRA, TrackStar, GradDot, EK-FAC, RepSim).
 //!
-//! A scorer consumes query gradients and produces an (n_query, n_train)
-//! score matrix plus a phase-timed report separating index I/O from
-//! compute — the measurement Figure 3 and the latency columns of
-//! Tables 1–2 are built on.
+//! A scorer consumes query gradients and produces a phase-timed
+//! `ScoreReport` separating index I/O from compute — the measurement
+//! Figure 3 and the latency columns of Tables 1–2 are built on.  The
+//! report's payload is chosen by a `SinkSpec`: the full
+//! `(n_query, n_train)` matrix (eval/LDS need every score) or streamed
+//! per-query top-k heaps holding O(Nq·k) elements regardless of the
+//! store size.  Store-backed methods are `exec::ChunkKernel`s run by
+//! the shared streaming executor in [`exec`]; adding a scorer means
+//! writing one kernel in one file.
 
 pub mod ablation;
 #[cfg(feature = "xla")]
 pub mod ekfac;
+pub mod exec;
 pub mod graddot;
 pub mod logra;
 pub mod lorif;
@@ -16,8 +22,10 @@ pub mod repsim;
 pub mod trackstar;
 
 use crate::linalg::Mat;
+use crate::query::parallel::TopK;
 use crate::util::timer::PhaseTimer;
 
+pub use exec::{ChunkKernel, ExecOptions, FullMatrixSink, ScoreSink, Scratch, StreamingTopK};
 pub use lorif::LorifScorer;
 
 /// Per-layer query gradients (dense + rank-c factors), rows = queries.
@@ -79,27 +87,166 @@ impl QueryGrads {
     }
 }
 
+/// Which score sink a pass should fold into (per-call, with the top-k
+/// budget attached).  The config/CLI-level knob is [`SinkMode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SinkSpec {
+    /// Materialize the full `(n_query, n_train)` matrix.
+    Full,
+    /// Stream into per-query bounded top-k heaps: O(Nq·k) score memory.
+    TopK(usize),
+}
+
+/// Config-level sink selection (`--sink full|topk`); the top-k budget
+/// comes from the query (`--topk`) at call time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SinkMode {
+    Full,
+    TopK,
+}
+
+impl SinkMode {
+    pub fn parse(s: &str) -> anyhow::Result<SinkMode> {
+        Ok(match s {
+            "full" => SinkMode::Full,
+            "topk" => SinkMode::TopK,
+            _ => anyhow::bail!("unknown sink '{s}' (full|topk)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SinkMode::Full => "full",
+            SinkMode::TopK => "topk",
+        }
+    }
+}
+
+/// What a scoring pass produced.
+pub enum ScoreOutput {
+    /// `(n_query, n_train)` matrix.
+    Full(Mat),
+    /// Per-query top-k heaps (best first), merged across shards.
+    TopK(Vec<TopK>),
+}
+
 /// Result of scoring all training examples for a batch of queries.
 pub struct ScoreReport {
-    /// (n_query, n_train)
-    pub scores: Mat,
+    pub output: ScoreOutput,
+    pub n_train: usize,
     /// phases: "load" (store I/O + decode), "compute", "precondition"
     pub timer: PhaseTimer,
     pub bytes_read: u64,
+    /// Sum over shards of the peak score elements each shard's sink
+    /// held: `nq * n_train` for the full matrix, `<= nq * k * shards`
+    /// for the streaming top-k path (asserted in `tests/prop.rs`).
+    pub peak_sink_elems: usize,
 }
 
 impl ScoreReport {
-    /// Top-k training indices per query (descending score).
+    /// A report holding a fully-materialized score matrix (the only
+    /// form non-streaming scorers like RepSim/EK-FAC produce).
+    pub fn full(scores: Mat, timer: PhaseTimer, bytes_read: u64) -> ScoreReport {
+        let peak = scores.rows * scores.cols;
+        ScoreReport {
+            n_train: scores.cols,
+            output: ScoreOutput::Full(scores),
+            timer,
+            bytes_read,
+            peak_sink_elems: peak,
+        }
+    }
+
+    pub fn n_query(&self) -> usize {
+        match &self.output {
+            ScoreOutput::Full(m) => m.rows,
+            ScoreOutput::TopK(heaps) => heaps.len(),
+        }
+    }
+
+    /// The full score matrix.  Panics on a streaming top-k report —
+    /// callers that need every score (eval, LDS, the figure benches)
+    /// must run with `SinkSpec::Full`.
+    pub fn scores(&self) -> &Mat {
+        match &self.output {
+            ScoreOutput::Full(m) => m,
+            ScoreOutput::TopK(_) => {
+                panic!("score matrix requested from a streaming top-k report")
+            }
+        }
+    }
+
+    /// Consume the report, returning the full score matrix (same
+    /// contract as [`ScoreReport::scores`]).
+    pub fn into_scores(self) -> Mat {
+        match self.output {
+            ScoreOutput::Full(m) => m,
+            ScoreOutput::TopK(_) => {
+                panic!("score matrix requested from a streaming top-k report")
+            }
+        }
+    }
+
+    /// Top-k training indices per query (descending score; NaN-safe
+    /// total order, ties toward the lower index).  On a streaming
+    /// report `k` is clamped to the heaps' budget.
     pub fn topk(&self, k: usize) -> Vec<Vec<usize>> {
-        (0..self.scores.rows)
-            .map(|q| {
-                let row = self.scores.row(q);
-                let mut idx: Vec<usize> = (0..row.len()).collect();
-                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
-                idx.truncate(k);
-                idx
-            })
+        self.topk_with_scores(k)
+            .into_iter()
+            .map(|row| row.into_iter().map(|(i, _)| i).collect())
             .collect()
+    }
+
+    /// Top-k `(train_index, score)` pairs per query, best first.
+    pub fn topk_with_scores(&self, k: usize) -> Vec<Vec<(usize, f32)>> {
+        match &self.output {
+            ScoreOutput::Full(scores) => (0..scores.rows)
+                .map(|q| {
+                    let row = scores.row(q);
+                    let mut idx: Vec<usize> = (0..row.len()).collect();
+                    // stable sort + total_cmp: NaN sorts by the IEEE
+                    // total order instead of panicking, and ties keep
+                    // the lower index first — the exact order the
+                    // bounded heaps (`query::parallel::TopK`) produce
+                    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+                    idx.truncate(k);
+                    idx.into_iter().map(|i| (i, row[i])).collect()
+                })
+                .collect(),
+            ScoreOutput::TopK(heaps) => heaps
+                .iter()
+                .map(|h| {
+                    h.entries().iter().take(k).map(|&(s, i)| (i, s)).collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Convert a full-matrix report into the requested sink's shape
+    /// (no-op for `Full`).  Used by the default `Scorer::score_sink`
+    /// for scorers without a streaming path; `peak_sink_elems` keeps
+    /// honestly reporting the materialized matrix.
+    pub fn reduce(mut self, sink: SinkSpec) -> ScoreReport {
+        if let SinkSpec::TopK(k) = sink {
+            let heaps = match &self.output {
+                ScoreOutput::Full(scores) => Some(
+                    (0..scores.rows)
+                        .map(|q| {
+                            let mut heap = TopK::new(k);
+                            for (i, &s) in scores.row(q).iter().enumerate() {
+                                heap.push(i, s);
+                            }
+                            heap
+                        })
+                        .collect::<Vec<TopK>>(),
+                ),
+                ScoreOutput::TopK(_) => None,
+            };
+            if let Some(h) = heaps {
+                self.output = ScoreOutput::TopK(h);
+            }
+        }
+        self
     }
 }
 
@@ -108,7 +255,14 @@ pub trait Scorer {
     fn name(&self) -> &'static str;
     /// Persistent index bytes this scorer reads per full pass.
     fn index_bytes(&self) -> u64;
+    /// Score every training example, materializing the full matrix.
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport>;
+    /// Score with an explicit sink.  Store-backed scorers stream into
+    /// the sink directly (O(Nq·k) memory for top-k); the default falls
+    /// back to a full pass and reduces.
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        Ok(self.score(queries)?.reduce(sink))
+    }
 }
 
 #[cfg(test)]
@@ -276,5 +430,8 @@ impl Scorer for Box<dyn Scorer + '_> {
     }
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
         (**self).score(queries)
+    }
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        (**self).score_sink(queries, sink)
     }
 }

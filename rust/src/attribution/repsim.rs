@@ -91,7 +91,7 @@ impl Scorer for RepSimScorer {
             normalize_rows(&mut q);
             q.matmul_nt(&train) // (Nq, N) cosine similarities
         });
-        Ok(ScoreReport { scores, timer, bytes_read: self.bytes })
+        Ok(ScoreReport::full(scores, timer, self.bytes))
     }
 }
 
@@ -118,7 +118,7 @@ mod tests {
         };
         let report = scorer.score(&queries).unwrap();
         // cosine with itself = 1, and it's the argmax
-        assert!((report.scores.at(0, 3) - 1.0).abs() < 1e-4);
+        assert!((report.scores().at(0, 3) - 1.0).abs() < 1e-4);
         let top = report.topk(1);
         assert_eq!(top[0][0], 3);
         std::fs::remove_file(path).ok();

@@ -8,16 +8,17 @@
 //! curvature; the full per-example K^{-1}-norm would need one solve per
 //! training example and is noted as a divergence in DESIGN.md.
 //!
-//! The streaming pass runs per shard on the worker pool; each shard also
-//! returns its slice of the train-side squared norms, merged before the
-//! final normalization.
+//! The train-side norm is purely chunk-local (every layer of an example
+//! sits in the same store record), so the whole method is one
+//! `ChunkKernel`: the shared executor in `attribution::exec` streams it,
+//! and the normalized blocks feed either sink unchanged — the
+//! normalization happens *before* top-k selection, as it must.
 
-use super::{QueryGrads, ScoreReport, Scorer};
+use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
+use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
 use crate::linalg::Mat;
-use crate::query::parallel::{self, ShardScores};
-use crate::store::{ChunkLayer, ShardSet, StoreKind};
-use crate::util::timer::PhaseTimer;
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
 
 pub struct TrackStarScorer {
     pub shards: ShardSet,
@@ -34,6 +35,73 @@ impl TrackStarScorer {
     }
 }
 
+/// The TrackStar `ChunkKernel`: preconditioned + query-normalized dots,
+/// divided by the train-side gradient norm within the chunk.
+struct TrackStarKernel<'a> {
+    curv: &'a DenseCurvature,
+    /// per layer (Nq, D): K^{-1} g_q, unit-normalized per query
+    pre: Vec<Mat>,
+}
+
+impl ChunkKernel for TrackStarKernel<'_> {
+    fn name(&self) -> &'static str {
+        "trackstar"
+    }
+
+    fn store_kind(&self) -> StoreKind {
+        StoreKind::Dense
+    }
+
+    fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+        self.pre = (0..queries.n_layers())
+            .map(|l| {
+                let mut p = self.curv.chols[l].solve_rows(&queries.layers[l].g);
+                for q in 0..p.rows {
+                    let row = p.row_mut(q);
+                    let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+                    for x in row.iter_mut() {
+                        *x /= norm;
+                    }
+                }
+                p
+            })
+            .collect();
+        Ok(())
+    }
+
+    fn score_chunk(
+        &self,
+        chunk: &Chunk,
+        _queries: &QueryGrads,
+        out: &mut Mat,
+        _scratch: &mut Scratch,
+    ) -> anyhow::Result<()> {
+        // per-example squared norms across all layers, for the
+        // train-side unit normalization
+        let mut norms2 = vec![0.0f32; chunk.count];
+        for (l, pre_l) in self.pre.iter().enumerate() {
+            let g = match &chunk.layers[l] {
+                ChunkLayer::Dense { g } => g,
+                _ => anyhow::bail!("expected dense chunk"),
+            };
+            let part = g.matmul_nt(pre_l); // (B, Nq)
+            for (o, p) in out.data.iter_mut().zip(&part.data) {
+                *o += p;
+            }
+            for (nn, n2) in norms2.iter_mut().enumerate() {
+                *n2 += g.row(nn).iter().map(|x| x * x).sum::<f32>();
+            }
+        }
+        for nn in 0..chunk.count {
+            let inv = 1.0 / norms2[nn].sqrt().max(1e-12);
+            for x in out.row_mut(nn) {
+                *x *= inv;
+            }
+        }
+        Ok(())
+    }
+}
+
 impl Scorer for TrackStarScorer {
     fn name(&self) -> &'static str {
         "trackstar"
@@ -44,89 +112,17 @@ impl Scorer for TrackStarScorer {
     }
 
     fn score(&mut self, queries: &QueryGrads) -> anyhow::Result<ScoreReport> {
-        anyhow::ensure!(
-            self.shards.meta.kind == StoreKind::Dense,
-            "TrackStar scorer needs a dense store"
-        );
-        let n = self.shards.meta.n_examples;
-        let nq = queries.n_query;
-        let n_layers = queries.n_layers();
-        let mut timer = PhaseTimer::new();
+        self.score_sink(queries, SinkSpec::Full)
+    }
 
-        // precondition + normalize query side
-        let pre: Vec<Mat> = timer.time("precondition", || {
-            (0..n_layers)
-                .map(|l| {
-                    let mut p = self.curv.chols[l].solve_rows(&queries.layers[l].g);
-                    for q in 0..p.rows {
-                        let row = p.row_mut(q);
-                        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
-                        for x in row.iter_mut() {
-                            *x /= norm;
-                        }
-                    }
-                    p
-                })
-                .collect()
-        });
-
-        let chunk_size = self.chunk_size;
-        // with multiple shard workers the workers themselves overlap I/O
-        // and compute, so per-shard prefetch threads would only
-        // oversubscribe the cores; prefetch only on the 1-worker path
-        let workers =
-            crate::util::pool::effective_threads(self.score_threads).min(self.shards.n_shards());
-        let prefetch = self.prefetch && workers <= 1;
-        let parts = parallel::map_shards(&self.shards, self.score_threads, |_, reader| {
-            let shard_start = reader.start;
-            let mut local = Mat::zeros(nq, reader.count);
-            // per-example squared norms across all layers, for the
-            // train-side unit normalization
-            let mut norms2 = vec![0.0f32; reader.count];
-            let mut compute = std::time::Duration::ZERO;
-            let (io, bytes) = reader.stream(chunk_size, prefetch, |chunk| {
-                let t0 = std::time::Instant::now();
-                for (l, pre_l) in pre.iter().enumerate() {
-                    let g = match &chunk.layers[l] {
-                        ChunkLayer::Dense { g } => g,
-                        _ => anyhow::bail!("expected dense chunk"),
-                    };
-                    let part = g.matmul_nt(pre_l); // (B, Nq)
-                    for nn in 0..chunk.count {
-                        let col = chunk.start - shard_start + nn;
-                        let row = part.row(nn);
-                        for q in 0..nq {
-                            *local.at_mut(q, col) += row[q];
-                        }
-                        norms2[col] += g.row(nn).iter().map(|x| x * x).sum::<f32>();
-                    }
-                }
-                compute += t0.elapsed();
-                Ok(())
-            })?;
-            Ok((
-                ShardScores { start: shard_start, scores: local, io, compute, bytes },
-                norms2,
-            ))
-        })?;
-
-        let mut norms2 = vec![0.0f32; n];
-        let mut score_parts = Vec::with_capacity(parts.len());
-        for (p, local_norms) in parts {
-            norms2[p.start..p.start + local_norms.len()].copy_from_slice(&local_norms);
-            score_parts.push(p);
-        }
-        let (partial, shard_timer, bytes) = parallel::merge_scores(nq, n, score_parts);
-        timer.merge(&shard_timer);
-
-        // final normalization by the train-side gradient norm
-        let mut scores = Mat::zeros(nq, n);
-        for q in 0..nq {
-            for t in 0..n {
-                *scores.at_mut(q, t) = partial.at(q, t) / norms2[t].sqrt().max(1e-12);
-            }
-        }
-        Ok(ScoreReport { scores, timer, bytes_read: bytes })
+    fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
+        let mut kernel = TrackStarKernel { curv: &self.curv, pre: Vec::new() };
+        let opts = ExecOptions {
+            chunk_size: self.chunk_size,
+            prefetch: self.prefetch,
+            threads: self.score_threads,
+        };
+        exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
 }
 
@@ -161,8 +157,24 @@ mod tests {
             let gt = g.row(t);
             let norm = gt.iter().map(|x| x * x).sum::<f32>().sqrt();
             let want: f32 = gt.iter().zip(&kq).map(|(a, b)| a * b).sum::<f32>() / norm;
-            let got = report.scores.at(0, t);
+            let got = report.scores().at(0, t);
             assert!((got - want).abs() < 0.1 * want.abs().max(0.05), "{got} vs {want}");
         }
+    }
+
+    #[test]
+    fn streaming_topk_sees_normalized_scores() {
+        // the unit normalization changes the ranking, so it must happen
+        // inside the kernel, before either sink — the streamed top-k has
+        // to match the full-matrix argsort exactly
+        let fx = make_fixture(18, 2, &[(4, 4), (3, 3)], 1, StoreKind::Dense, "trackstar_sink");
+        let set = ShardSet::open(&fx.base).unwrap();
+        let curv = DenseCurvature::build(&set, 0.1).unwrap();
+        let mut scorer = TrackStarScorer::new(ShardSet::open(&fx.base).unwrap(), curv);
+        scorer.chunk_size = 5;
+        let full = scorer.score(&fx.queries).unwrap();
+        let streamed = scorer.score_sink(&fx.queries, SinkSpec::TopK(6)).unwrap();
+        assert_eq!(streamed.topk(6), full.topk(6));
+        assert!(streamed.peak_sink_elems <= 2 * 6);
     }
 }

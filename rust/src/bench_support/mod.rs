@@ -163,6 +163,8 @@ impl Session {
 
         let mut stage2 = Duration::ZERO;
         let qg = p.query_grads(&lit, &queries)?;
+        // the tables correlate against every score (LDS), so the bench
+        // engine always runs the full-matrix sink
         let (scores, latency, storage) = match method {
             Method::RepSim => {
                 let scorer = app::build_repsim_scorer(&p, &lit, &queries)?;
@@ -170,7 +172,7 @@ impl Session {
                 let mut e = QueryEngine::new(scorer, 10);
                 e.topk_threads = p.cfg.score_threads;
                 let res = e.run(&qg)?;
-                (res.scores, res.latency, bytes)
+                (res.scores.expect("full sink"), res.latency, bytes)
             }
             Method::Ekfac => {
                 let extractor =
@@ -183,7 +185,7 @@ impl Session {
                 let mut e = QueryEngine::new(scorer, 10);
                 e.topk_threads = p.cfg.score_threads;
                 let res = e.run(&qg1)?;
-                (res.scores, res.latency, bytes)
+                (res.scores.expect("full sink"), res.latency, bytes)
             }
             _ => {
                 let t0 = std::time::Instant::now();
@@ -193,7 +195,7 @@ impl Session {
                 let mut e = QueryEngine::new(scorer, 10);
                 e.topk_threads = p.cfg.score_threads;
                 let res = e.run(&qg)?;
-                (res.scores, res.latency, bytes)
+                (res.scores.expect("full sink"), res.latency, bytes)
             }
         };
 
@@ -205,14 +207,9 @@ impl Session {
         };
         let tail_patch = if want_tailpatch {
             let proto = tailpatch_protocol();
-            let topk = {
-                let rep = crate::attribution::ScoreReport {
-                    scores: scores.clone(),
-                    timer: Default::default(),
-                    bytes_read: 0,
-                };
-                rep.topk(proto.k)
-            };
+            // same total_cmp order as ScoreReport::topk, without cloning
+            // the full (Nq, N) matrix into a throwaway report
+            let topk = crate::query::parallel::topk(&scores, proto.k, p.cfg.score_threads);
             let tp = crate::eval::tail_patch(&p, &params, &train, &queries, &topk, proto)?;
             Some(crate::eval::tail_patch_mean(&tp))
         } else {

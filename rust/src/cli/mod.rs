@@ -103,6 +103,9 @@ impl Args {
         take!(rsvd_power_iters, "rsvd-power-iters", get_usize);
         take!(shards, "shards", get_usize);
         take!(score_threads, "score-threads", get_usize);
+        if let Some(s) = self.get("sink") {
+            cfg.score_sink = crate::attribution::SinkMode::parse(s)?;
+        }
         if let Some(d) = self.get("artifacts-dir") {
             cfg.artifacts_dir = d.into();
         }
@@ -150,7 +153,7 @@ mod tests {
     fn applies_to_config() {
         let a = parse(&[
             "x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512", "--shards",
-            "4", "--score-threads", "2",
+            "4", "--score-threads", "2", "--sink", "topk",
         ]);
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
@@ -160,5 +163,13 @@ mod tests {
         assert_eq!(cfg.tier, crate::model::spec::Tier::Medium);
         assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.score_threads, 2);
+        assert_eq!(cfg.score_sink, crate::attribution::SinkMode::TopK);
+    }
+
+    #[test]
+    fn rejects_unknown_sink() {
+        let a = parse(&["x", "--sink", "columnar"]);
+        let mut cfg = crate::config::Config::default();
+        assert!(a.apply_to_config(&mut cfg).is_err());
     }
 }

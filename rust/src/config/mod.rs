@@ -7,6 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::attribution::SinkMode;
 use crate::model::spec::Tier;
 use crate::util::json::Value;
 
@@ -38,6 +39,9 @@ pub struct Config {
     pub shards: usize,
     /// worker threads for shard scoring and top-k (0 = all cores)
     pub score_threads: usize,
+    /// score sink for the query engine: `full` materializes the
+    /// (n_query, n_train) matrix, `topk` streams into O(Nq·k) heaps
+    pub score_sink: SinkMode,
 
     pub artifacts_dir: PathBuf,
     pub work_dir: PathBuf,
@@ -61,6 +65,7 @@ impl Default for Config {
             train_lr: 3e-3,
             shards: 1,
             score_threads: 0,
+            score_sink: SinkMode::Full,
             artifacts_dir: PathBuf::from("artifacts"),
             work_dir: PathBuf::from("work"),
         }
@@ -102,6 +107,9 @@ impl Config {
         num!(train_lr, "train_lr", f32);
         num!(shards, "shards", usize);
         num!(score_threads, "score_threads", usize);
+        if let Some(s) = v.get("score_sink").and_then(Value::as_str) {
+            self.score_sink = SinkMode::parse(s)?;
+        }
         if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
             self.artifacts_dir = PathBuf::from(s);
         }
@@ -167,6 +175,7 @@ impl Config {
             ("train_lr", (self.train_lr as f64).into()),
             ("shards", self.shards.into()),
             ("score_threads", self.score_threads.into()),
+            ("score_sink", self.score_sink.name().into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
             ("work_dir", self.work_dir.display().to_string().into()),
         ])
@@ -190,6 +199,7 @@ mod tests {
         cfg.tier = Tier::Medium;
         cfg.shards = 6;
         cfg.score_threads = 3;
+        cfg.score_sink = SinkMode::TopK;
         let v = cfg.to_json();
         let mut back = Config::default();
         back.apply_json(&v).unwrap();
@@ -198,6 +208,14 @@ mod tests {
         assert_eq!(back.tier, Tier::Medium);
         assert_eq!(back.shards, 6);
         assert_eq!(back.score_threads, 3);
+        assert_eq!(back.score_sink, SinkMode::TopK);
+    }
+
+    #[test]
+    fn rejects_unknown_sink() {
+        let mut cfg = Config::default();
+        let v = crate::util::json::obj([("score_sink", "columnar".into())]);
+        assert!(cfg.apply_json(&v).is_err());
     }
 
     #[test]

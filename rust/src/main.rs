@@ -17,7 +17,7 @@
 //!
 //! Common flags: --tier small|medium|large --f N --c N --r N
 //!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
-//!   --shards S --score-threads T
+//!   --shards S --score-threads T --sink full|topk
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 
 use lorif::cli::Args;
@@ -116,9 +116,10 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
     );
     println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
     println!(
-        "store layout: {} shard(s), score threads {}",
+        "store layout: {} shard(s), score threads {}, sink {}",
         cfg.shards,
-        if cfg.score_threads == 0 { "auto".to_string() } else { cfg.score_threads.to_string() }
+        if cfg.score_threads == 0 { "auto".to_string() } else { cfg.score_threads.to_string() },
+        cfg.score_sink.name()
     );
     let dense = spec.dense_floats_per_example(cfg.f) * 2;
     let fact = spec.factored_floats_per_example(cfg.f, cfg.c) * 2;
@@ -191,7 +192,9 @@ fn make_query_grads(
     p.query_grads(&lit, queries)
 }
 
-/// Score the query set with a named method; returns scores + topk + latency.
+/// Score the query set with a named method; returns scores + topk +
+/// latency.  `sink` selects the engine's score sink — with
+/// `SinkMode::TopK` the result carries no score matrix (O(Nq·k) memory).
 #[cfg(feature = "xla")]
 pub fn score_with_method(
     p: &Pipeline,
@@ -200,6 +203,7 @@ pub fn score_with_method(
     train: &lorif::corpus::Dataset,
     queries: &lorif::corpus::Dataset,
     k: usize,
+    sink: lorif::attribution::SinkMode,
 ) -> anyhow::Result<lorif::query::QueryResult> {
     let lit = p.params_literal(params)?;
     match method {
@@ -209,6 +213,7 @@ pub fn score_with_method(
             let qg = make_query_grads(p, params, queries)?;
             let mut e = QueryEngine::new(scorer, k);
             e.topk_threads = p.cfg.score_threads;
+            e.sink = sink;
             e.run(&qg)
         }
         Method::Ekfac => {
@@ -217,6 +222,7 @@ pub fn score_with_method(
             let qg = lorif::attribution::QueryGrads::extract(&p.rt, &extractor, &lit, queries)?;
             let mut e = QueryEngine::new(scorer, k);
             e.topk_threads = p.cfg.score_threads;
+            e.sink = sink;
             e.run(&qg)
         }
         _ => {
@@ -224,6 +230,7 @@ pub fn score_with_method(
             let qg = make_query_grads(p, params, queries)?;
             let mut e = QueryEngine::new(scorer, k);
             e.topk_threads = p.cfg.score_threads;
+            e.sink = sink;
             e.run(&qg)
         }
     }
@@ -241,7 +248,7 @@ fn query(cfg: Config, args: &Args) -> anyhow::Result<()> {
         &train,
         Stage1Options { write_dense: method.needs_dense_store(), ..Default::default() },
     )?;
-    let res = score_with_method(&p, method, &params, &train, &queries, k)?;
+    let res = score_with_method(&p, method, &params, &train, &queries, k, p.cfg.score_sink)?;
     println!(
         "{}: {} queries x {} train | load {:.3}s compute {:.3}s pre {:.3}s | {:.1} MB read",
         method.name(),
@@ -300,7 +307,16 @@ fn eval_lds(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let (p, train, queries, params) = prepared(cfg)?;
     let lit = p.params_literal(&params)?;
     p.stage1(&lit, &train, Stage1Options::default())?;
-    let res = score_with_method(&p, method, &params, &train, &queries, 10)?;
+    // LDS correlates against every score, so force the full sink here
+    let res = score_with_method(
+        &p,
+        method,
+        &params,
+        &train,
+        &queries,
+        10,
+        lorif::attribution::SinkMode::Full,
+    )?;
     let mut proto = LdsProtocol::default();
     if let Some(m) = args.get_usize("subsets")? {
         proto.n_subsets = m;
@@ -309,7 +325,8 @@ fn eval_lds(cfg: Config, args: &Args) -> anyhow::Result<()> {
         proto.steps = s;
     }
     let actuals = LdsActuals::get(&p, &proto, &train, &queries)?;
-    let (lds, ci) = actuals.lds(&res.scores);
+    let scores = res.scores.as_ref().expect("full sink requested");
+    let (lds, ci) = actuals.lds(scores);
     println!(
         "{} LDS = {:.4} ± {:.4} (M={} subsets, latency {:.3}s, index {:.1} MB)",
         method.name(),
@@ -335,7 +352,9 @@ fn eval_tailpatch(cfg: Config, args: &Args) -> anyhow::Result<()> {
     if let Some(lr) = args.get_f32("patch-lr")? {
         proto.lr = lr;
     }
-    let res = score_with_method(&p, method, &params, &train, &queries, proto.k)?;
+    // tail-patch only needs the top-k proponents: any sink works
+    let res =
+        score_with_method(&p, method, &params, &train, &queries, proto.k, p.cfg.score_sink)?;
     let scores = lorif::eval::tail_patch(&p, &params, &train, &queries, &res.topk, proto)?;
     let (mean, ci) = lorif::eval::tail_patch_mean(&scores);
     println!(
@@ -358,8 +377,8 @@ fn judge(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let tm = p.topic_model();
     let a = Method::parse(args.get("method-a").unwrap_or("lorif"))?;
     let b = Method::parse(args.get("method-b").unwrap_or("logra"))?;
-    let ra = score_with_method(&p, a, &params, &train, &queries, 1)?;
-    let rb = score_with_method(&p, b, &params, &train, &queries, 1)?;
+    let ra = score_with_method(&p, a, &params, &train, &queries, 1, p.cfg.score_sink)?;
+    let rb = score_with_method(&p, b, &params, &train, &queries, 1, p.cfg.score_sink)?;
     let top_a: Vec<usize> = ra.topk.iter().map(|t| t[0]).collect();
     let top_b: Vec<usize> = rb.topk.iter().map(|t| t[0]).collect();
     let sa = lorif::eval::judge::judge_top1(&tm, &queries, &train, &top_a);
@@ -391,7 +410,7 @@ fn print_help() {
                       eval-lds eval-tailpatch judge\n\
          common flags: --tier small|medium|large --f N --c N --r N\n\
                        --n-train N --n-query N --seed S --method NAME\n\
-                       --shards S --score-threads T\n\
+                       --shards S --score-threads T --sink full|topk\n\
                        --work-dir DIR --artifacts-dir DIR\n\
          pure-CPU builds support `info`; the rest need --features xla\n\
          see rust/README.md for a walkthrough."

@@ -1,7 +1,12 @@
 //! Query engine: runs a scorer over a query batch and packages scores,
 //! top-k proponents, and the latency breakdown (Fig 3 / Tables 1–2).
+//!
+//! The engine's `sink` selects between the classic full-matrix pass
+//! (eval and the figure benches need every score) and the streaming
+//! top-k sink, which never materializes the `(n_query, n_train)`
+//! matrix — O(Nq·k) score memory regardless of the store size.
 
-use crate::attribution::{QueryGrads, ScoreReport, Scorer};
+use crate::attribution::{QueryGrads, ScoreReport, Scorer, SinkMode, SinkSpec};
 use crate::linalg::Mat;
 
 #[derive(Debug, Clone)]
@@ -50,7 +55,9 @@ impl LatencyBreakdown {
 }
 
 pub struct QueryResult {
-    pub scores: Mat,
+    /// Full `(n_query, n_train)` matrix; `None` when the engine ran
+    /// with the streaming top-k sink (only `topk` is materialized).
+    pub scores: Option<Mat>,
     pub topk: Vec<Vec<usize>>,
     pub latency: LatencyBreakdown,
 }
@@ -60,26 +67,39 @@ pub struct QueryEngine<S: Scorer> {
     pub k: usize,
     /// worker threads for the top-k selection (0 = all cores)
     pub topk_threads: usize,
+    /// full-matrix pass vs streaming top-k sink
+    pub sink: SinkMode,
 }
 
 impl<S: Scorer> QueryEngine<S> {
     pub fn new(scorer: S, k: usize) -> Self {
-        QueryEngine { scorer, k, topk_threads: 0 }
+        QueryEngine { scorer, k, topk_threads: 0, sink: SinkMode::Full }
     }
 
     pub fn run(&mut self, queries: &QueryGrads) -> anyhow::Result<QueryResult> {
-        let report = self.scorer.score(queries)?;
+        let report = match self.sink {
+            SinkMode::Full => self.scorer.score(queries)?,
+            SinkMode::TopK => self.scorer.score_sink(queries, SinkSpec::TopK(self.k))?,
+        };
         let latency = LatencyBreakdown::from_report(&report);
         log::info!(
-            "{}: scored {} queries x {} train in {:.3}s ({})",
+            "{}: scored {} queries x {} train in {:.3}s, {} sink ({})",
             self.scorer.name(),
-            report.scores.rows,
-            report.scores.cols,
+            report.n_query(),
+            report.n_train,
             latency.total_s,
+            self.sink.name(),
             report.timer.summary()
         );
-        let topk = super::parallel::topk(&report.scores, self.k, self.topk_threads);
-        Ok(QueryResult { scores: report.scores, topk, latency })
+        match self.sink {
+            SinkMode::Full => {
+                let topk = super::parallel::topk(report.scores(), self.k, self.topk_threads);
+                Ok(QueryResult { scores: Some(report.into_scores()), topk, latency })
+            }
+            SinkMode::TopK => {
+                Ok(QueryResult { scores: None, topk: report.topk(self.k), latency })
+            }
+        }
     }
 }
 
@@ -104,7 +124,7 @@ mod tests {
             for i in 0..5 {
                 *scores.at_mut(0, i) = i as f32;
             }
-            Ok(ScoreReport { scores, timer, bytes_read: 42 })
+            Ok(ScoreReport::full(scores, timer, 42))
         }
     }
 
@@ -114,7 +134,19 @@ mod tests {
         let q = QueryGrads { n_query: 1, c: 1, proj_dims: vec![], layers: vec![] };
         let r = e.run(&q).unwrap();
         assert_eq!(r.topk[0], vec![4, 3, 2]);
+        assert!(r.scores.is_some());
         assert!((r.latency.io_fraction() - 0.75).abs() < 0.05);
+        assert_eq!(r.latency.bytes_read, 42);
+    }
+
+    #[test]
+    fn engine_streaming_sink_drops_matrix_keeps_topk() {
+        let mut e = QueryEngine::new(FakeScorer, 3);
+        e.sink = SinkMode::TopK;
+        let q = QueryGrads { n_query: 1, c: 1, proj_dims: vec![], layers: vec![] };
+        let r = e.run(&q).unwrap();
+        assert_eq!(r.topk[0], vec![4, 3, 2]);
+        assert!(r.scores.is_none(), "streaming sink must not materialize the matrix");
         assert_eq!(r.latency.bytes_read, 42);
     }
 

@@ -8,6 +8,6 @@ pub mod parallel;
 pub mod server;
 
 pub use engine::{LatencyBreakdown, QueryEngine, QueryResult};
-pub use parallel::{map_shards, merge_scores, ShardScores, TopK};
+pub use parallel::{map_shards, merge_scores, merge_topk, ShardScores, TopK};
 #[cfg(feature = "xla")]
 pub use server::{serve, ServerConfig};

@@ -1,17 +1,17 @@
-//! Parallel shard-scoring execution.
+//! Parallel shard-scoring primitives.
 //!
 //! The paper's Figure 3 shows query latency dominated by streaming the
 //! gradient store; a single reader thread leaves every other core idle.
-//! This module runs a scorer's streaming pass over the shards of a v2
-//! store on the worker pool: each shard produces a column block of the
-//! score matrix plus its own latency figures, which are merged into the
-//! global `ScoreReport` (score columns copied into place, per-phase
-//! times and bytes summed across shards).
+//! This module provides the worker-pool fan-out (`map_shards`) and the
+//! merge half of the story: per-shard score column blocks merged into
+//! the global matrix (`merge_scores`), and per-shard bounded top-k
+//! heaps merged into global per-query heaps (`merge_topk`).  The
+//! streaming pass itself lives in `attribution::exec` — the single
+//! `map_shards` call site shared by every store scorer.
 //!
-//! It also provides the bounded top-k accumulator used to merge
-//! per-shard (or per-column-block) top-k heaps into the global top-k —
-//! provably equal to a stable descending sort of the full score row
-//! (see `tests/prop.rs`).
+//! The bounded `TopK` accumulator is provably equal to a stable
+//! descending sort of the full score row under `f32::total_cmp` (see
+//! `tests/prop.rs`), including on NaN scores.
 
 use std::time::Duration;
 
@@ -89,13 +89,17 @@ impl TopK {
         if self.k == 0 {
             return;
         }
-        // NaN has no place in a ranking; fail loudly like the argsort
-        // path (`ScoreReport::topk`'s partial_cmp().unwrap()) does
-        // instead of silently ranking the corrupted example first.
-        assert!(!score.is_nan(), "NaN score for training example {index}");
-        let pos = self
-            .entries
-            .partition_point(|&(s, i)| s > score || (s == score && i < index));
+        // `total_cmp` gives NaN a defined place in the order (above
+        // +inf for positive NaN, below -inf for negative) instead of
+        // panicking mid-stream, and matches the argsort path
+        // (`ScoreReport::topk`) bit for bit.
+        let pos = self.entries.partition_point(|&(s, i)| {
+            match s.total_cmp(&score) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Equal => i < index,
+                std::cmp::Ordering::Less => false,
+            }
+        });
         if pos >= self.k {
             return;
         }
@@ -118,10 +122,34 @@ impl TopK {
         self.entries.is_empty()
     }
 
+    /// The heap's budget (the `k` it was created with).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The accumulated `(score, index)` entries, best first.
+    pub fn entries(&self) -> &[(f32, usize)] {
+        &self.entries
+    }
+
     /// The accumulated indices, best first.
     pub fn into_indices(self) -> Vec<usize> {
         self.entries.into_iter().map(|(_, i)| i).collect()
     }
+}
+
+/// Merge per-shard heap vectors (one `Vec<TopK>` of length `nq` per
+/// shard) into the global per-query heaps — the reduction step of the
+/// streaming top-k sink.
+pub fn merge_topk(nq: usize, k: usize, parts: Vec<Vec<TopK>>) -> Vec<TopK> {
+    let mut merged: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+    for part in &parts {
+        debug_assert_eq!(part.len(), nq);
+        for (m, h) in merged.iter_mut().zip(part) {
+            m.merge(h);
+        }
+    }
+    merged
 }
 
 /// Top-k training indices per query, computed by splitting the score
@@ -151,13 +179,7 @@ pub fn topk(scores: &Mat, k: usize, threads: usize) -> Vec<Vec<usize>> {
         Ok(local)
     })
     .expect("topk blocks are infallible");
-    let mut merged: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
-    for part in &parts {
-        for (q, acc) in part.iter().enumerate() {
-            merged[q].merge(acc);
-        }
-    }
-    merged.into_iter().map(TopK::into_indices).collect()
+    merge_topk(nq, k, parts).into_iter().map(TopK::into_indices).collect()
 }
 
 #[cfg(test)]
@@ -201,15 +223,54 @@ mod tests {
     fn parallel_topk_matches_report_argsort() {
         let mut rng = Rng::new(11);
         let scores = Mat::random_normal(4, 333, 1.0, &mut rng);
-        let rep = ScoreReport {
-            scores: scores.clone(),
-            timer: Default::default(),
-            bytes_read: 0,
-        };
+        let rep = ScoreReport::full(scores.clone(), Default::default(), 0);
         let want = rep.topk(10);
         for threads in [1, 2, 5] {
             assert_eq!(topk(&scores, 10, threads), want, "threads = {threads}");
         }
+    }
+
+    #[test]
+    fn topk_survives_nan_scores() {
+        // regression: both selection paths used partial_cmp().unwrap()
+        // and panicked on a single corrupted score.  With total_cmp a
+        // positive NaN ranks above +inf, a negative below -inf, and the
+        // heap path agrees with the argsort path exactly.
+        let mut scores = Mat::from_vec(1, 6, vec![0.5, f32::NAN, -1.0, 2.0, -f32::NAN, 1.0]);
+        let rep = ScoreReport::full(scores.clone(), Default::default(), 0);
+        let want = rep.topk(4);
+        assert_eq!(want[0], vec![1, 3, 5, 0], "positive NaN first, -NaN last");
+        for threads in [1, 3] {
+            assert_eq!(topk(&scores, 4, threads), want);
+        }
+        // all-NaN row still selects without panicking
+        for x in scores.row_mut(0) {
+            *x = f32::NAN;
+        }
+        assert_eq!(topk(&scores, 3, 2)[0], vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn merge_topk_across_shards_equals_single_heap() {
+        let mut rng = Rng::new(21);
+        let vals: Vec<f32> = (0..90).map(|_| rng.normal() as f32).collect();
+        let mut whole = TopK::new(6);
+        for (i, &s) in vals.iter().enumerate() {
+            whole.push(i, s);
+        }
+        // three "shards" of 30 columns each
+        let parts: Vec<Vec<TopK>> = (0..3)
+            .map(|p| {
+                let mut h = TopK::new(6);
+                for (i, &s) in vals.iter().enumerate().skip(p * 30).take(30) {
+                    h.push(i, s);
+                }
+                vec![h]
+            })
+            .collect();
+        let merged = merge_topk(1, 6, parts);
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].entries(), whole.entries());
     }
 
     #[test]

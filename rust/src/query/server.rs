@@ -8,8 +8,14 @@
 //!
 //! Protocol (newline-delimited JSON):
 //!   -> {"tokens": [t0, t1, ...]}            (seq_len token ids)
-//!   <- {"topk": [...], "scores": [...], "latency_s": x, "batch": b}
+//!   <- {"topk": [...], "scores": [...], "latency_s": x, "batch": b,
+//!       "bytes_read": n}
 //! Send `{"cmd": "shutdown"}` to stop the server (used by tests).
+//!
+//! Serving always runs the scorer through the streaming top-k sink
+//! (`SinkSpec::TopK`): a batch answer holds O(batch * topk) score
+//! elements, never the full (batch, n_train) matrix, so the service
+//! stays flat in memory against stores far larger than RAM.
 //!
 //! XLA executables live on the serving thread; socket threads only parse
 //! requests and forward them over channels.
@@ -19,7 +25,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::attribution::{QueryGrads, Scorer};
+use crate::attribution::{QueryGrads, Scorer, SinkSpec};
 use crate::corpus::Dataset;
 use crate::model::spec::SEQ_LEN;
 use crate::runtime::{GradExtractor, Runtime};
@@ -124,20 +130,22 @@ fn respond_batch<S: Scorer>(
         templates: vec![vec![]; batch.len()],
     };
     let queries = QueryGrads::extract(rt, extractor, params, &ds)?;
-    let report = scorer.score(&queries)?;
-    let topk = report.topk(cfg.topk);
+    // streaming top-k sink: the same merged-heap path the engine and
+    // parallel shard scoring use, never the full score matrix
+    let report = scorer.score_sink(&queries, SinkSpec::TopK(cfg.topk))?;
+    let topk = report.topk_with_scores(cfg.topk);
     let latency = t0.elapsed().as_secs_f64();
     for (q, (_, reply)) in batch.iter().enumerate() {
         let top = &topk[q];
-        let scores: Vec<Value> = top
-            .iter()
-            .map(|&i| (report.scores.at(q, i) as f64).into())
-            .collect();
         let resp = obj([
-            ("topk", Value::Arr(top.iter().map(|&i| i.into()).collect())),
-            ("scores", Value::Arr(scores)),
+            ("topk", Value::Arr(top.iter().map(|&(i, _)| i.into()).collect())),
+            (
+                "scores",
+                Value::Arr(top.iter().map(|&(_, s)| (s as f64).into()).collect()),
+            ),
             ("latency_s", latency.into()),
             ("batch", batch.len().into()),
+            ("bytes_read", (report.bytes_read as usize).into()),
         ]);
         let _ = reply.send(resp.to_string());
     }

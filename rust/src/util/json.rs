@@ -156,7 +156,12 @@ impl fmt::Display for Value {
             Value::Null => write!(f, "null"),
             Value::Bool(b) => write!(f, "{b}"),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/inf tokens; emit null like
+                    // JSON.stringify does (NaN scores can reach the
+                    // serving path since ranking is total_cmp-based)
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -383,6 +388,18 @@ mod tests {
         assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
         assert_eq!(Value::parse("-3.5e2").unwrap(), Value::Num(-350.0));
         assert_eq!(Value::parse("\"a\\nb\"").unwrap(), Value::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // JSON has no NaN/inf tokens; a corrupted score reaching the
+        // serving path must not emit an unparseable response line
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = obj([("score", Value::Num(x))]);
+            let text = doc.to_string();
+            assert_eq!(text, r#"{"score":null}"#);
+            assert!(Value::parse(&text).is_ok(), "round-trip: {text}");
+        }
     }
 
     #[test]

@@ -127,9 +127,11 @@ fn full_pipeline_lorif_vs_logra_agree_on_top_proponents() {
 
     // per-query score correlation between LoRIF (approx) and LoGRA
     // (dense): must be clearly positive
+    let s1 = r1.scores.as_ref().expect("full sink");
+    let s2 = r2.scores.as_ref().expect("full sink");
     let mut mean_rho = 0.0;
     for q in 0..queries.len() {
-        let rho = lorif::eval::spearman::spearman(r1.scores.row(q), r2.scores.row(q));
+        let rho = lorif::eval::spearman::spearman(s1.row(q), s2.row(q));
         mean_rho += rho / queries.len() as f64;
     }
     assert!(mean_rho > 0.35, "lorif-logra rank correlation too low: {mean_rho}");
@@ -167,9 +169,10 @@ fn graddot_equals_lorif_with_zero_curvature() {
     let rl = scorer.score(&qg).unwrap();
 
     // rank-1 factor dots approximate the dense dots: positive rank corr
+    let sd = rd.scores.as_ref().expect("full sink");
     let mut mean_rho = 0.0;
     for q in 0..queries.len() {
-        mean_rho += lorif::eval::spearman::spearman(rl.scores.row(q), rd.scores.row(q))
+        mean_rho += lorif::eval::spearman::spearman(rl.scores().row(q), sd.row(q))
             / queries.len() as f64;
     }
     assert!(mean_rho > 0.3, "zero-curvature lorif vs graddot: {mean_rho}");

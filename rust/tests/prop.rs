@@ -243,19 +243,19 @@ fn prop_topk_sorted_and_within_range() {
         let nq = 1 + rng.below(5);
         let n = 5 + rng.below(200);
         let scores = Mat::random_normal(nq, n, 1.0, rng);
-        let rep = ScoreReport { scores, timer: PhaseTimer::new(), bytes_read: 0 };
+        let rep = ScoreReport::full(scores, PhaseTimer::new(), 0);
         let k = 1 + rng.below(n);
         let topk = rep.topk(k);
         for (q, top) in topk.iter().enumerate() {
             assert_eq!(top.len(), k.min(n), "seed {seed}");
             for w in top.windows(2) {
                 assert!(
-                    rep.scores.at(q, w[0]) >= rep.scores.at(q, w[1]),
+                    rep.scores().at(q, w[0]) >= rep.scores().at(q, w[1]),
                     "seed {seed}: not sorted"
                 );
             }
-            let max = (0..n).map(|i| rep.scores.at(q, i)).fold(f32::MIN, f32::max);
-            assert_eq!(rep.scores.at(q, top[0]), max, "seed {seed}: wrong argmax");
+            let max = (0..n).map(|i| rep.scores().at(q, i)).fold(f32::MIN, f32::max);
+            assert_eq!(rep.scores().at(q, top[0]), max, "seed {seed}: wrong argmax");
         }
     });
 }
@@ -484,8 +484,7 @@ fn prop_sharded_scoring_equals_monolithic() {
     // tolerance, and the merged top-k equals the global top-k computed
     // from the full score matrix.
     use lorif::attribution::graddot::GradDotScorer;
-    use lorif::attribution::{QueryGrads, QueryLayer, ScoreReport, Scorer};
-    use lorif::util::timer::PhaseTimer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer};
 
     for_each_case("sharded-scoring", |seed, rng| {
         let n_layers = 1 + rng.below(2);
@@ -542,8 +541,8 @@ fn prop_sharded_scoring_equals_monolithic() {
         let ra = mono.score(&qg).unwrap();
         let rb = sharded.score(&qg).unwrap();
         assert_eq!(ra.bytes_read, rb.bytes_read, "seed {seed}");
-        let scale = ra.scores.data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        for (a, b) in ra.scores.data.iter().zip(&rb.scores.data) {
+        let scale = ra.scores().data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in ra.scores().data.iter().zip(&rb.scores().data) {
             assert!(
                 (a - b).abs() <= 1e-5 * scale.max(1.0),
                 "seed {seed}: {a} vs {b}"
@@ -553,13 +552,8 @@ fn prop_sharded_scoring_equals_monolithic() {
         // merged top-k (parallel column-block heaps over the sharded
         // scores) == global top-k from the full monolithic matrix
         let k = 1 + rng.below(n);
-        let global = ScoreReport {
-            scores: ra.scores,
-            timer: PhaseTimer::new(),
-            bytes_read: 0,
-        }
-        .topk(k);
-        let merged = lorif::query::parallel::topk(&rb.scores, k, 1 + rng.below(4));
+        let global = ra.topk(k);
+        let merged = lorif::query::parallel::topk(rb.scores(), k, 1 + rng.below(4));
         assert_eq!(merged, global, "seed {seed} (k={k})");
     });
 }
@@ -574,12 +568,8 @@ fn prop_parallel_topk_equals_stable_argsort() {
         let scores = Mat::random_normal(nq, n, 1.0, rng);
         let k = 1 + rng.below(n + 5); // may exceed n: must clamp
         let threads = 1 + rng.below(4);
-        let want = ScoreReport {
-            scores: scores.clone(),
-            timer: PhaseTimer::new(),
-            bytes_read: 0,
-        }
-        .topk(k.min(n));
+        let want =
+            ScoreReport::full(scores.clone(), PhaseTimer::new(), 0).topk(k.min(n));
         let got = lorif::query::parallel::topk(&scores, k, threads);
         assert_eq!(got, want, "seed {seed} (n={n} k={k} threads={threads})");
     });
@@ -632,6 +622,152 @@ fn prop_shard_boundaries_partition_examples() {
             expect_start += set.shard(i).count;
         }
         assert_eq!(expect_start, n, "seed {seed}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// score-sink invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_streaming_topk_equals_full_matrix_all_kernels() {
+    // For every store scorer (graddot, logra, trackstar on dense
+    // stores; lorif on factored stores), both store layouts (v1
+    // monolithic, v2 sharded), and k in {1, 5, N}: the streaming
+    // top-k sink returns exactly the indices of a stable descending
+    // argsort of the full-matrix sink, while holding at most
+    // Nq * k * shards score elements (never the (Nq, N) matrix).
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::logra::LograScorer;
+    use lorif::attribution::lorif::LorifScorer;
+    use lorif::attribution::trackstar::TrackStarScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::curvature::{DenseCurvature, TruncatedCurvature};
+
+    for_each_case("sink-equivalence", |seed, rng| {
+        let n_layers = 1 + rng.below(2);
+        let dims: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (3 + rng.below(3), 3 + rng.below(3))).collect();
+        let c = 1 + rng.below(2);
+        let n = 12 + rng.below(25);
+        let nq = 1 + rng.below(3);
+        let shards = 2 + rng.below(3);
+        let data = random_layers(n, &dims, c, rng);
+
+        // the same records in every (kind, layout) combination
+        let mut bases = std::collections::BTreeMap::new();
+        for kind in [StoreKind::Dense, StoreKind::Factored] {
+            let meta = StoreMeta {
+                kind,
+                tier: "small".into(),
+                f: 4,
+                c,
+                layers: dims.clone(),
+                n_examples: 0,
+                shards: None,
+            };
+            let v1 = prop_tmp_base(&format!("sink_{}_v1", kind.as_str()), seed);
+            let mut w = StoreWriter::create(&v1, meta.clone()).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "b1"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+            let v2 = prop_tmp_base(&format!("sink_{}_v2", kind.as_str()), seed);
+            let mut w = ShardedWriter::create(&v2, meta, shards, n).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "b2"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+            bases.insert(kind.as_str(), (v1, v2));
+        }
+        let (dense_v1, dense_v2) = bases["dense"].clone();
+        let (fact_v1, fact_v2) = bases["factored"].clone();
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::random_normal(nq, d1 * d2, 1.0, rng),
+                u: Mat::random_normal(nq, d1 * c, 1.0, rng),
+                v: Mat::random_normal(nq, d2 * c, 1.0, rng),
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c, proj_dims: dims.clone(), layers: qlayers };
+
+        let chunk_size = 1 + rng.below(n);
+        let threads = 1 + rng.below(3);
+        let mut check = |name: &str, scorer: &mut dyn Scorer, n_shards: usize| {
+            let full = scorer.score(&qg).unwrap();
+            for k in [1usize, 5, n] {
+                let streamed = scorer.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+                assert_eq!(
+                    streamed.topk(k),
+                    full.topk(k),
+                    "seed {seed}: {name} k={k} diverged"
+                );
+                assert!(
+                    streamed.peak_sink_elems <= nq * k * n_shards,
+                    "seed {seed}: {name} k={k} held {} score elements (> {})",
+                    streamed.peak_sink_elems,
+                    nq * k * n_shards
+                );
+                assert_eq!(streamed.bytes_read, full.bytes_read, "seed {seed}: {name}");
+            }
+        };
+
+        for (layout, dense_base, fact_base) in
+            [("v1", &dense_v1, &fact_v1), ("v2", &dense_v2, &fact_v2)]
+        {
+            let open_dense = || ShardSet::open(dense_base).unwrap();
+            let open_fact = || ShardSet::open(fact_base).unwrap();
+            let n_shards = open_dense().n_shards();
+
+            let mut gd = GradDotScorer::new(open_dense());
+            gd.chunk_size = chunk_size;
+            gd.score_threads = threads;
+            check(&format!("graddot/{layout}"), &mut gd, n_shards);
+
+            let curv = DenseCurvature::build(&open_dense(), 0.1).unwrap();
+            let mut lg = LograScorer::new(open_dense(), curv);
+            lg.chunk_size = chunk_size;
+            lg.score_threads = threads;
+            check(&format!("logra/{layout}"), &mut lg, n_shards);
+
+            let curv = DenseCurvature::build(&open_dense(), 0.1).unwrap();
+            let mut ts = TrackStarScorer::new(open_dense(), curv);
+            ts.chunk_size = chunk_size;
+            ts.score_threads = threads;
+            check(&format!("trackstar/{layout}"), &mut ts, n_shards);
+
+            let curv = TruncatedCurvature::build(&open_fact(), 3, 3, 2, 0.1, seed).unwrap();
+            let mut lf = LorifScorer::new(open_fact(), curv);
+            lf.chunk_size = chunk_size;
+            lf.score_threads = threads;
+            check(&format!("lorif/{layout}"), &mut lf, n_shards);
+        }
+    });
+}
+
+#[test]
+fn prop_topk_nan_injection_consistent() {
+    // regression for the partial_cmp().unwrap() panic: scores with
+    // injected NaNs must not panic, and the heap path (parallel::topk /
+    // the streaming sink) must agree with the argsort path exactly
+    use lorif::attribution::ScoreReport;
+    use lorif::util::timer::PhaseTimer;
+    for_each_case("nan-topk", |seed, rng| {
+        let nq = 1 + rng.below(3);
+        let n = 5 + rng.below(60);
+        let mut scores = Mat::random_normal(nq, n, 1.0, rng);
+        for _ in 0..(1 + rng.below(5)) {
+            let q = rng.below(nq);
+            let t = rng.below(n);
+            *scores.at_mut(q, t) = if rng.below(2) == 0 { f32::NAN } else { -f32::NAN };
+        }
+        let k = 1 + rng.below(n);
+        let threads = 1 + rng.below(4);
+        let want = ScoreReport::full(scores.clone(), PhaseTimer::new(), 0).topk(k);
+        let got = lorif::query::parallel::topk(&scores, k, threads);
+        assert_eq!(got, want, "seed {seed} (n={n} k={k})");
     });
 }
 
