@@ -126,6 +126,7 @@ fn main() -> anyhow::Result<()> {
                 layers: layers.clone(),
                 n_examples: 0,
                 shards: None,
+                summary_chunk: None,
             };
             let mut w = StoreWriter::create(&base, meta)?;
             let lg: Vec<LayerGrads> = layers
@@ -184,6 +185,7 @@ fn main() -> anyhow::Result<()> {
             layers: layers.clone(),
             n_examples: 0,
             shards: None,
+            summary_chunk: None,
         };
         let lg: Vec<LayerGrads> = layers
             .iter()
@@ -270,8 +272,94 @@ fn main() -> anyhow::Result<()> {
             r_full.peak_sink_elems as f64 / r_topk.peak_sink_elems.max(1) as f64
         );
 
-        // persist the sink comparison for the CI perf-smoke artifact
-        let doc = lorif::util::json::obj([
+        // chunk pruning: bytes-skipped vs k on a clustered store (the
+        // I/O half of the win; the sinks above are the memory half).
+        // One strong query-aligned chunk, the rest weak — the shape the
+        // summary index is built for.
+        use lorif::sketch::PruneMode;
+        let prune_base = dir.join("clustered");
+        let grid = 512usize;
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: layers.clone(),
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+        };
+        let mut w = StoreWriter::create(&prune_base, meta)?;
+        w.set_summary_chunk(grid)?;
+        {
+            let lg: Vec<LayerGrads> = layers
+                .iter()
+                .map(|&(d1, d2)| {
+                    let mut g = Mat::zeros(n, d1 * d2);
+                    for t in 0..n {
+                        let scale = if t < grid { 4.0 } else { 0.02 };
+                        for x in g.row_mut(t) {
+                            *x = scale * (1.0 + 0.1 * rng.normal() as f32);
+                        }
+                    }
+                    LayerGrads { g, u: Mat::zeros(n, d1), v: Mat::zeros(n, d2) }
+                })
+                .collect();
+            w.append(&ExtractBatch { losses: vec![0.0; n], layers: lg, valid: n })?;
+            w.finalize()?;
+        }
+        let aligned: Vec<QueryLayer> = layers
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::from_vec(nq, d1 * d2, vec![1.0; nq * d1 * d2]),
+                u: Mat::zeros(nq, d1),
+                v: Mat::zeros(nq, d2),
+            })
+            .collect();
+        let qa = QueryGrads { n_query: nq, c: 1, proj_dims: layers.clone(), layers: aligned };
+        let mut pruned_scorer = GradDotScorer::new(ShardSet::open(&prune_base)?);
+        pruned_scorer.score_threads = 1;
+        let mut bytes_by_k = Vec::new();
+        for kk in [1usize, 10, 100] {
+            pruned_scorer.prune = PruneMode::Exact;
+            let rp = pruned_scorer.score_sink(&qa, SinkSpec::TopK(kk))?;
+            pruned_scorer.prune = PruneMode::Off;
+            let rf = pruned_scorer.score_sink(&qa, SinkSpec::TopK(kk))?;
+            assert_eq!(rp.topk(kk), rf.topk(kk), "exact pruning diverged (k={kk})");
+            println!(
+                "chunk pruning k={kk}: full scan {} B | pruned reads {} B, skips {} B \
+                 ({} of {} chunks) -> {:.1}% of I/O avoided",
+                rf.bytes_read,
+                rp.bytes_read,
+                rp.bytes_skipped,
+                rp.chunks_skipped,
+                (n + grid - 1) / grid,
+                100.0 * rp.bytes_skipped as f64 / rf.bytes_read.max(1) as f64
+            );
+            if kk == 10 {
+                bytes_by_k.push(("full_scan_bytes", (rf.bytes_read as usize).into()));
+                bytes_by_k.push(("pruned_bytes_read", (rp.bytes_read as usize).into()));
+                bytes_by_k.push(("pruned_bytes_skipped", (rp.bytes_skipped as usize).into()));
+            }
+        }
+        let t_noprune = time(3, || {
+            pruned_scorer.prune = PruneMode::Off;
+            let _ = pruned_scorer.score_sink(&qa, SinkSpec::TopK(k)).unwrap();
+        });
+        let t_prune = time(3, || {
+            pruned_scorer.prune = PruneMode::Exact;
+            let _ = pruned_scorer.score_sink(&qa, SinkSpec::TopK(k)).unwrap();
+        });
+        println!(
+            "pruned top-k (k={k}): full scan {:.1} ms | pruned {:.1} ms | speedup {:.2}x",
+            t_noprune * 1e3,
+            t_prune * 1e3,
+            t_noprune / t_prune
+        );
+
+        // persist the sink + pruning comparison for the CI perf-smoke
+        // artifact
+        let mut fields: Vec<(&'static str, lorif::util::json::Value)> = vec![
             ("n_train", n.into()),
             ("n_query", nq.into()),
             ("k", k.into()),
@@ -281,12 +369,16 @@ fn main() -> anyhow::Result<()> {
             ("topk_ms", (t_topk * 1e3).into()),
             ("full_peak_elems", r_full.peak_sink_elems.into()),
             ("topk_peak_elems", r_topk.peak_sink_elems.into()),
-        ]);
+            ("prune_full_ms", (t_noprune * 1e3).into()),
+            ("prune_ms", (t_prune * 1e3).into()),
+        ];
+        fields.extend(bytes_by_k);
+        let doc = lorif::util::json::obj(fields);
         let out_dir = std::path::PathBuf::from("work/bench/results");
         std::fs::create_dir_all(&out_dir)?;
         let out = out_dir.join("perf_smoke.json");
         std::fs::write(&out, doc.to_string())?;
-        println!("sink comparison saved to {}", out.display());
+        println!("sink + pruning comparison saved to {}", out.display());
     }
 
     xla_scorer_bench(&mut rng);

@@ -80,12 +80,16 @@ pub fn build_store_scorer(
     method: Method,
 ) -> anyhow::Result<Box<dyn Scorer>> {
     let threads = p.cfg.score_threads;
+    let prune = p.cfg.prune;
+    let depth = p.cfg.prefetch_depth;
     match method {
         Method::Lorif => {
             let (curv, _) = p.stage2_lorif()?;
             let shards = ShardSet::open(&p.factored_base())?;
             let mut s = LorifScorer::new(shards, curv);
             s.score_threads = threads;
+            s.prune = prune;
+            s.prefetch_depth = depth;
             Ok(Box::new(s))
         }
         Method::Logra => {
@@ -93,12 +97,16 @@ pub fn build_store_scorer(
             let shards = ShardSet::open(&p.dense_base())?;
             let mut s = LograScorer::new(shards, curv);
             s.score_threads = threads;
+            s.prune = prune;
+            s.prefetch_depth = depth;
             Ok(Box::new(s))
         }
         Method::GradDot => {
             let shards = ShardSet::open(&p.dense_base())?;
             let mut s = GradDotScorer::new(shards);
             s.score_threads = threads;
+            s.prune = prune;
+            s.prefetch_depth = depth;
             Ok(Box::new(s))
         }
         Method::TrackStar => {
@@ -106,6 +114,8 @@ pub fn build_store_scorer(
             let shards = ShardSet::open(&p.dense_base())?;
             let mut s = TrackStarScorer::new(shards, curv);
             s.score_threads = threads;
+            s.prune = prune;
+            s.prefetch_depth = depth;
             Ok(Box::new(s))
         }
         Method::RepSim | Method::Ekfac => {

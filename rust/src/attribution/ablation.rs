@@ -18,7 +18,8 @@ use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::{reconstruct_row, DenseCurvature, TruncatedCurvature};
 use crate::linalg::Mat;
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
+use crate::sketch::PruneMode;
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct DenseWoodburyScorer {
     pub shards: ShardSet,
@@ -27,11 +28,24 @@ pub struct DenseWoodburyScorer {
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
     pub score_threads: usize,
+    /// prefetch queue depth in chunks (`--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// accepted for interface parity; the ablation kernels keep the
+    /// default `upper_bound` opt-out, so chunks are never skipped
+    pub prune: PruneMode,
 }
 
 impl DenseWoodburyScorer {
     pub fn new(shards: ShardSet, curv: TruncatedCurvature) -> Self {
-        DenseWoodburyScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
+        DenseWoodburyScorer {
+            shards,
+            curv,
+            prefetch: true,
+            chunk_size: 512,
+            score_threads: 0,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            prune: PruneMode::Exact,
+        }
     }
 }
 
@@ -109,6 +123,8 @@ impl Scorer for DenseWoodburyScorer {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
+            prefetch_depth: self.prefetch_depth,
+            prune: self.prune,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
@@ -121,11 +137,24 @@ pub struct FactoredDenseKScorer {
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
     pub score_threads: usize,
+    /// prefetch queue depth in chunks (`--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// accepted for interface parity; this kernel keeps the default
+    /// `upper_bound` opt-out, so chunks are never skipped
+    pub prune: PruneMode,
 }
 
 impl FactoredDenseKScorer {
     pub fn new(shards: ShardSet, curv: DenseCurvature) -> Self {
-        FactoredDenseKScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
+        FactoredDenseKScorer {
+            shards,
+            curv,
+            prefetch: true,
+            chunk_size: 512,
+            score_threads: 0,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            prune: PruneMode::Exact,
+        }
     }
 }
 
@@ -211,6 +240,8 @@ impl Scorer for FactoredDenseKScorer {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
+            prefetch_depth: self.prefetch_depth,
+            prune: self.prune,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }

@@ -17,12 +17,23 @@
 //! holds O(Nq·k) score elements per shard no matter how large the store
 //! is — the memory model that lets the engine, server, and CLI serve
 //! top-k proponents against stores far larger than RAM.
+//!
+//! On top of the sinks sits chunk pruning (`crate::sketch`): when the
+//! store carries a v3 summary sidecar, the sink is a top-k heap, and
+//! `--prune` is on, the executor walks the summary grid with a
+//! skip-aware cursor.  A chunk is read only if some query's
+//! Cauchy–Schwarz upper bound (`ChunkKernel::upper_bound`) could still
+//! beat that query's current k-th best (`ScoreSink::threshold`);
+//! otherwise the cursor seeks past it, and the saved I/O is reported as
+//! `bytes_skipped`/`chunks_skipped` on the `ScoreReport`.  Exact mode
+//! is provably identical to a full scan (see `sketch::prune`).
 
 use std::time::{Duration, Instant};
 
 use super::{QueryGrads, ScoreOutput, ScoreReport, SinkSpec};
 use crate::linalg::Mat;
 use crate::query::parallel::{self, ShardScores, TopK};
+use crate::sketch::{ChunkPruner, ChunkSummary, PruneMode};
 use crate::store::{Chunk, ShardSet, StoreKind, StoreMeta, StoreReader};
 use crate::util::pool;
 use crate::util::timer::PhaseTimer;
@@ -72,6 +83,18 @@ pub trait ChunkKernel: Sync {
         out: &mut Mat,
         scratch: &mut Scratch,
     ) -> anyhow::Result<()>;
+
+    /// SOUND upper bound on the score this kernel could produce for ANY
+    /// example of a chunk with summary `s`, against query `q` — i.e.
+    /// never less than any value `score_chunk` would write for that
+    /// chunk.  `None` opts the kernel out of pruning (the chunk is then
+    /// always read).  Called after `precondition`, only on the pruned
+    /// path; kernels typically answer from a `sketch::QueryBounds` over
+    /// their preconditioned query blocks.
+    fn upper_bound(&self, s: &ChunkSummary, q: usize) -> Option<f32> {
+        let _ = (s, q);
+        None
+    }
 }
 
 /// Where a scorer pass puts its scores.  Implementations consume
@@ -85,6 +108,15 @@ pub trait ScoreSink: Send {
     /// Score elements this sink currently holds (memory accounting; the
     /// streaming-top-k O(Nq·k) guarantee is asserted through this).
     fn allocated_elems(&self) -> usize;
+
+    /// The score a NEW candidate at a higher index must EXCEED to
+    /// change this sink's output for query `q`, or `None` when the sink
+    /// still needs every score.  The default (`None`) makes pruning
+    /// inert for full-matrix passes.
+    fn threshold(&self, q: usize) -> Option<f32> {
+        let _ = q;
+        None
+    }
 }
 
 /// Materializes this shard's `(n_query, shard_count)` column block.
@@ -140,6 +172,10 @@ impl ScoreSink for StreamingTopK {
     fn allocated_elems(&self) -> usize {
         self.heaps.iter().map(TopK::len).sum()
     }
+
+    fn threshold(&self, q: usize) -> Option<f32> {
+        self.heaps[q].threshold()
+    }
 }
 
 /// Streaming knobs shared by every store scorer.
@@ -148,6 +184,11 @@ pub struct ExecOptions {
     pub prefetch: bool,
     /// worker threads for shard scoring (0 = all cores)
     pub threads: usize,
+    /// prefetch queue depth in chunks (>= 1; `--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// chunk pruning against the store's v3 summary sidecar — inert on
+    /// full-matrix passes and on stores without a sidecar
+    pub prune: PruneMode,
 }
 
 struct ShardRun<S> {
@@ -155,6 +196,8 @@ struct ShardRun<S> {
     io: Duration,
     compute: Duration,
     bytes: u64,
+    bytes_skipped: u64,
+    chunks_skipped: usize,
     /// peak score elements the sink held during this shard's pass
     peak: usize,
 }
@@ -162,7 +205,8 @@ struct ShardRun<S> {
 /// Run `kernel` over every shard of `set`, folding scores into the
 /// requested sink.  This is the single streaming scaffold behind all
 /// store scorers: kind validation, preconditioning, the worker loop,
-/// prefetch gating, and phase-time merging live here and only here.
+/// prefetch gating, chunk pruning, and phase-time merging live here and
+/// only here.
 pub fn execute<K: ChunkKernel>(
     set: &ShardSet,
     opts: &ExecOptions,
@@ -194,9 +238,28 @@ pub fn execute<K: ChunkKernel>(
     let prefetch = opts.prefetch && workers <= 1;
     let kernel: &K = kernel;
 
+    // pruning applies only to top-k passes (a full-matrix sink needs
+    // every score) over stores that carry the summary sidecar, and only
+    // when the kernel actually offers bounds (probed on the first
+    // summary chunk, post-precondition) — otherwise the gated
+    // no-prefetch cursor walk would cost I/O overlap for zero skips
+    let pruner = match (sink, opts.prune.slack()) {
+        (SinkSpec::TopK(_), Some(slack)) => set
+            .summaries()
+            .filter(|s| {
+                nq > 0
+                    && s.chunks
+                        .first()
+                        .map_or(false, |c| kernel.upper_bound(c, 0).is_some())
+            })
+            .map(|s| ChunkPruner { summaries: s, slack }),
+        _ => None,
+    };
+    let pruner = pruner.as_ref();
+
     match sink {
         SinkSpec::Full => {
-            let runs = run_shards(set, opts, prefetch, kernel, queries, |r| {
+            let runs = run_shards(set, opts, prefetch, pruner, kernel, queries, |r| {
                 FullMatrixSink::new(nq, r.start, r.count)
             })?;
             let peak: usize = runs.iter().map(|r| r.peak).sum();
@@ -217,21 +280,28 @@ pub fn execute<K: ChunkKernel>(
                 n_train: n,
                 timer,
                 bytes_read: bytes,
+                bytes_skipped: 0,
+                chunks_skipped: 0,
                 peak_sink_elems: peak,
             })
         }
         SinkSpec::TopK(k) => {
-            let runs =
-                run_shards(set, opts, prefetch, kernel, queries, |_| StreamingTopK::new(nq, k))?;
+            let runs = run_shards(set, opts, prefetch, pruner, kernel, queries, |_| {
+                StreamingTopK::new(nq, k)
+            })?;
             let mut io = Duration::ZERO;
             let mut compute = Duration::ZERO;
             let mut bytes = 0u64;
+            let mut bytes_skipped = 0u64;
+            let mut chunks_skipped = 0usize;
             let mut peak = 0usize;
             let mut shard_heaps = Vec::with_capacity(runs.len());
             for r in runs {
                 io += r.io;
                 compute += r.compute;
                 bytes += r.bytes;
+                bytes_skipped += r.bytes_skipped;
+                chunks_skipped += r.chunks_skipped;
                 peak += r.peak;
                 shard_heaps.push(r.sink.heaps);
             }
@@ -243,17 +313,23 @@ pub fn execute<K: ChunkKernel>(
                 n_train: n,
                 timer,
                 bytes_read: bytes,
+                bytes_skipped,
+                chunks_skipped,
                 peak_sink_elems: peak,
             })
         }
     }
 }
 
-/// The one worker loop: stream each shard in chunks, score, sink.
+/// The one worker loop: stream each shard in chunks, score, sink.  With
+/// a pruner, the shard is walked on the summary grid with a skip-aware
+/// cursor; a chunk is read only if some query's bound still clears its
+/// heap threshold.
 fn run_shards<K, S, F>(
     set: &ShardSet,
     opts: &ExecOptions,
     prefetch: bool,
+    pruner: Option<&ChunkPruner<'_>>,
     kernel: &K,
     queries: &QueryGrads,
     make_sink: F,
@@ -264,26 +340,76 @@ where
     F: Fn(&StoreReader) -> S + Sync,
 {
     let nq = queries.n_query;
-    parallel::map_shards(set, opts.threads, |_, reader| {
+    parallel::map_shards(set, opts.threads, |_, mut reader| {
+        reader.prefetch_depth = opts.prefetch_depth.max(1);
         let mut sink = make_sink(&reader);
         let mut compute = Duration::ZERO;
         let mut scratch = Scratch::new();
         let mut block = Mat::zeros(0, 0);
         let mut peak = 0usize;
-        let (io, bytes) = reader.stream(opts.chunk_size, prefetch, |chunk| {
+        let score_one = |chunk: &Chunk,
+                         sink: &mut S,
+                         block: &mut Mat,
+                         scratch: &mut Scratch|
+         -> anyhow::Result<Duration> {
             let t0 = Instant::now();
             if block.rows != chunk.count || block.cols != nq {
-                block = Mat::zeros(chunk.count, nq);
+                *block = Mat::zeros(chunk.count, nq);
             } else {
                 block.data.iter_mut().for_each(|x| *x = 0.0);
             }
-            kernel.score_chunk(&chunk, queries, &mut block, &mut scratch)?;
-            sink.consume(chunk.start, &block);
-            peak = peak.max(sink.allocated_elems());
-            compute += t0.elapsed();
-            Ok(())
-        })?;
-        Ok(ShardRun { sink, io, compute, bytes, peak })
+            kernel.score_chunk(chunk, queries, block, scratch)?;
+            sink.consume(chunk.start, block);
+            Ok(t0.elapsed())
+        };
+        if let Some(pr) = pruner {
+            // skip-aware pass on the summary grid (no prefetch thread:
+            // skip decisions depend on the heap state fed back per chunk)
+            let mut cur = reader.chunks(pr.chunk_size())?;
+            while let Some((start, count)) = cur.peek() {
+                let skippable = nq > 0
+                    && pr.summary_for(start, count).map_or(false, |s| {
+                        (0..nq).all(|q| {
+                            match (sink.threshold(q), kernel.upper_bound(s, q)) {
+                                (Some(t), Some(u)) => pr.deflate(u) <= t,
+                                _ => false,
+                            }
+                        })
+                    });
+                if skippable {
+                    cur.skip()?;
+                    continue;
+                }
+                let chunk = cur.read()?;
+                compute += score_one(&chunk, &mut sink, &mut block, &mut scratch)?;
+                peak = peak.max(sink.allocated_elems());
+            }
+            let stats = cur.stats().clone();
+            Ok(ShardRun {
+                sink,
+                io: cur.io_time(),
+                compute,
+                bytes: stats.bytes_read,
+                bytes_skipped: stats.bytes_skipped,
+                chunks_skipped: stats.chunks_skipped,
+                peak,
+            })
+        } else {
+            let (io, bytes) = reader.stream(opts.chunk_size, prefetch, |chunk| {
+                compute += score_one(&chunk, &mut sink, &mut block, &mut scratch)?;
+                peak = peak.max(sink.allocated_elems());
+                Ok(())
+            })?;
+            Ok(ShardRun {
+                sink,
+                io,
+                compute,
+                bytes,
+                bytes_skipped: 0,
+                chunks_skipped: 0,
+                peak,
+            })
+        }
     })
 }
 
@@ -302,6 +428,8 @@ mod tests {
         assert_eq!(sink.scores.row(0), &[1.0, 3.0, 5.0, 7.0, 9.0]);
         assert_eq!(sink.scores.row(1), &[2.0, 4.0, 6.0, 8.0, 10.0]);
         assert_eq!(sink.allocated_elems(), 10);
+        // a full-matrix sink never exposes a pruning threshold
+        assert_eq!(sink.threshold(0), None);
     }
 
     #[test]
@@ -322,5 +450,17 @@ mod tests {
         for heap in &sink.heaps {
             assert_eq!(heap.len(), k);
         }
+    }
+
+    #[test]
+    fn streaming_topk_threshold_appears_when_full() {
+        let mut sink = StreamingTopK::new(1, 2);
+        assert_eq!(sink.threshold(0), None, "empty heap: no threshold");
+        sink.consume(0, &Mat::from_vec(1, 1, vec![3.0]));
+        assert_eq!(sink.threshold(0), None, "half-full heap: no threshold");
+        sink.consume(1, &Mat::from_vec(1, 1, vec![1.0]));
+        assert_eq!(sink.threshold(0), Some(1.0), "k-th best once full");
+        sink.consume(2, &Mat::from_vec(1, 1, vec![2.0]));
+        assert_eq!(sink.threshold(0), Some(2.0), "threshold rises");
     }
 }

@@ -8,7 +8,8 @@
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::linalg::Mat;
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
+use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct GradDotScorer {
     pub shards: ShardSet,
@@ -16,17 +17,31 @@ pub struct GradDotScorer {
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
     pub score_threads: usize,
+    /// prefetch queue depth in chunks (`--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// chunk pruning against the summary sidecar (`--prune`)
+    pub prune: PruneMode,
 }
 
 impl GradDotScorer {
     pub fn new(shards: ShardSet) -> GradDotScorer {
-        GradDotScorer { shards, prefetch: true, chunk_size: 512, score_threads: 0 }
+        GradDotScorer {
+            shards,
+            prefetch: true,
+            chunk_size: 512,
+            score_threads: 0,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            prune: PruneMode::Exact,
+        }
     }
 }
 
-/// The GradDot `ChunkKernel`: raw gradient dot products, no
-/// preconditioned state at all.
-struct GradDotKernel;
+/// The GradDot `ChunkKernel`: raw gradient dot products; the query
+/// gradients themselves double as the pruning-bound blocks (the score
+/// IS `⟨g_t, g_q⟩`).
+struct GradDotKernel {
+    bounds: Option<QueryBounds>,
+}
 
 impl ChunkKernel for GradDotKernel {
     fn name(&self) -> &'static str {
@@ -37,7 +52,13 @@ impl ChunkKernel for GradDotKernel {
         StoreKind::Dense
     }
 
-    fn precondition(&mut self, _meta: &StoreMeta, _queries: &QueryGrads) -> anyhow::Result<()> {
+    fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+        // the one kernel with no preconditioned state of its own: clone
+        // the query blocks into the bound state (`upper_bound` cannot
+        // reach `queries`, and one extra query-batch copy is noise next
+        // to the store pass it lets us skip)
+        self.bounds =
+            Some(QueryBounds::new(queries.layers.iter().map(|l| l.g.clone()).collect()));
         Ok(())
     }
 
@@ -60,6 +81,10 @@ impl ChunkKernel for GradDotKernel {
         }
         Ok(())
     }
+
+    fn upper_bound(&self, s: &ChunkSummary, q: usize) -> Option<f32> {
+        self.bounds.as_ref().map(|b| b.upper_bound(s, q))
+    }
 }
 
 impl Scorer for GradDotScorer {
@@ -80,8 +105,10 @@ impl Scorer for GradDotScorer {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
+            prefetch_depth: self.prefetch_depth,
+            prune: self.prune,
         };
-        exec::execute(&self.shards, &opts, &mut GradDotKernel, queries, sink)
+        exec::execute(&self.shards, &opts, &mut GradDotKernel { bounds: None }, queries, sink)
     }
 }
 
@@ -130,7 +157,86 @@ mod tests {
         let full = scorer.score(&fx.queries).unwrap();
         let streamed = scorer.score_sink(&fx.queries, SinkSpec::TopK(4)).unwrap();
         assert_eq!(streamed.topk(4), full.topk(4));
-        assert_eq!(streamed.bytes_read, full.bytes_read);
+        // with pruning on, skipped bytes account for the difference
+        assert_eq!(streamed.bytes_read + streamed.bytes_skipped, full.bytes_read);
         assert!(streamed.peak_sink_elems <= 3 * 4);
+    }
+
+    #[test]
+    fn exact_pruning_skips_unreachable_chunks_and_stays_exact() {
+        use crate::attribution::{QueryLayer, SinkSpec};
+        use crate::runtime::{ExtractBatch, LayerGrads};
+        use crate::store::{StoreMeta, StoreWriter};
+        use crate::util::prng::Rng;
+
+        // clustered store: the first summary chunk holds strong rows
+        // aligned with the query; every later chunk holds near-zero rows
+        // that provably cannot reach the top-k once the heap is full
+        let dir = std::env::temp_dir().join("lorif_attr_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("graddot_prune");
+        let (n, d, chunk) = (64usize, 16usize, 8usize);
+        let mut rng = Rng::new(31);
+        let mut g = Mat::zeros(n, d);
+        for t in 0..n {
+            let scale = if t < chunk { 10.0 } else { 0.01 };
+            for x in g.row_mut(t) {
+                *x = scale * (0.5 + 0.05 * rng.normal() as f32);
+            }
+        }
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(4, 4)],
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+        };
+        let mut w = StoreWriter::create(&base, meta).unwrap();
+        w.set_summary_chunk(chunk).unwrap();
+        w.append(&ExtractBatch {
+            losses: vec![0.0; n],
+            layers: vec![LayerGrads {
+                g: g.clone(),
+                u: Mat::zeros(n, 4),
+                v: Mat::zeros(n, 4),
+            }],
+            valid: n,
+        })
+        .unwrap();
+        w.finalize().unwrap();
+
+        let queries = crate::attribution::QueryGrads {
+            n_query: 2,
+            c: 1,
+            proj_dims: vec![(4, 4)],
+            layers: vec![QueryLayer {
+                g: Mat::from_vec(2, d, vec![1.0; 2 * d]),
+                u: Mat::zeros(2, 4),
+                v: Mat::zeros(2, 4),
+            }],
+        };
+
+        let mut scorer = GradDotScorer::new(ShardSet::open(&base).unwrap());
+        let full = scorer.score(&queries).unwrap();
+
+        scorer.prune = PruneMode::Exact;
+        let pruned = scorer.score_sink(&queries, SinkSpec::TopK(4)).unwrap();
+        assert_eq!(pruned.topk(4), full.topk(4), "exact pruning must not change top-k");
+        let stride = scorer.shards.meta.bytes_per_example() as u64;
+        // all 7 weak chunks are provably unreachable after chunk 0
+        assert_eq!(pruned.chunks_skipped, 7, "expected every weak chunk skipped");
+        assert_eq!(pruned.bytes_skipped, 7 * chunk as u64 * stride);
+        assert_eq!(pruned.bytes_read + pruned.bytes_skipped, full.bytes_read);
+
+        // prune off: same results, no skips
+        scorer.prune = PruneMode::Off;
+        let unpruned = scorer.score_sink(&queries, SinkSpec::TopK(4)).unwrap();
+        assert_eq!(unpruned.topk(4), full.topk(4));
+        assert_eq!(unpruned.bytes_skipped, 0);
+        assert_eq!(unpruned.chunks_skipped, 0);
+        assert_eq!(unpruned.bytes_read, full.bytes_read);
     }
 }

@@ -12,7 +12,8 @@ use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
 use crate::linalg::Mat;
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
+use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct LograScorer {
     pub shards: ShardSet,
@@ -21,19 +22,34 @@ pub struct LograScorer {
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
     pub score_threads: usize,
+    /// prefetch queue depth in chunks (`--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// chunk pruning against the summary sidecar (`--prune`)
+    pub prune: PruneMode,
 }
 
 impl LograScorer {
     pub fn new(shards: ShardSet, curv: DenseCurvature) -> LograScorer {
-        LograScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
+        LograScorer {
+            shards,
+            curv,
+            prefetch: true,
+            chunk_size: 512,
+            score_threads: 0,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            prune: PruneMode::Exact,
+        }
     }
 }
 
 /// The LoGRA `ChunkKernel`: preconditioned dot products per chunk.
+/// The preconditioned queries `K⁻¹ g_q` are exactly the effective
+/// vectors the pruning bound needs (score = ⟨g_t, K⁻¹ g_q⟩), so the
+/// kernel stores them once, inside the bound state.
 struct LograKernel<'a> {
     curv: &'a DenseCurvature,
-    /// per layer (Nq, D): K^{-1} g_q
-    pre: Vec<Mat>,
+    /// per layer (Nq, D) `K⁻¹ g_q` blocks + their pruning-bound norms
+    bounds: Option<QueryBounds>,
 }
 
 impl ChunkKernel for LograKernel<'_> {
@@ -46,9 +62,10 @@ impl ChunkKernel for LograKernel<'_> {
     }
 
     fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
-        self.pre = (0..queries.n_layers())
+        let pre: Vec<Mat> = (0..queries.n_layers())
             .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
             .collect();
+        self.bounds = Some(QueryBounds::new(pre));
         Ok(())
     }
 
@@ -59,7 +76,8 @@ impl ChunkKernel for LograKernel<'_> {
         out: &mut Mat,
         _scratch: &mut Scratch,
     ) -> anyhow::Result<()> {
-        for (l, pre_l) in self.pre.iter().enumerate() {
+        let pre = &self.bounds.as_ref().expect("precondition ran").blocks;
+        for (l, pre_l) in pre.iter().enumerate() {
             let g = match &chunk.layers[l] {
                 ChunkLayer::Dense { g } => g,
                 _ => anyhow::bail!("expected dense chunk"),
@@ -70,6 +88,10 @@ impl ChunkKernel for LograKernel<'_> {
             }
         }
         Ok(())
+    }
+
+    fn upper_bound(&self, s: &ChunkSummary, q: usize) -> Option<f32> {
+        self.bounds.as_ref().map(|b| b.upper_bound(s, q))
     }
 }
 
@@ -87,11 +109,13 @@ impl Scorer for LograScorer {
     }
 
     fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
-        let mut kernel = LograKernel { curv: &self.curv, pre: Vec::new() };
+        let mut kernel = LograKernel { curv: &self.curv, bounds: None };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
+            prefetch_depth: self.prefetch_depth,
+            prune: self.prune,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }

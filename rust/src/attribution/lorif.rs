@@ -18,7 +18,8 @@ use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::{reconstruct_row, TruncatedCurvature};
 use crate::linalg::Mat;
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
+use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct LorifScorer {
     pub shards: ShardSet,
@@ -30,6 +31,11 @@ pub struct LorifScorer {
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
     pub score_threads: usize,
+    /// prefetch queue depth in chunks (`--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// chunk pruning against the summary sidecar (`--prune`); only the
+    /// faithful (non-cached) projection path prunes — see the kernel
+    pub prune: PruneMode,
 }
 
 impl LorifScorer {
@@ -41,6 +47,8 @@ impl LorifScorer {
             prefetch: true,
             chunk_size: 512,
             score_threads: 0,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            prune: PruneMode::Exact,
         }
     }
 }
@@ -118,6 +126,14 @@ struct LorifKernel<'a> {
     c: usize,
     /// per layer (Nq, r): g'_q = V_r^T g~_q with Woodbury weights folded
     gqw: Vec<Mat>,
+    /// Pruning-bound state over the EFFECTIVE query vectors
+    /// `y_q = g~_q/λ − V_r ĝ'_q`: both Eq. (9) terms are linear in the
+    /// reconstructed train gradient, so score = ⟨g~_t, y_q⟩ and the
+    /// factored summaries (which bound exactly that reconstruction)
+    /// apply.  `None` in cached mode — the stage-2 projections are a
+    /// different train representation, so the bound would not be
+    /// provably sound there and the kernel opts out of pruning.
+    bounds: Option<QueryBounds>,
 }
 
 impl ChunkKernel for LorifKernel<'_> {
@@ -146,26 +162,40 @@ impl ChunkKernel for LorifKernel<'_> {
         // into the curvature subspace over-subtracts the dominant
         // directions and anti-correlates the scores (see the component
         // diagnosis in EXPERIMENTS.md §Debugging).
-        self.gqw = (0..queries.n_layers())
-            .map(|l| {
-                let (d1, d2) = self.layer_dims[l];
-                let svd = &self.curv.layers[l];
-                let ql = &queries.layers[l];
-                let mut rec = Mat::zeros(nq, d1 * d2);
-                for q in 0..nq {
-                    reconstruct_row(ql.u.row(q), ql.v.row(q), d1, d2, c, rec.row_mut(q));
+        let mut gqw = Vec::with_capacity(queries.n_layers());
+        let mut bound_blocks = Vec::with_capacity(queries.n_layers());
+        for l in 0..queries.n_layers() {
+            let (d1, d2) = self.layer_dims[l];
+            let svd = &self.curv.layers[l];
+            let ql = &queries.layers[l];
+            let mut rec = Mat::zeros(nq, d1 * d2);
+            for q in 0..nq {
+                reconstruct_row(ql.u.row(q), ql.v.row(q), d1, d2, c, rec.row_mut(q));
+            }
+            let mut proj = rec.matmul(&svd.v); // (Nq, r)
+            let w = &self.curv.weights[l];
+            for row in 0..proj.rows {
+                let r = proj.row_mut(row);
+                for (x, wi) in r.iter_mut().zip(w) {
+                    *x *= wi;
                 }
-                let mut proj = rec.matmul(&svd.v); // (Nq, r)
-                let w = &self.curv.weights[l];
-                for row in 0..proj.rows {
-                    let r = proj.row_mut(row);
-                    for (x, wi) in r.iter_mut().zip(w) {
-                        *x *= wi;
-                    }
+            }
+            if !self.cached {
+                // effective query vector for the pruning bound:
+                // score = ⟨g~_t, g~_q⟩/λ − ⟨V_rᵀ g~_t, ĝ'_q⟩
+                //       = ⟨g~_t, g~_q/λ − V_r ĝ'_q⟩
+                let mut y = rec;
+                y.scale(1.0 / self.curv.lambdas[l]);
+                let back = proj.matmul_nt(&svd.v); // (Nq, D)
+                for (a, b) in y.data.iter_mut().zip(&back.data) {
+                    *a -= b;
                 }
-                proj
-            })
-            .collect();
+                bound_blocks.push(y);
+            }
+            gqw.push(proj);
+        }
+        self.gqw = gqw;
+        self.bounds = (!self.cached).then(|| QueryBounds::new(bound_blocks));
         Ok(())
     }
 
@@ -209,6 +239,10 @@ impl ChunkKernel for LorifKernel<'_> {
         }
         Ok(())
     }
+
+    fn upper_bound(&self, s: &ChunkSummary, q: usize) -> Option<f32> {
+        self.bounds.as_ref().map(|b| b.upper_bound(s, q))
+    }
 }
 
 impl Scorer for LorifScorer {
@@ -231,11 +265,14 @@ impl Scorer for LorifScorer {
             layer_dims: Vec::new(),
             c: 0,
             gqw: Vec::new(),
+            bounds: None,
         };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
+            prefetch_depth: self.prefetch_depth,
+            prune: self.prune,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
@@ -396,6 +433,84 @@ mod tests {
                 assert!((fast.at(n, q) - du * dv).abs() < 1e-3);
             }
         }
+    }
+
+    #[test]
+    fn factored_pruning_skips_weak_chunks_exactly() {
+        use crate::runtime::{ExtractBatch, LayerGrads};
+        use crate::store::{StoreMeta, StoreWriter};
+        use crate::util::prng::Rng;
+
+        // factored store, rank-1: the first summary chunk holds strong
+        // factors aligned with the query, later chunks hold eps-scaled
+        // factors whose reconstructed Frobenius norm (bounded via the
+        // factor Grams, never materialized at write time) proves them
+        // unreachable
+        let dir = std::env::temp_dir().join("lorif_attr_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("lorif_prune");
+        let (n, d1, d2, chunk) = (48usize, 5usize, 6usize, 8usize);
+        let mut rng = Rng::new(53);
+        let mut u = Mat::zeros(n, d1);
+        let mut v = Mat::zeros(n, d2);
+        let mut g = Mat::zeros(n, d1 * d2);
+        for t in 0..n {
+            let scale = if t < chunk { 2.0 } else { 0.01 };
+            for x in u.row_mut(t) {
+                *x = scale * (1.0 + 0.05 * rng.normal() as f32);
+            }
+            for x in v.row_mut(t) {
+                *x = 1.0 + 0.05 * rng.normal() as f32;
+            }
+            crate::curvature::reconstruct_row(u.row(t), v.row(t), d1, d2, 1, g.row_mut(t));
+        }
+        let meta = StoreMeta {
+            kind: StoreKind::Factored,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(d1, d2)],
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+        };
+        let mut w = StoreWriter::create(&base, meta).unwrap();
+        w.set_summary_chunk(chunk).unwrap();
+        w.append(&ExtractBatch {
+            losses: vec![0.0; n],
+            layers: vec![LayerGrads { g, u: u.clone(), v: v.clone() }],
+            valid: n,
+        })
+        .unwrap();
+        w.finalize().unwrap();
+
+        // queries = the first two strong examples (positive self-influence)
+        let queries = crate::attribution::QueryGrads {
+            n_query: 2,
+            c: 1,
+            proj_dims: vec![(d1, d2)],
+            layers: vec![crate::attribution::QueryLayer {
+                g: Mat::zeros(2, d1 * d2),
+                u: u.select_rows(&[0, 1]),
+                v: v.select_rows(&[0, 1]),
+            }],
+        };
+
+        let set = ShardSet::open(&base).unwrap();
+        let curv = TruncatedCurvature::build(&set, 6, 6, 3, 0.1, 0).unwrap();
+        let mut scorer = LorifScorer::new(ShardSet::open(&base).unwrap(), curv);
+        let full = scorer.score(&queries).unwrap();
+        let pruned = scorer.score_sink(&queries, SinkSpec::TopK(3)).unwrap();
+        assert_eq!(pruned.topk(3), full.topk(3), "exact pruning changed LoRIF top-k");
+        assert!(pruned.chunks_skipped >= 4, "weak chunks should be skipped");
+        assert_eq!(pruned.bytes_read + pruned.bytes_skipped, full.bytes_read);
+
+        // cached projections are a different train representation: the
+        // kernel opts out of pruning and reads everything
+        scorer.cached_projections = true;
+        let cached = scorer.score_sink(&queries, SinkSpec::TopK(3)).unwrap();
+        assert_eq!(cached.chunks_skipped, 0);
+        assert_eq!(cached.bytes_read, full.bytes_read);
     }
 
     #[test]

@@ -137,6 +137,13 @@ pub struct ScoreReport {
     /// phases: "load" (store I/O + decode), "compute", "precondition"
     pub timer: PhaseTimer,
     pub bytes_read: u64,
+    /// Store bytes the chunk pruner proved could not reach the top-k
+    /// and seeked past (`crate::sketch`); 0 for full-matrix passes and
+    /// on stores without a summary sidecar.  `bytes_read +
+    /// bytes_skipped` always equals the full-scan byte count.
+    pub bytes_skipped: u64,
+    /// Summary-grid chunks skipped without a disk read.
+    pub chunks_skipped: usize,
     /// Sum over shards of the peak score elements each shard's sink
     /// held: `nq * n_train` for the full matrix, `<= nq * k * shards`
     /// for the streaming top-k path (asserted in `tests/prop.rs`).
@@ -153,6 +160,8 @@ impl ScoreReport {
             output: ScoreOutput::Full(scores),
             timer,
             bytes_read,
+            bytes_skipped: 0,
+            chunks_skipped: 0,
             peak_sink_elems: peak,
         }
     }
@@ -370,7 +379,9 @@ pub(crate) mod testutil {
             (u, v)
         };
 
-        // write the store (v1 monolithic, or v2 sharded for shards >= 2)
+        // write the store (v1 monolithic, or v2 sharded for shards >= 2;
+        // both carry the default summary sidecar, so scorer tests also
+        // exercise the v3 open path)
         let meta = StoreMeta {
             kind,
             tier: "small".into(),
@@ -379,6 +390,7 @@ pub(crate) mod testutil {
             layers: layer_dims.to_vec(),
             n_examples: 0,
             shards: None,
+            summary_chunk: None,
         };
         let layers: Vec<LayerGrads> = layer_dims
             .iter()

@@ -18,7 +18,8 @@ use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
 use crate::linalg::Mat;
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta};
+use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
+use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct TrackStarScorer {
     pub shards: ShardSet,
@@ -27,11 +28,23 @@ pub struct TrackStarScorer {
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
     pub score_threads: usize,
+    /// prefetch queue depth in chunks (`--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// chunk pruning against the summary sidecar (`--prune`)
+    pub prune: PruneMode,
 }
 
 impl TrackStarScorer {
     pub fn new(shards: ShardSet, curv: DenseCurvature) -> TrackStarScorer {
-        TrackStarScorer { shards, curv, prefetch: true, chunk_size: 512, score_threads: 0 }
+        TrackStarScorer {
+            shards,
+            curv,
+            prefetch: true,
+            chunk_size: 512,
+            score_threads: 0,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            prune: PruneMode::Exact,
+        }
     }
 }
 
@@ -39,8 +52,11 @@ impl TrackStarScorer {
 /// divided by the train-side gradient norm within the chunk.
 struct TrackStarKernel<'a> {
     curv: &'a DenseCurvature,
-    /// per layer (Nq, D): K^{-1} g_q, unit-normalized per query
-    pre: Vec<Mat>,
+    /// per layer (Nq, D) `K⁻¹ g_q` blocks, unit-normalized per query,
+    /// stored once inside the bound state.  The bound over them covers
+    /// the NUMERATOR of the TrackStar score; `upper_bound` divides by
+    /// the chunk's record-norm window.
+    bounds: Option<QueryBounds>,
 }
 
 impl ChunkKernel for TrackStarKernel<'_> {
@@ -53,7 +69,7 @@ impl ChunkKernel for TrackStarKernel<'_> {
     }
 
     fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
-        self.pre = (0..queries.n_layers())
+        let pre: Vec<Mat> = (0..queries.n_layers())
             .map(|l| {
                 let mut p = self.curv.chols[l].solve_rows(&queries.layers[l].g);
                 for q in 0..p.rows {
@@ -66,6 +82,7 @@ impl ChunkKernel for TrackStarKernel<'_> {
                 p
             })
             .collect();
+        self.bounds = Some(QueryBounds::new(pre));
         Ok(())
     }
 
@@ -76,10 +93,11 @@ impl ChunkKernel for TrackStarKernel<'_> {
         out: &mut Mat,
         _scratch: &mut Scratch,
     ) -> anyhow::Result<()> {
+        let pre = &self.bounds.as_ref().expect("precondition ran").blocks;
         // per-example squared norms across all layers, for the
         // train-side unit normalization
         let mut norms2 = vec![0.0f32; chunk.count];
-        for (l, pre_l) in self.pre.iter().enumerate() {
+        for (l, pre_l) in pre.iter().enumerate() {
             let g = match &chunk.layers[l] {
                 ChunkLayer::Dense { g } => g,
                 _ => anyhow::bail!("expected dense chunk"),
@@ -100,6 +118,24 @@ impl ChunkKernel for TrackStarKernel<'_> {
         }
         Ok(())
     }
+
+    /// score = ⟨g_t, pre_q⟩ / ‖g_t‖.  Bound the numerator `U` with the
+    /// linear machinery, then divide by the end of the chunk's record
+    /// norm window that maximizes the quotient: the (deflated) min norm
+    /// when `U > 0`, the (inflated) max norm when `U <= 0` — both sides
+    /// carry their safety margins from the summarizer, so the result
+    /// stays an upper bound in f32.
+    fn upper_bound(&self, s: &ChunkSummary, q: usize) -> Option<f32> {
+        let u = self.bounds.as_ref()?.upper_bound(s, q);
+        if u.is_nan() {
+            return Some(u);
+        }
+        Some(if u > 0.0 {
+            u / s.min_norm.max(1e-12)
+        } else {
+            u / s.max_norm.max(1e-12)
+        })
+    }
 }
 
 impl Scorer for TrackStarScorer {
@@ -116,11 +152,13 @@ impl Scorer for TrackStarScorer {
     }
 
     fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
-        let mut kernel = TrackStarKernel { curv: &self.curv, pre: Vec::new() };
+        let mut kernel = TrackStarKernel { curv: &self.curv, bounds: None };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
+            prefetch_depth: self.prefetch_depth,
+            prune: self.prune,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
@@ -176,5 +214,77 @@ mod tests {
         let streamed = scorer.score_sink(&fx.queries, SinkSpec::TopK(6)).unwrap();
         assert_eq!(streamed.topk(6), full.topk(6));
         assert!(streamed.peak_sink_elems <= 2 * 6);
+    }
+
+    #[test]
+    fn pruning_respects_the_unit_normalization() {
+        // TrackStar is scale-invariant on the train side, so magnitude
+        // clustering alone cannot justify a skip — DIRECTION must.  The
+        // first chunk is aligned with the query, later chunks are
+        // anti-aligned; their normalized scores are near -1 and the
+        // bound (numerator / record-norm window) proves it.
+        use crate::attribution::QueryLayer;
+        use crate::runtime::{ExtractBatch, LayerGrads};
+        use crate::store::{StoreMeta, StoreWriter};
+        use crate::util::prng::Rng;
+
+        let dir = std::env::temp_dir().join("lorif_attr_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("trackstar_prune");
+        let (n, d, chunk) = (40usize, 16usize, 8usize);
+        let mut rng = Rng::new(47);
+        let mut g = Mat::zeros(n, d);
+        for t in 0..n {
+            let sign = if t < chunk { 1.0 } else { -1.0 };
+            // magnitude varies per CHUNK (scale-invariance: it must not
+            // matter) while direction stays coherent within a chunk
+            let scale = 0.5 + (t / chunk) as f32;
+            for x in g.row_mut(t) {
+                *x = sign * scale * (1.0 + 0.02 * rng.normal() as f32);
+            }
+        }
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(4, 4)],
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+        };
+        let mut w = StoreWriter::create(&base, meta).unwrap();
+        w.set_summary_chunk(chunk).unwrap();
+        w.append(&ExtractBatch {
+            losses: vec![0.0; n],
+            layers: vec![LayerGrads {
+                g: g.clone(),
+                u: Mat::zeros(n, 4),
+                v: Mat::zeros(n, 4),
+            }],
+            valid: n,
+        })
+        .unwrap();
+        w.finalize().unwrap();
+
+        let queries = crate::attribution::QueryGrads {
+            n_query: 1,
+            c: 1,
+            proj_dims: vec![(4, 4)],
+            layers: vec![QueryLayer {
+                g: Mat::from_vec(1, d, vec![1.0; d]),
+                u: Mat::zeros(1, 4),
+                v: Mat::zeros(1, 4),
+            }],
+        };
+
+        let set = ShardSet::open(&base).unwrap();
+        let curv = DenseCurvature::build(&set, 0.1).unwrap();
+        let mut scorer = TrackStarScorer::new(ShardSet::open(&base).unwrap(), curv);
+        let full = scorer.score(&queries).unwrap();
+        let pruned = scorer.score_sink(&queries, SinkSpec::TopK(3)).unwrap();
+        assert_eq!(pruned.topk(3), full.topk(3));
+        assert!(pruned.chunks_skipped >= 1, "anti-aligned chunks should be skipped");
+        assert_eq!(pruned.bytes_read + pruned.bytes_skipped, full.bytes_read);
     }
 }

@@ -103,8 +103,13 @@ impl Args {
         take!(rsvd_power_iters, "rsvd-power-iters", get_usize);
         take!(shards, "shards", get_usize);
         take!(score_threads, "score-threads", get_usize);
+        take!(prefetch_depth, "prefetch-depth", get_usize);
+        take!(summary_chunk, "summary-chunk", get_usize);
         if let Some(s) = self.get("sink") {
             cfg.score_sink = crate::attribution::SinkMode::parse(s)?;
+        }
+        if let Some(s) = self.get("prune") {
+            cfg.prune = crate::sketch::PruneMode::parse(s)?;
         }
         if let Some(d) = self.get("artifacts-dir") {
             cfg.artifacts_dir = d.into();
@@ -153,7 +158,8 @@ mod tests {
     fn applies_to_config() {
         let a = parse(&[
             "x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512", "--shards",
-            "4", "--score-threads", "2", "--sink", "topk",
+            "4", "--score-threads", "2", "--sink", "topk", "--prune", "slack=0.1",
+            "--prefetch-depth", "3", "--summary-chunk", "64",
         ]);
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
@@ -164,6 +170,20 @@ mod tests {
         assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.score_threads, 2);
         assert_eq!(cfg.score_sink, crate::attribution::SinkMode::TopK);
+        assert_eq!(cfg.prune, crate::sketch::PruneMode::Slack(0.1));
+        assert_eq!(cfg.prefetch_depth, 3);
+        assert_eq!(cfg.summary_chunk, 64);
+    }
+
+    #[test]
+    fn rejects_unknown_prune_mode() {
+        let a = parse(&["x", "--prune", "fuzzy"]);
+        let mut cfg = crate::config::Config::default();
+        assert!(a.apply_to_config(&mut cfg).is_err());
+        let a = parse(&["x", "--prune", "off"]);
+        let mut cfg = crate::config::Config::default();
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.prune, crate::sketch::PruneMode::Off);
     }
 
     #[test]

@@ -9,6 +9,8 @@ use std::path::{Path, PathBuf};
 
 use crate::attribution::SinkMode;
 use crate::model::spec::Tier;
+use crate::sketch::{PruneMode, DEFAULT_SUMMARY_CHUNK};
+use crate::store::DEFAULT_PREFETCH_DEPTH;
 use crate::util::json::Value;
 
 #[derive(Clone, Debug)]
@@ -42,6 +44,14 @@ pub struct Config {
     /// score sink for the query engine: `full` materializes the
     /// (n_query, n_train) matrix, `topk` streams into O(Nq·k) heaps
     pub score_sink: SinkMode,
+    /// chunk pruning for top-k passes (`--prune on|off|slack=x`);
+    /// exact mode skips only provably unreachable chunks
+    pub prune: PruneMode,
+    /// store-reader prefetch queue depth in chunks (`--prefetch-depth`)
+    pub prefetch_depth: usize,
+    /// stage-1 summary-sidecar grid in records (0 disables the sidecar,
+    /// producing a pre-v3 store with no pruning)
+    pub summary_chunk: usize,
 
     pub artifacts_dir: PathBuf,
     pub work_dir: PathBuf,
@@ -66,6 +76,9 @@ impl Default for Config {
             shards: 1,
             score_threads: 0,
             score_sink: SinkMode::Full,
+            prune: PruneMode::Exact,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            summary_chunk: DEFAULT_SUMMARY_CHUNK,
             artifacts_dir: PathBuf::from("artifacts"),
             work_dir: PathBuf::from("work"),
         }
@@ -107,8 +120,13 @@ impl Config {
         num!(train_lr, "train_lr", f32);
         num!(shards, "shards", usize);
         num!(score_threads, "score_threads", usize);
+        num!(prefetch_depth, "prefetch_depth", usize);
+        num!(summary_chunk, "summary_chunk", usize);
         if let Some(s) = v.get("score_sink").and_then(Value::as_str) {
             self.score_sink = SinkMode::parse(s)?;
+        }
+        if let Some(s) = v.get("prune").and_then(Value::as_str) {
+            self.prune = PruneMode::parse(s)?;
         }
         if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
             self.artifacts_dir = PathBuf::from(s);
@@ -145,6 +163,7 @@ impl Config {
         anyhow::ensure!(self.r >= 1, "r must be >= 1");
         anyhow::ensure!(self.n_train >= 8 && self.n_query >= 1, "dataset too small");
         anyhow::ensure!(self.shards >= 1, "shards must be >= 1");
+        anyhow::ensure!(self.prefetch_depth >= 1, "prefetch_depth must be >= 1");
         Ok(())
     }
 
@@ -176,6 +195,9 @@ impl Config {
             ("shards", self.shards.into()),
             ("score_threads", self.score_threads.into()),
             ("score_sink", self.score_sink.name().into()),
+            ("prune", self.prune.label().into()),
+            ("prefetch_depth", self.prefetch_depth.into()),
+            ("summary_chunk", self.summary_chunk.into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
             ("work_dir", self.work_dir.display().to_string().into()),
         ])
@@ -200,6 +222,9 @@ mod tests {
         cfg.shards = 6;
         cfg.score_threads = 3;
         cfg.score_sink = SinkMode::TopK;
+        cfg.prune = PruneMode::Slack(0.25);
+        cfg.prefetch_depth = 4;
+        cfg.summary_chunk = 128;
         let v = cfg.to_json();
         let mut back = Config::default();
         back.apply_json(&v).unwrap();
@@ -209,6 +234,19 @@ mod tests {
         assert_eq!(back.shards, 6);
         assert_eq!(back.score_threads, 3);
         assert_eq!(back.score_sink, SinkMode::TopK);
+        assert_eq!(back.prune, PruneMode::Slack(0.25));
+        assert_eq!(back.prefetch_depth, 4);
+        assert_eq!(back.summary_chunk, 128);
+    }
+
+    #[test]
+    fn rejects_bad_prune_and_prefetch() {
+        let mut cfg = Config::default();
+        let v = crate::util::json::obj([("prune", "sometimes".into())]);
+        assert!(cfg.apply_json(&v).is_err());
+        let mut cfg = Config::default();
+        cfg.prefetch_depth = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

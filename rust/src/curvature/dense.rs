@@ -131,6 +131,7 @@ mod tests {
             layers: layers.to_vec(),
             n_examples: 0,
             shards: None,
+            summary_chunk: None,
         };
         let mut rng = Rng::new(7);
         let gs: Vec<Mat> =

@@ -32,11 +32,16 @@ impl Stage1Writer {
         meta: StoreMeta,
         shards: usize,
         n_expected: usize,
+        summary_chunk: usize,
     ) -> anyhow::Result<Stage1Writer> {
         if shards <= 1 {
-            Ok(Stage1Writer::Mono(StoreWriter::create(base, meta)?))
+            let mut w = StoreWriter::create(base, meta)?;
+            w.set_summary_chunk(summary_chunk)?;
+            Ok(Stage1Writer::Mono(w))
         } else {
-            Ok(Stage1Writer::Sharded(ShardedWriter::create(base, meta, shards, n_expected)?))
+            let mut w = ShardedWriter::create(base, meta, shards, n_expected)?;
+            w.set_summary_chunk(summary_chunk)?;
+            Ok(Stage1Writer::Sharded(w))
         }
     }
 
@@ -190,12 +195,13 @@ impl Pipeline {
     }
 
     /// Does an existing store at `base` already have the layout the
-    /// current config asks for?  A missing or unreadable manifest, or a
-    /// v1/v2 (or shard-count) mismatch, means stage 1 must rewrite it —
-    /// otherwise `--shards` would be silently ignored by the cache.
+    /// current config asks for?  A missing or unreadable manifest, a
+    /// v1/v2 (or shard-count) mismatch, or a summary-sidecar grid that
+    /// disagrees with `--summary-chunk` means stage 1 must rewrite it —
+    /// otherwise those flags would be silently ignored by the cache.
     fn store_layout_current(&self, base: &PathBuf) -> bool {
         let Ok(meta) = StoreMeta::load(base) else { return false };
-        let current = match &meta.shards {
+        let shards_current = match &meta.shards {
             None => self.cfg.shards <= 1,
             Some(counts) => {
                 self.cfg.shards > 1
@@ -203,14 +209,18 @@ impl Pipeline {
                         == ShardedWriter::expected_shards(meta.n_examples, self.cfg.shards)
             }
         };
-        if !current {
+        let want_summaries =
+            (self.cfg.summary_chunk > 0).then_some(self.cfg.summary_chunk);
+        let summaries_current = meta.summary_chunk == want_summaries;
+        if !shards_current || !summaries_current {
             log::info!(
-                "stage1: store {} has a different shard layout than --shards {}; rebuilding",
+                "stage1: store {} does not match --shards {} / --summary-chunk {}; rebuilding",
                 base.display(),
-                self.cfg.shards
+                self.cfg.shards,
+                self.cfg.summary_chunk
             );
         }
-        current
+        shards_current && summaries_current
     }
 
     /// Stage 1: extract per-example gradients for the whole training set
@@ -246,9 +256,11 @@ impl Pipeline {
                         layers: layers.clone(),
                         n_examples: 0,
                         shards: None,
+                        summary_chunk: None,
                     },
                     self.cfg.shards,
                     train.len(),
+                    self.cfg.summary_chunk,
                 )?)
             } else {
                 None
@@ -264,9 +276,11 @@ impl Pipeline {
                         layers: layers.clone(),
                         n_examples: 0,
                         shards: None,
+                        summary_chunk: None,
                     },
                     self.cfg.shards,
                     train.len(),
+                    self.cfg.summary_chunk,
                 )?)
             } else {
                 None

@@ -17,5 +17,6 @@ pub mod linalg;
 pub mod model;
 pub mod query;
 pub mod runtime;
+pub mod sketch;
 pub mod store;
 pub mod util;

@@ -18,6 +18,7 @@
 //! Common flags: --tier small|medium|large --f N --c N --r N
 //!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
 //!   --shards S --score-threads T --sink full|topk
+//!   --prune on|off|slack=x --prefetch-depth N --summary-chunk N
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 
 use lorif::cli::Args;
@@ -116,10 +117,14 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
     );
     println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
     println!(
-        "store layout: {} shard(s), score threads {}, sink {}",
+        "store layout: {} shard(s), score threads {}, sink {}, prune {} \
+         (summary grid {}), prefetch depth {}",
         cfg.shards,
         if cfg.score_threads == 0 { "auto".to_string() } else { cfg.score_threads.to_string() },
-        cfg.score_sink.name()
+        cfg.score_sink.name(),
+        cfg.prune.label(),
+        if cfg.summary_chunk == 0 { "off".to_string() } else { cfg.summary_chunk.to_string() },
+        cfg.prefetch_depth
     );
     let dense = spec.dense_floats_per_example(cfg.f) * 2;
     let fact = spec.factored_floats_per_example(cfg.f, cfg.c) * 2;
@@ -250,14 +255,16 @@ fn query(cfg: Config, args: &Args) -> anyhow::Result<()> {
     )?;
     let res = score_with_method(&p, method, &params, &train, &queries, k, p.cfg.score_sink)?;
     println!(
-        "{}: {} queries x {} train | load {:.3}s compute {:.3}s pre {:.3}s | {:.1} MB read",
+        "{}: {} queries x {} train | load {:.3}s compute {:.3}s pre {:.3}s | \
+         {:.1} MB read, {:.1} MB pruned",
         method.name(),
         queries.len(),
         train.len(),
         res.latency.load_s,
         res.latency.compute_s,
         res.latency.precondition_s,
-        res.latency.bytes_read as f64 / 1e6
+        res.latency.bytes_read as f64 / 1e6,
+        res.latency.bytes_skipped as f64 / 1e6
     );
     let show = args.get_usize("show")?.unwrap_or(3).min(queries.len());
     let tm = p.topic_model();
@@ -411,7 +418,8 @@ fn print_help() {
          common flags: --tier small|medium|large --f N --c N --r N\n\
                        --n-train N --n-query N --seed S --method NAME\n\
                        --shards S --score-threads T --sink full|topk\n\
-                       --work-dir DIR --artifacts-dir DIR\n\
+                       --prune on|off|slack=x --prefetch-depth N\n\
+                       --summary-chunk N --work-dir DIR --artifacts-dir DIR\n\
          pure-CPU builds support `info`; the rest need --features xla\n\
          see rust/README.md for a walkthrough."
     );

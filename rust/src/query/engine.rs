@@ -16,6 +16,9 @@ pub struct LatencyBreakdown {
     pub precondition_s: f64,
     pub total_s: f64,
     pub bytes_read: u64,
+    /// store bytes the chunk pruner seeked past (`crate::sketch`);
+    /// `bytes_read + bytes_skipped` = the full-scan byte count
+    pub bytes_skipped: u64,
 }
 
 impl LatencyBreakdown {
@@ -30,6 +33,7 @@ impl LatencyBreakdown {
             precondition_s: pre,
             total_s: load + compute + pre,
             bytes_read: r.bytes_read,
+            bytes_skipped: r.bytes_skipped,
         }
     }
 
@@ -43,6 +47,7 @@ impl LatencyBreakdown {
         self.precondition_s += other.precondition_s;
         self.total_s += other.total_s;
         self.bytes_read += other.bytes_read;
+        self.bytes_skipped += other.bytes_skipped;
     }
 
     pub fn io_fraction(&self) -> f64 {
@@ -157,6 +162,7 @@ mod tests {
             precondition_s: pre,
             total_s: load + compute + pre,
             bytes_read: bytes,
+            bytes_skipped: 0,
         }
     }
 

@@ -127,6 +127,20 @@ impl TopK {
         self.k
     }
 
+    /// The score a NEW candidate (at a HIGHER index than everything
+    /// already pushed) must exceed to enter: the current k-th best once
+    /// the heap is full, `None` while it still has room.  This is the
+    /// pruning threshold of the streaming top-k sink — sound because
+    /// ties break toward the lower index, so an equal-scoring later
+    /// example cannot displace an entry.  A `k = 0` heap accepts
+    /// nothing and its threshold is +inf.
+    pub fn threshold(&self) -> Option<f32> {
+        if self.k == 0 {
+            return Some(f32::INFINITY);
+        }
+        (self.entries.len() == self.k).then(|| self.entries[self.k - 1].0)
+    }
+
     /// The accumulated `(score, index)` entries, best first.
     pub fn entries(&self) -> &[(f32, usize)] {
         &self.entries

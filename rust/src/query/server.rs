@@ -9,7 +9,9 @@
 //! Protocol (newline-delimited JSON):
 //!   -> {"tokens": [t0, t1, ...]}            (seq_len token ids)
 //!   <- {"topk": [...], "scores": [...], "latency_s": x, "batch": b,
-//!       "bytes_read": n}
+//!       "bytes_read": n, "bytes_skipped": m}
+//! (`bytes_skipped` counts store bytes the chunk pruner proved
+//! irrelevant to this batch's top-k and never read; see crate::sketch)
 //! Send `{"cmd": "shutdown"}` to stop the server (used by tests).
 //!
 //! Serving always runs the scorer through the streaming top-k sink
@@ -146,6 +148,7 @@ fn respond_batch<S: Scorer>(
             ("latency_s", latency.into()),
             ("batch", batch.len().into()),
             ("bytes_read", (report.bytes_read as usize).into()),
+            ("bytes_skipped", (report.bytes_skipped as usize).into()),
         ]);
         let _ = reply.send(resp.to_string());
     }

@@ -1,0 +1,36 @@
+//! Chunk-summary pruning index: skip store I/O that cannot reach the
+//! top-k.
+//!
+//! LoRIF's query bottleneck is streaming the projected-gradient store
+//! (paper §1, bottleneck *i*).  After the sharded reader (PR 1) and the
+//! streaming top-k sinks (PR 2), every top-k query still read 100% of
+//! the store bytes — the sink bounded memory, not reads.  This module
+//! adds the missing half: a sidecar **summary index** written at
+//! stage-1 time (`<base>.summaries`, manifest v3) holding per-chunk,
+//! per-layer bounds — max row norm, centroid, and centroid-residual
+//! radius — from which a Cauchy–Schwarz upper bound on ANY score in a
+//! chunk can be computed against the preconditioned query block.  Once
+//! the per-query top-k heaps establish a threshold, chunks whose bound
+//! cannot beat it are skipped without touching the disk.
+//!
+//! * [`summary`] — the sidecar data model, its binary format, the
+//!   writer-side [`summary::SummaryBuilder`], and the per-chunk bound
+//!   statistics ([`summary::summarize_chunk`]).
+//! * [`prune`] — query-side bound evaluation ([`prune::QueryBounds`]),
+//!   the [`prune::ChunkPruner`] handed to the streaming executor, and
+//!   the `--prune on|off|slack=x` mode knob.
+//!
+//! Exactness: in `on` (exact) mode, pruned top-k results are provably
+//! identical to a full scan — see the module docs in [`prune`] for the
+//! argument (soundness of the bound + ascending-index tie-breaking
+//! within a shard).  `slack=x` deflates the bound by a relative factor,
+//! trading recall for latency.
+
+pub mod prune;
+pub mod summary;
+
+pub use prune::{ChunkPruner, PruneMode, QueryBounds};
+pub use summary::{
+    summarize_chunk, ChunkSummary, LayerSummary, StoreSummaries, SummaryBuilder,
+    DEFAULT_SUMMARY_CHUNK,
+};

@@ -1,0 +1,338 @@
+//! Query-side bound evaluation and the pruning mode knob.
+//!
+//! Every store kernel's score is (a per-layer sum of) an inner product
+//! between an effective dense train vector `t_n` and an effective query
+//! vector `y_q` fixed at precondition time:
+//!
+//!   * GradDot:   `t_n` = stored row,          `y_q = g_q`
+//!   * LoGRA:     `t_n` = stored row,          `y_q = K⁻¹ g_q`
+//!   * TrackStar: `t_n` = stored row / ‖·‖,    `y_q = K⁻¹ g_q / ‖·‖`
+//!   * LoRIF:     `t_n = U_n V_nᵀ` (implicit), `y_q = g̃_q/λ − V_r ŵ_q`
+//!
+//! For a chunk with per-layer summary (max row norm `M`, centroid `c`,
+//! radius `R`), two sound upper bounds on `⟨t_n, y⟩` hold for every
+//! example in the chunk:
+//!
+//!   Cauchy–Schwarz:   ⟨t_n, y⟩ ≤ M · ‖y‖
+//!   centroid + C–S:   ⟨t_n, y⟩ = ⟨c, y⟩ + ⟨t_n − c, y⟩ ≤ ⟨c, y⟩ + R · ‖y‖
+//!
+//! [`QueryBounds::upper_bound`] takes the tighter of the two per layer
+//! and sums over layers, padding with a small float-slack term (scaled
+//! by the C–S bound and the layer dimension) that dominates the f32
+//! summation-order differences between this bound and the kernels'
+//! GEMMs — which is what makes exact-mode pruning safe in floating
+//! point, not just in real arithmetic.
+//!
+//! **Exactness argument** (`--prune on`): a chunk is skipped only when,
+//! for every query, the (slack-free) bound does not exceed the sink's
+//! current k-th best score.  Within a shard, records stream in
+//! ascending global index, so every heap entry has a lower index than
+//! anything in an unread chunk; under the repo's total order
+//! (descending score, ties toward the LOWER index) an equal-scoring
+//! later example loses the tie and cannot displace an entry.  Hence no
+//! skipped example could have entered the shard heap, shard heaps are
+//! bit-identical to a full scan's, and the cross-shard merge
+//! (`query::parallel::merge_topk`) is unchanged.  NaN scores rank above
+//! +inf under `total_cmp`; chunks containing any non-finite record are
+//! marked non-finite by the summarizer and are never skipped.
+
+use crate::linalg::Mat;
+
+use super::summary::{ChunkSummary, StoreSummaries};
+
+/// Config/CLI-level pruning mode (`--prune on|off|slack=x`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PruneMode {
+    /// Never skip (every chunk is read, as before this subsystem).
+    Off,
+    /// Exact: skip only provably unreachable chunks — results are
+    /// identical to a full scan.
+    Exact,
+    /// Approximate: deflate the bound by `slack * |bound|` before the
+    /// threshold comparison, trading recall for fewer reads (0 < x < 1).
+    Slack(f32),
+}
+
+impl PruneMode {
+    pub fn parse(s: &str) -> anyhow::Result<PruneMode> {
+        match s {
+            "off" => Ok(PruneMode::Off),
+            "on" | "exact" => Ok(PruneMode::Exact),
+            _ => {
+                let Some(x) = s.strip_prefix("slack=") else {
+                    anyhow::bail!("unknown prune mode '{s}' (on|off|slack=x)");
+                };
+                let x: f32 = x
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--prune slack: {e}"))?;
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&x),
+                    "prune slack must be in [0, 1), got {x}"
+                );
+                Ok(if x == 0.0 { PruneMode::Exact } else { PruneMode::Slack(x) })
+            }
+        }
+    }
+
+    /// The `--prune` spelling of this mode (config round-trip).
+    pub fn label(&self) -> String {
+        match self {
+            PruneMode::Off => "off".to_string(),
+            PruneMode::Exact => "on".to_string(),
+            PruneMode::Slack(x) => format!("slack={x}"),
+        }
+    }
+
+    /// `None` when pruning is disabled, otherwise the slack factor
+    /// (0 for exact mode).
+    pub fn slack(&self) -> Option<f32> {
+        match self {
+            PruneMode::Off => None,
+            PruneMode::Exact => Some(0.0),
+            PruneMode::Slack(x) => Some(*x),
+        }
+    }
+}
+
+/// Per-query bound state over the effective query blocks: row norms are
+/// precomputed once, centroid dots are evaluated per (chunk, query).
+pub struct QueryBounds {
+    /// per layer: `(n_query, D_l)` effective query vectors
+    pub blocks: Vec<Mat>,
+    /// per layer, per query: L2 norm of the block row
+    norms: Vec<Vec<f32>>,
+}
+
+impl QueryBounds {
+    pub fn new(blocks: Vec<Mat>) -> QueryBounds {
+        let norms = blocks
+            .iter()
+            .map(|m| {
+                (0..m.rows)
+                    .map(|q| {
+                        m.row(q)
+                            .iter()
+                            .map(|&x| x as f64 * x as f64)
+                            .sum::<f64>()
+                            .sqrt() as f32
+                    })
+                    .collect()
+            })
+            .collect();
+        QueryBounds { blocks, norms }
+    }
+
+    /// Sound upper bound on `Σ_l ⟨t_n^l, y_q^l⟩` over every example `n`
+    /// in the summarized chunk.  Returns +inf for non-finite chunks and
+    /// NaN (never skippable: `NaN <= t` is false) when the query side
+    /// is non-finite.
+    pub fn upper_bound(&self, s: &ChunkSummary, q: usize) -> f32 {
+        if !s.finite {
+            return f32::INFINITY;
+        }
+        let mut total = 0.0f32;
+        for (l, ls) in s.layers.iter().enumerate() {
+            let y = self.blocks[l].row(q);
+            debug_assert_eq!(y.len(), ls.centroid.len());
+            let ny = self.norms[l][q];
+            let cs = ls.max_row_norm * ny;
+            // centroid dot in f64: the slack term then only has to
+            // cover the kernels' f32 GEMM error, not this bound's own
+            let mut cdot = 0.0f64;
+            for (a, b) in ls.centroid.iter().zip(y) {
+                cdot += *a as f64 * *b as f64;
+            }
+            let cb = cdot as f32 + ls.radius * ny;
+            if cs.is_nan() || cb.is_nan() {
+                return f32::NAN;
+            }
+            // float slack: relative to the C–S bound (an upper bound on
+            // any per-layer magnitude) and growing with the dimension,
+            // dominating worst-case f32 dot-product rounding.  The base
+            // constant is sized for kernels whose two score terms nearly
+            // cancel (LoRIF's Woodbury subtraction computes large terms
+            // whose difference is ‖y‖-sized): even at r = 128 the pad
+            // exceeds the f32 error of the cancelled sum by >10x.
+            let slack = cs * (3e-3 + 1e-6 * y.len() as f32);
+            total += cs.min(cb) + slack;
+        }
+        total
+    }
+}
+
+/// The executor-side pruning context: the store's summary grid plus the
+/// configured slack.  Built by `attribution::exec::execute` for top-k
+/// passes over stores that carry a sidecar.
+pub struct ChunkPruner<'a> {
+    pub summaries: &'a StoreSummaries,
+    /// relative bound deflation (0 = exact)
+    pub slack: f32,
+}
+
+impl ChunkPruner<'_> {
+    /// The read-granularity the pruned pass must use (the summary grid).
+    pub fn chunk_size(&self) -> usize {
+        self.summaries.chunk_size
+    }
+
+    /// Summary for the chunk at `(start, count)`, or `None` (never
+    /// skip) when the grid disagrees with the requested span.
+    pub fn summary_for(&self, start: usize, count: usize) -> Option<&ChunkSummary> {
+        self.summaries.find(start).filter(|s| s.count == count)
+    }
+
+    /// Deflate a bound by the configured slack before the threshold
+    /// comparison (identity in exact mode; NaN and, under slack, +inf
+    /// deflate to NaN — both compare false against any threshold, so
+    /// non-finite chunks are read either way).
+    pub fn deflate(&self, u: f32) -> f32 {
+        if self.slack == 0.0 {
+            u
+        } else {
+            u - self.slack * u.abs()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::summary::summarize_chunk;
+    use crate::store::{Chunk, ChunkLayer, StoreKind, StoreMeta};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn prune_mode_parses_and_labels() {
+        assert_eq!(PruneMode::parse("off").unwrap(), PruneMode::Off);
+        assert_eq!(PruneMode::parse("on").unwrap(), PruneMode::Exact);
+        assert_eq!(PruneMode::parse("slack=0.25").unwrap(), PruneMode::Slack(0.25));
+        assert_eq!(PruneMode::parse("slack=0").unwrap(), PruneMode::Exact);
+        assert!(PruneMode::parse("slack=1.5").is_err());
+        assert!(PruneMode::parse("slack=-0.1").is_err());
+        assert!(PruneMode::parse("maybe").is_err());
+        for m in [PruneMode::Off, PruneMode::Exact, PruneMode::Slack(0.5)] {
+            assert_eq!(PruneMode::parse(&m.label()).unwrap(), m);
+        }
+        assert_eq!(PruneMode::Off.slack(), None);
+        assert_eq!(PruneMode::Exact.slack(), Some(0.0));
+    }
+
+    #[test]
+    fn upper_bound_dominates_every_true_score() {
+        // random chunks x random queries: the bound is never below the
+        // exact inner product of any (example, query) pair
+        let mut rng = Rng::new(17);
+        for trial in 0..20 {
+            let (b, nq, d) = (1 + rng.below(12), 1 + rng.below(4), 2 + rng.below(20));
+            let g = crate::linalg::Mat::random_normal(b, d, 1.0, &mut rng);
+            let yq = crate::linalg::Mat::random_normal(nq, d, 1.0, &mut rng);
+            let meta = StoreMeta {
+                kind: StoreKind::Dense,
+                tier: "small".into(),
+                f: 4,
+                c: 1,
+                layers: vec![(1, d)],
+                n_examples: b,
+                shards: None,
+                summary_chunk: None,
+            };
+            let chunk = Chunk {
+                start: 0,
+                count: b,
+                layers: vec![ChunkLayer::Dense { g: g.clone() }],
+                io_time: std::time::Duration::ZERO,
+            };
+            let s = summarize_chunk(&meta, &chunk).unwrap();
+            let bounds = QueryBounds::new(vec![yq.clone()]);
+            for q in 0..nq {
+                let u = bounds.upper_bound(&s, q);
+                for n in 0..b {
+                    let score: f32 =
+                        g.row(n).iter().zip(yq.row(q)).map(|(a, b)| a * b).sum();
+                    assert!(score <= u, "trial {trial}: score {score} > bound {u}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_chunk_gets_a_tight_centroid_bound() {
+        // rows tightly packed around a centroid far from the query
+        // direction: the centroid bound must be far below Cauchy–Schwarz
+        let mut rng = Rng::new(23);
+        let d = 16;
+        let mut g = crate::linalg::Mat::zeros(8, d);
+        for n in 0..8 {
+            g.row_mut(n)[0] = -5.0 + 0.01 * rng.normal() as f32;
+        }
+        let mut yq = crate::linalg::Mat::zeros(1, d);
+        yq.row_mut(0)[0] = 1.0;
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(1, d)],
+            n_examples: 8,
+            shards: None,
+            summary_chunk: None,
+        };
+        let chunk = Chunk {
+            start: 0,
+            count: 8,
+            layers: vec![ChunkLayer::Dense { g }],
+            io_time: std::time::Duration::ZERO,
+        };
+        let s = summarize_chunk(&meta, &chunk).unwrap();
+        let bounds = QueryBounds::new(vec![yq]);
+        let u = bounds.upper_bound(&s, 0);
+        // true scores are ~-5; C–S alone would say +5
+        assert!(u < -4.0, "bound {u} not using the centroid");
+    }
+
+    #[test]
+    fn non_finite_chunks_are_never_skippable() {
+        let mut rng = Rng::new(29);
+        let mut g = crate::linalg::Mat::random_normal(4, 6, 1.0, &mut rng);
+        *g.at_mut(1, 2) = f32::INFINITY;
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(2, 3)],
+            n_examples: 4,
+            shards: None,
+            summary_chunk: None,
+        };
+        let chunk = Chunk {
+            start: 0,
+            count: 4,
+            layers: vec![ChunkLayer::Dense { g }],
+            io_time: std::time::Duration::ZERO,
+        };
+        let s = summarize_chunk(&meta, &chunk).unwrap();
+        let bounds =
+            QueryBounds::new(vec![crate::linalg::Mat::random_normal(1, 6, 1.0, &mut rng)]);
+        assert_eq!(bounds.upper_bound(&s, 0), f32::INFINITY);
+        let pr = ChunkPruner { summaries: &StoreSummaries { chunk_size: 4, chunks: vec![] }, slack: 0.0 };
+        // +inf deflates to +inf; NaN comparisons are never "skippable"
+        assert_eq!(pr.deflate(f32::INFINITY), f32::INFINITY);
+        assert!(!(pr.deflate(f32::NAN) <= 1.0e30));
+    }
+
+    #[test]
+    fn slack_deflates_toward_zero() {
+        let pr = ChunkPruner {
+            summaries: &StoreSummaries { chunk_size: 4, chunks: vec![] },
+            slack: 0.25,
+        };
+        assert!((pr.deflate(4.0) - 3.0).abs() < 1e-6);
+        assert!((pr.deflate(-4.0) - (-5.0)).abs() < 1e-6);
+        let exact = ChunkPruner {
+            summaries: &StoreSummaries { chunk_size: 4, chunks: vec![] },
+            slack: 0.0,
+        };
+        assert_eq!(exact.deflate(4.0), 4.0);
+    }
+}

@@ -1,0 +1,677 @@
+//! Per-chunk summary statistics and the `<base>.summaries` sidecar.
+//!
+//! A summary chunk covers a fixed-stride run of consecutive records
+//! (the grid restarts at every shard boundary, so a chunk never
+//! straddles two data files).  Per chunk we keep, for each layer:
+//!
+//!   * `max_row_norm` — max over examples of the L2 norm of the layer's
+//!     effective dense train vector (the stored row for Dense records;
+//!     `‖U Vᵀ‖_F` for Factored records, computed from the (c × c)
+//!     factor Grams without materializing the product);
+//!   * `centroid` — the mean effective dense vector (`d1·d2` floats);
+//!   * `radius` — max over examples of `‖t_n − centroid‖`.
+//!
+//! plus whole-record `min_norm`/`max_norm` (all layers concatenated),
+//! which normalizing scorers (TrackStar) need to bound their
+//! denominator.  All statistics are computed from the **bf16-decoded**
+//! record bytes — exactly the values the query path scores — and are
+//! accumulated in f64, then inflated by a small safety factor on the
+//! way to f32, so a stored bound is never below the true one.
+//!
+//! The sidecar is versioned through the store manifest: a manifest with
+//! `"version": 3` carries a `summary_chunk` field and requires the
+//! `.summaries` file; v1/v2 manifests have no sidecar and scorers fall
+//! back to a full scan.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::store::reader::decode_chunk;
+use crate::store::{Chunk, ChunkLayer, StoreMeta};
+
+/// Default records per summary chunk (matches the scorers' default
+/// streaming chunk size, so one skip saves one read).
+pub const DEFAULT_SUMMARY_CHUNK: usize = 512;
+
+/// Multiplicative safety inflation applied to stored norms and radii:
+/// absorbs the f64→f32 rounding of the statistics themselves.
+const UP: f64 = 1.0 + 1e-5;
+/// Inflation for the whole-record norm window (TrackStar divides by
+/// these, so they get a wider margin: the kernel accumulates its norms
+/// in f32, whose error grows with the record dimension).
+const NORM_UP: f64 = 1.0 + 1e-3;
+
+/// Bound statistics for one layer of one summary chunk.
+#[derive(Clone, Debug)]
+pub struct LayerSummary {
+    /// max over examples of the effective dense row norm
+    pub max_row_norm: f32,
+    /// mean effective dense vector (`d1·d2` floats)
+    pub centroid: Vec<f32>,
+    /// max over examples of the distance to the centroid
+    pub radius: f32,
+}
+
+/// Bound statistics for one summary chunk of consecutive records.
+#[derive(Clone, Debug)]
+pub struct ChunkSummary {
+    /// global index of the chunk's first example
+    pub start: usize,
+    pub count: usize,
+    /// min/max whole-record norm (all layers concatenated), deflated /
+    /// inflated so dividing by them is sound in f32
+    pub min_norm: f32,
+    pub max_norm: f32,
+    /// false when any statistic is non-finite (NaN/Inf records): bound
+    /// evaluation then returns +inf and the chunk is always read
+    pub finite: bool,
+    pub layers: Vec<LayerSummary>,
+}
+
+impl ChunkSummary {
+    fn compute_finite(&self) -> bool {
+        self.min_norm.is_finite()
+            && self.max_norm.is_finite()
+            && self.layers.iter().all(|l| {
+                l.max_row_norm.is_finite()
+                    && l.radius.is_finite()
+                    && l.centroid.iter().all(|x| x.is_finite())
+            })
+    }
+}
+
+/// Summarize one decoded chunk.  `meta` supplies the layer dims and
+/// kind; the chunk must have been decoded from the same store.
+pub fn summarize_chunk(meta: &StoreMeta, chunk: &Chunk) -> anyhow::Result<ChunkSummary> {
+    let b = chunk.count;
+    anyhow::ensure!(b > 0, "cannot summarize an empty chunk");
+    anyhow::ensure!(chunk.layers.len() == meta.layers.len(), "layer count mismatch");
+    let mut rec_norm2 = vec![0.0f64; b];
+    let mut layers = Vec::with_capacity(meta.layers.len());
+    for (l, &(d1, d2)) in meta.layers.iter().enumerate() {
+        let d = d1 * d2;
+        let (norms2, centroid, dots) = match &chunk.layers[l] {
+            ChunkLayer::Dense { g } => dense_stats(g, b, d),
+            ChunkLayer::Factored { u, v } => factored_stats(u, v, b, d1, d2, meta.c),
+        };
+        let cent_norm2: f64 = centroid.iter().map(|x| x * x).sum();
+        let mut max_norm = 0.0f64;
+        let mut max_rad = 0.0f64;
+        let mut non_finite = false;
+        for n in 0..b {
+            rec_norm2[n] += norms2[n];
+            if !norms2[n].is_finite() || !dots[n].is_finite() {
+                non_finite = true;
+                continue;
+            }
+            max_norm = max_norm.max(norms2[n].sqrt());
+            // ‖t_n − c‖² = ‖t_n‖² − 2⟨t_n, c⟩ + ‖c‖² (clamped: f64
+            // cancellation can dip fractionally below zero)
+            let r2 = (norms2[n] - 2.0 * dots[n] + cent_norm2).max(0.0);
+            max_rad = max_rad.max(r2.sqrt());
+        }
+        // a non-finite row poisons the whole layer: report +inf bounds
+        // so the chunk is never pruned (NaN scores sort ABOVE +inf
+        // under total_cmp, so no finite bound would be sound)
+        let (mrn, rad) = if non_finite || !cent_norm2.is_finite() {
+            (f32::INFINITY, f32::INFINITY)
+        } else {
+            (
+                (max_norm * UP) as f32,
+                (max_rad * UP + max_norm * 1e-6) as f32,
+            )
+        };
+        layers.push(LayerSummary {
+            max_row_norm: mrn,
+            radius: rad,
+            centroid: centroid.iter().map(|&x| x as f32).collect(),
+        });
+    }
+    let mut min_norm = f64::INFINITY;
+    let mut max_norm = 0.0f64;
+    for &n2 in &rec_norm2 {
+        let n = n2.sqrt();
+        min_norm = min_norm.min(n);
+        max_norm = max_norm.max(n);
+    }
+    let mut s = ChunkSummary {
+        start: chunk.start,
+        count: b,
+        min_norm: ((min_norm / NORM_UP).max(0.0)) as f32,
+        max_norm: (max_norm * NORM_UP) as f32,
+        finite: true,
+        layers,
+    };
+    s.finite = s.compute_finite();
+    Ok(s)
+}
+
+/// Per-row squared norms, centroid, and per-row centroid dots for a
+/// dense layer block.
+fn dense_stats(g: &crate::linalg::Mat, b: usize, d: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut cent = vec![0.0f64; d];
+    let mut norms2 = vec![0.0f64; b];
+    for n in 0..b {
+        let mut s = 0.0f64;
+        for (j, &x) in g.row(n).iter().enumerate() {
+            let x = x as f64;
+            cent[j] += x;
+            s += x * x;
+        }
+        norms2[n] = s;
+    }
+    for c in cent.iter_mut() {
+        *c /= b as f64;
+    }
+    let mut dots = vec![0.0f64; b];
+    for n in 0..b {
+        let mut s = 0.0f64;
+        for (j, &x) in g.row(n).iter().enumerate() {
+            s += x as f64 * cent[j];
+        }
+        dots[n] = s;
+    }
+    (norms2, cent, dots)
+}
+
+/// Same statistics for a factored layer block, never materializing a
+/// per-row `d1 × d2` product:
+///   * `‖U Vᵀ‖_F² = ⟨UᵀU, VᵀV⟩_F` — two (c × c) Grams per row;
+///   * centroid — rank-1 outer products accumulated into one buffer;
+///   * `⟨U_n V_nᵀ, C⟩ = Σ_k u_kᵀ C v_k` — O(c·d1·d2) per row.
+fn factored_stats(
+    u: &crate::linalg::Mat,
+    v: &crate::linalg::Mat,
+    b: usize,
+    d1: usize,
+    d2: usize,
+    c: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let d = d1 * d2;
+    let mut norms2 = vec![0.0f64; b];
+    for n in 0..b {
+        let ur = u.row(n);
+        let vr = v.row(n);
+        let mut s = 0.0f64;
+        for k in 0..c {
+            for m in 0..c {
+                let mut uu = 0.0f64;
+                for a in 0..d1 {
+                    uu += ur[a * c + k] as f64 * ur[a * c + m] as f64;
+                }
+                let mut vv = 0.0f64;
+                for bb in 0..d2 {
+                    vv += vr[bb * c + k] as f64 * vr[bb * c + m] as f64;
+                }
+                s += uu * vv;
+            }
+        }
+        // the Frobenius identity is nonnegative in exact arithmetic;
+        // clamp f64 round-off so sqrt never turns it into NaN.  NOT
+        // `f64::max`, which would also swallow a NaN from genuinely
+        // non-finite records — those must stay NaN so the summarizer
+        // marks the chunk unprunable.
+        norms2[n] = if s < 0.0 { 0.0 } else { s };
+    }
+    let mut cent = vec![0.0f64; d];
+    for n in 0..b {
+        let ur = u.row(n);
+        let vr = v.row(n);
+        for k in 0..c {
+            for a in 0..d1 {
+                let ua = ur[a * c + k] as f64;
+                if ua != 0.0 {
+                    let dst = &mut cent[a * d2..(a + 1) * d2];
+                    for (bb, slot) in dst.iter_mut().enumerate() {
+                        *slot += ua * vr[bb * c + k] as f64;
+                    }
+                }
+            }
+        }
+    }
+    for ci in cent.iter_mut() {
+        *ci /= b as f64;
+    }
+    let mut dots = vec![0.0f64; b];
+    for n in 0..b {
+        let ur = u.row(n);
+        let vr = v.row(n);
+        let mut s = 0.0f64;
+        for k in 0..c {
+            for a in 0..d1 {
+                let ua = ur[a * c + k] as f64;
+                if ua != 0.0 {
+                    let crow = &cent[a * d2..(a + 1) * d2];
+                    let mut t = 0.0f64;
+                    for (bb, &cv) in crow.iter().enumerate() {
+                        t += cv * vr[bb * c + k] as f64;
+                    }
+                    s += ua * t;
+                }
+            }
+        }
+        dots[n] = s;
+    }
+    (norms2, cent, dots)
+}
+
+/// The whole sidecar: one summary per grid chunk, in stream order.
+#[derive(Clone, Debug)]
+pub struct StoreSummaries {
+    /// grid stride in records (the last chunk of each shard may be
+    /// shorter)
+    pub chunk_size: usize,
+    pub chunks: Vec<ChunkSummary>,
+}
+
+const MAGIC: &[u8; 8] = b"LORIFSM1";
+
+impl StoreSummaries {
+    /// Summary of the chunk starting at global example `start`.
+    pub fn find(&self, start: usize) -> Option<&ChunkSummary> {
+        self.chunks
+            .binary_search_by(|c| c.start.cmp(&start))
+            .ok()
+            .map(|i| &self.chunks[i])
+    }
+
+    /// Validate against a store manifest: per-layer shapes match and
+    /// the chunk grid exactly tiles every shard (restarting at each
+    /// shard start), so a skip decision always covers whole records of
+    /// one data file.
+    pub fn validate(&self, meta: &StoreMeta) -> anyhow::Result<()> {
+        anyhow::ensure!(self.chunk_size >= 1, "summary chunk size must be >= 1");
+        for (i, ch) in self.chunks.iter().enumerate() {
+            anyhow::ensure!(
+                ch.layers.len() == meta.layers.len(),
+                "summary chunk {i} has {} layers, store has {}",
+                ch.layers.len(),
+                meta.layers.len()
+            );
+            for (l, (ls, &(d1, d2))) in ch.layers.iter().zip(&meta.layers).enumerate() {
+                anyhow::ensure!(
+                    ls.centroid.len() == d1 * d2,
+                    "summary chunk {i} layer {l}: centroid len {} != {}",
+                    ls.centroid.len(),
+                    d1 * d2
+                );
+            }
+        }
+        let shard_counts = meta.shards.clone().unwrap_or_else(|| vec![meta.n_examples]);
+        let mut it = self.chunks.iter();
+        let mut shard_start = 0usize;
+        for (si, &sc) in shard_counts.iter().enumerate() {
+            let mut pos = 0usize;
+            while pos < sc {
+                let want = self.chunk_size.min(sc - pos);
+                let ch = it.next().ok_or_else(|| {
+                    anyhow::anyhow!("summaries end early inside shard {si}")
+                })?;
+                anyhow::ensure!(
+                    ch.start == shard_start + pos && ch.count == want,
+                    "summary grid mismatch in shard {si}: chunk ({}, {}) where \
+                     ({}, {want}) was expected",
+                    ch.start,
+                    ch.count,
+                    shard_start + pos
+                );
+                pos += want;
+            }
+            shard_start += sc;
+        }
+        anyhow::ensure!(it.next().is_none(), "trailing summary chunks beyond the store");
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.chunk_size as u32).to_le_bytes())?;
+        let n_layers = self.chunks.first().map(|c| c.layers.len()).unwrap_or(0);
+        f.write_all(&(n_layers as u32).to_le_bytes())?;
+        f.write_all(&(self.chunks.len() as u32).to_le_bytes())?;
+        for ch in &self.chunks {
+            f.write_all(&(ch.start as u64).to_le_bytes())?;
+            f.write_all(&(ch.count as u32).to_le_bytes())?;
+            f.write_all(&ch.min_norm.to_le_bytes())?;
+            f.write_all(&ch.max_norm.to_le_bytes())?;
+            for ls in &ch.layers {
+                f.write_all(&ls.max_row_norm.to_le_bytes())?;
+                f.write_all(&ls.radius.to_le_bytes())?;
+                f.write_all(&(ls.centroid.len() as u32).to_le_bytes())?;
+                let mut buf = Vec::with_capacity(ls.centroid.len() * 4);
+                for &x in &ls.centroid {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+                f.write_all(&buf)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<StoreSummaries> {
+        // every length field is corruption-controlled: bound it by the
+        // actual file size BEFORE allocating, so a corrupt sidecar is a
+        // clean error instead of a multi-GB allocation / OOM abort
+        let file_len = std::fs::metadata(path)?.len() as usize;
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad summary sidecar magic");
+        let chunk_size = read_u32(&mut f)? as usize;
+        let n_layers = read_u32(&mut f)? as usize;
+        let n_chunks = read_u32(&mut f)? as usize;
+        // per chunk >= 20 B header, per layer >= 12 B header
+        anyhow::ensure!(
+            n_chunks
+                .checked_mul(20 + 12 * n_layers)
+                .map_or(false, |need| need <= file_len),
+            "summary sidecar claims {n_chunks} chunks x {n_layers} layers \
+             but holds only {file_len} B"
+        );
+        let mut chunks = Vec::with_capacity(n_chunks);
+        for _ in 0..n_chunks {
+            let mut b8 = [0u8; 8];
+            f.read_exact(&mut b8)?;
+            let start = u64::from_le_bytes(b8) as usize;
+            let count = read_u32(&mut f)? as usize;
+            let min_norm = read_f32(&mut f)?;
+            let max_norm = read_f32(&mut f)?;
+            let mut layers = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                let max_row_norm = read_f32(&mut f)?;
+                let radius = read_f32(&mut f)?;
+                let len = read_u32(&mut f)? as usize;
+                anyhow::ensure!(
+                    len.checked_mul(4).map_or(false, |b| b <= file_len),
+                    "summary sidecar centroid length {len} exceeds the file size"
+                );
+                let mut buf = vec![0u8; len * 4];
+                f.read_exact(&mut buf)?;
+                let centroid = buf
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                layers.push(LayerSummary { max_row_norm, radius, centroid });
+            }
+            let mut ch =
+                ChunkSummary { start, count, min_norm, max_norm, finite: true, layers };
+            ch.finite = ch.compute_finite();
+            chunks.push(ch);
+        }
+        Ok(StoreSummaries { chunk_size, chunks })
+    }
+}
+
+/// Writer-side builder: buffers the raw (already bf16-encoded) record
+/// bytes of the open grid chunk and summarizes on every boundary.  The
+/// sharded writer calls [`SummaryBuilder::flush`] when it rolls to a
+/// new shard file, which is what restarts the grid per shard.
+pub struct SummaryBuilder {
+    meta: StoreMeta,
+    chunk_size: usize,
+    buf: Vec<u8>,
+    buffered: usize,
+    /// global index of the first buffered record
+    start: usize,
+    chunks: Vec<ChunkSummary>,
+}
+
+impl SummaryBuilder {
+    pub fn new(meta: &StoreMeta, chunk_size: usize) -> SummaryBuilder {
+        SummaryBuilder {
+            meta: meta.clone(),
+            chunk_size: chunk_size.max(1),
+            buf: Vec::new(),
+            buffered: 0,
+            start: 0,
+            chunks: Vec::new(),
+        }
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Account one encoded record (the writer's scratch bytes).
+    pub fn add_record(&mut self, raw: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            raw.len() == self.meta.bytes_per_example(),
+            "record is {} B, store stride is {} B",
+            raw.len(),
+            self.meta.bytes_per_example()
+        );
+        self.buf.extend_from_slice(raw);
+        self.buffered += 1;
+        if self.buffered == self.chunk_size {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Close the open grid chunk (no-op when empty).  Called at shard
+    /// rolls and by [`SummaryBuilder::finish`].
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if self.buffered == 0 {
+            return Ok(());
+        }
+        let chunk = decode_chunk(&self.meta, self.start, &self.buf)?;
+        self.chunks.push(summarize_chunk(&self.meta, &chunk)?);
+        self.start += self.buffered;
+        self.buffered = 0;
+        self.buf.clear();
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> anyhow::Result<StoreSummaries> {
+        self.flush()?;
+        Ok(StoreSummaries { chunk_size: self.chunk_size, chunks: self.chunks })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32(f: &mut impl Read) -> anyhow::Result<f32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::store::StoreKind;
+    use crate::util::prng::Rng;
+
+    fn dense_meta(layers: Vec<(usize, usize)>) -> StoreMeta {
+        StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers,
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+        }
+    }
+
+    fn dense_chunk(g: Vec<Mat>, start: usize) -> Chunk {
+        let count = g[0].rows;
+        Chunk {
+            start,
+            count,
+            layers: g.into_iter().map(|g| ChunkLayer::Dense { g }).collect(),
+            io_time: std::time::Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn dense_summary_bounds_every_row() {
+        let mut rng = Rng::new(3);
+        let g = Mat::random_normal(9, 12, 1.0, &mut rng);
+        let meta = dense_meta(vec![(3, 4)]);
+        let s = summarize_chunk(&meta, &dense_chunk(vec![g.clone()], 5)).unwrap();
+        assert_eq!(s.start, 5);
+        assert_eq!(s.count, 9);
+        assert!(s.finite);
+        let ls = &s.layers[0];
+        for n in 0..9 {
+            let row = g.row(n);
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(norm <= ls.max_row_norm, "row {n}: {norm} > {}", ls.max_row_norm);
+            let dist = row
+                .iter()
+                .zip(&ls.centroid)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            assert!(dist <= ls.radius, "row {n}: {dist} > {}", ls.radius);
+            assert!(norm >= s.min_norm && norm <= s.max_norm);
+        }
+    }
+
+    #[test]
+    fn factored_norms_match_materialized_product() {
+        use crate::curvature::reconstruct_row;
+        let (d1, d2, c, b) = (5, 4, 2, 6);
+        let mut rng = Rng::new(11);
+        let u = Mat::random_normal(b, d1 * c, 1.0, &mut rng);
+        let v = Mat::random_normal(b, d2 * c, 1.0, &mut rng);
+        let meta = StoreMeta { c, kind: StoreKind::Factored, ..dense_meta(vec![(d1, d2)]) };
+        let chunk = Chunk {
+            start: 0,
+            count: b,
+            layers: vec![ChunkLayer::Factored { u: u.clone(), v: v.clone() }],
+            io_time: std::time::Duration::ZERO,
+        };
+        let s = summarize_chunk(&meta, &chunk).unwrap();
+        // reference: materialize every product
+        let mut recs = Mat::zeros(b, d1 * d2);
+        for n in 0..b {
+            reconstruct_row(u.row(n), v.row(n), d1, d2, c, recs.row_mut(n));
+        }
+        let want_max = (0..b)
+            .map(|n| recs.row(n).iter().map(|x| x * x).sum::<f32>().sqrt())
+            .fold(0.0f32, f32::max);
+        assert!((s.layers[0].max_row_norm - want_max).abs() < 1e-3 * want_max.max(1.0));
+        // centroid equals the mean reconstruction; radius covers rows
+        for n in 0..b {
+            let dist = recs
+                .row(n)
+                .iter()
+                .zip(&s.layers[0].centroid)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            assert!(dist <= s.layers[0].radius, "{dist} > {}", s.layers[0].radius);
+        }
+    }
+
+    #[test]
+    fn nan_rows_poison_the_chunk() {
+        let mut rng = Rng::new(5);
+        let mut g = Mat::random_normal(4, 6, 1.0, &mut rng);
+        *g.at_mut(2, 3) = f32::NAN;
+        let meta = dense_meta(vec![(2, 3)]);
+        let s = summarize_chunk(&meta, &dense_chunk(vec![g], 0)).unwrap();
+        assert!(!s.finite);
+        assert_eq!(s.layers[0].max_row_norm, f32::INFINITY);
+    }
+
+    #[test]
+    fn sidecar_roundtrip_and_validation() {
+        let mut rng = Rng::new(7);
+        let meta = StoreMeta { n_examples: 10, ..dense_meta(vec![(2, 3), (2, 2)]) };
+        let mk = |start: usize, count: usize, rng: &mut Rng| {
+            let g1 = Mat::random_normal(count, 6, 1.0, rng);
+            let g2 = Mat::random_normal(count, 4, 1.0, rng);
+            summarize_chunk(&meta, &dense_chunk(vec![g1, g2], start)).unwrap()
+        };
+        let sums = StoreSummaries {
+            chunk_size: 4,
+            chunks: vec![mk(0, 4, &mut rng), mk(4, 4, &mut rng), mk(8, 2, &mut rng)],
+        };
+        sums.validate(&meta).unwrap();
+        let dir = std::env::temp_dir().join("lorif_sketch_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.summaries");
+        sums.save(&path).unwrap();
+        let back = StoreSummaries::load(&path).unwrap();
+        assert_eq!(back.chunk_size, 4);
+        assert_eq!(back.chunks.len(), 3);
+        assert_eq!(back.chunks[1].start, 4);
+        assert_eq!(back.chunks[2].count, 2);
+        for (a, b) in sums.chunks.iter().zip(&back.chunks) {
+            assert_eq!(a.min_norm, b.min_norm);
+            assert_eq!(a.layers[0].centroid, b.layers[0].centroid);
+            assert_eq!(a.layers[1].radius, b.layers[1].radius);
+        }
+        back.validate(&meta).unwrap();
+        assert!(back.find(4).is_some());
+        assert!(back.find(5).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validation_rejects_grid_mismatch() {
+        let mut rng = Rng::new(9);
+        let meta = StoreMeta { n_examples: 8, ..dense_meta(vec![(2, 2)]) };
+        let mk = |start: usize, count: usize, rng: &mut Rng| {
+            let g = Mat::random_normal(count, 4, 1.0, rng);
+            summarize_chunk(&meta, &dense_chunk(vec![g], start)).unwrap()
+        };
+        // wrong stride: chunks of 3 against a declared grid of 4
+        let sums = StoreSummaries {
+            chunk_size: 4,
+            chunks: vec![mk(0, 3, &mut rng), mk(3, 5, &mut rng)],
+        };
+        assert!(sums.validate(&meta).is_err());
+        // missing tail
+        let sums = StoreSummaries { chunk_size: 4, chunks: vec![mk(0, 4, &mut rng)] };
+        assert!(sums.validate(&meta).is_err());
+        // sharded grid must restart at the shard boundary
+        let meta2 = StoreMeta { shards: Some(vec![5, 3]), ..meta.clone() };
+        let good = StoreSummaries {
+            chunk_size: 4,
+            chunks: vec![mk(0, 4, &mut rng), mk(4, 1, &mut rng), mk(5, 3, &mut rng)],
+        };
+        good.validate(&meta2).unwrap();
+        let bad = StoreSummaries {
+            chunk_size: 4,
+            chunks: vec![mk(0, 4, &mut rng), mk(4, 4, &mut rng)],
+        };
+        assert!(bad.validate(&meta2).is_err());
+    }
+
+    #[test]
+    fn builder_flushes_on_grid_and_shard_boundaries() {
+        use crate::util::bf16;
+        let meta = dense_meta(vec![(1, 3)]);
+        let mut b = SummaryBuilder::new(&meta, 2);
+        let mut push = |b: &mut SummaryBuilder, vals: [f32; 3]| {
+            let mut raw = Vec::new();
+            bf16::encode_slice(&vals, &mut raw);
+            b.add_record(&raw).unwrap();
+        };
+        push(&mut b, [1.0, 0.0, 0.0]);
+        push(&mut b, [0.0, 1.0, 0.0]);
+        push(&mut b, [0.0, 0.0, 1.0]);
+        b.flush().unwrap(); // simulated shard roll after a short chunk
+        push(&mut b, [2.0, 0.0, 0.0]);
+        let sums = b.finish().unwrap();
+        assert_eq!(sums.chunks.len(), 3);
+        assert_eq!(
+            sums.chunks.iter().map(|c| (c.start, c.count)).collect::<Vec<_>>(),
+            vec![(0, 2), (2, 1), (3, 1)]
+        );
+        // the singleton chunks have zero radius (row == centroid)
+        assert!(sums.chunks[1].layers[0].radius < 1e-5);
+        assert!((sums.chunks[2].layers[0].max_row_norm - 2.0).abs() < 1e-3);
+    }
+}

@@ -14,6 +14,14 @@
 //! opens both layouts.  Sharding exists so the query hot path can score
 //! shards on parallel workers (see `query::parallel`).
 //!
+//! A v3 store additionally carries a chunk-summary sidecar for query
+//! pruning (`crate::sketch`):
+//!   `<name>.summaries` — per-chunk bound statistics, grid stride
+//!                        recorded as `"summary_chunk"` in the manifest
+//! v3 is orthogonal to sharding (a v3 manifest may or may not have a
+//! `shards` key); v1/v2 stores without the sidecar are still read
+//! everywhere and simply fall back to full scans.
+//!
 //! Two kinds (paper Fig 1):
 //!   * `Dense`    — per layer, the full projected gradient `d1*d2` (LoGRA,
 //!                  TrackStar, GradDot baselines): O(D) per example.
@@ -62,6 +70,10 @@ pub struct StoreMeta {
     /// `None` = v1 single-file layout; `Some(counts)` = v2 layout with
     /// one `<name>.shard{i}.grads` file of `counts[i]` examples each.
     pub shards: Option<Vec<usize>>,
+    /// `Some(stride)` = a `<name>.summaries` pruning sidecar exists,
+    /// built on a grid of `stride` records (restarting per shard).
+    /// `None` = no sidecar; every query falls back to a full scan.
+    pub summary_chunk: Option<usize>,
 }
 
 impl StoreMeta {
@@ -82,7 +94,7 @@ impl StoreMeta {
     }
 
     /// Byte offset of layer `l` within a record, plus its float length.
-    pub fn layer_span(&self, l: usize) -> (usize, usize) {
+    pub fn layer_span(&self, l: usize) -> anyhow::Result<(usize, usize)> {
         let mut off = 0;
         for (i, &(d1, d2)) in self.layers.iter().enumerate() {
             let len = match self.kind {
@@ -90,11 +102,11 @@ impl StoreMeta {
                 StoreKind::Factored => self.c * (d1 + d2),
             };
             if i == l {
-                return (off * 2, len);
+                return Ok((off * 2, len));
             }
             off += len;
         }
-        panic!("layer index {l} out of range");
+        anyhow::bail!("layer index {l} out of range (store has {} layers)", self.layers.len())
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -118,12 +130,24 @@ impl StoreMeta {
             ),
             ("n_examples", self.n_examples.into()),
         ];
+        let version: usize = if self.summary_chunk.is_some() {
+            3
+        } else if self.shards.is_some() {
+            2
+        } else {
+            1
+        };
+        if version > 1 {
+            fields.push(("version", version.into()));
+        }
         if let Some(counts) = &self.shards {
-            fields.push(("version", 2usize.into()));
             fields.push((
                 "shards",
                 Value::Arr(counts.iter().map(|&n| n.into()).collect()),
             ));
+        }
+        if let Some(stride) = self.summary_chunk {
+            fields.push(("summary_chunk", stride.into()));
         }
         obj(fields)
     }
@@ -131,8 +155,8 @@ impl StoreMeta {
     pub fn from_json(v: &Value) -> anyhow::Result<StoreMeta> {
         if let Some(version) = v.get("version").and_then(Value::as_usize) {
             anyhow::ensure!(
-                version <= 2,
-                "unsupported store version {version} (this build reads v1 and v2)"
+                version <= 3,
+                "unsupported store version {version} (this build reads v1-v3)"
             );
         }
         let layers = v
@@ -172,6 +196,10 @@ impl StoreMeta {
                 "shard counts sum to {total}, expected n_examples = {n_examples}"
             );
         }
+        let summary_chunk = match v.get("summary_chunk").and_then(Value::as_usize) {
+            Some(0) => anyhow::bail!("summary_chunk must be >= 1"),
+            other => other,
+        };
         Ok(StoreMeta {
             kind: StoreKind::parse(v.req_str("kind")?)?,
             tier: v.req_str("tier")?.to_string(),
@@ -180,6 +208,7 @@ impl StoreMeta {
             layers,
             n_examples,
             shards,
+            summary_chunk,
         })
     }
 
@@ -194,6 +223,11 @@ impl StoreMeta {
     /// Data file of shard `i` in the v2 layout.
     pub fn shard_data_path(base: &Path, i: usize) -> PathBuf {
         base.with_extension(format!("shard{i}.grads"))
+    }
+
+    /// Chunk-summary pruning sidecar (v3 stores, `crate::sketch`).
+    pub fn summaries_path(base: &Path) -> PathBuf {
+        base.with_extension("summaries")
     }
 
     pub fn save(&self, base: &Path) -> anyhow::Result<()> {
@@ -220,6 +254,7 @@ mod tests {
             layers: vec![(16, 48), (16, 16)],
             n_examples: 100,
             shards: None,
+            summary_chunk: None,
         }
     }
 
@@ -235,11 +270,18 @@ mod tests {
     #[test]
     fn layer_spans_tile_record() {
         let m = meta(StoreKind::Factored);
-        let (o0, l0) = m.layer_span(0);
-        let (o1, l1) = m.layer_span(1);
+        let (o0, l0) = m.layer_span(0).unwrap();
+        let (o1, l1) = m.layer_span(1).unwrap();
         assert_eq!(o0, 0);
         assert_eq!(o1, l0 * 2);
         assert_eq!((l0 + l1) * 2, m.bytes_per_example());
+    }
+
+    #[test]
+    fn layer_span_out_of_range_is_an_error_not_a_panic() {
+        let m = meta(StoreKind::Dense);
+        let err = m.layer_span(2).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
     }
 
     #[test]
@@ -274,10 +316,40 @@ mod tests {
         let m = meta(StoreKind::Dense);
         let mut doc = m.to_json();
         if let Value::Obj(fields) = &mut doc {
-            fields.insert("version".into(), 3usize.into());
+            fields.insert("version".into(), 4usize.into());
         }
         let err = StoreMeta::from_json(&doc).unwrap_err();
         assert!(format!("{err}").contains("unsupported store version"), "{err}");
+    }
+
+    #[test]
+    fn json_roundtrip_v3_summaries() {
+        // v3 = summary sidecar, orthogonal to sharding
+        let mut m = meta(StoreKind::Factored);
+        m.summary_chunk = Some(256);
+        let doc = m.to_json();
+        assert_eq!(doc.get("version").and_then(|v| v.as_usize()), Some(3));
+        let back = StoreMeta::from_json(&doc).unwrap();
+        assert_eq!(back.summary_chunk, Some(256));
+        assert_eq!(back.shards, None);
+
+        m.shards = Some(vec![60, 40]);
+        let doc = m.to_json();
+        assert_eq!(doc.get("version").and_then(|v| v.as_usize()), Some(3));
+        let back = StoreMeta::from_json(&doc).unwrap();
+        assert_eq!(back.summary_chunk, Some(256));
+        assert_eq!(back.shards, Some(vec![60, 40]));
+    }
+
+    #[test]
+    fn rejects_zero_summary_chunk() {
+        let m = meta(StoreKind::Dense);
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("version".into(), 3usize.into());
+            fields.insert("summary_chunk".into(), 0usize.into());
+        }
+        assert!(StoreMeta::from_json(&doc).is_err());
     }
 
     #[test]

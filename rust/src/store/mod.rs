@@ -2,15 +2,20 @@
 //! storage/IO bottleneck).  bf16 fixed-stride records + JSON sidecar;
 //! dense (LoGRA) and rank-c factored (LoRIF) layouts share one reader.
 //!
-//! Stores come in two on-disk layouts: v1 (one `.grads` file) and v2
-//! (contiguous `.shard{i}.grads` files + a shard manifest).  `ShardSet`
-//! opens both; the v2 layout feeds the parallel scoring path in
-//! `query::parallel`.
+//! Stores come in three on-disk layouts: v1 (one `.grads` file), v2
+//! (contiguous `.shard{i}.grads` files + a shard manifest), and v3
+//! (either of the above plus a `.summaries` pruning sidecar, see
+//! `crate::sketch`).  `ShardSet` opens all of them; the v2 layout feeds
+//! the parallel scoring path in `query::parallel`, the v3 sidecar lets
+//! top-k queries skip chunk reads entirely.
 
 pub mod format;
 pub mod reader;
 pub mod writer;
 
 pub use format::{StoreKind, StoreMeta};
-pub use reader::{Chunk, ChunkLayer, ShardSet, ShardSpan, StoreReader};
+pub use reader::{
+    Chunk, ChunkCursor, ChunkLayer, ShardSet, ShardSpan, StoreReader, StreamStats,
+    DEFAULT_PREFETCH_DEPTH,
+};
 pub use writer::{ShardedWriter, StoreWriter};

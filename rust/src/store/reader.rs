@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use super::format::{StoreKind, StoreMeta};
 use crate::linalg::Mat;
+use crate::sketch::StoreSummaries;
 use crate::util::bf16;
 
 /// A decoded chunk of consecutive examples.
@@ -52,14 +53,16 @@ impl ChunkLayer {
 }
 
 /// Decode `raw` (a whole number of records) into a chunk starting at
-/// global example index `start`.
-fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> Chunk {
+/// global example index `start`.  Shared by the streaming readers and
+/// the writer-side summarizer (`crate::sketch::summary`), so bound
+/// statistics are computed from exactly the values scorers see.
+pub(crate) fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> anyhow::Result<Chunk> {
     let stride = meta.bytes_per_example();
     let count = raw.len() / stride;
     let t0 = Instant::now();
     let mut layers = Vec::with_capacity(meta.layers.len());
     for (l, &(d1, d2)) in meta.layers.iter().enumerate() {
-        let (off, len) = meta.layer_span(l);
+        let (off, len) = meta.layer_span(l)?;
         match meta.kind {
             StoreKind::Dense => {
                 let mut g = Mat::zeros(count, d1 * d2);
@@ -83,7 +86,7 @@ fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> Chunk {
             }
         }
     }
-    Chunk { start, count, layers, io_time: t0.elapsed() }
+    Ok(Chunk { start, count, layers, io_time: t0.elapsed() })
 }
 
 /// Reader over one data file holding examples [start, start + count).
@@ -94,6 +97,8 @@ pub struct StoreReader {
     pub start: usize,
     /// number of examples in this file
     pub count: usize,
+    /// bounded prefetch queue depth (chunks in flight), >= 1
+    pub prefetch_depth: usize,
 }
 
 impl StoreReader {
@@ -114,7 +119,7 @@ impl StoreReader {
             meta.total_bytes()
         );
         let count = meta.n_examples;
-        Ok(StoreReader { meta, path, start: 0, count })
+        Ok(StoreReader { meta, path, start: 0, count, prefetch_depth: DEFAULT_PREFETCH_DEPTH })
     }
 
     /// Stream this file's examples in chunks of `chunk_size`, calling `f`
@@ -143,7 +148,7 @@ impl StoreReader {
                 let t0 = Instant::now();
                 let buf = &mut raw[..count * stride];
                 file.read_exact(buf)?;
-                let chunk = decode_chunk(&self.meta, global_off + start, buf);
+                let chunk = decode_chunk(&self.meta, global_off + start, buf)?;
                 io_total += t0.elapsed();
                 f(chunk)?;
                 start += count;
@@ -151,8 +156,10 @@ impl StoreReader {
             return Ok((io_total, total_bytes));
         }
 
-        // prefetch thread: reads + decodes ahead, bounded queue of 2
-        let (tx, rx) = mpsc::sync_channel::<anyhow::Result<Chunk>>(2);
+        // prefetch thread: reads + decodes ahead, bounded queue of
+        // `prefetch_depth` chunks (the `--prefetch-depth` knob)
+        let (tx, rx) =
+            mpsc::sync_channel::<anyhow::Result<Chunk>>(self.prefetch_depth.max(1));
         let meta = self.meta.clone();
         let path = self.path.clone();
         let handle = std::thread::spawn(move || {
@@ -165,7 +172,7 @@ impl StoreReader {
                     let t0 = Instant::now();
                     let mut raw = vec![0u8; count * stride];
                     file.read_exact(&mut raw)?;
-                    let mut chunk = decode_chunk(&meta, global_off + start, &raw);
+                    let mut chunk = decode_chunk(&meta, global_off + start, &raw)?;
                     chunk.io_time = t0.elapsed();
                     if tx.send(Ok(chunk)).is_err() {
                         return Ok(()); // consumer hung up
@@ -201,7 +208,99 @@ impl StoreReader {
         file.seek(SeekFrom::Start(((start - self.start) * stride) as u64))?;
         let mut raw = vec![0u8; count * stride];
         file.read_exact(&mut raw)?;
-        Ok(decode_chunk(&self.meta, start, &raw))
+        decode_chunk(&self.meta, start, &raw)
+    }
+
+    /// Chunk-at-a-time cursor over this file: [`ChunkCursor::peek`] the
+    /// next span, then [`ChunkCursor::read`] it or [`ChunkCursor::skip`]
+    /// past it without touching the bytes.  This is the skip-aware
+    /// streaming primitive behind chunk pruning (`crate::sketch`); it
+    /// has no prefetch thread because skip decisions depend on consumer
+    /// state (the top-k heaps) fed back chunk by chunk.
+    pub fn chunks(&self, chunk_size: usize) -> anyhow::Result<ChunkCursor<'_>> {
+        anyhow::ensure!(chunk_size >= 1, "chunk_size must be >= 1");
+        Ok(ChunkCursor {
+            reader: self,
+            file: std::fs::File::open(&self.path)?,
+            pos: 0,
+            chunk_size,
+            raw: Vec::new(),
+            io: Duration::ZERO,
+            stats: StreamStats::default(),
+        })
+    }
+}
+
+/// Default prefetch queue depth (chunks in flight) — overridable via
+/// the `--prefetch-depth` config/CLI knob.
+pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
+
+/// Byte/chunk accounting of a gated streaming pass.
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    pub bytes_read: u64,
+    pub bytes_skipped: u64,
+    pub chunks_read: usize,
+    pub chunks_skipped: usize,
+}
+
+/// See [`StoreReader::chunks`].
+pub struct ChunkCursor<'a> {
+    reader: &'a StoreReader,
+    file: std::fs::File,
+    /// examples consumed within this file
+    pos: usize,
+    chunk_size: usize,
+    raw: Vec<u8>,
+    io: Duration,
+    stats: StreamStats,
+}
+
+impl ChunkCursor<'_> {
+    /// Global `(start, count)` of the next chunk, `None` at end of file.
+    pub fn peek(&self) -> Option<(usize, usize)> {
+        if self.pos >= self.reader.count {
+            return None;
+        }
+        let count = self.chunk_size.min(self.reader.count - self.pos);
+        Some((self.reader.start + self.pos, count))
+    }
+
+    /// Read + decode the next chunk and advance.
+    pub fn read(&mut self) -> anyhow::Result<Chunk> {
+        let (start, count) =
+            self.peek().ok_or_else(|| anyhow::anyhow!("cursor past end of file"))?;
+        let stride = self.reader.meta.bytes_per_example();
+        let t0 = Instant::now();
+        self.raw.resize(count * stride, 0);
+        self.file.read_exact(&mut self.raw)?;
+        let chunk = decode_chunk(&self.reader.meta, start, &self.raw)?;
+        self.io += t0.elapsed();
+        self.pos += count;
+        self.stats.bytes_read += (count * stride) as u64;
+        self.stats.chunks_read += 1;
+        Ok(chunk)
+    }
+
+    /// Seek past the next chunk without reading its bytes.
+    pub fn skip(&mut self) -> anyhow::Result<()> {
+        let (_, count) =
+            self.peek().ok_or_else(|| anyhow::anyhow!("cursor past end of file"))?;
+        let stride = self.reader.meta.bytes_per_example();
+        self.file.seek(SeekFrom::Current((count * stride) as i64))?;
+        self.pos += count;
+        self.stats.bytes_skipped += (count * stride) as u64;
+        self.stats.chunks_skipped += 1;
+        Ok(())
+    }
+
+    /// Wall time spent reading + decoding so far.
+    pub fn io_time(&self) -> Duration {
+        self.io
+    }
+
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
     }
 }
 
@@ -214,10 +313,15 @@ pub struct ShardSpan {
 }
 
 /// An opened store: v1 single file (one pseudo-shard) or v2 shard files.
-/// Every data file is validated against the manifest at open time.
+/// Every data file is validated against the manifest at open time, as
+/// is the v3 chunk-summary sidecar when the manifest declares one.
 pub struct ShardSet {
     pub meta: StoreMeta,
     spans: Vec<ShardSpan>,
+    /// v3 pruning sidecar; `None` on v1/v2 stores (full scans only)
+    summaries: Option<StoreSummaries>,
+    /// prefetch queue depth handed to every per-shard reader
+    pub prefetch_depth: usize,
 }
 
 impl ShardSet {
@@ -252,7 +356,26 @@ impl ShardSet {
                 }
             }
         }
-        Ok(ShardSet { meta, spans })
+        let summaries = match meta.summary_chunk {
+            None => None,
+            Some(declared) => {
+                let path = StoreMeta::summaries_path(base);
+                let sums = StoreSummaries::load(&path).map_err(|e| {
+                    anyhow::anyhow!(
+                        "manifest declares a summary sidecar but {} is unreadable: {e}",
+                        path.display()
+                    )
+                })?;
+                anyhow::ensure!(
+                    sums.chunk_size == declared,
+                    "summary sidecar grid {} disagrees with the manifest's {declared}",
+                    sums.chunk_size
+                );
+                sums.validate(&meta)?;
+                Some(sums)
+            }
+        };
+        Ok(ShardSet { meta, spans, summaries, prefetch_depth: DEFAULT_PREFETCH_DEPTH })
     }
 
     pub fn n_shards(&self) -> usize {
@@ -263,6 +386,11 @@ impl ShardSet {
         &self.spans[i]
     }
 
+    /// The v3 pruning sidecar, when this store carries one.
+    pub fn summaries(&self) -> Option<&StoreSummaries> {
+        self.summaries.as_ref()
+    }
+
     /// A reader over shard `i`, reporting global example indices.
     pub fn reader(&self, i: usize) -> StoreReader {
         let s = &self.spans[i];
@@ -271,6 +399,7 @@ impl ShardSet {
             path: s.path.clone(),
             start: s.start,
             count: s.count,
+            prefetch_depth: self.prefetch_depth,
         }
     }
 
@@ -309,7 +438,7 @@ impl ShardSet {
             let dst = &mut raw[(lo - start) * stride..(hi - start) * stride];
             file.read_exact(dst)?;
         }
-        Ok(decode_chunk(&self.meta, start, &raw))
+        decode_chunk(&self.meta, start, &raw)
     }
 }
 
@@ -342,6 +471,7 @@ mod tests {
             layers: layers.to_vec(),
             n_examples: 0,
             shards: None,
+            summary_chunk: None,
         }
     }
 
@@ -394,6 +524,7 @@ mod tests {
             fn drop(&mut self) {
                 let _ = std::fs::remove_file(self.path.with_extension("grads"));
                 let _ = std::fs::remove_file(self.path.with_extension("json"));
+                let _ = std::fs::remove_file(self.path.with_extension("summaries"));
                 for i in 0..64 {
                     let _ = std::fs::remove_file(
                         self.path.with_extension(format!("shard{i}.grads")),
@@ -445,8 +576,8 @@ mod tests {
     #[test]
     fn prefetch_matches_sync() {
         let (base, _) = write_store(StoreKind::Factored, 23, 1);
-        let r = StoreReader::open(&base.path).unwrap();
-        let collect = |prefetch: bool| {
+        let mut r = StoreReader::open(&base.path).unwrap();
+        let collect = |r: &StoreReader, prefetch: bool| {
             let mut rows: Vec<f32> = Vec::new();
             r.stream(7, prefetch, |chunk| {
                 let (u, _) = chunk.layers[1].factors();
@@ -456,7 +587,101 @@ mod tests {
             .unwrap();
             rows
         };
-        assert_eq!(collect(false), collect(true));
+        let sync = collect(&r, false);
+        assert_eq!(sync, collect(&r, true));
+        // deeper and minimal queues deliver the identical stream
+        r.prefetch_depth = 5;
+        assert_eq!(sync, collect(&r, true));
+        r.prefetch_depth = 1;
+        assert_eq!(sync, collect(&r, true));
+    }
+
+    #[test]
+    fn cursor_read_all_matches_stream() {
+        let (base, _) = write_store(StoreKind::Dense, 17, 1);
+        let r = StoreReader::open(&base.path).unwrap();
+        let mut streamed: Vec<f32> = Vec::new();
+        r.stream(5, false, |c| {
+            streamed.extend(c.layers[0].dense().data.iter());
+            Ok(())
+        })
+        .unwrap();
+        let mut cur = r.chunks(5).unwrap();
+        let mut via_cursor: Vec<f32> = Vec::new();
+        while cur.peek().is_some() {
+            via_cursor.extend(cur.read().unwrap().layers[0].dense().data.iter());
+        }
+        assert_eq!(streamed, via_cursor);
+        assert_eq!(cur.stats().chunks_read, 4);
+        assert_eq!(cur.stats().chunks_skipped, 0);
+        assert_eq!(cur.stats().bytes_read, r.meta.total_bytes());
+    }
+
+    #[test]
+    fn cursor_skip_seeks_past_chunks() {
+        let (base, _) = write_store(StoreKind::Dense, 20, 1);
+        let r = StoreReader::open(&base.path).unwrap();
+        let stride = r.meta.bytes_per_example() as u64;
+        let mut cur = r.chunks(6).unwrap();
+        let mut read_chunks = Vec::new();
+        let mut i = 0;
+        while let Some((start, count)) = cur.peek() {
+            if i % 2 == 0 {
+                cur.skip().unwrap();
+            } else {
+                let c = cur.read().unwrap();
+                assert_eq!((c.start, c.count), (start, count));
+                read_chunks.push(c);
+            }
+            i += 1;
+        }
+        // chunks: [0,6) skipped, [6,12) read, [12,18) skipped, [18,20) read
+        assert_eq!(cur.stats().chunks_skipped, 2);
+        assert_eq!(cur.stats().chunks_read, 2);
+        assert_eq!(cur.stats().bytes_skipped, 12 * stride);
+        assert_eq!(cur.stats().bytes_read, 8 * stride);
+        // a skipped-over read still lands on the right records
+        let want = r.read_range(6, 6).unwrap();
+        assert_eq!(read_chunks[0].layers[0].dense().data, want.layers[0].dense().data);
+    }
+
+    #[test]
+    fn v3_store_loads_and_validates_summaries() {
+        let (base, meta) = write_store(StoreKind::Dense, 11, 1);
+        assert!(meta.summary_chunk.is_some());
+        let set = ShardSet::open(&base.path).unwrap();
+        let sums = set.summaries().expect("sidecar loaded");
+        assert_eq!(sums.chunks.iter().map(|c| c.count).sum::<usize>(), 11);
+
+        // manifest declares summaries but the sidecar is gone -> error
+        std::fs::remove_file(StoreMeta::summaries_path(&base.path)).unwrap();
+        let err = ShardSet::open(&base.path).unwrap_err();
+        assert!(format!("{err}").contains("summary sidecar"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_summary_sidecar_is_a_clean_error() {
+        let (base, _) = write_store(StoreKind::Dense, 9, 1);
+        let p = StoreMeta::summaries_path(&base.path);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(ShardSet::open(&base.path).is_err());
+        // garbage magic
+        std::fs::write(&p, b"NOTASUMMARYFILE!").unwrap();
+        let err = ShardSet::open(&base.path).unwrap_err();
+        assert!(format!("{err}").contains("unreadable"), "{err}");
+    }
+
+    #[test]
+    fn sharded_summaries_restart_per_shard() {
+        let (base, meta) = write_sharded(StoreKind::Dense, 20, 1, 3, "sum_per_shard");
+        assert!(meta.summary_chunk.is_some());
+        let set = ShardSet::open(&base.path).unwrap();
+        let sums = set.summaries().unwrap();
+        // every shard start must begin a summary chunk
+        for i in 0..set.n_shards() {
+            assert!(sums.find(set.shard(i).start).is_some(), "shard {i}");
+        }
     }
 
     #[test]

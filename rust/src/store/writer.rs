@@ -5,12 +5,21 @@
 //! v2 manifest, so the query path can score shards on parallel workers.
 //! Both share one record encoder, so a sharded store holds bit-identical
 //! records to its monolithic counterpart.
+//!
+//! Both writers also build the v3 chunk-summary pruning sidecar
+//! (`crate::sketch`) as records stream through: per summary chunk
+//! (default grid [`DEFAULT_SUMMARY_CHUNK`], restarting at every shard
+//! roll) the bf16-decoded records are folded into max-norm / centroid /
+//! radius bounds, written to `<base>.summaries` at finalize.  Disable
+//! (or resize the grid) with [`StoreWriter::set_summary_chunk`] /
+//! [`ShardedWriter::set_summary_chunk`] before the first append.
 
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 use super::format::{StoreKind, StoreMeta};
 use crate::runtime::ExtractBatch;
+use crate::sketch::{SummaryBuilder, DEFAULT_SUMMARY_CHUNK};
 use crate::util::bf16;
 
 /// Encode example `ex` of an extract batch into `out` (appends).
@@ -64,6 +73,7 @@ pub struct StoreWriter {
     file: BufWriter<std::fs::File>,
     written: usize,
     scratch: Vec<u8>,
+    summaries: Option<SummaryBuilder>,
 }
 
 impl StoreWriter {
@@ -73,12 +83,30 @@ impl StoreWriter {
         }
         meta.n_examples = 0;
         meta.shards = None;
+        meta.summary_chunk = None;
         let file = BufWriter::new(std::fs::File::create(StoreMeta::data_path(base))?);
-        Ok(StoreWriter { base: base.to_path_buf(), meta, file, written: 0, scratch: Vec::new() })
+        let summaries = Some(SummaryBuilder::new(&meta, DEFAULT_SUMMARY_CHUNK));
+        Ok(StoreWriter {
+            base: base.to_path_buf(),
+            meta,
+            file,
+            written: 0,
+            scratch: Vec::new(),
+            summaries,
+        })
     }
 
     pub fn meta(&self) -> &StoreMeta {
         &self.meta
+    }
+
+    /// Resize the summary grid (`0` disables the sidecar entirely,
+    /// producing a pre-v3 store).  Must be called before any record is
+    /// appended: the grid cannot change mid-stream.
+    pub fn set_summary_chunk(&mut self, chunk: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.written == 0, "summary chunk must be set before the first record");
+        self.summaries = (chunk > 0).then(|| SummaryBuilder::new(&self.meta, chunk));
+        Ok(())
     }
 
     /// Append the valid examples of an extract batch.
@@ -89,6 +117,9 @@ impl StoreWriter {
             encode_batch_example(&self.meta, batch, ex, &mut self.scratch)?;
             debug_assert_eq!(self.scratch.len(), self.meta.bytes_per_example());
             self.file.write_all(&self.scratch)?;
+            if let Some(sb) = self.summaries.as_mut() {
+                sb.add_record(&self.scratch)?;
+            }
             self.written += 1;
         }
         Ok(())
@@ -99,14 +130,22 @@ impl StoreWriter {
         self.scratch.clear();
         encode_dense_row(&self.meta, per_layer, &mut self.scratch)?;
         self.file.write_all(&self.scratch)?;
+        if let Some(sb) = self.summaries.as_mut() {
+            sb.add_record(&self.scratch)?;
+        }
         self.written += 1;
         Ok(())
     }
 
-    /// Flush data and write the metadata sidecar.
+    /// Flush data and write the metadata + summary sidecars.
     pub fn finalize(mut self) -> anyhow::Result<StoreMeta> {
         self.file.flush()?;
         self.meta.n_examples = self.written;
+        if let Some(sb) = self.summaries.take() {
+            let sums = sb.finish()?;
+            self.meta.summary_chunk = Some(sums.chunk_size);
+            sums.save(&StoreMeta::summaries_path(&self.base))?;
+        }
         self.meta.save(&self.base)?;
         Ok(self.meta)
     }
@@ -125,6 +164,7 @@ pub struct ShardedWriter {
     /// examples written per shard; the last entry is the open shard
     counts: Vec<usize>,
     scratch: Vec<u8>,
+    summaries: Option<SummaryBuilder>,
 }
 
 impl ShardedWriter {
@@ -140,9 +180,11 @@ impl ShardedWriter {
         }
         meta.n_examples = 0;
         meta.shards = None;
+        meta.summary_chunk = None;
         let per_shard = ((n_expected + shards - 1) / shards).max(1);
         let file =
             BufWriter::new(std::fs::File::create(StoreMeta::shard_data_path(base, 0))?);
+        let summaries = Some(SummaryBuilder::new(&meta, DEFAULT_SUMMARY_CHUNK));
         Ok(ShardedWriter {
             base: base.to_path_buf(),
             meta,
@@ -151,11 +193,23 @@ impl ShardedWriter {
             file,
             counts: vec![0],
             scratch: Vec::new(),
+            summaries,
         })
     }
 
     pub fn meta(&self) -> &StoreMeta {
         &self.meta
+    }
+
+    /// Resize the summary grid (`0` disables the sidecar).  Must be
+    /// called before the first append.
+    pub fn set_summary_chunk(&mut self, chunk: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.counts.iter().sum::<usize>() == 0,
+            "summary chunk must be set before the first record"
+        );
+        self.summaries = (chunk > 0).then(|| SummaryBuilder::new(&self.meta, chunk));
+        Ok(())
     }
 
     pub fn n_shards(&self) -> usize {
@@ -174,11 +228,16 @@ impl ShardedWriter {
     }
 
     /// Roll to the next shard file when the open one is full (and more
-    /// shards are allowed).
+    /// shards are allowed).  The summary grid restarts with the shard:
+    /// a summary chunk never straddles two data files, so a skip always
+    /// maps to one contiguous seek.
     fn roll_if_full(&mut self) -> anyhow::Result<()> {
         let open = self.counts.len() - 1;
         if self.counts[open] >= self.per_shard && self.counts.len() < self.max_shards {
             self.file.flush()?;
+            if let Some(sb) = self.summaries.as_mut() {
+                sb.flush()?;
+            }
             let next = self.counts.len();
             self.file = BufWriter::new(std::fs::File::create(StoreMeta::shard_data_path(
                 &self.base, next,
@@ -192,6 +251,9 @@ impl ShardedWriter {
         debug_assert_eq!(self.scratch.len(), self.meta.bytes_per_example());
         self.roll_if_full()?;
         self.file.write_all(&self.scratch)?;
+        if let Some(sb) = self.summaries.as_mut() {
+            sb.add_record(&self.scratch)?;
+        }
         *self.counts.last_mut().unwrap() += 1;
         Ok(())
     }
@@ -215,11 +277,17 @@ impl ShardedWriter {
         self.write_record()
     }
 
-    /// Flush data and write the v2 manifest with the actual shard sizes.
+    /// Flush data and write the manifest (v2 shard sizes, v3 when the
+    /// summary sidecar is enabled) plus the `.summaries` file.
     pub fn finalize(mut self) -> anyhow::Result<StoreMeta> {
         self.file.flush()?;
         self.meta.n_examples = self.counts.iter().sum();
         self.meta.shards = Some(self.counts.clone());
+        if let Some(sb) = self.summaries.take() {
+            let sums = sb.finish()?;
+            self.meta.summary_chunk = Some(sums.chunk_size);
+            sums.save(&StoreMeta::summaries_path(&self.base))?;
+        }
         self.meta.save(&self.base)?;
         Ok(self.meta)
     }

@@ -5,6 +5,9 @@
 //! random cases; on failure it reports the seed (re-run with
 //! `LORIF_PROP_SEED=<seed>` to reproduce a single case).  No shrinking —
 //! cases are kept small enough to debug directly.
+//!
+//! `LORIF_PROP_CASES=<n>` raises the case count per property (the CI
+//! nightly hardening job runs with a multiple of the default).
 
 use lorif::linalg::{eigh, qr, rsvd, Chol, Mat};
 use lorif::runtime::{ExtractBatch, LayerGrads};
@@ -15,6 +18,14 @@ use lorif::util::prng::Rng;
 
 const CASES: usize = 40;
 
+fn case_count() -> usize {
+    std::env::var("LORIF_PROP_CASES")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(CASES)
+}
+
 fn for_each_case(name: &str, mut f: impl FnMut(u64, &mut Rng)) {
     match std::env::var("LORIF_PROP_SEED") {
         Ok(s) if !s.trim().is_empty() => {
@@ -23,7 +34,7 @@ fn for_each_case(name: &str, mut f: impl FnMut(u64, &mut Rng)) {
             f(seed, &mut rng);
         }
         _ => {
-            for seed in 0..CASES as u64 {
+            for seed in 0..case_count() as u64 {
                 let mut rng = Rng::labeled(seed, name);
                 f(seed, &mut rng);
             }
@@ -52,14 +63,17 @@ fn prop_store_layout_bijective() {
                 layers: layers.clone(),
                 n_examples: 7,
                 shards: None,
+                summary_chunk: None,
             };
             let mut end = 0;
             for l in 0..n_layers {
-                let (off, len) = meta.layer_span(l);
+                let (off, len) = meta.layer_span(l).unwrap();
                 assert_eq!(off, end, "seed {seed}: layer {l} not contiguous");
                 end = off + len * 2;
             }
             assert_eq!(end, meta.bytes_per_example(), "seed {seed}");
+            // one past the end is an error, not a panic
+            assert!(meta.layer_span(n_layers).is_err(), "seed {seed}");
         }
     });
 }
@@ -388,6 +402,7 @@ fn prop_store_roundtrip_v1_and_v2() {
             layers: dims.clone(),
             n_examples: 0,
             shards: None,
+            summary_chunk: None,
         };
         let data = random_layers(n, &dims, c, rng);
 
@@ -501,6 +516,7 @@ fn prop_sharded_scoring_equals_monolithic() {
             layers: dims.clone(),
             n_examples: 0,
             shards: None,
+            summary_chunk: None,
         };
         let data = random_layers(n, &dims, 1, rng);
         let batch_layers: Vec<LayerGrads> = data
@@ -592,6 +608,7 @@ fn prop_shard_boundaries_partition_examples() {
             layers: dims.clone(),
             n_examples: 0,
             shards: None,
+            summary_chunk: None,
         };
         let data = random_layers(n, &dims, 1, rng);
         let base = prop_tmp_base("partition", seed);
@@ -665,6 +682,7 @@ fn prop_streaming_topk_equals_full_matrix_all_kernels() {
                 layers: dims.clone(),
                 n_examples: 0,
                 shards: None,
+                summary_chunk: None,
             };
             let v1 = prop_tmp_base(&format!("sink_{}_v1", kind.as_str()), seed);
             let mut w = StoreWriter::create(&v1, meta.clone()).unwrap();
@@ -710,7 +728,12 @@ fn prop_streaming_topk_equals_full_matrix_all_kernels() {
                     streamed.peak_sink_elems,
                     nq * k * n_shards
                 );
-                assert_eq!(streamed.bytes_read, full.bytes_read, "seed {seed}: {name}");
+                // any pruned chunks are accounted byte-for-byte
+                assert_eq!(
+                    streamed.bytes_read + streamed.bytes_skipped,
+                    full.bytes_read,
+                    "seed {seed}: {name}"
+                );
             }
         };
 
@@ -797,4 +820,239 @@ fn prop_reconstruct_row_rank_additivity() {
             assert!((x - y).abs() < 1e-4, "seed {seed}");
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// chunk-pruning invariants (crate::sketch)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_truncated_or_corrupted_sharded_store_fails_cleanly() {
+    // random sharded stores: truncating any shard file, or corrupting
+    // the summary sidecar, must surface as a clean error from
+    // ShardSet::open — never a panic or a silent short read.
+    for_each_case("shard-truncate", |seed, rng| {
+        let dims = vec![(1 + rng.below(6), 1 + rng.below(6))];
+        let n = 8 + rng.below(40);
+        let shards = 2 + rng.below(4);
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+        };
+        let data = random_layers(n, &dims, 1, rng);
+        let base = prop_tmp_base("truncate", seed);
+        let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+        append_in_batches(&data, n, &mut Rng::labeled(seed, "batches"), |b| {
+            w.append(b).unwrap()
+        });
+        let meta = w.finalize().unwrap();
+        assert!(ShardSet::open(&base).is_ok(), "seed {seed}: fresh store must open");
+
+        // truncate a random shard by a random non-zero tail
+        let victim = rng.below(meta.shards.as_ref().unwrap().len());
+        let p = StoreMeta::shard_data_path(&base, victim);
+        let bytes = std::fs::read(&p).unwrap();
+        let cut = 1 + rng.below(bytes.len().min(64));
+        std::fs::write(&p, &bytes[..bytes.len() - cut]).unwrap();
+        let err = ShardSet::open(&base).unwrap_err();
+        assert!(
+            format!("{err}").contains("size mismatch"),
+            "seed {seed}: unexpected error {err}"
+        );
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(ShardSet::open(&base).is_ok(), "seed {seed}: restored store must open");
+
+        // corrupt the v3 summary sidecar: also a clean open-time error
+        let sp = StoreMeta::summaries_path(&base);
+        let sbytes = std::fs::read(&sp).unwrap();
+        let cut = 1 + rng.below(sbytes.len());
+        std::fs::write(&sp, &sbytes[..sbytes.len() - cut]).unwrap();
+        assert!(ShardSet::open(&base).is_err(), "seed {seed}: corrupt sidecar accepted");
+        std::fs::write(&sp, &sbytes).unwrap();
+    });
+}
+
+#[test]
+fn prop_exact_pruning_equals_full_scan_all_kernels() {
+    // For every store kernel (graddot, logra, trackstar on dense
+    // stores; lorif on factored stores), both layouts (v1 monolithic,
+    // v2 sharded), clustered records, and a small summary grid: the
+    // pruned streaming-top-k pass returns BIT-IDENTICAL top-k indices
+    // to the full-scan argsort, and every skipped byte is accounted
+    // (bytes_read + bytes_skipped == full-scan bytes).  Across the case
+    // sweep, the clustered data must actually trigger skips.
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::logra::LograScorer;
+    use lorif::attribution::lorif::LorifScorer;
+    use lorif::attribution::trackstar::TrackStarScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::curvature::{DenseCurvature, TruncatedCurvature};
+    use lorif::sketch::PruneMode;
+
+    let single_case =
+        std::env::var("LORIF_PROP_SEED").map(|s| !s.trim().is_empty()).unwrap_or(false);
+    let mut total_skipped = 0u64;
+    for_each_case("prune-exact", |seed, rng| {
+        let n_layers = 1 + rng.below(2);
+        let dims: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (3 + rng.below(3), 3 + rng.below(3))).collect();
+        let c = 1 + rng.below(2);
+        let grid = 3 + rng.below(5);
+        let n = 4 * grid + rng.below(3 * grid);
+        let nq = 1 + rng.below(3);
+        let shards = 2 + rng.below(3);
+        let k = 1 + rng.below(4);
+
+        // clustered records: chunk 0 strong and query-aligned, later
+        // chunks weak — the shape pruning exists for
+        let data: Vec<LayerGrads> = dims
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(n, d1 * d2);
+                let mut u = Mat::zeros(n, d1 * c);
+                let mut v = Mat::zeros(n, d2 * c);
+                for t in 0..n {
+                    let scale = if t < grid { 4.0 } else { 0.02 };
+                    for x in g.row_mut(t) {
+                        *x = scale * (1.0 + 0.1 * rng.normal() as f32);
+                    }
+                    for x in u.row_mut(t) {
+                        *x = scale * (1.0 + 0.1 * rng.normal() as f32);
+                    }
+                    for x in v.row_mut(t) {
+                        *x = 1.0 + 0.1 * rng.normal() as f32;
+                    }
+                }
+                LayerGrads { g, u, v }
+            })
+            .collect();
+
+        let mut bases = std::collections::BTreeMap::new();
+        for kind in [StoreKind::Dense, StoreKind::Factored] {
+            let meta = StoreMeta {
+                kind,
+                tier: "small".into(),
+                f: 4,
+                c,
+                layers: dims.clone(),
+                n_examples: 0,
+                shards: None,
+                summary_chunk: None,
+            };
+            let v1 = prop_tmp_base(&format!("prune_{}_v1", kind.as_str()), seed);
+            let mut w = StoreWriter::create(&v1, meta.clone()).unwrap();
+            w.set_summary_chunk(grid).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "b1"), |b| {
+                w.append(b).unwrap()
+            });
+            let m = w.finalize().unwrap();
+            assert_eq!(m.summary_chunk, Some(grid), "seed {seed}");
+            let v2 = prop_tmp_base(&format!("prune_{}_v2", kind.as_str()), seed);
+            let mut w = ShardedWriter::create(&v2, meta, shards, n).unwrap();
+            w.set_summary_chunk(grid).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "b2"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+            bases.insert(kind.as_str(), (v1, v2));
+        }
+        let (dense_v1, dense_v2) = bases["dense"].clone();
+        let (fact_v1, fact_v2) = bases["factored"].clone();
+
+        // queries aligned with the strong cluster's direction
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(nq, d1 * d2);
+                let mut u = Mat::zeros(nq, d1 * c);
+                let mut v = Mat::zeros(nq, d2 * c);
+                for q in 0..nq {
+                    for x in g.row_mut(q) {
+                        *x = 1.0 + 0.1 * rng.normal() as f32;
+                    }
+                    for x in u.row_mut(q) {
+                        *x = 1.0 + 0.1 * rng.normal() as f32;
+                    }
+                    for x in v.row_mut(q) {
+                        *x = 1.0 + 0.1 * rng.normal() as f32;
+                    }
+                }
+                QueryLayer { g, u, v }
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c, proj_dims: dims.clone(), layers: qlayers };
+
+        let threads = 1 + rng.below(3);
+        let mut check = |name: &str, scorer: &mut dyn Scorer| {
+            // reference: full-matrix pass (never pruned) + stable argsort
+            let full = scorer.score(&qg).unwrap();
+            // pruned: the scorers default to PruneMode::Exact
+            let pruned = scorer.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+            assert_eq!(
+                pruned.topk(k),
+                full.topk(k),
+                "seed {seed}: {name} pruned top-k diverged from the full scan"
+            );
+            assert_eq!(
+                pruned.bytes_read + pruned.bytes_skipped,
+                full.bytes_read,
+                "seed {seed}: {name} byte accounting broken"
+            );
+            total_skipped += pruned.bytes_skipped;
+        };
+
+        for (layout, dense_base, fact_base) in
+            [("v1", &dense_v1, &fact_v1), ("v2", &dense_v2, &fact_v2)]
+        {
+            let open_dense = || ShardSet::open(dense_base).unwrap();
+            let open_fact = || ShardSet::open(fact_base).unwrap();
+
+            let mut gd = GradDotScorer::new(open_dense());
+            gd.score_threads = threads;
+            check(&format!("graddot/{layout}"), &mut gd);
+
+            let curv = DenseCurvature::build(&open_dense(), 0.1).unwrap();
+            let mut lg = LograScorer::new(open_dense(), curv);
+            lg.score_threads = threads;
+            check(&format!("logra/{layout}"), &mut lg);
+
+            let curv = DenseCurvature::build(&open_dense(), 0.1).unwrap();
+            let mut ts = TrackStarScorer::new(open_dense(), curv);
+            ts.score_threads = threads;
+            check(&format!("trackstar/{layout}"), &mut ts);
+
+            let curv = TruncatedCurvature::build(&open_fact(), 3, 3, 2, 0.1, seed).unwrap();
+            let mut lf = LorifScorer::new(open_fact(), curv);
+            lf.score_threads = threads;
+            check(&format!("lorif/{layout}"), &mut lf);
+        }
+
+        // slack mode: still a valid top-k (right arity), skips at least
+        // as many bytes as exact mode on the same store
+        let mut gd = GradDotScorer::new(ShardSet::open(&dense_v1).unwrap());
+        let exact = gd.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+        gd.prune = PruneMode::Slack(0.5);
+        let slack = gd.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+        assert!(
+            slack.bytes_skipped >= exact.bytes_skipped,
+            "seed {seed}: slack pruned less than exact"
+        );
+        assert_eq!(slack.topk(k).len(), nq, "seed {seed}");
+        // prune off: reads everything
+        gd.prune = PruneMode::Off;
+        let off = gd.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+        assert_eq!(off.bytes_skipped, 0, "seed {seed}");
+    });
+    if !single_case {
+        assert!(
+            total_skipped > 0,
+            "clustered stores across the whole sweep never skipped a byte"
+        );
+    }
 }
