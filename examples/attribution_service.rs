@@ -16,7 +16,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use lorif::app::{build_store_scorer, Method};
+use lorif::app::{build_store_scorer_pool, Method};
 use lorif::config::Config;
 use lorif::corpus::Dataset;
 use lorif::index::{Pipeline, Stage1Options};
@@ -77,18 +77,32 @@ fn main() -> anyhow::Result<()> {
     println!("index: stage1 {:.1}s, stage2 {:.1}s", rep.wall.as_secs_f64(), t2.as_secs_f64());
 
     // --- serve ------------------------------------------------------------
-    let scorer = build_store_scorer(&p, Method::Lorif)?;
+    // a pool of scoring workers sharing one Arc'd store + decoded-chunk
+    // cache (see app::build_store_scorer_pool); gradient extraction for
+    // batch N+1 overlaps batch N's store pass
+    let scorers = build_store_scorer_pool(&p, Method::Lorif, 2)?;
     let extractor = GradExtractor::new(&p.rt, p.cfg.tier, p.cfg.f, p.cfg.c)?;
-    let sc = ServerConfig { addr: ADDR.into(), max_batch: 8, window_ms: 50, topk: 5 };
+    let sc = ServerConfig {
+        addr: ADDR.into(),
+        max_batch: 8,
+        window_ms: 50,
+        topk: 5,
+        queue_cap: 64,
+    };
 
-    // clients run on background threads; the PJRT serving loop stays here
+    // clients run on background threads; the PJRT batcher loop stays here
     let qtokens: Vec<Vec<i32>> =
         (0..queries.len()).map(|q| queries.example(q).to_vec()).collect();
     let client_handle = std::thread::spawn(move || client_driver(&qtokens));
 
-    let served = lorif::query::serve(&p.rt, &extractor, &lit, scorer, sc)?;
+    let source =
+        lorif::query::server::XlaGradSource { rt: &p.rt, extractor: &extractor, params: &lit };
+    let summary = lorif::query::serve(source, scorers, sc)?;
     let stats = client_handle.join().expect("client thread panicked")?;
-    println!("served {served} queries");
+    println!(
+        "served {} queries in {} batches ({} shed, {} failed, {} dropped)",
+        summary.served, summary.batches, summary.shed, summary.failed, summary.dropped
+    );
     println!(
         "client-observed: {:.1} q/s, mean latency {:.3}s, mean batch {:.1}",
         stats.qps, stats.mean_latency, stats.mean_batch

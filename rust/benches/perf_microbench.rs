@@ -272,6 +272,45 @@ fn main() -> anyhow::Result<()> {
             r_full.peak_sink_elems as f64 / r_topk.peak_sink_elems.max(1) as f64
         );
 
+        // decoded-chunk cache: cold (first pass populates) vs warm
+        // (every chunk served from residency) query over the same
+        // sharded store — the serving-path win where repeated batches
+        // hit the same hot spans.  Warm scoring must be bit-identical.
+        let (t_cache_cold, t_cache_warm, warm_hits) = {
+            use lorif::store::ChunkCache;
+            let mut set = ShardSet::open(&shard_base)?;
+            set.set_cache(Some(ChunkCache::with_capacity(256 << 20)));
+            let mut cached = GradDotScorer::new(set);
+            cached.score_threads = 0;
+            let t_cold = {
+                let t0 = std::time::Instant::now();
+                let r = cached.score(&qg)?;
+                let dt = t0.elapsed().as_secs_f64();
+                assert_eq!(r.cache_hits, 0, "first pass must be cold");
+                assert_eq!(r.scores().data, rb.scores().data, "cold cached pass diverged");
+                dt
+            };
+            let r_warm = cached.score(&qg)?;
+            assert_eq!(
+                r_warm.scores().data,
+                rb.scores().data,
+                "cache-served scoring diverged from disk scoring"
+            );
+            assert_eq!(r_warm.bytes_from_cache, r_warm.bytes_read, "warm pass hit disk");
+            let t_warm = time(3, || {
+                let _ = cached.score(&qg).unwrap();
+            });
+            (t_cold, t_warm, r_warm.cache_hits)
+        };
+        println!(
+            "chunk cache {n}x{nq}: cold {:.1} ms | warm {:.1} ms ({} chunk hits) | \
+             speedup {:.2}x",
+            t_cache_cold * 1e3,
+            t_cache_warm * 1e3,
+            warm_hits,
+            t_cache_cold / t_cache_warm.max(1e-9)
+        );
+
         // chunk pruning: bytes-skipped vs k on a clustered store (the
         // I/O half of the win; the sinks above are the memory half).
         // One strong query-aligned chunk, the rest weak — the shape the
@@ -371,6 +410,9 @@ fn main() -> anyhow::Result<()> {
             ("topk_peak_elems", r_topk.peak_sink_elems.into()),
             ("prune_full_ms", (t_noprune * 1e3).into()),
             ("prune_ms", (t_prune * 1e3).into()),
+            ("cache_cold_ms", (t_cache_cold * 1e3).into()),
+            ("cache_warm_ms", (t_cache_warm * 1e3).into()),
+            ("cache_warm_hits", warm_hits.into()),
         ];
         fields.extend(bytes_by_k);
         let doc = lorif::util::json::obj(fields);

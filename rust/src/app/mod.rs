@@ -79,49 +79,88 @@ pub fn build_store_scorer(
     p: &Pipeline,
     method: Method,
 ) -> anyhow::Result<Box<dyn Scorer>> {
+    let mut pool = build_store_scorer_pool(p, method, 1)?;
+    let scorer: Box<dyn Scorer> = pool.pop().expect("pool of one");
+    Ok(scorer)
+}
+
+/// Build `workers` independent scorer instances for the serving pool,
+/// all sharing ONE opened `ShardSet` behind `Arc` (and, when
+/// `cfg.chunk_cache_mb > 0`, one decoded-chunk cache) plus one curvature
+/// build — so N workers cost N small structs, not N store opens and N
+/// rSVD passes, and a chunk decoded for any worker is resident for all
+/// of them.
+#[cfg(feature = "xla")]
+pub fn build_store_scorer_pool(
+    p: &Pipeline,
+    method: Method,
+    workers: usize,
+) -> anyhow::Result<Vec<Box<dyn Scorer + Send>>> {
+    use std::sync::Arc;
+
+    let workers = workers.max(1);
     let threads = p.cfg.score_threads;
     let prune = p.cfg.prune;
     let depth = p.cfg.prefetch_depth;
-    match method {
-        Method::Lorif => {
-            let (curv, _) = p.stage2_lorif()?;
-            let shards = ShardSet::open(&p.factored_base())?;
-            let mut s = LorifScorer::new(shards, curv);
-            s.score_threads = threads;
-            s.prune = prune;
-            s.prefetch_depth = depth;
-            Ok(Box::new(s))
-        }
-        Method::Logra => {
-            let (curv, _) = p.stage2_dense()?;
-            let shards = ShardSet::open(&p.dense_base())?;
-            let mut s = LograScorer::new(shards, curv);
-            s.score_threads = threads;
-            s.prune = prune;
-            s.prefetch_depth = depth;
-            Ok(Box::new(s))
-        }
-        Method::GradDot => {
-            let shards = ShardSet::open(&p.dense_base())?;
-            let mut s = GradDotScorer::new(shards);
-            s.score_threads = threads;
-            s.prune = prune;
-            s.prefetch_depth = depth;
-            Ok(Box::new(s))
-        }
-        Method::TrackStar => {
-            let (curv, _) = p.stage2_dense()?;
-            let shards = ShardSet::open(&p.dense_base())?;
-            let mut s = TrackStarScorer::new(shards, curv);
-            s.score_threads = threads;
-            s.prune = prune;
-            s.prefetch_depth = depth;
-            Ok(Box::new(s))
-        }
+    let base = match method {
+        Method::Lorif => p.factored_base(),
+        Method::Logra | Method::GradDot | Method::TrackStar => p.dense_base(),
         Method::RepSim | Method::Ekfac => {
             anyhow::bail!("use build_repsim_scorer / build_ekfac_scorer for {method:?}")
         }
+    };
+    let mut set = ShardSet::open(&base)?;
+    if let Some(cache) = crate::store::ChunkCache::from_mb(p.cfg.chunk_cache_mb) {
+        set.set_cache(Some(cache));
     }
+    let set = Arc::new(set);
+    let mut out: Vec<Box<dyn Scorer + Send>> = Vec::with_capacity(workers);
+    match method {
+        Method::Lorif => {
+            let (curv, _) = p.stage2_lorif()?;
+            let curv = Arc::new(curv);
+            for _ in 0..workers {
+                let mut s = LorifScorer::new(Arc::clone(&set), Arc::clone(&curv));
+                s.score_threads = threads;
+                s.prune = prune;
+                s.prefetch_depth = depth;
+                out.push(Box::new(s));
+            }
+        }
+        Method::Logra => {
+            let (curv, _) = p.stage2_dense()?;
+            let curv = Arc::new(curv);
+            for _ in 0..workers {
+                let mut s = LograScorer::new(Arc::clone(&set), Arc::clone(&curv));
+                s.score_threads = threads;
+                s.prune = prune;
+                s.prefetch_depth = depth;
+                out.push(Box::new(s));
+            }
+        }
+        Method::GradDot => {
+            for _ in 0..workers {
+                let mut s = GradDotScorer::new(Arc::clone(&set));
+                s.score_threads = threads;
+                s.prune = prune;
+                s.prefetch_depth = depth;
+                out.push(Box::new(s));
+            }
+        }
+        Method::TrackStar => {
+            let (curv, _) = p.stage2_dense()?;
+            let curv = Arc::new(curv);
+            for _ in 0..workers {
+                let mut s = TrackStarScorer::new(Arc::clone(&set), Arc::clone(&curv));
+                s.score_threads = threads;
+                s.prune = prune;
+                s.prefetch_depth = depth;
+                out.push(Box::new(s));
+            }
+        }
+        Method::RepSim | Method::Ekfac => unreachable!("rejected above"),
+    }
+    Ok(out)
 }
 
 /// RepSim needs query embeddings computed with the same model.

@@ -34,7 +34,7 @@ use super::{QueryGrads, ScoreOutput, ScoreReport, SinkSpec};
 use crate::linalg::Mat;
 use crate::query::parallel::{self, ShardScores, TopK};
 use crate::sketch::{ChunkPruner, ChunkSummary, PruneMode};
-use crate::store::{Chunk, ShardSet, StoreKind, StoreMeta, StoreReader};
+use crate::store::{Chunk, ShardSet, StoreKind, StoreMeta, StoreReader, StreamStats};
 use crate::util::pool;
 use crate::util::timer::PhaseTimer;
 
@@ -195,9 +195,8 @@ struct ShardRun<S> {
     sink: S,
     io: Duration,
     compute: Duration,
-    bytes: u64,
-    bytes_skipped: u64,
-    chunks_skipped: usize,
+    /// byte/chunk/cache accounting of this shard's pass
+    stats: StreamStats,
     /// peak score elements the sink held during this shard's pass
     peak: usize,
 }
@@ -263,25 +262,33 @@ pub fn execute<K: ChunkKernel>(
                 FullMatrixSink::new(nq, r.start, r.count)
             })?;
             let peak: usize = runs.iter().map(|r| r.peak).sum();
+            let mut agg = StreamStats::default();
             let parts: Vec<ShardScores> = runs
                 .into_iter()
-                .map(|r| ShardScores {
-                    start: r.sink.start,
-                    scores: r.sink.scores,
-                    io: r.io,
-                    compute: r.compute,
-                    bytes: r.bytes,
+                .map(|r| {
+                    agg.merge(&r.stats);
+                    ShardScores {
+                        start: r.sink.start,
+                        scores: r.sink.scores,
+                        io: r.io,
+                        compute: r.compute,
+                        bytes: r.stats.bytes_read,
+                    }
                 })
                 .collect();
             let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
+            debug_assert_eq!(bytes, agg.bytes_read);
             timer.merge(&shard_timer);
             Ok(ScoreReport {
                 output: ScoreOutput::Full(scores),
                 n_train: n,
                 timer,
-                bytes_read: bytes,
-                bytes_skipped: 0,
-                chunks_skipped: 0,
+                bytes_read: agg.bytes_read,
+                bytes_skipped: agg.bytes_skipped,
+                chunks_skipped: agg.chunks_skipped,
+                cache_hits: agg.cache_hits,
+                cache_misses: agg.cache_misses,
+                bytes_from_cache: agg.bytes_from_cache,
                 peak_sink_elems: peak,
             })
         }
@@ -291,17 +298,13 @@ pub fn execute<K: ChunkKernel>(
             })?;
             let mut io = Duration::ZERO;
             let mut compute = Duration::ZERO;
-            let mut bytes = 0u64;
-            let mut bytes_skipped = 0u64;
-            let mut chunks_skipped = 0usize;
+            let mut agg = StreamStats::default();
             let mut peak = 0usize;
             let mut shard_heaps = Vec::with_capacity(runs.len());
             for r in runs {
                 io += r.io;
                 compute += r.compute;
-                bytes += r.bytes;
-                bytes_skipped += r.bytes_skipped;
-                chunks_skipped += r.chunks_skipped;
+                agg.merge(&r.stats);
                 peak += r.peak;
                 shard_heaps.push(r.sink.heaps);
             }
@@ -312,9 +315,12 @@ pub fn execute<K: ChunkKernel>(
                 output: ScoreOutput::TopK(heaps),
                 n_train: n,
                 timer,
-                bytes_read: bytes,
-                bytes_skipped,
-                chunks_skipped,
+                bytes_read: agg.bytes_read,
+                bytes_skipped: agg.bytes_skipped,
+                chunks_skipped: agg.chunks_skipped,
+                cache_hits: agg.cache_hits,
+                cache_misses: agg.cache_misses,
+                bytes_from_cache: agg.bytes_from_cache,
                 peak_sink_elems: peak,
             })
         }
@@ -364,7 +370,10 @@ where
         };
         if let Some(pr) = pruner {
             // skip-aware pass on the summary grid (no prefetch thread:
-            // skip decisions depend on the heap state fed back per chunk)
+            // skip decisions depend on the heap state fed back per
+            // chunk).  The skip test runs BEFORE any cache lookup, so a
+            // resident chunk never changes a pruning decision and skips
+            // never populate the cache.
             let mut cur = reader.chunks(pr.chunk_size())?;
             while let Some((start, count)) = cur.peek() {
                 let skippable = nq > 0
@@ -385,30 +394,14 @@ where
                 peak = peak.max(sink.allocated_elems());
             }
             let stats = cur.stats().clone();
-            Ok(ShardRun {
-                sink,
-                io: cur.io_time(),
-                compute,
-                bytes: stats.bytes_read,
-                bytes_skipped: stats.bytes_skipped,
-                chunks_skipped: stats.chunks_skipped,
-                peak,
-            })
+            Ok(ShardRun { sink, io: cur.io_time(), compute, stats, peak })
         } else {
-            let (io, bytes) = reader.stream(opts.chunk_size, prefetch, |chunk| {
-                compute += score_one(&chunk, &mut sink, &mut block, &mut scratch)?;
+            let (io, stats) = reader.stream(opts.chunk_size, prefetch, |chunk| {
+                compute += score_one(chunk, &mut sink, &mut block, &mut scratch)?;
                 peak = peak.max(sink.allocated_elems());
                 Ok(())
             })?;
-            Ok(ShardRun {
-                sink,
-                io,
-                compute,
-                bytes,
-                bytes_skipped: 0,
-                chunks_skipped: 0,
-                peak,
-            })
+            Ok(ShardRun { sink, io, compute, stats, peak })
         }
     })
 }

@@ -5,6 +5,8 @@
 //! this file only supplies the kernel (the simplest one in the repo —
 //! a template for adding new scorers).
 
+use std::sync::Arc;
+
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::linalg::Mat;
@@ -12,7 +14,9 @@ use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
 use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct GradDotScorer {
-    pub shards: ShardSet,
+    /// `Arc`-shared so a pool of serving workers can score against one
+    /// opened store (and one decoded-chunk cache)
+    pub shards: Arc<ShardSet>,
     pub prefetch: bool,
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
@@ -24,9 +28,9 @@ pub struct GradDotScorer {
 }
 
 impl GradDotScorer {
-    pub fn new(shards: ShardSet) -> GradDotScorer {
+    pub fn new(shards: impl Into<Arc<ShardSet>>) -> GradDotScorer {
         GradDotScorer {
-            shards,
+            shards: shards.into(),
             prefetch: true,
             chunk_size: 512,
             score_threads: 0,
@@ -238,5 +242,27 @@ mod tests {
         assert_eq!(unpruned.bytes_skipped, 0);
         assert_eq!(unpruned.chunks_skipped, 0);
         assert_eq!(unpruned.bytes_read, full.bytes_read);
+
+        // the same clustered store behind a decoded-chunk cache: the 7
+        // provably-skippable chunks must never POPULATE the cache (only
+        // chunk 0 is read and inserted), skip decisions are unchanged
+        // by residency, and the warm rerun serves its one read hot —
+        // all bit-identical to the cold pruned pass
+        let mut cached_set = ShardSet::open(&base).unwrap();
+        let cache = crate::store::ChunkCache::with_capacity(8 << 20);
+        cached_set.set_cache(Some(cache.clone()));
+        let mut cached = GradDotScorer::new(cached_set);
+        cached.prune = PruneMode::Exact;
+        let p1 = cached.score_sink(&queries, SinkSpec::TopK(4)).unwrap();
+        assert_eq!(p1.topk(4), pruned.topk(4));
+        assert_eq!(p1.chunks_skipped, 7);
+        assert_eq!((p1.cache_hits, p1.cache_misses), (0, 1));
+        assert_eq!(cache.stats().insertions, 1, "skipped chunks were cached");
+        let p2 = cached.score_sink(&queries, SinkSpec::TopK(4)).unwrap();
+        assert_eq!(p2.topk(4), pruned.topk(4));
+        assert_eq!(p2.chunks_skipped, 7, "a resident chunk changed a skip decision");
+        assert_eq!((p2.cache_hits, p2.cache_misses), (1, 0));
+        assert_eq!(p2.bytes_from_cache, p2.bytes_read);
+        assert_eq!(cache.stats().insertions, 1);
     }
 }

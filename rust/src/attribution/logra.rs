@@ -8,6 +8,8 @@
 //! scorer, the streaming pass is the shared executor in
 //! `attribution::exec`; this file only supplies the kernel.
 
+use std::sync::Arc;
+
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
@@ -16,8 +18,10 @@ use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
 use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct LograScorer {
-    pub shards: ShardSet,
-    pub curv: DenseCurvature,
+    /// `Arc`-shared so a pool of serving workers can score against one
+    /// opened store (and one decoded-chunk cache)
+    pub shards: Arc<ShardSet>,
+    pub curv: Arc<DenseCurvature>,
     pub prefetch: bool,
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
@@ -29,10 +33,13 @@ pub struct LograScorer {
 }
 
 impl LograScorer {
-    pub fn new(shards: ShardSet, curv: DenseCurvature) -> LograScorer {
+    pub fn new(
+        shards: impl Into<Arc<ShardSet>>,
+        curv: impl Into<Arc<DenseCurvature>>,
+    ) -> LograScorer {
         LograScorer {
-            shards,
-            curv,
+            shards: shards.into(),
+            curv: curv.into(),
             prefetch: true,
             chunk_size: 512,
             score_threads: 0,
@@ -109,7 +116,7 @@ impl Scorer for LograScorer {
     }
 
     fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
-        let mut kernel = LograKernel { curv: &self.curv, bounds: None };
+        let mut kernel = LograKernel { curv: self.curv.as_ref(), bounds: None };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,

@@ -14,6 +14,8 @@
 //! iteration, sinks) is the shared executor in `attribution::exec`;
 //! this file only supplies the LoRIF `ChunkKernel`.
 
+use std::sync::Arc;
+
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::{reconstruct_row, TruncatedCurvature};
@@ -22,8 +24,10 @@ use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
 use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct LorifScorer {
-    pub shards: ShardSet,
-    pub curv: TruncatedCurvature,
+    /// `Arc`-shared so a pool of serving workers can score against one
+    /// opened store (and one decoded-chunk cache)
+    pub shards: Arc<ShardSet>,
+    pub curv: Arc<TruncatedCurvature>,
     /// use stage-2 train projections instead of query-time projection
     /// (extension; the paper recomputes at query time)
     pub cached_projections: bool,
@@ -39,10 +43,13 @@ pub struct LorifScorer {
 }
 
 impl LorifScorer {
-    pub fn new(shards: ShardSet, curv: TruncatedCurvature) -> LorifScorer {
+    pub fn new(
+        shards: impl Into<Arc<ShardSet>>,
+        curv: impl Into<Arc<TruncatedCurvature>>,
+    ) -> LorifScorer {
         LorifScorer {
-            shards,
-            curv,
+            shards: shards.into(),
+            curv: curv.into(),
             cached_projections: false,
             prefetch: true,
             chunk_size: 512,
@@ -260,7 +267,7 @@ impl Scorer for LorifScorer {
 
     fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
         let mut kernel = LorifKernel {
-            curv: &self.curv,
+            curv: self.curv.as_ref(),
             cached: self.cached_projections,
             layer_dims: Vec::new(),
             c: 0,

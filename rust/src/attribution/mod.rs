@@ -144,6 +144,15 @@ pub struct ScoreReport {
     pub bytes_skipped: u64,
     /// Summary-grid chunks skipped without a disk read.
     pub chunks_skipped: usize,
+    /// Chunks served from the decoded-chunk cache (`store::cache`); 0
+    /// when the store has no cache attached.
+    pub cache_hits: usize,
+    /// Chunks decoded from disk while a cache was attached.
+    pub cache_misses: usize,
+    /// The portion of `bytes_read` that was served from the cache and
+    /// never hit disk (cache-backed scoring is bit-identical, so
+    /// `bytes_read` stays the logical byte count either way).
+    pub bytes_from_cache: u64,
     /// Sum over shards of the peak score elements each shard's sink
     /// held: `nq * n_train` for the full matrix, `<= nq * k * shards`
     /// for the streaming top-k path (asserted in `tests/prop.rs`).
@@ -162,6 +171,9 @@ impl ScoreReport {
             bytes_read,
             bytes_skipped: 0,
             chunks_skipped: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            bytes_from_cache: 0,
             peak_sink_elems: peak,
         }
     }

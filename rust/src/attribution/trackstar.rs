@@ -14,6 +14,8 @@
 //! and the normalized blocks feed either sink unchanged — the
 //! normalization happens *before* top-k selection, as it must.
 
+use std::sync::Arc;
+
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
@@ -22,8 +24,10 @@ use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
 use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
 
 pub struct TrackStarScorer {
-    pub shards: ShardSet,
-    pub curv: DenseCurvature,
+    /// `Arc`-shared so a pool of serving workers can score against one
+    /// opened store (and one decoded-chunk cache)
+    pub shards: Arc<ShardSet>,
+    pub curv: Arc<DenseCurvature>,
     pub prefetch: bool,
     pub chunk_size: usize,
     /// worker threads for shard scoring (0 = all cores)
@@ -35,10 +39,13 @@ pub struct TrackStarScorer {
 }
 
 impl TrackStarScorer {
-    pub fn new(shards: ShardSet, curv: DenseCurvature) -> TrackStarScorer {
+    pub fn new(
+        shards: impl Into<Arc<ShardSet>>,
+        curv: impl Into<Arc<DenseCurvature>>,
+    ) -> TrackStarScorer {
         TrackStarScorer {
-            shards,
-            curv,
+            shards: shards.into(),
+            curv: curv.into(),
             prefetch: true,
             chunk_size: 512,
             score_threads: 0,
@@ -152,7 +159,7 @@ impl Scorer for TrackStarScorer {
     }
 
     fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
-        let mut kernel = TrackStarKernel { curv: &self.curv, bounds: None };
+        let mut kernel = TrackStarKernel { curv: self.curv.as_ref(), bounds: None };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,

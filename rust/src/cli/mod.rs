@@ -104,6 +104,7 @@ impl Args {
         take!(shards, "shards", get_usize);
         take!(score_threads, "score-threads", get_usize);
         take!(prefetch_depth, "prefetch-depth", get_usize);
+        take!(chunk_cache_mb, "chunk-cache-mb", get_usize);
         take!(summary_chunk, "summary-chunk", get_usize);
         if let Some(s) = self.get("sink") {
             cfg.score_sink = crate::attribution::SinkMode::parse(s)?;
@@ -159,7 +160,7 @@ mod tests {
         let a = parse(&[
             "x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512", "--shards",
             "4", "--score-threads", "2", "--sink", "topk", "--prune", "slack=0.1",
-            "--prefetch-depth", "3", "--summary-chunk", "64",
+            "--prefetch-depth", "3", "--chunk-cache-mb", "128", "--summary-chunk", "64",
         ]);
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
@@ -172,6 +173,7 @@ mod tests {
         assert_eq!(cfg.score_sink, crate::attribution::SinkMode::TopK);
         assert_eq!(cfg.prune, crate::sketch::PruneMode::Slack(0.1));
         assert_eq!(cfg.prefetch_depth, 3);
+        assert_eq!(cfg.chunk_cache_mb, 128);
         assert_eq!(cfg.summary_chunk, 64);
     }
 

@@ -49,6 +49,11 @@ pub struct Config {
     pub prune: PruneMode,
     /// store-reader prefetch queue depth in chunks (`--prefetch-depth`)
     pub prefetch_depth: usize,
+    /// decoded-chunk cache budget in MB for the serving/query path
+    /// (`--chunk-cache-mb`; 0 disables the cache).  Cache-backed scoring
+    /// is bit-identical to cold scoring — the knob trades memory for
+    /// store I/O, never accuracy.
+    pub chunk_cache_mb: usize,
     /// stage-1 summary-sidecar grid in records (0 disables the sidecar,
     /// producing a pre-v3 store with no pruning)
     pub summary_chunk: usize,
@@ -78,6 +83,7 @@ impl Default for Config {
             score_sink: SinkMode::Full,
             prune: PruneMode::Exact,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            chunk_cache_mb: 0,
             summary_chunk: DEFAULT_SUMMARY_CHUNK,
             artifacts_dir: PathBuf::from("artifacts"),
             work_dir: PathBuf::from("work"),
@@ -121,6 +127,7 @@ impl Config {
         num!(shards, "shards", usize);
         num!(score_threads, "score_threads", usize);
         num!(prefetch_depth, "prefetch_depth", usize);
+        num!(chunk_cache_mb, "chunk_cache_mb", usize);
         num!(summary_chunk, "summary_chunk", usize);
         if let Some(s) = v.get("score_sink").and_then(Value::as_str) {
             self.score_sink = SinkMode::parse(s)?;
@@ -197,6 +204,7 @@ impl Config {
             ("score_sink", self.score_sink.name().into()),
             ("prune", self.prune.label().into()),
             ("prefetch_depth", self.prefetch_depth.into()),
+            ("chunk_cache_mb", self.chunk_cache_mb.into()),
             ("summary_chunk", self.summary_chunk.into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
             ("work_dir", self.work_dir.display().to_string().into()),
@@ -224,6 +232,7 @@ mod tests {
         cfg.score_sink = SinkMode::TopK;
         cfg.prune = PruneMode::Slack(0.25);
         cfg.prefetch_depth = 4;
+        cfg.chunk_cache_mb = 256;
         cfg.summary_chunk = 128;
         let v = cfg.to_json();
         let mut back = Config::default();
@@ -236,6 +245,7 @@ mod tests {
         assert_eq!(back.score_sink, SinkMode::TopK);
         assert_eq!(back.prune, PruneMode::Slack(0.25));
         assert_eq!(back.prefetch_depth, 4);
+        assert_eq!(back.chunk_cache_mb, 256);
         assert_eq!(back.summary_chunk, 128);
     }
 

@@ -19,7 +19,9 @@
 //!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
 //!   --shards S --score-threads T --sink full|topk
 //!   --prune on|off|slack=x --prefetch-depth N --summary-chunk N
-//!   --method lorif|logra|graddot|trackstar|repsim|ekfac
+//!   --chunk-cache-mb N --method lorif|logra|graddot|trackstar|repsim|ekfac
+//! Serve flags: --addr A --max-batch N --window-ms N --topk K
+//!   --score-workers N --queue-cap N
 
 use lorif::cli::Args;
 use lorif::config::Config;
@@ -118,13 +120,18 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
     println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
     println!(
         "store layout: {} shard(s), score threads {}, sink {}, prune {} \
-         (summary grid {}), prefetch depth {}",
+         (summary grid {}), prefetch depth {}, chunk cache {}",
         cfg.shards,
         if cfg.score_threads == 0 { "auto".to_string() } else { cfg.score_threads.to_string() },
         cfg.score_sink.name(),
         cfg.prune.label(),
         if cfg.summary_chunk == 0 { "off".to_string() } else { cfg.summary_chunk.to_string() },
-        cfg.prefetch_depth
+        cfg.prefetch_depth,
+        if cfg.chunk_cache_mb == 0 {
+            "off".to_string()
+        } else {
+            format!("{} MB", cfg.chunk_cache_mb)
+        }
     );
     let dense = spec.dense_floats_per_example(cfg.f) * 2;
     let fact = spec.factored_floats_per_example(cfg.f, cfg.c) * 2;
@@ -255,15 +262,17 @@ fn query(cfg: Config, args: &Args) -> anyhow::Result<()> {
     )?;
     let res = score_with_method(&p, method, &params, &train, &queries, k, p.cfg.score_sink)?;
     println!(
-        "{}: {} queries x {} train | load {:.3}s compute {:.3}s pre {:.3}s | \
-         {:.1} MB read, {:.1} MB pruned",
+        "{}: {} queries x {} train | {:.3}s wall (load {:.3}s compute {:.3}s pre {:.3}s \
+         CPU) | {:.1} MB read ({:.1} MB cached), {:.1} MB pruned",
         method.name(),
         queries.len(),
         train.len(),
+        res.latency.wall_s,
         res.latency.load_s,
         res.latency.compute_s,
         res.latency.precondition_s,
         res.latency.bytes_read as f64 / 1e6,
+        res.latency.bytes_from_cache as f64 / 1e6,
         res.latency.bytes_skipped as f64 / 1e6
     );
     let show = args.get_usize("show")?.unwrap_or(3).min(queries.len());
@@ -295,16 +304,25 @@ fn serve(cfg: Config, args: &Args) -> anyhow::Result<()> {
         &train,
         Stage1Options { write_dense: method.needs_dense_store(), ..Default::default() },
     )?;
-    let scorer = app::build_store_scorer(&p, method)?;
+    // a pool of scoring workers sharing one Arc'd store + chunk cache;
+    // batch N+1's gradient extraction overlaps batch N's store pass
+    let workers = args.get_usize("score-workers")?.unwrap_or(2).max(1);
+    let scorers = app::build_store_scorer_pool(&p, method, workers)?;
     let extractor = GradExtractor::new(&p.rt, p.cfg.tier, p.cfg.f, p.cfg.c)?;
     let sc = ServerConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7979").to_string(),
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         window_ms: args.get_u64("window-ms")?.unwrap_or(20),
         topk: args.get_usize("topk")?.unwrap_or(10),
+        queue_cap: args.get_usize("queue-cap")?.unwrap_or(64),
     };
-    let served = lorif::query::serve(&p.rt, &extractor, &lit, scorer, sc)?;
-    println!("served {served} queries");
+    let source =
+        lorif::query::server::XlaGradSource { rt: &p.rt, extractor: &extractor, params: &lit };
+    let summary = lorif::query::serve(source, scorers, sc)?;
+    println!(
+        "served {} queries in {} batches ({} shed, {} failed, {} dropped at shutdown)",
+        summary.served, summary.batches, summary.shed, summary.failed, summary.dropped
+    );
     Ok(())
 }
 
@@ -335,12 +353,12 @@ fn eval_lds(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let scores = res.scores.as_ref().expect("full sink requested");
     let (lds, ci) = actuals.lds(scores);
     println!(
-        "{} LDS = {:.4} ± {:.4} (M={} subsets, latency {:.3}s, index {:.1} MB)",
+        "{} LDS = {:.4} ± {:.4} (M={} subsets, query wall {:.3}s, index {:.1} MB)",
         method.name(),
         lds,
         ci,
         proto.n_subsets,
-        res.latency.total_s,
+        res.latency.wall_s,
         res.latency.bytes_read as f64 / 1e6,
     );
     Ok(())
@@ -365,13 +383,13 @@ fn eval_tailpatch(cfg: Config, args: &Args) -> anyhow::Result<()> {
     let scores = lorif::eval::tail_patch(&p, &params, &train, &queries, &res.topk, proto)?;
     let (mean, ci) = lorif::eval::tail_patch_mean(&scores);
     println!(
-        "{} tail-patch = {:.3} ± {:.3} (k={}, lr={}, latency {:.3}s)",
+        "{} tail-patch = {:.3} ± {:.3} (k={}, lr={}, query wall {:.3}s)",
         method.name(),
         mean,
         ci,
         proto.k,
         proto.lr,
-        res.latency.total_s
+        res.latency.wall_s
     );
     Ok(())
 }
@@ -419,7 +437,10 @@ fn print_help() {
                        --n-train N --n-query N --seed S --method NAME\n\
                        --shards S --score-threads T --sink full|topk\n\
                        --prune on|off|slack=x --prefetch-depth N\n\
-                       --summary-chunk N --work-dir DIR --artifacts-dir DIR\n\
+                       --summary-chunk N --chunk-cache-mb N\n\
+                       --work-dir DIR --artifacts-dir DIR\n\
+         serve flags:  --addr A --max-batch N --window-ms N --topk K\n\
+                       --score-workers N --queue-cap N\n\
          pure-CPU builds support `info`; the rest need --features xla\n\
          see rust/README.md for a walkthrough."
     );

@@ -14,15 +14,29 @@ pub struct LatencyBreakdown {
     pub load_s: f64,
     pub compute_s: f64,
     pub precondition_s: f64,
+    /// Sum of the per-phase times.  Phase times accumulate ACROSS
+    /// parallel shard workers (CPU seconds), so on a multi-threaded pass
+    /// `total_s` exceeds the elapsed time — report `wall_s` for that.
     pub total_s: f64,
+    /// Wall-clock elapsed for the pass, measured at the call site
+    /// (`<= total_s` whenever shards scored in parallel).
+    pub wall_s: f64,
     pub bytes_read: u64,
     /// store bytes the chunk pruner seeked past (`crate::sketch`);
     /// `bytes_read + bytes_skipped` = the full-scan byte count
     pub bytes_skipped: u64,
+    /// chunks served by / decoded past the decoded-chunk cache
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// portion of `bytes_read` served from the cache (never hit disk)
+    pub bytes_from_cache: u64,
 }
 
 impl LatencyBreakdown {
-    pub fn from_report(r: &ScoreReport) -> LatencyBreakdown {
+    /// Build from a report plus the wall-clock time the pass actually
+    /// took (measured around the scorer call; phase times alone cannot
+    /// recover it because they sum across parallel shard workers).
+    pub fn from_report(r: &ScoreReport, wall: std::time::Duration) -> LatencyBreakdown {
         let load = r.timer.get("load").as_secs_f64();
         let compute = r.timer.get("compute").as_secs_f64();
         let pre = r.timer.get("precondition").as_secs_f64()
@@ -32,24 +46,37 @@ impl LatencyBreakdown {
             compute_s: compute,
             precondition_s: pre,
             total_s: load + compute + pre,
+            wall_s: wall.as_secs_f64(),
             bytes_read: r.bytes_read,
             bytes_skipped: r.bytes_skipped,
+            cache_hits: r.cache_hits,
+            cache_misses: r.cache_misses,
+            bytes_from_cache: r.bytes_from_cache,
         }
     }
 
     /// Field-wise aggregation utility for rolling up breakdowns (e.g.
     /// per-shard or per-batch figures in reporting code).  The scorers'
     /// own shard aggregation happens earlier, at the `PhaseTimer` level
-    /// in `query::parallel::merge_scores`.
+    /// in `query::parallel::merge_scores`.  `wall_s` sums too, which is
+    /// correct for SEQUENTIAL passes (batches); concurrent passes need
+    /// their own elapsed measurement.
     pub fn merge(&mut self, other: &LatencyBreakdown) {
         self.load_s += other.load_s;
         self.compute_s += other.compute_s;
         self.precondition_s += other.precondition_s;
         self.total_s += other.total_s;
+        self.wall_s += other.wall_s;
         self.bytes_read += other.bytes_read;
         self.bytes_skipped += other.bytes_skipped;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.bytes_from_cache += other.bytes_from_cache;
     }
 
+    /// Share of the pass's CPU time spent on store I/O (load / total).
+    /// Both operands sum across parallel shard workers, so the ratio is
+    /// a CPU-time share, not a share of elapsed time.
     pub fn io_fraction(&self) -> f64 {
         if self.total_s <= 0.0 {
             0.0
@@ -82,16 +109,18 @@ impl<S: Scorer> QueryEngine<S> {
     }
 
     pub fn run(&mut self, queries: &QueryGrads) -> anyhow::Result<QueryResult> {
+        let t0 = std::time::Instant::now();
         let report = match self.sink {
             SinkMode::Full => self.scorer.score(queries)?,
             SinkMode::TopK => self.scorer.score_sink(queries, SinkSpec::TopK(self.k))?,
         };
-        let latency = LatencyBreakdown::from_report(&report);
+        let latency = LatencyBreakdown::from_report(&report, t0.elapsed());
         log::info!(
-            "{}: scored {} queries x {} train in {:.3}s, {} sink ({})",
+            "{}: scored {} queries x {} train in {:.3}s wall ({:.3}s CPU), {} sink ({})",
             self.scorer.name(),
             report.n_query(),
             report.n_train,
+            latency.wall_s,
             latency.total_s,
             self.sink.name(),
             report.timer.summary()
@@ -122,9 +151,13 @@ mod tests {
             42
         }
         fn score(&mut self, q: &QueryGrads) -> anyhow::Result<ScoreReport> {
+            // FAKE phase times, far larger than the instant the call
+            // actually takes: a parallel shard pass reports summed CPU
+            // seconds the same way (no sleeping here — the wall-clock
+            // regression test depends on real elapsed << phase sum)
             let mut timer = PhaseTimer::new();
-            timer.add("load", std::time::Duration::from_millis(30));
-            timer.add("compute", std::time::Duration::from_millis(10));
+            timer.add("load", std::time::Duration::from_secs(3));
+            timer.add("compute", std::time::Duration::from_secs(1));
             let mut scores = Mat::zeros(q.n_query, 5);
             for i in 0..5 {
                 *scores.at_mut(0, i) = i as f32;
@@ -145,6 +178,25 @@ mod tests {
     }
 
     #[test]
+    fn wall_clock_is_measured_not_summed() {
+        // regression: FakeScorer reports 4s of phase time without
+        // sleeping, as a parallel shard pass does (phase times sum CPU
+        // seconds across workers).  wall_s must reflect the actual
+        // elapsed time, not the phase sum — the 4s margin cannot be
+        // crossed by scheduler noise on a loaded CI machine.
+        let mut e = QueryEngine::new(FakeScorer, 3);
+        let q = QueryGrads { n_query: 1, c: 1, proj_dims: vec![], layers: vec![] };
+        let r = e.run(&q).unwrap();
+        assert!((r.latency.total_s - 4.0).abs() < 1e-9, "phase sum is 4s");
+        assert!(
+            r.latency.wall_s < r.latency.total_s,
+            "wall {} should be far below the 4s phase sum",
+            r.latency.wall_s
+        );
+        assert!(r.latency.wall_s >= 0.0);
+    }
+
+    #[test]
     fn engine_streaming_sink_drops_matrix_keeps_topk() {
         let mut e = QueryEngine::new(FakeScorer, 3);
         e.sink = SinkMode::TopK;
@@ -155,25 +207,32 @@ mod tests {
         assert_eq!(r.latency.bytes_read, 42);
     }
 
-    fn breakdown(load: f64, compute: f64, pre: f64, bytes: u64) -> LatencyBreakdown {
+    fn breakdown(load: f64, compute: f64, pre: f64, wall: f64, bytes: u64) -> LatencyBreakdown {
         LatencyBreakdown {
             load_s: load,
             compute_s: compute,
             precondition_s: pre,
             total_s: load + compute + pre,
+            wall_s: wall,
             bytes_read: bytes,
             bytes_skipped: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            bytes_from_cache: 0,
         }
     }
 
     #[test]
-    fn breakdown_merge_sums_shards() {
-        // three shards' worth of latency aggregates field-wise
-        let mut total = breakdown(0.0, 0.0, 0.0, 0);
+    fn breakdown_merge_sums_batches_and_tracks_wall_separately() {
+        // three sequential batches aggregate field-wise; the wall clock
+        // is its own field — on a parallel pass it is SMALLER than the
+        // phase sum (CPU seconds across workers), and merging keeps the
+        // two separate instead of conflating them
+        let mut total = breakdown(0.0, 0.0, 0.0, 0.0, 0);
         for b in [
-            breakdown(0.3, 0.1, 0.05, 1000),
-            breakdown(0.2, 0.2, 0.0, 2000),
-            breakdown(0.5, 0.1, 0.05, 3000),
+            breakdown(0.3, 0.1, 0.05, 0.2, 1000),
+            breakdown(0.2, 0.2, 0.0, 0.15, 2000),
+            breakdown(0.5, 0.1, 0.05, 0.25, 3000),
         ] {
             total.merge(&b);
         }
@@ -181,16 +240,33 @@ mod tests {
         assert!((total.compute_s - 0.4).abs() < 1e-12);
         assert!((total.precondition_s - 0.1).abs() < 1e-12);
         assert!((total.total_s - 1.5).abs() < 1e-12);
+        assert!((total.wall_s - 0.6).abs() < 1e-12, "wall merges independently");
+        assert!(total.wall_s < total.total_s, "parallel shards: wall < CPU sum");
         assert_eq!(total.bytes_read, 6000);
         assert!((total.io_fraction() - 1.0 / 1.5).abs() < 1e-12);
     }
 
     #[test]
+    fn breakdown_merge_sums_cache_counters() {
+        let mut a = breakdown(0.1, 0.1, 0.0, 0.1, 500);
+        a.cache_hits = 3;
+        a.cache_misses = 1;
+        a.bytes_from_cache = 300;
+        let mut b = breakdown(0.1, 0.1, 0.0, 0.1, 500);
+        b.cache_hits = 2;
+        b.bytes_from_cache = 200;
+        a.merge(&b);
+        assert_eq!(a.cache_hits, 5);
+        assert_eq!(a.cache_misses, 1);
+        assert_eq!(a.bytes_from_cache, 500);
+    }
+
+    #[test]
     fn io_fraction_zero_total_is_zero() {
-        let b = breakdown(0.0, 0.0, 0.0, 0);
+        let b = breakdown(0.0, 0.0, 0.0, 0.0, 0);
         assert_eq!(b.io_fraction(), 0.0);
         // a merge of empty breakdowns stays well-defined
-        let mut m = breakdown(0.0, 0.0, 0.0, 0);
+        let mut m = breakdown(0.0, 0.0, 0.0, 0.0, 0);
         m.merge(&b);
         assert_eq!(m.io_fraction(), 0.0);
     }

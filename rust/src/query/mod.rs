@@ -1,13 +1,14 @@
 //! Query-time serving: the engine (scorer + top-k + latency breakdown),
-//! the parallel shard-scoring machinery, and — with the `xla` feature —
-//! the TCP attribution service with dynamic batching.
+//! the parallel shard-scoring machinery, and the concurrent TCP
+//! attribution service (acceptor -> batcher -> scoring-worker pool with
+//! admission control).  The server is pure CPU + std; only the
+//! XLA-backed gradient source (`server::XlaGradSource`) needs the `xla`
+//! feature.
 
 pub mod engine;
 pub mod parallel;
-#[cfg(feature = "xla")]
 pub mod server;
 
 pub use engine::{LatencyBreakdown, QueryEngine, QueryResult};
 pub use parallel::{map_shards, merge_scores, merge_topk, ShardScores, TopK};
-#[cfg(feature = "xla")]
-pub use server::{serve, ServerConfig};
+pub use server::{serve, GradSource, ServeSummary, Server, ServerConfig};

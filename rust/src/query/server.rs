@@ -1,162 +1,625 @@
-//! Attribution service: TCP line-protocol server with dynamic batching.
+//! Attribution service: concurrent TCP line-protocol server with a
+//! pipelined batcher and a pool of scoring workers.
 //!
 //! The serving-side payoff of LoRIF's design is that one streaming pass
 //! over the factor store answers a whole *batch* of queries (the store
-//! read amortizes across queries).  The batcher therefore collects
-//! concurrent requests for up to `window_ms` (or `max_batch`), extracts
-//! their gradients, and runs one scorer pass.
+//! read amortizes across queries).  On top of that, serving under
+//! concurrent traffic wants three more things, which this module's
+//! acceptor -> batcher -> worker-pool pipeline provides:
+//!
+//!   * **Overlap**: the batcher extracts batch N+1's gradients while
+//!     the scoring workers run batch N's store pass, and the workers
+//!     share one `Arc`-held store (and decoded-chunk cache, see
+//!     `crate::store::cache`), so hot chunks are read and decoded once
+//!     across the whole pool.
+//!   * **Admission control**: a bounded queue between the connection
+//!     handlers and the batcher.  When it is full, the request is shed
+//!     immediately with a structured `overloaded` error instead of
+//!     buffering without bound.
+//!   * **Fault isolation**: a failing batch (bad extraction, scoring
+//!     error) answers exactly its own clients with a structured
+//!     `batch_failed` error and the service keeps running; it never
+//!     tears the server down.
 //!
 //! Protocol (newline-delimited JSON):
-//!   -> {"tokens": [t0, t1, ...]}            (seq_len token ids)
+//!   -> {"tokens": [t0, t1, ...]}            (<= seq_len token ids)
 //!   <- {"topk": [...], "scores": [...], "latency_s": x, "batch": b,
-//!       "bytes_read": n, "bytes_skipped": m}
-//! (`bytes_skipped` counts store bytes the chunk pruner proved
-//! irrelevant to this batch's top-k and never read; see crate::sketch)
-//! Send `{"cmd": "shutdown"}` to stop the server (used by tests).
+//!       "bytes_read": n, "bytes_skipped": m, "cache_hits": h,
+//!       "cache_misses": mm, "bytes_from_cache": c}
+//!   -> {"cmd": "stats"}
+//!   <- {"served": n, "shed": n, "failed": n, "batches": n, ...,
+//!       "queue_depth": d, "cache_hit_rate": r, "workers": w}
+//!   -> {"cmd": "shutdown"}     (stops the server; used by tests)
+//!   <- {"ok": true}
+//! Errors are structured: {"error": msg, "code": c[, "index": i]} with
+//! codes `bad_json`, `bad_request`, `invalid_tokens` (naming the first
+//! offending token index), `overloaded` (load shed), `batch_failed`,
+//! and `shutdown`.
 //!
-//! Serving always runs the scorer through the streaming top-k sink
+//! Tokens are validated up front — non-numeric, non-integer,
+//! out-of-vocab, and over-length requests are rejected with the
+//! offending index rather than silently dropped, truncated, or passed
+//! to the model.
+//!
+//! Serving always runs the scorers through the streaming top-k sink
 //! (`SinkSpec::TopK`): a batch answer holds O(batch * topk) score
 //! elements, never the full (batch, n_train) matrix, so the service
 //! stays flat in memory against stores far larger than RAM.
 //!
-//! XLA executables live on the serving thread; socket threads only parse
-//! requests and forward them over channels.
+//! Gradient extraction stays on the batcher thread (with the XLA
+//! backend, executables live there); socket threads only parse and
+//! validate requests, and the scoring workers only run the CPU store
+//! pass.  The `GradSource` trait is the seam: the CLI plugs in the
+//! XLA-backed [`XlaGradSource`], tests plug in a CPU fake, so the whole
+//! pipeline compiles and is exercised without the `xla` feature.
+//!
+//! Shutdown joins everything it started: the batcher flushes the
+//! in-flight batch, the workers drain the job queue, and the acceptor
+//! (a nonblocking poll loop, so it can never be stuck in `accept`) is
+//! joined — so the listening port is released by the time `run`
+//! returns (regression: the old server leaked the acceptor blocked in
+//! `accept`, keeping the port bound and flaking any test that re-bound
+//! the address).
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::attribution::{QueryGrads, Scorer, SinkSpec};
-use crate::corpus::Dataset;
-use crate::model::spec::SEQ_LEN;
-use crate::runtime::{GradExtractor, Runtime};
 use crate::util::json::{obj, Value};
+
+/// Source of query gradients for the serving pipeline.  `extract` runs
+/// on the batcher thread only (single-threaded, pipelined against the
+/// scoring workers), so implementations may hold thread-bound state
+/// like XLA executables.
+pub trait GradSource {
+    /// Number of valid token ids; requests are validated to `[0, vocab)`.
+    fn vocab(&self) -> usize;
+    /// Fixed context length.  Shorter token rows are zero-padded,
+    /// longer ones are rejected.
+    fn seq_len(&self) -> usize;
+    /// Extract gradients for `n` queries of `seq_len` tokens each
+    /// (`tokens.len() == n * seq_len`).
+    fn extract(&mut self, tokens: &[i32], n: usize) -> anyhow::Result<QueryGrads>;
+}
+
+/// The production source: AOT gradient-extraction graphs on the PJRT
+/// runtime.
+#[cfg(feature = "xla")]
+pub struct XlaGradSource<'a> {
+    pub rt: &'a crate::runtime::Runtime,
+    pub extractor: &'a crate::runtime::GradExtractor,
+    pub params: &'a xla::Literal,
+}
+
+#[cfg(feature = "xla")]
+impl GradSource for XlaGradSource<'_> {
+    fn vocab(&self) -> usize {
+        crate::model::spec::VOCAB
+    }
+
+    fn seq_len(&self) -> usize {
+        crate::model::spec::SEQ_LEN
+    }
+
+    fn extract(&mut self, tokens: &[i32], n: usize) -> anyhow::Result<QueryGrads> {
+        // ad-hoc dataset from the batched query tokens
+        let ds = crate::corpus::Dataset {
+            seq_len: self.seq_len(),
+            tokens: tokens.to_vec(),
+            topics: vec![0; n],
+            templates: vec![vec![]; n],
+        };
+        QueryGrads::extract(self.rt, self.extractor, self.params, &ds)
+    }
+}
 
 pub struct ServerConfig {
     pub addr: String,
     pub max_batch: usize,
     pub window_ms: u64,
     pub topk: usize,
+    /// Admission-control bound: queries queued between the connection
+    /// handlers and the batcher.  A full queue sheds new requests with
+    /// a structured `overloaded` error (`--queue-cap`).
+    pub queue_cap: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7979".into(), max_batch: 16, window_ms: 20, topk: 10 }
+        ServerConfig {
+            addr: "127.0.0.1:7979".into(),
+            max_batch: 16,
+            window_ms: 20,
+            topk: 10,
+            queue_cap: 64,
+        }
+    }
+}
+
+/// What `run` returns after a clean shutdown.  Every admitted request
+/// lands in exactly one of `served`/`failed`/`dropped` (and `shed`
+/// counts the never-admitted), so the counts reconcile against
+/// client-side totals — up to the teardown boundary: a request racing
+/// the final queue drain (admitted in the microseconds between the
+/// handlers observing the shutdown flag and the queue closing) is
+/// still ANSWERED with a structured `shutdown` error, but may not
+/// appear in `dropped`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeSummary {
+    /// queries answered with scores
+    pub served: usize,
+    /// queries shed by admission control (`overloaded` replies)
+    pub shed: usize,
+    /// queries answered with a `batch_failed` error
+    pub failed: usize,
+    /// queries still queued at shutdown, answered with a `shutdown` error
+    pub dropped: usize,
+    /// batches dispatched to the scoring workers
+    pub batches: usize,
+}
+
+#[derive(Default)]
+struct ServerStats {
+    served: AtomicUsize,
+    shed: AtomicUsize,
+    failed: AtomicUsize,
+    dropped: AtomicUsize,
+    batches: AtomicUsize,
+    batch_errors: AtomicUsize,
+    queue_depth: AtomicUsize,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    bytes_from_cache: AtomicU64,
+    bytes_read: AtomicU64,
+}
+
+impl ServerStats {
+    fn snapshot_json(&self, workers: usize) -> Value {
+        let hits = self.cache_hits.load(Ordering::Relaxed);
+        let misses = self.cache_misses.load(Ordering::Relaxed);
+        let rate = if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        };
+        obj([
+            ("served", self.served.load(Ordering::Relaxed).into()),
+            ("shed", self.shed.load(Ordering::Relaxed).into()),
+            ("failed", self.failed.load(Ordering::Relaxed).into()),
+            ("dropped", self.dropped.load(Ordering::Relaxed).into()),
+            ("batches", self.batches.load(Ordering::Relaxed).into()),
+            ("batch_errors", self.batch_errors.load(Ordering::Relaxed).into()),
+            ("queue_depth", self.queue_depth.load(Ordering::Relaxed).into()),
+            ("cache_hits", (hits as usize).into()),
+            ("cache_misses", (misses as usize).into()),
+            ("cache_hit_rate", rate.into()),
+            ("bytes_from_cache", (self.bytes_from_cache.load(Ordering::Relaxed) as usize).into()),
+            ("bytes_read", (self.bytes_read.load(Ordering::Relaxed) as usize).into()),
+            ("workers", workers.into()),
+        ])
     }
 }
 
 enum Incoming {
-    Query { tokens: Vec<i32>, reply: mpsc::Sender<String> },
+    Query {
+        tokens: Vec<i32>,
+        reply: mpsc::Sender<String>,
+        /// when the request was admitted — reply latency covers queue
+        /// wait + batching window + extraction + scoring
+        arrived: Instant,
+    },
     Shutdown,
 }
 
-/// Run the attribution service until a shutdown command arrives.
-/// Returns the number of queries served.
-pub fn serve<S: Scorer>(
-    rt: &Runtime,
-    extractor: &GradExtractor,
-    params: &xla::Literal,
-    mut scorer: S,
+/// One validated batch handed from the batcher to the scoring workers.
+struct Job {
+    queries: QueryGrads,
+    replies: Vec<mpsc::Sender<String>>,
+    /// when the batch's first query was ADMITTED (not when the batcher
+    /// dequeued it): reply latency covers queue wait under overload,
+    /// the batching window, extraction, and scoring
+    t0: Instant,
+}
+
+/// A bound attribution service.  `bind` first, read `local_addr` (tests
+/// bind port 0), then `run` the accept/batch/score pipeline until a
+/// shutdown command arrives.
+pub struct Server {
+    listener: TcpListener,
+    local: SocketAddr,
     cfg: ServerConfig,
-) -> anyhow::Result<usize> {
-    let listener = TcpListener::bind(&cfg.addr)?;
-    let local = listener.local_addr()?;
-    log::info!("attribution service on {local} (batch<= {}, window {}ms)", cfg.max_batch, cfg.window_ms);
-    let (tx, rx) = mpsc::channel::<Incoming>();
+}
 
-    // acceptor thread: one handler thread per connection
-    let acceptor = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            let tx = tx.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx);
-            });
-        }
-    });
+/// Bind + run in one call (the CLI path).
+pub fn serve<G: GradSource>(
+    source: G,
+    scorers: Vec<Box<dyn Scorer + Send>>,
+    cfg: ServerConfig,
+) -> anyhow::Result<ServeSummary> {
+    Server::bind(cfg)?.run(source, scorers)
+}
 
-    let mut served = 0usize;
-    'outer: loop {
-        // block for the first query of a batch
-        let first = match rx.recv() {
-            Ok(Incoming::Query { tokens, reply }) => (tokens, reply),
-            Ok(Incoming::Shutdown) | Err(_) => break 'outer,
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + Duration::from_millis(cfg.window_ms);
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Incoming::Query { tokens, reply }) => batch.push((tokens, reply)),
-                Ok(Incoming::Shutdown) => {
-                    respond_batch(rt, extractor, params, &mut scorer, &cfg, &batch)?;
-                    served += batch.len();
-                    break 'outer;
+impl Server {
+    pub fn bind(cfg: ServerConfig) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local = listener.local_addr()?;
+        Ok(Server { listener, local, cfg })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Run until a shutdown command arrives.  One scoring worker per
+    /// scorer instance; build them over one `Arc<ShardSet>` (see
+    /// `app::build_store_scorer_pool`) so the pool shares the store and
+    /// chunk cache.
+    pub fn run<G: GradSource>(
+        self,
+        mut source: G,
+        scorers: Vec<Box<dyn Scorer + Send>>,
+    ) -> anyhow::Result<ServeSummary> {
+        anyhow::ensure!(!scorers.is_empty(), "serve needs at least one scoring worker");
+        let cfg = &self.cfg;
+        let seq_len = source.seq_len();
+        let vocab = source.vocab();
+        let n_workers = scorers.len();
+        let stats = Arc::new(ServerStats::default());
+        // shared with the (detached) conn handlers too: once set, they
+        // stop admitting queries, which closes most of the window where
+        // a request could race the final queue drain
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        log::info!(
+            "attribution service on {} (batch <= {}, window {}ms, {} workers, queue {})",
+            self.local,
+            cfg.max_batch,
+            cfg.window_ms,
+            n_workers,
+            cfg.queue_cap
+        );
+
+        // conn handlers -> batcher: the bounded admission queue
+        let (tx, rx) = mpsc::sync_channel::<Incoming>(cfg.queue_cap.max(1));
+        // batcher -> workers: depth 1 on top of the workers' own slots,
+        // so extraction of batch N+1 overlaps scoring of batch N
+        // without piling extracted batches up in memory
+        let (jtx, jrx) = mpsc::sync_channel::<Job>(1);
+        let jrx = Arc::new(Mutex::new(jrx));
+        let listener = &self.listener;
+        let local = self.local;
+        let shutting_down = &shutting_down;
+
+        // nonblocking accepts: the acceptor polls with a short sleep, so
+        // shutdown never depends on successfully waking a blocked
+        // accept(), and a persistent accept error (e.g. EMFILE under a
+        // connection burst) backs off instead of busy-spinning
+        self.listener.set_nonblocking(true)?;
+
+        let summary = std::thread::scope(|s| -> anyhow::Result<ServeSummary> {
+            // if anything in this closure PANICS (e.g. inside
+            // GradSource::extract on the batcher path), the guard still
+            // raises the shutdown flag while unwinding — otherwise
+            // thread::scope would block forever joining the acceptor,
+            // swallowing the panic and keeping the port bound
+            let _shutdown_on_unwind = ShutdownGuard(shutting_down.as_ref());
+
+            // acceptor: polls until shutdown; one detached handler
+            // thread per connection (handlers own no server state
+            // beyond channel ends and the stats Arc)
+            let acceptor = {
+                let tx = tx.clone();
+                let stats = Arc::clone(&stats);
+                s.spawn(move || {
+                    while !shutting_down.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                // accepted sockets must block (the
+                                // nonblocking flag is inherited on some
+                                // platforms)
+                                if stream.set_nonblocking(false).is_err() {
+                                    continue;
+                                }
+                                let tx = tx.clone();
+                                let stats = Arc::clone(&stats);
+                                let flag = Arc::clone(shutting_down);
+                                std::thread::spawn(move || {
+                                    let _ = handle_conn(
+                                        stream, tx, stats, flag, seq_len, vocab, n_workers,
+                                    );
+                                });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            Err(e) => {
+                                // EMFILE and friends: back off, keep serving
+                                log::warn!("accept failed: {e}");
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                        }
+                    }
+                })
+            };
+
+            // scoring workers: each owns one scorer; the shared
+            // receiver hands jobs to whichever worker is free
+            let topk = cfg.topk;
+            let workers: Vec<_> = scorers
+                .into_iter()
+                .map(|mut scorer| {
+                    let jrx = Arc::clone(&jrx);
+                    let stats = Arc::clone(&stats);
+                    s.spawn(move || loop {
+                        let job = {
+                            let guard = jrx.lock().expect("job queue lock");
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { break };
+                        score_job(scorer.as_mut(), job, topk, &stats);
+                    })
+                })
+                .collect();
+            // only the workers may keep the job Receiver alive: if every
+            // worker dies (panic), the channel disconnects and the
+            // batcher's send fails instead of blocking forever
+            drop(jrx);
+
+            // batcher (this thread): collect a window, extract, dispatch
+            loop {
+                let (first, t0) = match rx.recv() {
+                    Ok(Incoming::Query { tokens, reply, arrived }) => {
+                        stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                        ((tokens, reply), arrived)
+                    }
+                    Ok(Incoming::Shutdown) | Err(_) => break,
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + Duration::from_millis(cfg.window_ms);
+                let mut shutdown_after = false;
+                while batch.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(Incoming::Query { tokens, reply, .. }) => {
+                            stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                            batch.push((tokens, reply));
+                        }
+                        Ok(Incoming::Shutdown) => {
+                            shutdown_after = true;
+                            break;
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(_) => {
+                            shutdown_after = true;
+                            break;
+                        }
+                    }
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(_) => break 'outer,
+                let workers_alive = dispatch_batch(&mut source, batch, seq_len, t0, &jtx, &stats);
+                if shutdown_after || !workers_alive {
+                    break;
+                }
+            }
+
+            // orderly teardown: drain the workers, then wake + join the
+            // acceptor so the port is free when we return.  The acceptor
+            // is ALWAYS woken before any early error return — a scoped
+            // thread left blocked in accept() would deadlock the scope.
+            drop(jtx);
+            let mut worker_panicked = false;
+            for w in workers {
+                worker_panicked |= w.join().is_err();
+            }
+            shutting_down.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(local); // nudge a pending accept along
+            let acceptor_panicked = acceptor.join().is_err();
+            // drain + count queries still queued at shutdown so the
+            // summary reconciles (their handlers get a structured
+            // `shutdown` error when the reply senders drop)
+            while let Ok(msg) = rx.try_recv() {
+                if let Incoming::Query { .. } = msg {
+                    stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                    stats.dropped.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            drop(rx);
+            anyhow::ensure!(!worker_panicked, "scoring worker panicked");
+            anyhow::ensure!(!acceptor_panicked, "acceptor thread panicked");
+            Ok(ServeSummary {
+                served: stats.served.load(Ordering::SeqCst),
+                shed: stats.shed.load(Ordering::SeqCst),
+                failed: stats.failed.load(Ordering::SeqCst),
+                dropped: stats.dropped.load(Ordering::SeqCst),
+                batches: stats.batches.load(Ordering::SeqCst),
+            })
+        })?;
+        log::info!(
+            "attribution service stopped: {} served, {} shed, {} failed, {} dropped \
+             over {} batches",
+            summary.served,
+            summary.shed,
+            summary.failed,
+            summary.dropped,
+            summary.batches
+        );
+        Ok(summary)
+        // self.listener drops here -> the port is released
+    }
+}
+
+/// Extract a batch's gradients and hand it to the scoring workers.  An
+/// extraction failure answers exactly this batch's clients with a
+/// structured error — one poisoned batch must never kill the service.
+/// Returns `false` when the scoring workers are gone (all panicked),
+/// which tells the batcher to stop instead of serving a dead pipeline.
+fn dispatch_batch<G: GradSource>(
+    source: &mut G,
+    batch: Vec<(Vec<i32>, mpsc::Sender<String>)>,
+    seq_len: usize,
+    t0: Instant,
+    jtx: &mpsc::SyncSender<Job>,
+    stats: &ServerStats,
+) -> bool {
+    if batch.is_empty() {
+        return true;
+    }
+    let n = batch.len();
+    let mut tokens = Vec::with_capacity(n * seq_len);
+    let mut replies = Vec::with_capacity(n);
+    for (t, r) in batch {
+        tokens.extend_from_slice(&t);
+        replies.push(r);
+    }
+    match source.extract(&tokens, n) {
+        Ok(queries) => {
+            stats.batches.fetch_add(1, Ordering::SeqCst);
+            if jtx.send(Job { queries, replies, t0 }).is_err() {
+                // every worker died: the handlers see the dropped reply
+                // senders and answer with `shutdown`; stop the batcher
+                // so run() reports the worker panic
+                stats.dropped.fetch_add(n, Ordering::SeqCst);
+                log::error!("batch of {n} dropped: all scoring workers stopped");
+                return false;
             }
         }
-        respond_batch(rt, extractor, params, &mut scorer, &cfg, &batch)?;
-        served += batch.len();
+        Err(e) => {
+            stats.batch_errors.fetch_add(1, Ordering::SeqCst);
+            stats.failed.fetch_add(n, Ordering::SeqCst);
+            log::warn!("gradient extraction failed for a batch of {n}: {e:#}");
+            let resp =
+                error_json(&format!("gradient extraction failed: {e}"), "batch_failed", None)
+                    .to_string();
+            for r in &replies {
+                let _ = r.send(resp.clone());
+            }
+        }
     }
-    drop(acceptor); // acceptor thread exits when process does; not joined
-    Ok(served)
+    true
 }
 
-fn respond_batch<S: Scorer>(
-    rt: &Runtime,
-    extractor: &GradExtractor,
-    params: &xla::Literal,
-    scorer: &mut S,
-    cfg: &ServerConfig,
-    batch: &[(Vec<i32>, mpsc::Sender<String>)],
-) -> anyhow::Result<()> {
-    if batch.is_empty() {
-        return Ok(());
+/// Score one batch on a worker and answer its clients.  A scoring error
+/// answers this batch's clients with `batch_failed` and the worker
+/// keeps pulling jobs.
+fn score_job(scorer: &mut dyn Scorer, job: Job, k: usize, stats: &ServerStats) {
+    let n = job.replies.len();
+    match scorer.score_sink(&job.queries, SinkSpec::TopK(k)) {
+        Ok(report) => {
+            let topk = report.topk_with_scores(k);
+            let latency = job.t0.elapsed().as_secs_f64();
+            // counters land BEFORE the replies so a client that probes
+            // `stats` right after its answer sees itself counted
+            stats.cache_hits.fetch_add(report.cache_hits as u64, Ordering::SeqCst);
+            stats.cache_misses.fetch_add(report.cache_misses as u64, Ordering::SeqCst);
+            stats.bytes_from_cache.fetch_add(report.bytes_from_cache, Ordering::SeqCst);
+            stats.bytes_read.fetch_add(report.bytes_read, Ordering::SeqCst);
+            stats.served.fetch_add(n, Ordering::SeqCst);
+            for (q, reply) in job.replies.iter().enumerate() {
+                let top = &topk[q];
+                let resp = obj([
+                    ("topk", Value::Arr(top.iter().map(|&(i, _)| i.into()).collect())),
+                    (
+                        "scores",
+                        Value::Arr(top.iter().map(|&(_, s)| (s as f64).into()).collect()),
+                    ),
+                    ("latency_s", latency.into()),
+                    ("batch", n.into()),
+                    ("bytes_read", (report.bytes_read as usize).into()),
+                    ("bytes_skipped", (report.bytes_skipped as usize).into()),
+                    ("cache_hits", report.cache_hits.into()),
+                    ("cache_misses", report.cache_misses.into()),
+                    ("bytes_from_cache", (report.bytes_from_cache as usize).into()),
+                ]);
+                let _ = reply.send(resp.to_string());
+            }
+            log::info!("served batch of {n} in {latency:.3}s");
+        }
+        Err(e) => {
+            stats.batch_errors.fetch_add(1, Ordering::SeqCst);
+            stats.failed.fetch_add(n, Ordering::SeqCst);
+            log::warn!("scoring failed for a batch of {n}: {e:#}");
+            let resp =
+                error_json(&format!("scoring failed: {e}"), "batch_failed", None).to_string();
+            for reply in &job.replies {
+                let _ = reply.send(resp.clone());
+            }
+        }
     }
-    let t0 = Instant::now();
-    // build an ad-hoc dataset from the batched query tokens
-    let mut tokens = Vec::with_capacity(batch.len() * SEQ_LEN);
-    for (t, _) in batch {
-        tokens.extend_from_slice(t);
+}
+
+/// Raises the shutdown flag when dropped — including on panic unwind,
+/// which is what keeps the polling acceptor joinable (see `Server::run`).
+struct ShutdownGuard<'a>(&'a AtomicBool);
+
+impl Drop for ShutdownGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::SeqCst);
     }
-    let ds = Dataset {
-        seq_len: SEQ_LEN,
-        tokens,
-        topics: vec![0; batch.len()],
-        templates: vec![vec![]; batch.len()],
+}
+
+fn error_json(msg: &str, code: &str, index: Option<usize>) -> Value {
+    let mut fields: Vec<(&'static str, Value)> =
+        vec![("error", msg.to_string().into()), ("code", code.to_string().into())];
+    if let Some(i) = index {
+        fields.push(("index", i.into()));
+    }
+    obj(fields)
+}
+
+/// Validate a request's `tokens` field: must be an array of at most
+/// `seq_len` integer ids in `[0, vocab)`.  Returns the zero-padded row
+/// or `(message, offending index)` — no silent drops (`filter_map`),
+/// truncation, or out-of-vocab pass-through.
+fn parse_tokens(
+    v: &Value,
+    seq_len: usize,
+    vocab: usize,
+) -> Result<Vec<i32>, (String, Option<usize>)> {
+    let Some(arr) = v.get("tokens").and_then(Value::as_arr) else {
+        return Err(("missing or non-array 'tokens' field".to_string(), None));
     };
-    let queries = QueryGrads::extract(rt, extractor, params, &ds)?;
-    // streaming top-k sink: the same merged-heap path the engine and
-    // parallel shard scoring use, never the full score matrix
-    let report = scorer.score_sink(&queries, SinkSpec::TopK(cfg.topk))?;
-    let topk = report.topk_with_scores(cfg.topk);
-    let latency = t0.elapsed().as_secs_f64();
-    for (q, (_, reply)) in batch.iter().enumerate() {
-        let top = &topk[q];
-        let resp = obj([
-            ("topk", Value::Arr(top.iter().map(|&(i, _)| i.into()).collect())),
-            (
-                "scores",
-                Value::Arr(top.iter().map(|&(_, s)| (s as f64).into()).collect()),
+    if arr.len() > seq_len {
+        return Err((
+            format!(
+                "too many tokens: got {}, context length is {seq_len} (first excess at index {seq_len})",
+                arr.len()
             ),
-            ("latency_s", latency.into()),
-            ("batch", batch.len().into()),
-            ("bytes_read", (report.bytes_read as usize).into()),
-            ("bytes_skipped", (report.bytes_skipped as usize).into()),
-        ]);
-        let _ = reply.send(resp.to_string());
+            Some(seq_len),
+        ));
     }
-    log::info!("served batch of {} in {:.3}s", batch.len(), latency);
-    Ok(())
+    let mut out = Vec::with_capacity(seq_len);
+    for (i, t) in arr.iter().enumerate() {
+        let Some(x) = t.as_f64() else {
+            return Err((format!("non-numeric token at index {i}"), Some(i)));
+        };
+        if x.fract() != 0.0 || !x.is_finite() {
+            return Err((format!("non-integer token {x} at index {i}"), Some(i)));
+        }
+        if x < 0.0 || x >= vocab as f64 {
+            return Err((
+                format!("token {x} at index {i} outside vocab range [0, {vocab})"),
+                Some(i),
+            ));
+        }
+        out.push(x as i32);
+    }
+    out.resize(seq_len, 0);
+    Ok(out)
 }
 
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>) -> anyhow::Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::SyncSender<Incoming>,
+    stats: Arc<ServerStats>,
+    shutting_down: Arc<AtomicBool>,
+    seq_len: usize,
+    vocab: usize,
+    workers: usize,
+) -> anyhow::Result<()> {
     let peer = stream.peer_addr()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
@@ -169,34 +632,166 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Incoming>) -> anyhow::Result<
         let v = match Value::parse(line.trim()) {
             Ok(v) => v,
             Err(e) => {
-                let _ = writeln!(stream, "{}", obj([("error", format!("{e}").into())]));
+                let _ = writeln!(stream, "{}", error_json(&format!("{e}"), "bad_json", None));
                 continue;
             }
         };
-        if v.get("cmd").and_then(Value::as_str) == Some("shutdown") {
-            let _ = tx.send(Incoming::Shutdown);
-            let _ = writeln!(stream, "{}", obj([("ok", true.into())]));
+        match v.get("cmd").and_then(Value::as_str) {
+            Some("shutdown") => {
+                // ack first: the enqueue below may block briefly behind
+                // a full admission queue while the batcher drains it
+                let _ = writeln!(stream, "{}", obj([("ok", true.into())]));
+                let _ = tx.send(Incoming::Shutdown);
+                return Ok(());
+            }
+            Some("stats") => {
+                // served straight from the handler: stats stay
+                // observable even when the scoring path is saturated
+                let _ = writeln!(stream, "{}", stats.snapshot_json(workers));
+                continue;
+            }
+            Some(other) => {
+                let _ = writeln!(
+                    stream,
+                    "{}",
+                    error_json(&format!("unknown cmd '{other}'"), "bad_request", None)
+                );
+                continue;
+            }
+            None => {}
+        }
+        let tokens = match parse_tokens(&v, seq_len, vocab) {
+            Ok(t) => t,
+            Err((msg, idx)) => {
+                let _ = writeln!(stream, "{}", error_json(&msg, "invalid_tokens", idx));
+                continue;
+            }
+        };
+        if shutting_down.load(Ordering::SeqCst) {
+            // stop admitting during teardown so queries cannot race the
+            // final queue drain and escape the summary accounting
+            let _ = writeln!(stream, "{}", error_json("server stopped", "shutdown", None));
             return Ok(());
         }
-        let Some(toks) = v.get("tokens").and_then(Value::as_arr) else {
-            let _ = writeln!(stream, "{}", obj([("error", "missing tokens".into())]));
-            continue;
-        };
-        let mut tokens: Vec<i32> =
-            toks.iter().filter_map(|t| t.as_f64().map(|x| x as i32)).collect();
-        // pad/truncate to the fixed context length
-        tokens.resize(SEQ_LEN, 0);
         let (rtx, rrx) = mpsc::channel();
-        if tx.send(Incoming::Query { tokens, reply: rtx }).is_err() {
-            return Ok(());
+        // count before sending so the depth never underflows; undone on
+        // the shed path (the batcher decrements accepted entries)
+        stats.queue_depth.fetch_add(1, Ordering::SeqCst);
+        match tx.try_send(Incoming::Query { tokens, reply: rtx, arrived: Instant::now() }) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(_)) => {
+                stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                stats.shed.fetch_add(1, Ordering::SeqCst);
+                let depth = stats.queue_depth.load(Ordering::SeqCst);
+                let resp = obj([
+                    ("error", "server overloaded: admission queue full".into()),
+                    ("code", "overloaded".into()),
+                    ("queue_depth", depth.into()),
+                ]);
+                let _ = writeln!(stream, "{resp}");
+                continue;
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                let _ = writeln!(stream, "{}", error_json("server stopped", "shutdown", None));
+                return Ok(());
+            }
         }
         match rrx.recv() {
             Ok(resp) => writeln!(stream, "{resp}")?,
             Err(_) => {
-                let _ = writeln!(stream, "{}", obj([("error", "server stopped".into())]));
+                let _ = writeln!(
+                    stream,
+                    "{}",
+                    error_json("server stopped before this query was scored", "shutdown", None)
+                );
                 return Ok(());
             }
         }
         log::debug!("answered query from {peer}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens_value(items: &str) -> Value {
+        Value::parse(&format!("{{\"tokens\": {items}}}")).unwrap()
+    }
+
+    #[test]
+    fn parse_tokens_pads_and_validates() {
+        let v = tokens_value("[1, 2, 3]");
+        assert_eq!(parse_tokens(&v, 5, 64).unwrap(), vec![1, 2, 3, 0, 0]);
+        // exactly seq_len is fine
+        let v = tokens_value("[1, 2, 3, 4, 5]");
+        assert_eq!(parse_tokens(&v, 5, 64).unwrap(), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parse_tokens_rejects_overlength_instead_of_truncating() {
+        let v = tokens_value("[1, 2, 3, 4, 5, 6]");
+        let (msg, idx) = parse_tokens(&v, 5, 64).unwrap_err();
+        assert!(msg.contains("too many tokens"), "{msg}");
+        assert_eq!(idx, Some(5), "first excess index");
+    }
+
+    #[test]
+    fn parse_tokens_rejects_non_numeric_naming_index() {
+        let v = tokens_value("[1, \"a\", 3]");
+        let (msg, idx) = parse_tokens(&v, 5, 64).unwrap_err();
+        assert!(msg.contains("non-numeric"), "{msg}");
+        assert_eq!(idx, Some(1));
+    }
+
+    #[test]
+    fn parse_tokens_rejects_fractional_and_out_of_vocab() {
+        let (msg, idx) = parse_tokens(&tokens_value("[1.5]"), 5, 64).unwrap_err();
+        assert!(msg.contains("non-integer"), "{msg}");
+        assert_eq!(idx, Some(0));
+        let (msg, idx) = parse_tokens(&tokens_value("[0, -1]"), 5, 64).unwrap_err();
+        assert!(msg.contains("outside vocab"), "{msg}");
+        assert_eq!(idx, Some(1));
+        let (msg, idx) = parse_tokens(&tokens_value("[0, 64]"), 5, 64).unwrap_err();
+        assert!(msg.contains("outside vocab"), "{msg}");
+        assert_eq!(idx, Some(1));
+        // boundary ids pass
+        assert!(parse_tokens(&tokens_value("[0, 63]"), 5, 64).is_ok());
+    }
+
+    #[test]
+    fn parse_tokens_rejects_missing_field() {
+        let v = Value::parse("{\"cmd\": \"x\"}").unwrap();
+        let (msg, idx) = parse_tokens(&v, 5, 64).unwrap_err();
+        assert!(msg.contains("tokens"), "{msg}");
+        assert_eq!(idx, None);
+    }
+
+    #[test]
+    fn error_json_is_structured() {
+        let e = error_json("bad token", "invalid_tokens", Some(3));
+        assert_eq!(e.get("error").and_then(Value::as_str), Some("bad token"));
+        assert_eq!(e.get("code").and_then(Value::as_str), Some("invalid_tokens"));
+        assert_eq!(e.get("index").and_then(Value::as_usize), Some(3));
+        let e = error_json("oops", "batch_failed", None);
+        assert!(e.get("index").is_none());
+    }
+
+    #[test]
+    fn stats_snapshot_has_the_documented_fields() {
+        let stats = ServerStats::default();
+        stats.served.store(5, Ordering::SeqCst);
+        stats.cache_hits.store(3, Ordering::SeqCst);
+        stats.cache_misses.store(1, Ordering::SeqCst);
+        let v = stats.snapshot_json(2);
+        assert_eq!(v.get("served").and_then(Value::as_usize), Some(5));
+        assert_eq!(v.get("workers").and_then(Value::as_usize), Some(2));
+        assert!((v.get("cache_hit_rate").and_then(Value::as_f64).unwrap() - 0.75).abs() < 1e-9);
+        for key in
+            ["shed", "failed", "dropped", "batches", "batch_errors", "queue_depth", "bytes_read"]
+        {
+            assert!(v.get(key).is_some(), "missing {key}");
+        }
     }
 }

@@ -35,6 +35,15 @@
 //! (`query::parallel::merge_topk`) is unchanged.  NaN scores rank above
 //! +inf under `total_cmp`; chunks containing any non-finite record are
 //! marked non-finite by the summarizer and are never skipped.
+//!
+//! **Interaction with the decoded-chunk cache** (`store::cache`): the
+//! executor evaluates the skip test BEFORE any cache lookup, so a
+//! chunk's residency never changes a pruning decision, a skipped chunk
+//! never populates the cache, and a skip never invalidates an entry.
+//! A pruned pass over a warm cache therefore skips exactly the chunks
+//! a cold pruned pass would, and serves its reads from residency —
+//! both properties are asserted in `tests/prop.rs` and the scorers'
+//! unit tests.
 
 use crate::linalg::Mat;
 

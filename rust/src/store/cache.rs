@@ -1,0 +1,288 @@
+//! Bounded, shard-aware decoded-chunk cache for the serving hot path.
+//!
+//! Query latency is I/O-dominated (Fig 3): every batch the server scores
+//! re-reads and re-decodes the same store chunks.  This cache keeps hot
+//! DECODED chunks (`Arc<Chunk>`, the post-bf16 f32 matrices scorers
+//! consume) resident under a byte budget, keyed by
+//! `(shard, global_start, count)` so shards never alias and a pass with
+//! a different chunk grid never serves a mis-sized chunk.
+//!
+//! Eviction is CLOCK (second-chance): each entry carries a referenced
+//! bit set on hit; the hand sweeps the slot ring, clearing bits until it
+//! finds an unreferenced victim.  One sweep costs O(slots) worst case,
+//! entries are chunk-sized (hundreds of KB), so the lock is never held
+//! long — a single `Mutex` protects the ring and is shared freely across
+//! the scoring workers (`ShardSet` hands an `Arc<ChunkCache>` to every
+//! reader it creates).
+//!
+//! **Exactness**: a hit returns the same decoded bytes a disk read would
+//! produce — `decode_chunk` is deterministic and the key pins the exact
+//! record span — so cache-backed scoring is bit-identical to cold
+//! scoring (property-tested across every kernel x layout in
+//! `tests/prop.rs`).  The pruning path (`crate::sketch`) decides skips
+//! BEFORE any cache lookup: skipped chunks neither populate nor touch
+//! the cache, and a cached chunk never changes a skip decision.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::reader::Chunk;
+
+/// Cache key: (shard index, global start example, example count).
+pub type ChunkKey = (usize, usize, usize);
+
+/// Point-in-time counters (the server's `stats` endpoint and the bench
+/// report read these).
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// decoded bytes currently resident
+    pub bytes: u64,
+    /// configured byte budget
+    pub capacity: u64,
+    /// entries currently resident
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Slot {
+    key: ChunkKey,
+    chunk: Arc<Chunk>,
+    bytes: u64,
+    referenced: bool,
+}
+
+#[derive(Default)]
+struct Ring {
+    map: HashMap<ChunkKey, usize>,
+    slots: Vec<Option<Slot>>,
+    free: Vec<usize>,
+    hand: usize,
+    bytes: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl Ring {
+    /// Evict unreferenced entries (clearing referenced bits as the hand
+    /// passes) until at least `need` bytes fit under `capacity`.
+    fn make_room(&mut self, need: u64, capacity: u64) {
+        let n = self.slots.len();
+        if n == 0 {
+            return;
+        }
+        // two full sweeps always suffice: the first clears every
+        // referenced bit, the second finds a victim
+        let mut scanned = 0usize;
+        while self.bytes + need > capacity && scanned < 2 * n {
+            let i = self.hand;
+            self.hand = (self.hand + 1) % n;
+            scanned += 1;
+            let evict = match &mut self.slots[i] {
+                Some(slot) if slot.referenced => {
+                    slot.referenced = false;
+                    false
+                }
+                Some(_) => true,
+                None => false,
+            };
+            if evict {
+                let slot = self.slots[i].take().expect("victim slot occupied");
+                self.map.remove(&slot.key);
+                self.bytes -= slot.bytes;
+                self.free.push(i);
+                self.evictions += 1;
+            }
+        }
+    }
+
+    fn insert(&mut self, key: ChunkKey, chunk: Arc<Chunk>, bytes: u64, capacity: u64) {
+        if self.map.contains_key(&key) {
+            return; // racing readers decoded the same chunk: keep one
+        }
+        self.make_room(bytes, capacity);
+        if self.bytes + bytes > capacity {
+            return; // everything resident is referenced-hot; don't thrash
+        }
+        let slot = Slot { key, chunk, bytes, referenced: false };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(slot);
+                i
+            }
+            None => {
+                self.slots.push(Some(slot));
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.bytes += bytes;
+        self.insertions += 1;
+    }
+}
+
+/// See the module docs.  Construct via [`ChunkCache::with_capacity`]
+/// (bytes) or [`ChunkCache::from_mb`] (the `--chunk-cache-mb` knob;
+/// 0 disables caching by returning `None`).
+pub struct ChunkCache {
+    capacity: u64,
+    ring: Mutex<Ring>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ChunkCache {
+    pub fn with_capacity(capacity_bytes: u64) -> Arc<ChunkCache> {
+        Arc::new(ChunkCache {
+            capacity: capacity_bytes,
+            ring: Mutex::new(Ring::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// The `--chunk-cache-mb` spelling: `None` when `mb == 0` (off).
+    pub fn from_mb(mb: usize) -> Option<Arc<ChunkCache>> {
+        (mb > 0).then(|| ChunkCache::with_capacity(mb as u64 * 1024 * 1024))
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Look up a decoded chunk; marks the entry recently-used.
+    pub fn get(&self, key: ChunkKey) -> Option<Arc<Chunk>> {
+        let mut ring = self.ring.lock().expect("chunk cache lock");
+        if let Some(&i) = ring.map.get(&key) {
+            let slot = ring.slots[i].as_mut().expect("mapped slot occupied");
+            slot.referenced = true;
+            let chunk = Arc::clone(&slot.chunk);
+            drop(ring);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(chunk)
+        } else {
+            drop(ring);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Offer a freshly-decoded chunk.  Oversized chunks (bigger than the
+    /// whole budget) are not cached; insertion never blocks readers for
+    /// longer than one CLOCK sweep.
+    pub fn insert(&self, key: ChunkKey, chunk: &Arc<Chunk>) {
+        let bytes = chunk.decoded_bytes();
+        if bytes == 0 || bytes > self.capacity {
+            return;
+        }
+        let mut ring = self.ring.lock().expect("chunk cache lock");
+        ring.insert(key, Arc::clone(chunk), bytes, self.capacity);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let ring = self.ring.lock().expect("chunk cache lock");
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: ring.insertions,
+            evictions: ring.evictions,
+            bytes: ring.bytes,
+            capacity: self.capacity,
+            entries: ring.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::store::ChunkLayer;
+    use std::time::Duration;
+
+    fn chunk(start: usize, count: usize, cols: usize) -> Arc<Chunk> {
+        Arc::new(Chunk {
+            start,
+            count,
+            layers: vec![ChunkLayer::Dense { g: Mat::zeros(count, cols) }],
+            io_time: Duration::ZERO,
+        })
+    }
+
+    #[test]
+    fn hit_returns_the_same_decoded_chunk() {
+        let cache = ChunkCache::with_capacity(1 << 20);
+        let c = chunk(0, 4, 8);
+        cache.insert((0, 0, 4), &c);
+        let got = cache.get((0, 0, 4)).expect("hit");
+        assert!(Arc::ptr_eq(&got, &c), "cache must serve the same decoded data");
+        assert!(cache.get((1, 0, 4)).is_none(), "shard is part of the key");
+        assert!(cache.get((0, 0, 5)).is_none(), "count is part of the key");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 2, 1));
+        assert!(s.hit_rate() > 0.3 && s.hit_rate() < 0.4);
+    }
+
+    #[test]
+    fn byte_budget_is_respected_under_eviction() {
+        // each chunk: 4 * 8 floats = 128 B; budget fits exactly 3
+        let cache = ChunkCache::with_capacity(3 * 128);
+        for i in 0..10 {
+            cache.insert((0, i * 4, 4), &chunk(i * 4, 4, 8));
+            let s = cache.stats();
+            assert!(s.bytes <= s.capacity, "over budget: {} > {}", s.bytes, s.capacity);
+        }
+        let s = cache.stats();
+        assert_eq!(s.bytes, 3 * 128);
+        assert_eq!(s.entries, 3);
+        assert_eq!(s.insertions, 10);
+        assert_eq!(s.evictions, 7);
+    }
+
+    #[test]
+    fn clock_gives_hot_entries_a_second_chance() {
+        let cache = ChunkCache::with_capacity(2 * 128);
+        cache.insert((0, 0, 4), &chunk(0, 4, 8));
+        cache.insert((0, 4, 4), &chunk(4, 4, 8));
+        // touch the first entry: its referenced bit protects it from the
+        // next eviction sweep
+        assert!(cache.get((0, 0, 4)).is_some());
+        cache.insert((0, 8, 4), &chunk(8, 4, 8));
+        assert!(cache.get((0, 0, 4)).is_some(), "hot entry evicted");
+        assert!(cache.get((0, 4, 4)).is_none(), "cold entry kept");
+        assert!(cache.get((0, 8, 4)).is_some());
+    }
+
+    #[test]
+    fn oversized_and_duplicate_inserts_are_ignored() {
+        let cache = ChunkCache::with_capacity(100);
+        cache.insert((0, 0, 4), &chunk(0, 4, 8)); // 128 B > 100
+        assert_eq!(cache.stats().insertions, 0);
+        let cache = ChunkCache::with_capacity(1 << 20);
+        cache.insert((0, 0, 4), &chunk(0, 4, 8));
+        cache.insert((0, 0, 4), &chunk(0, 4, 8));
+        assert_eq!(cache.stats().insertions, 1);
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn from_mb_zero_disables() {
+        assert!(ChunkCache::from_mb(0).is_none());
+        let c = ChunkCache::from_mb(2).unwrap();
+        assert_eq!(c.capacity(), 2 * 1024 * 1024);
+    }
+}

@@ -8,11 +8,18 @@
 //! `crate::sketch`).  `ShardSet` opens all of them; the v2 layout feeds
 //! the parallel scoring path in `query::parallel`, the v3 sidecar lets
 //! top-k queries skip chunk reads entirely.
+//!
+//! On top of the readers sits the decoded-chunk cache (`cache`): a
+//! byte-budgeted, shard-aware CLOCK cache of decoded chunks that the
+//! serving path shares across scoring workers so hot store spans are
+//! read and bf16-decoded once, not once per batch.
 
+pub mod cache;
 pub mod format;
 pub mod reader;
 pub mod writer;
 
+pub use cache::{CacheStats, ChunkCache};
 pub use format::{StoreKind, StoreMeta};
 pub use reader::{
     Chunk, ChunkCursor, ChunkLayer, ShardSet, ShardSpan, StoreReader, StreamStats,

@@ -6,15 +6,25 @@
 //! consumes the current one, overlapping I/O and compute — the reader
 //! reports the two times separately, which is what Figure 3 plots.
 //!
+//! Both streaming paths (`StoreReader::stream` and the skip-aware
+//! `ChunkCursor`) consult the optional decoded-chunk cache
+//! (`super::cache`) before touching the disk: a hit serves the resident
+//! `Arc<Chunk>` and seeks past the bytes, a miss decodes and populates.
+//! Hit/miss/byte counters land on `StreamStats`; `bytes_read` stays the
+//! LOGICAL byte count (disk + cache), so the pruning invariant
+//! `bytes_read + bytes_skipped == full-scan bytes` holds with or without
+//! a cache, and `bytes_from_cache` says how much of it never hit disk.
+//!
 //! `ShardSet` opens a whole store (either layout), validates every data
 //! file against the manifest, and hands out per-shard readers for the
 //! parallel query path (`query::parallel`).
 
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use super::cache::ChunkCache;
 use super::format::{StoreKind, StoreMeta};
 use crate::linalg::Mat;
 use crate::sketch::StoreSummaries;
@@ -27,13 +37,29 @@ pub struct Chunk {
     pub count: usize,
     /// per layer: matrices with `count` rows
     pub layers: Vec<ChunkLayer>,
-    /// wall time spent on disk reads + decode for this chunk
+    /// wall time spent decoding this chunk (the streaming passes report
+    /// their full read+decode time separately, via `fetch_chunk`)
     pub io_time: Duration,
 }
 
 pub enum ChunkLayer {
     Dense { g: Mat },
     Factored { u: Mat, v: Mat },
+}
+
+impl Chunk {
+    /// Decoded in-memory footprint (the f32 matrices) — the byte unit
+    /// the chunk cache budgets against.
+    pub fn decoded_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                ChunkLayer::Dense { g } => g.data.len(),
+                ChunkLayer::Factored { u, v } => u.data.len() + v.data.len(),
+            })
+            .sum::<usize>() as u64
+            * 4
+    }
 }
 
 impl ChunkLayer {
@@ -89,6 +115,37 @@ pub(crate) fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> anyhow
     Ok(Chunk { start, count, layers, io_time: t0.elapsed() })
 }
 
+/// Resolve one chunk span for every streaming path (sync, prefetch
+/// thread, skip-aware cursor): serve the decoded chunk from `cache`
+/// (seeking `file` past the on-disk bytes) or read + decode + populate.
+/// Returns `(chunk, from_cache, io)` where `io` is the wall time this
+/// fetch spent on the file + decode (a hit contributes only its seek).
+/// Keeping the protocol in one place means a change to it (seek
+/// behavior, insert policy, accounting) cannot drift between the three
+/// call sites.
+fn fetch_chunk(
+    meta: &StoreMeta,
+    cache: Option<&Arc<ChunkCache>>,
+    key: super::cache::ChunkKey,
+    file: &mut std::fs::File,
+    raw: &mut Vec<u8>,
+    global_start: usize,
+    nbytes: usize,
+) -> anyhow::Result<(Arc<Chunk>, bool, Duration)> {
+    let t0 = Instant::now();
+    if let Some(cached) = cache.and_then(|c| c.get(key)) {
+        file.seek(SeekFrom::Current(nbytes as i64))?;
+        return Ok((cached, true, t0.elapsed()));
+    }
+    raw.resize(nbytes, 0);
+    file.read_exact(raw)?;
+    let chunk = Arc::new(decode_chunk(meta, global_start, raw)?);
+    if let Some(cache) = cache {
+        cache.insert(key, &chunk);
+    }
+    Ok((chunk, false, t0.elapsed()))
+}
+
 /// Reader over one data file holding examples [start, start + count).
 pub struct StoreReader {
     pub meta: StoreMeta,
@@ -99,6 +156,11 @@ pub struct StoreReader {
     pub count: usize,
     /// bounded prefetch queue depth (chunks in flight), >= 1
     pub prefetch_depth: usize,
+    /// shard index within the owning store (0 for a v1 store); part of
+    /// the chunk-cache key so shards never alias
+    pub shard: usize,
+    /// decoded-chunk cache consulted before every disk read
+    pub cache: Option<Arc<ChunkCache>>,
 }
 
 impl StoreReader {
@@ -119,62 +181,90 @@ impl StoreReader {
             meta.total_bytes()
         );
         let count = meta.n_examples;
-        Ok(StoreReader { meta, path, start: 0, count, prefetch_depth: DEFAULT_PREFETCH_DEPTH })
+        Ok(StoreReader {
+            meta,
+            path,
+            start: 0,
+            count,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            shard: 0,
+            cache: None,
+        })
     }
 
     /// Stream this file's examples in chunks of `chunk_size`, calling `f`
     /// for each.  Chunk `start` fields are global example indices.
-    /// Returns (io_time, total_bytes_read).  `io_time` covers read+decode.
+    /// Returns `(io_time, stats)`: `io_time` covers read+decode (cache
+    /// hits contribute only their seek), `stats.bytes_read` is the
+    /// LOGICAL byte count with `stats.bytes_from_cache` of it served
+    /// from the decoded-chunk cache.
     pub fn stream(
         &self,
         chunk_size: usize,
         prefetch: bool,
-        mut f: impl FnMut(Chunk) -> anyhow::Result<()>,
-    ) -> anyhow::Result<(Duration, u64)> {
+        mut f: impl FnMut(&Chunk) -> anyhow::Result<()>,
+    ) -> anyhow::Result<(Duration, StreamStats)> {
         let n = self.count;
+        let mut stats = StreamStats::default();
         if n == 0 {
-            return Ok((Duration::ZERO, 0));
+            return Ok((Duration::ZERO, stats));
         }
         let stride = self.meta.bytes_per_example();
-        let total_bytes = stride as u64 * n as u64;
         let global_off = self.start;
         if !prefetch {
             let mut file = std::fs::File::open(&self.path)?;
             let mut io_total = Duration::ZERO;
             let mut start = 0usize;
-            let mut raw = vec![0u8; chunk_size * stride];
+            let mut raw = Vec::with_capacity(chunk_size * stride);
             while start < n {
                 let count = chunk_size.min(n - start);
-                let t0 = Instant::now();
-                let buf = &mut raw[..count * stride];
-                file.read_exact(buf)?;
-                let chunk = decode_chunk(&self.meta, global_off + start, buf)?;
-                io_total += t0.elapsed();
-                f(chunk)?;
+                let key = (self.shard, global_off + start, count);
+                let (chunk, from_cache, io) = fetch_chunk(
+                    &self.meta,
+                    self.cache.as_ref(),
+                    key,
+                    &mut file,
+                    &mut raw,
+                    global_off + start,
+                    count * stride,
+                )?;
+                io_total += io;
+                stats.note_read((count * stride) as u64, from_cache, self.cache.is_some());
+                f(&chunk)?;
                 start += count;
             }
-            return Ok((io_total, total_bytes));
+            return Ok((io_total, stats));
         }
 
-        // prefetch thread: reads + decodes ahead, bounded queue of
-        // `prefetch_depth` chunks (the `--prefetch-depth` knob)
-        let (tx, rx) =
-            mpsc::sync_channel::<anyhow::Result<Chunk>>(self.prefetch_depth.max(1));
+        // prefetch thread: reads + decodes (or cache-resolves) ahead,
+        // bounded queue of `prefetch_depth` chunks (`--prefetch-depth`);
+        // each message carries the producer-side fetch time and whether
+        // the chunk came from the cache
+        let (tx, rx) = mpsc::sync_channel::<anyhow::Result<(Arc<Chunk>, bool, Duration)>>(
+            self.prefetch_depth.max(1),
+        );
         let meta = self.meta.clone();
         let path = self.path.clone();
+        let cache = self.cache.clone();
+        let shard = self.shard;
         let handle = std::thread::spawn(move || {
             let run = || -> anyhow::Result<()> {
                 let mut file = std::fs::File::open(&path)?;
-                file.seek(SeekFrom::Start(0))?;
                 let mut start = 0usize;
+                let mut raw = Vec::new();
                 while start < n {
                     let count = chunk_size.min(n - start);
-                    let t0 = Instant::now();
-                    let mut raw = vec![0u8; count * stride];
-                    file.read_exact(&mut raw)?;
-                    let mut chunk = decode_chunk(&meta, global_off + start, &raw)?;
-                    chunk.io_time = t0.elapsed();
-                    if tx.send(Ok(chunk)).is_err() {
+                    let key = (shard, global_off + start, count);
+                    let msg = fetch_chunk(
+                        &meta,
+                        cache.as_ref(),
+                        key,
+                        &mut file,
+                        &mut raw,
+                        global_off + start,
+                        count * stride,
+                    )?;
+                    if tx.send(Ok(msg)).is_err() {
                         return Ok(()); // consumer hung up
                     }
                     start += count;
@@ -187,13 +277,14 @@ impl StoreReader {
         });
 
         let mut io_total = Duration::ZERO;
-        for chunk in rx {
-            let chunk = chunk?;
-            io_total += chunk.io_time;
-            f(chunk)?;
+        for msg in rx {
+            let (chunk, from_cache, io) = msg?;
+            io_total += io;
+            stats.note_read((chunk.count * stride) as u64, from_cache, self.cache.is_some());
+            f(&chunk)?;
         }
         handle.join().map_err(|_| anyhow::anyhow!("prefetch thread panicked"))?;
-        Ok((io_total, total_bytes))
+        Ok((io_total, stats))
     }
 
     /// Read a specific contiguous range of GLOBAL example indices, which
@@ -235,13 +326,48 @@ impl StoreReader {
 /// the `--prefetch-depth` config/CLI knob.
 pub const DEFAULT_PREFETCH_DEPTH: usize = 2;
 
-/// Byte/chunk accounting of a gated streaming pass.
+/// Byte/chunk accounting of a streaming pass.  `bytes_read` is the
+/// LOGICAL byte count delivered to the consumer (disk + cache), so
+/// `bytes_read + bytes_skipped` equals the full-scan byte count whether
+/// or not a chunk cache is attached; `bytes_from_cache` is the portion
+/// of `bytes_read` that never hit disk.  Hit/miss counters stay 0 when
+/// no cache is attached.
 #[derive(Clone, Debug, Default)]
 pub struct StreamStats {
     pub bytes_read: u64,
     pub bytes_skipped: u64,
     pub chunks_read: usize,
     pub chunks_skipped: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub bytes_from_cache: u64,
+}
+
+impl StreamStats {
+    /// Account one delivered chunk — the single place the hit/miss
+    /// protocol turns into counters, shared by all three streaming
+    /// paths.
+    fn note_read(&mut self, bytes: u64, from_cache: bool, cache_attached: bool) {
+        self.bytes_read += bytes;
+        self.chunks_read += 1;
+        if from_cache {
+            self.cache_hits += 1;
+            self.bytes_from_cache += bytes;
+        } else if cache_attached {
+            self.cache_misses += 1;
+        }
+    }
+
+    /// Field-wise accumulation (per-shard stats rolled into a pass).
+    pub fn merge(&mut self, other: &StreamStats) {
+        self.bytes_read += other.bytes_read;
+        self.bytes_skipped += other.bytes_skipped;
+        self.chunks_read += other.chunks_read;
+        self.chunks_skipped += other.chunks_skipped;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.bytes_from_cache += other.bytes_from_cache;
+    }
 }
 
 /// See [`StoreReader::chunks`].
@@ -266,19 +392,28 @@ impl ChunkCursor<'_> {
         Some((self.reader.start + self.pos, count))
     }
 
-    /// Read + decode the next chunk and advance.
-    pub fn read(&mut self) -> anyhow::Result<Chunk> {
+    /// Read + decode the next chunk and advance.  Consults the reader's
+    /// decoded-chunk cache first (a hit seeks past the bytes); the skip
+    /// path never touches the cache, so pruning decisions neither
+    /// populate nor invalidate entries.
+    pub fn read(&mut self) -> anyhow::Result<Arc<Chunk>> {
         let (start, count) =
             self.peek().ok_or_else(|| anyhow::anyhow!("cursor past end of file"))?;
         let stride = self.reader.meta.bytes_per_example();
-        let t0 = Instant::now();
-        self.raw.resize(count * stride, 0);
-        self.file.read_exact(&mut self.raw)?;
-        let chunk = decode_chunk(&self.reader.meta, start, &self.raw)?;
-        self.io += t0.elapsed();
+        let key = (self.reader.shard, start, count);
+        let (chunk, from_cache, io) = fetch_chunk(
+            &self.reader.meta,
+            self.reader.cache.as_ref(),
+            key,
+            &mut self.file,
+            &mut self.raw,
+            start,
+            count * stride,
+        )?;
+        self.io += io;
         self.pos += count;
-        self.stats.bytes_read += (count * stride) as u64;
-        self.stats.chunks_read += 1;
+        self.stats
+            .note_read((count * stride) as u64, from_cache, self.reader.cache.is_some());
         Ok(chunk)
     }
 
@@ -322,6 +457,9 @@ pub struct ShardSet {
     summaries: Option<StoreSummaries>,
     /// prefetch queue depth handed to every per-shard reader
     pub prefetch_depth: usize,
+    /// decoded-chunk cache handed to every per-shard reader; shared
+    /// across scorer instances via `Arc` on the serving path
+    cache: Option<Arc<ChunkCache>>,
 }
 
 impl ShardSet {
@@ -375,7 +513,13 @@ impl ShardSet {
                 Some(sums)
             }
         };
-        Ok(ShardSet { meta, spans, summaries, prefetch_depth: DEFAULT_PREFETCH_DEPTH })
+        Ok(ShardSet {
+            meta,
+            spans,
+            summaries,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            cache: None,
+        })
     }
 
     pub fn n_shards(&self) -> usize {
@@ -391,6 +535,18 @@ impl ShardSet {
         self.summaries.as_ref()
     }
 
+    /// Attach (or detach) a decoded-chunk cache; every reader handed out
+    /// afterwards consults it before hitting disk.  Call before sharing
+    /// the set behind `Arc`.
+    pub fn set_cache(&mut self, cache: Option<Arc<ChunkCache>>) {
+        self.cache = cache;
+    }
+
+    /// The attached decoded-chunk cache, if any.
+    pub fn cache(&self) -> Option<&Arc<ChunkCache>> {
+        self.cache.as_ref()
+    }
+
     /// A reader over shard `i`, reporting global example indices.
     pub fn reader(&self, i: usize) -> StoreReader {
         let s = &self.spans[i];
@@ -400,6 +556,8 @@ impl ShardSet {
             start: s.start,
             count: s.count,
             prefetch_depth: self.prefetch_depth,
+            shard: i,
+            cache: self.cache.clone(),
         }
     }
 
@@ -410,16 +568,16 @@ impl ShardSet {
         &self,
         chunk_size: usize,
         prefetch: bool,
-        mut f: impl FnMut(Chunk) -> anyhow::Result<()>,
-    ) -> anyhow::Result<(Duration, u64)> {
+        mut f: impl FnMut(&Chunk) -> anyhow::Result<()>,
+    ) -> anyhow::Result<(Duration, StreamStats)> {
         let mut io = Duration::ZERO;
-        let mut bytes = 0u64;
+        let mut stats = StreamStats::default();
         for i in 0..self.spans.len() {
-            let (d, b) = self.reader(i).stream(chunk_size, prefetch, &mut f)?;
+            let (d, s) = self.reader(i).stream(chunk_size, prefetch, &mut f)?;
             io += d;
-            bytes += b;
+            stats.merge(&s);
         }
-        Ok((io, bytes))
+        Ok((io, stats))
     }
 
     /// Read a contiguous global range, stitching across shard boundaries.
@@ -811,5 +969,98 @@ mod tests {
         })
         .unwrap();
         assert_eq!(seen, 8);
+    }
+
+    fn collect_stream(set: &ShardSet, chunk: usize, prefetch: bool) -> (Vec<f32>, StreamStats) {
+        let mut rows: Vec<f32> = Vec::new();
+        let (_, stats) = set
+            .stream(chunk, prefetch, |c| {
+                rows.extend(c.layers[0].dense().data.iter());
+                Ok(())
+            })
+            .unwrap();
+        (rows, stats)
+    }
+
+    #[test]
+    fn cached_stream_is_bit_identical_and_counts_hits() {
+        let (base, _) = write_store(StoreKind::Dense, 23, 1);
+        let cold_set = ShardSet::open(&base.path).unwrap();
+        let (cold, cold_stats) = collect_stream(&cold_set, 7, false);
+        assert_eq!(cold_stats.cache_hits + cold_stats.cache_misses, 0, "no cache attached");
+
+        let mut warm_set = ShardSet::open(&base.path).unwrap();
+        warm_set.set_cache(Some(crate::store::ChunkCache::with_capacity(1 << 20)));
+        for (pass, prefetch) in [(0, false), (1, true), (2, false)] {
+            let (rows, stats) = collect_stream(&warm_set, 7, prefetch);
+            assert_eq!(rows, cold, "pass {pass} diverged from the cold stream");
+            assert_eq!(stats.bytes_read, cold_stats.bytes_read, "logical bytes stable");
+            if pass == 0 {
+                assert_eq!(stats.cache_misses, 4, "first pass decodes every chunk");
+                assert_eq!(stats.cache_hits, 0);
+            } else {
+                assert_eq!(stats.cache_hits, 4, "warm pass {pass} must hit");
+                assert_eq!(stats.cache_misses, 0);
+                assert_eq!(stats.bytes_from_cache, stats.bytes_read);
+            }
+        }
+        // a different chunk grid never aliases cached spans
+        let (rows, stats) = collect_stream(&warm_set, 5, false);
+        assert_eq!(rows, cold);
+        assert_eq!(stats.cache_hits, 0, "grid change must miss, not alias");
+    }
+
+    #[test]
+    fn sharded_cache_keys_do_not_alias_across_shards() {
+        let (base, _) = write_sharded(StoreKind::Dense, 20, 1, 3, "cache_shards");
+        let mut set = ShardSet::open(&base.path).unwrap();
+        set.set_cache(Some(crate::store::ChunkCache::with_capacity(1 << 20)));
+        let cold = collect_stream(&ShardSet::open(&base.path).unwrap(), 4, false).0;
+        let (first, s1) = collect_stream(&set, 4, false);
+        let (second, s2) = collect_stream(&set, 4, false);
+        assert_eq!(first, cold);
+        assert_eq!(second, cold);
+        assert_eq!(s1.cache_hits, 0);
+        assert_eq!(s2.cache_hits, s1.cache_misses, "every decoded chunk re-served");
+        assert_eq!(s2.bytes_from_cache, s2.bytes_read);
+    }
+
+    #[test]
+    fn cursor_skip_never_populates_the_cache() {
+        let (base, _) = write_store(StoreKind::Dense, 20, 1);
+        let mut set = ShardSet::open(&base.path).unwrap();
+        let cache = crate::store::ChunkCache::with_capacity(1 << 20);
+        set.set_cache(Some(cache.clone()));
+        let r = set.reader(0);
+        let mut cur = r.chunks(5).unwrap();
+        // skip, read, skip, read over the 4 chunks
+        let mut i = 0;
+        while cur.peek().is_some() {
+            if i % 2 == 0 {
+                cur.skip().unwrap();
+            } else {
+                cur.read().unwrap();
+            }
+            i += 1;
+        }
+        assert_eq!(cur.stats().chunks_skipped, 2);
+        assert_eq!(cur.stats().cache_misses, 2);
+        assert_eq!(cache.stats().insertions, 2, "skipped chunks must not populate");
+        // a second identical walk hits on exactly the read chunks
+        let mut cur = r.chunks(5).unwrap();
+        let mut i = 0;
+        let mut read_data: Vec<f32> = Vec::new();
+        while cur.peek().is_some() {
+            if i % 2 == 0 {
+                cur.skip().unwrap();
+            } else {
+                read_data.extend(cur.read().unwrap().layers[0].dense().data.iter());
+            }
+            i += 1;
+        }
+        assert_eq!(cur.stats().cache_hits, 2);
+        assert_eq!(cur.stats().cache_misses, 0);
+        let want = r.read_range(5, 5).unwrap();
+        assert_eq!(&read_data[..want.layers[0].dense().data.len()], &want.layers[0].dense().data[..]);
     }
 }

@@ -1056,3 +1056,227 @@ fn prop_exact_pruning_equals_full_scan_all_kernels() {
         );
     }
 }
+
+#[test]
+fn prop_cached_scoring_bit_identical_all_kernels() {
+    // For every store kernel (graddot, logra, trackstar on dense
+    // stores; lorif on factored stores) and both layouts (v1
+    // monolithic, v2 sharded — both carrying the default v3 summary
+    // sidecar): scoring through a decoded-chunk cache is BIT-IDENTICAL
+    // to cold scoring, on the full-matrix pass (cold, populate, and
+    // cache-hit passes compared element-for-element) and on the pruned
+    // streaming top-k pass.  Prune skips never populate the cache
+    // (insertions == the pass's misses), warm passes hit, and a
+    // tiny-budget cache (evictions / oversized chunks) changes nothing
+    // but the counters.
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::logra::LograScorer;
+    use lorif::attribution::lorif::LorifScorer;
+    use lorif::attribution::trackstar::TrackStarScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::curvature::{DenseCurvature, TruncatedCurvature};
+    use lorif::sketch::PruneMode;
+    use lorif::store::ChunkCache;
+    use std::sync::Arc;
+
+    for_each_case("cache-bit-identical", |seed, rng| {
+        let n_layers = 1 + rng.below(2);
+        let dims: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (3 + rng.below(3), 3 + rng.below(3))).collect();
+        let c = 1 + rng.below(2);
+        let n = 12 + rng.below(25);
+        let nq = 1 + rng.below(3);
+        let shards = 2 + rng.below(3);
+        let k = 1 + rng.below(6);
+        let data = random_layers(n, &dims, c, rng);
+
+        // identical records in every (kind, layout) combination
+        let mut bases = std::collections::BTreeMap::new();
+        for kind in [StoreKind::Dense, StoreKind::Factored] {
+            let meta = StoreMeta {
+                kind,
+                tier: "small".into(),
+                f: 4,
+                c,
+                layers: dims.clone(),
+                n_examples: 0,
+                shards: None,
+                summary_chunk: None,
+            };
+            let v1 = prop_tmp_base(&format!("cache_{}_v1", kind.as_str()), seed);
+            let mut w = StoreWriter::create(&v1, meta.clone()).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "cb1"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+            let v2 = prop_tmp_base(&format!("cache_{}_v2", kind.as_str()), seed);
+            let mut w = ShardedWriter::create(&v2, meta, shards, n).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "cb2"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+            bases.insert(kind.as_str(), (v1, v2));
+        }
+        let (dense_v1, dense_v2) = bases["dense"].clone();
+        let (fact_v1, fact_v2) = bases["factored"].clone();
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::random_normal(nq, d1 * d2, 1.0, rng),
+                u: Mat::random_normal(nq, d1 * c, 1.0, rng),
+                v: Mat::random_normal(nq, d2 * c, 1.0, rng),
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c, proj_dims: dims.clone(), layers: qlayers };
+
+        let chunk_size = 1 + rng.below(n);
+        // three cache budgets: generous (everything resident), tiny
+        // (evictions or oversized-skip), and none (the cold reference)
+        let tiny_budget = 1 + rng.below(4096) as u64 * 64;
+
+        let check = |name: &str,
+                     cold: &mut dyn Scorer,
+                     warm: &mut dyn Scorer,
+                     tiny: &mut dyn Scorer,
+                     cache: &Arc<ChunkCache>| {
+            let reference = cold.score(&qg).unwrap();
+            assert_eq!(
+                reference.cache_hits + reference.cache_misses,
+                0,
+                "seed {seed}: {name} cold pass touched a cache"
+            );
+            // pass 1 populates, pass 2 hits; both bit-identical to cold
+            for pass in 0..2 {
+                let got = warm.score(&qg).unwrap();
+                assert_eq!(
+                    got.scores().data,
+                    reference.scores().data,
+                    "seed {seed}: {name} cached pass {pass} diverged"
+                );
+                assert_eq!(got.bytes_read, reference.bytes_read, "seed {seed}: {name}");
+                if pass == 0 {
+                    assert_eq!(got.cache_hits, 0, "seed {seed}: {name} fresh cache hit");
+                    assert!(got.cache_misses > 0, "seed {seed}: {name} no misses counted");
+                } else {
+                    assert!(got.cache_hits > 0, "seed {seed}: {name} warm pass missed");
+                    assert_eq!(got.cache_misses, 0, "seed {seed}: {name}");
+                    assert_eq!(
+                        got.bytes_from_cache, got.bytes_read,
+                        "seed {seed}: {name} warm pass read disk"
+                    );
+                }
+            }
+            // tiny budget: correctness unaffected
+            let got = tiny.score(&qg).unwrap();
+            assert_eq!(
+                got.scores().data,
+                reference.scores().data,
+                "seed {seed}: {name} tiny-budget cache diverged"
+            );
+
+            // pruned streaming top-k through the cache (fresh grid keys:
+            // the summary grid differs from chunk_size in general).
+            // First pruned pass: skips must NOT populate the cache —
+            // insertions grow by exactly this pass's misses.
+            let ins_before = cache.stats().insertions;
+            let p1 = warm.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+            let ins_after = cache.stats().insertions;
+            assert_eq!(
+                p1.topk(k),
+                reference.topk(k),
+                "seed {seed}: {name} pruned+cached top-k diverged"
+            );
+            assert_eq!(
+                p1.bytes_read + p1.bytes_skipped,
+                reference.bytes_read,
+                "seed {seed}: {name} byte accounting broke under the cache"
+            );
+            assert!(
+                ins_after - ins_before <= p1.cache_misses as u64,
+                "seed {seed}: {name} cache grew by {} for {} misses — a skipped \
+                 chunk was inserted",
+                ins_after - ins_before,
+                p1.cache_misses
+            );
+            // second pruned pass: same skips, reads served hot
+            let p2 = warm.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+            assert_eq!(p2.topk(k), p1.topk(k), "seed {seed}: {name}");
+            assert_eq!(p2.chunks_skipped, p1.chunks_skipped, "seed {seed}: {name}");
+            assert_eq!(
+                p2.cache_hits, p1.cache_hits + p1.cache_misses,
+                "seed {seed}: {name} second pruned pass not fully hot"
+            );
+        };
+
+        for (layout, dense_base, fact_base) in
+            [("v1", &dense_v1, &fact_v1), ("v2", &dense_v2, &fact_v2)]
+        {
+            let open_cold = |b: &std::path::PathBuf| ShardSet::open(b).unwrap();
+            let open_cached = |b: &std::path::PathBuf, cap: u64| {
+                let mut s = ShardSet::open(b).unwrap();
+                let cache = ChunkCache::with_capacity(cap);
+                s.set_cache(Some(cache.clone()));
+                (s, cache)
+            };
+
+            {
+                let (warm_set, cache) = open_cached(dense_base, 32 << 20);
+                let (tiny_set, _) = open_cached(dense_base, tiny_budget);
+                let mut cold = GradDotScorer::new(open_cold(dense_base));
+                let mut warm = GradDotScorer::new(warm_set);
+                let mut tiny = GradDotScorer::new(tiny_set);
+                for s in [&mut cold, &mut warm, &mut tiny] {
+                    s.chunk_size = chunk_size;
+                    s.score_threads = 1;
+                }
+                check(&format!("graddot/{layout}"), &mut cold, &mut warm, &mut tiny, &cache);
+            }
+            {
+                let curv = DenseCurvature::build(&open_cold(dense_base), 0.1).unwrap();
+                let curv = Arc::new(curv);
+                let (warm_set, cache) = open_cached(dense_base, 32 << 20);
+                let (tiny_set, _) = open_cached(dense_base, tiny_budget);
+                let mut cold = LograScorer::new(open_cold(dense_base), Arc::clone(&curv));
+                let mut warm = LograScorer::new(warm_set, Arc::clone(&curv));
+                let mut tiny = LograScorer::new(tiny_set, Arc::clone(&curv));
+                for s in [&mut cold, &mut warm, &mut tiny] {
+                    s.chunk_size = chunk_size;
+                    s.score_threads = 1;
+                }
+                check(&format!("logra/{layout}"), &mut cold, &mut warm, &mut tiny, &cache);
+            }
+            {
+                let curv = DenseCurvature::build(&open_cold(dense_base), 0.1).unwrap();
+                let curv = Arc::new(curv);
+                let (warm_set, cache) = open_cached(dense_base, 32 << 20);
+                let (tiny_set, _) = open_cached(dense_base, tiny_budget);
+                let mut cold = TrackStarScorer::new(open_cold(dense_base), Arc::clone(&curv));
+                let mut warm = TrackStarScorer::new(warm_set, Arc::clone(&curv));
+                let mut tiny = TrackStarScorer::new(tiny_set, Arc::clone(&curv));
+                for s in [&mut cold, &mut warm, &mut tiny] {
+                    s.chunk_size = chunk_size;
+                    s.score_threads = 1;
+                }
+                check(&format!("trackstar/{layout}"), &mut cold, &mut warm, &mut tiny, &cache);
+            }
+            {
+                let curv =
+                    TruncatedCurvature::build(&open_cold(fact_base), 3, 3, 2, 0.1, seed)
+                        .unwrap();
+                let curv = Arc::new(curv);
+                let (warm_set, cache) = open_cached(fact_base, 32 << 20);
+                let (tiny_set, _) = open_cached(fact_base, tiny_budget);
+                let mut cold = LorifScorer::new(open_cold(fact_base), Arc::clone(&curv));
+                let mut warm = LorifScorer::new(warm_set, Arc::clone(&curv));
+                let mut tiny = LorifScorer::new(tiny_set, Arc::clone(&curv));
+                for s in [&mut cold, &mut warm, &mut tiny] {
+                    s.chunk_size = chunk_size;
+                    s.score_threads = 1;
+                    s.prune = PruneMode::Exact;
+                }
+                check(&format!("lorif/{layout}"), &mut cold, &mut warm, &mut tiny, &cache);
+            }
+        }
+    });
+}

@@ -1,0 +1,452 @@
+//! Concurrent-serving integration tests: the acceptor -> batcher ->
+//! scoring-worker pipeline under simultaneous clients, poisoned
+//! batches, malformed requests, overload bursts, and shutdown races.
+//!
+//! The invariants every scenario asserts:
+//!   * EVERY request gets exactly one reply — scores, a structured
+//!     error (`invalid_tokens` / `batch_failed` / `shutdown`), or an
+//!     `overloaded` shed; nobody hangs and nobody's error kills the
+//!     service for anyone else.
+//!   * `run` returns after a shutdown command and the listening port is
+//!     RELEASED (regression: the old server leaked the acceptor thread
+//!     blocked in `accept`, keeping the address bound).
+//!
+//! `LORIF_SERVER_CLIENTS` raises the concurrent-client count (the CI
+//! nightly hardening job runs a larger burst than the per-PR default).
+//!
+//! The gradient source is a deterministic CPU fake (the `GradSource`
+//! seam the XLA extractor also plugs into), so the whole pipeline runs
+//! without the `xla` feature; scoring is real — GradDot over a real
+//! on-disk store, streamed through the shared executor with a shared
+//! decoded-chunk cache.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lorif::attribution::{QueryGrads, QueryLayer, Scorer};
+use lorif::linalg::Mat;
+use lorif::query::server::{GradSource, ServeSummary, Server, ServerConfig};
+use lorif::runtime::{ExtractBatch, LayerGrads};
+use lorif::store::{ChunkCache, ShardSet, StoreKind, StoreMeta, StoreWriter};
+use lorif::util::json::Value;
+use lorif::util::prng::Rng;
+
+const VOCAB: usize = 64;
+const SEQ_LEN: usize = 8;
+const DIMS: [(usize, usize); 2] = [(2, 3), (2, 2)];
+/// a VALID token id the fake source refuses to extract (poisons its batch)
+const POISON: i32 = 13;
+
+fn stress_clients() -> usize {
+    std::env::var("LORIF_SERVER_CLIENTS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(6)
+}
+
+/// Deterministic CPU gradient source; `delay` simulates extraction cost
+/// so batches overlap, `POISON` anywhere in the batch fails extraction.
+struct FakeSource {
+    delay: Duration,
+}
+
+impl GradSource for FakeSource {
+    fn vocab(&self) -> usize {
+        VOCAB
+    }
+
+    fn seq_len(&self) -> usize {
+        SEQ_LEN
+    }
+
+    fn extract(&mut self, tokens: &[i32], n: usize) -> anyhow::Result<QueryGrads> {
+        assert_eq!(tokens.len(), n * SEQ_LEN, "batcher must hand fixed-length rows");
+        if tokens.contains(&POISON) {
+            anyhow::bail!("poisoned batch (token {POISON})");
+        }
+        std::thread::sleep(self.delay);
+        let layers = DIMS
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(n, d1 * d2);
+                for q in 0..n {
+                    let row = &tokens[q * SEQ_LEN..(q + 1) * SEQ_LEN];
+                    for (j, x) in g.row_mut(q).iter_mut().enumerate() {
+                        *x = row[j % SEQ_LEN] as f32 + 0.125 * j as f32;
+                    }
+                }
+                QueryLayer { g, u: Mat::zeros(n, d1), v: Mat::zeros(n, d2) }
+            })
+            .collect();
+        Ok(QueryGrads { n_query: n, c: 1, proj_dims: DIMS.to_vec(), layers })
+    }
+}
+
+fn write_test_store(name: &str, n: usize) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("lorif_server_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join(name);
+    let meta = StoreMeta {
+        kind: StoreKind::Dense,
+        tier: "small".into(),
+        f: 4,
+        c: 1,
+        layers: DIMS.to_vec(),
+        n_examples: 0,
+        shards: None,
+        summary_chunk: None,
+    };
+    let mut rng = Rng::new(7);
+    let layers: Vec<LayerGrads> = DIMS
+        .iter()
+        .map(|&(d1, d2)| LayerGrads {
+            g: Mat::random_normal(n, d1 * d2, 1.0, &mut rng),
+            u: Mat::zeros(n, d1),
+            v: Mat::zeros(n, d2),
+        })
+        .collect();
+    let mut w = StoreWriter::create(&base, meta).unwrap();
+    w.append(&ExtractBatch { losses: vec![0.0; n], layers, valid: n }).unwrap();
+    w.finalize().unwrap();
+    base
+}
+
+/// A pool of GradDot workers sharing ONE store + decoded-chunk cache.
+fn scorer_pool(base: &std::path::Path, workers: usize) -> Vec<Box<dyn Scorer + Send>> {
+    let mut set = ShardSet::open(base).unwrap();
+    set.set_cache(Some(ChunkCache::with_capacity(8 << 20)));
+    let set = Arc::new(set);
+    (0..workers)
+        .map(|_| {
+            let mut s = lorif::attribution::graddot::GradDotScorer::new(Arc::clone(&set));
+            s.chunk_size = 16;
+            s.score_threads = 1;
+            Box::new(s) as Box<dyn Scorer + Send>
+        })
+        .collect()
+}
+
+struct Running {
+    addr: SocketAddr,
+    handle: std::thread::JoinHandle<anyhow::Result<ServeSummary>>,
+}
+
+fn start_server(name: &str, cfg_mut: impl FnOnce(&mut ServerConfig), delay_ms: u64) -> Running {
+    let base = write_test_store(name, 40);
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        window_ms: 5,
+        topk: 3,
+        queue_cap: 32,
+    };
+    cfg_mut(&mut cfg);
+    let scorers = scorer_pool(&base, 2);
+    let server = Server::bind(cfg).unwrap();
+    let addr = server.local_addr();
+    let source = FakeSource { delay: Duration::from_millis(delay_ms) };
+    let handle = std::thread::spawn(move || server.run(source, scorers));
+    Running { addr, handle }
+}
+
+/// One request, one reply line, parsed.
+fn request(addr: SocketAddr, line: &str) -> Value {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    writeln!(s, "{line}").unwrap();
+    let mut r = BufReader::new(s);
+    let mut resp = String::new();
+    r.read_line(&mut resp).expect("read reply");
+    assert!(!resp.trim().is_empty(), "server must always reply (got EOF)");
+    Value::parse(resp.trim()).expect("reply is JSON")
+}
+
+fn shutdown(addr: SocketAddr) {
+    let v = request(addr, "{\"cmd\": \"shutdown\"}");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+}
+
+fn finish(r: Running) -> ServeSummary {
+    shutdown(r.addr);
+    let summary = r.handle.join().expect("server thread").expect("serve result");
+    // the port must be RELEASED once run() returns (regression: leaked
+    // acceptor kept it bound)
+    let rebind = TcpListener::bind(r.addr);
+    assert!(rebind.is_ok(), "port still bound after shutdown: {rebind:?}");
+    summary
+}
+
+fn code_of(v: &Value) -> Option<&str> {
+    v.get("code").and_then(Value::as_str)
+}
+
+#[test]
+fn concurrent_clients_mixed_valid_invalid_all_answered() {
+    // queue >= the stress client count so no VALID request is shed even
+    // in the hardening job's larger burst
+    let r = start_server("concurrent_mixed", |c| c.queue_cap = stress_clients().max(64), 2);
+    let addr = r.addr;
+    let clients = stress_clients();
+    let per_client = 4usize;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut valid = 0usize;
+                let mut invalid = 0usize;
+                for i in 0..per_client {
+                    // interleave valid requests with each malformed kind
+                    let (line, expect_valid): (String, bool) = match (c + i) % 4 {
+                        0 => (format!("{{\"tokens\": [{}, {}]}}", c % 12, i % 8), true),
+                        1 => ("{\"tokens\": [1, \"x\", 3]}".into(), false),
+                        2 => ("{\"tokens\": [1, 9999]}".into(), false),
+                        _ => {
+                            // over-length: seq_len + 1 ids
+                            let toks: Vec<String> =
+                                (0..SEQ_LEN + 1).map(|t| (t % 8).to_string()).collect();
+                            (format!("{{\"tokens\": [{}]}}", toks.join(", ")), false)
+                        }
+                    };
+                    let v = request(addr, &line);
+                    if expect_valid {
+                        assert!(v.get("topk").is_some(), "valid request got {v}");
+                        assert!(v.get("cache_hits").is_some(), "reply carries cache stats");
+                        valid += 1;
+                    } else {
+                        assert_eq!(code_of(&v), Some("invalid_tokens"), "got {v}");
+                        assert!(
+                            v.get("index").and_then(Value::as_usize).is_some(),
+                            "invalid-token error must name the offending index: {v}"
+                        );
+                        invalid += 1;
+                    }
+                }
+                (valid, invalid)
+            })
+        })
+        .collect();
+    let mut total_valid = 0usize;
+    for h in handles {
+        let (v, i) = h.join().unwrap();
+        total_valid += v;
+        assert_eq!(v + i, per_client, "every request answered");
+    }
+    let summary = finish(r);
+    assert_eq!(summary.served, total_valid, "every valid request scored");
+    assert_eq!(summary.failed, 0);
+}
+
+#[test]
+fn poisoned_batch_answers_its_clients_and_serving_continues() {
+    // max_batch 1 + window 0 isolates each request in its own batch
+    let r = start_server(
+        "poison",
+        |c| {
+            c.max_batch = 1;
+            c.window_ms = 0;
+        },
+        0,
+    );
+    let addr = r.addr;
+    let ok = request(addr, "{\"tokens\": [1, 2, 3]}");
+    assert!(ok.get("topk").is_some(), "{ok}");
+
+    // POISON is a VALID token id, so it passes validation and fails in
+    // gradient extraction — the batch's clients get a structured error...
+    let bad = request(addr, &format!("{{\"tokens\": [{POISON}]}}"));
+    assert_eq!(code_of(&bad), Some("batch_failed"), "{bad}");
+    assert!(
+        bad.get("error").and_then(Value::as_str).unwrap().contains("poisoned"),
+        "{bad}"
+    );
+
+    // ...and the server keeps serving (regression: `?` in the batch
+    // loop used to tear the whole service down)
+    let again = request(addr, "{\"tokens\": [4, 5]}");
+    assert!(again.get("topk").is_some(), "server died after a bad batch: {again}");
+
+    let summary = finish(r);
+    assert_eq!(summary.served, 2);
+    assert_eq!(summary.failed, 1);
+}
+
+#[test]
+fn overload_burst_sheds_with_structured_error_and_answers_everyone() {
+    let r = start_server(
+        "overload",
+        |c| {
+            c.max_batch = 1;
+            c.window_ms = 0;
+            c.queue_cap = 1;
+        },
+        40, // slow extraction: the queue backs up immediately
+    );
+    let addr = r.addr;
+    let clients = stress_clients().max(10);
+    let barrier = Arc::new(std::sync::Barrier::new(clients));
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait(); // fire simultaneously
+                let v = request(addr, &format!("{{\"tokens\": [{}]}}", c % 8));
+                if v.get("topk").is_some() {
+                    (1usize, 0usize)
+                } else {
+                    assert_eq!(code_of(&v), Some("overloaded"), "unexpected reply {v}");
+                    assert!(v.get("queue_depth").is_some(), "{v}");
+                    (0, 1)
+                }
+            })
+        })
+        .collect();
+    let (mut served, mut shed) = (0usize, 0usize);
+    for h in handles {
+        let (s, d) = h.join().unwrap();
+        served += s;
+        shed += d;
+    }
+    assert_eq!(served + shed, clients, "every client answered exactly once");
+    assert!(served >= 1, "at least the first request is served");
+    assert!(shed >= 1, "a {clients}-client burst into a 1-slot queue must shed");
+    let summary = finish(r);
+    assert_eq!(summary.served, served);
+    assert_eq!(summary.shed, shed);
+}
+
+#[test]
+fn shutdown_mid_batch_still_answers_the_pending_client() {
+    // long window: the first query's batch is still open when shutdown
+    // arrives on another connection
+    let r = start_server(
+        "mid_batch",
+        |c| {
+            c.max_batch = 8;
+            c.window_ms = 300;
+        },
+        0,
+    );
+    let addr = r.addr;
+    let client = std::thread::spawn(move || request(addr, "{\"tokens\": [3, 1]}"));
+    std::thread::sleep(Duration::from_millis(50)); // let the batch open
+    let summary = finish(r);
+    let v = client.join().unwrap();
+    // the in-flight batch is flushed on shutdown: the client gets real
+    // scores (or, in a tight race, a structured shutdown error — never
+    // a hang, never a bare EOF)
+    assert!(
+        v.get("topk").is_some() || code_of(&v) == Some("shutdown"),
+        "pending client got {v}"
+    );
+    if v.get("topk").is_some() {
+        assert_eq!(summary.served, 1);
+    }
+}
+
+#[test]
+fn stats_endpoint_reports_counters_and_cache_hit_rate() {
+    let r = start_server(
+        "stats",
+        |c| {
+            c.max_batch = 1;
+            c.window_ms = 0;
+        },
+        0,
+    );
+    let addr = r.addr;
+    // two identical queries: the second batch's store pass hits the
+    // shared decoded-chunk cache
+    for _ in 0..2 {
+        let v = request(addr, "{\"tokens\": [2, 4, 6]}");
+        assert!(v.get("topk").is_some(), "{v}");
+    }
+    let stats = request(addr, "{\"cmd\": \"stats\"}");
+    assert_eq!(stats.get("served").and_then(Value::as_usize), Some(2));
+    assert_eq!(stats.get("shed").and_then(Value::as_usize), Some(0));
+    assert_eq!(stats.get("workers").and_then(Value::as_usize), Some(2));
+    assert!(stats.get("queue_depth").and_then(Value::as_usize).is_some());
+    let hits = stats.get("cache_hits").and_then(Value::as_usize).unwrap();
+    let misses = stats.get("cache_misses").and_then(Value::as_usize).unwrap();
+    assert!(misses >= 1, "first pass decodes from disk: {stats}");
+    assert!(hits >= 1, "second pass must hit the shared chunk cache: {stats}");
+    let rate = stats.get("cache_hit_rate").and_then(Value::as_f64).unwrap();
+    assert!(rate > 0.0 && rate < 1.0, "hit rate {rate}");
+
+    // unknown commands and garbage lines get structured errors too
+    let v = request(addr, "{\"cmd\": \"selfdestruct\"}");
+    assert_eq!(code_of(&v), Some("bad_request"));
+    let v = request(addr, "this is not json");
+    assert_eq!(code_of(&v), Some("bad_json"));
+    finish(r);
+}
+
+#[test]
+fn cached_and_cold_replies_are_bit_identical() {
+    // same request against a cache-backed pool and a cold pool: the
+    // top-k indices and scores in the reply must match exactly
+    let base = write_test_store("bitident", 40);
+    let run_once = |with_cache: bool, name: &str| -> (Vec<usize>, Vec<f64>) {
+        let mut set = ShardSet::open(&base).unwrap();
+        if with_cache {
+            set.set_cache(Some(ChunkCache::with_capacity(8 << 20)));
+        }
+        let set = Arc::new(set);
+        let scorers: Vec<Box<dyn Scorer + Send>> = (0..2)
+            .map(|_| {
+                let mut s =
+                    lorif::attribution::graddot::GradDotScorer::new(Arc::clone(&set));
+                s.chunk_size = 16;
+                s.score_threads = 1;
+                Box::new(s) as Box<dyn Scorer + Send>
+            })
+            .collect();
+        let server = Server::bind(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 1,
+            window_ms: 0,
+            topk: 5,
+            queue_cap: 8,
+        })
+        .unwrap();
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || {
+            server.run(FakeSource { delay: Duration::ZERO }, scorers)
+        });
+        // twice with a cache: the second reply is served FROM the cache
+        let mut last = None;
+        for _ in 0..2 {
+            last = Some(request(addr, "{\"tokens\": [5, 2, 7, 1]}"));
+        }
+        let v = last.unwrap();
+        assert!(v.get("topk").is_some(), "{name}: {v}");
+        let topk: Vec<usize> = v
+            .get("topk")
+            .and_then(Value::as_arr)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_usize().unwrap())
+            .collect();
+        let scores: Vec<f64> = v
+            .get("scores")
+            .and_then(Value::as_arr)
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        if with_cache {
+            assert!(
+                v.get("cache_hits").and_then(Value::as_usize).unwrap() >= 1,
+                "{name}: warm reply must be cache-served: {v}"
+            );
+        }
+        let v = request(addr, "{\"cmd\": \"shutdown\"}");
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+        handle.join().unwrap().unwrap();
+        (topk, scores)
+    };
+    let (cold_topk, cold_scores) = run_once(false, "cold");
+    let (warm_topk, warm_scores) = run_once(true, "cached");
+    assert_eq!(warm_topk, cold_topk, "cache changed the top-k");
+    assert_eq!(warm_scores, cold_scores, "cache changed the scores");
+}
