@@ -127,6 +127,7 @@ fn main() -> anyhow::Result<()> {
                 n_examples: 0,
                 shards: None,
                 summary_chunk: None,
+                codec: lorif::store::CodecId::Bf16,
             };
             let mut w = StoreWriter::create(&base, meta)?;
             let lg: Vec<LayerGrads> = layers
@@ -186,6 +187,7 @@ fn main() -> anyhow::Result<()> {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: lorif::store::CodecId::Bf16,
         };
         let lg: Vec<LayerGrads> = layers
             .iter()
@@ -327,6 +329,7 @@ fn main() -> anyhow::Result<()> {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: lorif::store::CodecId::Bf16,
         };
         let mut w = StoreWriter::create(&prune_base, meta)?;
         w.set_summary_chunk(grid)?;
@@ -396,6 +399,122 @@ fn main() -> anyhow::Result<()> {
             t_noprune / t_prune
         );
 
+        // store codecs: the same sharded corpus recoded under every
+        // codec — on-disk bytes (and the shrink vs bf16), streaming
+        // decode throughput, end-to-end pruned top-k latency, per-codec
+        // pruned ≡ full-scan exactness, and top-k overlap@k against the
+        // bf16 reference.  All persisted to perf_smoke.json.
+        let mut codec_fields: Vec<(&'static str, lorif::util::json::Value)> = Vec::new();
+        {
+            use lorif::sketch::PruneMode as CodecPrune;
+            use lorif::store::{recode_store, CodecId, RecodeOptions};
+            let mut ref_topk: Option<Vec<Vec<usize>>> = None;
+            let mut bf16_bytes = 0u64;
+            for codec in CodecId::ALL {
+                let base = if codec == CodecId::Bf16 {
+                    shard_base.clone()
+                } else {
+                    let dst = dir.join(format!("codec_{}", codec.as_str()));
+                    recode_store(
+                        &shard_base,
+                        &dst,
+                        &RecodeOptions { codec: Some(codec), ..Default::default() },
+                    )?;
+                    dst
+                };
+                let set = ShardSet::open(&base)?;
+                let disk_bytes = set.meta.total_bytes();
+                let t_decode = time(3, || {
+                    let mut acc = 0.0f32;
+                    set.stream(512, false, |chunk| {
+                        acc += chunk.layers[0].dense().data[0];
+                        Ok(())
+                    })
+                    .unwrap();
+                    std::hint::black_box(acc);
+                });
+                let mut scorer = GradDotScorer::new(ShardSet::open(&base)?);
+                scorer.score_threads = 0;
+                scorer.prune = CodecPrune::Exact;
+                let pruned = scorer.score_sink(&qg, SinkSpec::TopK(k))?;
+                scorer.prune = CodecPrune::Off;
+                let full = scorer.score_sink(&qg, SinkSpec::TopK(k))?;
+                assert_eq!(
+                    pruned.topk(k),
+                    full.topk(k),
+                    "codec {}: pruned top-k diverged from its own full scan",
+                    codec.as_str()
+                );
+                scorer.prune = CodecPrune::Exact;
+                let t_topk = time(3, || {
+                    let _ = scorer.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+                });
+                let topk = full.topk(k);
+                let overlap = match &ref_topk {
+                    None => {
+                        bf16_bytes = disk_bytes;
+                        ref_topk = Some(topk);
+                        1.0
+                    }
+                    Some(reference) => {
+                        let inter: usize = reference
+                            .iter()
+                            .zip(&topk)
+                            .map(|(a, b)| a.iter().filter(|i| b.contains(i)).count())
+                            .sum();
+                        inter as f64 / (nq * k) as f64
+                    }
+                };
+                println!(
+                    "codec {}: {:.2} MB on disk ({:.2}x smaller than bf16) | decode \
+                     {:.2} GB/s ({:.1} ms) | pruned top-k {:.1} ms | overlap@{k} {:.3}",
+                    codec.as_str(),
+                    disk_bytes as f64 / 1e6,
+                    bf16_bytes as f64 / disk_bytes.max(1) as f64,
+                    disk_bytes as f64 / t_decode / 1e9,
+                    t_decode * 1e3,
+                    t_topk * 1e3,
+                    overlap
+                );
+                let (f_bytes, f_dec, f_topk, f_overlap) = match codec {
+                    CodecId::Bf16 => (
+                        "codec_bf16_bytes",
+                        "codec_bf16_decode_ms",
+                        "codec_bf16_topk_ms",
+                        "codec_bf16_overlap_at_k",
+                    ),
+                    CodecId::Int8 => (
+                        "codec_int8_bytes",
+                        "codec_int8_decode_ms",
+                        "codec_int8_topk_ms",
+                        "codec_int8_overlap_at_k",
+                    ),
+                    CodecId::Int4 => (
+                        "codec_int4_bytes",
+                        "codec_int4_decode_ms",
+                        "codec_int4_topk_ms",
+                        "codec_int4_overlap_at_k",
+                    ),
+                };
+                codec_fields.push((f_bytes, (disk_bytes as usize).into()));
+                codec_fields.push((f_dec, (t_decode * 1e3).into()));
+                codec_fields.push((f_topk, (t_topk * 1e3).into()));
+                codec_fields.push((f_overlap, overlap.into()));
+                if codec == CodecId::Int8 {
+                    codec_fields.push((
+                        "codec_int8_shrink_vs_bf16",
+                        (bf16_bytes as f64 / disk_bytes.max(1) as f64).into(),
+                    ));
+                }
+                if codec == CodecId::Int4 {
+                    codec_fields.push((
+                        "codec_int4_shrink_vs_bf16",
+                        (bf16_bytes as f64 / disk_bytes.max(1) as f64).into(),
+                    ));
+                }
+            }
+        }
+
         // persist the sink + pruning comparison for the CI perf-smoke
         // artifact
         let mut fields: Vec<(&'static str, lorif::util::json::Value)> = vec![
@@ -415,6 +534,7 @@ fn main() -> anyhow::Result<()> {
             ("cache_warm_hits", warm_hits.into()),
         ];
         fields.extend(bytes_by_k);
+        fields.extend(codec_fields);
         let doc = lorif::util::json::obj(fields);
         let out_dir = std::path::PathBuf::from("work/bench/results");
         std::fs::create_dir_all(&out_dir)?;

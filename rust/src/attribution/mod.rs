@@ -403,6 +403,7 @@ pub(crate) mod testutil {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: crate::store::CodecId::Bf16,
         };
         let layers: Vec<LayerGrads> = layer_dims
             .iter()

@@ -259,6 +259,7 @@ mod tests {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: crate::store::CodecId::Bf16,
         };
         let mut w = StoreWriter::create(&base, meta).unwrap();
         w.set_summary_chunk(chunk).unwrap();

@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 use crate::attribution::SinkMode;
 use crate::model::spec::Tier;
 use crate::sketch::{PruneMode, DEFAULT_SUMMARY_CHUNK};
-use crate::store::DEFAULT_PREFETCH_DEPTH;
+use crate::store::{CodecId, DEFAULT_PREFETCH_DEPTH};
 use crate::util::json::Value;
 
 #[derive(Clone, Debug)]
@@ -57,6 +57,12 @@ pub struct Config {
     /// stage-1 summary-sidecar grid in records (0 disables the sidecar,
     /// producing a pre-v3 store with no pruning)
     pub summary_chunk: usize,
+    /// record codec for the stage-1 stores (`--codec bf16|int8|int4`);
+    /// non-default codecs write the v4 layout.  Changing it rebuilds
+    /// the store, same as `--shards` (`store_layout_current`), and
+    /// existing stores can migrate without re-extraction via
+    /// `lorif store recode`.
+    pub codec: CodecId,
 
     pub artifacts_dir: PathBuf,
     pub work_dir: PathBuf,
@@ -85,6 +91,7 @@ impl Default for Config {
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             chunk_cache_mb: 0,
             summary_chunk: DEFAULT_SUMMARY_CHUNK,
+            codec: CodecId::Bf16,
             artifacts_dir: PathBuf::from("artifacts"),
             work_dir: PathBuf::from("work"),
         }
@@ -134,6 +141,9 @@ impl Config {
         }
         if let Some(s) = v.get("prune").and_then(Value::as_str) {
             self.prune = PruneMode::parse(s)?;
+        }
+        if let Some(s) = v.get("codec").and_then(Value::as_str) {
+            self.codec = CodecId::parse(s)?;
         }
         if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
             self.artifacts_dir = PathBuf::from(s);
@@ -206,6 +216,7 @@ impl Config {
             ("prefetch_depth", self.prefetch_depth.into()),
             ("chunk_cache_mb", self.chunk_cache_mb.into()),
             ("summary_chunk", self.summary_chunk.into()),
+            ("codec", self.codec.as_str().into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
             ("work_dir", self.work_dir.display().to_string().into()),
         ])
@@ -234,6 +245,7 @@ mod tests {
         cfg.prefetch_depth = 4;
         cfg.chunk_cache_mb = 256;
         cfg.summary_chunk = 128;
+        cfg.codec = CodecId::Int8;
         let v = cfg.to_json();
         let mut back = Config::default();
         back.apply_json(&v).unwrap();
@@ -247,6 +259,17 @@ mod tests {
         assert_eq!(back.prefetch_depth, 4);
         assert_eq!(back.chunk_cache_mb, 256);
         assert_eq!(back.summary_chunk, 128);
+        assert_eq!(back.codec, CodecId::Int8);
+    }
+
+    #[test]
+    fn rejects_unknown_codec() {
+        let mut cfg = Config::default();
+        let v = crate::util::json::obj([("codec", "zip".into())]);
+        assert!(cfg.apply_json(&v).is_err());
+        let v = crate::util::json::obj([("codec", "int4".into())]);
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.codec, CodecId::Int4);
     }
 
     #[test]

@@ -132,6 +132,7 @@ mod tests {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: crate::store::CodecId::Bf16,
         };
         let mut rng = Rng::new(7);
         let gs: Vec<Mat> =

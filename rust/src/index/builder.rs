@@ -196,8 +196,9 @@ impl Pipeline {
 
     /// Does an existing store at `base` already have the layout the
     /// current config asks for?  A missing or unreadable manifest, a
-    /// v1/v2 (or shard-count) mismatch, or a summary-sidecar grid that
-    /// disagrees with `--summary-chunk` means stage 1 must rewrite it —
+    /// v1/v2 (or shard-count) mismatch, a summary-sidecar grid that
+    /// disagrees with `--summary-chunk`, or a record codec that
+    /// disagrees with `--codec` means stage 1 must rewrite it —
     /// otherwise those flags would be silently ignored by the cache.
     fn store_layout_current(&self, base: &PathBuf) -> bool {
         let Ok(meta) = StoreMeta::load(base) else { return false };
@@ -212,15 +213,18 @@ impl Pipeline {
         let want_summaries =
             (self.cfg.summary_chunk > 0).then_some(self.cfg.summary_chunk);
         let summaries_current = meta.summary_chunk == want_summaries;
-        if !shards_current || !summaries_current {
+        let codec_current = meta.codec == self.cfg.codec;
+        if !shards_current || !summaries_current || !codec_current {
             log::info!(
-                "stage1: store {} does not match --shards {} / --summary-chunk {}; rebuilding",
+                "stage1: store {} does not match --shards {} / --summary-chunk {} / \
+                 --codec {}; rebuilding",
                 base.display(),
                 self.cfg.shards,
-                self.cfg.summary_chunk
+                self.cfg.summary_chunk,
+                self.cfg.codec.as_str()
             );
         }
-        shards_current && summaries_current
+        shards_current && summaries_current && codec_current
     }
 
     /// Stage 1: extract per-example gradients for the whole training set
@@ -257,6 +261,7 @@ impl Pipeline {
                         n_examples: 0,
                         shards: None,
                         summary_chunk: None,
+                        codec: self.cfg.codec,
                     },
                     self.cfg.shards,
                     train.len(),
@@ -277,6 +282,7 @@ impl Pipeline {
                         n_examples: 0,
                         shards: None,
                         summary_chunk: None,
+                        codec: self.cfg.codec,
                     },
                     self.cfg.shards,
                     train.len(),

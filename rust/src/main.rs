@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   info            print config, tier dims, storage estimates
+//!   store inspect   print a store's manifest/layout/codec/byte report
+//!   store recode    migrate a store between codecs/layouts (streaming)
 //!   gen-corpus      generate + persist the synthetic topic corpus [xla]
 //!   train           train the base model (cached checkpoint)      [xla]
 //!   build-index     stage 1 (gradient stores) + stage 2 (curvature) [xla]
@@ -13,18 +15,24 @@
 //!
 //! Subcommands marked [xla] drive the PJRT runtime and need the `xla`
 //! cargo feature plus `make artifacts`; the default pure-CPU build
-//! reports a clear error for them.
+//! reports a clear error for them.  The `store` subcommands are pure
+//! CPU: any store on disk can be inspected or migrated without
+//! artifacts or re-extraction.
 //!
 //! Common flags: --tier small|medium|large --f N --c N --r N
 //!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
 //!   --shards S --score-threads T --sink full|topk
 //!   --prune on|off|slack=x --prefetch-depth N --summary-chunk N
-//!   --chunk-cache-mb N --method lorif|logra|graddot|trackstar|repsim|ekfac
+//!   --chunk-cache-mb N --codec bf16|int8|int4
+//!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 //! Serve flags: --addr A --max-batch N --window-ms N --topk K
 //!   --score-workers N --queue-cap N
+//! Store recode flags: --out BASE --codec bf16|int8|int4 [--shards S]
+//!   [--summary-chunk G] [--chunk-size N]
 
 use lorif::cli::Args;
 use lorif::config::Config;
+use lorif::store::Codec;
 
 #[cfg(feature = "xla")]
 use lorif::app::{self, Method};
@@ -67,6 +75,7 @@ fn run() -> anyhow::Result<()> {
 
     match args.subcommand.as_str() {
         "info" => info(&cfg),
+        "store" => store_cmd(&args),
         #[cfg(feature = "xla")]
         "gen-corpus" => {
             let p = Pipeline::new(cfg)?;
@@ -108,6 +117,69 @@ fn run() -> anyhow::Result<()> {
     }
 }
 
+/// `lorif store <inspect|recode>` — pure-CPU store maintenance that
+/// works on any v1–v4 store without the xla feature or artifacts.
+fn store_cmd(args: &Args) -> anyhow::Result<()> {
+    use lorif::store::{inspect_store, recode_store, CodecId, RecodeOptions};
+    let verb = args.positional.first().map(String::as_str).unwrap_or("");
+    match verb {
+        "inspect" => {
+            let base = args.positional.get(1).ok_or_else(|| {
+                anyhow::anyhow!("usage: lorif store inspect <base>")
+            })?;
+            print!("{}", inspect_store(std::path::Path::new(base))?);
+            Ok(())
+        }
+        "recode" => {
+            let base = args.positional.get(1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: lorif store recode <base> --out <base> --codec bf16|int8|int4"
+                )
+            })?;
+            let out = args.get("out").ok_or_else(|| {
+                anyhow::anyhow!("store recode needs --out <base> (in-place is refused)")
+            })?;
+            // every omitted knob (codec included) keeps the source
+            // store's setting
+            let mut opts = RecodeOptions {
+                codec: args.get("codec").map(CodecId::parse).transpose()?,
+                shards: args.get_usize("shards")?,
+                summary_chunk: args.get_usize("summary-chunk")?,
+                ..Default::default()
+            };
+            if let Some(cs) = args.get_usize("chunk-size")? {
+                opts.chunk_size = cs;
+            }
+            let rep = recode_store(
+                std::path::Path::new(base),
+                std::path::Path::new(out),
+                &opts,
+            )?;
+            println!(
+                "recoded {} {} examples: {} -> {} (v{}) in {:.2}s",
+                rep.kind.as_str(),
+                rep.n_examples,
+                rep.src_codec.as_str(),
+                rep.dst_codec.as_str(),
+                rep.version,
+                rep.wall.as_secs_f64()
+            );
+            println!(
+                "on disk: {:.3} MB -> {:.3} MB ({:.2}x smaller) | shards {} | summary grid {}",
+                rep.src_bytes as f64 / 1e6,
+                rep.dst_bytes as f64 / 1e6,
+                rep.shrink(),
+                rep.shards.as_ref().map_or(1, Vec::len),
+                rep.summary_chunk
+                    .map_or("off".to_string(), |g| g.to_string())
+            );
+            print!("{}", inspect_store(std::path::Path::new(out))?);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown store subcommand '{other}' (inspect|recode)"),
+    }
+}
+
 fn info(cfg: &Config) -> anyhow::Result<()> {
     let spec = cfg.tier.spec();
     println!(
@@ -119,9 +191,10 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
     );
     println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
     println!(
-        "store layout: {} shard(s), score threads {}, sink {}, prune {} \
+        "store layout: {} shard(s), codec {}, score threads {}, sink {}, prune {} \
          (summary grid {}), prefetch depth {}, chunk cache {}",
         cfg.shards,
+        cfg.codec.as_str(),
         if cfg.score_threads == 0 { "auto".to_string() } else { cfg.score_threads.to_string() },
         cfg.score_sink.name(),
         cfg.prune.label(),
@@ -133,16 +206,20 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
             format!("{} MB", cfg.chunk_cache_mb)
         }
     );
-    let dense = spec.dense_floats_per_example(cfg.f) * 2;
-    let fact = spec.factored_floats_per_example(cfg.f, cfg.c) * 2;
+    // payload estimate under the configured codec (scale headers add a
+    // few bytes per segment on top for int8/int4)
+    let bpv = cfg.codec.get().bytes_per_value();
+    let dense = (spec.dense_floats_per_example(cfg.f) as f64 * bpv) as usize;
+    let fact = (spec.factored_floats_per_example(cfg.f, cfg.c) as f64 * bpv) as usize;
     println!(
-        "per-example storage: dense {} B, factored {} B (ratio {:.1}x)",
+        "per-example storage ({}): dense ~{} B, factored ~{} B (ratio {:.1}x)",
+        cfg.codec.as_str(),
         dense,
         fact,
         dense as f64 / fact as f64
     );
     println!(
-        "index for n_train={}: dense {:.1} MB, factored {:.1} MB",
+        "index for n_train={}: dense ~{:.1} MB, factored ~{:.1} MB",
         cfg.n_train,
         dense as f64 * cfg.n_train as f64 / 1e6,
         fact as f64 * cfg.n_train as f64 / 1e6
@@ -431,17 +508,21 @@ fn print_help() {
     println!(
         "lorif — low-rank influence functions (paper reproduction)\n\
          usage: lorif <subcommand> [flags]\n\
-         subcommands: info gen-corpus train build-index query serve\n\
+         subcommands: info store gen-corpus train build-index query serve\n\
                       eval-lds eval-tailpatch judge\n\
+         store tools: store inspect <base>\n\
+                      store recode <base> --out <base> --codec bf16|int8|int4\n\
+                                   [--shards S] [--summary-chunk G]\n\
          common flags: --tier small|medium|large --f N --c N --r N\n\
                        --n-train N --n-query N --seed S --method NAME\n\
                        --shards S --score-threads T --sink full|topk\n\
                        --prune on|off|slack=x --prefetch-depth N\n\
                        --summary-chunk N --chunk-cache-mb N\n\
+                       --codec bf16|int8|int4\n\
                        --work-dir DIR --artifacts-dir DIR\n\
          serve flags:  --addr A --max-batch N --window-ms N --topk K\n\
                        --score-workers N --queue-cap N\n\
-         pure-CPU builds support `info`; the rest need --features xla\n\
+         pure-CPU builds support `info` and `store`; the rest need --features xla\n\
          see rust/README.md for a walkthrough."
     );
 }

@@ -244,6 +244,7 @@ mod tests {
                 n_examples: b,
                 shards: None,
                 summary_chunk: None,
+                codec: crate::store::CodecId::Bf16,
             };
             let chunk = Chunk {
                 start: 0,
@@ -285,6 +286,7 @@ mod tests {
             n_examples: 8,
             shards: None,
             summary_chunk: None,
+            codec: crate::store::CodecId::Bf16,
         };
         let chunk = Chunk {
             start: 0,
@@ -313,6 +315,7 @@ mod tests {
             n_examples: 4,
             shards: None,
             summary_chunk: None,
+            codec: crate::store::CodecId::Bf16,
         };
         let chunk = Chunk {
             start: 0,

@@ -1,0 +1,158 @@
+//! int4 segment codec: group-wise f32 absmax scales, two values per
+//! byte.
+//!
+//! Layout of a segment of `n` values with `g = ceil(n / INT4_GROUP)`
+//! groups:
+//!
+//! ```text
+//! [scale_0: f32 LE] ... [scale_{g-1}: f32 LE]   one per group
+//! [q_1 q_0] [q_3 q_2] ...                       signed nibbles, low first
+//! ```
+//!
+//! `scale_k = group_absmax / 7`; `q_i = round(x_i / scale_k)` clamped
+//! to `[-7, 7]`, so `|x̂_i − x_i| ≤ max_rel_error() * group_absmax`.
+//! Group-wise scales (default 32 values) keep the error local: one
+//! outlier only coarsens its own group, not the whole segment.  An odd
+//! trailing value pads the high nibble with 0.  Groups containing any
+//! non-finite value store `scale = NaN` and decode to all-NaN (see
+//! `codec::mod` for why that keeps pruning sound).
+
+use super::{absmax, group_scale, quantize, Codec, CodecId};
+
+/// Values sharing one f32 scale.
+pub const INT4_GROUP: usize = 32;
+
+const QMAX: f32 = 7.0;
+
+pub struct Int4Codec;
+
+impl Codec for Int4Codec {
+    fn id(&self) -> CodecId {
+        CodecId::Int4
+    }
+
+    fn encoded_len(&self, n: usize) -> usize {
+        4 * ((n + INT4_GROUP - 1) / INT4_GROUP) + (n + 1) / 2
+    }
+
+    fn encode(&self, src: &[f32], dst: &mut Vec<u8>) {
+        dst.reserve(self.encoded_len(src.len()));
+        let mut scales = Vec::with_capacity((src.len() + INT4_GROUP - 1) / INT4_GROUP);
+        for group in src.chunks(INT4_GROUP) {
+            let scale = group_scale(absmax(group), QMAX);
+            dst.extend_from_slice(&scale.to_le_bytes());
+            scales.push(scale);
+        }
+        let mut pair = src.chunks_exact(2);
+        let mut i = 0usize;
+        for p in &mut pair {
+            let lo = quantize(p[0], scales[i / INT4_GROUP], QMAX) as u8 & 0x0F;
+            let hi = quantize(p[1], scales[(i + 1) / INT4_GROUP], QMAX) as u8 & 0x0F;
+            dst.push(lo | (hi << 4));
+            i += 2;
+        }
+        if let [last] = pair.remainder() {
+            dst.push(quantize(*last, scales[i / INT4_GROUP], QMAX) as u8 & 0x0F);
+        }
+    }
+
+    fn decode(&self, src: &[u8], dst: &mut [f32]) {
+        assert_eq!(src.len(), self.encoded_len(dst.len()), "int4 segment length mismatch");
+        let n = dst.len();
+        let n_groups = (n + INT4_GROUP - 1) / INT4_GROUP;
+        let mut scales = Vec::with_capacity(n_groups);
+        for g in 0..n_groups {
+            let b = &src[g * 4..g * 4 + 4];
+            scales.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        let data = &src[n_groups * 4..];
+        for (i, d) in dst.iter_mut().enumerate() {
+            let b = data[i / 2];
+            let nib = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+            // sign-extend the 4-bit two's-complement nibble
+            let q = ((nib as i8) << 4) >> 4;
+            *d = q as f32 * scales[i / INT4_GROUP];
+        }
+    }
+
+    fn max_rel_error(&self) -> f32 {
+        // half a quantization step (0.5/7 ≈ 7.14e-2) plus scale-rounding
+        // margin, relative to the GROUP absmax
+        7.2e-2
+    }
+
+    fn bytes_per_value(&self) -> f64 {
+        0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn stride_counts_scales_and_nibbles() {
+        let c = Int4Codec;
+        assert_eq!(c.encoded_len(1), 4 + 1);
+        assert_eq!(c.encoded_len(2), 4 + 1);
+        assert_eq!(c.encoded_len(32), 4 + 16);
+        assert_eq!(c.encoded_len(33), 8 + 17);
+        assert_eq!(c.encoded_len(64), 8 + 32);
+        assert_eq!(c.encoded_len(65), 12 + 33);
+    }
+
+    #[test]
+    fn grid_values_roundtrip_exactly() {
+        let c = Int4Codec;
+        // one group of values already on the q-grid for absmax 7
+        let src: Vec<f32> = (-7..=7).map(|q| q as f32).collect();
+        let mut bytes = Vec::new();
+        c.encode(&src, &mut bytes);
+        let mut back = vec![0.0f32; src.len()];
+        c.decode(&bytes, &mut back);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn odd_lengths_and_group_boundaries_roundtrip() {
+        let c = Int4Codec;
+        let mut rng = Rng::new(5);
+        for n in [1usize, 3, 31, 32, 33, 63, 65, 97] {
+            let src: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut bytes = Vec::new();
+            c.encode(&src, &mut bytes);
+            assert_eq!(bytes.len(), c.encoded_len(n), "n={n}");
+            let mut back = vec![0.0f32; n];
+            c.decode(&bytes, &mut back);
+            for g in (0..n).step_by(INT4_GROUP) {
+                let m = super::absmax(&src[g..(g + INT4_GROUP).min(n)]);
+                for i in g..(g + INT4_GROUP).min(n) {
+                    assert!(
+                        (src[i] - back[i]).abs() <= c.max_rel_error() * m,
+                        "n={n} i={i}: {} -> {}",
+                        src[i],
+                        back[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn an_outlier_only_coarsens_its_own_group() {
+        let c = Int4Codec;
+        let mut src = vec![0.1f32; 64];
+        src[40] = 100.0; // second group only
+        let mut bytes = Vec::new();
+        c.encode(&src, &mut bytes);
+        let mut back = vec![0.0f32; 64];
+        c.decode(&bytes, &mut back);
+        // first group untouched by the outlier: fine-grained scale
+        for i in 0..32 {
+            assert!((back[i] - 0.1).abs() <= c.max_rel_error() * 0.1, "i={i}: {}", back[i]);
+        }
+        // second group: small values flushed toward zero is expected
+        assert!((back[40] - 100.0).abs() <= c.max_rel_error() * 100.0);
+    }
+}

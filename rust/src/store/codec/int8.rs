@@ -1,0 +1,113 @@
+//! int8 segment codec: one f32 absmax scale per segment, one signed
+//! byte per value.
+//!
+//! Layout of a segment of `n` values:
+//!
+//! ```text
+//! [scale: f32 LE] [q_0: i8] [q_1: i8] ... [q_{n-1}: i8]
+//! ```
+//!
+//! `scale = absmax / 127`; `q_i = round(x_i / scale)` clamped to
+//! `[-127, 127]`, so `x̂_i = q_i * scale` satisfies
+//! `|x̂_i − x_i| ≤ scale/2 + rounding ≤ max_rel_error() * absmax`.
+//! An all-zero segment stores `scale = 0`; a segment containing any
+//! non-finite value stores `scale = NaN` and decodes to all-NaN (the
+//! summarizer then marks the chunk unprunable — see `codec::mod`).
+
+use super::{absmax, group_scale, quantize, Codec, CodecId};
+
+const QMAX: f32 = 127.0;
+
+pub struct Int8Codec;
+
+impl Codec for Int8Codec {
+    fn id(&self) -> CodecId {
+        CodecId::Int8
+    }
+
+    fn encoded_len(&self, n: usize) -> usize {
+        4 + n
+    }
+
+    fn encode(&self, src: &[f32], dst: &mut Vec<u8>) {
+        let scale = group_scale(absmax(src), QMAX);
+        dst.reserve(4 + src.len());
+        dst.extend_from_slice(&scale.to_le_bytes());
+        for &x in src {
+            dst.push(quantize(x, scale, QMAX) as u8);
+        }
+    }
+
+    fn decode(&self, src: &[u8], dst: &mut [f32]) {
+        assert_eq!(src.len(), self.encoded_len(dst.len()), "int8 segment length mismatch");
+        let scale = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+        for (b, d) in src[4..].iter().zip(dst.iter_mut()) {
+            *d = (*b as i8) as f32 * scale;
+        }
+    }
+
+    fn max_rel_error(&self) -> f32 {
+        // half a quantization step (0.5/127 ≈ 3.94e-3) plus margin for
+        // the f32 rounding of the scale itself
+        4.0e-3
+    }
+
+    fn bytes_per_value(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn stride_and_exact_small_integers() {
+        let c = Int8Codec;
+        assert_eq!(c.encoded_len(0), 4);
+        assert_eq!(c.encoded_len(100), 104);
+        // values already on the quantization grid decode exactly
+        let src: Vec<f32> = (-127..=127).map(|q| q as f32 * 0.5).collect();
+        let mut bytes = Vec::new();
+        c.encode(&src, &mut bytes);
+        let mut back = vec![0.0f32; src.len()];
+        c.decode(&bytes, &mut back);
+        for (a, b) in src.iter().zip(&back) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn absmax_element_maps_to_full_scale() {
+        let c = Int8Codec;
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let n = 1 + rng.below(64);
+            let src: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let m = super::absmax(&src);
+            let mut bytes = Vec::new();
+            c.encode(&src, &mut bytes);
+            let peak = bytes[4..].iter().map(|&b| (b as i8).unsigned_abs()).max().unwrap();
+            if m > 0.0 {
+                assert_eq!(peak, 127, "absmax element must quantize to ±127");
+            }
+        }
+    }
+
+    #[test]
+    fn reencoding_decoded_values_is_stable() {
+        // decode → encode keeps every quantized integer (the scale may
+        // wobble by an f32 ulp, which cannot move a rounded integer)
+        let c = Int8Codec;
+        let mut rng = Rng::new(11);
+        let src: Vec<f32> = (0..97).map(|_| rng.normal() as f32 * 2.5).collect();
+        let mut b1 = Vec::new();
+        c.encode(&src, &mut b1);
+        let mut v1 = vec![0.0f32; src.len()];
+        c.decode(&b1, &mut v1);
+        let mut b2 = Vec::new();
+        c.encode(&v1, &mut b2);
+        assert_eq!(&b1[4..], &b2[4..], "quantized integers drifted");
+    }
+}

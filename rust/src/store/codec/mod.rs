@@ -1,0 +1,268 @@
+//! Pluggable store codecs: how one record SEGMENT is laid out on disk.
+//!
+//! The factored record format (PR 0) cut the *count* of stored values;
+//! a codec cuts the *cost per value* on top of it — the multiplication
+//! GraSS (Hu et al., 2025) shows loses little attribution fidelity.
+//! Every store consumer decodes back to f32 before scoring, so codecs
+//! change bytes on disk and decode cost, never the scoring code.
+//!
+//! A record is a fixed sequence of **segments** — one per dense layer,
+//! or the `u` then `v` factor rows per factored layer — and a codec
+//! encodes/decodes one segment at a time:
+//!
+//! * [`Bf16Codec`] (`"bf16"`, the default) — raw bf16 values, 2 B each.
+//!   This is the layout every v1–v3 store already uses; a manifest with
+//!   no `"codec"` key means bf16, so old stores read unchanged.
+//! * [`Int8Codec`] (`"int8"`) — one f32 scale per segment (absmax /
+//!   127) followed by one signed byte per value.
+//! * [`Int4Codec`] (`"int4"`) — one f32 scale per [`INT4_GROUP`]-value
+//!   group (group absmax / 7) followed by two values per byte (signed
+//!   nibbles, low nibble first).
+//!
+//! Stores written with a non-bf16 codec carry `"codec"` in the manifest
+//! and bump to layout version 4 (`StoreMeta::version`); `ShardSet`
+//! rejects unknown codec names at open time instead of mis-decoding.
+//!
+//! **Error contract** (what makes pruning stay sound): for every codec,
+//! `|decode(encode(x))_i − x_i| ≤ max_rel_error() · max_j |x_j|` where
+//! `j` ranges over the value's scale group (the whole segment for bf16
+//! and int8, the [`INT4_GROUP`]-value group for int4).  The summary
+//! sidecar is built from the *decoded* bytes — exactly the values
+//! scorers see — and additionally inflates its bounds by this factor
+//! for quantized codecs (`sketch::summary`), so a stored bound is never
+//! below any score the query path can compute.  Non-finite inputs are
+//! not representable by the int codecs: a segment (int8) or group
+//! (int4) containing NaN/Inf decodes to all-NaN, which the summarizer
+//! marks unprunable and `total_cmp` ranks deterministically.
+//!
+//! Property coverage: `tests/prop.rs` checks the error contract per
+//! codec over random segments, recode roundtrips, and per-codec
+//! pruned-scan ≡ full-scan / cached ≡ cold scoring.
+
+mod int4;
+mod int8;
+
+pub use int4::{Int4Codec, INT4_GROUP};
+pub use int8::Int8Codec;
+
+use crate::util::bf16;
+
+/// One segment codec (see the module docs).  Implementations are
+/// stateless unit structs; dispatch goes through [`CodecId::get`].
+pub trait Codec: Sync {
+    fn id(&self) -> CodecId;
+
+    /// On-disk bytes of one encoded segment of `n` values.  Constant
+    /// per `n`, so records keep a fixed stride and batched sequential
+    /// reads stay a single `read_exact`.
+    fn encoded_len(&self, n: usize) -> usize;
+
+    /// Append the encoded segment to `dst`.
+    fn encode(&self, src: &[f32], dst: &mut Vec<u8>);
+
+    /// Decode one segment; `src` must be exactly
+    /// `encoded_len(dst.len())` bytes.
+    fn decode(&self, src: &[u8], dst: &mut [f32]);
+
+    /// Worst-case `|decode(encode(x)) − x|` as a fraction of the scale
+    /// group's max absolute value (for bf16, of `|x|` itself, which is
+    /// tighter).  Includes margin for the f32 rounding of the scale.
+    fn max_rel_error(&self) -> f32;
+
+    /// Nominal payload bytes per value, excluding scale headers
+    /// (`store inspect` / README codec matrix).
+    fn bytes_per_value(&self) -> f64;
+}
+
+/// Manifest-level codec selector (the `"codec"` key / `--codec` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecId {
+    Bf16,
+    Int8,
+    Int4,
+}
+
+impl CodecId {
+    pub const ALL: [CodecId; 3] = [CodecId::Bf16, CodecId::Int8, CodecId::Int4];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CodecId::Bf16 => "bf16",
+            CodecId::Int8 => "int8",
+            CodecId::Int4 => "int4",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<CodecId> {
+        match s {
+            "bf16" => Ok(CodecId::Bf16),
+            "int8" => Ok(CodecId::Int8),
+            "int4" => Ok(CodecId::Int4),
+            _ => anyhow::bail!("unknown store codec '{s}' (bf16|int8|int4)"),
+        }
+    }
+
+    /// The codec implementation behind this id.
+    pub fn get(self) -> &'static dyn Codec {
+        match self {
+            CodecId::Bf16 => &Bf16Codec,
+            CodecId::Int8 => &Int8Codec,
+            CodecId::Int4 => &Int4Codec,
+        }
+    }
+}
+
+/// The v1–v3 layout: raw bf16, 2 bytes per value, no headers.
+pub struct Bf16Codec;
+
+impl Codec for Bf16Codec {
+    fn id(&self) -> CodecId {
+        CodecId::Bf16
+    }
+
+    fn encoded_len(&self, n: usize) -> usize {
+        n * 2
+    }
+
+    fn encode(&self, src: &[f32], dst: &mut Vec<u8>) {
+        bf16::encode_slice(src, dst);
+    }
+
+    fn decode(&self, src: &[u8], dst: &mut [f32]) {
+        bf16::decode_into(src, dst);
+    }
+
+    fn max_rel_error(&self) -> f32 {
+        // round-to-nearest-even on an 8-bit mantissa: 2^-9 per value;
+        // report the truncation-safe 2^-8
+        1.0 / 256.0
+    }
+
+    fn bytes_per_value(&self) -> f64 {
+        2.0
+    }
+}
+
+/// Shared by the int codecs: quantize one value against a group scale.
+/// `scale == 0` means an all-zero group; non-finite scales poison the
+/// group to NaN at decode time (`0 * NaN = NaN`), which is exactly the
+/// "never prunable" signal the summarizer needs.
+#[inline]
+pub(crate) fn quantize(x: f32, scale: f32, qmax: f32) -> i8 {
+    if scale == 0.0 || !scale.is_finite() || !x.is_finite() {
+        return 0;
+    }
+    (x / scale).round().clamp(-qmax, qmax) as i8
+}
+
+/// Scale for a group with the given absmax and quantization ceiling.
+/// Non-finite absmax (the group held NaN/Inf) propagates so decodes of
+/// the group are NaN rather than silently wrong finite values.
+#[inline]
+pub(crate) fn group_scale(absmax: f32, qmax: f32) -> f32 {
+    if !absmax.is_finite() {
+        f32::NAN
+    } else {
+        absmax / qmax
+    }
+}
+
+#[inline]
+pub(crate) fn absmax(src: &[f32]) -> f32 {
+    // fold through abs() so a NaN anywhere in the group survives the
+    // max (f32::max ignores NaN operands)
+    src.iter().fold(0.0f32, |m, &x| {
+        let a = x.abs();
+        if a.is_nan() || m.is_nan() {
+            f32::NAN
+        } else {
+            m.max(a)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn roundtrip(id: CodecId, src: &[f32]) -> Vec<f32> {
+        let c = id.get();
+        let mut bytes = Vec::new();
+        c.encode(src, &mut bytes);
+        assert_eq!(bytes.len(), c.encoded_len(src.len()), "{id:?} stride");
+        let mut back = vec![0.0f32; src.len()];
+        c.decode(&bytes, &mut back);
+        back
+    }
+
+    #[test]
+    fn ids_parse_and_roundtrip() {
+        for id in CodecId::ALL {
+            assert_eq!(CodecId::parse(id.as_str()).unwrap(), id);
+            assert_eq!(id.get().id(), id);
+        }
+        assert!(CodecId::parse("zip").is_err());
+        assert!(CodecId::parse("").is_err());
+    }
+
+    #[test]
+    fn bf16_codec_matches_util_bf16() {
+        let src: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let back = roundtrip(CodecId::Bf16, &src);
+        for (a, b) in src.iter().zip(&back) {
+            assert_eq!(*b, bf16::bf16_to_f32(bf16::f32_to_bf16(*a)));
+        }
+    }
+
+    #[test]
+    fn every_codec_honours_its_error_contract() {
+        let mut rng = Rng::new(7);
+        for id in CodecId::ALL {
+            let c = id.get();
+            for n in [1usize, 2, 31, 32, 33, 64, 200] {
+                let src: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+                let back = roundtrip(id, &src);
+                let m = absmax(&src);
+                for (i, (a, b)) in src.iter().zip(&back).enumerate() {
+                    assert!(
+                        (a - b).abs() <= c.max_rel_error() * m + 1e-30,
+                        "{id:?} n={n} i={i}: {a} -> {b} (absmax {m})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_segments_stay_zero() {
+        for id in CodecId::ALL {
+            let back = roundtrip(id, &[0.0; 37]);
+            assert!(back.iter().all(|&x| x == 0.0), "{id:?}");
+        }
+    }
+
+    #[test]
+    fn int_codecs_poison_non_finite_groups_to_nan() {
+        for id in [CodecId::Int8, CodecId::Int4] {
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let mut src = vec![1.0f32; 40];
+                src[17] = bad;
+                let back = roundtrip(id, &src);
+                // the poisoned value itself must not decode to a finite lie
+                assert!(back[17].is_nan(), "{id:?} {bad} -> {}", back[17]);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_clamps_and_zero_scale_is_zero() {
+        assert_eq!(quantize(5.0, 0.0, 127.0), 0);
+        assert_eq!(quantize(1e30, 1.0, 127.0), 127);
+        assert_eq!(quantize(-1e30, 1.0, 7.0), -7);
+        assert_eq!(quantize(f32::NAN, 1.0, 127.0), 0);
+        assert!(group_scale(f32::INFINITY, 127.0).is_nan());
+        assert!(absmax(&[1.0, f32::NAN, 2.0]).is_nan());
+        assert_eq!(absmax(&[-3.0, 2.0]), 3.0);
+    }
+}

@@ -22,17 +22,26 @@
 //! `shards` key); v1/v2 stores without the sidecar are still read
 //! everywhere and simply fall back to full scans.
 //!
+//! A v4 store encodes its records through a non-default codec
+//! (`super::codec`): the `"codec"` manifest key names it (`int8`,
+//! `int4`), and every stride below is computed through the codec's
+//! per-segment `encoded_len`.  No key means bf16 — every v1–v3 store
+//! on disk reads unchanged.  v4 is orthogonal to sharding AND to the
+//! summary sidecar; `lorif store recode` converts between all of them.
+//!
 //! Two kinds (paper Fig 1):
 //!   * `Dense`    — per layer, the full projected gradient `d1*d2` (LoGRA,
 //!                  TrackStar, GradDot baselines): O(D) per example.
 //!   * `Factored` — per layer, rank-c factors `u (d1*c)` then `v (d2*c)`
 //!                  (LoRIF §3.1): O(c(d1+d2)) per example.
 //!
-//! The record stride is constant, so batched sequential reads are a
-//! single `read_exact` — the I/O path the paper's Figure 3 measures.
+//! The record stride is constant for every codec, so batched sequential
+//! reads are a single `read_exact` — the I/O path the paper's Figure 3
+//! measures.
 
 use std::path::{Path, PathBuf};
 
+use super::codec::{Codec, CodecId};
 use crate::util::json::{obj, Value};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +83,9 @@ pub struct StoreMeta {
     /// built on a grid of `stride` records (restarting per shard).
     /// `None` = no sidecar; every query falls back to a full scan.
     pub summary_chunk: Option<usize>,
+    /// Record codec (`super::codec`).  `Bf16` is the default and the
+    /// only codec pre-v4 manifests can carry.
+    pub codec: CodecId,
 }
 
 impl StoreMeta {
@@ -88,29 +100,66 @@ impl StoreMeta {
             .sum()
     }
 
-    /// bf16 byte stride of one record.
+    /// Encoded byte stride of one record under this store's codec.
     pub fn bytes_per_example(&self) -> usize {
-        self.floats_per_example() * 2
+        let codec = self.codec.get();
+        self.layers
+            .iter()
+            .map(|&(d1, d2)| match self.kind {
+                StoreKind::Dense => codec.encoded_len(d1 * d2),
+                StoreKind::Factored => {
+                    codec.encoded_len(self.c * d1) + codec.encoded_len(self.c * d2)
+                }
+            })
+            .sum()
     }
 
-    /// Byte offset of layer `l` within a record, plus its float length.
+    /// Decoded in-memory bytes of one record (the f32 values scorers
+    /// consume) — what the chunk cache budgets against, as opposed to
+    /// the on-disk `bytes_per_example`.
+    pub fn decoded_bytes_per_example(&self) -> usize {
+        self.floats_per_example() * 4
+    }
+
+    /// Byte offset of layer `l` within an encoded record, plus its
+    /// decoded float length.  For factored records the layer spans the
+    /// `u` segment then the `v` segment (`codec.encoded_len(c*d1)` then
+    /// `codec.encoded_len(c*d2)` bytes).
     pub fn layer_span(&self, l: usize) -> anyhow::Result<(usize, usize)> {
+        let codec = self.codec.get();
         let mut off = 0;
         for (i, &(d1, d2)) in self.layers.iter().enumerate() {
-            let len = match self.kind {
-                StoreKind::Dense => d1 * d2,
-                StoreKind::Factored => self.c * (d1 + d2),
+            let (flen, blen) = match self.kind {
+                StoreKind::Dense => (d1 * d2, codec.encoded_len(d1 * d2)),
+                StoreKind::Factored => (
+                    self.c * (d1 + d2),
+                    codec.encoded_len(self.c * d1) + codec.encoded_len(self.c * d2),
+                ),
             };
             if i == l {
-                return Ok((off * 2, len));
+                return Ok((off, flen));
             }
-            off += len;
+            off += blen;
         }
         anyhow::bail!("layer index {l} out of range (store has {} layers)", self.layers.len())
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.bytes_per_example() as u64 * self.n_examples as u64
+    }
+
+    /// The store-layout version this metadata serializes as: 4 with a
+    /// non-default codec, 3 with a summary sidecar, 2 sharded, else 1.
+    pub fn version(&self) -> usize {
+        if self.codec != CodecId::Bf16 {
+            4
+        } else if self.summary_chunk.is_some() {
+            3
+        } else if self.shards.is_some() {
+            2
+        } else {
+            1
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -130,13 +179,7 @@ impl StoreMeta {
             ),
             ("n_examples", self.n_examples.into()),
         ];
-        let version: usize = if self.summary_chunk.is_some() {
-            3
-        } else if self.shards.is_some() {
-            2
-        } else {
-            1
-        };
+        let version = self.version();
         if version > 1 {
             fields.push(("version", version.into()));
         }
@@ -149,16 +192,37 @@ impl StoreMeta {
         if let Some(stride) = self.summary_chunk {
             fields.push(("summary_chunk", stride.into()));
         }
+        // bf16 manifests stay byte-compatible with pre-v4 readers, so a
+        // `recode --codec bf16` output opens anywhere
+        if self.codec != CodecId::Bf16 {
+            fields.push(("codec", self.codec.as_str().into()));
+        }
         obj(fields)
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<StoreMeta> {
-        if let Some(version) = v.get("version").and_then(Value::as_usize) {
+        let version = v.get("version").and_then(Value::as_usize);
+        if let Some(version) = version {
             anyhow::ensure!(
-                version <= 3,
-                "unsupported store version {version} (this build reads v1-v3)"
+                version <= 4,
+                "unsupported store version {version} (this build reads v1-v4)"
             );
         }
+        let codec = match v.get("codec") {
+            None => CodecId::Bf16,
+            Some(val) => {
+                let s = val.as_str().ok_or_else(|| {
+                    anyhow::anyhow!("manifest 'codec' value must be a string")
+                })?;
+                CodecId::parse(s)?
+            }
+        };
+        anyhow::ensure!(
+            codec == CodecId::Bf16 || version.unwrap_or(1) >= 4,
+            "manifest declares codec '{}' but version {} (non-bf16 codecs need version 4)",
+            codec.as_str(),
+            version.unwrap_or(1)
+        );
         let layers = v
             .req("layers")?
             .as_arr()
@@ -209,6 +273,7 @@ impl StoreMeta {
             n_examples,
             shards,
             summary_chunk,
+            codec,
         })
     }
 
@@ -255,6 +320,7 @@ mod tests {
             n_examples: 100,
             shards: None,
             summary_chunk: None,
+            codec: CodecId::Bf16,
         }
     }
 
@@ -265,14 +331,55 @@ mod tests {
         let f = meta(StoreKind::Factored);
         assert_eq!(f.floats_per_example(), 2 * (16 + 48) + 2 * (16 + 16));
         assert_eq!(f.bytes_per_example(), f.floats_per_example() * 2);
+        assert_eq!(f.decoded_bytes_per_example(), f.floats_per_example() * 4);
+    }
+
+    #[test]
+    fn codec_strides_follow_encoded_len() {
+        for codec in CodecId::ALL {
+            for kind in [StoreKind::Dense, StoreKind::Factored] {
+                let mut m = meta(kind);
+                m.codec = codec;
+                let c = codec.get();
+                let want: usize = m
+                    .layers
+                    .iter()
+                    .map(|&(d1, d2)| match kind {
+                        StoreKind::Dense => c.encoded_len(d1 * d2),
+                        StoreKind::Factored => {
+                            c.encoded_len(m.c * d1) + c.encoded_len(m.c * d2)
+                        }
+                    })
+                    .sum();
+                assert_eq!(m.bytes_per_example(), want, "{codec:?}/{kind:?}");
+                // quantized codecs must actually shrink the record
+                if codec != CodecId::Bf16 {
+                    assert!(
+                        m.bytes_per_example() < meta(kind).bytes_per_example(),
+                        "{codec:?}/{kind:?} did not compress"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
     fn layer_spans_tile_record() {
+        for codec in CodecId::ALL {
+            let mut m = meta(StoreKind::Factored);
+            m.codec = codec;
+            let (o0, l0) = m.layer_span(0).unwrap();
+            let (o1, l1) = m.layer_span(1).unwrap();
+            assert_eq!(o0, 0, "{codec:?}");
+            assert_eq!(l0, m.c * (16 + 48), "{codec:?}");
+            assert_eq!(l1, m.c * (16 + 16), "{codec:?}");
+            let c = codec.get();
+            assert_eq!(o1, c.encoded_len(m.c * 16) + c.encoded_len(m.c * 48), "{codec:?}");
+        }
+        // bf16 keeps the historical 2-bytes-per-float tiling
         let m = meta(StoreKind::Factored);
-        let (o0, l0) = m.layer_span(0).unwrap();
+        let (_, l0) = m.layer_span(0).unwrap();
         let (o1, l1) = m.layer_span(1).unwrap();
-        assert_eq!(o0, 0);
         assert_eq!(o1, l0 * 2);
         assert_eq!((l0 + l1) * 2, m.bytes_per_example());
     }
@@ -292,6 +399,7 @@ mod tests {
         assert_eq!(back.layers, m.layers);
         assert_eq!(back.n_examples, 100);
         assert_eq!(back.shards, None);
+        assert_eq!(back.codec, CodecId::Bf16);
     }
 
     #[test]
@@ -316,7 +424,7 @@ mod tests {
         let m = meta(StoreKind::Dense);
         let mut doc = m.to_json();
         if let Value::Obj(fields) = &mut doc {
-            fields.insert("version".into(), 4usize.into());
+            fields.insert("version".into(), 5usize.into());
         }
         let err = StoreMeta::from_json(&doc).unwrap_err();
         assert!(format!("{err}").contains("unsupported store version"), "{err}");
@@ -339,6 +447,68 @@ mod tests {
         let back = StoreMeta::from_json(&doc).unwrap();
         assert_eq!(back.summary_chunk, Some(256));
         assert_eq!(back.shards, Some(vec![60, 40]));
+    }
+
+    #[test]
+    fn json_roundtrip_v4_codec() {
+        // v4 = non-default codec, orthogonal to sharding and summaries
+        for codec in [CodecId::Int8, CodecId::Int4] {
+            let mut m = meta(StoreKind::Dense);
+            m.codec = codec;
+            let doc = m.to_json();
+            assert_eq!(doc.get("version").and_then(|v| v.as_usize()), Some(4));
+            assert_eq!(
+                doc.get("codec").and_then(|v| v.as_str()),
+                Some(codec.as_str())
+            );
+            let back = StoreMeta::from_json(&doc).unwrap();
+            assert_eq!(back.codec, codec);
+
+            m.shards = Some(vec![60, 40]);
+            m.summary_chunk = Some(16);
+            let back = StoreMeta::from_json(&m.to_json()).unwrap();
+            assert_eq!(back.codec, codec);
+            assert_eq!(back.shards, Some(vec![60, 40]));
+            assert_eq!(back.summary_chunk, Some(16));
+        }
+        // the default codec writes a pre-v4 manifest with no codec key
+        let m = meta(StoreKind::Dense);
+        assert_eq!(m.version(), 1);
+        assert!(m.to_json().get("codec").is_none());
+    }
+
+    #[test]
+    fn rejects_unknown_or_corrupt_codec_values() {
+        let m = meta(StoreKind::Dense);
+        // unknown codec name
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("version".into(), 4usize.into());
+            fields.insert("codec".into(), "zip".into());
+        }
+        let err = StoreMeta::from_json(&doc).unwrap_err();
+        assert!(format!("{err}").contains("unknown store codec"), "{err}");
+        // codec value of the wrong JSON type
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("version".into(), 4usize.into());
+            fields.insert("codec".into(), 8usize.into());
+        }
+        let err = StoreMeta::from_json(&doc).unwrap_err();
+        assert!(format!("{err}").contains("must be a string"), "{err}");
+        // a non-bf16 codec on a pre-v4 manifest is corruption, not data
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("codec".into(), "int8".into());
+        }
+        let err = StoreMeta::from_json(&doc).unwrap_err();
+        assert!(format!("{err}").contains("version 4"), "{err}");
+        // an explicit bf16 key on an old manifest is harmless
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("codec".into(), "bf16".into());
+        }
+        assert_eq!(StoreMeta::from_json(&doc).unwrap().codec, CodecId::Bf16);
     }
 
     #[test]

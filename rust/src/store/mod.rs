@@ -1,28 +1,42 @@
 //! Gradient store: the persistent per-example index (paper's central
-//! storage/IO bottleneck).  bf16 fixed-stride records + JSON sidecar;
-//! dense (LoGRA) and rank-c factored (LoRIF) layouts share one reader.
+//! storage/IO bottleneck).  Fixed-stride codec-encoded records + JSON
+//! sidecar; dense (LoGRA) and rank-c factored (LoRIF) layouts share one
+//! reader.
 //!
-//! Stores come in three on-disk layouts: v1 (one `.grads` file), v2
-//! (contiguous `.shard{i}.grads` files + a shard manifest), and v3
-//! (either of the above plus a `.summaries` pruning sidecar, see
-//! `crate::sketch`).  `ShardSet` opens all of them; the v2 layout feeds
-//! the parallel scoring path in `query::parallel`, the v3 sidecar lets
-//! top-k queries skip chunk reads entirely.
+//! Stores come in four on-disk layouts: v1 (one `.grads` file), v2
+//! (contiguous `.shard{i}.grads` files + a shard manifest), v3 (either
+//! of the above plus a `.summaries` pruning sidecar, see
+//! `crate::sketch`), and v4 (any of the above with records encoded
+//! through a non-default codec, see [`codec`]).  `ShardSet` opens all
+//! of them; the v2 layout feeds the parallel scoring path in
+//! `query::parallel`, the v3 sidecar lets top-k queries skip chunk
+//! reads entirely, and the v4 codecs shrink the bytes every remaining
+//! read costs.  [`recode`] converts any existing store between codecs,
+//! shard layouts, and manifest versions in one bounded-memory streaming
+//! pass (`lorif store recode`) and powers `lorif store inspect`.
 //!
 //! On top of the readers sits the decoded-chunk cache (`cache`): a
 //! byte-budgeted, shard-aware CLOCK cache of decoded chunks that the
 //! serving path shares across scoring workers so hot store spans are
-//! read and bf16-decoded once, not once per batch.
+//! read and decoded once, not once per batch.  The cache always holds
+//! decoded f32 chunks whatever the codec, so cached ≡ cold scoring is
+//! preserved per codec, and its budget is accounted in DECODED bytes
+//! (`StoreMeta::decoded_bytes_per_example`) while `bytes_read` stays
+//! the on-disk (encoded) count.
 
 pub mod cache;
+pub mod codec;
 pub mod format;
 pub mod reader;
+pub mod recode;
 pub mod writer;
 
 pub use cache::{CacheStats, ChunkCache};
+pub use codec::{Bf16Codec, Codec, CodecId, Int4Codec, Int8Codec, INT4_GROUP};
 pub use format::{StoreKind, StoreMeta};
 pub use reader::{
     Chunk, ChunkCursor, ChunkLayer, ShardSet, ShardSpan, StoreReader, StreamStats,
     DEFAULT_PREFETCH_DEPTH,
 };
+pub use recode::{inspect_store, recode_store, RecodeOptions, RecodeReport, StoreInspection};
 pub use writer::{ShardedWriter, StoreWriter};

@@ -25,10 +25,10 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use super::cache::ChunkCache;
+use super::codec::Codec;
 use super::format::{StoreKind, StoreMeta};
 use crate::linalg::Mat;
 use crate::sketch::StoreSummaries;
-use crate::util::bf16;
 
 /// A decoded chunk of consecutive examples.
 pub struct Chunk {
@@ -81,32 +81,39 @@ impl ChunkLayer {
 /// Decode `raw` (a whole number of records) into a chunk starting at
 /// global example index `start`.  Shared by the streaming readers and
 /// the writer-side summarizer (`crate::sketch::summary`), so bound
-/// statistics are computed from exactly the values scorers see.
+/// statistics are computed from exactly the values scorers see.  All
+/// byte offsets go through the store's codec (`store::codec`): the
+/// cache, the scorers, and the summaries only ever see the decoded f32
+/// values, so a codec changes bytes on disk, never scoring code.
 pub(crate) fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> anyhow::Result<Chunk> {
     let stride = meta.bytes_per_example();
     let count = raw.len() / stride;
+    let codec = meta.codec.get();
     let t0 = Instant::now();
     let mut layers = Vec::with_capacity(meta.layers.len());
     for (l, &(d1, d2)) in meta.layers.iter().enumerate() {
-        let (off, len) = meta.layer_span(l)?;
+        let (off, _) = meta.layer_span(l)?;
         match meta.kind {
             StoreKind::Dense => {
+                let blen = codec.encoded_len(d1 * d2);
                 let mut g = Mat::zeros(count, d1 * d2);
                 for ex in 0..count {
-                    let src = &raw[ex * stride + off..ex * stride + off + len * 2];
-                    bf16::decode_into(src, g.row_mut(ex));
+                    let base = ex * stride + off;
+                    codec.decode(&raw[base..base + blen], g.row_mut(ex));
                 }
                 layers.push(ChunkLayer::Dense { g });
             }
             StoreKind::Factored => {
                 let cu = d1 * meta.c;
                 let cv = d2 * meta.c;
+                let ulen = codec.encoded_len(cu);
+                let vlen = codec.encoded_len(cv);
                 let mut u = Mat::zeros(count, cu);
                 let mut v = Mat::zeros(count, cv);
                 for ex in 0..count {
                     let base = ex * stride + off;
-                    bf16::decode_into(&raw[base..base + cu * 2], u.row_mut(ex));
-                    bf16::decode_into(&raw[base + cu * 2..base + (cu + cv) * 2], v.row_mut(ex));
+                    codec.decode(&raw[base..base + ulen], u.row_mut(ex));
+                    codec.decode(&raw[base + ulen..base + ulen + vlen], v.row_mut(ex));
                 }
                 layers.push(ChunkLayer::Factored { u, v });
             }
@@ -630,6 +637,7 @@ mod tests {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: crate::store::CodecId::Bf16,
         }
     }
 
@@ -714,6 +722,56 @@ mod tests {
         })
         .unwrap();
         assert_eq!(seen, 17);
+    }
+
+    #[test]
+    fn codec_stores_roundtrip_within_error_bounds() {
+        // the same records under every codec: the reader decodes v4
+        // stores through the manifest codec, and every value is within
+        // the codec's documented error of the original
+        use crate::store::CodecId;
+        let layers = vec![(8usize, 12usize), (8, 8)];
+        let n = 13;
+        for codec in CodecId::ALL {
+            for kind in [StoreKind::Dense, StoreKind::Factored] {
+                let base =
+                    tempdir::base(&format!("codec_rt_{}_{}", codec.as_str(), kind.as_str()));
+                let mut meta = meta_for(kind, &layers, 2);
+                meta.codec = codec;
+                let mut w = StoreWriter::create(&base.path, meta).unwrap();
+                let b = fake_batch(n, &layers, 2, 99);
+                w.append(&b).unwrap();
+                let meta = w.finalize().unwrap();
+                assert_eq!(meta.codec, codec);
+                let set = ShardSet::open(&base.path).unwrap();
+                assert_eq!(set.meta.codec, codec);
+                let rel = codec.get().max_rel_error();
+                let chunk = set.read_range(0, n).unwrap();
+                for (l, layer) in chunk.layers.iter().enumerate() {
+                    let originals: Vec<&Mat> = match kind {
+                        StoreKind::Dense => vec![&b.layers[l].g],
+                        StoreKind::Factored => vec![&b.layers[l].u, &b.layers[l].v],
+                    };
+                    let decoded: Vec<&Mat> = match layer {
+                        ChunkLayer::Dense { g } => vec![g],
+                        ChunkLayer::Factored { u, v } => vec![u, v],
+                    };
+                    for (orig, dec) in originals.iter().zip(&decoded) {
+                        for ex in 0..n {
+                            // bound against the row absmax: every codec's
+                            // scale group is within one stored row
+                            let m = orig.row(ex).iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                            for (a, b) in orig.row(ex).iter().zip(dec.row(ex)) {
+                                assert!(
+                                    (a - b).abs() <= rel * m + 1e-30,
+                                    "{codec:?}/{kind:?} layer {l} ex {ex}: {a} -> {b}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,590 @@
+//! Streaming store migration (`lorif store recode`) and the
+//! `lorif store inspect` report.
+//!
+//! `recode_store` converts an existing store between codecs, shard
+//! layouts, and manifest versions in ONE bounded-memory pass: the
+//! source streams chunk by chunk through the regular `ShardSet` reader
+//! (so any v1–v4 layout is a valid input), each decoded chunk is
+//! re-encoded through the target codec by `append_chunk`, and the
+//! target writer rebuilds the `.summaries` sidecar from the freshly
+//! encoded bytes as records stream through — every store already on
+//! disk migrates without re-running gradient extraction, and the
+//! regenerated summaries are exact for the NEW bytes (plus the codec
+//! guard, `sketch::summary`).
+//!
+//! Peak memory is one decoded chunk (`chunk_size` records of f32) plus
+//! the writer's single-record scratch, independent of the store size.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use super::codec::{Codec, CodecId};
+use super::format::{StoreKind, StoreMeta};
+use super::reader::ShardSet;
+use super::writer::{ShardedWriter, StoreWriter};
+use crate::sketch::DEFAULT_SUMMARY_CHUNK;
+
+/// What `recode_store` should change.  Every `None` keeps the source
+/// store's setting, so a plain re-shard preserves the codec and a
+/// plain codec migration preserves the shard layout and summary grid.
+pub struct RecodeOptions {
+    /// Target record codec; `None` keeps the source codec.
+    pub codec: Option<CodecId>,
+    /// Target shard count (`Some(1)` = v1 single file; `Some(s >= 2)` =
+    /// v2 layout); `None` keeps the source layout.
+    pub shards: Option<usize>,
+    /// Target summary grid (`Some(0)` drops the sidecar entirely);
+    /// `None` keeps the source grid (or its absence).
+    pub summary_chunk: Option<usize>,
+    /// Records decoded per streaming step (bounds peak memory).
+    pub chunk_size: usize,
+}
+
+impl Default for RecodeOptions {
+    fn default() -> RecodeOptions {
+        RecodeOptions {
+            codec: None,
+            shards: None,
+            summary_chunk: None,
+            chunk_size: DEFAULT_SUMMARY_CHUNK,
+        }
+    }
+}
+
+/// Resolve a store base for the in-place check: canonicalize the
+/// parent directory (which exists for any openable source, and may not
+/// yet for the target — in which case the target cannot collide with
+/// the source anyway) and re-attach the final component, so `./store`
+/// vs `store`, relative vs absolute spellings, and symlinked
+/// directories all compare equal.
+fn resolved_base(base: &Path) -> PathBuf {
+    let parent = match base.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.canonicalize().ok(),
+        // a bare file name lives in the current directory
+        _ => std::env::current_dir().ok(),
+    };
+    match (parent, base.file_name()) {
+        (Some(dir), Some(name)) => dir.join(name),
+        _ => base.to_path_buf(),
+    }
+}
+
+/// Would writing a store at `dst` clobber the store at `src`?  Path
+/// resolution catches spelling differences; the filesystem-identity
+/// check on the manifests catches what resolution cannot — leaf-name
+/// symlinks and case-insensitive filesystems, where `Store.json` and
+/// `store.json` are one file with two unequal paths.
+fn is_same_store(src: &Path, dst: &Path) -> bool {
+    if resolved_base(src) == resolved_base(dst) {
+        return true;
+    }
+    let a = StoreMeta::meta_path(src);
+    let b = StoreMeta::meta_path(dst);
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::MetadataExt;
+        if let (Ok(ma), Ok(mb)) = (std::fs::metadata(&a), std::fs::metadata(&b)) {
+            return ma.dev() == mb.dev() && ma.ino() == mb.ino();
+        }
+    }
+    // non-unix fallback: both manifests exist and canonicalize to one
+    // path (an absent target manifest can never be the source's)
+    matches!((a.canonicalize(), b.canonicalize()), (Ok(ca), Ok(cb)) if ca == cb)
+}
+
+/// What a migration did (printed by the CLI, asserted by tests).
+#[derive(Debug)]
+pub struct RecodeReport {
+    pub n_examples: usize,
+    pub kind: StoreKind,
+    pub src_codec: CodecId,
+    pub dst_codec: CodecId,
+    /// on-disk data bytes before/after (manifest strides × examples)
+    pub src_bytes: u64,
+    pub dst_bytes: u64,
+    pub shards: Option<Vec<usize>>,
+    pub summary_chunk: Option<usize>,
+    pub version: usize,
+    pub wall: Duration,
+}
+
+impl RecodeReport {
+    /// Size ratio of the migration (>1 means the target is smaller).
+    pub fn shrink(&self) -> f64 {
+        self.src_bytes as f64 / self.dst_bytes.max(1) as f64
+    }
+}
+
+/// One-pass migration; see the module docs.  `src` and `dst` are store
+/// base paths; recoding in place is refused (the pass reads the source
+/// while writing the target).
+pub fn recode_store(
+    src: &Path,
+    dst: &Path,
+    opts: &RecodeOptions,
+) -> anyhow::Result<RecodeReport> {
+    // a target that aliases the source under any spelling, symlink, or
+    // case-insensitive filesystem would have its data files truncated
+    // by the writer while the reader streams them
+    anyhow::ensure!(
+        !is_same_store(src, dst),
+        "recode in place is not supported: pick a different output base"
+    );
+    anyhow::ensure!(opts.chunk_size >= 1, "chunk_size must be >= 1");
+    let t0 = Instant::now();
+    let set = ShardSet::open(src)?;
+    let src_meta = set.meta.clone();
+
+    let summary_chunk = opts
+        .summary_chunk
+        .unwrap_or_else(|| src_meta.summary_chunk.unwrap_or(0));
+
+    let mut meta = src_meta.clone();
+    meta.codec = opts.codec.unwrap_or(src_meta.codec);
+    meta.n_examples = 0;
+    meta.shards = None;
+    meta.summary_chunk = None;
+
+    enum Target {
+        Mono(StoreWriter),
+        Sharded(ShardedWriter),
+    }
+    // `shards: None` preserves the source layout EXACTLY — the planned
+    // writer replays the source's own shard counts (which may deviate
+    // from the uniform ceil rule, e.g. after mid-extraction drops), and
+    // a v2 manifest stays v2 even with a single shard.  An explicit
+    // count re-buckets with the uniform stage-1 rule.
+    let mut w = match (opts.shards, &src_meta.shards) {
+        (None, Some(counts)) => {
+            let mut w = ShardedWriter::create_planned(dst, meta, counts.clone())?;
+            w.set_summary_chunk(summary_chunk)?;
+            Target::Sharded(w)
+        }
+        (Some(s), _) if s >= 2 => {
+            let mut w = ShardedWriter::create(dst, meta, s, src_meta.n_examples)?;
+            w.set_summary_chunk(summary_chunk)?;
+            Target::Sharded(w)
+        }
+        (shards, _) => {
+            anyhow::ensure!(shards != Some(0), "shards must be >= 1");
+            let mut w = StoreWriter::create(dst, meta)?;
+            w.set_summary_chunk(summary_chunk)?;
+            Target::Mono(w)
+        }
+    };
+
+    set.stream(opts.chunk_size, true, |chunk| match &mut w {
+        Target::Mono(w) => w.append_chunk(chunk),
+        Target::Sharded(w) => w.append_chunk(chunk),
+    })?;
+
+    let new_meta = match w {
+        Target::Mono(w) => w.finalize()?,
+        Target::Sharded(w) => w.finalize()?,
+    };
+    anyhow::ensure!(
+        new_meta.n_examples == src_meta.n_examples,
+        "recode wrote {} of {} examples",
+        new_meta.n_examples,
+        src_meta.n_examples
+    );
+    Ok(RecodeReport {
+        n_examples: new_meta.n_examples,
+        kind: new_meta.kind,
+        src_codec: src_meta.codec,
+        dst_codec: new_meta.codec,
+        src_bytes: src_meta.total_bytes(),
+        dst_bytes: new_meta.total_bytes(),
+        shards: new_meta.shards.clone(),
+        summary_chunk: new_meta.summary_chunk,
+        version: new_meta.version(),
+        wall: t0.elapsed(),
+    })
+}
+
+/// Everything `lorif store inspect <base>` reports.  Opening goes
+/// through `ShardSet::open`, so a store that inspects cleanly also
+/// passes every manifest/size/sidecar validation — which is what makes
+/// `inspect` double as the post-`recode` verification tool.
+pub struct StoreInspection {
+    pub meta: StoreMeta,
+    pub version: usize,
+    /// per shard file: path, on-disk bytes, example count
+    pub shard_files: Vec<(PathBuf, u64, usize)>,
+    /// total on-disk data bytes (encoded)
+    pub on_disk_bytes: u64,
+    /// total decoded f32 bytes the same records occupy in memory
+    pub decoded_bytes: u64,
+    /// `.summaries` sidecar: (grid, chunk count, examples covered,
+    /// sidecar file bytes) when present
+    pub summaries: Option<(usize, usize, usize, u64)>,
+}
+
+pub fn inspect_store(base: &Path) -> anyhow::Result<StoreInspection> {
+    let set = ShardSet::open(base)?;
+    let meta = set.meta.clone();
+    let mut shard_files = Vec::new();
+    let mut on_disk = 0u64;
+    for i in 0..set.n_shards() {
+        let span = set.shard(i);
+        let bytes = std::fs::metadata(&span.path)?.len();
+        on_disk += bytes;
+        shard_files.push((span.path.clone(), bytes, span.count));
+    }
+    let summaries = match set.summaries() {
+        None => None,
+        Some(s) => {
+            let covered: usize = s.chunks.iter().map(|c| c.count).sum();
+            let bytes = std::fs::metadata(StoreMeta::summaries_path(base))?.len();
+            Some((s.chunk_size, s.chunks.len(), covered, bytes))
+        }
+    };
+    Ok(StoreInspection {
+        version: meta.version(),
+        on_disk_bytes: on_disk,
+        decoded_bytes: meta.decoded_bytes_per_example() as u64 * meta.n_examples as u64,
+        meta,
+        shard_files,
+        summaries,
+    })
+}
+
+impl fmt::Display for StoreInspection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let m = &self.meta;
+        writeln!(
+            f,
+            "store v{} | kind {} | codec {} | tier {} | f={} c={} | {} examples",
+            self.version,
+            m.kind.as_str(),
+            m.codec.as_str(),
+            m.tier,
+            m.f,
+            m.c,
+            m.n_examples
+        )?;
+        writeln!(
+            f,
+            "layers: {}",
+            m.layers
+                .iter()
+                .map(|&(a, b)| format!("({a}, {b})"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        )?;
+        writeln!(
+            f,
+            "record: {} B encoded ({} B/example decoded, {:.2} B/value payload)",
+            m.bytes_per_example(),
+            m.decoded_bytes_per_example(),
+            m.codec.get().bytes_per_value()
+        )?;
+        writeln!(
+            f,
+            "on disk {:.3} MB encoded vs {:.3} MB decoded ({:.2}x)",
+            self.on_disk_bytes as f64 / 1e6,
+            self.decoded_bytes as f64 / 1e6,
+            self.decoded_bytes as f64 / self.on_disk_bytes.max(1) as f64
+        )?;
+        match m.shards {
+            None => writeln!(f, "layout: v1 single file")?,
+            Some(_) => writeln!(f, "layout: v2 sharded ({} files)", self.shard_files.len())?,
+        }
+        for (i, (path, bytes, count)) in self.shard_files.iter().enumerate() {
+            writeln!(
+                f,
+                "  shard {i}: {count} examples, {bytes} B ({})",
+                path.display()
+            )?;
+        }
+        match self.summaries {
+            None => writeln!(f, "summaries: none (queries always full-scan)")?,
+            Some((grid, chunks, covered, bytes)) => writeln!(
+                f,
+                "summaries: grid {grid} | {chunks} chunks covering {covered}/{} examples \
+                 | sidecar {bytes} B",
+                m.n_examples
+            )?,
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::runtime::{ExtractBatch, LayerGrads};
+    use crate::util::prng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lorif_recode_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn write_source(name: &str, kind: StoreKind, n: usize, shards: usize) -> PathBuf {
+        let layers = vec![(6usize, 8usize), (4, 4)];
+        let c = 2;
+        let mut rng = Rng::new(7);
+        let lg: Vec<LayerGrads> = layers
+            .iter()
+            .map(|&(d1, d2)| LayerGrads {
+                g: Mat::random_normal(n, d1 * d2, 1.0, &mut rng),
+                u: Mat::random_normal(n, d1 * c, 1.0, &mut rng),
+                v: Mat::random_normal(n, d2 * c, 1.0, &mut rng),
+            })
+            .collect();
+        let batch = ExtractBatch { losses: vec![0.0; n], layers: lg, valid: n };
+        let meta = StoreMeta {
+            kind,
+            tier: "small".into(),
+            f: 4,
+            c,
+            layers,
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Bf16,
+        };
+        let base = tmp(name);
+        if shards <= 1 {
+            let mut w = StoreWriter::create(&base, meta).unwrap();
+            w.set_summary_chunk(5).unwrap();
+            w.append(&batch).unwrap();
+            w.finalize().unwrap();
+        } else {
+            let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+            w.set_summary_chunk(5).unwrap();
+            w.append(&batch).unwrap();
+            w.finalize().unwrap();
+        }
+        base
+    }
+
+    fn collect(base: &Path) -> Vec<f32> {
+        let set = ShardSet::open(base).unwrap();
+        let mut out = Vec::new();
+        set.stream(7, false, |chunk| {
+            for layer in &chunk.layers {
+                match layer {
+                    crate::store::ChunkLayer::Dense { g } => out.extend(g.data.iter()),
+                    crate::store::ChunkLayer::Factored { u, v } => {
+                        out.extend(u.data.iter());
+                        out.extend(v.data.iter());
+                    }
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn recode_to_int8_preserves_structure_and_shrinks() {
+        let src = write_source("r_src_sharded", StoreKind::Dense, 23, 3);
+        let dst = tmp("r_dst_int8");
+        let rep = recode_store(
+            &src,
+            &dst,
+            &RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.n_examples, 23);
+        assert_eq!(rep.kind, StoreKind::Dense);
+        assert_eq!(rep.src_codec, CodecId::Bf16);
+        assert_eq!(rep.dst_codec, CodecId::Int8);
+        assert_eq!(rep.version, 4);
+        assert!(rep.shrink() > 1.5, "shrink {}", rep.shrink());
+        // layout preserved: same shard counts, same summary grid
+        let src_meta = StoreMeta::load(&src).unwrap();
+        let dst_meta = StoreMeta::load(&dst).unwrap();
+        assert_eq!(dst_meta.shards, src_meta.shards);
+        assert_eq!(dst_meta.summary_chunk, src_meta.summary_chunk);
+        // values within the codec error of the source decode
+        let a = collect(&src);
+        let b = collect(&dst);
+        assert_eq!(a.len(), b.len());
+        let m = a.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let rel = CodecId::Int8.get().max_rel_error();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= rel * m + 1e-30, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn recode_reshards_and_regrids() {
+        let src = write_source("r_src_mono", StoreKind::Factored, 19, 1);
+        let dst = tmp("r_dst_resharded");
+        let rep = recode_store(
+            &src,
+            &dst,
+            &RecodeOptions {
+                codec: Some(CodecId::Bf16),
+                shards: Some(4),
+                summary_chunk: Some(3),
+                chunk_size: 4,
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.shards.as_ref().map(|s| s.len()), Some(4));
+        assert_eq!(rep.summary_chunk, Some(3));
+        assert_eq!(rep.version, 3, "bf16 resharded store stays pre-v4");
+        // bf16 -> bf16 is byte-exact on the record level
+        assert_eq!(collect(&src), collect(&dst));
+        // and back to a v1 store with no sidecar
+        let dst2 = tmp("r_dst_flat");
+        let rep = recode_store(
+            &dst,
+            &dst2,
+            &RecodeOptions {
+                codec: Some(CodecId::Bf16),
+                shards: Some(1),
+                summary_chunk: Some(0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.shards, None);
+        assert_eq!(rep.summary_chunk, None);
+        assert_eq!(rep.version, 1);
+        assert_eq!(collect(&src), collect(&dst2));
+    }
+
+    #[test]
+    fn recode_preserves_non_uniform_shard_layouts() {
+        // shard counts the uniform ceil rule cannot produce (the shape
+        // mid-extraction drops leave behind): keeping the layout must
+        // replay them EXACTLY, not re-bucket; and a v2 single-shard
+        // manifest must stay v2, not flatten to v1
+        let layers = vec![(4usize, 4usize)];
+        let mut rng = Rng::new(23);
+        for plan in [vec![2usize, 6, 3], vec![11]] {
+            let n: usize = plan.iter().sum();
+            let meta = StoreMeta {
+                kind: StoreKind::Dense,
+                tier: "small".into(),
+                f: 4,
+                c: 1,
+                layers: layers.clone(),
+                n_examples: 0,
+                shards: None,
+                summary_chunk: None,
+                codec: CodecId::Bf16,
+            };
+            let src = tmp(&format!("r_plan_src_{}", plan.len()));
+            let mut w = ShardedWriter::create_planned(&src, meta, plan.clone()).unwrap();
+            w.set_summary_chunk(4).unwrap();
+            let lg = vec![LayerGrads {
+                g: Mat::random_normal(n, 16, 1.0, &mut rng),
+                u: Mat::zeros(n, 4),
+                v: Mat::zeros(n, 4),
+            }];
+            w.append(&ExtractBatch { losses: vec![0.0; n], layers: lg, valid: n })
+                .unwrap();
+            let src_meta = w.finalize().unwrap();
+            assert_eq!(src_meta.shards, Some(plan.clone()), "planned writer layout");
+
+            let dst = tmp(&format!("r_plan_dst_{}", plan.len()));
+            let rep = recode_store(
+                &src,
+                &dst,
+                &RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(rep.shards, Some(plan.clone()), "layout re-bucketed");
+            assert_eq!(StoreMeta::load(&dst).unwrap().shards, Some(plan.clone()));
+            assert_eq!(rep.version, 4);
+            // records land in the same global order
+            assert_eq!(collect(&src).len(), collect(&dst).len());
+        }
+    }
+
+    #[test]
+    fn recode_refuses_in_place_even_under_different_spellings() {
+        let src = write_source("r_inplace", StoreKind::Dense, 8, 1);
+        let err = recode_store(&src, &src, &RecodeOptions::default()).unwrap_err();
+        assert!(format!("{err}").contains("in place"), "{err}");
+        // a different spelling of the same base must not slip past the
+        // guard and truncate the source mid-read
+        let parent = src.parent().unwrap();
+        let dotted = parent.join(".").join(src.file_name().unwrap());
+        assert_ne!(src, dotted, "raw paths differ by construction");
+        let err = recode_store(&src, &dotted, &RecodeOptions::default()).unwrap_err();
+        assert!(format!("{err}").contains("in place"), "{err}");
+        // a target whose manifest is a symlink to the source's (the
+        // aliasing path resolution can't see) must also be refused
+        #[cfg(unix)]
+        {
+            let alias = parent.join("r_inplace_alias");
+            let _ = std::fs::remove_file(StoreMeta::meta_path(&alias));
+            std::os::unix::fs::symlink(
+                StoreMeta::meta_path(&src),
+                StoreMeta::meta_path(&alias),
+            )
+            .unwrap();
+            let err = recode_store(&src, &alias, &RecodeOptions::default()).unwrap_err();
+            assert!(format!("{err}").contains("in place"), "{err}");
+            let _ = std::fs::remove_file(StoreMeta::meta_path(&alias));
+        }
+        // and the source is still intact and openable
+        assert!(ShardSet::open(&src).is_ok());
+    }
+
+    #[test]
+    fn recode_without_codec_keeps_the_source_codec() {
+        // resharding a quantized store must not silently transcode it
+        let src = write_source("r_keep_codec_src", StoreKind::Dense, 12, 1);
+        let i8_base = tmp("r_keep_codec_i8");
+        recode_store(
+            &src,
+            &i8_base,
+            &RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() },
+        )
+        .unwrap();
+        let resharded = tmp("r_keep_codec_resharded");
+        let rep = recode_store(
+            &i8_base,
+            &resharded,
+            &RecodeOptions { shards: Some(3), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.src_codec, CodecId::Int8);
+        assert_eq!(rep.dst_codec, CodecId::Int8, "omitted --codec transcoded the store");
+        assert_eq!(StoreMeta::load(&resharded).unwrap().codec, CodecId::Int8);
+        // int8 -> int8 re-encoding keeps every quantized integer; only
+        // the f32 scale may wobble by an ulp, so values match to ~2^-22
+        let a = collect(&i8_base);
+        let b = collect(&resharded);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= x.abs() * 3e-7 + 1e-30, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn inspect_reports_layout_and_coverage() {
+        let src = write_source("r_inspect", StoreKind::Dense, 23, 3);
+        let insp = inspect_store(&src).unwrap();
+        assert_eq!(insp.version, 3);
+        assert_eq!(insp.shard_files.len(), 3);
+        assert_eq!(insp.shard_files.iter().map(|s| s.2).sum::<usize>(), 23);
+        assert_eq!(insp.on_disk_bytes, insp.meta.total_bytes());
+        assert_eq!(insp.decoded_bytes, 23 * insp.meta.decoded_bytes_per_example() as u64);
+        let (grid, _, covered, _) = insp.summaries.unwrap();
+        assert_eq!(grid, 5);
+        assert_eq!(covered, 23);
+        let text = format!("{insp}");
+        assert!(text.contains("codec bf16"), "{text}");
+        assert!(text.contains("v2 sharded"), "{text}");
+        // the int8 migration shows up in the report
+        let dst = tmp("r_inspect_int8");
+        let opts = RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() };
+        recode_store(&src, &dst, &opts).unwrap();
+        let text = format!("{}", inspect_store(&dst).unwrap());
+        assert!(text.contains("codec int8"), "{text}");
+        assert!(text.contains("store v4"), "{text}");
+    }
+}

@@ -6,36 +6,45 @@
 //! Both share one record encoder, so a sharded store holds bit-identical
 //! records to its monolithic counterpart.
 //!
+//! Records are encoded segment by segment through the store's codec
+//! (`super::codec`, from `StoreMeta::codec`): bf16 by default, int8 /
+//! int4 for v4 quantized stores.  `append_chunk` re-encodes a DECODED
+//! chunk from any source store, which is the streaming primitive
+//! behind `lorif store recode`.
+//!
 //! Both writers also build the v3 chunk-summary pruning sidecar
 //! (`crate::sketch`) as records stream through: per summary chunk
 //! (default grid [`DEFAULT_SUMMARY_CHUNK`], restarting at every shard
-//! roll) the bf16-decoded records are folded into max-norm / centroid /
-//! radius bounds, written to `<base>.summaries` at finalize.  Disable
+//! roll) the codec-decoded records are folded into max-norm / centroid
+//! / radius bounds, written to `<base>.summaries` at finalize.  Disable
 //! (or resize the grid) with [`StoreWriter::set_summary_chunk`] /
 //! [`ShardedWriter::set_summary_chunk`] before the first append.
 
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
+use super::codec::Codec;
 use super::format::{StoreKind, StoreMeta};
+use super::reader::{Chunk, ChunkLayer};
 use crate::runtime::ExtractBatch;
 use crate::sketch::{SummaryBuilder, DEFAULT_SUMMARY_CHUNK};
-use crate::util::bf16;
 
-/// Encode example `ex` of an extract batch into `out` (appends).
+/// Encode example `ex` of an extract batch into `out` (appends),
+/// segment by segment through the store's codec.
 fn encode_batch_example(
     meta: &StoreMeta,
     batch: &ExtractBatch,
     ex: usize,
     out: &mut Vec<u8>,
 ) -> anyhow::Result<()> {
+    let codec = meta.codec.get();
     for (l, lg) in batch.layers.iter().enumerate() {
         let (d1, d2) = meta.layers[l];
         match meta.kind {
             StoreKind::Dense => {
                 let row = lg.g.row(ex);
                 anyhow::ensure!(row.len() == d1 * d2, "dense row len");
-                bf16::encode_slice(row, out);
+                codec.encode(row, out);
             }
             StoreKind::Factored => {
                 let u = lg.u.row(ex);
@@ -44,8 +53,8 @@ fn encode_batch_example(
                     u.len() == d1 * meta.c && v.len() == d2 * meta.c,
                     "factor row len"
                 );
-                bf16::encode_slice(u, out);
-                bf16::encode_slice(v, out);
+                codec.encode(u, out);
+                codec.encode(v, out);
             }
         }
     }
@@ -59,10 +68,49 @@ fn encode_dense_row(
     out: &mut Vec<u8>,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(meta.kind == StoreKind::Dense);
+    let codec = meta.codec.get();
     for (l, row) in per_layer.iter().enumerate() {
         let (d1, d2) = meta.layers[l];
         anyhow::ensure!(row.len() == d1 * d2, "dense row len");
-        bf16::encode_slice(row, out);
+        codec.encode(row, out);
+    }
+    Ok(())
+}
+
+/// Encode example `ex` of a DECODED chunk into `out` (appends) — the
+/// re-encode primitive behind `store::recode`: a decoded chunk from any
+/// source store is written back out under this writer's codec.
+fn encode_chunk_example(
+    meta: &StoreMeta,
+    chunk: &Chunk,
+    ex: usize,
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        chunk.layers.len() == meta.layers.len(),
+        "chunk has {} layers, store has {}",
+        chunk.layers.len(),
+        meta.layers.len()
+    );
+    anyhow::ensure!(ex < chunk.count, "example {ex} out of chunk range");
+    let codec = meta.codec.get();
+    for (l, layer) in chunk.layers.iter().enumerate() {
+        let (d1, d2) = meta.layers[l];
+        match (meta.kind, layer) {
+            (StoreKind::Dense, ChunkLayer::Dense { g }) => {
+                anyhow::ensure!(g.cols == d1 * d2, "dense layer {l} width");
+                codec.encode(g.row(ex), out);
+            }
+            (StoreKind::Factored, ChunkLayer::Factored { u, v }) => {
+                anyhow::ensure!(
+                    u.cols == d1 * meta.c && v.cols == d2 * meta.c,
+                    "factor layer {l} width"
+                );
+                codec.encode(u.row(ex), out);
+                codec.encode(v.row(ex), out);
+            }
+            _ => anyhow::bail!("chunk layer {l} kind does not match the store kind"),
+        }
     }
     Ok(())
 }
@@ -137,6 +185,21 @@ impl StoreWriter {
         Ok(())
     }
 
+    /// Append every example of a DECODED chunk, re-encoding through this
+    /// writer's codec (the `store recode` streaming path).
+    pub fn append_chunk(&mut self, chunk: &Chunk) -> anyhow::Result<()> {
+        for ex in 0..chunk.count {
+            self.scratch.clear();
+            encode_chunk_example(&self.meta, chunk, ex, &mut self.scratch)?;
+            self.file.write_all(&self.scratch)?;
+            if let Some(sb) = self.summaries.as_mut() {
+                sb.add_record(&self.scratch)?;
+            }
+            self.written += 1;
+        }
+        Ok(())
+    }
+
     /// Flush data and write the metadata + summary sidecars.
     pub fn finalize(mut self) -> anyhow::Result<StoreMeta> {
         self.file.flush()?;
@@ -160,6 +223,10 @@ pub struct ShardedWriter {
     meta: StoreMeta,
     max_shards: usize,
     per_shard: usize,
+    /// explicit per-shard example counts ([`ShardedWriter::create_planned`]):
+    /// roll boundaries replicate an existing layout exactly instead of
+    /// the uniform ceil rule (`store recode` with the layout kept)
+    plan: Option<Vec<usize>>,
     file: BufWriter<std::fs::File>,
     /// examples written per shard; the last entry is the open shard
     counts: Vec<usize>,
@@ -190,11 +257,33 @@ impl ShardedWriter {
             meta,
             max_shards: shards,
             per_shard,
+            plan: None,
             file,
             counts: vec![0],
             scratch: Vec::new(),
             summaries,
         })
+    }
+
+    /// A writer that rolls shards at EXPLICIT example counts instead of
+    /// the uniform ceil rule — `store recode` uses this to preserve a
+    /// source store's shard boundaries byte-for-byte, whatever rule
+    /// (or mid-extraction drops) originally produced them.  Extra
+    /// examples beyond the plan's total land in the last shard;
+    /// trailing planned shards are dropped if fewer arrive.
+    pub fn create_planned(
+        base: &Path,
+        meta: StoreMeta,
+        plan: Vec<usize>,
+    ) -> anyhow::Result<ShardedWriter> {
+        anyhow::ensure!(!plan.is_empty(), "shard plan must name at least one shard");
+        anyhow::ensure!(
+            plan.iter().all(|&c| c >= 1),
+            "shard plan entries must be >= 1"
+        );
+        let mut w = ShardedWriter::create(base, meta, plan.len(), plan.iter().sum())?;
+        w.plan = Some(plan);
+        Ok(w)
     }
 
     pub fn meta(&self) -> &StoreMeta {
@@ -233,7 +322,11 @@ impl ShardedWriter {
     /// maps to one contiguous seek.
     fn roll_if_full(&mut self) -> anyhow::Result<()> {
         let open = self.counts.len() - 1;
-        if self.counts[open] >= self.per_shard && self.counts.len() < self.max_shards {
+        let cap = match &self.plan {
+            Some(plan) => plan[open],
+            None => self.per_shard,
+        };
+        if self.counts[open] >= cap && self.counts.len() < self.max_shards {
             self.file.flush()?;
             if let Some(sb) = self.summaries.as_mut() {
                 sb.flush()?;
@@ -275,6 +368,18 @@ impl ShardedWriter {
         self.scratch.clear();
         encode_dense_row(&self.meta, per_layer, &mut self.scratch)?;
         self.write_record()
+    }
+
+    /// Append every example of a DECODED chunk, re-encoding through this
+    /// writer's codec (the `store recode` streaming path; examples may
+    /// span shard boundaries).
+    pub fn append_chunk(&mut self, chunk: &Chunk) -> anyhow::Result<()> {
+        for ex in 0..chunk.count {
+            self.scratch.clear();
+            encode_chunk_example(&self.meta, chunk, ex, &mut self.scratch)?;
+            self.write_record()?;
+        }
+        Ok(())
     }
 
     /// Flush data and write the manifest (v2 shard sizes, v3 when the

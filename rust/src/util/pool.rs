@@ -17,10 +17,27 @@ pub fn effective_threads(requested: usize) -> usize {
     }
 }
 
+/// Best-effort text of a panic payload (`&str` / `String` payloads,
+/// which is what `panic!` produces).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run `jobs` closures on up to `threads` workers (0 = auto), returning
 /// results in job order.  The first job error stops further jobs from
-/// being claimed (in-flight ones finish) and is propagated; a panicking
-/// job propagates the panic.
+/// being claimed (in-flight ones finish) and is propagated.  A
+/// PANICKING job is caught on its worker and surfaces as that job's
+/// error, carrying the original panic message — it must not escape the
+/// worker thread, where `std::thread::scope` would replace it with an
+/// opaque "a scoped thread panicked" double panic; and the result slots
+/// recover from mutex poisoning instead of compounding one failure with
+/// a `PoisonError` unwrap in the collector.
 pub fn run<T, F>(threads: usize, jobs: usize, f: F) -> anyhow::Result<Vec<T>>
 where
     T: Send,
@@ -47,11 +64,23 @@ where
                 if i >= jobs {
                     break;
                 }
-                let out = f(i);
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+                    .unwrap_or_else(|payload| {
+                        Err(anyhow::anyhow!(
+                            "worker job {i} panicked: {}",
+                            panic_message(payload.as_ref())
+                        ))
+                    });
                 if out.is_err() {
                     failed.store(true, Ordering::Relaxed);
                 }
-                *slots[i].lock().unwrap() = Some(out);
+                // a poisoned slot just means some other access panicked
+                // mid-write; the data is a plain Option we are about to
+                // overwrite, so recover it rather than panicking again
+                match slots[i].lock() {
+                    Ok(mut slot) => *slot = Some(out),
+                    Err(poisoned) => *poisoned.into_inner() = Some(out),
+                }
             });
         }
     });
@@ -59,7 +88,7 @@ where
     // non-Ok entry in order is the error to report
     let mut out = Vec::with_capacity(jobs);
     for m in slots {
-        match m.into_inner().unwrap() {
+        match m.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner()) {
             Some(Ok(v)) => out.push(v),
             Some(Err(e)) => return Err(e),
             None => {
@@ -105,6 +134,25 @@ mod tests {
             Ok(i)
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn panicking_job_surfaces_as_an_error_with_its_message() {
+        // regression: a worker panic used to unwind through
+        // thread::scope, which re-panics with an opaque "a scoped
+        // thread panicked" and (via the poisoned result slot) turned
+        // the collector's unwrap into a second panic.  The original
+        // message must reach the caller as an ordinary error.
+        let r: anyhow::Result<Vec<usize>> = run(3, 8, |i| {
+            if i == 4 {
+                panic!("boom in job {i}");
+            }
+            Ok(i)
+        });
+        let err = r.unwrap_err();
+        let text = format!("{err}");
+        assert!(text.contains("panicked"), "{text}");
+        assert!(text.contains("boom in job 4"), "{text}");
     }
 
     #[test]

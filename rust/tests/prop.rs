@@ -49,31 +49,47 @@ fn for_each_case(name: &str, mut f: impl FnMut(u64, &mut Rng)) {
 #[test]
 fn prop_store_layout_bijective() {
     // layer_span offsets tile the record exactly, for random layer sets
+    // and every record codec (the encoded byte length of each layer is
+    // the codec's per-segment encoded_len)
+    use lorif::store::{Codec, CodecId};
     for_each_case("store-layout", |seed, rng| {
         let n_layers = 1 + rng.below(6);
         let layers: Vec<(usize, usize)> =
             (0..n_layers).map(|_| (1 + rng.below(64), 1 + rng.below(64))).collect();
         let c = 1 + rng.below(4);
-        for kind in [StoreKind::Dense, StoreKind::Factored] {
-            let meta = StoreMeta {
-                kind,
-                tier: "small".into(),
-                f: 4,
-                c,
-                layers: layers.clone(),
-                n_examples: 7,
-                shards: None,
-                summary_chunk: None,
-            };
-            let mut end = 0;
-            for l in 0..n_layers {
-                let (off, len) = meta.layer_span(l).unwrap();
-                assert_eq!(off, end, "seed {seed}: layer {l} not contiguous");
-                end = off + len * 2;
+        for codec in CodecId::ALL {
+            for kind in [StoreKind::Dense, StoreKind::Factored] {
+                let meta = StoreMeta {
+                    kind,
+                    tier: "small".into(),
+                    f: 4,
+                    c,
+                    layers: layers.clone(),
+                    n_examples: 7,
+                    shards: None,
+                    summary_chunk: None,
+                    codec,
+                };
+                let enc = codec.get();
+                let mut end = 0;
+                for l in 0..n_layers {
+                    let (off, flen) = meta.layer_span(l).unwrap();
+                    assert_eq!(off, end, "seed {seed}: {codec:?} layer {l} not contiguous");
+                    let (d1, d2) = layers[l];
+                    let (want_flen, blen) = match kind {
+                        StoreKind::Dense => (d1 * d2, enc.encoded_len(d1 * d2)),
+                        StoreKind::Factored => (
+                            c * (d1 + d2),
+                            enc.encoded_len(c * d1) + enc.encoded_len(c * d2),
+                        ),
+                    };
+                    assert_eq!(flen, want_flen, "seed {seed}: {codec:?}");
+                    end = off + blen;
+                }
+                assert_eq!(end, meta.bytes_per_example(), "seed {seed}: {codec:?}");
+                // one past the end is an error, not a panic
+                assert!(meta.layer_span(n_layers).is_err(), "seed {seed}");
             }
-            assert_eq!(end, meta.bytes_per_example(), "seed {seed}");
-            // one past the end is an error, not a panic
-            assert!(meta.layer_span(n_layers).is_err(), "seed {seed}");
         }
     });
 }
@@ -403,6 +419,7 @@ fn prop_store_roundtrip_v1_and_v2() {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: lorif::store::CodecId::Bf16,
         };
         let data = random_layers(n, &dims, c, rng);
 
@@ -517,6 +534,7 @@ fn prop_sharded_scoring_equals_monolithic() {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: lorif::store::CodecId::Bf16,
         };
         let data = random_layers(n, &dims, 1, rng);
         let batch_layers: Vec<LayerGrads> = data
@@ -609,6 +627,7 @@ fn prop_shard_boundaries_partition_examples() {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: lorif::store::CodecId::Bf16,
         };
         let data = random_layers(n, &dims, 1, rng);
         let base = prop_tmp_base("partition", seed);
@@ -683,6 +702,7 @@ fn prop_streaming_topk_equals_full_matrix_all_kernels() {
                 n_examples: 0,
                 shards: None,
                 summary_chunk: None,
+                codec: lorif::store::CodecId::Bf16,
             };
             let v1 = prop_tmp_base(&format!("sink_{}_v1", kind.as_str()), seed);
             let mut w = StoreWriter::create(&v1, meta.clone()).unwrap();
@@ -844,6 +864,7 @@ fn prop_truncated_or_corrupted_sharded_store_fails_cleanly() {
             n_examples: 0,
             shards: None,
             summary_chunk: None,
+            codec: lorif::store::CodecId::Bf16,
         };
         let data = random_layers(n, &dims, 1, rng);
         let base = prop_tmp_base("truncate", seed);
@@ -944,6 +965,7 @@ fn prop_exact_pruning_equals_full_scan_all_kernels() {
                 n_examples: 0,
                 shards: None,
                 summary_chunk: None,
+                codec: lorif::store::CodecId::Bf16,
             };
             let v1 = prop_tmp_base(&format!("prune_{}_v1", kind.as_str()), seed);
             let mut w = StoreWriter::create(&v1, meta.clone()).unwrap();
@@ -1102,6 +1124,7 @@ fn prop_cached_scoring_bit_identical_all_kernels() {
                 n_examples: 0,
                 shards: None,
                 summary_chunk: None,
+                codec: lorif::store::CodecId::Bf16,
             };
             let v1 = prop_tmp_base(&format!("cache_{}_v1", kind.as_str()), seed);
             let mut w = StoreWriter::create(&v1, meta.clone()).unwrap();
@@ -1279,4 +1302,370 @@ fn prop_cached_scoring_bit_identical_all_kernels() {
             }
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// store-codec invariants (store::codec, store::recode)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_codec_roundtrip_error_bounds() {
+    // For every codec and random segments across magnitudes: the
+    // encoded length matches `encoded_len`, and every decoded value is
+    // within `max_rel_error() * (scale-group absmax)` of the original —
+    // the exact contract the summary-sidecar inflation relies on.
+    use lorif::store::{Codec, CodecId, INT4_GROUP};
+
+    for_each_case("codec-bounds", |seed, rng| {
+        for id in CodecId::ALL {
+            let codec = id.get();
+            let n = 1 + rng.below(200);
+            let mag = 10f64.powi(rng.below(7) as i32 - 3);
+            let src: Vec<f32> = (0..n).map(|_| (rng.normal() * mag) as f32).collect();
+            let mut bytes = Vec::new();
+            codec.encode(&src, &mut bytes);
+            assert_eq!(bytes.len(), codec.encoded_len(n), "seed {seed}: {id:?} stride");
+            let mut back = vec![0.0f32; n];
+            codec.decode(&bytes, &mut back);
+            // int4 scales per INT4_GROUP values; bf16/int8 per segment
+            let group = if id == CodecId::Int4 { INT4_GROUP } else { n };
+            for g in (0..n).step_by(group) {
+                let hi = (g + group).min(n);
+                let m = src[g..hi].iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                for i in g..hi {
+                    assert!(
+                        (src[i] - back[i]).abs() <= codec.max_rel_error() * m + 1e-30,
+                        "seed {seed}: {id:?} n={n} i={i}: {} -> {} (group absmax {m})",
+                        src[i],
+                        back[i]
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_codec_recode_roundtrip_is_stable_and_preserves_structure() {
+    // Random stores migrated bf16 -> int8 -> bf16 -> int8: every hop
+    // preserves count/kind/shard layout/summary grid, the int8 decode
+    // is within the codec bound of the source, and the second int8
+    // store decodes within one bf16 rounding of the first (the
+    // quantized integers are stable; only the f32 scale may wobble).
+    use lorif::store::{recode_store, Codec, CodecId, RecodeOptions};
+
+    fn collect(base: &std::path::Path) -> Vec<f32> {
+        let set = ShardSet::open(base).unwrap();
+        let mut out = Vec::new();
+        set.stream(5, false, |chunk| {
+            for layer in &chunk.layers {
+                match layer {
+                    lorif::store::ChunkLayer::Dense { g } => out.extend(g.data.iter()),
+                    lorif::store::ChunkLayer::Factored { u, v } => {
+                        out.extend(u.data.iter());
+                        out.extend(v.data.iter());
+                    }
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    for_each_case("recode-roundtrip", |seed, rng| {
+        let n_layers = 1 + rng.below(2);
+        let dims: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (1 + rng.below(7), 1 + rng.below(7))).collect();
+        let c = 1 + rng.below(3.min(dims.iter().map(|&(a, b)| a.min(b)).min().unwrap()));
+        let n = 6 + rng.below(30);
+        let shards = 1 + rng.below(4);
+        let grid = 3 + rng.below(4);
+        let kind = if rng.below(2) == 0 { StoreKind::Dense } else { StoreKind::Factored };
+        let meta = StoreMeta {
+            kind,
+            tier: "small".into(),
+            f: 4,
+            c,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Bf16,
+        };
+        let data = random_layers(n, &dims, c, rng);
+        let base = prop_tmp_base("recode_src", seed);
+        if shards <= 1 {
+            let mut w = StoreWriter::create(&base, meta).unwrap();
+            w.set_summary_chunk(grid).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "rb"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+        } else {
+            let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+            w.set_summary_chunk(grid).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "rb"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+        }
+        let src_meta = StoreMeta::load(&base).unwrap();
+        let src_vals = collect(&base);
+
+        // hop 1: bf16 -> int8, layout preserved
+        let b8 = prop_tmp_base("recode_i8", seed);
+        let rep = recode_store(
+            &base,
+            &b8,
+            &RecodeOptions {
+                codec: Some(CodecId::Int8),
+                chunk_size: 1 + rng.below(9),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.n_examples, n, "seed {seed}");
+        assert_eq!(rep.kind, kind, "seed {seed}");
+        assert_eq!(rep.version, 4, "seed {seed}");
+        let m8 = StoreMeta::load(&b8).unwrap();
+        assert_eq!(m8.shards, src_meta.shards, "seed {seed}: shard layout changed");
+        assert_eq!(m8.summary_chunk, src_meta.summary_chunk, "seed {seed}: grid changed");
+        assert_eq!(m8.codec, CodecId::Int8, "seed {seed}");
+        assert!(rep.dst_bytes < rep.src_bytes, "seed {seed}: int8 did not shrink");
+        let v8 = collect(&b8);
+        assert_eq!(v8.len(), src_vals.len(), "seed {seed}");
+        let absmax = src_vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let rel = CodecId::Int8.get().max_rel_error();
+        for (a, b) in src_vals.iter().zip(&v8) {
+            assert!(
+                (a - b).abs() <= rel * absmax + 1e-30,
+                "seed {seed}: int8 decode drifted: {a} vs {b}"
+            );
+        }
+
+        // hop 2: int8 -> bf16 (back to a pre-v4 manifest)
+        let bb = prop_tmp_base("recode_bf", seed);
+        let rep = recode_store(
+            &b8,
+            &bb,
+            &RecodeOptions { codec: Some(CodecId::Bf16), ..Default::default() },
+        )
+        .unwrap();
+        assert!(rep.version <= 3, "seed {seed}: bf16 store must stay pre-v4");
+        let vb = collect(&bb);
+        for (a, b) in v8.iter().zip(&vb) {
+            assert!(
+                (a - b).abs() <= a.abs() / 256.0 + 1e-30,
+                "seed {seed}: bf16 hop drifted: {a} vs {b}"
+            );
+        }
+
+        // hop 3: bf16 -> int8 again; the quantized values are stable
+        let b8b = prop_tmp_base("recode_i8b", seed);
+        recode_store(
+            &bb,
+            &b8b,
+            &RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() },
+        )
+        .unwrap();
+        let m8b = StoreMeta::load(&b8b).unwrap();
+        assert_eq!(m8b.shards, src_meta.shards, "seed {seed}");
+        let v8b = collect(&b8b);
+        for (a, b) in v8.iter().zip(&v8b) {
+            assert!(
+                (a - b).abs() <= a.abs() / 128.0 + 1e-30,
+                "seed {seed}: int8 -> bf16 -> int8 not stable: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_codec_pruned_equals_full_and_cached_equals_cold() {
+    // Per codec (bf16, int8, int4), per kernel (graddot on dense, lorif
+    // on factored), over clustered stores with well-separated top
+    // scores: (a) the pruned top-k pass EXACTLY matches that codec's
+    // own full scan with every skipped byte accounted, (b) scoring
+    // through a decoded-chunk cache is bit-identical to cold scoring,
+    // and (c) graddot's top-k overlap vs the bf16 store is >= 0.95.
+    // Across the sweep the clustered data must actually trigger skips.
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::lorif::LorifScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::curvature::TruncatedCurvature;
+    use lorif::sketch::PruneMode;
+    use lorif::store::{recode_store, ChunkCache, CodecId, RecodeOptions};
+
+    let single_case =
+        std::env::var("LORIF_PROP_SEED").map(|s| !s.trim().is_empty()).unwrap_or(false);
+    let mut total_skipped = 0u64;
+    for_each_case("codec-scoring", |seed, rng| {
+        // d1, d2 >= 3 keeps D >= 9 > r + oversample for the rSVD stage
+        // (same floor the other scorer properties use)
+        let dims: Vec<(usize, usize)> = vec![(3 + rng.below(3), 3 + rng.below(3))];
+        let c = 1 + rng.below(2);
+        let grid = 4;
+        let n = grid * (4 + rng.below(3));
+        let nq = 1 + rng.below(3);
+        let shards = 1 + rng.below(3);
+        let k = 1 + rng.below(3);
+
+        // constant-valued rows with geometrically separated magnitudes
+        // in the strong chunk: 25% gaps dwarf every codec's error, so
+        // the true top-k is unambiguous under quantization
+        let data: Vec<LayerGrads> = dims
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(n, d1 * d2);
+                let mut u = Mat::zeros(n, d1 * c);
+                let mut v = Mat::zeros(n, d2 * c);
+                for t in 0..n {
+                    let a = if t < grid { 3.0 * 0.75f32.powi(t as i32) } else { 0.01 };
+                    g.row_mut(t).iter_mut().for_each(|x| *x = a);
+                    u.row_mut(t).iter_mut().for_each(|x| *x = a);
+                    // tiny jitter keeps the factored curvature full rank
+                    // without threatening the 25% top-score separation
+                    v.row_mut(t)
+                        .iter_mut()
+                        .for_each(|x| *x = 1.0 + 0.01 * rng.normal() as f32);
+                }
+                LayerGrads { g, u, v }
+            })
+            .collect();
+
+        let mut bases = std::collections::BTreeMap::new();
+        for kind in [StoreKind::Dense, StoreKind::Factored] {
+            let meta = StoreMeta {
+                kind,
+                tier: "small".into(),
+                f: 4,
+                c,
+                layers: dims.clone(),
+                n_examples: 0,
+                shards: None,
+                summary_chunk: None,
+                codec: CodecId::Bf16,
+            };
+            let base = prop_tmp_base(&format!("codecsc_{}", kind.as_str()), seed);
+            if shards <= 1 {
+                let mut w = StoreWriter::create(&base, meta).unwrap();
+                w.set_summary_chunk(grid).unwrap();
+                append_in_batches(&data, n, &mut Rng::labeled(seed, "cs"), |b| {
+                    w.append(b).unwrap()
+                });
+                w.finalize().unwrap();
+            } else {
+                let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+                w.set_summary_chunk(grid).unwrap();
+                append_in_batches(&data, n, &mut Rng::labeled(seed, "cs"), |b| {
+                    w.append(b).unwrap()
+                });
+                w.finalize().unwrap();
+            }
+            bases.insert(kind.as_str(), base);
+        }
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::from_vec(nq, d1 * d2, vec![1.0; nq * d1 * d2]),
+                u: Mat::from_vec(nq, d1 * c, vec![1.0; nq * d1 * c]),
+                v: Mat::from_vec(nq, d2 * c, vec![1.0; nq * d2 * c]),
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c, proj_dims: dims.clone(), layers: qlayers };
+
+        let mut bf16_topk: Option<Vec<Vec<usize>>> = None;
+        for codec in CodecId::ALL {
+            // per-codec store: the bf16 original, or a recode of it
+            let store_for = |kind: &str| {
+                let src = &bases[kind];
+                if codec == CodecId::Bf16 {
+                    src.clone()
+                } else {
+                    let dst = prop_tmp_base(
+                        &format!("codecsc_{kind}_{}", codec.as_str()),
+                        seed,
+                    );
+                    let opts =
+                        RecodeOptions { codec: Some(codec), ..Default::default() };
+                    recode_store(src, &dst, &opts).unwrap();
+                    dst
+                }
+            };
+            let dense_base = store_for("dense");
+            let fact_base = store_for("factored");
+
+            let mut check = |name: &str, scorer: &mut dyn Scorer| -> Vec<Vec<usize>> {
+                // (a) this codec's own full scan is the exactness bar
+                let full = scorer.score(&qg).unwrap();
+                let pruned = scorer.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+                assert_eq!(
+                    pruned.topk(k),
+                    full.topk(k),
+                    "seed {seed}: {name}/{codec:?} pruned top-k != full scan"
+                );
+                assert_eq!(
+                    pruned.bytes_read + pruned.bytes_skipped,
+                    full.bytes_read,
+                    "seed {seed}: {name}/{codec:?} byte accounting broken"
+                );
+                total_skipped += pruned.bytes_skipped;
+                full.topk(k)
+            };
+
+            let open = |b: &std::path::PathBuf| ShardSet::open(b).unwrap();
+            let mut gd = GradDotScorer::new(open(&dense_base));
+            gd.prune = PruneMode::Exact;
+            let gd_topk = check("graddot", &mut gd);
+
+            let curv = TruncatedCurvature::build(&open(&fact_base), 3, 3, 2, 0.1, seed).unwrap();
+            let mut lf = LorifScorer::new(open(&fact_base), curv);
+            lf.prune = PruneMode::Exact;
+            check("lorif", &mut lf);
+
+            // (b) cached scoring is bit-identical per codec
+            let cold = GradDotScorer::new(open(&dense_base)).score(&qg).unwrap();
+            let mut warm_set = open(&dense_base);
+            warm_set.set_cache(Some(ChunkCache::with_capacity(32 << 20)));
+            let mut warm = GradDotScorer::new(warm_set);
+            for pass in 0..2 {
+                let got = warm.score(&qg).unwrap();
+                assert_eq!(
+                    got.scores().data,
+                    cold.scores().data,
+                    "seed {seed}: {codec:?} cached pass {pass} diverged from cold"
+                );
+                if pass == 1 {
+                    assert!(got.cache_hits > 0, "seed {seed}: {codec:?} warm pass missed");
+                    assert_eq!(got.cache_misses, 0, "seed {seed}: {codec:?}");
+                }
+            }
+
+            // (c) overlap@k against the bf16 reference
+            match &bf16_topk {
+                None => bf16_topk = Some(gd_topk),
+                Some(reference) => {
+                    let mut inter = 0usize;
+                    let mut total = 0usize;
+                    for (a, b) in reference.iter().zip(&gd_topk) {
+                        total += a.len();
+                        inter += a.iter().filter(|i| b.contains(i)).count();
+                    }
+                    let overlap = inter as f64 / total.max(1) as f64;
+                    assert!(
+                        overlap >= 0.95,
+                        "seed {seed}: {codec:?} overlap@{k} = {overlap} < 0.95"
+                    );
+                }
+            }
+        }
+    });
+    if !single_case {
+        assert!(
+            total_skipped > 0,
+            "clustered codec stores across the whole sweep never skipped a byte"
+        );
+    }
 }

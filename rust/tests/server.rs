@@ -98,6 +98,7 @@ fn write_test_store(name: &str, n: usize) -> std::path::PathBuf {
         n_examples: 0,
         shards: None,
         summary_chunk: None,
+        codec: lorif::store::CodecId::Bf16,
     };
     let mut rng = Rng::new(7);
     let layers: Vec<LayerGrads> = DIMS
