@@ -4,7 +4,9 @@
 //! scoring throughput, reconstruct+project throughput, store streaming
 //! bandwidth (sync vs prefetch), sharded multi-threaded scoring vs the
 //! single-reader monolithic path, full-matrix vs streaming-top-k score
-//! sinks (latency + peak score memory), and (with `--features xla`) the
+//! sinks (latency + peak score memory), the quantized-domain scoring
+//! roofline (per-kernel on-disk GB/s, `--quant-score on` vs
+//! decode-then-score, per int codec), and (with `--features xla`) the
 //! XLA-executable scorer vs the Rust-native scorer.  The before/after
 //! log lives in EXPERIMENTS.md §Perf.
 //!
@@ -515,6 +517,141 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
+        // quantized-domain scoring roofline: per quant-native store
+        // kernel x int codec, on-disk GB/s with --quant-score on
+        // (integer dot products over the encoded bytes, scales folded
+        // in) vs off (decode-then-score), on the recoded stores from
+        // the codec matrix above.  Measured in the low-Nq serving
+        // regime where per-chunk decode cost is NOT amortized over a
+        // large query batch — the I/O-bound pass Fig 3 profiles.
+        // GB/s is on-disk bytes / wall time, so on the same store the
+        // ratio is a pure hot-path speedup.  (lorif is omitted: its
+        // factored kernel decodes in-kernel, gaining only cache
+        // residency, not a scoring-loop win.)
+        let mut roofline_fields: Vec<(&'static str, lorif::util::json::Value)> = Vec::new();
+        {
+            use lorif::attribution::logra::LograScorer;
+            use lorif::attribution::trackstar::TrackStarScorer;
+            use lorif::curvature::DenseCurvature;
+            use lorif::store::{CodecId, QuantScore};
+            use std::sync::Arc;
+
+            let nq_r = 4usize;
+            let rlayers: Vec<QueryLayer> = layers
+                .iter()
+                .map(|&(d1, d2)| QueryLayer {
+                    g: Mat::random_normal(nq_r, d1 * d2, 1.0, &mut rng),
+                    u: Mat::zeros(nq_r, d1),
+                    v: Mat::zeros(nq_r, d2),
+                })
+                .collect();
+            let qr = QueryGrads {
+                n_query: nq_r,
+                c: 1,
+                proj_dims: layers.clone(),
+                layers: rlayers,
+            };
+
+            println!("quant-score roofline (on-disk GB/s, Nq={nq_r}, k={k}):");
+            println!("  kernel     codec  decode GB/s  quant GB/s  speedup");
+            for codec in [CodecId::Int8, CodecId::Int4] {
+                let base = dir.join(format!("codec_{}", codec.as_str()));
+                let disk_bytes = ShardSet::open(&base)?.meta.total_bytes();
+                let curv =
+                    Arc::new(DenseCurvature::build(&ShardSet::open(&base)?, 0.1)?);
+                let mut gbps = |s: &mut dyn Scorer| {
+                    let t = time(3, || {
+                        let _ = s.score_sink(&qr, SinkSpec::TopK(k)).unwrap();
+                    });
+                    disk_bytes as f64 / t / 1e9
+                };
+                let mut kernel_rates: Vec<(&'static str, f64, f64)> = Vec::new();
+                {
+                    let mut mk = |quant: QuantScore| -> anyhow::Result<GradDotScorer> {
+                        let mut s = GradDotScorer::new(ShardSet::open(&base)?);
+                        s.score_threads = 1;
+                        s.prune = PruneMode::Off;
+                        s.quant = quant;
+                        Ok(s)
+                    };
+                    let d = gbps(&mut mk(QuantScore::Off)?);
+                    let q = gbps(&mut mk(QuantScore::On)?);
+                    kernel_rates.push(("graddot", d, q));
+                }
+                {
+                    let mut mk = |quant: QuantScore| -> anyhow::Result<LograScorer> {
+                        let mut s =
+                            LograScorer::new(ShardSet::open(&base)?, Arc::clone(&curv));
+                        s.score_threads = 1;
+                        s.prune = PruneMode::Off;
+                        s.quant = quant;
+                        Ok(s)
+                    };
+                    let d = gbps(&mut mk(QuantScore::Off)?);
+                    let q = gbps(&mut mk(QuantScore::On)?);
+                    kernel_rates.push(("logra", d, q));
+                }
+                {
+                    let mut mk = |quant: QuantScore| -> anyhow::Result<TrackStarScorer> {
+                        let mut s = TrackStarScorer::new(
+                            ShardSet::open(&base)?,
+                            Arc::clone(&curv),
+                        );
+                        s.score_threads = 1;
+                        s.prune = PruneMode::Off;
+                        s.quant = quant;
+                        Ok(s)
+                    };
+                    let d = gbps(&mut mk(QuantScore::Off)?);
+                    let q = gbps(&mut mk(QuantScore::On)?);
+                    kernel_rates.push(("trackstar", d, q));
+                }
+                for (kname, d, q) in kernel_rates {
+                    println!(
+                        "  {kname:<9}  {:<5}  {d:>11.2}  {q:>10.2}  {:>6.2}x",
+                        codec.as_str(),
+                        q / d.max(1e-12)
+                    );
+                    let (fd, fq, fs) = match (kname, codec) {
+                        ("graddot", CodecId::Int8) => (
+                            "roofline_graddot_int8_decode_gbps",
+                            "roofline_graddot_int8_quant_gbps",
+                            "roofline_graddot_int8_speedup",
+                        ),
+                        ("graddot", CodecId::Int4) => (
+                            "roofline_graddot_int4_decode_gbps",
+                            "roofline_graddot_int4_quant_gbps",
+                            "roofline_graddot_int4_speedup",
+                        ),
+                        ("logra", CodecId::Int8) => (
+                            "roofline_logra_int8_decode_gbps",
+                            "roofline_logra_int8_quant_gbps",
+                            "roofline_logra_int8_speedup",
+                        ),
+                        ("logra", CodecId::Int4) => (
+                            "roofline_logra_int4_decode_gbps",
+                            "roofline_logra_int4_quant_gbps",
+                            "roofline_logra_int4_speedup",
+                        ),
+                        ("trackstar", CodecId::Int8) => (
+                            "roofline_trackstar_int8_decode_gbps",
+                            "roofline_trackstar_int8_quant_gbps",
+                            "roofline_trackstar_int8_speedup",
+                        ),
+                        ("trackstar", CodecId::Int4) => (
+                            "roofline_trackstar_int4_decode_gbps",
+                            "roofline_trackstar_int4_quant_gbps",
+                            "roofline_trackstar_int4_speedup",
+                        ),
+                        _ => unreachable!("kernel x codec table is exhaustive"),
+                    };
+                    roofline_fields.push((fd, d.into()));
+                    roofline_fields.push((fq, q.into()));
+                    roofline_fields.push((fs, (q / d.max(1e-12)).into()));
+                }
+            }
+        }
+
         // persist the sink + pruning comparison for the CI perf-smoke
         // artifact
         let mut fields: Vec<(&'static str, lorif::util::json::Value)> = vec![
@@ -535,6 +672,7 @@ fn main() -> anyhow::Result<()> {
         ];
         fields.extend(bytes_by_k);
         fields.extend(codec_fields);
+        fields.extend(roofline_fields);
         let doc = lorif::util::json::obj(fields);
         let out_dir = std::path::PathBuf::from("work/bench/results");
         std::fs::create_dir_all(&out_dir)?;

@@ -102,6 +102,7 @@ pub fn build_store_scorer_pool(
     let threads = p.cfg.score_threads;
     let prune = p.cfg.prune;
     let depth = p.cfg.prefetch_depth;
+    let quant = p.cfg.quant_score;
     let base = match method {
         Method::Lorif => p.factored_base(),
         Method::Logra | Method::GradDot | Method::TrackStar => p.dense_base(),
@@ -124,6 +125,7 @@ pub fn build_store_scorer_pool(
                 s.score_threads = threads;
                 s.prune = prune;
                 s.prefetch_depth = depth;
+                s.quant = quant;
                 out.push(Box::new(s));
             }
         }
@@ -135,6 +137,7 @@ pub fn build_store_scorer_pool(
                 s.score_threads = threads;
                 s.prune = prune;
                 s.prefetch_depth = depth;
+                s.quant = quant;
                 out.push(Box::new(s));
             }
         }
@@ -144,6 +147,7 @@ pub fn build_store_scorer_pool(
                 s.score_threads = threads;
                 s.prune = prune;
                 s.prefetch_depth = depth;
+                s.quant = quant;
                 out.push(Box::new(s));
             }
         }
@@ -155,6 +159,7 @@ pub fn build_store_scorer_pool(
                 s.score_threads = threads;
                 s.prune = prune;
                 s.prefetch_depth = depth;
+                s.quant = quant;
                 out.push(Box::new(s));
             }
         }

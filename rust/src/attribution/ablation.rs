@@ -17,9 +17,11 @@
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::{reconstruct_row, DenseCurvature, TruncatedCurvature};
-use crate::linalg::Mat;
+use crate::linalg::{matmul_nt_acc, Mat};
 use crate::sketch::PruneMode;
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
+use crate::store::{
+    Chunk, ChunkLayer, QuantScore, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH,
+};
 
 pub struct DenseWoodburyScorer {
     pub shards: ShardSet,
@@ -93,12 +95,10 @@ impl ChunkKernel for DenseWoodburyKernel<'_> {
                 _ => anyhow::bail!("expected dense chunk"),
             };
             let inv_lambda = 1.0 / self.curv.lambdas[l];
-            let dots = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
             let proj = g.matmul(&self.curv.layers[l].v); // (B, r)
-            let corr = proj.matmul_nt(&self.gqw[l]); // (B, Nq)
-            for ((o, &d), &c) in out.data.iter_mut().zip(&dots.data).zip(&corr.data) {
-                *o += d * inv_lambda - c;
-            }
+            // both Eq.-(9) terms accumulate straight into `out`
+            matmul_nt_acc(out, g, &queries.layers[l].g, inv_lambda);
+            matmul_nt_acc(out, &proj, &self.gqw[l], -1.0);
         }
         Ok(())
     }
@@ -125,6 +125,8 @@ impl Scorer for DenseWoodburyScorer {
             threads: self.score_threads,
             prefetch_depth: self.prefetch_depth,
             prune: self.prune,
+            // ablation kernels keep the default supports_encoded opt-out
+            quant: QuantScore::Off,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
@@ -242,6 +244,8 @@ impl Scorer for FactoredDenseKScorer {
             threads: self.score_threads,
             prefetch_depth: self.prefetch_depth,
             prune: self.prune,
+            // ablation kernels keep the default supports_encoded opt-out
+            quant: QuantScore::Off,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }

@@ -34,7 +34,9 @@ use super::{QueryGrads, ScoreOutput, ScoreReport, SinkSpec};
 use crate::linalg::Mat;
 use crate::query::parallel::{self, ShardScores, TopK};
 use crate::sketch::{ChunkPruner, ChunkSummary, PruneMode};
-use crate::store::{Chunk, ShardSet, StoreKind, StoreMeta, StoreReader, StreamStats};
+use crate::store::{
+    Chunk, QuantScore, QuantScratch, ShardSet, StoreKind, StoreMeta, StoreReader, StreamStats,
+};
 use crate::util::pool;
 use crate::util::timer::PhaseTimer;
 
@@ -44,11 +46,14 @@ use crate::util::timer::PhaseTimer;
 /// per shard, not once per chunk.
 pub struct Scratch {
     pub mat: Mat,
+    /// decode/unpack buffers for quantized-domain scoring
+    /// (`store::codec::quant`)
+    pub quant: QuantScratch,
 }
 
 impl Scratch {
     pub fn new() -> Scratch {
-        Scratch { mat: Mat::zeros(0, 0) }
+        Scratch { mat: Mat::zeros(0, 0), quant: QuantScratch::new() }
     }
 }
 
@@ -75,7 +80,9 @@ pub trait ChunkKernel: Sync {
     /// query side, stashing prepared state in `self`.
     fn precondition(&mut self, meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()>;
 
-    /// Score one decoded chunk against the preconditioned queries.
+    /// Score one chunk against the preconditioned queries.  The chunk
+    /// is decoded unless this kernel advertised `supports_encoded` and
+    /// quantized-domain scoring is active for the query.
     fn score_chunk(
         &self,
         chunk: &Chunk,
@@ -83,6 +90,16 @@ pub trait ChunkKernel: Sync {
         out: &mut Mat,
         scratch: &mut Scratch,
     ) -> anyhow::Result<()>;
+
+    /// Whether `score_chunk` can consume ENCODED chunks
+    /// (`Chunk::encoded` raw record bytes) in addition to decoded ones.
+    /// Kernels that return `true` here must branch on `chunk.encoded`
+    /// inside `score_chunk`; the executor decides per query whether to
+    /// stream encoded chunks (`ExecOptions::quant` × the store codec,
+    /// see `QuantScore::active`).
+    fn supports_encoded(&self) -> bool {
+        false
+    }
 
     /// SOUND upper bound on the score this kernel could produce for ANY
     /// example of a chunk with summary `s`, against query `q` — i.e.
@@ -189,6 +206,9 @@ pub struct ExecOptions {
     /// chunk pruning against the store's v3 summary sidecar — inert on
     /// full-matrix passes and on stores without a sidecar
     pub prune: PruneMode,
+    /// quantized-domain scoring (`--quant-score`): stream raw encoded
+    /// chunks to kernels that support them instead of decoding to f32
+    pub quant: QuantScore,
 }
 
 struct ShardRun<S> {
@@ -346,8 +366,14 @@ where
     F: Fn(&StoreReader) -> S + Sync,
 {
     let nq = queries.n_query;
+    // quantized-domain scoring: hand the kernel raw encoded chunks (it
+    // declared it can score them) instead of paying decode + 4-byte f32
+    // residency per value.  Resolved once per query; part of the cache
+    // key, so decoded and encoded forms of a span never alias.
+    let encoded = opts.quant.active(kernel.supports_encoded(), set.meta.codec);
     parallel::map_shards(set, opts.threads, |_, mut reader| {
         reader.prefetch_depth = opts.prefetch_depth.max(1);
+        reader.encoded = encoded;
         let mut sink = make_sink(&reader);
         let mut compute = Duration::ZERO;
         let mut scratch = Scratch::new();

@@ -9,9 +9,13 @@ use std::sync::Arc;
 
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
-use crate::linalg::Mat;
+use crate::linalg::{matmul_nt_acc, Mat};
 use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
+use crate::store::codec::quant;
+use crate::store::{
+    Chunk, ChunkLayer, QuantPlan, QuantScore, ShardSet, StoreKind, StoreMeta,
+    DEFAULT_PREFETCH_DEPTH,
+};
 
 pub struct GradDotScorer {
     /// `Arc`-shared so a pool of serving workers can score against one
@@ -25,6 +29,8 @@ pub struct GradDotScorer {
     pub prefetch_depth: usize,
     /// chunk pruning against the summary sidecar (`--prune`)
     pub prune: PruneMode,
+    /// quantized-domain scoring (`--quant-score`)
+    pub quant: QuantScore,
 }
 
 impl GradDotScorer {
@@ -36,6 +42,7 @@ impl GradDotScorer {
             score_threads: 0,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             prune: PruneMode::Exact,
+            quant: QuantScore::Auto,
         }
     }
 }
@@ -45,6 +52,8 @@ impl GradDotScorer {
 /// IS `⟨g_t, g_q⟩`).
 struct GradDotKernel {
     bounds: Option<QueryBounds>,
+    /// encoded-segment addressing for quantized-domain scoring
+    plan: Option<QuantPlan>,
 }
 
 impl ChunkKernel for GradDotKernel {
@@ -56,14 +65,19 @@ impl ChunkKernel for GradDotKernel {
         StoreKind::Dense
     }
 
-    fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+    fn precondition(&mut self, meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
         // the one kernel with no preconditioned state of its own: clone
         // the query blocks into the bound state (`upper_bound` cannot
         // reach `queries`, and one extra query-batch copy is noise next
         // to the store pass it lets us skip)
         self.bounds =
             Some(QueryBounds::new(queries.layers.iter().map(|l| l.g.clone()).collect()));
+        self.plan = Some(QuantPlan::dense(meta)?);
         Ok(())
+    }
+
+    fn supports_encoded(&self) -> bool {
+        true
     }
 
     fn score_chunk(
@@ -71,17 +85,34 @@ impl ChunkKernel for GradDotKernel {
         chunk: &Chunk,
         queries: &QueryGrads,
         out: &mut Mat,
-        _scratch: &mut Scratch,
+        scratch: &mut Scratch,
     ) -> anyhow::Result<()> {
+        if let Some(raw) = &chunk.encoded {
+            // quantized-domain path: integer-code dots straight off the
+            // record bytes, one scale multiply per group
+            let plan = self.plan.as_ref().expect("precondition builds the quant plan");
+            for l in 0..plan.n_layers() {
+                let yl = &queries.layers[l].g;
+                for ex in 0..chunk.count {
+                    let (seg, n) = plan.seg(raw, ex, l);
+                    quant::accum_row_scores(
+                        plan.codec(),
+                        seg,
+                        n,
+                        yl,
+                        out.row_mut(ex),
+                        &mut scratch.quant,
+                    );
+                }
+            }
+            return Ok(());
+        }
         for (l, layer) in chunk.layers.iter().enumerate() {
             let g = match layer {
                 ChunkLayer::Dense { g } => g,
                 _ => anyhow::bail!("expected dense chunk"),
             };
-            let part = g.matmul_nt(&queries.layers[l].g); // (B, Nq)
-            for (o, p) in out.data.iter_mut().zip(&part.data) {
-                *o += p;
-            }
+            matmul_nt_acc(out, g, &queries.layers[l].g, 1.0);
         }
         Ok(())
     }
@@ -111,8 +142,10 @@ impl Scorer for GradDotScorer {
             threads: self.score_threads,
             prefetch_depth: self.prefetch_depth,
             prune: self.prune,
+            quant: self.quant,
         };
-        exec::execute(&self.shards, &opts, &mut GradDotKernel { bounds: None }, queries, sink)
+        let mut kernel = GradDotKernel { bounds: None, plan: None };
+        exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }
 }
 

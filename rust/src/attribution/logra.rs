@@ -13,9 +13,13 @@ use std::sync::Arc;
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
-use crate::linalg::Mat;
+use crate::linalg::{matmul_nt_acc, Mat};
 use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
+use crate::store::codec::quant;
+use crate::store::{
+    Chunk, ChunkLayer, QuantPlan, QuantScore, ShardSet, StoreKind, StoreMeta,
+    DEFAULT_PREFETCH_DEPTH,
+};
 
 pub struct LograScorer {
     /// `Arc`-shared so a pool of serving workers can score against one
@@ -30,6 +34,8 @@ pub struct LograScorer {
     pub prefetch_depth: usize,
     /// chunk pruning against the summary sidecar (`--prune`)
     pub prune: PruneMode,
+    /// quantized-domain scoring (`--quant-score`)
+    pub quant: QuantScore,
 }
 
 impl LograScorer {
@@ -45,6 +51,7 @@ impl LograScorer {
             score_threads: 0,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             prune: PruneMode::Exact,
+            quant: QuantScore::Auto,
         }
     }
 }
@@ -57,6 +64,8 @@ struct LograKernel<'a> {
     curv: &'a DenseCurvature,
     /// per layer (Nq, D) `K⁻¹ g_q` blocks + their pruning-bound norms
     bounds: Option<QueryBounds>,
+    /// encoded-segment addressing for quantized-domain scoring
+    plan: Option<QuantPlan>,
 }
 
 impl ChunkKernel for LograKernel<'_> {
@@ -68,12 +77,17 @@ impl ChunkKernel for LograKernel<'_> {
         StoreKind::Dense
     }
 
-    fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+    fn precondition(&mut self, meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
         let pre: Vec<Mat> = (0..queries.n_layers())
             .map(|l| self.curv.chols[l].solve_rows(&queries.layers[l].g))
             .collect();
         self.bounds = Some(QueryBounds::new(pre));
+        self.plan = Some(QuantPlan::dense(meta)?);
         Ok(())
+    }
+
+    fn supports_encoded(&self) -> bool {
+        true
     }
 
     fn score_chunk(
@@ -81,18 +95,35 @@ impl ChunkKernel for LograKernel<'_> {
         chunk: &Chunk,
         _queries: &QueryGrads,
         out: &mut Mat,
-        _scratch: &mut Scratch,
+        scratch: &mut Scratch,
     ) -> anyhow::Result<()> {
         let pre = &self.bounds.as_ref().expect("precondition ran").blocks;
+        if let Some(raw) = &chunk.encoded {
+            // quantized-domain path: the preconditioned queries are
+            // plain (Nq, D) row blocks, so the score is still a linear
+            // dot against the stored codes
+            let plan = self.plan.as_ref().expect("precondition builds the quant plan");
+            for (l, pre_l) in pre.iter().enumerate() {
+                for ex in 0..chunk.count {
+                    let (seg, n) = plan.seg(raw, ex, l);
+                    quant::accum_row_scores(
+                        plan.codec(),
+                        seg,
+                        n,
+                        pre_l,
+                        out.row_mut(ex),
+                        &mut scratch.quant,
+                    );
+                }
+            }
+            return Ok(());
+        }
         for (l, pre_l) in pre.iter().enumerate() {
             let g = match &chunk.layers[l] {
                 ChunkLayer::Dense { g } => g,
                 _ => anyhow::bail!("expected dense chunk"),
             };
-            let part = g.matmul_nt(pre_l); // (B, Nq)
-            for (o, p) in out.data.iter_mut().zip(&part.data) {
-                *o += p;
-            }
+            matmul_nt_acc(out, g, pre_l, 1.0);
         }
         Ok(())
     }
@@ -116,13 +147,14 @@ impl Scorer for LograScorer {
     }
 
     fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
-        let mut kernel = LograKernel { curv: self.curv.as_ref(), bounds: None };
+        let mut kernel = LograKernel { curv: self.curv.as_ref(), bounds: None, plan: None };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
             prefetch_depth: self.prefetch_depth,
             prune: self.prune,
+            quant: self.quant,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }

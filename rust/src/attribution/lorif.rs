@@ -19,9 +19,11 @@ use std::sync::Arc;
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::{reconstruct_row, TruncatedCurvature};
-use crate::linalg::Mat;
+use crate::linalg::{matmul_nt_acc, Mat};
 use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
+use crate::store::{
+    Chunk, ChunkLayer, QuantScore, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH,
+};
 
 pub struct LorifScorer {
     /// `Arc`-shared so a pool of serving workers can score against one
@@ -40,6 +42,11 @@ pub struct LorifScorer {
     /// chunk pruning against the summary sidecar (`--prune`); only the
     /// faithful (non-cached) projection path prunes — see the kernel
     pub prune: PruneMode,
+    /// quantized-domain scoring (`--quant-score`).  Factored records
+    /// interleave u/v segments, so the LoRIF kernel scores encoded
+    /// chunks by decoding them in-kernel — same math bit-for-bit, but
+    /// the shared chunk cache holds the 2–4× denser ENCODED bytes.
+    pub quant: QuantScore,
 }
 
 impl LorifScorer {
@@ -56,6 +63,7 @@ impl LorifScorer {
             score_threads: 0,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             prune: PruneMode::Exact,
+            quant: QuantScore::Auto,
         }
     }
 }
@@ -141,6 +149,8 @@ struct LorifKernel<'a> {
     /// different train representation, so the bound would not be
     /// provably sound there and the kernel opts out of pruning.
     bounds: Option<QueryBounds>,
+    /// store meta for in-kernel decode of encoded chunks
+    meta: Option<StoreMeta>,
 }
 
 impl ChunkKernel for LorifKernel<'_> {
@@ -157,6 +167,7 @@ impl ChunkKernel for LorifKernel<'_> {
         anyhow::ensure!(queries.c == meta.c, "factor rank mismatch");
         self.layer_dims = meta.layers.clone();
         self.c = meta.c;
+        self.meta = Some(meta.clone());
         let (c, nq) = (self.c, queries.n_query);
 
         // precondition queries: g'_q = V_r^T g~_q, folded with Woodbury
@@ -206,6 +217,10 @@ impl ChunkKernel for LorifKernel<'_> {
         Ok(())
     }
 
+    fn supports_encoded(&self) -> bool {
+        true
+    }
+
     fn score_chunk(
         &self,
         chunk: &Chunk,
@@ -213,6 +228,18 @@ impl ChunkKernel for LorifKernel<'_> {
         out: &mut Mat,
         scratch: &mut Scratch,
     ) -> anyhow::Result<()> {
+        // encoded chunks arrive when `--quant-score on` pins the shared
+        // cache to the denser encoded form; the factored u/v interleave
+        // has no segment-linear score, so decode here — the SAME decode
+        // the reader would have run, hence bit-identical scores
+        let decoded;
+        let chunk = if let Some(raw) = &chunk.encoded {
+            let meta = self.meta.as_ref().expect("precondition stashes the meta");
+            decoded = crate::store::reader::decode_chunk(meta, chunk.start, raw)?;
+            &decoded
+        } else {
+            chunk
+        };
         let c = self.c;
         for l in 0..queries.n_layers() {
             let (d1, d2) = self.layer_dims[l];
@@ -239,10 +266,12 @@ impl ChunkKernel for LorifKernel<'_> {
                 }
                 rec.matmul(&self.curv.layers[l].v) // (B, r)
             };
-            let corr = gt.matmul_nt(&self.gqw[l]); // (B, Nq)
-            for ((o, &a), &b) in out.data.iter_mut().zip(&s1.data).zip(&corr.data) {
-                *o += a * inv_lambda - b;
+            for (o, &a) in out.data.iter_mut().zip(&s1.data) {
+                *o += a * inv_lambda;
             }
+            // Woodbury correction folded straight into `out` — no
+            // per-chunk (B, Nq) `corr` temporary
+            matmul_nt_acc(out, &gt, &self.gqw[l], -1.0);
         }
         Ok(())
     }
@@ -273,6 +302,7 @@ impl Scorer for LorifScorer {
             c: 0,
             gqw: Vec::new(),
             bounds: None,
+            meta: None,
         };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
@@ -280,6 +310,7 @@ impl Scorer for LorifScorer {
             threads: self.score_threads,
             prefetch_depth: self.prefetch_depth,
             prune: self.prune,
+            quant: self.quant,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }

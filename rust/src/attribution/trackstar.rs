@@ -19,9 +19,13 @@ use std::sync::Arc;
 use super::exec::{self, ChunkKernel, ExecOptions, Scratch};
 use super::{QueryGrads, ScoreReport, Scorer, SinkSpec};
 use crate::curvature::DenseCurvature;
-use crate::linalg::Mat;
+use crate::linalg::{matmul_nt_acc, sumsq, Mat};
 use crate::sketch::{ChunkSummary, PruneMode, QueryBounds};
-use crate::store::{Chunk, ChunkLayer, ShardSet, StoreKind, StoreMeta, DEFAULT_PREFETCH_DEPTH};
+use crate::store::codec::quant;
+use crate::store::{
+    Chunk, ChunkLayer, QuantPlan, QuantScore, ShardSet, StoreKind, StoreMeta,
+    DEFAULT_PREFETCH_DEPTH,
+};
 
 pub struct TrackStarScorer {
     /// `Arc`-shared so a pool of serving workers can score against one
@@ -36,6 +40,8 @@ pub struct TrackStarScorer {
     pub prefetch_depth: usize,
     /// chunk pruning against the summary sidecar (`--prune`)
     pub prune: PruneMode,
+    /// quantized-domain scoring (`--quant-score`)
+    pub quant: QuantScore,
 }
 
 impl TrackStarScorer {
@@ -51,6 +57,7 @@ impl TrackStarScorer {
             score_threads: 0,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             prune: PruneMode::Exact,
+            quant: QuantScore::Auto,
         }
     }
 }
@@ -64,6 +71,8 @@ struct TrackStarKernel<'a> {
     /// the NUMERATOR of the TrackStar score; `upper_bound` divides by
     /// the chunk's record-norm window.
     bounds: Option<QueryBounds>,
+    /// encoded-segment addressing for quantized-domain scoring
+    plan: Option<QuantPlan>,
 }
 
 impl ChunkKernel for TrackStarKernel<'_> {
@@ -75,7 +84,7 @@ impl ChunkKernel for TrackStarKernel<'_> {
         StoreKind::Dense
     }
 
-    fn precondition(&mut self, _meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
+    fn precondition(&mut self, meta: &StoreMeta, queries: &QueryGrads) -> anyhow::Result<()> {
         let pre: Vec<Mat> = (0..queries.n_layers())
             .map(|l| {
                 let mut p = self.curv.chols[l].solve_rows(&queries.layers[l].g);
@@ -90,7 +99,12 @@ impl ChunkKernel for TrackStarKernel<'_> {
             })
             .collect();
         self.bounds = Some(QueryBounds::new(pre));
+        self.plan = Some(QuantPlan::dense(meta)?);
         Ok(())
+    }
+
+    fn supports_encoded(&self) -> bool {
+        true
     }
 
     fn score_chunk(
@@ -98,23 +112,40 @@ impl ChunkKernel for TrackStarKernel<'_> {
         chunk: &Chunk,
         _queries: &QueryGrads,
         out: &mut Mat,
-        _scratch: &mut Scratch,
+        scratch: &mut Scratch,
     ) -> anyhow::Result<()> {
         let pre = &self.bounds.as_ref().expect("precondition ran").blocks;
         // per-example squared norms across all layers, for the
         // train-side unit normalization
         let mut norms2 = vec![0.0f32; chunk.count];
-        for (l, pre_l) in pre.iter().enumerate() {
-            let g = match &chunk.layers[l] {
-                ChunkLayer::Dense { g } => g,
-                _ => anyhow::bail!("expected dense chunk"),
-            };
-            let part = g.matmul_nt(pre_l); // (B, Nq)
-            for (o, p) in out.data.iter_mut().zip(&part.data) {
-                *o += p;
+        if let Some(raw) = &chunk.encoded {
+            // quantized-domain path: numerator dots AND the record
+            // norm² both fold the group scales out of the integer codes
+            let plan = self.plan.as_ref().expect("precondition builds the quant plan");
+            for (l, pre_l) in pre.iter().enumerate() {
+                for (ex, n2) in norms2.iter_mut().enumerate() {
+                    let (seg, n) = plan.seg(raw, ex, l);
+                    quant::accum_row_scores(
+                        plan.codec(),
+                        seg,
+                        n,
+                        pre_l,
+                        out.row_mut(ex),
+                        &mut scratch.quant,
+                    );
+                    *n2 += quant::seg_norm2(plan.codec(), seg, n, &mut scratch.quant);
+                }
             }
-            for (nn, n2) in norms2.iter_mut().enumerate() {
-                *n2 += g.row(nn).iter().map(|x| x * x).sum::<f32>();
+        } else {
+            for (l, pre_l) in pre.iter().enumerate() {
+                let g = match &chunk.layers[l] {
+                    ChunkLayer::Dense { g } => g,
+                    _ => anyhow::bail!("expected dense chunk"),
+                };
+                matmul_nt_acc(out, g, pre_l, 1.0);
+                for (nn, n2) in norms2.iter_mut().enumerate() {
+                    *n2 += sumsq(g.row(nn));
+                }
             }
         }
         for nn in 0..chunk.count {
@@ -159,13 +190,14 @@ impl Scorer for TrackStarScorer {
     }
 
     fn score_sink(&mut self, queries: &QueryGrads, sink: SinkSpec) -> anyhow::Result<ScoreReport> {
-        let mut kernel = TrackStarKernel { curv: self.curv.as_ref(), bounds: None };
+        let mut kernel = TrackStarKernel { curv: self.curv.as_ref(), bounds: None, plan: None };
         let opts = ExecOptions {
             chunk_size: self.chunk_size,
             prefetch: self.prefetch,
             threads: self.score_threads,
             prefetch_depth: self.prefetch_depth,
             prune: self.prune,
+            quant: self.quant,
         };
         exec::execute(&self.shards, &opts, &mut kernel, queries, sink)
     }

@@ -115,6 +115,9 @@ impl Args {
         if let Some(s) = self.get("codec") {
             cfg.codec = crate::store::CodecId::parse(s)?;
         }
+        if let Some(s) = self.get("quant-score") {
+            cfg.quant_score = crate::store::QuantScore::parse(s)?;
+        }
         if let Some(d) = self.get("artifacts-dir") {
             cfg.artifacts_dir = d.into();
         }
@@ -164,7 +167,7 @@ mod tests {
             "x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512", "--shards",
             "4", "--score-threads", "2", "--sink", "topk", "--prune", "slack=0.1",
             "--prefetch-depth", "3", "--chunk-cache-mb", "128", "--summary-chunk", "64",
-            "--codec", "int8",
+            "--codec", "int8", "--quant-score", "on",
         ]);
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
@@ -180,6 +183,18 @@ mod tests {
         assert_eq!(cfg.chunk_cache_mb, 128);
         assert_eq!(cfg.summary_chunk, 64);
         assert_eq!(cfg.codec, crate::store::CodecId::Int8);
+        assert_eq!(cfg.quant_score, crate::store::QuantScore::On);
+    }
+
+    #[test]
+    fn rejects_unknown_quant_score() {
+        let a = parse(&["x", "--quant-score", "fast"]);
+        let mut cfg = crate::config::Config::default();
+        assert!(a.apply_to_config(&mut cfg).is_err());
+        let a = parse(&["x", "--quant-score", "off"]);
+        let mut cfg = crate::config::Config::default();
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.quant_score, crate::store::QuantScore::Off);
     }
 
     #[test]

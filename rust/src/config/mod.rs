@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 use crate::attribution::SinkMode;
 use crate::model::spec::Tier;
 use crate::sketch::{PruneMode, DEFAULT_SUMMARY_CHUNK};
-use crate::store::{CodecId, DEFAULT_PREFETCH_DEPTH};
+use crate::store::{CodecId, QuantScore, DEFAULT_PREFETCH_DEPTH};
 use crate::util::json::Value;
 
 #[derive(Clone, Debug)]
@@ -63,6 +63,11 @@ pub struct Config {
     /// existing stores can migrate without re-extraction via
     /// `lorif store recode`.
     pub codec: CodecId,
+    /// quantized-domain scoring (`--quant-score on|off|auto`): score
+    /// int8/int4 records straight off their encoded bytes instead of
+    /// decode-then-score.  `auto` (default) enables it per query when
+    /// the kernel supports it and the store codec is quantized.
+    pub quant_score: QuantScore,
 
     pub artifacts_dir: PathBuf,
     pub work_dir: PathBuf,
@@ -92,6 +97,7 @@ impl Default for Config {
             chunk_cache_mb: 0,
             summary_chunk: DEFAULT_SUMMARY_CHUNK,
             codec: CodecId::Bf16,
+            quant_score: QuantScore::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
             work_dir: PathBuf::from("work"),
         }
@@ -144,6 +150,9 @@ impl Config {
         }
         if let Some(s) = v.get("codec").and_then(Value::as_str) {
             self.codec = CodecId::parse(s)?;
+        }
+        if let Some(s) = v.get("quant_score").and_then(Value::as_str) {
+            self.quant_score = QuantScore::parse(s)?;
         }
         if let Some(s) = v.get("artifacts_dir").and_then(Value::as_str) {
             self.artifacts_dir = PathBuf::from(s);
@@ -217,6 +226,7 @@ impl Config {
             ("chunk_cache_mb", self.chunk_cache_mb.into()),
             ("summary_chunk", self.summary_chunk.into()),
             ("codec", self.codec.as_str().into()),
+            ("quant_score", self.quant_score.as_str().into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
             ("work_dir", self.work_dir.display().to_string().into()),
         ])
@@ -246,6 +256,7 @@ mod tests {
         cfg.chunk_cache_mb = 256;
         cfg.summary_chunk = 128;
         cfg.codec = CodecId::Int8;
+        cfg.quant_score = QuantScore::On;
         let v = cfg.to_json();
         let mut back = Config::default();
         back.apply_json(&v).unwrap();
@@ -260,6 +271,18 @@ mod tests {
         assert_eq!(back.chunk_cache_mb, 256);
         assert_eq!(back.summary_chunk, 128);
         assert_eq!(back.codec, CodecId::Int8);
+        assert_eq!(back.quant_score, QuantScore::On);
+    }
+
+    #[test]
+    fn rejects_unknown_quant_score_mode() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.quant_score, QuantScore::Auto);
+        let v = crate::util::json::obj([("quant_score", "maybe".into())]);
+        assert!(cfg.apply_json(&v).is_err());
+        let v = crate::util::json::obj([("quant_score", "off".into())]);
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.quant_score, QuantScore::Off);
     }
 
     #[test]

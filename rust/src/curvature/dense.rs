@@ -46,9 +46,20 @@ impl std::error::Error for OomError {}
 impl DenseCurvature {
     /// Stream the (dense) store once, accumulating G^T G per layer.
     pub fn build(set: &ShardSet, lambda_factor: f32) -> anyhow::Result<DenseCurvature> {
+        Self::build_with_limit(set, lambda_factor, dense_limit())
+    }
+
+    /// `build` with an explicit OOM-guard limit.  The public entry point
+    /// reads the limit from the environment once; tests pass it directly
+    /// so they never mutate process-global env (which races with any
+    /// concurrently running test that calls `dense_limit`).
+    pub fn build_with_limit(
+        set: &ShardSet,
+        lambda_factor: f32,
+        limit: usize,
+    ) -> anyhow::Result<DenseCurvature> {
         let dims = set.meta.layers.clone();
         // OOM guard (Table 8 behaviour)
-        let limit = dense_limit();
         for (l, &(d1, d2)) in dims.iter().enumerate() {
             let need = (d1 * d2) * (d1 * d2);
             if need > limit {
@@ -180,13 +191,15 @@ mod tests {
 
     #[test]
     fn oom_guard_trips() {
-        std::env::set_var("LORIF_DENSE_LIMIT", "1000");
+        // inject the limit instead of set_var: env mutation is
+        // process-global and races with parallel tests
         let (base, _) = dense_store(5, &[(8, 8)]);
         let set = ShardSet::open(&base).unwrap();
-        let err = DenseCurvature::build(&set, 0.1);
-        std::env::remove_var("LORIF_DENSE_LIMIT");
+        let err = DenseCurvature::build_with_limit(&set, 0.1, 1000);
         assert!(err.is_err());
         let msg = format!("{}", err.err().unwrap());
         assert!(msg.contains("OOM"), "{msg}");
+        // a (8*8)^2 = 4096-float layer fits under a 5000 limit
+        DenseCurvature::build_with_limit(&set, 0.1, 5000).unwrap();
     }
 }

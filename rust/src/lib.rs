@@ -2,6 +2,7 @@
 //! attribution — full-system reproduction (Rust L3 coordinator).
 //!
 //! See DESIGN.md for the architecture and README.md for usage.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod app;
 pub mod attribution;

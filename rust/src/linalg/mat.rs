@@ -112,14 +112,8 @@ impl Mat {
 
     /// self @ other^T.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_nt dims");
         let mut c = Mat::zeros(self.rows, other.rows);
-        for i in 0..self.rows {
-            let a = self.row(i);
-            for j in 0..other.rows {
-                c.data[i * other.rows + j] = dot(a, other.row(j));
-            }
-        }
+        matmul_nt_acc(&mut c, self, other, 1.0);
         c
     }
 
@@ -149,24 +143,86 @@ pub fn axpy(a: f32, b: &[f32], c: &mut [f32]) {
     }
 }
 
+/// 8-wide blocked dot product — the inner kernel of every `score_chunk`
+/// hot loop.  With the (non-default, nightly-only) `simd` feature the
+/// blocked part is an explicit `std::simd::f32x8` loop; the default
+/// build keeps eight scalar accumulators, which LLVM auto-vectorizes to
+/// the same shape.  Within one build the sum order is fixed, so the
+/// quantized bf16 fast path (`store::codec::quant`), which reuses this
+/// kernel, stays bit-identical to the decoded path.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 4 independent accumulators let LLVM keep the FMA pipes full
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
+    let blocks = a.len() / 8 * 8;
+    let mut s = dot8_blocks(&a[..blocks], &b[..blocks]);
+    for i in blocks..a.len() {
         s += a[i] * b[i];
     }
     s
+}
+
+/// Σ aᵢ² with the same blocking and association order as [`dot`], so
+/// the decoded and quantized trackstar norm paths agree bit-for-bit on
+/// bf16 stores.
+#[inline]
+pub fn sumsq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn dot8_blocks(a: &[f32], b: &[f32]) -> f32 {
+    use std::simd::f32x8;
+    let mut acc = f32x8::splat(0.0);
+    for (x, y) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+        acc += f32x8::from_slice(x) * f32x8::from_slice(y);
+    }
+    let v = acc.to_array();
+    ((v[0] + v[4]) + (v[1] + v[5])) + ((v[2] + v[6]) + (v[3] + v[7]))
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn dot8_blocks(a: &[f32], b: &[f32]) -> f32 {
+    // 8 independent accumulators keep the FMA pipes full; the final
+    // reduction pairs lanes the way the simd build's horizontal sum does
+    let mut acc = [0.0f32; 8];
+    for (x, y) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += x[l] * y[l];
+        }
+    }
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// C += alpha * A @ B^T, cache-tiled over rows of A × rows of B.  Each
+/// output element receives exactly one full-length [`dot`] (the k axis
+/// is never split), so the f32 result is independent of the tile sizes.
+/// All `score_chunk` hot loops accumulate through this instead of
+/// materializing a fresh `(B, Nq)` temporary per layer per chunk and
+/// copying it element-wise.
+pub fn matmul_nt_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f32) {
+    assert_eq!(a.cols, b.cols, "matmul_nt_acc k dims");
+    assert_eq!(c.rows, a.rows, "matmul_nt_acc rows");
+    assert_eq!(c.cols, b.rows, "matmul_nt_acc cols");
+    // rows per tile: a 32×32 tile of B rows stays resident in L1/L2
+    // across the A rows it meets, so each B row is streamed from memory
+    // once per tile column instead of once per A row
+    const TILE: usize = 32;
+    let nq = b.rows;
+    for i0 in (0..a.rows).step_by(TILE) {
+        let i1 = (i0 + TILE).min(a.rows);
+        for j0 in (0..nq).step_by(TILE) {
+            let j1 = (j0 + TILE).min(nq);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let crow = &mut c.data[i * nq..(i + 1) * nq];
+                for (j, cj) in crow[j0..j1].iter_mut().enumerate() {
+                    *cj += alpha * dot(arow, b.row(j0 + j));
+                }
+            }
+        }
+    }
 }
 
 /// C += alpha * A @ B (row-major, i-k-j order: contiguous axpy on C rows).
@@ -291,9 +347,38 @@ mod tests {
     #[test]
     fn dot_matches_scalar_loop() {
         let mut rng = Rng::new(6);
-        let a = Mat::random_normal(1, 103, 1.0, &mut rng);
-        let b = Mat::random_normal(1, 103, 1.0, &mut rng);
-        let want: f32 = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
-        assert!((dot(&a.data, &b.data) - want).abs() < 1e-3);
+        // lengths straddling the 8-wide block boundary exercise both the
+        // blocked kernel and the scalar remainder
+        for n in [0usize, 1, 7, 8, 9, 16, 23, 103] {
+            let a = Mat::random_normal(1, n.max(1), 1.0, &mut rng);
+            let b = Mat::random_normal(1, n.max(1), 1.0, &mut rng);
+            let a = &a.data[..n];
+            let b = &b.data[..n];
+            let want: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            assert!((dot(a, b) - want).abs() < 1e-3, "n={n}");
+            let want_sq: f32 = a.iter().map(|x| x * x).sum();
+            assert!((sumsq(a) - want_sq).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_acc_accumulates_with_alpha() {
+        let mut rng = Rng::new(7);
+        // sizes larger than one 32-row tile in both directions
+        let a = Mat::random_normal(37, 21, 1.0, &mut rng);
+        let b = Mat::random_normal(41, 21, 1.0, &mut rng);
+        let seed = Mat::random_normal(37, 41, 1.0, &mut rng);
+        let mut c = seed.clone();
+        matmul_nt_acc(&mut c, &a, &b, -2.0);
+        let mut want = seed;
+        let prod = a.matmul(&b.transpose());
+        for (w, p) in want.data.iter_mut().zip(&prod.data) {
+            *w -= 2.0 * p;
+        }
+        assert_close(&c, &want, 1e-4);
+        // alpha = 1.0 into zeros is exactly matmul_nt
+        let mut z = Mat::zeros(37, 41);
+        matmul_nt_acc(&mut z, &a, &b, 1.0);
+        assert_eq!(z.data, a.matmul_nt(&b).data, "tiled acc diverged from matmul_nt");
     }
 }

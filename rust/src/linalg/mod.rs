@@ -9,5 +9,5 @@ pub mod qr;
 pub mod rsvd;
 
 pub use chol::Chol;
-pub use mat::Mat;
+pub use mat::{dot, matmul_nt_acc, sumsq, Mat};
 pub use rsvd::{rsvd, RowChunkSource, TruncatedSvd};

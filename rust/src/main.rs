@@ -23,7 +23,7 @@
 //!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
 //!   --shards S --score-threads T --sink full|topk
 //!   --prune on|off|slack=x --prefetch-depth N --summary-chunk N
-//!   --chunk-cache-mb N --codec bf16|int8|int4
+//!   --chunk-cache-mb N --codec bf16|int8|int4 --quant-score on|off|auto
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 //! Serve flags: --addr A --max-batch N --window-ms N --topk K
 //!   --score-workers N --queue-cap N
@@ -191,10 +191,11 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
     );
     println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
     println!(
-        "store layout: {} shard(s), codec {}, score threads {}, sink {}, prune {} \
-         (summary grid {}), prefetch depth {}, chunk cache {}",
+        "store layout: {} shard(s), codec {} (quant-score {}), score threads {}, sink {}, \
+         prune {} (summary grid {}), prefetch depth {}, chunk cache {}",
         cfg.shards,
         cfg.codec.as_str(),
+        cfg.quant_score.as_str(),
         if cfg.score_threads == 0 { "auto".to_string() } else { cfg.score_threads.to_string() },
         cfg.score_sink.name(),
         cfg.prune.label(),
@@ -518,7 +519,7 @@ fn print_help() {
                        --shards S --score-threads T --sink full|topk\n\
                        --prune on|off|slack=x --prefetch-depth N\n\
                        --summary-chunk N --chunk-cache-mb N\n\
-                       --codec bf16|int8|int4\n\
+                       --codec bf16|int8|int4 --quant-score on|off|auto\n\
                        --work-dir DIR --artifacts-dir DIR\n\
          serve flags:  --addr A --max-batch N --window-ms N --topk K\n\
                        --score-workers N --queue-cap N\n\

@@ -250,6 +250,7 @@ mod tests {
                 start: 0,
                 count: b,
                 layers: vec![ChunkLayer::Dense { g: g.clone() }],
+                encoded: None,
                 io_time: std::time::Duration::ZERO,
             };
             let s = summarize_chunk(&meta, &chunk).unwrap();
@@ -292,6 +293,7 @@ mod tests {
             start: 0,
             count: 8,
             layers: vec![ChunkLayer::Dense { g }],
+            encoded: None,
             io_time: std::time::Duration::ZERO,
         };
         let s = summarize_chunk(&meta, &chunk).unwrap();
@@ -321,6 +323,7 @@ mod tests {
             start: 0,
             count: 4,
             layers: vec![ChunkLayer::Dense { g }],
+            encoded: None,
             io_time: std::time::Duration::ZERO,
         };
         let s = summarize_chunk(&meta, &chunk).unwrap();

@@ -3,8 +3,9 @@
 //! The factored record format (PR 0) cut the *count* of stored values;
 //! a codec cuts the *cost per value* on top of it — the multiplication
 //! GraSS (Hu et al., 2025) shows loses little attribution fidelity.
-//! Every store consumer decodes back to f32 before scoring, so codecs
-//! change bytes on disk and decode cost, never the scoring code.
+//! Consumers either decode back to f32 before scoring, or — for the
+//! linear int codecs — score the encoded bytes directly through the
+//! [`quant`] module's scale-folded dot products (`--quant-score`).
 //!
 //! A record is a fixed sequence of **segments** — one per dense layer,
 //! or the `u` then `v` factor rows per factored layer — and a codec
@@ -41,9 +42,11 @@
 
 mod int4;
 mod int8;
+pub mod quant;
 
 pub use int4::{Int4Codec, INT4_GROUP};
 pub use int8::Int8Codec;
+pub use quant::{QuantPlan, QuantScore, QuantScratch};
 
 use crate::util::bf16;
 

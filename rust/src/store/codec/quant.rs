@@ -1,0 +1,520 @@
+//! Quantized-domain scoring: dot products straight off encoded segment
+//! bytes, without materializing decoded f32 chunks.
+//!
+//! The decode-then-score hot path turns every 1-byte (int8) or half-byte
+//! (int4) stored value into a 4-byte f32 before the inner dot product
+//! ever runs — 4–8× the memory traffic of the bytes actually read from
+//! disk.  Both int codecs are linear maps (`x̂_i = q_i · s_{g(i)}`), so
+//! the dot against a query row factors exactly:
+//!
+//! ```text
+//!   <x̂, y> = Σ_g  s_g · Σ_{i ∈ g}  q_i · y_i
+//! ```
+//!
+//! — an integer-code dot per scale group plus ONE scale multiply per
+//! group (one per segment for int8, one per [`INT4_GROUP`] values for
+//! int4).  This module implements that fold plus the matching norm²
+//! identity `‖x̂‖² = Σ_g s_g² · Σ q_i²` (the trackstar kernel's per-row
+//! norm), over segments addressed by a [`QuantPlan`].
+//!
+//! **Equivalence contract** (checked by unit tests here and the
+//! `prop_codec_quant_*` property tests):
+//!
+//! * bf16 is not a linear-code codec, so its "quantized" path decodes
+//!   the segment into scratch and reuses `linalg::mat::dot`/`sumsq` —
+//!   the SAME kernels, in the SAME association order, as the decoded
+//!   path.  Scores are **bit-identical**.
+//! * int8/int4 differ from decode-then-score only by f32 rounding and
+//!   the re-association of the scale multiply — orders of magnitude
+//!   below the codec's own `max_rel_error()` quantization error.
+//! * NaN poisoning is preserved: a non-finite scale (the codec's
+//!   marker for a group that held NaN/Inf) multiplies into the group's
+//!   partial sum, so every score touching that group is NaN, exactly as
+//!   when the decoded all-NaN values flow through `dot`.  A zero scale
+//!   (all-zero group) contributes exactly 0.0 on both paths.
+//!
+//! Which kernels take this path is decided per query by [`QuantScore`]
+//! (the `--quant-score` knob) in `attribution::exec`.
+
+use super::{CodecId, INT4_GROUP};
+use crate::linalg::{dot, sumsq, Mat};
+use crate::store::format::{StoreKind, StoreMeta};
+
+/// The `--quant-score` knob: when kernels score encoded bytes directly
+/// instead of decoded f32 chunks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantScore {
+    /// Quantized-domain scoring for kernels that support it, on stores
+    /// where it changes the math for the better (int8/int4); bf16
+    /// stores keep the decoded path, whose cached-chunk layout is the
+    /// better residency trade for 2-byte codes.
+    #[default]
+    Auto,
+    /// Always score encoded bytes when the kernel supports it — on bf16
+    /// stores this is the bit-identical decode-into-scratch path (the
+    /// equivalence tests' anchor).
+    On,
+    /// Always decode chunks to f32 first (the pre-quant behaviour).
+    Off,
+}
+
+impl QuantScore {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QuantScore::Auto => "auto",
+            QuantScore::On => "on",
+            QuantScore::Off => "off",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<QuantScore> {
+        match s {
+            "auto" => Ok(QuantScore::Auto),
+            "on" => Ok(QuantScore::On),
+            "off" => Ok(QuantScore::Off),
+            _ => anyhow::bail!("unknown quant-score mode '{s}' (on|off|auto)"),
+        }
+    }
+
+    /// Resolve the knob against a kernel's capability and the store's
+    /// codec — the single place the on/off/auto policy lives.
+    pub fn active(self, kernel_supports_encoded: bool, codec: CodecId) -> bool {
+        match self {
+            QuantScore::Off => false,
+            QuantScore::On => kernel_supports_encoded,
+            QuantScore::Auto => kernel_supports_encoded && codec != CodecId::Bf16,
+        }
+    }
+}
+
+/// How to address one example's layer segment inside a raw encoded
+/// chunk (`Chunk::encoded`): per-layer byte offsets within the fixed
+/// record stride.  Built once per query at kernel precondition time.
+#[derive(Clone, Debug)]
+pub struct QuantPlan {
+    codec: CodecId,
+    /// `StoreMeta::bytes_per_example()` — encoded record stride.
+    stride: usize,
+    /// Per layer: (byte offset within a record, decoded float length).
+    segs: Vec<(usize, usize)>,
+}
+
+impl QuantPlan {
+    /// Plan for a dense store: one codec segment per layer.  (Factored
+    /// records interleave `u`/`v` segments per layer; the only factored
+    /// kernel, LoRIF, decodes in-kernel instead of taking this path.)
+    pub fn dense(meta: &StoreMeta) -> anyhow::Result<QuantPlan> {
+        anyhow::ensure!(
+            meta.kind == StoreKind::Dense,
+            "QuantPlan::dense on a {} store",
+            meta.kind.as_str()
+        );
+        let segs = (0..meta.layers.len())
+            .map(|l| meta.layer_span(l))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(QuantPlan { codec: meta.codec, stride: meta.bytes_per_example(), segs })
+    }
+
+    pub fn codec(&self) -> CodecId {
+        self.codec
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Number of whole records in `raw`.
+    pub fn examples(&self, raw: &[u8]) -> usize {
+        debug_assert_eq!(raw.len() % self.stride, 0, "ragged encoded chunk");
+        raw.len() / self.stride
+    }
+
+    /// Example `ex`'s layer-`l` segment bytes plus its decoded float
+    /// length.
+    pub fn seg<'a>(&self, raw: &'a [u8], ex: usize, l: usize) -> (&'a [u8], usize) {
+        let (off, n) = self.segs[l];
+        let base = ex * self.stride + off;
+        let blen = self.codec.get().encoded_len(n);
+        (&raw[base..base + blen], n)
+    }
+}
+
+/// Reusable per-worker buffers so the hot loop never allocates: decoded
+/// floats (bf16 path), unpacked signed codes, and group scales (int4).
+#[derive(Default)]
+pub struct QuantScratch {
+    f32buf: Vec<f32>,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantScratch {
+    pub fn new() -> QuantScratch {
+        QuantScratch::default()
+    }
+}
+
+/// `out[q] += <decode(seg), queries.row(q)>` for every query row,
+/// without decoding to f32 for the int codecs (see module docs).
+/// `queries` is `(Nq, n)` row-major; `out` is one example's score row.
+pub fn accum_row_scores(
+    codec: CodecId,
+    seg: &[u8],
+    n: usize,
+    queries: &Mat,
+    out: &mut [f32],
+    scratch: &mut QuantScratch,
+) {
+    debug_assert_eq!(queries.cols, n, "query/segment width mismatch");
+    debug_assert_eq!(queries.rows, out.len(), "query/out row mismatch");
+    match codec {
+        CodecId::Bf16 => {
+            decode_to_scratch(codec, seg, n, scratch);
+            for (q, o) in out.iter_mut().enumerate() {
+                *o += dot(&scratch.f32buf, queries.row(q));
+            }
+        }
+        CodecId::Int8 => {
+            let scale = le_f32(&seg[..4]);
+            unpack_i8(&seg[4..], scratch);
+            for (q, o) in out.iter_mut().enumerate() {
+                *o += scale * dot_i8(&scratch.codes, queries.row(q));
+            }
+        }
+        CodecId::Int4 => {
+            unpack_i4(seg, n, scratch);
+            for (q, o) in out.iter_mut().enumerate() {
+                let y = queries.row(q);
+                let mut acc = 0.0f32;
+                for (k, &s) in scratch.scales.iter().enumerate() {
+                    let lo = k * INT4_GROUP;
+                    let hi = (lo + INT4_GROUP).min(n);
+                    acc += s * dot_i8(&scratch.codes[lo..hi], &y[lo..hi]);
+                }
+                *o += acc;
+            }
+        }
+    }
+}
+
+/// `‖decode(seg)‖²` via the same scale fold (`Σ_g s_g² Σ q²`); bf16
+/// decodes and reuses [`sumsq`] so the trackstar norm stays
+/// bit-identical to the decoded path.
+pub fn seg_norm2(codec: CodecId, seg: &[u8], n: usize, scratch: &mut QuantScratch) -> f32 {
+    match codec {
+        CodecId::Bf16 => {
+            decode_to_scratch(codec, seg, n, scratch);
+            sumsq(&scratch.f32buf)
+        }
+        CodecId::Int8 => {
+            let scale = le_f32(&seg[..4]);
+            unpack_i8(&seg[4..], scratch);
+            scale * scale * sumsq_i8(&scratch.codes)
+        }
+        CodecId::Int4 => {
+            unpack_i4(seg, n, scratch);
+            let mut acc = 0.0f32;
+            for (k, &s) in scratch.scales.iter().enumerate() {
+                let lo = k * INT4_GROUP;
+                let hi = (lo + INT4_GROUP).min(n);
+                acc += s * s * sumsq_i8(&scratch.codes[lo..hi]);
+            }
+            acc
+        }
+    }
+}
+
+#[inline]
+fn le_f32(b: &[u8]) -> f32 {
+    f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn decode_to_scratch(codec: CodecId, seg: &[u8], n: usize, scratch: &mut QuantScratch) {
+    scratch.f32buf.resize(n, 0.0);
+    codec.get().decode(seg, &mut scratch.f32buf);
+}
+
+/// Reinterpret the raw int8 payload as signed codes (amortized over all
+/// `Nq` query dots against this segment).
+fn unpack_i8(payload: &[u8], scratch: &mut QuantScratch) {
+    scratch.codes.clear();
+    scratch.codes.extend(payload.iter().map(|&b| b as i8));
+}
+
+/// Split an int4 segment into its group scales and sign-extended
+/// nibble codes (low nibble first — the `Int4Codec` layout).
+fn unpack_i4(seg: &[u8], n: usize, scratch: &mut QuantScratch) {
+    let n_groups = (n + INT4_GROUP - 1) / INT4_GROUP;
+    scratch.scales.clear();
+    for g in 0..n_groups {
+        scratch.scales.push(le_f32(&seg[g * 4..g * 4 + 4]));
+    }
+    let data = &seg[n_groups * 4..];
+    scratch.codes.clear();
+    scratch.codes.reserve(n);
+    for i in 0..n {
+        let b = data[i / 2];
+        let nib = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+        scratch.codes.push(((nib as i8) << 4) >> 4);
+    }
+}
+
+/// Σ codesᵢ · yᵢ — the integer-code inner kernel, blocked 8-wide like
+/// [`dot`] (explicit `std::simd` under the `simd` feature, 8-lane
+/// scalar accumulators otherwise).
+#[inline]
+pub fn dot_i8(codes: &[i8], y: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), y.len());
+    let blocks = codes.len() / 8 * 8;
+    let mut s = dot_i8_blocks(&codes[..blocks], &y[..blocks]);
+    for i in blocks..codes.len() {
+        s += codes[i] as f32 * y[i];
+    }
+    s
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn dot_i8_blocks(codes: &[i8], y: &[f32]) -> f32 {
+    use std::simd::{f32x8, i8x8};
+    let mut acc = f32x8::splat(0.0);
+    for (c, v) in codes.chunks_exact(8).zip(y.chunks_exact(8)) {
+        acc += i8x8::from_slice(c).cast::<f32>() * f32x8::from_slice(v);
+    }
+    let v = acc.to_array();
+    ((v[0] + v[4]) + (v[1] + v[5])) + ((v[2] + v[6]) + (v[3] + v[7]))
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn dot_i8_blocks(codes: &[i8], y: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    for (c, v) in codes.chunks_exact(8).zip(y.chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += c[l] as f32 * v[l];
+        }
+    }
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// Σ codesᵢ² — small integers, so single-f32 accumulation with the same
+/// blocking as [`dot_i8`].
+#[inline]
+fn sumsq_i8(codes: &[i8]) -> f32 {
+    let blocks = codes.len() / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    for c in codes[..blocks].chunks_exact(8) {
+        for l in 0..8 {
+            acc[l] += (c[l] as f32) * (c[l] as f32);
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for &c in &codes[blocks..] {
+        s += (c as f32) * (c as f32);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn encode(codec: CodecId, src: &[f32]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        codec.get().encode(src, &mut bytes);
+        bytes
+    }
+
+    fn decode(codec: CodecId, seg: &[u8], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        codec.get().decode(seg, &mut out);
+        out
+    }
+
+    /// decode-then-score reference, through the SAME `dot` kernel the
+    /// decoded scoring path uses.
+    fn reference_scores(codec: CodecId, seg: &[u8], n: usize, queries: &Mat) -> Vec<f32> {
+        let vals = decode(codec, seg, n);
+        (0..queries.rows).map(|q| dot(&vals, queries.row(q))).collect()
+    }
+
+    #[test]
+    fn quant_scores_match_decode_then_score() {
+        let mut rng = Rng::new(41);
+        for codec in CodecId::ALL {
+            for n in [1usize, 7, 8, 31, 32, 33, 96, 200] {
+                let src: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+                let seg = encode(codec, &src);
+                let queries = Mat::random_normal(5, n, 1.0, &mut rng);
+                let want = reference_scores(codec, &seg, n, &queries);
+                let mut got = vec![0.0f32; 5];
+                let mut scratch = QuantScratch::new();
+                accum_row_scores(codec, &seg, n, &queries, &mut got, &mut scratch);
+                for (q, (a, b)) in got.iter().zip(&want).enumerate() {
+                    if codec == CodecId::Bf16 {
+                        // decode-into-scratch + the shared dot kernel:
+                        // bit-identical, not merely close
+                        assert_eq!(a, b, "{codec:?} n={n} q={q}");
+                    } else {
+                        // same quantized integers; only f32 rounding and
+                        // the scale re-association differ
+                        assert!(
+                            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                            "{codec:?} n={n} q={q}: {a} vs {b}"
+                        );
+                    }
+                }
+                // and it accumulates rather than overwrites
+                let mut again = got.clone();
+                accum_row_scores(codec, &seg, n, &queries, &mut again, &mut scratch);
+                for (q, (a, b)) in again.iter().zip(&got).enumerate() {
+                    let twice = 2.0 * b;
+                    assert!(
+                        (a - twice).abs() <= 1e-4 * (1.0 + twice.abs()) || (a.is_nan() && b.is_nan()),
+                        "{codec:?} n={n} q={q}: {a} vs 2*{b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seg_norm2_matches_decoded_sumsq() {
+        let mut rng = Rng::new(43);
+        for codec in CodecId::ALL {
+            for n in [1usize, 8, 33, 96] {
+                let src: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                let seg = encode(codec, &src);
+                let want = sumsq(&decode(codec, &seg, n));
+                let mut scratch = QuantScratch::new();
+                let got = seg_norm2(codec, &seg, n, &mut scratch);
+                if codec == CodecId::Bf16 {
+                    assert_eq!(got, want, "{codec:?} n={n}");
+                } else {
+                    assert!(
+                        (got - want).abs() <= 1e-4 * (1.0 + want),
+                        "{codec:?} n={n}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_groups_poison_and_zero_segments_score_zero() {
+        for codec in [CodecId::Int8, CodecId::Int4] {
+            let mut src = vec![1.0f32; 64];
+            src[40] = f32::NAN;
+            let seg = encode(codec, &src);
+            let queries = Mat::from_vec(1, 64, vec![1.0; 64]);
+            let mut out = vec![0.0f32];
+            let mut scratch = QuantScratch::new();
+            accum_row_scores(codec, &seg, 64, &queries, &mut out, &mut scratch);
+            assert!(out[0].is_nan(), "{codec:?}: {}", out[0]);
+            assert!(seg_norm2(codec, &seg, 64, &mut scratch).is_nan(), "{codec:?}");
+
+            let zeros = encode(codec, &[0.0; 40]);
+            let queries = Mat::from_vec(2, 40, vec![3.0; 80]);
+            let mut out = vec![0.5f32, -0.5];
+            accum_row_scores(codec, &zeros, 40, &queries, &mut out, &mut scratch);
+            assert_eq!(out, vec![0.5, -0.5], "{codec:?} zero segment must add 0.0");
+            assert_eq!(seg_norm2(codec, &zeros, 40, &mut scratch), 0.0, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn dot_i8_matches_scalar_loop() {
+        let mut rng = Rng::new(47);
+        for n in [0usize, 1, 7, 8, 9, 16, 100] {
+            let codes: Vec<i8> = (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let want: f32 = codes.iter().zip(&y).map(|(&c, &v)| c as f32 * v).sum();
+            assert!((dot_i8(&codes, &y) - want).abs() <= 1e-3 * (1.0 + want.abs()), "n={n}");
+            let want_sq: f32 = codes.iter().map(|&c| (c as f32) * (c as f32)).sum();
+            assert!((sumsq_i8(&codes) - want_sq).abs() <= 1e-2 * (1.0 + want_sq), "n={n}");
+        }
+    }
+
+    #[test]
+    fn quant_plan_addresses_dense_layer_segments() {
+        for codec in CodecId::ALL {
+            let meta = StoreMeta {
+                kind: StoreKind::Dense,
+                tier: "t".into(),
+                f: 4,
+                c: 1,
+                layers: vec![(4, 12), (8, 8)],
+                n_examples: 3,
+                shards: None,
+                summary_chunk: None,
+                codec,
+            };
+            let plan = QuantPlan::dense(&meta).unwrap();
+            assert_eq!(plan.codec(), codec);
+            assert_eq!(plan.n_layers(), 2);
+
+            // two records of distinct values, encoded layer by layer in
+            // record order — exactly the writer's layout
+            let mut rng = Rng::new(53);
+            let mut raw = Vec::new();
+            let mut per_layer: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 2];
+            for _ex in 0..2 {
+                for (l, &(d1, d2)) in meta.layers.iter().enumerate() {
+                    let vals: Vec<f32> = (0..d1 * d2).map(|_| rng.normal() as f32).collect();
+                    codec.get().encode(&vals, &mut raw);
+                    per_layer[l].push(vals);
+                }
+            }
+            assert_eq!(raw.len(), 2 * meta.bytes_per_example(), "{codec:?}");
+            assert_eq!(plan.examples(&raw), 2, "{codec:?}");
+            for ex in 0..2 {
+                for l in 0..2 {
+                    let (seg, n) = plan.seg(&raw, ex, l);
+                    assert_eq!(n, per_layer[l][ex].len(), "{codec:?}");
+                    let got = decode(codec, seg, n);
+                    let direct = {
+                        let mut d = vec![0.0f32; n];
+                        let mut bytes = Vec::new();
+                        codec.get().encode(&per_layer[l][ex], &mut bytes);
+                        codec.get().decode(&bytes, &mut d);
+                        d
+                    };
+                    assert_eq!(got, direct, "{codec:?} ex={ex} l={l}");
+                }
+            }
+        }
+
+        let factored = StoreMeta {
+            kind: StoreKind::Factored,
+            tier: "t".into(),
+            f: 4,
+            c: 2,
+            layers: vec![(4, 12)],
+            n_examples: 1,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Int8,
+        };
+        assert!(QuantPlan::dense(&factored).is_err());
+    }
+
+    #[test]
+    fn quant_score_knob_parses_and_resolves() {
+        for mode in [QuantScore::Auto, QuantScore::On, QuantScore::Off] {
+            assert_eq!(QuantScore::parse(mode.as_str()).unwrap(), mode);
+        }
+        assert!(QuantScore::parse("yes").is_err());
+        assert_eq!(QuantScore::default(), QuantScore::Auto);
+
+        for codec in CodecId::ALL {
+            assert!(!QuantScore::Off.active(true, codec), "{codec:?}");
+            assert!(!QuantScore::On.active(false, codec), "{codec:?}");
+            assert!(QuantScore::On.active(true, codec), "{codec:?}");
+        }
+        assert!(QuantScore::Auto.active(true, CodecId::Int8));
+        assert!(QuantScore::Auto.active(true, CodecId::Int4));
+        assert!(!QuantScore::Auto.active(true, CodecId::Bf16));
+        assert!(!QuantScore::Auto.active(false, CodecId::Int8));
+    }
+}

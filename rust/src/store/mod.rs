@@ -15,14 +15,18 @@
 //! shard layouts, and manifest versions in one bounded-memory streaming
 //! pass (`lorif store recode`) and powers `lorif store inspect`.
 //!
-//! On top of the readers sits the decoded-chunk cache (`cache`): a
-//! byte-budgeted, shard-aware CLOCK cache of decoded chunks that the
-//! serving path shares across scoring workers so hot store spans are
-//! read and decoded once, not once per batch.  The cache always holds
-//! decoded f32 chunks whatever the codec, so cached ≡ cold scoring is
-//! preserved per codec, and its budget is accounted in DECODED bytes
-//! (`StoreMeta::decoded_bytes_per_example`) while `bytes_read` stays
-//! the on-disk (encoded) count.
+//! On top of the readers sits the chunk cache (`cache`): a
+//! byte-budgeted, shard-aware CLOCK cache of chunks that the serving
+//! path shares across scoring workers so hot store spans are read (and,
+//! on the decoded path, decoded) once, not once per batch.  A chunk is
+//! cached in whichever form the query pipeline scored it — decoded f32
+//! matrices, or raw encoded bytes when quantized-domain scoring is
+//! active ([`codec::quant`], the `--quant-score` knob; encoded
+//! residency is 2–4× denser for the int codecs).  The two forms never
+//! alias (the cache key carries the form), each entry's budget charge
+//! is its actual resident bytes (`Chunk::resident_bytes`), and
+//! `bytes_read` stays the on-disk (encoded) count either way, so
+//! cached ≡ cold scoring is preserved per codec and per scoring mode.
 
 pub mod cache;
 pub mod codec;
@@ -32,7 +36,10 @@ pub mod recode;
 pub mod writer;
 
 pub use cache::{CacheStats, ChunkCache};
-pub use codec::{Bf16Codec, Codec, CodecId, Int4Codec, Int8Codec, INT4_GROUP};
+pub use codec::{
+    Bf16Codec, Codec, CodecId, Int4Codec, Int8Codec, QuantPlan, QuantScore, QuantScratch,
+    INT4_GROUP,
+};
 pub use format::{StoreKind, StoreMeta};
 pub use reader::{
     Chunk, ChunkCursor, ChunkLayer, ShardSet, ShardSpan, StoreReader, StreamStats,

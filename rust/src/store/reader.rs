@@ -30,13 +30,19 @@ use super::format::{StoreKind, StoreMeta};
 use crate::linalg::Mat;
 use crate::sketch::StoreSummaries;
 
-/// A decoded chunk of consecutive examples.
+/// A chunk of consecutive examples, in one of two forms: DECODED
+/// (per-layer f32 matrices, the classic path) or ENCODED (the raw
+/// codec bytes, for kernels that score in the quantized domain —
+/// `ChunkKernel::supports_encoded` / `store::codec::quant`).
 pub struct Chunk {
     /// global index of the first example in this chunk
     pub start: usize,
     pub count: usize,
-    /// per layer: matrices with `count` rows
+    /// per layer: matrices with `count` rows (empty in encoded form)
     pub layers: Vec<ChunkLayer>,
+    /// raw encoded record bytes (`count * bytes_per_example`), present
+    /// only when the reader streamed in encoded mode
+    pub encoded: Option<Vec<u8>>,
     /// wall time spent decoding this chunk (the streaming passes report
     /// their full read+decode time separately, via `fetch_chunk`)
     pub io_time: Duration,
@@ -48,8 +54,7 @@ pub enum ChunkLayer {
 }
 
 impl Chunk {
-    /// Decoded in-memory footprint (the f32 matrices) — the byte unit
-    /// the chunk cache budgets against.
+    /// Decoded in-memory footprint (the f32 matrices).
     pub fn decoded_bytes(&self) -> u64 {
         self.layers
             .iter()
@@ -59,6 +64,14 @@ impl Chunk {
             })
             .sum::<usize>() as u64
             * 4
+    }
+
+    /// Actual resident footprint — decoded matrices plus any encoded
+    /// payload.  This is the byte unit the chunk cache budgets against:
+    /// encoded int8/int4 chunks cost 2–4× less than their decoded form,
+    /// so the same budget keeps proportionally more corpus resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.decoded_bytes() + self.encoded.as_ref().map_or(0, |e| e.len() as u64)
     }
 }
 
@@ -119,7 +132,21 @@ pub(crate) fn decode_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> anyhow
             }
         }
     }
-    Ok(Chunk { start, count, layers, io_time: t0.elapsed() })
+    Ok(Chunk { start, count, layers, encoded: None, io_time: t0.elapsed() })
+}
+
+/// Wrap a raw span as an ENCODED chunk: no decode, layers stay empty.
+/// Only kernels that opted in (`ChunkKernel::supports_encoded`) ever see
+/// these; they score the codec bytes directly (`store::codec::quant`).
+pub(crate) fn encoded_chunk(meta: &StoreMeta, start: usize, raw: &[u8]) -> Chunk {
+    let count = raw.len() / meta.bytes_per_example();
+    Chunk {
+        start,
+        count,
+        layers: Vec::new(),
+        encoded: Some(raw.to_vec()),
+        io_time: Duration::ZERO,
+    }
 }
 
 /// Resolve one chunk span for every streaming path (sync, prefetch
@@ -138,6 +165,7 @@ fn fetch_chunk(
     raw: &mut Vec<u8>,
     global_start: usize,
     nbytes: usize,
+    encoded: bool,
 ) -> anyhow::Result<(Arc<Chunk>, bool, Duration)> {
     let t0 = Instant::now();
     if let Some(cached) = cache.and_then(|c| c.get(key)) {
@@ -146,7 +174,11 @@ fn fetch_chunk(
     }
     raw.resize(nbytes, 0);
     file.read_exact(raw)?;
-    let chunk = Arc::new(decode_chunk(meta, global_start, raw)?);
+    let chunk = if encoded {
+        Arc::new(encoded_chunk(meta, global_start, raw))
+    } else {
+        Arc::new(decode_chunk(meta, global_start, raw)?)
+    };
     if let Some(cache) = cache {
         cache.insert(key, &chunk);
     }
@@ -168,6 +200,11 @@ pub struct StoreReader {
     pub shard: usize,
     /// decoded-chunk cache consulted before every disk read
     pub cache: Option<Arc<ChunkCache>>,
+    /// stream ENCODED chunks (raw codec bytes, no decode) instead of
+    /// decoded f32 matrices — set by the executor when the active kernel
+    /// scores in the quantized domain.  Part of the chunk-cache key, so
+    /// the two forms of the same span never serve one another.
+    pub encoded: bool,
 }
 
 impl StoreReader {
@@ -196,6 +233,7 @@ impl StoreReader {
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             shard: 0,
             cache: None,
+            encoded: false,
         })
     }
 
@@ -225,7 +263,7 @@ impl StoreReader {
             let mut raw = Vec::with_capacity(chunk_size * stride);
             while start < n {
                 let count = chunk_size.min(n - start);
-                let key = (self.shard, global_off + start, count);
+                let key = (self.shard, global_off + start, count, self.encoded);
                 let (chunk, from_cache, io) = fetch_chunk(
                     &self.meta,
                     self.cache.as_ref(),
@@ -234,6 +272,7 @@ impl StoreReader {
                     &mut raw,
                     global_off + start,
                     count * stride,
+                    self.encoded,
                 )?;
                 io_total += io;
                 stats.note_read((count * stride) as u64, from_cache, self.cache.is_some());
@@ -254,6 +293,7 @@ impl StoreReader {
         let path = self.path.clone();
         let cache = self.cache.clone();
         let shard = self.shard;
+        let encoded = self.encoded;
         let handle = std::thread::spawn(move || {
             let run = || -> anyhow::Result<()> {
                 let mut file = std::fs::File::open(&path)?;
@@ -261,7 +301,7 @@ impl StoreReader {
                 let mut raw = Vec::new();
                 while start < n {
                     let count = chunk_size.min(n - start);
-                    let key = (shard, global_off + start, count);
+                    let key = (shard, global_off + start, count, encoded);
                     let msg = fetch_chunk(
                         &meta,
                         cache.as_ref(),
@@ -270,6 +310,7 @@ impl StoreReader {
                         &mut raw,
                         global_off + start,
                         count * stride,
+                        encoded,
                     )?;
                     if tx.send(Ok(msg)).is_err() {
                         return Ok(()); // consumer hung up
@@ -407,7 +448,7 @@ impl ChunkCursor<'_> {
         let (start, count) =
             self.peek().ok_or_else(|| anyhow::anyhow!("cursor past end of file"))?;
         let stride = self.reader.meta.bytes_per_example();
-        let key = (self.reader.shard, start, count);
+        let key = (self.reader.shard, start, count, self.reader.encoded);
         let (chunk, from_cache, io) = fetch_chunk(
             &self.reader.meta,
             self.reader.cache.as_ref(),
@@ -416,6 +457,7 @@ impl ChunkCursor<'_> {
             &mut self.raw,
             start,
             count * stride,
+            self.reader.encoded,
         )?;
         self.io += io;
         self.pos += count;
@@ -565,6 +607,7 @@ impl ShardSet {
             prefetch_depth: self.prefetch_depth,
             shard: i,
             cache: self.cache.clone(),
+            encoded: false,
         }
     }
 

@@ -1669,3 +1669,251 @@ fn prop_codec_pruned_equals_full_and_cached_equals_cold() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// quantized-domain scoring invariants (store::codec::quant)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_codec_quant_scoring_equals_decode_then_score() {
+    // For every codec and every store kernel (graddot/logra/trackstar
+    // on dense stores, lorif on factored): scoring with --quant-score
+    // on (integer dot products over the encoded bytes, scales folded
+    // in) matches decode-then-score.  bf16 and the lorif kernel are
+    // BIT-IDENTICAL (the fused path runs the same f32 kernels in the
+    // same per-element order); int8/int4 agree within the codec's
+    // documented max_rel_error bound — the real divergence is only f32
+    // rounding order, so the codec bound is a comfortably safe ceiling.
+    // Under quant-on the pruned streaming top-k still equals its own
+    // full scan with every skipped byte accounted, and scoring through
+    // the (encoded-resident) chunk cache is bit-identical to a cold
+    // quant pass, with the second pass served fully hot.
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::logra::LograScorer;
+    use lorif::attribution::lorif::LorifScorer;
+    use lorif::attribution::trackstar::TrackStarScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::curvature::{DenseCurvature, TruncatedCurvature};
+    use lorif::store::{
+        recode_store, ChunkCache, Codec, CodecId, QuantScore, RecodeOptions,
+    };
+    use std::sync::Arc;
+
+    for_each_case("codec-quant", |seed, rng| {
+        let dims: Vec<(usize, usize)> = vec![(3 + rng.below(3), 3 + rng.below(3))];
+        let c = 1 + rng.below(2);
+        let grid = 4;
+        let n = grid * (4 + rng.below(3));
+        let nq = 1 + rng.below(3);
+        let shards = 1 + rng.below(3);
+        let k = 1 + rng.below(3);
+
+        // clustered magnitudes (strong chunk 0, geometric 25% gaps) so
+        // exact pruning has something to skip; 5% jitter varies the
+        // quantized codes without threatening the top-score separation
+        let data: Vec<LayerGrads> = dims
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(n, d1 * d2);
+                let mut u = Mat::zeros(n, d1 * c);
+                let mut v = Mat::zeros(n, d2 * c);
+                for t in 0..n {
+                    let a = if t < grid { 3.0 * 0.75f32.powi(t as i32) } else { 0.01 };
+                    g.row_mut(t)
+                        .iter_mut()
+                        .for_each(|x| *x = a * (1.0 + 0.05 * rng.normal() as f32));
+                    u.row_mut(t)
+                        .iter_mut()
+                        .for_each(|x| *x = a * (1.0 + 0.05 * rng.normal() as f32));
+                    v.row_mut(t)
+                        .iter_mut()
+                        .for_each(|x| *x = 1.0 + 0.01 * rng.normal() as f32);
+                }
+                LayerGrads { g, u, v }
+            })
+            .collect();
+
+        let mut bases = std::collections::BTreeMap::new();
+        for kind in [StoreKind::Dense, StoreKind::Factored] {
+            let meta = StoreMeta {
+                kind,
+                tier: "small".into(),
+                f: 4,
+                c,
+                layers: dims.clone(),
+                n_examples: 0,
+                shards: None,
+                summary_chunk: None,
+                codec: CodecId::Bf16,
+            };
+            let base = prop_tmp_base(&format!("quantsc_{}", kind.as_str()), seed);
+            if shards <= 1 {
+                let mut w = StoreWriter::create(&base, meta).unwrap();
+                w.set_summary_chunk(grid).unwrap();
+                append_in_batches(&data, n, &mut Rng::labeled(seed, "qs"), |b| {
+                    w.append(b).unwrap()
+                });
+                w.finalize().unwrap();
+            } else {
+                let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+                w.set_summary_chunk(grid).unwrap();
+                append_in_batches(&data, n, &mut Rng::labeled(seed, "qs"), |b| {
+                    w.append(b).unwrap()
+                });
+                w.finalize().unwrap();
+            }
+            bases.insert(kind.as_str(), base);
+        }
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::from_vec(nq, d1 * d2, vec![1.0; nq * d1 * d2]),
+                u: Mat::from_vec(nq, d1 * c, vec![1.0; nq * d1 * c]),
+                v: Mat::from_vec(nq, d2 * c, vec![1.0; nq * d2 * c]),
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c, proj_dims: dims.clone(), layers: qlayers };
+
+        for codec in CodecId::ALL {
+            let store_for = |kind: &str| {
+                let src = &bases[kind];
+                if codec == CodecId::Bf16 {
+                    src.clone()
+                } else {
+                    let dst = prop_tmp_base(
+                        &format!("quantsc_{kind}_{}", codec.as_str()),
+                        seed,
+                    );
+                    let opts =
+                        RecodeOptions { codec: Some(codec), ..Default::default() };
+                    recode_store(src, &dst, &opts).unwrap();
+                    dst
+                }
+            };
+            let dense_base = store_for("dense");
+            let fact_base = store_for("factored");
+            let open = |b: &std::path::PathBuf| ShardSet::open(b).unwrap();
+
+            // bit_exact: the quant path provably reruns the identical f32
+            // kernels (bf16 segments decode to scratch; lorif decodes the
+            // whole chunk in-kernel for every codec)
+            let mut check = |name: &str,
+                             off: &mut dyn Scorer,
+                             on: &mut dyn Scorer,
+                             bit_exact: bool| {
+                let reference = off.score(&qg).unwrap();
+                let quant = on.score(&qg).unwrap();
+                assert_eq!(
+                    quant.bytes_read, reference.bytes_read,
+                    "seed {seed}: {name}/{codec:?} logical bytes changed under quant"
+                );
+                if bit_exact {
+                    assert_eq!(
+                        quant.scores().data,
+                        reference.scores().data,
+                        "seed {seed}: {name}/{codec:?} quant path not bit-identical"
+                    );
+                } else {
+                    let scale = reference
+                        .scores()
+                        .data
+                        .iter()
+                        .fold(0.0f32, |m, &x| m.max(x.abs()));
+                    let tol = codec.get().max_rel_error() * scale.max(1.0) + 1e-6;
+                    for (a, b) in
+                        reference.scores().data.iter().zip(&quant.scores().data)
+                    {
+                        assert!(
+                            (a - b).abs() <= tol,
+                            "seed {seed}: {name}/{codec:?} quant {b} vs decoded {a} \
+                             (tol {tol})"
+                        );
+                    }
+                }
+                // pruned + quant-on: exact vs its own full scan, every
+                // skipped byte accounted
+                let pruned = on.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+                assert_eq!(
+                    pruned.topk(k),
+                    quant.topk(k),
+                    "seed {seed}: {name}/{codec:?} pruned+quant top-k diverged"
+                );
+                assert_eq!(
+                    pruned.bytes_read + pruned.bytes_skipped,
+                    quant.bytes_read,
+                    "seed {seed}: {name}/{codec:?} byte accounting broken under quant"
+                );
+            };
+            let exact = codec == CodecId::Bf16;
+
+            {
+                let mut off = GradDotScorer::new(open(&dense_base));
+                off.quant = QuantScore::Off;
+                let mut on = GradDotScorer::new(open(&dense_base));
+                on.quant = QuantScore::On;
+                check("graddot", &mut off, &mut on, exact);
+            }
+            {
+                let curv =
+                    Arc::new(DenseCurvature::build(&open(&dense_base), 0.1).unwrap());
+                let mut off = LograScorer::new(open(&dense_base), Arc::clone(&curv));
+                off.quant = QuantScore::Off;
+                let mut on = LograScorer::new(open(&dense_base), Arc::clone(&curv));
+                on.quant = QuantScore::On;
+                check("logra", &mut off, &mut on, exact);
+            }
+            {
+                let curv =
+                    Arc::new(DenseCurvature::build(&open(&dense_base), 0.1).unwrap());
+                let mut off =
+                    TrackStarScorer::new(open(&dense_base), Arc::clone(&curv));
+                off.quant = QuantScore::Off;
+                let mut on = TrackStarScorer::new(open(&dense_base), Arc::clone(&curv));
+                on.quant = QuantScore::On;
+                check("trackstar", &mut off, &mut on, exact);
+            }
+            {
+                let curv = Arc::new(
+                    TruncatedCurvature::build(&open(&fact_base), 3, 3, 2, 0.1, seed)
+                        .unwrap(),
+                );
+                let mut off = LorifScorer::new(open(&fact_base), Arc::clone(&curv));
+                off.quant = QuantScore::Off;
+                let mut on = LorifScorer::new(open(&fact_base), Arc::clone(&curv));
+                on.quant = QuantScore::On;
+                // lorif decodes in-kernel: bit-identical for EVERY codec
+                check("lorif", &mut off, &mut on, true);
+            }
+
+            // cached quant scoring: the cache now holds ENCODED bytes
+            // (2-4x residency); both passes bit-identical to the cold
+            // quant pass, second pass served fully hot
+            let cold = {
+                let mut s = GradDotScorer::new(open(&dense_base));
+                s.quant = QuantScore::On;
+                s.score(&qg).unwrap()
+            };
+            let mut warm_set = open(&dense_base);
+            warm_set.set_cache(Some(ChunkCache::with_capacity(32 << 20)));
+            let mut warm = GradDotScorer::new(warm_set);
+            warm.quant = QuantScore::On;
+            for pass in 0..2 {
+                let got = warm.score(&qg).unwrap();
+                assert_eq!(
+                    got.scores().data,
+                    cold.scores().data,
+                    "seed {seed}: {codec:?} cached quant pass {pass} diverged"
+                );
+                assert_eq!(got.bytes_read, cold.bytes_read, "seed {seed}: {codec:?}");
+                if pass == 1 {
+                    assert!(
+                        got.cache_hits > 0,
+                        "seed {seed}: {codec:?} warm quant pass missed"
+                    );
+                    assert_eq!(got.cache_misses, 0, "seed {seed}: {codec:?}");
+                }
+            }
+        }
+    });
+}
