@@ -6,9 +6,12 @@
 //! single-reader monolithic path, full-matrix vs streaming-top-k score
 //! sinks (latency + peak score memory), the quantized-domain scoring
 //! roofline (per-kernel on-disk GB/s, `--quant-score on` vs
-//! decode-then-score, per int codec), and (with `--features xla`) the
-//! XLA-executable scorer vs the Rust-native scorer.  The before/after
-//! log lives in EXPERIMENTS.md §Perf.
+//! decode-then-score, per int codec), the clustered retrieval tier
+//! (best-first scan over a `--cluster`-reordered store: exact and
+//! `recall=x` bytes/latency/overlap vs the unclustered full scan),
+//! and (with `--features xla`) the XLA-executable scorer vs the
+//! Rust-native scorer.  The before/after log lives in EXPERIMENTS.md
+//! §Perf.
 //!
 //! `LORIF_PERF_QUICK=1` shrinks sizes and iteration counts for the CI
 //! perf-smoke job; the sink comparison is also persisted as JSON to
@@ -652,6 +655,212 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
+        // clustered retrieval tier: a separated-blob corpus written in
+        // shuffled arrival order, recoded with `--cluster` so each
+        // summary chunk is one tight cluster, then scanned best-first.
+        // Exact mode must return the unclustered full scan's top-k
+        // bit-for-bit while reading fewer bytes; `--prune recall=x`
+        // trades certified-recall for I/O.  The recall/latency/bytes
+        // curve is persisted for the CI perf-smoke assertions.
+        let mut cluster_fields: Vec<(&'static str, lorif::util::json::Value)> = Vec::new();
+        {
+            use lorif::store::{recode_store, RecodeOptions};
+
+            let kc = 32usize; // separated blobs, one k-means center each
+            let n_c = if quick() { 2048usize } else { 4096 };
+            let grid_c = 64usize; // chunk is at most one blob
+            let nq_c = 8usize;
+            let dim: usize = layers.iter().map(|&(d1, d2)| d1 * d2).sum();
+
+            // well-separated random centers; shuffled arrival order
+            let centers = Mat::random_normal(kc, dim, 1.0, &mut rng);
+            let mut assign_c: Vec<usize> = (0..n_c).map(|t| t % kc).collect();
+            rng.shuffle(&mut assign_c);
+
+            let src_base = dir.join("ivf_src");
+            let meta = StoreMeta {
+                kind: StoreKind::Dense,
+                tier: "small".into(),
+                f: 4,
+                c: 1,
+                layers: layers.clone(),
+                n_examples: 0,
+                shards: None,
+                summary_chunk: None,
+                codec: lorif::store::CodecId::Bf16,
+            };
+            let mut w = StoreWriter::create(&src_base, meta)?;
+            w.set_summary_chunk(grid_c)?;
+            let mut lg_c: Vec<LayerGrads> = Vec::new();
+            let mut off = 0usize;
+            for &(d1, d2) in &layers {
+                let d = d1 * d2;
+                let mut g = Mat::zeros(n_c, d);
+                for t in 0..n_c {
+                    let cen = centers.row(assign_c[t]);
+                    for (x, slot) in g.row_mut(t).iter_mut().enumerate() {
+                        *slot = cen[off + x] * (1.0 + 0.05 * rng.normal() as f32);
+                    }
+                }
+                off += d;
+                lg_c.push(LayerGrads { g, u: Mat::zeros(n_c, d1), v: Mat::zeros(n_c, d2) });
+            }
+            w.append(&ExtractBatch { losses: vec![0.0; n_c], layers: lg_c, valid: n_c })?;
+            w.finalize()?;
+
+            let dst_base = dir.join("ivf_clustered");
+            let rep = recode_store(
+                &src_base,
+                &dst_base,
+                &RecodeOptions { cluster: Some(kc), ..Default::default() },
+            )?;
+            assert_eq!(rep.cluster, Some(kc), "recode did not attach cluster metadata");
+
+            // queries aligned with the blob that seeds k-means centroid 0
+            // (the arrival-order record at storage position 0), so the
+            // reordered store concentrates their top-k in very few chunks
+            let hot = assign_c[0];
+            let mut qlayers_c: Vec<QueryLayer> = Vec::new();
+            let mut off = 0usize;
+            for &(d1, d2) in &layers {
+                let d = d1 * d2;
+                let mut g = Mat::zeros(nq_c, d);
+                for qi in 0..nq_c {
+                    let cen = centers.row(hot);
+                    for (x, slot) in g.row_mut(qi).iter_mut().enumerate() {
+                        *slot = cen[off + x] + 0.02 * rng.normal() as f32;
+                    }
+                }
+                off += d;
+                qlayers_c.push(QueryLayer {
+                    g,
+                    u: Mat::zeros(nq_c, d1),
+                    v: Mat::zeros(nq_c, d2),
+                });
+            }
+            let qc =
+                QueryGrads { n_query: nq_c, c: 1, proj_dims: layers.clone(), layers: qlayers_c };
+
+            let mut src_scorer = GradDotScorer::new(ShardSet::open(&src_base)?);
+            src_scorer.score_threads = 1;
+            let mut dst_scorer = GradDotScorer::new(ShardSet::open(&dst_base)?);
+            dst_scorer.score_threads = 1;
+
+            // unclustered full scan: the reference answer + byte budget
+            src_scorer.prune = PruneMode::Off;
+            let r_ref = src_scorer.score_sink(&qc, SinkSpec::TopK(k))?;
+            let bytes_full = r_ref.bytes_read;
+            let topk_ref = r_ref.topk(k);
+
+            // unclustered exact pruning: arrival order scatters every
+            // blob across every chunk, so the summary bounds barely help
+            src_scorer.prune = PruneMode::Exact;
+            let r_src_exact = src_scorer.score_sink(&qc, SinkSpec::TopK(k))?;
+            assert_eq!(r_src_exact.topk(k), topk_ref, "unclustered exact pruning diverged");
+
+            // clustered exact: bit-identical top-k, fewer bytes
+            dst_scorer.prune = PruneMode::Exact;
+            let r_exact = dst_scorer.score_sink(&qc, SinkSpec::TopK(k))?;
+            assert_eq!(
+                r_exact.topk(k),
+                topk_ref,
+                "clustered exact top-k diverged from the unclustered full scan"
+            );
+            assert_eq!(
+                r_exact.bytes_read + r_exact.bytes_skipped,
+                bytes_full,
+                "best-first byte ledger broken"
+            );
+            assert!(
+                r_exact.bytes_read <= bytes_full,
+                "clustered exact mode read more than the full scan"
+            );
+            let t_exact = time(3, || {
+                let _ = dst_scorer.score_sink(&qc, SinkSpec::TopK(k)).unwrap();
+            });
+            println!(
+                "retrieval tier (n={n_c}, {kc} blobs, grid {grid_c}, k={k}): full scan \
+                 {bytes_full} B | unclustered exact {} B | clustered exact {} B \
+                 ({:.1}% of full, {} of {} chunks skipped)",
+                r_src_exact.bytes_read,
+                r_exact.bytes_read,
+                100.0 * r_exact.bytes_read as f64 / bytes_full.max(1) as f64,
+                r_exact.chunks_skipped,
+                (n_c + grid_c - 1) / grid_c
+            );
+
+            let overlap_vs_ref = |topk: &Vec<Vec<usize>>| -> f64 {
+                let inter: usize = topk_ref
+                    .iter()
+                    .zip(topk)
+                    .map(|(a, b)| a.iter().filter(|i| b.contains(i)).count())
+                    .sum();
+                inter as f64 / (nq_c * k) as f64
+            };
+
+            cluster_fields.push(("cluster_k", kc.into()));
+            cluster_fields.push(("cluster_grid", grid_c.into()));
+            cluster_fields.push(("cluster_n", n_c.into()));
+            cluster_fields.push(("cluster_full_scan_bytes", (bytes_full as usize).into()));
+            cluster_fields
+                .push(("cluster_src_exact_bytes_read", (r_src_exact.bytes_read as usize).into()));
+            cluster_fields.push(("cluster_exact_bytes_read", (r_exact.bytes_read as usize).into()));
+            cluster_fields.push(("cluster_exact_ms", (t_exact * 1e3).into()));
+            cluster_fields.push(("cluster_exact_overlap_at_k", 1.0f64.into()));
+
+            // recall curve: certified-recall early stop vs bytes/latency
+            for (key_bytes, key_ms, key_overlap, target) in [
+                (
+                    "cluster_recall90_bytes_read",
+                    "cluster_recall90_ms",
+                    "cluster_recall90_overlap_at_k",
+                    0.90f32,
+                ),
+                (
+                    "cluster_recall99_bytes_read",
+                    "cluster_recall99_ms",
+                    "cluster_recall99_overlap_at_k",
+                    0.99,
+                ),
+                (
+                    "cluster_recall100_bytes_read",
+                    "cluster_recall100_ms",
+                    "cluster_recall100_overlap_at_k",
+                    1.0,
+                ),
+            ] {
+                dst_scorer.prune = PruneMode::Recall(target);
+                let r = dst_scorer.score_sink(&qc, SinkSpec::TopK(k))?;
+                let overlap = overlap_vs_ref(&r.topk(k));
+                assert!(
+                    overlap >= target as f64,
+                    "recall={target}: certified stop delivered overlap {overlap}"
+                );
+                let t_r = time(3, || {
+                    let _ = dst_scorer.score_sink(&qc, SinkSpec::TopK(k)).unwrap();
+                });
+                println!(
+                    "retrieval tier recall={target}: {} B read ({:.1}% of full) | \
+                     overlap@{k} {overlap:.3} | {:.1} ms",
+                    r.bytes_read,
+                    100.0 * r.bytes_read as f64 / bytes_full.max(1) as f64,
+                    t_r * 1e3
+                );
+                if (target - 0.99).abs() < 1e-6 {
+                    assert!(
+                        r.bytes_read * 10 <= bytes_full,
+                        "recall=0.99 read {} B, over 10% of the {} B full scan",
+                        r.bytes_read,
+                        bytes_full
+                    );
+                    assert!(overlap >= 0.99, "recall=0.99 overlap {overlap} below target");
+                }
+                cluster_fields.push((key_bytes, (r.bytes_read as usize).into()));
+                cluster_fields.push((key_ms, (t_r * 1e3).into()));
+                cluster_fields.push((key_overlap, overlap.into()));
+            }
+        }
+
         // persist the sink + pruning comparison for the CI perf-smoke
         // artifact
         let mut fields: Vec<(&'static str, lorif::util::json::Value)> = vec![
@@ -673,6 +882,7 @@ fn main() -> anyhow::Result<()> {
         fields.extend(bytes_by_k);
         fields.extend(codec_fields);
         fields.extend(roofline_fields);
+        fields.extend(cluster_fields);
         let doc = lorif::util::json::obj(fields);
         let out_dir = std::path::PathBuf::from("work/bench/results");
         std::fs::create_dir_all(&out_dir)?;

@@ -20,19 +20,28 @@
 //!
 //! On top of the sinks sits chunk pruning (`crate::sketch`): when the
 //! store carries a v3 summary sidecar, the sink is a top-k heap, and
-//! `--prune` is on, the executor walks the summary grid with a
-//! skip-aware cursor.  A chunk is read only if some query's
-//! Cauchy–Schwarz upper bound (`ChunkKernel::upper_bound`) could still
-//! beat that query's current k-th best (`ScoreSink::threshold`);
-//! otherwise the cursor seeks past it, and the saved I/O is reported as
-//! `bytes_skipped`/`chunks_skipped` on the `ScoreReport`.  Exact mode
-//! is provably identical to a full scan (see `sketch::prune`).
+//! `--prune` is on, the executor visits the summary grid BEST-FIRST —
+//! chunks ranked by their best query bound (`ChunkKernel::upper_bound`)
+//! and walked in that order with a seeking `ChunkCursor`.  A chunk is
+//! read only if some query's bound could still beat that query's
+//! current k-th best (`ScoreSink::threshold`, tightened across shard
+//! workers by `query::parallel::SharedThreshold`); the pass stops as
+//! soon as every remaining bound is strictly below every threshold, and
+//! everything unvisited is reported as `bytes_skipped`/`chunks_skipped`
+//! on the `ScoreReport` (the ledger `bytes_read + bytes_skipped ==
+//! full-scan bytes` always balances).  Exact mode is provably identical
+//! to a full scan (see `sketch::prune`); `--prune recall=x` adds a
+//! per-shard early stop once `ceil(x·k)` heap entries are provably
+//! final.  On a clustered (v5) store the sinks map storage positions
+//! back through the recorded permutation, so results stay in caller
+//! coordinates and the best-first order is invisible except in bytes.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::{QueryGrads, ScoreOutput, ScoreReport, SinkSpec};
 use crate::linalg::Mat;
-use crate::query::parallel::{self, ShardScores, TopK};
+use crate::query::parallel::{self, ShardScores, SharedThreshold, TopK};
 use crate::sketch::{ChunkPruner, ChunkSummary, PruneMode};
 use crate::store::{
     Chunk, QuantScore, QuantScratch, ShardSet, StoreKind, StoreMeta, StoreReader, StreamStats,
@@ -126,13 +135,27 @@ pub trait ScoreSink: Send {
     /// streaming-top-k O(Nq·k) guarantee is asserted through this).
     fn allocated_elems(&self) -> usize;
 
-    /// The score a NEW candidate at a higher index must EXCEED to
-    /// change this sink's output for query `q`, or `None` when the sink
-    /// still needs every score.  The default (`None`) makes pruning
-    /// inert for full-matrix passes.
+    /// The current k-th best score for query `q` — the pruning
+    /// threshold — or `None` when the sink still needs every score.
+    /// The executor skips a chunk only when its bound is STRICTLY below
+    /// this (see the exactness argument in `sketch::prune`: strictness
+    /// is what keeps the skip sound under best-first visit order, where
+    /// a skipped chunk may hold lower original indices than resident
+    /// entries).  The default (`None`) makes pruning inert for
+    /// full-matrix passes.
     fn threshold(&self, q: usize) -> Option<f32> {
         let _ = q;
         None
+    }
+
+    /// How many of this sink's entries for query `q` are provably FINAL
+    /// given that every unseen score is at most `bound`: entries whose
+    /// score strictly exceeds `bound` can never be displaced.  Drives
+    /// the `--prune recall=x` early stop; the default (0) makes it
+    /// inert for sinks without bounded entries.
+    fn certified(&self, q: usize, bound: f32) -> usize {
+        let _ = (q, bound);
+        0
     }
 }
 
@@ -168,11 +191,22 @@ impl ScoreSink for FullMatrixSink {
 /// memory per shard, independent of the store size.
 pub struct StreamingTopK {
     pub heaps: Vec<TopK>,
+    /// storage→original index map of a clustered (v5) store, shared
+    /// across shard workers; `None` for identity layouts
+    perm: Option<Arc<Vec<u32>>>,
 }
 
 impl StreamingTopK {
     pub fn new(nq: usize, k: usize) -> StreamingTopK {
-        StreamingTopK { heaps: (0..nq).map(|_| TopK::new(k)).collect() }
+        StreamingTopK::with_perm(nq, k, None)
+    }
+
+    /// Like `new`, but every pushed storage position is first mapped
+    /// back through `perm`, so heap entries — and the (score, index)
+    /// tie-breaks that decide the k-th slot — live in the caller's
+    /// original coordinates regardless of the on-disk order.
+    pub fn with_perm(nq: usize, k: usize, perm: Option<Arc<Vec<u32>>>) -> StreamingTopK {
+        StreamingTopK { heaps: (0..nq).map(|_| TopK::new(k)).collect(), perm }
     }
 }
 
@@ -180,8 +214,12 @@ impl ScoreSink for StreamingTopK {
     fn consume(&mut self, start: usize, block: &Mat) {
         for b in 0..block.rows {
             let row = block.row(b);
+            let idx = match &self.perm {
+                Some(p) => p[start + b] as usize,
+                None => start + b,
+            };
             for (q, heap) in self.heaps.iter_mut().enumerate() {
-                heap.push(start + b, row[q]);
+                heap.push(idx, row[q]);
             }
         }
     }
@@ -192,6 +230,13 @@ impl ScoreSink for StreamingTopK {
 
     fn threshold(&self, q: usize) -> Option<f32> {
         self.heaps[q].threshold()
+    }
+
+    fn certified(&self, q: usize, bound: f32) -> usize {
+        // entries are sorted descending by score; everything strictly
+        // above `bound` can never be displaced by an unseen example
+        // (whose score is at most `bound`), under any tie-break
+        self.heaps[q].entries().partition_point(|&(s, _)| s > bound)
     }
 }
 
@@ -278,7 +323,7 @@ pub fn execute<K: ChunkKernel>(
 
     match sink {
         SinkSpec::Full => {
-            let runs = run_shards(set, opts, prefetch, pruner, kernel, queries, |r| {
+            let runs = run_shards(set, opts, prefetch, pruner, None, None, kernel, queries, |r| {
                 FullMatrixSink::new(nq, r.start, r.count)
             })?;
             let peak: usize = runs.iter().map(|r| r.peak).sum();
@@ -298,6 +343,22 @@ pub fn execute<K: ChunkKernel>(
                 .collect();
             let (scores, shard_timer, bytes) = parallel::merge_scores(nq, n, parts);
             debug_assert_eq!(bytes, agg.bytes_read);
+            // clustered (v5) store: the merged matrix is in storage
+            // order; put columns back in the caller's original
+            // coordinates so the reordering stays invisible
+            let scores = match set.cluster() {
+                Some(c) => {
+                    let mut out = Mat::zeros(nq, n);
+                    for q in 0..nq {
+                        let src = scores.row(q);
+                        for (storage, &orig) in c.perm.iter().enumerate() {
+                            *out.at_mut(q, orig as usize) = src[storage];
+                        }
+                    }
+                    out
+                }
+                None => scores,
+            };
             timer.merge(&shard_timer);
             Ok(ScoreReport {
                 output: ScoreOutput::Full(scores),
@@ -313,8 +374,22 @@ pub fn execute<K: ChunkKernel>(
             })
         }
         SinkSpec::TopK(k) => {
-            let runs = run_shards(set, opts, prefetch, pruner, kernel, queries, |_| {
-                StreamingTopK::new(nq, k)
+            // clustered (v5) store: sinks push ORIGINAL indices, so the
+            // (score, index) tie-break — and hence the top-k — matches
+            // an unclustered scan bit for bit
+            let perm: Option<Arc<Vec<u32>>> = set.cluster().map(|c| Arc::new(c.perm.clone()));
+            // cross-worker threshold exchange: each worker publishes its
+            // k-th best after every scored chunk, every worker skips
+            // against max(local, shared)
+            let shared = SharedThreshold::new(nq);
+            // `--prune recall=x` early-stop target: entries that must be
+            // provably final per query before a shard may stop
+            let need = opts
+                .prune
+                .recall()
+                .map(|x| (x * k.min(n.max(1)) as f32).ceil().max(1.0) as usize);
+            let runs = run_shards(set, opts, prefetch, pruner, Some(&shared), need, kernel, queries, |_| {
+                StreamingTopK::with_perm(nq, k, perm.clone())
             })?;
             let mut io = Duration::ZERO;
             let mut compute = Duration::ZERO;
@@ -348,14 +423,19 @@ pub fn execute<K: ChunkKernel>(
 }
 
 /// The one worker loop: stream each shard in chunks, score, sink.  With
-/// a pruner, the shard is walked on the summary grid with a skip-aware
-/// cursor; a chunk is read only if some query's bound still clears its
-/// heap threshold.
+/// a pruner, the shard is walked on the summary grid BEST-FIRST — in
+/// descending order of each chunk's best query bound, with a seeking
+/// cursor — so the heap thresholds tighten as fast as the bounds allow
+/// and the weak tail is skipped (or, under a recall target, not visited
+/// at all) instead of being streamed past.
+#[allow(clippy::too_many_arguments)]
 fn run_shards<K, S, F>(
     set: &ShardSet,
     opts: &ExecOptions,
     prefetch: bool,
     pruner: Option<&ChunkPruner<'_>>,
+    shared: Option<&SharedThreshold>,
+    need: Option<usize>,
     kernel: &K,
     queries: &QueryGrads,
     make_sink: F,
@@ -395,29 +475,107 @@ where
             Ok(t0.elapsed())
         };
         if let Some(pr) = pruner {
-            // skip-aware pass on the summary grid (no prefetch thread:
-            // skip decisions depend on the heap state fed back per
-            // chunk).  The skip test runs BEFORE any cache lookup, so a
-            // resident chunk never changes a pruning decision and skips
-            // never populate the cache.
+            // best-first pass on the summary grid (no prefetch thread:
+            // the visit order is data-driven and skip decisions depend
+            // on heap state fed back per chunk).  The skip test runs
+            // BEFORE any cache lookup, so a resident chunk never
+            // changes a pruning decision and skips never populate the
+            // cache.
             let mut cur = reader.chunks(pr.chunk_size())?;
-            while let Some((start, count)) = cur.peek() {
-                let skippable = nq > 0
-                    && pr.summary_for(start, count).map_or(false, |s| {
-                        (0..nq).all(|q| {
-                            match (sink.threshold(q), kernel.upper_bound(s, q)) {
-                                (Some(t), Some(u)) => pr.deflate(u) <= t,
-                                _ => false,
-                            }
-                        })
-                    });
-                if skippable {
-                    cur.skip()?;
+            let (lo, hi) = (reader.start, reader.start + reader.count);
+            // this shard's summary chunks — the grid tiles every shard
+            // exactly (StoreSummaries::validate ran at open), so the
+            // sidecar IS the chunk list
+            let chunks: Vec<&ChunkSummary> = pr
+                .summaries
+                .chunks
+                .iter()
+                .filter(|s| s.start >= lo && s.start < hi)
+                .collect();
+            // per (chunk, query) bounds, +inf where the kernel offers
+            // none (such chunks sort first and are always read)
+            let bounds: Vec<Vec<f32>> = chunks
+                .iter()
+                .map(|s| {
+                    (0..nq)
+                        .map(|q| kernel.upper_bound(s, q).unwrap_or(f32::INFINITY))
+                        .collect()
+                })
+                .collect();
+            // visit order: descending best-over-queries bound under
+            // total_cmp (NaN ranks above +inf, so non-finite chunks
+            // lead), ties toward the lower start for determinism
+            let best = |b: &[f32]| {
+                b.iter().copied().max_by(f32::total_cmp).unwrap_or(f32::INFINITY)
+            };
+            let mut order: Vec<usize> = (0..chunks.len()).collect();
+            order.sort_by(|&a, &b| {
+                best(&bounds[b])
+                    .total_cmp(&best(&bounds[a]))
+                    .then(chunks[a].start.cmp(&chunks[b].start))
+            });
+            // rem[i][q]: best bound any chunk in order[i..] still holds
+            // for query q — the ceiling on every unseen score once the
+            // first i chunks of the order are dealt with
+            let mut rem = vec![vec![f32::NEG_INFINITY; nq]; order.len() + 1];
+            for i in (0..order.len()).rev() {
+                for q in 0..nq {
+                    let u = bounds[order[i]][q];
+                    let prev = rem[i + 1][q];
+                    rem[i][q] = if u.total_cmp(&prev).is_gt() { u } else { prev };
+                }
+            }
+            // skip threshold: the shard's own k-th best, tightened by
+            // the best k-th best any worker has published (sound for
+            // the MERGED output: a score below another shard's k-th
+            // best is below the merged k-th best a fortiori)
+            let thr = |q: usize, sink: &S| -> Option<f32> {
+                match (sink.threshold(q), shared.and_then(|s| s.get(q))) {
+                    (Some(a), Some(b)) => Some(a.max(b)),
+                    (a, None) => a,
+                    (None, b) => b,
+                }
+            };
+            for (i, &ci) in order.iter().enumerate() {
+                // exact bulk stop: every query's best remaining bound is
+                // strictly below its threshold — nothing unvisited can
+                // enter any heap.  recall stop: every query already
+                // holds `need` entries no unvisited chunk can displace.
+                let done = (0..nq).all(|q| match thr(q, &sink) {
+                    Some(t) => pr.deflate(rem[i][q]) < t,
+                    None => false,
+                }) || need.map_or(false, |need| {
+                    (0..nq).all(|q| sink.certified(q, rem[i][q]) >= need)
+                });
+                if done {
+                    for &cj in &order[i..] {
+                        cur.account_skip(chunks[cj].count);
+                    }
+                    break;
+                }
+                // per-chunk test, STRICT (`<`): under best-first order a
+                // skipped chunk may hold lower original indices than
+                // resident entries, so only strict inferiority is sound
+                // (see sketch::prune)
+                let skip = (0..nq).all(|q| match thr(q, &sink) {
+                    Some(t) => pr.deflate(bounds[ci][q]) < t,
+                    None => false,
+                });
+                if skip {
+                    cur.account_skip(chunks[ci].count);
                     continue;
                 }
+                cur.goto(chunks[ci].start)?;
                 let chunk = cur.read()?;
                 compute += score_one(&chunk, &mut sink, &mut block, &mut scratch)?;
                 peak = peak.max(sink.allocated_elems());
+                if let Some(sh) = shared {
+                    for q in 0..nq {
+                        if let Some(t) = sink.threshold(q) {
+                            sh.publish(q, t);
+                        }
+                    }
+                }
             }
             let stats = cur.stats().clone();
             Ok(ShardRun { sink, io: cur.io_time(), compute, stats, peak })
@@ -469,6 +627,33 @@ mod tests {
         for heap in &sink.heaps {
             assert_eq!(heap.len(), k);
         }
+    }
+
+    #[test]
+    fn streaming_topk_maps_storage_positions_through_the_permutation() {
+        // clustered layout [2, 0, 3, 1]: storage position p holds the
+        // example originally indexed perm[p]
+        let perm = Arc::new(vec![2u32, 0, 3, 1]);
+        let mut sink = StreamingTopK::with_perm(1, 4, Some(perm));
+        sink.consume(0, &Mat::from_vec(4, 1, vec![4.0, 3.0, 2.0, 1.0]));
+        assert_eq!(
+            sink.heaps[0].entries(),
+            &[(4.0, 2), (3.0, 0), (2.0, 3), (1.0, 1)],
+            "entries carry original coordinates"
+        );
+    }
+
+    #[test]
+    fn certified_counts_only_strictly_dominating_entries() {
+        let mut sink = StreamingTopK::new(1, 3);
+        sink.consume(0, &Mat::from_vec(3, 1, vec![5.0, 3.0, 1.0]));
+        assert_eq!(sink.certified(0, 0.5), 3);
+        assert_eq!(sink.certified(0, 1.0), 2, "a tied entry is displaceable");
+        assert_eq!(sink.certified(0, 3.0), 1);
+        assert_eq!(sink.certified(0, 9.0), 0);
+        // full-matrix sinks never certify anything
+        let full = FullMatrixSink::new(1, 0, 3);
+        assert_eq!(full.certified(0, -1.0), 0);
     }
 
     #[test]

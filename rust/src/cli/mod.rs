@@ -106,6 +106,7 @@ impl Args {
         take!(prefetch_depth, "prefetch-depth", get_usize);
         take!(chunk_cache_mb, "chunk-cache-mb", get_usize);
         take!(summary_chunk, "summary-chunk", get_usize);
+        take!(cluster, "cluster", get_usize);
         if let Some(s) = self.get("sink") {
             cfg.score_sink = crate::attribution::SinkMode::parse(s)?;
         }
@@ -167,7 +168,7 @@ mod tests {
             "x", "--f", "8", "--c", "2", "--tier", "medium", "--n-train", "512", "--shards",
             "4", "--score-threads", "2", "--sink", "topk", "--prune", "slack=0.1",
             "--prefetch-depth", "3", "--chunk-cache-mb", "128", "--summary-chunk", "64",
-            "--codec", "int8", "--quant-score", "on",
+            "--cluster", "16", "--codec", "int8", "--quant-score", "on",
         ]);
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
@@ -182,6 +183,7 @@ mod tests {
         assert_eq!(cfg.prefetch_depth, 3);
         assert_eq!(cfg.chunk_cache_mb, 128);
         assert_eq!(cfg.summary_chunk, 64);
+        assert_eq!(cfg.cluster, 16);
         assert_eq!(cfg.codec, crate::store::CodecId::Int8);
         assert_eq!(cfg.quant_score, crate::store::QuantScore::On);
     }

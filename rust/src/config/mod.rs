@@ -57,6 +57,12 @@ pub struct Config {
     /// stage-1 summary-sidecar grid in records (0 disables the sidecar,
     /// producing a pre-v3 store with no pruning)
     pub summary_chunk: usize,
+    /// cluster the stage-1 stores into this many k-means groups
+    /// (`--cluster k`; 0 keeps arrival order).  Clustering reorders
+    /// records into the v5 layout so the summary bounds prune early —
+    /// stage 1 runs `store recode --cluster` after extraction, and the
+    /// permutation keeps all reported indices in caller coordinates.
+    pub cluster: usize,
     /// record codec for the stage-1 stores (`--codec bf16|int8|int4`);
     /// non-default codecs write the v4 layout.  Changing it rebuilds
     /// the store, same as `--shards` (`store_layout_current`), and
@@ -96,6 +102,7 @@ impl Default for Config {
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             chunk_cache_mb: 0,
             summary_chunk: DEFAULT_SUMMARY_CHUNK,
+            cluster: 0,
             codec: CodecId::Bf16,
             quant_score: QuantScore::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -142,6 +149,7 @@ impl Config {
         num!(prefetch_depth, "prefetch_depth", usize);
         num!(chunk_cache_mb, "chunk_cache_mb", usize);
         num!(summary_chunk, "summary_chunk", usize);
+        num!(cluster, "cluster", usize);
         if let Some(s) = v.get("score_sink").and_then(Value::as_str) {
             self.score_sink = SinkMode::parse(s)?;
         }
@@ -190,6 +198,12 @@ impl Config {
         anyhow::ensure!(self.n_train >= 8 && self.n_query >= 1, "dataset too small");
         anyhow::ensure!(self.shards >= 1, "shards must be >= 1");
         anyhow::ensure!(self.prefetch_depth >= 1, "prefetch_depth must be >= 1");
+        anyhow::ensure!(
+            self.cluster == 0 || self.summary_chunk >= 1,
+            "cluster={} needs a summary grid (summary_chunk >= 1): the sidecar is \
+             the retrieval tier the clustering serves",
+            self.cluster
+        );
         Ok(())
     }
 
@@ -225,6 +239,7 @@ impl Config {
             ("prefetch_depth", self.prefetch_depth.into()),
             ("chunk_cache_mb", self.chunk_cache_mb.into()),
             ("summary_chunk", self.summary_chunk.into()),
+            ("cluster", self.cluster.into()),
             ("codec", self.codec.as_str().into()),
             ("quant_score", self.quant_score.as_str().into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
@@ -255,6 +270,7 @@ mod tests {
         cfg.prefetch_depth = 4;
         cfg.chunk_cache_mb = 256;
         cfg.summary_chunk = 128;
+        cfg.cluster = 32;
         cfg.codec = CodecId::Int8;
         cfg.quant_score = QuantScore::On;
         let v = cfg.to_json();
@@ -270,8 +286,19 @@ mod tests {
         assert_eq!(back.prefetch_depth, 4);
         assert_eq!(back.chunk_cache_mb, 256);
         assert_eq!(back.summary_chunk, 128);
+        assert_eq!(back.cluster, 32);
         assert_eq!(back.codec, CodecId::Int8);
         assert_eq!(back.quant_score, QuantScore::On);
+    }
+
+    #[test]
+    fn rejects_clustering_without_a_summary_grid() {
+        let mut cfg = Config::default();
+        cfg.cluster = 8;
+        cfg.summary_chunk = 0;
+        assert!(cfg.validate().is_err());
+        cfg.summary_chunk = 64;
+        cfg.validate().unwrap();
     }
 
     #[test]

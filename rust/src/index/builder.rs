@@ -5,7 +5,7 @@
 //! (base-model training, LDS retraining actuals) across attribution
 //! configurations.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::attribution::repsim::EmbedStore;
@@ -17,7 +17,10 @@ use crate::model::checkpoint::Checkpoint;
 use crate::model::spec::SEQ_LEN;
 use crate::runtime::{lit_f32, Embedder, GradExtractor, LossEval, Runtime, Trainer};
 use crate::runtime::ExtractBatch;
-use crate::store::{ShardSet, ShardedWriter, StoreKind, StoreMeta, StoreWriter};
+use crate::store::{
+    recode_store, ClusterMeta, RecodeOptions, ShardSet, ShardedWriter, StoreKind, StoreMeta,
+    StoreWriter,
+};
 use crate::util::prng::Rng;
 
 /// Stage-1 writer over either store layout, picked by `Config::shards`.
@@ -58,6 +61,53 @@ impl Stage1Writer {
             Stage1Writer::Sharded(w) => w.finalize(),
         }
     }
+}
+
+/// Every on-disk file of the store described by `meta`, as
+/// `(at_from, at_to)` rename pairs between two base paths.
+fn store_file_moves(meta: &StoreMeta, from: &Path, to: &Path) -> Vec<(PathBuf, PathBuf)> {
+    let mut v = vec![(StoreMeta::meta_path(from), StoreMeta::meta_path(to))];
+    match &meta.shards {
+        None => v.push((StoreMeta::data_path(from), StoreMeta::data_path(to))),
+        Some(counts) => {
+            for i in 0..counts.len() {
+                v.push((
+                    StoreMeta::shard_data_path(from, i),
+                    StoreMeta::shard_data_path(to, i),
+                ));
+            }
+        }
+    }
+    if meta.summary_chunk.is_some() {
+        v.push((StoreMeta::summaries_path(from), StoreMeta::summaries_path(to)));
+    }
+    v
+}
+
+/// Cluster a freshly written stage-1 store: `store recode --cluster k`
+/// into a sibling `<base>_ctmp`, then rename the clustered files over
+/// the originals (the renames land on the same layout — a plain recode
+/// preserves shard counts and the summary grid).  The suffix is
+/// deliberately dot-free: the path helpers use `with_extension`, so a
+/// `.ctmp` base would resolve to the *source* file names.
+fn cluster_store(base: &Path, k: usize) -> anyhow::Result<()> {
+    let name = base
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("store base {} has no file name", base.display()))?;
+    let tmp = base.with_file_name(format!("{}_ctmp", name.to_string_lossy()));
+    let rep =
+        recode_store(base, &tmp, &RecodeOptions { cluster: Some(k), ..Default::default() })?;
+    let meta = StoreMeta::load(&tmp)?;
+    for (from, to) in store_file_moves(&meta, &tmp, base) {
+        std::fs::rename(&from, &to)?;
+    }
+    log::info!(
+        "stage1: clustered {} into k={k} groups (v{}, {:.2}s)",
+        base.display(),
+        rep.version,
+        rep.wall.as_secs_f64()
+    );
+    Ok(())
 }
 
 pub struct Pipeline {
@@ -197,9 +247,10 @@ impl Pipeline {
     /// Does an existing store at `base` already have the layout the
     /// current config asks for?  A missing or unreadable manifest, a
     /// v1/v2 (or shard-count) mismatch, a summary-sidecar grid that
-    /// disagrees with `--summary-chunk`, or a record codec that
-    /// disagrees with `--codec` means stage 1 must rewrite it —
-    /// otherwise those flags would be silently ignored by the cache.
+    /// disagrees with `--summary-chunk`, a record codec that disagrees
+    /// with `--codec`, or v5 cluster metadata that disagrees with
+    /// `--cluster` means stage 1 must rewrite it — otherwise those
+    /// flags would be silently ignored by the cache.
     fn store_layout_current(&self, base: &PathBuf) -> bool {
         let Ok(meta) = StoreMeta::load(base) else { return false };
         let shards_current = match &meta.shards {
@@ -214,17 +265,23 @@ impl Pipeline {
             (self.cfg.summary_chunk > 0).then_some(self.cfg.summary_chunk);
         let summaries_current = meta.summary_chunk == want_summaries;
         let codec_current = meta.codec == self.cfg.codec;
-        if !shards_current || !summaries_current || !codec_current {
+        let cluster_current = match ClusterMeta::load(base) {
+            Ok(Some(cm)) => cm.k == self.cfg.cluster,
+            Ok(None) => self.cfg.cluster == 0,
+            Err(_) => false,
+        };
+        if !shards_current || !summaries_current || !codec_current || !cluster_current {
             log::info!(
                 "stage1: store {} does not match --shards {} / --summary-chunk {} / \
-                 --codec {}; rebuilding",
+                 --codec {} / --cluster {}; rebuilding",
                 base.display(),
                 self.cfg.shards,
                 self.cfg.summary_chunk,
-                self.cfg.codec.as_str()
+                self.cfg.codec.as_str(),
+                self.cfg.cluster
             );
         }
-        shards_current && summaries_current && codec_current
+        shards_current && summaries_current && codec_current && cluster_current
     }
 
     /// Stage 1: extract per-example gradients for the whole training set
@@ -309,9 +366,15 @@ impl Pipeline {
             }
             if let Some(w) = fac_writer {
                 w.finalize()?;
+                if self.cfg.cluster > 0 {
+                    cluster_store(&fac_base, self.cfg.cluster)?;
+                }
             }
             if let Some(w) = dense_writer {
                 w.finalize()?;
+                if self.cfg.cluster > 0 {
+                    cluster_store(&dense_base, self.cfg.cluster)?;
+                }
             }
         }
 

@@ -22,13 +22,14 @@
 //! Common flags: --tier small|medium|large --f N --c N --r N
 //!   --n-train N --n-query N --seed S --work-dir D --artifacts-dir D
 //!   --shards S --score-threads T --sink full|topk
-//!   --prune on|off|slack=x --prefetch-depth N --summary-chunk N
-//!   --chunk-cache-mb N --codec bf16|int8|int4 --quant-score on|off|auto
+//!   --prune on|off|slack=x|recall=x --prefetch-depth N --summary-chunk N
+//!   --cluster K --chunk-cache-mb N --codec bf16|int8|int4
+//!   --quant-score on|off|auto
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 //! Serve flags: --addr A --max-batch N --window-ms N --topk K
 //!   --score-workers N --queue-cap N
 //! Store recode flags: --out BASE --codec bf16|int8|int4 [--shards S]
-//!   [--summary-chunk G] [--chunk-size N]
+//!   [--summary-chunk G] [--chunk-size N] [--cluster K]
 
 use lorif::cli::Args;
 use lorif::config::Config;
@@ -118,7 +119,7 @@ fn run() -> anyhow::Result<()> {
 }
 
 /// `lorif store <inspect|recode>` — pure-CPU store maintenance that
-/// works on any v1–v4 store without the xla feature or artifacts.
+/// works on any v1–v5 store without the xla feature or artifacts.
 fn store_cmd(args: &Args) -> anyhow::Result<()> {
     use lorif::store::{inspect_store, recode_store, CodecId, RecodeOptions};
     let verb = args.positional.first().map(String::as_str).unwrap_or("");
@@ -145,6 +146,7 @@ fn store_cmd(args: &Args) -> anyhow::Result<()> {
                 codec: args.get("codec").map(CodecId::parse).transpose()?,
                 shards: args.get_usize("shards")?,
                 summary_chunk: args.get_usize("summary-chunk")?,
+                cluster: args.get_usize("cluster")?,
                 ..Default::default()
             };
             if let Some(cs) = args.get_usize("chunk-size")? {
@@ -165,13 +167,15 @@ fn store_cmd(args: &Args) -> anyhow::Result<()> {
                 rep.wall.as_secs_f64()
             );
             println!(
-                "on disk: {:.3} MB -> {:.3} MB ({:.2}x smaller) | shards {} | summary grid {}",
+                "on disk: {:.3} MB -> {:.3} MB ({:.2}x smaller) | shards {} | summary grid {} \
+                 | cluster {}",
                 rep.src_bytes as f64 / 1e6,
                 rep.dst_bytes as f64 / 1e6,
                 rep.shrink(),
                 rep.shards.as_ref().map_or(1, Vec::len),
                 rep.summary_chunk
-                    .map_or("off".to_string(), |g| g.to_string())
+                    .map_or("off".to_string(), |g| g.to_string()),
+                rep.cluster.map_or("off".to_string(), |k| format!("k={k}"))
             );
             print!("{}", inspect_store(std::path::Path::new(out))?);
             Ok(())
@@ -192,7 +196,7 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
     println!("f={} c={} r={} | D = {}", cfg.f, cfg.c, cfg.r, spec.total_proj_dim(cfg.f));
     println!(
         "store layout: {} shard(s), codec {} (quant-score {}), score threads {}, sink {}, \
-         prune {} (summary grid {}), prefetch depth {}, chunk cache {}",
+         prune {} (summary grid {}, cluster {}), prefetch depth {}, chunk cache {}",
         cfg.shards,
         cfg.codec.as_str(),
         cfg.quant_score.as_str(),
@@ -200,6 +204,7 @@ fn info(cfg: &Config) -> anyhow::Result<()> {
         cfg.score_sink.name(),
         cfg.prune.label(),
         if cfg.summary_chunk == 0 { "off".to_string() } else { cfg.summary_chunk.to_string() },
+        if cfg.cluster == 0 { "off".to_string() } else { format!("k={}", cfg.cluster) },
         cfg.prefetch_depth,
         if cfg.chunk_cache_mb == 0 {
             "off".to_string()
@@ -513,12 +518,12 @@ fn print_help() {
                       eval-lds eval-tailpatch judge\n\
          store tools: store inspect <base>\n\
                       store recode <base> --out <base> --codec bf16|int8|int4\n\
-                                   [--shards S] [--summary-chunk G]\n\
+                                   [--shards S] [--summary-chunk G] [--cluster K]\n\
          common flags: --tier small|medium|large --f N --c N --r N\n\
                        --n-train N --n-query N --seed S --method NAME\n\
                        --shards S --score-threads T --sink full|topk\n\
-                       --prune on|off|slack=x --prefetch-depth N\n\
-                       --summary-chunk N --chunk-cache-mb N\n\
+                       --prune on|off|slack=x|recall=x --prefetch-depth N\n\
+                       --summary-chunk N --cluster K --chunk-cache-mb N\n\
                        --codec bf16|int8|int4 --quant-score on|off|auto\n\
                        --work-dir DIR --artifacts-dir DIR\n\
          serve flags:  --addr A --max-batch N --window-ms N --topk K\n\

@@ -13,12 +13,80 @@
 //! descending sort of the full score row under `f32::total_cmp` (see
 //! `tests/prop.rs`), including on NaN scores.
 
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::time::Duration;
 
 use crate::linalg::Mat;
 use crate::store::{ShardSet, StoreReader};
 use crate::util::pool;
 use crate::util::timer::PhaseTimer;
+
+/// Cross-shard streaming top-k threshold: one atomic cell per query
+/// holding the best (highest) k-th-best score ANY shard worker has
+/// published so far.  Without it each shard prunes against only its own
+/// heap, so pruning is weakest exactly when sharding is widest; with
+/// it, the first heap to fill tightens every other shard's skip test.
+///
+/// Soundness for the MERGED output: the merged top-k of the union
+/// contains k entries each scoring at least any single shard's current
+/// k-th best `t` (that shard alone already holds k such entries, and
+/// its threshold only rises as the scan proceeds).  An example pruned
+/// under the executor's STRICT test (`bound < t`) therefore scores
+/// strictly below k merged entries and cannot appear in the merged
+/// top-k under any tie-break — even if the pruning shard's own heap
+/// never fills.
+///
+/// Scores are stored as monotonically encoded bits (the sign-flip
+/// transform of IEEE-754 totalOrder, matching `f32::total_cmp`), so
+/// `fetch_max` on the `u32` is `max` under the score order and the
+/// whole structure is a single lock-free word per query.  Workers only
+/// publish FINITE thresholds: a NaN threshold (all-NaN heap) encodes
+/// above +inf and would poison every other shard into never skipping
+/// below it — and non-finite chunks are unprunable anyway.
+pub struct SharedThreshold {
+    cells: Vec<AtomicU32>,
+}
+
+/// Monotone encoding: `a.total_cmp(&b) == key(a).cmp(&key(b))`.
+fn key(f: f32) -> u32 {
+    let b = f.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+fn unkey(k: u32) -> f32 {
+    if k & 0x8000_0000 != 0 {
+        f32::from_bits(k & 0x7fff_ffff)
+    } else {
+        f32::from_bits(!k)
+    }
+}
+
+impl SharedThreshold {
+    /// One empty cell per query.  Cell value 0 encodes the bottom of
+    /// the total order (negative NaN), which no finite publication can
+    /// produce — it doubles as the "nothing published yet" state.
+    pub fn new(nq: usize) -> SharedThreshold {
+        SharedThreshold { cells: (0..nq).map(|_| AtomicU32::new(0)).collect() }
+    }
+
+    /// Raise query `q`'s published threshold to `t` (no-op if a higher
+    /// one is already posted, or if `t` is not finite).
+    pub fn publish(&self, q: usize, t: f32) {
+        if t.is_finite() {
+            self.cells[q].fetch_max(key(t), Ordering::Relaxed);
+        }
+    }
+
+    /// The best threshold published for query `q` so far, if any.
+    pub fn get(&self, q: usize) -> Option<f32> {
+        let raw = self.cells[q].load(Ordering::Relaxed);
+        (raw != 0).then(|| unkey(raw))
+    }
+}
 
 /// Per-shard partial result of a scorer's streaming pass.
 pub struct ShardScores {
@@ -296,6 +364,44 @@ mod tests {
         // k larger than n clamps
         assert_eq!(topk(&m, 50, 3)[0].len(), 5);
         assert_eq!(topk(&m, 0, 3), vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn shared_threshold_encoding_is_monotone_and_roundtrips() {
+        let vals = [
+            f32::NEG_INFINITY,
+            -1.0e30,
+            -2.5,
+            -0.0,
+            0.0,
+            1.0e-30,
+            3.25,
+            1.0e30,
+            f32::INFINITY,
+        ];
+        for w in vals.windows(2) {
+            assert!(key(w[0]) <= key(w[1]), "{} vs {}", w[0], w[1]);
+        }
+        for &v in &vals {
+            assert_eq!(unkey(key(v)).total_cmp(&v), std::cmp::Ordering::Equal, "{v}");
+        }
+    }
+
+    #[test]
+    fn shared_threshold_keeps_the_max_and_ignores_non_finite() {
+        let st = SharedThreshold::new(2);
+        assert_eq!(st.get(0), None);
+        st.publish(0, -3.0);
+        assert_eq!(st.get(0), Some(-3.0));
+        st.publish(0, 1.5);
+        st.publish(0, 0.25); // lower: ignored
+        assert_eq!(st.get(0), Some(1.5));
+        // NaN/inf never poison the cell
+        st.publish(0, f32::NAN);
+        st.publish(0, f32::INFINITY);
+        assert_eq!(st.get(0), Some(1.5));
+        // per-query isolation
+        assert_eq!(st.get(1), None);
     }
 
     #[test]

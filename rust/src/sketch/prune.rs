@@ -24,17 +24,36 @@
 //! point, not just in real arithmetic.
 //!
 //! **Exactness argument** (`--prune on`): a chunk is skipped only when,
-//! for every query, the (slack-free) bound does not exceed the sink's
-//! current k-th best score.  Within a shard, records stream in
-//! ascending global index, so every heap entry has a lower index than
-//! anything in an unread chunk; under the repo's total order
-//! (descending score, ties toward the LOWER index) an equal-scoring
-//! later example loses the tie and cannot displace an entry.  Hence no
-//! skipped example could have entered the shard heap, shard heaps are
-//! bit-identical to a full scan's, and the cross-shard merge
+//! for every query, the (slack-free) bound is STRICTLY below the
+//! current top-k threshold `t` (the k-th best score seen so far — the
+//! shard's own heap, tightened by the cross-shard shared threshold,
+//! see `query::parallel::SharedThreshold`).  Every example in a skipped
+//! chunk then has score ≤ bound < t ≤ t_final, i.e. strictly below the
+//! final k-th best score, so it cannot belong to the top-k under ANY
+//! tie-breaking rule — which is what makes the argument hold for the
+//! best-first (bound-ordered) visit order of `attribution::exec`, where
+//! a skipped chunk may hold LOWER original indices than resident heap
+//! entries and an `≤` test would wrongly discard an equal-scoring
+//! lower-index example that wins the repo's tie-break (descending
+//! score, ties toward the LOWER index).  Heaps push ORIGINAL (caller
+//! coordinate) indices even on permuted v5 stores, so the (score,
+//! index) total order — and with it the top-k — is independent of the
+//! storage order and of the visit order.  Hence the pruned result is
+//! bit-identical to an unclustered full scan, and the cross-shard merge
 //! (`query::parallel::merge_topk`) is unchanged.  NaN scores rank above
 //! +inf under `total_cmp`; chunks containing any non-finite record are
 //! marked non-finite by the summarizer and are never skipped.
+//!
+//! **Recall mode** (`--prune recall=x`): chunk skipping stays exact
+//! (strict bound test as above), but a shard may additionally STOP
+//! early once, for every query, at least `ceil(x·k)` of its heap
+//! entries provably cannot be displaced by any unvisited chunk (their
+//! scores strictly exceed the best remaining bound).  The stop rule
+//! only ever leaves unvisited chunks whose bounds trail the certified
+//! entries, which on a clustered (v5) store is the long tail of
+//! far-away clusters — the measured overlap@k at `recall=0.99` stays
+//! ≥ 0.99 while reading a small fraction of the bytes
+//! (`benches/perf_microbench.rs` persists the curve).
 //!
 //! **Interaction with the decoded-chunk cache** (`store::cache`): the
 //! executor evaluates the skip test BEFORE any cache lookup, so a
@@ -49,7 +68,7 @@ use crate::linalg::Mat;
 
 use super::summary::{ChunkSummary, StoreSummaries};
 
-/// Config/CLI-level pruning mode (`--prune on|off|slack=x`).
+/// Config/CLI-level pruning mode (`--prune on|off|slack=x|recall=x`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PruneMode {
     /// Never skip (every chunk is read, as before this subsystem).
@@ -60,6 +79,10 @@ pub enum PruneMode {
     /// Approximate: deflate the bound by `slack * |bound|` before the
     /// threshold comparison, trading recall for fewer reads (0 < x < 1).
     Slack(f32),
+    /// Approximate: exact bound test, but each shard stops early once
+    /// `ceil(x·k)` of its top-k entries are provably final (0 < x ≤ 1).
+    /// The retrieval-tier knob — pairs with a clustered (v5) store.
+    Recall(f32),
 }
 
 impl PruneMode {
@@ -68,8 +91,18 @@ impl PruneMode {
             "off" => Ok(PruneMode::Off),
             "on" | "exact" => Ok(PruneMode::Exact),
             _ => {
+                if let Some(x) = s.strip_prefix("recall=") {
+                    let x: f32 = x
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--prune recall: {e}"))?;
+                    anyhow::ensure!(
+                        x > 0.0 && x <= 1.0,
+                        "prune recall target must be in (0, 1], got {x}"
+                    );
+                    return Ok(PruneMode::Recall(x));
+                }
                 let Some(x) = s.strip_prefix("slack=") else {
-                    anyhow::bail!("unknown prune mode '{s}' (on|off|slack=x)");
+                    anyhow::bail!("unknown prune mode '{s}' (on|off|slack=x|recall=x)");
                 };
                 let x: f32 = x
                     .parse()
@@ -89,16 +122,30 @@ impl PruneMode {
             PruneMode::Off => "off".to_string(),
             PruneMode::Exact => "on".to_string(),
             PruneMode::Slack(x) => format!("slack={x}"),
+            PruneMode::Recall(x) => format!("recall={x}"),
         }
     }
 
     /// `None` when pruning is disabled, otherwise the slack factor
-    /// (0 for exact mode).
+    /// (0 for exact and recall modes, whose bound tests stay exact).
     pub fn slack(&self) -> Option<f32> {
         match self {
             PruneMode::Off => None,
             PruneMode::Exact => Some(0.0),
             PruneMode::Slack(x) => Some(*x),
+            PruneMode::Recall(_) => Some(0.0),
+        }
+    }
+
+    /// The per-shard early-stop recall target, when this mode has one.
+    /// `Recall(1.0)` still reports a target: the stop rule at x = 1
+    /// fires only when EVERY entry is certified final, which can still
+    /// beat the plain exact scan on a clustered store (certification
+    /// uses strict dominance, not bound exhaustion).
+    pub fn recall(&self) -> Option<f32> {
+        match self {
+            PruneMode::Recall(x) => Some(*x),
+            _ => None,
         }
     }
 }
@@ -216,14 +263,28 @@ mod tests {
         assert_eq!(PruneMode::parse("on").unwrap(), PruneMode::Exact);
         assert_eq!(PruneMode::parse("slack=0.25").unwrap(), PruneMode::Slack(0.25));
         assert_eq!(PruneMode::parse("slack=0").unwrap(), PruneMode::Exact);
+        assert_eq!(PruneMode::parse("recall=0.99").unwrap(), PruneMode::Recall(0.99));
+        assert_eq!(PruneMode::parse("recall=1").unwrap(), PruneMode::Recall(1.0));
         assert!(PruneMode::parse("slack=1.5").is_err());
         assert!(PruneMode::parse("slack=-0.1").is_err());
+        assert!(PruneMode::parse("recall=0").is_err());
+        assert!(PruneMode::parse("recall=1.01").is_err());
         assert!(PruneMode::parse("maybe").is_err());
-        for m in [PruneMode::Off, PruneMode::Exact, PruneMode::Slack(0.5)] {
+        for m in [
+            PruneMode::Off,
+            PruneMode::Exact,
+            PruneMode::Slack(0.5),
+            PruneMode::Recall(0.99),
+        ] {
             assert_eq!(PruneMode::parse(&m.label()).unwrap(), m);
         }
         assert_eq!(PruneMode::Off.slack(), None);
         assert_eq!(PruneMode::Exact.slack(), Some(0.0));
+        // recall mode's bound test stays exact; the approximation lives
+        // in the early-stop rule, reported separately
+        assert_eq!(PruneMode::Recall(0.99).slack(), Some(0.0));
+        assert_eq!(PruneMode::Recall(0.99).recall(), Some(0.99));
+        assert_eq!(PruneMode::Exact.recall(), None);
     }
 
     #[test]

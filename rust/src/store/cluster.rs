@@ -1,0 +1,211 @@
+//! Cluster metadata for reordered (v5) stores.
+//!
+//! `lorif store recode --cluster k` rewrites a store so each summary
+//! chunk holds one tight k-means cluster instead of an arrival-order
+//! mixture, which is what makes the centroid/radius bounds in
+//! `crate::sketch` bite early (ROADMAP item 3: touch ~1% of the store
+//! per query).  The reordering is recorded here:
+//!
+//!   `perm[storage_pos] = original_index`
+//!
+//! i.e. the record at storage position `p` of the clustered store is
+//! the example the caller knows as `perm[p]`.  Every score/top-k index
+//! leaving the executor is mapped through `perm`, so callers never see
+//! storage coordinates.
+//!
+//! The permutation lives in the `<name>.json` manifest as a `"cluster"`
+//! object (`{"k": .., "perm": [..]}`) plus `"version": 5`.  `StoreMeta`
+//! itself does not carry it — the struct is rebuilt and re-saved by
+//! every writer, while the permutation is attached exactly once, after
+//! `finalize()`, by the recode pass (`ClusterMeta::attach`).  Readers
+//! pick it up via `ClusterMeta::load`, which validates the permutation
+//! is a bijection before anything trusts it.
+
+use std::path::Path;
+
+use super::format::StoreMeta;
+use crate::util::json::{obj, Value};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterMeta {
+    /// number of k-means clusters the recode pass targeted
+    pub k: usize,
+    /// `perm[storage_pos] = original_index` (bijection over 0..n)
+    pub perm: Vec<u32>,
+}
+
+impl ClusterMeta {
+    /// Original (caller-coordinate) index of the record at `storage`.
+    #[inline]
+    pub fn original(&self, storage: usize) -> usize {
+        self.perm[storage] as usize
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// The permutation must be a bijection over exactly `n` examples
+    /// and k must be a usable cluster count.
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.perm.len() == n,
+            "cluster permutation has {} entries, store has {n} examples",
+            self.perm.len()
+        );
+        anyhow::ensure!(
+            self.k >= 1 && self.k <= n.max(1),
+            "cluster count k={} out of range for {n} examples",
+            self.k
+        );
+        let mut seen = vec![false; n];
+        for &p in &self.perm {
+            let p = p as usize;
+            anyhow::ensure!(p < n, "cluster permutation entry {p} out of range (n={n})");
+            anyhow::ensure!(!seen[p], "cluster permutation repeats index {p}");
+            seen[p] = true;
+        }
+        Ok(())
+    }
+
+    /// Inverse mapping: `inv[original_index] = storage_pos`.
+    pub fn inverse(&self) -> Vec<u32> {
+        let mut inv = vec![0u32; self.perm.len()];
+        for (storage, &orig) in self.perm.iter().enumerate() {
+            inv[orig as usize] = storage as u32;
+        }
+        inv
+    }
+
+    fn to_json(&self) -> Value {
+        obj([
+            ("k", self.k.into()),
+            (
+                "perm",
+                Value::Arr(self.perm.iter().map(|&p| (p as usize).into()).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Value) -> anyhow::Result<ClusterMeta> {
+        let k = v.req_usize("k")?;
+        let perm = v
+            .req("perm")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("cluster 'perm' not an array"))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .and_then(|p| u32::try_from(p).ok())
+                    .ok_or_else(|| anyhow::anyhow!("bad cluster permutation entry"))
+            })
+            .collect::<anyhow::Result<Vec<u32>>>()?;
+        Ok(ClusterMeta { k, perm })
+    }
+
+    /// Read cluster metadata (if any) from the store manifest and
+    /// validate it against the declared example count.  `Ok(None)` for
+    /// unclustered (v1–v4) stores.
+    pub fn load(base: &Path) -> anyhow::Result<Option<ClusterMeta>> {
+        let text = std::fs::read_to_string(StoreMeta::meta_path(base))?;
+        let doc = Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let Some(cv) = doc.get("cluster") else {
+            return Ok(None);
+        };
+        let cm = ClusterMeta::from_json(cv)
+            .map_err(|e| anyhow::anyhow!("bad cluster metadata in manifest: {e}"))?;
+        cm.validate(doc.req_usize("n_examples")?)?;
+        Ok(Some(cm))
+    }
+
+    /// Patch the manifest at `base` with this cluster metadata and bump
+    /// it to version 5.  Must run AFTER the writer's `finalize()` —
+    /// `StoreMeta::save` knows nothing about clustering and would drop
+    /// these keys.
+    pub fn attach(&self, base: &Path) -> anyhow::Result<()> {
+        let path = StoreMeta::meta_path(base);
+        let text = std::fs::read_to_string(&path)?;
+        let doc = Value::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.validate(doc.req_usize("n_examples")?)?;
+        let Value::Obj(mut fields) = doc else {
+            anyhow::bail!("store manifest is not a json object");
+        };
+        fields.insert("version".into(), 5usize.into());
+        fields.insert("cluster".into(), self.to_json());
+        std::fs::write(&path, Value::Obj(fields).to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{CodecId, StoreKind};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lorif_cluster_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn meta(n: usize) -> StoreMeta {
+        StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(4, 4)],
+            n_examples: n,
+            shards: None,
+            summary_chunk: Some(2),
+            codec: CodecId::Bf16,
+        }
+    }
+
+    #[test]
+    fn attach_then_load_roundtrips_and_bumps_version() {
+        let base = tmp("roundtrip");
+        meta(4).save(&base).unwrap();
+        assert!(ClusterMeta::load(&base).unwrap().is_none());
+        let cm = ClusterMeta { k: 2, perm: vec![2, 3, 0, 1] };
+        cm.attach(&base).unwrap();
+        let text = std::fs::read_to_string(StoreMeta::meta_path(&base)).unwrap();
+        let doc = Value::parse(&text).unwrap();
+        assert_eq!(doc.req_usize("version").unwrap(), 5);
+        // StoreMeta itself still loads (unknown keys ignored, v5 accepted)
+        let m = StoreMeta::load(&base).unwrap();
+        assert_eq!(m.n_examples, 4);
+        assert_eq!(ClusterMeta::load(&base).unwrap(), Some(cm));
+    }
+
+    #[test]
+    fn rejects_non_bijective_permutations() {
+        let base = tmp("bad_perm");
+        meta(3).save(&base).unwrap();
+        for perm in [vec![0u32, 1], vec![0, 1, 1], vec![0, 1, 9]] {
+            let cm = ClusterMeta { k: 2, perm };
+            assert!(cm.attach(&base).is_err(), "accepted a broken permutation");
+        }
+        // a valid one still attaches after the failures above
+        ClusterMeta { k: 3, perm: vec![1, 2, 0] }.attach(&base).unwrap();
+        assert!(ClusterMeta::load(&base).unwrap().is_some());
+    }
+
+    #[test]
+    fn inverse_roundtrips_indices() {
+        let cm = ClusterMeta { k: 2, perm: vec![3, 1, 4, 0, 2] };
+        cm.validate(5).unwrap();
+        let inv = cm.inverse();
+        for orig in 0..5 {
+            assert_eq!(cm.original(inv[orig] as usize), orig);
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_k() {
+        let cm = ClusterMeta { k: 0, perm: vec![0, 1] };
+        assert!(cm.validate(2).is_err());
+        let cm = ClusterMeta { k: 3, perm: vec![0, 1] };
+        assert!(cm.validate(2).is_err());
+    }
+}

@@ -204,10 +204,21 @@ impl StoreMeta {
         let version = v.get("version").and_then(Value::as_usize);
         if let Some(version) = version {
             anyhow::ensure!(
-                version <= 4,
-                "unsupported store version {version} (this build reads v1-v4)"
+                version <= 5,
+                "unsupported store version {version} (this build reads v1-v5)"
             );
         }
+        // v5 = clustered reordering: the manifest must carry the
+        // permutation (`super::cluster`), and conversely a cluster key
+        // on a pre-v5 manifest is corruption, not data.  StoreMeta does
+        // not hold the permutation itself — `ClusterMeta::load` does —
+        // but the version gate lives here so a truncated manifest fails
+        // at open, not mid-query.
+        anyhow::ensure!(
+            (version.unwrap_or(1) == 5) == v.get("cluster").is_some(),
+            "manifest version {} inconsistent with cluster metadata (clustered stores are version 5)",
+            version.unwrap_or(1)
+        );
         let codec = match v.get("codec") {
             None => CodecId::Bf16,
             Some(val) => {
@@ -424,10 +435,42 @@ mod tests {
         let m = meta(StoreKind::Dense);
         let mut doc = m.to_json();
         if let Value::Obj(fields) = &mut doc {
-            fields.insert("version".into(), 5usize.into());
+            fields.insert("version".into(), 6usize.into());
         }
         let err = StoreMeta::from_json(&doc).unwrap_err();
         assert!(format!("{err}").contains("unsupported store version"), "{err}");
+    }
+
+    #[test]
+    fn version_5_requires_cluster_metadata_and_vice_versa() {
+        let m = meta(StoreKind::Dense);
+        // a v5 manifest with no cluster object is truncated/corrupt
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("version".into(), 5usize.into());
+        }
+        let err = StoreMeta::from_json(&doc).unwrap_err();
+        assert!(format!("{err}").contains("cluster"), "{err}");
+        // a cluster object on a pre-v5 manifest is corruption too
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert(
+                "cluster".into(),
+                crate::util::json::obj([("k", 2usize.into()), ("perm", Value::Arr(vec![]))]),
+            );
+        }
+        assert!(StoreMeta::from_json(&doc).is_err());
+        // the consistent pair parses (StoreMeta ignores the payload;
+        // `super::cluster` validates it)
+        let mut doc = m.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields.insert("version".into(), 5usize.into());
+            fields.insert(
+                "cluster".into(),
+                crate::util::json::obj([("k", 2usize.into()), ("perm", Value::Arr(vec![]))]),
+            );
+        }
+        assert_eq!(StoreMeta::from_json(&doc).unwrap().n_examples, 100);
     }
 
     #[test]

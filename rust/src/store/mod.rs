@@ -6,14 +6,19 @@
 //! Stores come in four on-disk layouts: v1 (one `.grads` file), v2
 //! (contiguous `.shard{i}.grads` files + a shard manifest), v3 (either
 //! of the above plus a `.summaries` pruning sidecar, see
-//! `crate::sketch`), and v4 (any of the above with records encoded
-//! through a non-default codec, see [`codec`]).  `ShardSet` opens all
-//! of them; the v2 layout feeds the parallel scoring path in
-//! `query::parallel`, the v3 sidecar lets top-k queries skip chunk
-//! reads entirely, and the v4 codecs shrink the bytes every remaining
-//! read costs.  [`recode`] converts any existing store between codecs,
-//! shard layouts, and manifest versions in one bounded-memory streaming
-//! pass (`lorif store recode`) and powers `lorif store inspect`.
+//! `crate::sketch`), v4 (any of the above with records encoded
+//! through a non-default codec, see [`codec`]), and v5 (records
+//! reordered by a streaming k-means pass so each summary chunk is one
+//! tight cluster; the original→clustered permutation lives in the
+//! manifest, see [`cluster`]).  `ShardSet` opens all of them; the v2
+//! layout feeds the parallel scoring path in `query::parallel`, the v3
+//! sidecar lets top-k queries skip chunk reads entirely, the v4 codecs
+//! shrink the bytes every remaining read costs, and the v5 reordering
+//! turns the sidecar into a retrieval tier (best-first chunk visits in
+//! `attribution::exec`).  [`recode`] converts any existing store
+//! between codecs, shard layouts, clusterings, and manifest versions in
+//! one bounded-memory streaming pass (`lorif store recode`) and powers
+//! `lorif store inspect`.
 //!
 //! On top of the readers sits the chunk cache (`cache`): a
 //! byte-budgeted, shard-aware CLOCK cache of chunks that the serving
@@ -29,6 +34,7 @@
 //! cached ≡ cold scoring is preserved per codec and per scoring mode.
 
 pub mod cache;
+pub mod cluster;
 pub mod codec;
 pub mod format;
 pub mod reader;
@@ -36,6 +42,7 @@ pub mod recode;
 pub mod writer;
 
 pub use cache::{CacheStats, ChunkCache};
+pub use cluster::ClusterMeta;
 pub use codec::{
     Bf16Codec, Codec, CodecId, Int4Codec, Int8Codec, QuantPlan, QuantScore, QuantScratch,
     INT4_GROUP,

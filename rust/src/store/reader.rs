@@ -25,6 +25,7 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use super::cache::ChunkCache;
+use super::cluster::ClusterMeta;
 use super::codec::Codec;
 use super::format::{StoreKind, StoreMeta};
 use crate::linalg::Mat;
@@ -478,6 +479,37 @@ impl ChunkCursor<'_> {
         Ok(())
     }
 
+    /// Reposition the cursor at the GLOBAL example index `start`, which
+    /// must lie inside this file.  The next `peek`/`read` then covers
+    /// the chunk beginning there.  This is the seeking primitive behind
+    /// the best-first (IVF-style) scan: the executor visits chunks in
+    /// bound order, not file order, so the cursor must jump both
+    /// forwards and backwards.
+    pub fn goto(&mut self, start: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            start >= self.reader.start && start <= self.reader.start + self.reader.count,
+            "cursor goto target {start} outside file range [{}, {})",
+            self.reader.start,
+            self.reader.start + self.reader.count
+        );
+        let stride = self.reader.meta.bytes_per_example();
+        self.file.seek(SeekFrom::Start(((start - self.reader.start) * stride) as u64))?;
+        self.pos = start - self.reader.start;
+        Ok(())
+    }
+
+    /// Account a chunk of `count` examples as skipped WITHOUT moving
+    /// the file position.  The best-first scan never sits before a
+    /// chunk it rejects (it seeks straight to the next best one, or
+    /// stops early), so the relative-seeking `skip` does not apply —
+    /// but the pruning ledger `bytes_read + bytes_skipped == full-scan
+    /// bytes` must still balance, skipped-not-visited chunks included.
+    pub fn account_skip(&mut self, count: usize) {
+        let stride = self.reader.meta.bytes_per_example();
+        self.stats.bytes_skipped += (count * stride) as u64;
+        self.stats.chunks_skipped += 1;
+    }
+
     /// Wall time spent reading + decoding so far.
     pub fn io_time(&self) -> Duration {
         self.io
@@ -504,6 +536,10 @@ pub struct ShardSet {
     spans: Vec<ShardSpan>,
     /// v3 pruning sidecar; `None` on v1/v2 stores (full scans only)
     summaries: Option<StoreSummaries>,
+    /// v5 cluster reordering (`super::cluster`); `None` on unclustered
+    /// stores.  When present, record order is storage order and scores
+    /// must be mapped back through `perm` before callers see them.
+    cluster: Option<ClusterMeta>,
     /// prefetch queue depth handed to every per-shard reader
     pub prefetch_depth: usize,
     /// decoded-chunk cache handed to every per-shard reader; shared
@@ -562,10 +598,14 @@ impl ShardSet {
                 Some(sums)
             }
         };
+        // v5 cluster reordering: validated (bijection over n_examples)
+        // at open, so everything downstream can index through it freely
+        let cluster = ClusterMeta::load(base)?;
         Ok(ShardSet {
             meta,
             spans,
             summaries,
+            cluster,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             cache: None,
         })
@@ -582,6 +622,11 @@ impl ShardSet {
     /// The v3 pruning sidecar, when this store carries one.
     pub fn summaries(&self) -> Option<&StoreSummaries> {
         self.summaries.as_ref()
+    }
+
+    /// The v5 cluster reordering, when this store carries one.
+    pub fn cluster(&self) -> Option<&ClusterMeta> {
+        self.cluster.as_ref()
     }
 
     /// Attach (or detach) a decoded-chunk cache; every reader handed out
@@ -902,6 +947,39 @@ mod tests {
         // a skipped-over read still lands on the right records
         let want = r.read_range(6, 6).unwrap();
         assert_eq!(read_chunks[0].layers[0].dense().data, want.layers[0].dense().data);
+    }
+
+    #[test]
+    fn cursor_goto_reads_chunks_out_of_order() {
+        let (base, _) = write_store(StoreKind::Dense, 20, 1);
+        let r = StoreReader::open(&base.path).unwrap();
+        let stride = r.meta.bytes_per_example() as u64;
+        let mut cur = r.chunks(6).unwrap();
+        // visit chunk [12, 18) first, then jump BACK to [0, 6)
+        cur.goto(12).unwrap();
+        let c = cur.read().unwrap();
+        assert_eq!((c.start, c.count), (12, 6));
+        cur.goto(0).unwrap();
+        let c0 = cur.read().unwrap();
+        assert_eq!((c0.start, c0.count), (0, 6));
+        let want = r.read_range(0, 6).unwrap();
+        assert_eq!(c0.layers[0].dense().data, want.layers[0].dense().data);
+        // the unvisited chunks [6, 12) and [18, 20) balance the ledger
+        // via accounting-only skips (no seek happens for them)
+        cur.account_skip(6);
+        cur.account_skip(2);
+        assert_eq!(cur.stats().chunks_read, 2);
+        assert_eq!(cur.stats().chunks_skipped, 2);
+        assert_eq!(cur.stats().bytes_read, 12 * stride);
+        assert_eq!(cur.stats().bytes_skipped, 8 * stride);
+        assert_eq!(
+            cur.stats().bytes_read + cur.stats().bytes_skipped,
+            r.meta.total_bytes()
+        );
+        // out-of-range targets are rejected, in-range end is allowed
+        assert!(cur.goto(21).is_err());
+        assert!(cur.goto(20).is_ok());
+        assert!(cur.peek().is_none());
     }
 
     #[test]

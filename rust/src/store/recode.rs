@@ -12,16 +12,30 @@
 //! regenerated summaries are exact for the NEW bytes (plus the codec
 //! guard, `sketch::summary`).
 //!
+//! `--cluster k` adds a REORDERING migration on top: a bounded-memory
+//! streaming k-means pass (a few Lloyd iterations, each one full stream
+//! of the source) assigns every example to one of `k` clusters, the
+//! records are rewritten grouped by cluster (so each summary chunk is
+//! one tight cluster and the centroid/radius bounds in `crate::sketch`
+//! bite early), and the original→clustered permutation is attached to
+//! the manifest as v5 cluster metadata ([`super::cluster`]).  A plain
+//! recode of an already-clustered source preserves record order and
+//! re-attaches the source's permutation, so the v5 contract survives
+//! codec and shard migrations.
+//!
 //! Peak memory is one decoded chunk (`chunk_size` records of f32) plus
-//! the writer's single-record scratch, independent of the store size.
+//! the writer's single-record scratch, independent of the store size —
+//! clustering adds the k centroids/accumulators and the n-length
+//! assignment it exists to produce.
 
 use std::fmt;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use super::cluster::ClusterMeta;
 use super::codec::{Codec, CodecId};
 use super::format::{StoreKind, StoreMeta};
-use super::reader::ShardSet;
+use super::reader::{ChunkLayer, ShardSet};
 use super::writer::{ShardedWriter, StoreWriter};
 use crate::sketch::DEFAULT_SUMMARY_CHUNK;
 
@@ -39,6 +53,11 @@ pub struct RecodeOptions {
     pub summary_chunk: Option<usize>,
     /// Records decoded per streaming step (bounds peak memory).
     pub chunk_size: usize,
+    /// Reorder records by a streaming k-means pass into this many
+    /// clusters (`--cluster k`), writing a v5 store whose manifest
+    /// carries the original→clustered permutation.  `None` leaves the
+    /// record order alone (and preserves an existing permutation).
+    pub cluster: Option<usize>,
 }
 
 impl Default for RecodeOptions {
@@ -48,6 +67,7 @@ impl Default for RecodeOptions {
             shards: None,
             summary_chunk: None,
             chunk_size: DEFAULT_SUMMARY_CHUNK,
+            cluster: None,
         }
     }
 }
@@ -105,6 +125,9 @@ pub struct RecodeReport {
     pub dst_bytes: u64,
     pub shards: Option<Vec<usize>>,
     pub summary_chunk: Option<usize>,
+    /// cluster count when the target carries v5 cluster metadata
+    /// (freshly clustered, or carried through from a clustered source)
+    pub cluster: Option<usize>,
     pub version: usize,
     pub wall: Duration,
 }
@@ -114,6 +137,107 @@ impl RecodeReport {
     pub fn shrink(&self) -> f64 {
         self.src_bytes as f64 / self.dst_bytes.max(1) as f64
     }
+}
+
+/// Lloyd iterations the clustering pass runs; each is one full stream
+/// of the source store.  Fixed (not convergence-tested) so the pass
+/// cost is predictable and the permutation deterministic.
+const KMEANS_PASSES: usize = 4;
+
+/// Feature row for k-means: the example's decoded record with all
+/// layers concatenated (dense rows, or U then V for factored stores) —
+/// the same vectors the summary sidecar summarizes, so tight k-means
+/// clusters become tight centroid/radius bounds.
+fn record_features(chunk: &super::reader::Chunk, ex: usize, out: &mut Vec<f32>) {
+    out.clear();
+    for layer in &chunk.layers {
+        match layer {
+            ChunkLayer::Dense { g } => out.extend_from_slice(g.row(ex)),
+            ChunkLayer::Factored { u, v } => {
+                out.extend_from_slice(u.row(ex));
+                out.extend_from_slice(v.row(ex));
+            }
+        }
+    }
+}
+
+/// Bounded-memory streaming k-means over the source store.  Memory is
+/// the k centroids and accumulators plus the n-length assignment this
+/// function exists to produce — never the store.  Deterministic:
+/// centroids start at k evenly spaced records and every pass streams in
+/// storage order, so one source always yields one permutation.
+fn cluster_permutation(
+    set: &ShardSet,
+    k: usize,
+    chunk_size: usize,
+) -> anyhow::Result<ClusterMeta> {
+    let n = set.meta.n_examples;
+    anyhow::ensure!(k >= 1, "--cluster needs k >= 1 (omit the flag to keep arrival order)");
+    anyhow::ensure!(k <= n, "--cluster k={k} exceeds the store's {n} examples");
+    let dim = set.meta.decoded_bytes_per_example() / 4;
+    let mut feat = Vec::with_capacity(dim);
+    let mut centroids = vec![0.0f32; k * dim];
+    for j in 0..k {
+        let chunk = set.read_range(j * n / k, 1)?;
+        record_features(&chunk, 0, &mut feat);
+        centroids[j * dim..(j + 1) * dim].copy_from_slice(&feat);
+    }
+    let mut assign = vec![0u32; n];
+    for _pass in 0..KMEANS_PASSES {
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0u64; k];
+        set.stream(chunk_size, false, |chunk| {
+            for ex in 0..chunk.count {
+                record_features(chunk, ex, &mut feat);
+                // non-finite records would poison every centroid they
+                // touch; park them in cluster 0 without accumulating
+                // (the summarizer marks their chunks never-skippable
+                // anyway, so their placement costs nothing)
+                if !feat.iter().all(|x| x.is_finite()) {
+                    assign[chunk.start + ex] = 0;
+                    continue;
+                }
+                let mut best = 0usize;
+                let mut best_d = f64::INFINITY;
+                for j in 0..k {
+                    let c = &centroids[j * dim..(j + 1) * dim];
+                    let mut d = 0.0f64;
+                    for (a, b) in feat.iter().zip(c) {
+                        let t = (*a - *b) as f64;
+                        d += t * t;
+                    }
+                    if d < best_d {
+                        best_d = d;
+                        best = j;
+                    }
+                }
+                assign[chunk.start + ex] = best as u32;
+                counts[best] += 1;
+                let s = &mut sums[best * dim..(best + 1) * dim];
+                for (acc, &x) in s.iter_mut().zip(feat.iter()) {
+                    *acc += x as f64;
+                }
+            }
+            Ok(())
+        })?;
+        for j in 0..k {
+            // empty clusters keep their previous centroid
+            if counts[j] > 0 {
+                let s = &sums[j * dim..(j + 1) * dim];
+                for (c, &acc) in centroids[j * dim..(j + 1) * dim].iter_mut().zip(s) {
+                    *c = (acc / counts[j] as f64) as f32;
+                }
+            }
+        }
+    }
+    // storage order: by (cluster, original index) — stable within a
+    // cluster, so ascending original runs survive and the permuted
+    // write below can batch its ranged reads
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    perm.sort_by_key(|&i| (assign[i as usize], i));
+    let cm = ClusterMeta { k, perm };
+    cm.validate(n)?;
+    Ok(cm)
 }
 
 /// One-pass migration; see the module docs.  `src` and `dst` are store
@@ -139,6 +263,28 @@ pub fn recode_store(
     let summary_chunk = opts
         .summary_chunk
         .unwrap_or_else(|| src_meta.summary_chunk.unwrap_or(0));
+
+    // clustering: compute the permutation up front (it streams the
+    // source a few times) so a rejected request never creates target
+    // files.  Re-clustering a clustered store is refused — permutations
+    // do not compose across recodes, and the caller's coordinates would
+    // silently shift.
+    let src_cluster = set.cluster().cloned();
+    let cluster = match opts.cluster {
+        None => None,
+        Some(k) => {
+            anyhow::ensure!(
+                src_cluster.is_none(),
+                "source store is already clustered; recode it without --cluster first"
+            );
+            anyhow::ensure!(
+                summary_chunk >= 1,
+                "--cluster requires a summary grid in the output (the sidecar is the \
+                 retrieval tier); drop --summary-chunk 0 or pick a grid"
+            );
+            Some(cluster_permutation(&set, k, opts.chunk_size)?)
+        }
+    };
 
     let mut meta = src_meta.clone();
     meta.codec = opts.codec.unwrap_or(src_meta.codec);
@@ -174,10 +320,36 @@ pub fn recode_store(
         }
     };
 
-    set.stream(opts.chunk_size, true, |chunk| match &mut w {
-        Target::Mono(w) => w.append_chunk(chunk),
-        Target::Sharded(w) => w.append_chunk(chunk),
-    })?;
+    match &cluster {
+        None => set.stream(opts.chunk_size, true, |chunk| match &mut w {
+            Target::Mono(w) => w.append_chunk(chunk),
+            Target::Sharded(w) => w.append_chunk(chunk),
+        })?,
+        Some(cm) => {
+            // permuted write: walk storage order, folding maximal runs
+            // of consecutive ORIGINAL indices into one ranged read
+            // (within a cluster originals stay ascending, so runs are
+            // the common case, not the lucky one)
+            let n = src_meta.n_examples;
+            let mut pos = 0usize;
+            while pos < n {
+                let orig = cm.perm[pos] as usize;
+                let mut len = 1usize;
+                while pos + len < n
+                    && len < opts.chunk_size
+                    && cm.perm[pos + len] as usize == orig + len
+                {
+                    len += 1;
+                }
+                let chunk = set.read_range(orig, len)?;
+                match &mut w {
+                    Target::Mono(w) => w.append_chunk(&chunk),
+                    Target::Sharded(w) => w.append_chunk(&chunk),
+                }?;
+                pos += len;
+            }
+        }
+    }
 
     let new_meta = match w {
         Target::Mono(w) => w.finalize()?,
@@ -189,6 +361,17 @@ pub fn recode_store(
         new_meta.n_examples,
         src_meta.n_examples
     );
+    // attach AFTER finalize: the writers re-save the manifest and know
+    // nothing about cluster keys.  A plain recode of a clustered source
+    // preserves record order, so the source permutation still holds and
+    // is carried through.
+    let attached = match (&cluster, &src_cluster) {
+        (Some(cm), _) | (None, Some(cm)) => {
+            cm.attach(dst)?;
+            Some(cm.k)
+        }
+        (None, None) => None,
+    };
     Ok(RecodeReport {
         n_examples: new_meta.n_examples,
         kind: new_meta.kind,
@@ -198,7 +381,8 @@ pub fn recode_store(
         dst_bytes: new_meta.total_bytes(),
         shards: new_meta.shards.clone(),
         summary_chunk: new_meta.summary_chunk,
-        version: new_meta.version(),
+        cluster: attached,
+        version: if attached.is_some() { 5 } else { new_meta.version() },
         wall: t0.elapsed(),
     })
 }
@@ -219,6 +403,11 @@ pub struct StoreInspection {
     /// `.summaries` sidecar: (grid, chunk count, examples covered,
     /// sidecar file bytes) when present
     pub summaries: Option<(usize, usize, usize, u64)>,
+    /// v5 clustering tier: `(k, permutation entries)` when present
+    pub cluster: Option<(usize, usize)>,
+    /// per-chunk centroid radii (layer radii summed) from the sidecar —
+    /// the cluster-tightness signal the report histograms
+    pub chunk_radii: Vec<f32>,
 }
 
 pub fn inspect_store(base: &Path) -> anyhow::Result<StoreInspection> {
@@ -240,13 +429,25 @@ pub fn inspect_store(base: &Path) -> anyhow::Result<StoreInspection> {
             Some((s.chunk_size, s.chunks.len(), covered, bytes))
         }
     };
+    let cluster = set.cluster().map(|c| (c.k, c.perm.len()));
+    let chunk_radii = set
+        .summaries()
+        .map(|s| {
+            s.chunks
+                .iter()
+                .map(|c| c.layers.iter().map(|l| l.radius).sum::<f32>())
+                .collect()
+        })
+        .unwrap_or_default();
     Ok(StoreInspection {
-        version: meta.version(),
+        version: if cluster.is_some() { 5 } else { meta.version() },
         on_disk_bytes: on_disk,
         decoded_bytes: meta.decoded_bytes_per_example() as u64 * meta.n_examples as u64,
         meta,
         shard_files,
         summaries,
+        cluster,
+        chunk_radii,
     })
 }
 
@@ -306,6 +507,32 @@ impl fmt::Display for StoreInspection {
                  | sidecar {bytes} B",
                 m.n_examples
             )?,
+        }
+        match self.cluster {
+            None => writeln!(
+                f,
+                "cluster: none (arrival order; `store recode --cluster k` builds the \
+                 v5 retrieval tier)"
+            )?,
+            Some((k, entries)) => {
+                writeln!(f, "cluster: k={k} | permutation {entries} entries")?
+            }
+        }
+        if !self.chunk_radii.is_empty() {
+            // 8-bucket histogram of per-chunk radii: a clustered store
+            // piles its chunks into the low buckets
+            let lo = self.chunk_radii.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = self.chunk_radii.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let span = (hi - lo).max(f32::MIN_POSITIVE);
+            let mut buckets = [0usize; 8];
+            for &r in &self.chunk_radii {
+                let b = (((r - lo) / span) * 8.0) as usize;
+                buckets[b.min(7)] += 1;
+            }
+            writeln!(
+                f,
+                "chunk radii: min {lo:.4} | max {hi:.4} | histogram {buckets:?}"
+            )?;
         }
         Ok(())
     }
@@ -562,6 +789,145 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() <= x.abs() * 3e-7 + 1e-30, "{x} vs {y}");
         }
+    }
+
+    /// Examples alternate between two far-apart blobs, so k-means with
+    /// k = 2 must untangle the parities.  `n/2` is kept odd by callers
+    /// so the two evenly spaced init centroids land in DIFFERENT blobs.
+    fn write_two_blob_source(name: &str, n: usize) -> PathBuf {
+        let mut rng = Rng::new(11);
+        let mut g = Mat::zeros(n, 8);
+        for i in 0..n {
+            let center = if i % 2 == 0 { 10.0 } else { -10.0 };
+            for x in g.row_mut(i) {
+                *x = center + 0.01 * rng.normal() as f32;
+            }
+        }
+        let lg = vec![LayerGrads { g, u: Mat::zeros(n, 2), v: Mat::zeros(n, 4) }];
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(2, 4)],
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Bf16,
+        };
+        let base = tmp(name);
+        let mut w = StoreWriter::create(&base, meta).unwrap();
+        w.set_summary_chunk(5).unwrap();
+        w.append(&ExtractBatch { losses: vec![0.0; n], layers: lg, valid: n }).unwrap();
+        w.finalize().unwrap();
+        base
+    }
+
+    #[test]
+    fn cluster_recode_groups_blobs_and_records_the_permutation() {
+        let src = write_two_blob_source("r_cluster_src", 10);
+        let dst = tmp("r_cluster_dst");
+        let rep = recode_store(
+            &src,
+            &dst,
+            &RecodeOptions { cluster: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.cluster, Some(2));
+        assert_eq!(rep.version, 5);
+        let cm = ClusterMeta::load(&dst).unwrap().expect("permutation attached");
+        assert_eq!(cm.k, 2);
+        cm.validate(10).unwrap();
+        // each half of the storage order is one parity blob, originals
+        // ascending within it (the stable sort)
+        for half in [&cm.perm[..5], &cm.perm[5..]] {
+            let parity = half[0] % 2;
+            assert!(half.iter().all(|&p| p % 2 == parity), "blobs mixed: {:?}", cm.perm);
+            assert!(half.windows(2).all(|w| w[0] < w[1]), "not stable: {:?}", cm.perm);
+        }
+        // the record at storage position p IS original example perm[p]
+        // (bf16 -> bf16 is byte-exact)
+        let s = ShardSet::open(&src).unwrap();
+        let d = ShardSet::open(&dst).unwrap();
+        for p in 0..10 {
+            let want = s.read_range(cm.perm[p] as usize, 1).unwrap();
+            let got = d.read_range(p, 1).unwrap();
+            match (&want.layers[0], &got.layers[0]) {
+                (ChunkLayer::Dense { g: a }, ChunkLayer::Dense { g: b }) => {
+                    assert_eq!(a.data, b.data, "storage {p}");
+                }
+                _ => panic!("unexpected layer shape"),
+            }
+        }
+        // inspect reports the tier
+        let text = format!("{}", inspect_store(&dst).unwrap());
+        assert!(text.contains("store v5"), "{text}");
+        assert!(text.contains("cluster: k=2 | permutation 10 entries"), "{text}");
+        assert!(text.contains("chunk radii:"), "{text}");
+    }
+
+    #[test]
+    fn cluster_recode_rejects_bad_requests_cleanly() {
+        let src = write_two_blob_source("r_cluster_rej", 10);
+        for (opts, msg) in [
+            (RecodeOptions { cluster: Some(0), ..Default::default() }, "k >= 1"),
+            (RecodeOptions { cluster: Some(11), ..Default::default() }, "exceeds"),
+            (
+                RecodeOptions {
+                    cluster: Some(2),
+                    summary_chunk: Some(0),
+                    ..Default::default()
+                },
+                "summary grid",
+            ),
+        ] {
+            let dst = tmp("r_cluster_rej_dst");
+            let err = recode_store(&src, &dst, &opts).unwrap_err();
+            assert!(format!("{err}").contains(msg), "{err}");
+            // rejected before any target file was created
+            assert!(StoreMeta::load(&dst).is_err(), "rejection left target files");
+        }
+        // re-clustering a clustered store is refused
+        let clustered = tmp("r_cluster_rej_clustered");
+        recode_store(
+            &src,
+            &clustered,
+            &RecodeOptions { cluster: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let dst = tmp("r_cluster_rej_dst2");
+        let err = recode_store(
+            &clustered,
+            &dst,
+            &RecodeOptions { cluster: Some(2), ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("already clustered"), "{err}");
+    }
+
+    #[test]
+    fn plain_recode_carries_the_permutation_through() {
+        let src = write_two_blob_source("r_carry_src", 10);
+        let clustered = tmp("r_carry_clustered");
+        recode_store(
+            &src,
+            &clustered,
+            &RecodeOptions { cluster: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        let before = ClusterMeta::load(&clustered).unwrap().unwrap();
+        // codec migration of a clustered store preserves record order,
+        // so the permutation must ride along and the store stay v5
+        let dst = tmp("r_carry_int8");
+        let rep = recode_store(
+            &clustered,
+            &dst,
+            &RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.cluster, Some(2));
+        assert_eq!(rep.version, 5);
+        assert_eq!(ClusterMeta::load(&dst).unwrap().unwrap(), before);
     }
 
     #[test]

@@ -1671,6 +1671,386 @@ fn prop_codec_pruned_equals_full_and_cached_equals_cold() {
 }
 
 // ---------------------------------------------------------------------------
+// clustered-store (v5) invariants (store::cluster, store::recode,
+// the best-first executor)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_clustered_exact_equals_unclustered_full_scan_all_kernels() {
+    // For every store kernel (graddot, logra, trackstar on dense
+    // stores; lorif on factored stores) and every record codec
+    // (bf16/int8/int4): scoring a `--cluster`-reordered (v5) store in
+    // exact best-first mode returns BIT-IDENTICAL top-k indices to the
+    // unclustered store's full scan — the permutation maps every index
+    // back to caller coordinates, the full-matrix pass post-permutes to
+    // the same score matrix, and the best-first walk accounts every
+    // skipped byte (bytes_read + bytes_skipped == full-scan bytes).
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::logra::LograScorer;
+    use lorif::attribution::lorif::LorifScorer;
+    use lorif::attribution::trackstar::TrackStarScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::curvature::{DenseCurvature, TruncatedCurvature};
+    use lorif::sketch::PruneMode;
+    use lorif::store::{recode_store, ClusterMeta, CodecId, RecodeOptions};
+    use std::sync::Arc;
+
+    for_each_case("clustered-exact", |seed, rng| {
+        let dims: Vec<(usize, usize)> = vec![(3 + rng.below(3), 3 + rng.below(3))];
+        let c = 1 + rng.below(2);
+        let grid = 4;
+        let n = grid * (4 + rng.below(3));
+        let nq = 1 + rng.below(3);
+        let shards = 1 + rng.below(3);
+        let k = 1 + rng.below(4);
+        let kc = 2 + rng.below(3);
+        let data = random_layers(n, &dims, c, rng);
+
+        // unclustered bf16 sources (with the summary grid), per kind
+        let mut bases = std::collections::BTreeMap::new();
+        for kind in [StoreKind::Dense, StoreKind::Factored] {
+            let meta = StoreMeta {
+                kind,
+                tier: "small".into(),
+                f: 4,
+                c,
+                layers: dims.clone(),
+                n_examples: 0,
+                shards: None,
+                summary_chunk: None,
+                codec: CodecId::Bf16,
+            };
+            let base = prop_tmp_base(&format!("clx_{}", kind.as_str()), seed);
+            if shards <= 1 {
+                let mut w = StoreWriter::create(&base, meta).unwrap();
+                w.set_summary_chunk(grid).unwrap();
+                append_in_batches(&data, n, &mut Rng::labeled(seed, "cx"), |b| {
+                    w.append(b).unwrap()
+                });
+                w.finalize().unwrap();
+            } else {
+                let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+                w.set_summary_chunk(grid).unwrap();
+                append_in_batches(&data, n, &mut Rng::labeled(seed, "cx"), |b| {
+                    w.append(b).unwrap()
+                });
+                w.finalize().unwrap();
+            }
+            bases.insert(kind.as_str(), base);
+        }
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::random_normal(nq, d1 * d2, 1.0, rng),
+                u: Mat::random_normal(nq, d1 * c, 1.0, rng),
+                v: Mat::random_normal(nq, d2 * c, 1.0, rng),
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c, proj_dims: dims.clone(), layers: qlayers };
+
+        for codec in CodecId::ALL {
+            // per codec: the flat (unclustered) store and its clustered
+            // twin — same records, same codec, reordered + permuted
+            let store_pair = |kind: &str| {
+                let src = &bases[kind];
+                let flat = if codec == CodecId::Bf16 {
+                    src.clone()
+                } else {
+                    let dst =
+                        prop_tmp_base(&format!("clx_{kind}_{}", codec.as_str()), seed);
+                    recode_store(
+                        src,
+                        &dst,
+                        &RecodeOptions { codec: Some(codec), ..Default::default() },
+                    )
+                    .unwrap();
+                    dst
+                };
+                let clustered =
+                    prop_tmp_base(&format!("clx_{kind}_{}_v5", codec.as_str()), seed);
+                let rep = recode_store(
+                    src,
+                    &clustered,
+                    &RecodeOptions {
+                        codec: Some(codec),
+                        cluster: Some(kc),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                assert_eq!(rep.cluster, Some(kc), "seed {seed}: cluster not attached");
+                assert_eq!(rep.version, 5, "seed {seed}");
+                (flat, clustered)
+            };
+            let (dense_flat, dense_cl) = store_pair("dense");
+            let (fact_flat, fact_cl) = store_pair("factored");
+            let open = |b: &std::path::Path| ShardSet::open(b).unwrap();
+
+            let cm = ClusterMeta::load(&dense_cl).unwrap().expect("v5 store lost its perm");
+            cm.validate(n).unwrap();
+
+            let check = |name: &str, flat: &mut dyn Scorer, cl: &mut dyn Scorer| {
+                let full = flat.score(&qg).unwrap();
+                let full_cl = cl.score(&qg).unwrap();
+                assert_eq!(
+                    full_cl.scores().data,
+                    full.scores().data,
+                    "seed {seed}: {name}/{codec:?} clustered full matrix not \
+                     permuted back to caller coordinates"
+                );
+                let pruned = cl.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+                assert_eq!(
+                    pruned.topk(k),
+                    full.topk(k),
+                    "seed {seed}: {name}/{codec:?} clustered exact top-k diverged \
+                     from the unclustered full scan"
+                );
+                assert_eq!(
+                    pruned.bytes_read + pruned.bytes_skipped,
+                    full.bytes_read,
+                    "seed {seed}: {name}/{codec:?} best-first byte ledger broken"
+                );
+            };
+
+            {
+                let mut a = GradDotScorer::new(open(&dense_flat));
+                a.prune = PruneMode::Off;
+                let mut b = GradDotScorer::new(open(&dense_cl));
+                b.prune = PruneMode::Exact;
+                check("graddot", &mut a, &mut b);
+            }
+            {
+                let curv =
+                    Arc::new(DenseCurvature::build(&open(&dense_flat), 0.1).unwrap());
+                let mut a = LograScorer::new(open(&dense_flat), Arc::clone(&curv));
+                a.prune = PruneMode::Off;
+                let mut b = LograScorer::new(open(&dense_cl), Arc::clone(&curv));
+                b.prune = PruneMode::Exact;
+                check("logra", &mut a, &mut b);
+            }
+            {
+                let curv =
+                    Arc::new(DenseCurvature::build(&open(&dense_flat), 0.1).unwrap());
+                let mut a = TrackStarScorer::new(open(&dense_flat), Arc::clone(&curv));
+                a.prune = PruneMode::Off;
+                let mut b = TrackStarScorer::new(open(&dense_cl), Arc::clone(&curv));
+                b.prune = PruneMode::Exact;
+                check("trackstar", &mut a, &mut b);
+            }
+            {
+                let curv = Arc::new(
+                    TruncatedCurvature::build(&open(&fact_flat), 3, 3, 2, 0.1, seed)
+                        .unwrap(),
+                );
+                let mut a = LorifScorer::new(open(&fact_flat), Arc::clone(&curv));
+                a.prune = PruneMode::Off;
+                let mut b = LorifScorer::new(open(&fact_cl), Arc::clone(&curv));
+                b.prune = PruneMode::Exact;
+                check("lorif", &mut a, &mut b);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_permutation_roundtrips() {
+    // `--cluster` recodes record a bijective permutation whose inverse
+    // composes to the identity, place each original record at the
+    // storage position the permutation claims, and carry the
+    // permutation unchanged through later plain recodes.
+    use lorif::store::{recode_store, ClusterMeta, CodecId, RecodeOptions};
+
+    for_each_case("cluster-perm", |seed, rng| {
+        let dims = vec![(1 + rng.below(6), 1 + rng.below(6))];
+        let n = 8 + rng.below(40);
+        let kc = 1 + rng.below(6.min(n));
+        let grid = 2 + rng.below(5);
+        let data = random_layers(n, &dims, 1, rng);
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Bf16,
+        };
+        let base = prop_tmp_base("clperm_src", seed);
+        let mut w = StoreWriter::create(&base, meta).unwrap();
+        w.set_summary_chunk(grid).unwrap();
+        append_in_batches(&data, n, &mut Rng::labeled(seed, "cp"), |b| {
+            w.append(b).unwrap()
+        });
+        w.finalize().unwrap();
+
+        let dst = prop_tmp_base("clperm_v5", seed);
+        let rep = recode_store(
+            &base,
+            &dst,
+            &RecodeOptions { cluster: Some(kc), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(rep.cluster, Some(kc), "seed {seed}");
+        assert_eq!(rep.version, 5, "seed {seed}");
+
+        let cm = ClusterMeta::load(&dst).unwrap().expect("v5 store without a perm");
+        cm.validate(n).unwrap();
+        let inv = cm.inverse();
+        for orig in 0..n {
+            assert_eq!(
+                cm.original(inv[orig] as usize),
+                orig,
+                "seed {seed}: inverse does not round-trip"
+            );
+        }
+
+        // storage position p holds the record the caller knows as perm[p]
+        let src = ShardSet::open(&base).unwrap();
+        let cl = ShardSet::open(&dst).unwrap();
+        for _ in 0..5 {
+            let p = rng.below(n);
+            let a = cl.read_range(p, 1).unwrap();
+            let b = src.read_range(cm.original(p), 1).unwrap();
+            assert_eq!(
+                a.layers[0].dense().data,
+                b.layers[0].dense().data,
+                "seed {seed}: storage {p} does not hold original {}",
+                cm.original(p)
+            );
+        }
+
+        // a plain codec recode of the v5 store carries the perm through
+        let dst2 = prop_tmp_base("clperm_carry", seed);
+        recode_store(
+            &dst,
+            &dst2,
+            &RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(
+            ClusterMeta::load(&dst2).unwrap(),
+            Some(cm),
+            "seed {seed}: permutation lost in a plain recode"
+        );
+    });
+}
+
+#[test]
+fn prop_recall_mode_certified_overlap_meets_target() {
+    // `--prune recall=x` stops early only once ceil(x*k) heap entries
+    // per query are certified (strictly above every unvisited chunk's
+    // bound), so per-query overlap@k against the full scan is >= x by
+    // construction — and recall=1.0 is bit-identical to the full scan.
+    // The early stop still accounts every unread byte.
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::sketch::PruneMode;
+    use lorif::store::{recode_store, CodecId, RecodeOptions};
+
+    for_each_case("recall-overlap", |seed, rng| {
+        let dims: Vec<(usize, usize)> = vec![(3 + rng.below(3), 3 + rng.below(3))];
+        let grid = 4;
+        let n = grid * (4 + rng.below(4));
+        let nq = 1 + rng.below(3);
+        let shards = 1 + rng.below(3);
+        let k = 1 + rng.below(4);
+        let kc = 2 + rng.below(3);
+
+        // strong query-aligned head rows so the certified stop can
+        // actually trigger before the scan ends
+        let data: Vec<LayerGrads> = dims
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(n, d1 * d2);
+                for t in 0..n {
+                    let scale = if t < grid { 4.0 } else { 0.02 };
+                    for x in g.row_mut(t) {
+                        *x = scale * (1.0 + 0.1 * rng.normal() as f32);
+                    }
+                }
+                LayerGrads { g, u: Mat::zeros(n, d1), v: Mat::zeros(n, d2) }
+            })
+            .collect();
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Bf16,
+        };
+        let base = prop_tmp_base("recall_src", seed);
+        if shards <= 1 {
+            let mut w = StoreWriter::create(&base, meta).unwrap();
+            w.set_summary_chunk(grid).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "rc"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+        } else {
+            let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+            w.set_summary_chunk(grid).unwrap();
+            append_in_batches(&data, n, &mut Rng::labeled(seed, "rc"), |b| {
+                w.append(b).unwrap()
+            });
+            w.finalize().unwrap();
+        }
+        let dst = prop_tmp_base("recall_v5", seed);
+        recode_store(&base, &dst, &RecodeOptions { cluster: Some(kc), ..Default::default() })
+            .unwrap();
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| QueryLayer {
+                g: Mat::from_vec(nq, d1 * d2, vec![1.0; nq * d1 * d2]),
+                u: Mat::zeros(nq, d1),
+                v: Mat::zeros(nq, d2),
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c: 1, proj_dims: dims.clone(), layers: qlayers };
+
+        let mut flat = GradDotScorer::new(ShardSet::open(&base).unwrap());
+        flat.prune = PruneMode::Off;
+        let full = flat.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+        let reference = full.topk(k);
+
+        for x in [0.5f32, 0.9, 1.0] {
+            let mut s = GradDotScorer::new(ShardSet::open(&dst).unwrap());
+            s.prune = PruneMode::Recall(x);
+            let r = s.score_sink(&qg, SinkSpec::TopK(k)).unwrap();
+            assert_eq!(
+                r.bytes_read + r.bytes_skipped,
+                full.bytes_read,
+                "seed {seed}: recall={x} byte ledger broken"
+            );
+            let got = r.topk(k);
+            let need = (x * k as f32).ceil().max(1.0) as usize;
+            for (q, (want, have)) in reference.iter().zip(&got).enumerate() {
+                let inter = want.iter().filter(|i| have.contains(i)).count();
+                assert!(
+                    inter >= need.min(want.len()),
+                    "seed {seed}: recall={x} query {q} kept {inter} of {} certified \
+                     entries (need {need})",
+                    want.len()
+                );
+            }
+            if (x - 1.0).abs() < 1e-9 {
+                assert_eq!(
+                    got, reference,
+                    "seed {seed}: recall=1.0 must equal the full scan exactly"
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // quantized-domain scoring invariants (store::codec::quant)
 // ---------------------------------------------------------------------------
 
