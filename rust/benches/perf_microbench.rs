@@ -778,6 +778,29 @@ fn main() -> anyhow::Result<()> {
             let t_exact = time(3, || {
                 let _ = dst_scorer.score_sink(&qc, SinkSpec::TopK(k)).unwrap();
             });
+
+            // per-query latency distribution through the telemetry
+            // histogram (same log-bucketed quantiles the server's
+            // `stats`/`metrics` verbs report), persisted so the CI
+            // perf-smoke artifact tracks tail latency per PR
+            let hist = lorif::telemetry::Histogram::default();
+            let lat_iters = if quick() { 8usize } else { 32 };
+            for _ in 0..lat_iters {
+                let t0 = Instant::now();
+                let _ = dst_scorer.score_sink(&qc, SinkSpec::TopK(k))?;
+                hist.observe_dur(t0.elapsed());
+            }
+            println!(
+                "retrieval tier latency over {lat_iters} queries: p50 {:.1} ms | \
+                 p95 {:.1} ms | p99 {:.1} ms",
+                hist.p50() * 1e3,
+                hist.p95() * 1e3,
+                hist.p99() * 1e3
+            );
+            cluster_fields.push(("latency_p50", hist.p50().into()));
+            cluster_fields.push(("latency_p95", hist.p95().into()));
+            cluster_fields.push(("latency_p99", hist.p99().into()));
+
             println!(
                 "retrieval tier (n={n_c}, {kc} blobs, grid {grid_c}, k={k}): full scan \
                  {bytes_full} B | unclustered exact {} B | clustered exact {} B \

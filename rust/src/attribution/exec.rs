@@ -264,6 +264,32 @@ struct ShardRun<S> {
     stats: StreamStats,
     /// peak score elements the sink held during this shard's pass
     peak: usize,
+    /// pruning bound evaluations this shard performed (0 unpruned)
+    bound_evals: u64,
+}
+
+/// Publish one completed pass into the scoped metrics registry
+/// (`telemetry::current_registry`) — the aggregation point where the
+/// per-pass working ledgers (`StreamStats`, the phase timer) become
+/// registry counters.  Publishing the already-merged totals once per
+/// pass keeps the chunk hot path free of shared counters and makes the
+/// registry's `lorif_store_bytes_read_total +
+/// lorif_store_bytes_skipped_total` preserve the full-scan ledger
+/// bit-for-bit (property-tested in `tests/prop.rs`).
+fn publish_pass(agg: &StreamStats, timer: &PhaseTimer, peak: usize, bound_evals: u64) {
+    let reg = crate::telemetry::current_registry();
+    agg.publish(&reg);
+    crate::sketch::prune::publish_prune_outcome(
+        &reg,
+        bound_evals,
+        agg.chunks_skipped as u64,
+        agg.bytes_skipped,
+    );
+    reg.exec_passes.inc();
+    reg.exec_load_seconds.add_secs(timer.get("load").as_secs_f64());
+    reg.exec_compute_seconds.add_secs(timer.get("compute").as_secs_f64());
+    reg.exec_precondition_seconds.add_secs(timer.get("precondition").as_secs_f64());
+    reg.exec_peak_sink_elems.max(peak as u64);
 }
 
 /// Run `kernel` over every shard of `set`, folding scores into the
@@ -293,7 +319,10 @@ pub fn execute<K: ChunkKernel>(
     let n = set.meta.n_examples;
     let nq = queries.n_query;
     let mut timer = PhaseTimer::new();
-    timer.time("precondition", || kernel.precondition(&set.meta, queries))?;
+    timer.time("precondition", || {
+        let _sp = crate::telemetry::trace::span("precondition");
+        kernel.precondition(&set.meta, queries)
+    })?;
 
     // with multiple shard workers the workers themselves overlap I/O
     // and compute, so per-shard prefetch threads would only
@@ -327,6 +356,7 @@ pub fn execute<K: ChunkKernel>(
                 FullMatrixSink::new(nq, r.start, r.count)
             })?;
             let peak: usize = runs.iter().map(|r| r.peak).sum();
+            let bound_evals: u64 = runs.iter().map(|r| r.bound_evals).sum();
             let mut agg = StreamStats::default();
             let parts: Vec<ShardScores> = runs
                 .into_iter()
@@ -360,6 +390,7 @@ pub fn execute<K: ChunkKernel>(
                 None => scores,
             };
             timer.merge(&shard_timer);
+            publish_pass(&agg, &timer, peak, bound_evals);
             Ok(ScoreReport {
                 output: ScoreOutput::Full(scores),
                 n_train: n,
@@ -395,17 +426,20 @@ pub fn execute<K: ChunkKernel>(
             let mut compute = Duration::ZERO;
             let mut agg = StreamStats::default();
             let mut peak = 0usize;
+            let mut bound_evals = 0u64;
             let mut shard_heaps = Vec::with_capacity(runs.len());
             for r in runs {
                 io += r.io;
                 compute += r.compute;
                 agg.merge(&r.stats);
                 peak += r.peak;
+                bound_evals += r.bound_evals;
                 shard_heaps.push(r.sink.heaps);
             }
             let heaps = parallel::merge_topk(nq, k, shard_heaps);
             timer.add("load", io);
             timer.add("compute", compute);
+            publish_pass(&agg, &timer, peak, bound_evals);
             Ok(ScoreReport {
                 output: ScoreOutput::TopK(heaps),
                 n_train: n,
@@ -451,9 +485,18 @@ where
     // residency per value.  Resolved once per query; part of the cache
     // key, so decoded and encoded forms of a span never alias.
     let encoded = opts.quant.active(kernel.supports_encoded(), set.meta.codec);
-    parallel::map_shards(set, opts.threads, |_, mut reader| {
+    parallel::map_shards(set, opts.threads, |si, mut reader| {
         reader.prefetch_depth = opts.prefetch_depth.max(1);
         reader.encoded = encoded;
+        // trace lane 1 + shard: this shard's chunk visits render on
+        // their own Perfetto track within the query's track group
+        let lane = si as u32 + 1;
+        let mut shard_span = crate::telemetry::trace::span_on("shard", lane);
+        if let Some(s) = shard_span.as_mut() {
+            s.arg("shard", si);
+            s.arg("start", reader.start);
+            s.arg("count", reader.count);
+        }
         let mut sink = make_sink(&reader);
         let mut compute = Duration::ZERO;
         let mut scratch = Scratch::new();
@@ -465,6 +508,11 @@ where
                          scratch: &mut Scratch|
          -> anyhow::Result<Duration> {
             let t0 = Instant::now();
+            let mut sp = crate::telemetry::trace::span_on("score_chunk", lane);
+            if let Some(s) = sp.as_mut() {
+                s.arg("start", chunk.start);
+                s.arg("count", chunk.count);
+            }
             if block.rows != chunk.count || block.cols != nq {
                 *block = Mat::zeros(chunk.count, nq);
             } else {
@@ -548,6 +596,11 @@ where
                     (0..nq).all(|q| sink.certified(q, rem[i][q]) >= need)
                 });
                 if done {
+                    crate::telemetry::trace::instant_on(
+                        "prune_stop",
+                        lane,
+                        &[("chunks_left", (order.len() - i).to_string())],
+                    );
                     for &cj in &order[i..] {
                         cur.account_skip(chunks[cj].count);
                     }
@@ -562,11 +615,25 @@ where
                     None => false,
                 });
                 if skip {
+                    crate::telemetry::trace::instant_on(
+                        "prune_skip",
+                        lane,
+                        &[("start", chunks[ci].start.to_string())],
+                    );
                     cur.account_skip(chunks[ci].count);
                     continue;
                 }
                 cur.goto(chunks[ci].start)?;
-                let chunk = cur.read()?;
+                let chunk = {
+                    let hits0 = cur.stats().cache_hits;
+                    let mut sp = crate::telemetry::trace::span_on("read_chunk", lane);
+                    let chunk = cur.read()?;
+                    if let Some(s) = sp.as_mut() {
+                        s.arg("start", chunk.start);
+                        s.arg("cache_hit", u8::from(cur.stats().cache_hits > hits0));
+                    }
+                    chunk
+                };
                 compute += score_one(&chunk, &mut sink, &mut block, &mut scratch)?;
                 peak = peak.max(sink.allocated_elems());
                 if let Some(sh) = shared {
@@ -578,14 +645,17 @@ where
                 }
             }
             let stats = cur.stats().clone();
-            Ok(ShardRun { sink, io: cur.io_time(), compute, stats, peak })
+            // each chunk's bound was evaluated once per query when the
+            // visit order was built
+            let bound_evals = (chunks.len() * nq) as u64;
+            Ok(ShardRun { sink, io: cur.io_time(), compute, stats, peak, bound_evals })
         } else {
             let (io, stats) = reader.stream(opts.chunk_size, prefetch, |chunk| {
                 compute += score_one(chunk, &mut sink, &mut block, &mut scratch)?;
                 peak = peak.max(sink.allocated_elems());
                 Ok(())
             })?;
-            Ok(ShardRun { sink, io, compute, stats, peak })
+            Ok(ShardRun { sink, io, compute, stats, peak, bound_evals: 0 })
         }
     })
 }

@@ -125,6 +125,9 @@ impl Args {
         if let Some(d) = self.get("work-dir") {
             cfg.work_dir = d.into();
         }
+        if let Some(p) = self.get("trace-out") {
+            cfg.trace_out = Some(p.into());
+        }
         cfg.validate()
     }
 }
@@ -169,6 +172,7 @@ mod tests {
             "4", "--score-threads", "2", "--sink", "topk", "--prune", "slack=0.1",
             "--prefetch-depth", "3", "--chunk-cache-mb", "128", "--summary-chunk", "64",
             "--cluster", "16", "--codec", "int8", "--quant-score", "on",
+            "--trace-out", "work/trace.json",
         ]);
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
@@ -186,6 +190,7 @@ mod tests {
         assert_eq!(cfg.cluster, 16);
         assert_eq!(cfg.codec, crate::store::CodecId::Int8);
         assert_eq!(cfg.quant_score, crate::store::QuantScore::On);
+        assert_eq!(cfg.trace_out.as_deref(), Some(std::path::Path::new("work/trace.json")));
     }
 
     #[test]

@@ -77,6 +77,11 @@ pub struct Config {
 
     pub artifacts_dir: PathBuf,
     pub work_dir: PathBuf,
+
+    /// write Chrome trace-event JSON here (`--trace-out`; viewable in
+    /// Perfetto / `chrome://tracing`).  `None` disables tracing — the
+    /// span call sites then cost one static load.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -107,6 +112,7 @@ impl Default for Config {
             quant_score: QuantScore::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
             work_dir: PathBuf::from("work"),
+            trace_out: None,
         }
     }
 }
@@ -168,6 +174,9 @@ impl Config {
         if let Some(s) = v.get("work_dir").and_then(Value::as_str) {
             self.work_dir = PathBuf::from(s);
         }
+        if let Some(s) = v.get("trace_out").and_then(Value::as_str) {
+            self.trace_out = (!s.is_empty()).then(|| PathBuf::from(s));
+        }
         self.validate()
     }
 
@@ -218,7 +227,7 @@ impl Config {
     }
 
     pub fn to_json(&self) -> Value {
-        crate::util::json::obj([
+        let mut fields = vec![
             ("tier", self.tier.name().into()),
             ("f", self.f.into()),
             ("c", self.c.into()),
@@ -244,7 +253,11 @@ impl Config {
             ("quant_score", self.quant_score.as_str().into()),
             ("artifacts_dir", self.artifacts_dir.display().to_string().into()),
             ("work_dir", self.work_dir.display().to_string().into()),
-        ])
+        ];
+        if let Some(p) = &self.trace_out {
+            fields.push(("trace_out", p.display().to_string().into()));
+        }
+        crate::util::json::obj(fields)
     }
 }
 
@@ -273,6 +286,7 @@ mod tests {
         cfg.cluster = 32;
         cfg.codec = CodecId::Int8;
         cfg.quant_score = QuantScore::On;
+        cfg.trace_out = Some(PathBuf::from("trace/q.json"));
         let v = cfg.to_json();
         let mut back = Config::default();
         back.apply_json(&v).unwrap();
@@ -289,6 +303,9 @@ mod tests {
         assert_eq!(back.cluster, 32);
         assert_eq!(back.codec, CodecId::Int8);
         assert_eq!(back.quant_score, QuantScore::On);
+        assert_eq!(back.trace_out, Some(PathBuf::from("trace/q.json")));
+        // absent from the JSON -> stays off
+        assert_eq!(Config::default().trace_out, None);
     }
 
     #[test]

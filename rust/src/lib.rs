@@ -20,4 +20,5 @@ pub mod query;
 pub mod runtime;
 pub mod sketch;
 pub mod store;
+pub mod telemetry;
 pub mod util;

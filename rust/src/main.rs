@@ -4,6 +4,7 @@
 //!   info            print config, tier dims, storage estimates
 //!   store inspect   print a store's manifest/layout/codec/byte report
 //!   store recode    migrate a store between codecs/layouts (streaming)
+//!   metrics dump    print the telemetry registry (Prometheus text)
 //!   gen-corpus      generate + persist the synthetic topic corpus [xla]
 //!   train           train the base model (cached checkpoint)      [xla]
 //!   build-index     stage 1 (gradient stores) + stage 2 (curvature) [xla]
@@ -24,7 +25,7 @@
 //!   --shards S --score-threads T --sink full|topk
 //!   --prune on|off|slack=x|recall=x --prefetch-depth N --summary-chunk N
 //!   --cluster K --chunk-cache-mb N --codec bf16|int8|int4
-//!   --quant-score on|off|auto
+//!   --quant-score on|off|auto --trace-out PATH
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 //! Serve flags: --addr A --max-batch N --window-ms N --topk K
 //!   --score-workers N --queue-cap N
@@ -73,10 +74,15 @@ fn run() -> anyhow::Result<()> {
     }
     let mut cfg = Config::default();
     args.apply_to_config(&mut cfg)?;
+    if let Some(path) = &cfg.trace_out {
+        lorif::telemetry::trace::init(path)?;
+        log::info!("trace spans -> {} (Chrome trace-event JSON)", path.display());
+    }
 
     match args.subcommand.as_str() {
         "info" => info(&cfg),
         "store" => store_cmd(&args),
+        "metrics" => metrics_cmd(&args),
         #[cfg(feature = "xla")]
         "gen-corpus" => {
             let p = Pipeline::new(cfg)?;
@@ -181,6 +187,23 @@ fn store_cmd(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         other => anyhow::bail!("unknown store subcommand '{other}' (inspect|recode)"),
+    }
+}
+
+/// `lorif metrics dump` — print the process-wide telemetry registry as
+/// Prometheus text exposition.  A fresh process prints the full schema
+/// at zero (every family is pre-registered), which is what the CI
+/// perf-smoke step greps; a long-lived embedder calls the library's
+/// `telemetry::global()` directly, and a running server serves the same
+/// text over `{"cmd":"metrics"}`.
+fn metrics_cmd(args: &Args) -> anyhow::Result<()> {
+    let verb = args.positional.first().map(String::as_str).unwrap_or("");
+    match verb {
+        "dump" => {
+            print!("{}", lorif::telemetry::global().render_prometheus());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown metrics subcommand '{other}' (usage: lorif metrics dump)"),
     }
 }
 
@@ -514,21 +537,23 @@ fn print_help() {
     println!(
         "lorif — low-rank influence functions (paper reproduction)\n\
          usage: lorif <subcommand> [flags]\n\
-         subcommands: info store gen-corpus train build-index query serve\n\
+         subcommands: info store metrics gen-corpus train build-index query serve\n\
                       eval-lds eval-tailpatch judge\n\
          store tools: store inspect <base>\n\
                       store recode <base> --out <base> --codec bf16|int8|int4\n\
                                    [--shards S] [--summary-chunk G] [--cluster K]\n\
+         telemetry:   metrics dump   (Prometheus text exposition)\n\
+                      --trace-out PATH   (Chrome trace-event spans, Perfetto)\n\
          common flags: --tier small|medium|large --f N --c N --r N\n\
                        --n-train N --n-query N --seed S --method NAME\n\
                        --shards S --score-threads T --sink full|topk\n\
                        --prune on|off|slack=x|recall=x --prefetch-depth N\n\
                        --summary-chunk N --cluster K --chunk-cache-mb N\n\
                        --codec bf16|int8|int4 --quant-score on|off|auto\n\
-                       --work-dir DIR --artifacts-dir DIR\n\
+                       --work-dir DIR --artifacts-dir DIR --trace-out PATH\n\
          serve flags:  --addr A --max-batch N --window-ms N --topk K\n\
                        --score-workers N --queue-cap N\n\
-         pure-CPU builds support `info` and `store`; the rest need --features xla\n\
+         pure-CPU builds support `info`, `store`, and `metrics`; the rest need --features xla\n\
          see rust/README.md for a walkthrough."
     );
 }

@@ -109,12 +109,28 @@ impl<S: Scorer> QueryEngine<S> {
     }
 
     pub fn run(&mut self, queries: &QueryGrads) -> anyhow::Result<QueryResult> {
+        // One trace tree per pass: allocate a fresh trace ID unless the
+        // caller (the batch server) already attached one to this thread.
+        let cur = crate::telemetry::current_ctx().trace;
+        let trace =
+            if cur.id == 0 { crate::telemetry::TraceCtx::next_query() } else { cur };
+        crate::telemetry::with_trace(trace, || self.run_traced(queries))
+    }
+
+    fn run_traced(&mut self, queries: &QueryGrads) -> anyhow::Result<QueryResult> {
+        let mut root = crate::telemetry::trace::span("query");
+        if let Some(s) = root.as_mut() {
+            s.arg("n_query", queries.n_query);
+            s.arg("k", self.k);
+            s.arg_str("sink", self.sink.name());
+        }
         let t0 = std::time::Instant::now();
         let report = match self.sink {
             SinkMode::Full => self.scorer.score(queries)?,
             SinkMode::TopK => self.scorer.score_sink(queries, SinkSpec::TopK(self.k))?,
         };
         let latency = LatencyBreakdown::from_report(&report, t0.elapsed());
+        crate::telemetry::current_registry().query_latency.observe_secs(latency.wall_s);
         log::info!(
             "{}: scored {} queries x {} train in {:.3}s wall ({:.3}s CPU), {} sink ({})",
             self.scorer.name(),

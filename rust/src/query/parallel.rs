@@ -115,6 +115,10 @@ where
 /// matrix.  Phase times SUM across shards (CPU time, matching how the
 /// sequential path accounts a full pass), as does `bytes`.
 pub fn merge_scores(nq: usize, n_total: usize, parts: Vec<ShardScores>) -> (Mat, PhaseTimer, u64) {
+    let mut sp = crate::telemetry::trace::span("merge_scores");
+    if let Some(s) = sp.as_mut() {
+        s.arg("shards", parts.len());
+    }
     let mut scores = Mat::zeros(nq, n_total);
     let mut io = Duration::ZERO;
     let mut compute = Duration::ZERO;
@@ -224,6 +228,10 @@ impl TopK {
 /// shard) into the global per-query heaps — the reduction step of the
 /// streaming top-k sink.
 pub fn merge_topk(nq: usize, k: usize, parts: Vec<Vec<TopK>>) -> Vec<TopK> {
+    let mut sp = crate::telemetry::trace::span("merge_topk");
+    if let Some(s) = sp.as_mut() {
+        s.arg("shards", parts.len());
+    }
     let mut merged: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
     for part in &parts {
         debug_assert_eq!(part.len(), nq);

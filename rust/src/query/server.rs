@@ -27,10 +27,25 @@
 //!       "bytes_read": n, "bytes_skipped": m, "cache_hits": h,
 //!       "cache_misses": mm, "bytes_from_cache": c}
 //!   -> {"cmd": "stats"}
-//!   <- {"served": n, "shed": n, "failed": n, "batches": n, ...,
-//!       "queue_depth": d, "cache_hit_rate": r, "workers": w}
+//!   <- {"served": n, "submitted": n, "shed": n, "failed": n,
+//!       "batches": n, ..., "queue_depth": d, "cache_hit_rate": r,
+//!       "workers": w, "uptime_s": t, "batch_wall_p50_s": x, ...}
+//!   -> {"cmd": "metrics"}
+//!   <- {"ok": true, "metrics": "# HELP lorif_...\n..."}
+//!      (Prometheus text exposition of this server's registry, embedded
+//!      as one JSON string — the newline-delimited protocol cannot
+//!      carry raw multi-line text)
 //!   -> {"cmd": "shutdown"}     (stops the server; used by tests)
 //!   <- {"ok": true}
+//!
+//! Every server instance owns a PRIVATE telemetry [`Registry`]: the
+//! scoring workers run each batch under `telemetry::with_ctx`, so the
+//! store/cache/prune/executor families published during the pass land
+//! in this server's registry (not the process global), and concurrent
+//! servers — e.g. under `cargo test` — each expose coherent counters.
+//! The `stats` verb is DERIVED from the same registry, so the JSON blob
+//! and the exposition can never disagree, and
+//! `served + shed + failed + dropped == submitted` reconciles exactly.
 //! Errors are structured: {"error": msg, "code": c[, "index": i]} with
 //! codes `bad_json`, `bad_request`, `invalid_tokens` (naming the first
 //! offending token index), `overloaded` (load shed), `batch_failed`,
@@ -63,11 +78,12 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::attribution::{QueryGrads, Scorer, SinkSpec};
+use crate::telemetry::{self, Registry, TelemetryCtx, TraceCtx};
 use crate::util::json::{obj, Value};
 
 /// Source of query gradients for the serving pipeline.  `extract` runs
@@ -139,14 +155,13 @@ impl Default for ServerConfig {
     }
 }
 
-/// What `run` returns after a clean shutdown.  Every admitted request
-/// lands in exactly one of `served`/`failed`/`dropped` (and `shed`
-/// counts the never-admitted), so the counts reconcile against
-/// client-side totals — up to the teardown boundary: a request racing
-/// the final queue drain (admitted in the microseconds between the
-/// handlers observing the shutdown flag and the queue closing) is
-/// still ANSWERED with a structured `shutdown` error, but may not
-/// appear in `dropped`.
+/// What `run` returns after a clean shutdown.  Every submitted request
+/// lands in exactly one of `served`/`shed`/`failed`/`dropped` — a
+/// request racing the final queue drain is counted `dropped` whether it
+/// died at the closed admission queue or in the drain itself — so the
+/// counts reconcile against client-side totals, and against the
+/// registry's `lorif_server_submitted_total` (asserted through the
+/// metrics exposition in `tests/server.rs`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeSummary {
     /// queries answered with scores
@@ -161,44 +176,51 @@ pub struct ServeSummary {
     pub batches: usize,
 }
 
-#[derive(Default)]
+/// Per-server telemetry: a private [`Registry`] every counter lives in,
+/// plus the start instant for `uptime_s`.  The `stats` verb READS the
+/// registry (including the cache/store families the scoring passes
+/// publish under `with_ctx`), so the JSON stats blob, the `metrics`
+/// exposition, and the final [`ServeSummary`] are three views of one
+/// ledger.
 struct ServerStats {
-    served: AtomicUsize,
-    shed: AtomicUsize,
-    failed: AtomicUsize,
-    dropped: AtomicUsize,
-    batches: AtomicUsize,
-    batch_errors: AtomicUsize,
-    queue_depth: AtomicUsize,
-    cache_hits: AtomicU64,
-    cache_misses: AtomicU64,
-    bytes_from_cache: AtomicU64,
-    bytes_read: AtomicU64,
+    reg: Arc<Registry>,
+    start: Instant,
 }
 
 impl ServerStats {
+    fn new() -> ServerStats {
+        ServerStats { reg: Arc::new(Registry::new()), start: Instant::now() }
+    }
+
     fn snapshot_json(&self, workers: usize) -> Value {
-        let hits = self.cache_hits.load(Ordering::Relaxed);
-        let misses = self.cache_misses.load(Ordering::Relaxed);
+        let r = &self.reg;
+        let hits = r.cache_hits.get();
+        let misses = r.cache_misses.get();
         let rate = if hits + misses == 0 {
             0.0
         } else {
             hits as f64 / (hits + misses) as f64
         };
+        let wall = &r.server_batch_wall;
         obj([
-            ("served", self.served.load(Ordering::Relaxed).into()),
-            ("shed", self.shed.load(Ordering::Relaxed).into()),
-            ("failed", self.failed.load(Ordering::Relaxed).into()),
-            ("dropped", self.dropped.load(Ordering::Relaxed).into()),
-            ("batches", self.batches.load(Ordering::Relaxed).into()),
-            ("batch_errors", self.batch_errors.load(Ordering::Relaxed).into()),
-            ("queue_depth", self.queue_depth.load(Ordering::Relaxed).into()),
+            ("served", (r.server_served.get() as usize).into()),
+            ("submitted", (r.server_submitted.get() as usize).into()),
+            ("shed", (r.server_shed.get() as usize).into()),
+            ("failed", (r.server_failed.get() as usize).into()),
+            ("dropped", (r.server_dropped.get() as usize).into()),
+            ("batches", (r.server_batches.get() as usize).into()),
+            ("batch_errors", (r.server_batch_errors.get() as usize).into()),
+            ("queue_depth", (r.server_queue_depth.get() as usize).into()),
             ("cache_hits", (hits as usize).into()),
             ("cache_misses", (misses as usize).into()),
             ("cache_hit_rate", rate.into()),
-            ("bytes_from_cache", (self.bytes_from_cache.load(Ordering::Relaxed) as usize).into()),
-            ("bytes_read", (self.bytes_read.load(Ordering::Relaxed) as usize).into()),
+            ("bytes_from_cache", (r.store_bytes_from_cache.get() as usize).into()),
+            ("bytes_read", (r.store_bytes_read.get() as usize).into()),
             ("workers", workers.into()),
+            ("uptime_s", self.start.elapsed().as_secs_f64().into()),
+            ("batch_wall_p50_s", wall.p50().into()),
+            ("batch_wall_p95_s", wall.p95().into()),
+            ("batch_wall_p99_s", wall.p99().into()),
         ])
     }
 }
@@ -267,7 +289,8 @@ impl Server {
         let seq_len = source.seq_len();
         let vocab = source.vocab();
         let n_workers = scorers.len();
-        let stats = Arc::new(ServerStats::default());
+        let stats = Arc::new(ServerStats::new());
+        stats.reg.server_workers.set(n_workers as u64);
         // shared with the (detached) conn handlers too: once set, they
         // stop admitting queries, which closes most of the window where
         // a request could race the final queue drain
@@ -371,7 +394,7 @@ impl Server {
             loop {
                 let (first, t0) = match rx.recv() {
                     Ok(Incoming::Query { tokens, reply, arrived }) => {
-                        stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                        stats.reg.server_queue_depth.sub(1);
                         ((tokens, reply), arrived)
                     }
                     Ok(Incoming::Shutdown) | Err(_) => break,
@@ -386,7 +409,7 @@ impl Server {
                     }
                     match rx.recv_timeout(deadline - now) {
                         Ok(Incoming::Query { tokens, reply, .. }) => {
-                            stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                            stats.reg.server_queue_depth.sub(1);
                             batch.push((tokens, reply));
                         }
                         Ok(Incoming::Shutdown) => {
@@ -423,19 +446,19 @@ impl Server {
             // `shutdown` error when the reply senders drop)
             while let Ok(msg) = rx.try_recv() {
                 if let Incoming::Query { .. } = msg {
-                    stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
-                    stats.dropped.fetch_add(1, Ordering::SeqCst);
+                    stats.reg.server_queue_depth.sub(1);
+                    stats.reg.server_dropped.inc();
                 }
             }
             drop(rx);
             anyhow::ensure!(!worker_panicked, "scoring worker panicked");
             anyhow::ensure!(!acceptor_panicked, "acceptor thread panicked");
             Ok(ServeSummary {
-                served: stats.served.load(Ordering::SeqCst),
-                shed: stats.shed.load(Ordering::SeqCst),
-                failed: stats.failed.load(Ordering::SeqCst),
-                dropped: stats.dropped.load(Ordering::SeqCst),
-                batches: stats.batches.load(Ordering::SeqCst),
+                served: stats.reg.server_served.get() as usize,
+                shed: stats.reg.server_shed.get() as usize,
+                failed: stats.reg.server_failed.get() as usize,
+                dropped: stats.reg.server_dropped.get() as usize,
+                batches: stats.reg.server_batches.get() as usize,
             })
         })?;
         log::info!(
@@ -477,19 +500,19 @@ fn dispatch_batch<G: GradSource>(
     }
     match source.extract(&tokens, n) {
         Ok(queries) => {
-            stats.batches.fetch_add(1, Ordering::SeqCst);
+            stats.reg.server_batches.inc();
             if jtx.send(Job { queries, replies, t0 }).is_err() {
                 // every worker died: the handlers see the dropped reply
                 // senders and answer with `shutdown`; stop the batcher
                 // so run() reports the worker panic
-                stats.dropped.fetch_add(n, Ordering::SeqCst);
+                stats.reg.server_dropped.add(n as u64);
                 log::error!("batch of {n} dropped: all scoring workers stopped");
                 return false;
             }
         }
         Err(e) => {
-            stats.batch_errors.fetch_add(1, Ordering::SeqCst);
-            stats.failed.fetch_add(n, Ordering::SeqCst);
+            stats.reg.server_batch_errors.inc();
+            stats.reg.server_failed.add(n as u64);
             log::warn!("gradient extraction failed for a batch of {n}: {e:#}");
             let resp =
                 error_json(&format!("gradient extraction failed: {e}"), "batch_failed", None)
@@ -507,17 +530,28 @@ fn dispatch_batch<G: GradSource>(
 /// keeps pulling jobs.
 fn score_job(scorer: &mut dyn Scorer, job: Job, k: usize, stats: &ServerStats) {
     let n = job.replies.len();
-    match scorer.score_sink(&job.queries, SinkSpec::TopK(k)) {
+    // the whole store pass runs scoped to THIS server's registry (so
+    // the executor/reader/cache families it publishes land here, not in
+    // the process global) and on a fresh trace track — one span tree
+    // per scored batch, shard lanes nested under it
+    let ctx =
+        TelemetryCtx { registry: Some(Arc::clone(&stats.reg)), trace: TraceCtx::next_query() };
+    let result = telemetry::with_ctx(ctx, || {
+        let mut sp = telemetry::trace::span("server_batch");
+        if let Some(s) = sp.as_mut() {
+            s.arg("batch", n);
+        }
+        scorer.score_sink(&job.queries, SinkSpec::TopK(k))
+    });
+    match result {
         Ok(report) => {
             let topk = report.topk_with_scores(k);
             let latency = job.t0.elapsed().as_secs_f64();
             // counters land BEFORE the replies so a client that probes
-            // `stats` right after its answer sees itself counted
-            stats.cache_hits.fetch_add(report.cache_hits as u64, Ordering::SeqCst);
-            stats.cache_misses.fetch_add(report.cache_misses as u64, Ordering::SeqCst);
-            stats.bytes_from_cache.fetch_add(report.bytes_from_cache, Ordering::SeqCst);
-            stats.bytes_read.fetch_add(report.bytes_read, Ordering::SeqCst);
-            stats.served.fetch_add(n, Ordering::SeqCst);
+            // `stats` right after its answer sees itself counted (the
+            // cache/byte families were published by the pass itself)
+            stats.reg.server_batch_wall.observe_secs(latency);
+            stats.reg.server_served.add(n as u64);
             for (q, reply) in job.replies.iter().enumerate() {
                 let top = &topk[q];
                 let resp = obj([
@@ -539,8 +573,8 @@ fn score_job(scorer: &mut dyn Scorer, job: Job, k: usize, stats: &ServerStats) {
             log::info!("served batch of {n} in {latency:.3}s");
         }
         Err(e) => {
-            stats.batch_errors.fetch_add(1, Ordering::SeqCst);
-            stats.failed.fetch_add(n, Ordering::SeqCst);
+            stats.reg.server_batch_errors.inc();
+            stats.reg.server_failed.add(n as u64);
             log::warn!("scoring failed for a batch of {n}: {e:#}");
             let resp =
                 error_json(&format!("scoring failed: {e}"), "batch_failed", None).to_string();
@@ -650,6 +684,18 @@ fn handle_conn(
                 let _ = writeln!(stream, "{}", stats.snapshot_json(workers));
                 continue;
             }
+            Some("metrics") => {
+                // the full Prometheus exposition of this server's
+                // registry, embedded as one JSON string — the
+                // newline-delimited protocol can't carry raw multi-line
+                // text (a scraping sidecar unescapes `metrics`)
+                let resp = obj([
+                    ("ok", true.into()),
+                    ("metrics", stats.reg.render_prometheus().into()),
+                ]);
+                let _ = writeln!(stream, "{resp}");
+                continue;
+            }
             Some(other) => {
                 let _ = writeln!(
                     stream,
@@ -674,15 +720,20 @@ fn handle_conn(
             return Ok(());
         }
         let (rtx, rrx) = mpsc::channel();
+        // `submitted` counts every validated query reaching admission,
+        // whatever its fate — the reconciliation the concurrent-load
+        // test reads back through the exposition:
+        // served + shed + failed + dropped == submitted
+        stats.reg.server_submitted.inc();
         // count before sending so the depth never underflows; undone on
         // the shed path (the batcher decrements accepted entries)
-        stats.queue_depth.fetch_add(1, Ordering::SeqCst);
+        stats.reg.server_queue_depth.add(1);
         match tx.try_send(Incoming::Query { tokens, reply: rtx, arrived: Instant::now() }) {
             Ok(()) => {}
             Err(mpsc::TrySendError::Full(_)) => {
-                stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
-                stats.shed.fetch_add(1, Ordering::SeqCst);
-                let depth = stats.queue_depth.load(Ordering::SeqCst);
+                stats.reg.server_queue_depth.sub(1);
+                stats.reg.server_shed.inc();
+                let depth = stats.reg.server_queue_depth.get() as usize;
                 let resp = obj([
                     ("error", "server overloaded: admission queue full".into()),
                     ("code", "overloaded".into()),
@@ -692,7 +743,10 @@ fn handle_conn(
                 continue;
             }
             Err(mpsc::TrySendError::Disconnected(_)) => {
-                stats.queue_depth.fetch_sub(1, Ordering::SeqCst);
+                // the queue closed mid-admission: count the query
+                // dropped so `submitted` still reconciles
+                stats.reg.server_queue_depth.sub(1);
+                stats.reg.server_dropped.inc();
                 let _ = writeln!(stream, "{}", error_json("server stopped", "shutdown", None));
                 return Ok(());
             }
@@ -780,18 +834,46 @@ mod tests {
 
     #[test]
     fn stats_snapshot_has_the_documented_fields() {
-        let stats = ServerStats::default();
-        stats.served.store(5, Ordering::SeqCst);
-        stats.cache_hits.store(3, Ordering::SeqCst);
-        stats.cache_misses.store(1, Ordering::SeqCst);
+        let stats = ServerStats::new();
+        stats.reg.server_served.add(5);
+        stats.reg.cache_hits.add(3);
+        stats.reg.cache_misses.add(1);
+        stats.reg.server_batch_wall.observe_secs(0.25);
         let v = stats.snapshot_json(2);
         assert_eq!(v.get("served").and_then(Value::as_usize), Some(5));
         assert_eq!(v.get("workers").and_then(Value::as_usize), Some(2));
         assert!((v.get("cache_hit_rate").and_then(Value::as_f64).unwrap() - 0.75).abs() < 1e-9);
-        for key in
-            ["shed", "failed", "dropped", "batches", "batch_errors", "queue_depth", "bytes_read"]
-        {
+        assert!(v.get("uptime_s").and_then(Value::as_f64).unwrap() >= 0.0);
+        // one 0.25s batch: every percentile reports its bucket bound
+        for p in ["batch_wall_p50_s", "batch_wall_p95_s", "batch_wall_p99_s"] {
+            let x = v.get(p).and_then(Value::as_f64).unwrap();
+            assert!(x >= 0.25 && x < 1.0, "{p} = {x}");
+        }
+        for key in [
+            "submitted",
+            "shed",
+            "failed",
+            "dropped",
+            "batches",
+            "batch_errors",
+            "queue_depth",
+            "bytes_read",
+        ] {
             assert!(v.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn metrics_exposition_from_a_fresh_server_registry_has_all_families() {
+        // what the `{"cmd":"metrics"}` verb serves on a fresh instance:
+        // every family pre-registered, so a scrape before the first
+        // query still sees the full schema at zero
+        let stats = ServerStats::new();
+        let text = stats.reg.render_prometheus();
+        for family in
+            ["lorif_server_submitted_total", "lorif_server_batch_wall_seconds", "lorif_cache_hits_total"]
+        {
+            assert!(text.contains(family), "missing {family}");
         }
     }
 }

@@ -157,6 +157,11 @@ pub struct QueryBounds {
     pub blocks: Vec<Mat>,
     /// per layer, per query: L2 norm of the block row
     norms: Vec<Vec<f32>>,
+    /// bound evaluations performed through this instance — a local
+    /// atomic (shared bounds are read from several shard workers), read
+    /// once per pass by the executor and published into the registry's
+    /// `lorif_prune_bound_evals_total`
+    evals: std::sync::atomic::AtomicU64,
 }
 
 impl QueryBounds {
@@ -175,7 +180,12 @@ impl QueryBounds {
                     .collect()
             })
             .collect();
-        QueryBounds { blocks, norms }
+        QueryBounds { blocks, norms, evals: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    /// Bound evaluations performed so far (see the `evals` field).
+    pub fn evals(&self) -> u64 {
+        self.evals.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Sound upper bound on `Σ_l ⟨t_n^l, y_q^l⟩` over every example `n`
@@ -183,6 +193,7 @@ impl QueryBounds {
     /// NaN (never skippable: `NaN <= t` is false) when the query side
     /// is non-finite.
     pub fn upper_bound(&self, s: &ChunkSummary, q: usize) -> f32 {
+        self.evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if !s.finite {
             return f32::INFINITY;
         }
@@ -248,6 +259,23 @@ impl ChunkPruner<'_> {
             u - self.slack * u.abs()
         }
     }
+}
+
+/// Publish one pass's pruning outcome into a metrics registry: how many
+/// bound evaluations ran and what they bought (chunks/bytes never
+/// read).  The byte count is the same quantity `StreamStats::publish`
+/// feeds `lorif_store_bytes_skipped_total` — mirrored here under the
+/// prune family so the cost/benefit of the sidecar is readable without
+/// joining against the store family.
+pub fn publish_prune_outcome(
+    reg: &crate::telemetry::Registry,
+    bound_evals: u64,
+    chunks_skipped: u64,
+    bytes_skipped: u64,
+) {
+    reg.prune_bound_evals.add(bound_evals);
+    reg.prune_chunks_skipped.add(chunks_skipped);
+    reg.prune_bytes_skipped.add(bytes_skipped);
 }
 
 #[cfg(test)]
@@ -395,6 +423,44 @@ mod tests {
         // +inf deflates to +inf; NaN comparisons are never "skippable"
         assert_eq!(pr.deflate(f32::INFINITY), f32::INFINITY);
         assert!(!(pr.deflate(f32::NAN) <= 1.0e30));
+    }
+
+    #[test]
+    fn bound_evals_are_counted_and_publish_into_the_prune_family() {
+        let mut rng = Rng::new(31);
+        let bounds =
+            QueryBounds::new(vec![crate::linalg::Mat::random_normal(2, 6, 1.0, &mut rng)]);
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: vec![(2, 3)],
+            n_examples: 4,
+            shards: None,
+            summary_chunk: None,
+            codec: crate::store::CodecId::Bf16,
+        };
+        let chunk = Chunk {
+            start: 0,
+            count: 4,
+            layers: vec![ChunkLayer::Dense {
+                g: crate::linalg::Mat::random_normal(4, 6, 1.0, &mut rng),
+            }],
+            encoded: None,
+            io_time: std::time::Duration::ZERO,
+        };
+        let s = summarize_chunk(&meta, &chunk).unwrap();
+        assert_eq!(bounds.evals(), 0);
+        let _ = bounds.upper_bound(&s, 0);
+        let _ = bounds.upper_bound(&s, 1);
+        assert_eq!(bounds.evals(), 2);
+
+        let reg = crate::telemetry::Registry::new();
+        publish_prune_outcome(&reg, bounds.evals(), 3, 4096);
+        assert_eq!(reg.prune_bound_evals.get(), 2);
+        assert_eq!(reg.prune_chunks_skipped.get(), 3);
+        assert_eq!(reg.prune_bytes_skipped.get(), 4096);
     }
 
     #[test]

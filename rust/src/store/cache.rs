@@ -192,13 +192,38 @@ impl ChunkCache {
     /// says which).  Oversized chunks (bigger than the whole budget) are
     /// not cached; insertion never blocks readers for longer than one
     /// CLOCK sweep.
+    ///
+    /// Each insert also publishes its insertion/eviction deltas and the
+    /// post-op residency gauges into the scoped metrics registry
+    /// (`telemetry::current_registry`), outside the ring lock.  Hits
+    /// and misses are NOT published here — they flow through the
+    /// streaming ledger (`StreamStats::publish`) so the registry's
+    /// cache-hit counters stay coherent with its byte counters.  The
+    /// residency gauges assume the usual one-serving-cache-per-scope
+    /// deployment; two caches publishing into one registry would
+    /// interleave last-writer-wins snapshots.
     pub fn insert(&self, key: ChunkKey, chunk: &Arc<Chunk>) {
         let bytes = chunk.resident_bytes();
         if bytes == 0 || bytes > self.capacity {
             return;
         }
-        let mut ring = self.ring.lock().expect("chunk cache lock");
-        ring.insert(key, Arc::clone(chunk), bytes, self.capacity);
+        let (inserted, evicted, resident, entries) = {
+            let mut ring = self.ring.lock().expect("chunk cache lock");
+            let (ins0, ev0) = (ring.insertions, ring.evictions);
+            ring.insert(key, Arc::clone(chunk), bytes, self.capacity);
+            (
+                ring.insertions - ins0,
+                ring.evictions - ev0,
+                ring.bytes,
+                ring.map.len() as u64,
+            )
+        };
+        let reg = crate::telemetry::current_registry();
+        reg.cache_insertions.add(inserted);
+        reg.cache_evictions.add(evicted);
+        reg.cache_resident_bytes.set(resident);
+        reg.cache_capacity_bytes.set(self.capacity);
+        reg.cache_entries.set(entries);
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -380,5 +405,24 @@ mod tests {
         assert!(ChunkCache::from_mb(0).is_none());
         let c = ChunkCache::from_mb(2).unwrap();
         assert_eq!(c.capacity(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn inserts_publish_deltas_and_gauges_into_the_scoped_registry() {
+        let reg = Arc::new(crate::telemetry::Registry::new());
+        crate::telemetry::with_registry(reg.clone(), || {
+            // budget fits exactly 3 of the 128 B chunks
+            let cache = ChunkCache::with_capacity(3 * 128);
+            for i in 0..5 {
+                cache.insert((0, i * 4, 4, false), &chunk(i * 4, 4, 8));
+            }
+            let s = cache.stats();
+            // registry counters mirror the cache's own ledger exactly
+            assert_eq!(reg.cache_insertions.get(), s.insertions);
+            assert_eq!(reg.cache_evictions.get(), s.evictions);
+            assert_eq!(reg.cache_resident_bytes.get(), s.bytes);
+            assert_eq!(reg.cache_capacity_bytes.get(), s.capacity);
+            assert_eq!(reg.cache_entries.get(), s.entries as u64);
+        });
     }
 }

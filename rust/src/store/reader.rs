@@ -417,6 +417,24 @@ impl StreamStats {
         self.cache_misses += other.cache_misses;
         self.bytes_from_cache += other.bytes_from_cache;
     }
+
+    /// Publish this pass's ledger into a metrics registry — the single
+    /// field-to-family mapping, so the registry's
+    /// `lorif_store_bytes_read_total + lorif_store_bytes_skipped_total`
+    /// sums the same full-scan total this struct guarantees (the
+    /// skipped view is mirrored into the prune family by
+    /// `crate::sketch::prune::publish_prune_outcome`).  Called once per
+    /// pass at the executor's aggregation point, never per chunk, so
+    /// the streaming hot path stays free of shared-cacheline traffic.
+    pub fn publish(&self, reg: &crate::telemetry::Registry) {
+        reg.store_bytes_read.add(self.bytes_read);
+        reg.store_bytes_skipped.add(self.bytes_skipped);
+        reg.store_bytes_from_cache.add(self.bytes_from_cache);
+        reg.store_chunks_read.add(self.chunks_read as u64);
+        reg.store_chunks_skipped.add(self.chunks_skipped as u64);
+        reg.cache_hits.add(self.cache_hits as u64);
+        reg.cache_misses.add(self.cache_misses as u64);
+    }
 }
 
 /// See [`StoreReader::chunks`].

@@ -1,0 +1,150 @@
+//! Process-wide observability: the metrics registry, Prometheus text
+//! exposition, and per-query trace spans.  Zero external dependencies.
+//!
+//! Three pieces (see README "Observability" for the operator view):
+//!
+//! - [`registry`]: a lock-free [`Registry`] of atomic counters, gauges,
+//!   and log-bucketed latency histograms that the store reader, chunk
+//!   cache, pruning cursor, executor, worker pool, and server queue all
+//!   publish into.  The existing per-pass structs (`StreamStats`,
+//!   `ScoreReport`, the server `stats` blob) stay the working ledgers;
+//!   they publish their deltas here at aggregation points, so ledger
+//!   invariants like `bytes_read + bytes_skipped == full-scan bytes`
+//!   hold identically when read through the registry (property-tested
+//!   in `tests/prop.rs`).
+//! - Exposition: [`Registry::render_prometheus`], served by the
+//!   `{"cmd":"metrics"}` server verb and the `lorif metrics dump`
+//!   subcommand.
+//! - [`trace`]: Chrome trace-event spans behind `--trace-out <path>`,
+//!   with per-query trace IDs threaded server → engine → executor →
+//!   reader via the thread-local context below.
+//!
+//! # Registry scoping
+//!
+//! Production code publishes into [`current_registry`], which resolves
+//! to the process [`global`] registry unless a scope installed its own
+//! via [`with_registry`].  Two consumers rely on the override: the
+//! attribution server gives each instance a private registry (so
+//! concurrently running servers — e.g. under `cargo test` — expose
+//! coherent counters), and tests hand a fresh registry to a scoring
+//! pass to assert exact ledger equality without cross-test pollution.
+//! [`util::pool::run`](crate::util::pool::run) re-installs the spawning
+//! thread's context inside every worker job, so the override (and the
+//! trace ID) follows the shard fan-out across threads.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use trace::TraceCtx;
+
+use std::cell::RefCell;
+use std::sync::{Arc, OnceLock};
+
+/// The process-wide registry: what `lorif metrics dump` renders and
+/// what every publisher falls back to when no scope override is set.
+pub fn global() -> Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Registry::new())).clone()
+}
+
+/// Thread-local telemetry scope: which registry to publish into and
+/// which query's trace track this thread is working for.
+#[derive(Clone, Default)]
+pub struct TelemetryCtx {
+    pub registry: Option<Arc<Registry>>,
+    pub trace: TraceCtx,
+}
+
+thread_local! {
+    static CTX: RefCell<TelemetryCtx> = RefCell::new(TelemetryCtx::default());
+}
+
+/// Snapshot of the current thread's telemetry scope (cheap: one Arc
+/// clone).  Worker pools capture this before spawning and re-install it
+/// inside each job so scopes survive the thread hop.
+pub fn current_ctx() -> TelemetryCtx {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// The registry the current scope publishes into ([`global`] unless
+/// overridden by [`with_registry`] / [`with_ctx`]).
+pub fn current_registry() -> Arc<Registry> {
+    CTX.with(|c| c.borrow().registry.clone()).unwrap_or_else(global)
+}
+
+/// Run `f` with `ctx` installed as this thread's telemetry scope,
+/// restoring the previous scope afterwards (also on unwind).
+pub fn with_ctx<R>(ctx: TelemetryCtx, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<TelemetryCtx>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            if let Some(prev) = self.0.take() {
+                CTX.with(|c| *c.borrow_mut() = prev);
+            }
+        }
+    }
+    let prev = CTX.with(|c| std::mem::replace(&mut *c.borrow_mut(), ctx));
+    let _restore = Restore(Some(prev));
+    f()
+}
+
+/// Run `f` publishing into `reg` instead of the global registry,
+/// keeping the current trace context.
+pub fn with_registry<R>(reg: Arc<Registry>, f: impl FnOnce() -> R) -> R {
+    let mut ctx = current_ctx();
+    ctx.registry = Some(reg);
+    with_ctx(ctx, f)
+}
+
+/// Run `f` on the given query's trace track, keeping the current
+/// registry override.
+pub fn with_trace<R>(trace: TraceCtx, f: impl FnOnce() -> R) -> R {
+    let mut ctx = current_ctx();
+    ctx.trace = trace;
+    with_ctx(ctx, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_overrides_nest_and_restore() {
+        let a = Arc::new(Registry::new());
+        let b = Arc::new(Registry::new());
+        // default scope: the global registry
+        assert!(Arc::ptr_eq(&current_registry(), &global()));
+        with_registry(a.clone(), || {
+            assert!(Arc::ptr_eq(&current_registry(), &a));
+            with_registry(b.clone(), || {
+                assert!(Arc::ptr_eq(&current_registry(), &b));
+            });
+            // inner scope restored the outer override
+            assert!(Arc::ptr_eq(&current_registry(), &a));
+        });
+        assert!(Arc::ptr_eq(&current_registry(), &global()));
+    }
+
+    #[test]
+    fn scope_restores_on_unwind() {
+        let a = Arc::new(Registry::new());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            with_registry(a.clone(), || panic!("boom"));
+        }));
+        assert!(r.is_err());
+        assert!(Arc::ptr_eq(&current_registry(), &global()));
+    }
+
+    #[test]
+    fn trace_ctx_rides_the_scope() {
+        let t = TraceCtx { id: 42, lane: 0 };
+        with_trace(t, || {
+            assert_eq!(current_ctx().trace.id, 42);
+            with_trace(t.with_lane(5), || {
+                assert_eq!(current_ctx().trace.lane, 5);
+            });
+        });
+        assert_eq!(current_ctx().trace, TraceCtx::default());
+    }
+}

@@ -1,0 +1,587 @@
+//! Lock-free metrics registry: atomic counters, gauges, and log-bucketed
+//! latency histograms, plus Prometheus text exposition of the whole set.
+//!
+//! Every metric family is pre-registered as a plain struct field, so the
+//! hot publish path is a single atomic RMW — no locks, no maps, no
+//! allocation — and exposition always emits every family (with `# HELP`
+//! and `# TYPE` lines) even when a counter is still zero.  That property
+//! is load-bearing: `lorif metrics dump` in a fresh process must still
+//! show the full schema so scrapers and CI greps can rely on the names.
+//!
+//! Naming follows Prometheus conventions: `lorif_` prefix, `_total`
+//! suffix on counters, base units (bytes, seconds) in the name.  Time
+//! counters and histogram samples are stored internally as integer
+//! microseconds (atomics can't add f64s) and rendered as seconds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotone event counter (u64).  Time-valued counters store integer
+/// microseconds via [`Counter::add_secs`] and render as seconds.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Accumulate a duration in seconds (stored as integer microseconds).
+    pub fn add_secs(&self, s: f64) {
+        self.add((s.max(0.0) * 1e6).round() as u64);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// The accumulated value interpreted as seconds (for counters fed
+    /// through [`Counter::add_secs`]).
+    pub fn secs(&self) -> f64 {
+        self.get() as f64 / 1e6
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, resident bytes, ...).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (a racy extra `sub` must not wrap to 2^64).
+    pub fn sub(&self, n: u64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    /// Raise the gauge to `v` if `v` is larger (high-water marks).
+    pub fn max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log-spaced histogram buckets: bucket `i` covers latencies
+/// up to `2^i` microseconds, so 32 buckets span 1µs .. ~36min.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Log-bucketed latency histogram with lock-free `observe` and
+/// p50/p95/p99 accessors.  A quantile is reported as the upper bound of
+/// the bucket it lands in (a ≤2× overestimate by construction), which
+/// is exactly the resolution Prometheus `le` buckets give a scraper.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Smallest bucket index whose upper bound (`2^i` µs) holds `us`.
+fn bucket_index(us: u64) -> usize {
+    if us <= 1 {
+        0
+    } else {
+        ((64 - (us - 1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Upper bound of bucket `i`, in microseconds.
+fn bucket_bound_us(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Render a microsecond quantity as seconds, fixed six decimals so the
+/// exposition text (and its golden test) is deterministic.
+fn fmt_secs(us: u64) -> String {
+    format!("{:.6}", us as f64 / 1e6)
+}
+
+impl Histogram {
+    pub fn observe_secs(&self, s: f64) {
+        let us = (s.max(0.0) * 1e6).round() as u64;
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_dur(&self, d: Duration) {
+        self.observe_secs(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Quantile in seconds: upper bound of the bucket holding the
+    /// `q`-th sample (0 when the histogram is empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_bound_us(i) as f64 / 1e6;
+            }
+        }
+        bucket_bound_us(HIST_BUCKETS - 1) as f64 / 1e6
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// The process-wide metric schema: every family the store reader, chunk
+/// cache, pruning cursor, executor, worker pool, and server queue
+/// publish into.  Plain struct fields keep the publish path lock-free
+/// and make the full schema visible in one place; adding a metric means
+/// adding a field here and a row to the exposition table in
+/// [`Registry::render_prometheus`].
+#[derive(Default)]
+pub struct Registry {
+    // -- store I/O (source: `StreamStats`, see `store::reader`) --
+    pub store_bytes_read: Counter,
+    pub store_bytes_skipped: Counter,
+    pub store_bytes_from_cache: Counter,
+    pub store_chunks_read: Counter,
+    pub store_chunks_skipped: Counter,
+    // -- chunk cache (source: `store::cache::ChunkCache`) --
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub cache_insertions: Counter,
+    pub cache_evictions: Counter,
+    pub cache_resident_bytes: Gauge,
+    pub cache_capacity_bytes: Gauge,
+    pub cache_entries: Gauge,
+    // -- pruning (source: `sketch::prune` bounds + the chunk cursor) --
+    pub prune_bound_evals: Counter,
+    pub prune_chunks_skipped: Counter,
+    pub prune_bytes_skipped: Counter,
+    // -- executor phases (source: `attribution::exec::execute`) --
+    pub exec_passes: Counter,
+    pub exec_load_seconds: Counter,
+    pub exec_compute_seconds: Counter,
+    pub exec_precondition_seconds: Counter,
+    pub exec_peak_sink_elems: Gauge,
+    // -- worker pool (source: `util::pool::run`) --
+    pub pool_jobs: Counter,
+    pub pool_job_errors: Counter,
+    // -- query latency (source: `query::engine::QueryEngine::run`) --
+    pub query_latency: Histogram,
+    // -- server queue (source: `query::server`) --
+    pub server_submitted: Counter,
+    pub server_served: Counter,
+    pub server_shed: Counter,
+    pub server_failed: Counter,
+    pub server_dropped: Counter,
+    pub server_batches: Counter,
+    pub server_batch_errors: Counter,
+    pub server_queue_depth: Gauge,
+    pub server_workers: Gauge,
+    pub server_batch_wall: Histogram,
+}
+
+/// How a registry field renders: plain counter, seconds-valued counter,
+/// gauge, or histogram.
+enum Slot<'a> {
+    C(&'a Counter),
+    S(&'a Counter),
+    G(&'a Gauge),
+    H(&'a Histogram),
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The full exposition table: (metric name, help text, slot).
+    /// Order here is the order families appear in the exposition.
+    fn table(&self) -> Vec<(&'static str, &'static str, Slot<'_>)> {
+        use Slot::*;
+        vec![
+            (
+                "lorif_store_bytes_read_total",
+                "Bytes read from the gradient store (on-disk encoded size).",
+                C(&self.store_bytes_read),
+            ),
+            (
+                "lorif_store_bytes_skipped_total",
+                "Store bytes skipped without reading (pruned chunks, on-disk size).",
+                C(&self.store_bytes_skipped),
+            ),
+            (
+                "lorif_store_bytes_from_cache_total",
+                "Store bytes served from the chunk cache instead of disk.",
+                C(&self.store_bytes_from_cache),
+            ),
+            (
+                "lorif_store_chunks_read_total",
+                "Store chunks read (from disk or cache).",
+                C(&self.store_chunks_read),
+            ),
+            (
+                "lorif_store_chunks_skipped_total",
+                "Store chunks skipped by pruning bounds.",
+                C(&self.store_chunks_skipped),
+            ),
+            (
+                "lorif_cache_hits_total",
+                "Chunk-cache lookups that found the chunk resident.",
+                C(&self.cache_hits),
+            ),
+            (
+                "lorif_cache_misses_total",
+                "Chunk-cache lookups that missed.",
+                C(&self.cache_misses),
+            ),
+            (
+                "lorif_cache_insertions_total",
+                "Chunks inserted into the chunk cache.",
+                C(&self.cache_insertions),
+            ),
+            (
+                "lorif_cache_evictions_total",
+                "Chunks evicted from the chunk cache by the CLOCK sweep.",
+                C(&self.cache_evictions),
+            ),
+            (
+                "lorif_cache_resident_bytes",
+                "Bytes currently resident in the chunk cache.",
+                G(&self.cache_resident_bytes),
+            ),
+            (
+                "lorif_cache_capacity_bytes",
+                "Configured chunk-cache byte budget.",
+                G(&self.cache_capacity_bytes),
+            ),
+            (
+                "lorif_cache_entries",
+                "Chunks currently resident in the chunk cache.",
+                G(&self.cache_entries),
+            ),
+            (
+                "lorif_prune_bound_evals_total",
+                "Per-chunk upper-bound evaluations performed by the pruner.",
+                C(&self.prune_bound_evals),
+            ),
+            (
+                "lorif_prune_chunks_skipped_total",
+                "Chunks the pruner proved could not reach the threshold.",
+                C(&self.prune_chunks_skipped),
+            ),
+            (
+                "lorif_prune_bytes_skipped_total",
+                "On-disk bytes of chunks skipped by the pruner.",
+                C(&self.prune_bytes_skipped),
+            ),
+            (
+                "lorif_exec_passes_total",
+                "Completed executor scoring passes.",
+                C(&self.exec_passes),
+            ),
+            (
+                "lorif_exec_load_seconds_total",
+                "Executor time spent loading/decoding store chunks.",
+                S(&self.exec_load_seconds),
+            ),
+            (
+                "lorif_exec_compute_seconds_total",
+                "Executor time spent in score kernels.",
+                S(&self.exec_compute_seconds),
+            ),
+            (
+                "lorif_exec_precondition_seconds_total",
+                "Executor time spent preconditioning queries.",
+                S(&self.exec_precondition_seconds),
+            ),
+            (
+                "lorif_exec_peak_sink_elems",
+                "High-water mark of score-sink resident elements.",
+                G(&self.exec_peak_sink_elems),
+            ),
+            (
+                "lorif_pool_jobs_total",
+                "Jobs executed by the scoped worker pool.",
+                C(&self.pool_jobs),
+            ),
+            (
+                "lorif_pool_job_errors_total",
+                "Worker-pool jobs that returned an error or panicked.",
+                C(&self.pool_job_errors),
+            ),
+            (
+                "lorif_query_latency_seconds",
+                "Wall time of one engine scoring pass (per query batch).",
+                H(&self.query_latency),
+            ),
+            (
+                "lorif_server_submitted_total",
+                "Query submissions received by the attribution server.",
+                C(&self.server_submitted),
+            ),
+            (
+                "lorif_server_served_total",
+                "Query submissions answered with scores.",
+                C(&self.server_served),
+            ),
+            (
+                "lorif_server_shed_total",
+                "Query submissions shed by admission control (queue full).",
+                C(&self.server_shed),
+            ),
+            (
+                "lorif_server_failed_total",
+                "Query submissions that failed in a scoring batch.",
+                C(&self.server_failed),
+            ),
+            (
+                "lorif_server_dropped_total",
+                "Query submissions dropped at shutdown before scoring.",
+                C(&self.server_dropped),
+            ),
+            (
+                "lorif_server_batches_total",
+                "Scoring batches executed by the server worker pool.",
+                C(&self.server_batches),
+            ),
+            (
+                "lorif_server_batch_errors_total",
+                "Scoring batches that failed outright.",
+                C(&self.server_batch_errors),
+            ),
+            (
+                "lorif_server_queue_depth",
+                "Submissions currently waiting in the admission queue.",
+                G(&self.server_queue_depth),
+            ),
+            (
+                "lorif_server_workers",
+                "Scoring worker threads attached to the server.",
+                G(&self.server_workers),
+            ),
+            (
+                "lorif_server_batch_wall_seconds",
+                "Wall time from batch admission to reply.",
+                H(&self.server_batch_wall),
+            ),
+        ]
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of every family.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, help, slot) in self.table() {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            match slot {
+                Slot::C(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n"));
+                    out.push_str(&format!("{name} {}\n", c.get()));
+                }
+                Slot::S(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n"));
+                    out.push_str(&format!("{name} {}\n", fmt_secs(c.get())));
+                }
+                Slot::G(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n"));
+                    out.push_str(&format!("{name} {}\n", g.get()));
+                }
+                Slot::H(h) => {
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    render_histogram(&mut out, name, h);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Cumulative `_bucket{le=...}` lines up to the highest non-empty
+/// bucket, then `+Inf`, `_sum`, `_count` — the standard histogram
+/// exposition shape.  An empty histogram renders just the `+Inf`
+/// bucket so the family is still present and parseable.
+fn render_histogram(out: &mut String, name: &str, h: &Histogram) {
+    let counts: Vec<u64> =
+        h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+    let last = counts.iter().rposition(|&c| c > 0);
+    let mut cum = 0u64;
+    if let Some(last) = last {
+        for (i, c) in counts.iter().enumerate().take(last + 1) {
+            cum += c;
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                fmt_secs(bucket_bound_us(i))
+            ));
+        }
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum {}\n", fmt_secs(h.sum_us.load(Ordering::Relaxed))));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        c.add_secs(0.5);
+        assert_eq!(c.get(), 42 + 500_000);
+
+        let g = Gauge::default();
+        g.set(7);
+        g.add(3);
+        g.sub(4);
+        assert_eq!(g.get(), 6);
+        g.sub(100); // saturates, never wraps
+        assert_eq!(g.get(), 0);
+        g.max(9);
+        g.max(2);
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        assert_eq!(h.p50(), 0.0); // empty
+        // 98 fast samples at ~1µs, 2 slow at ~1s (2^20us bucket).
+        for _ in 0..98 {
+            h.observe_secs(1e-6);
+        }
+        for _ in 0..2 {
+            h.observe_secs(1.0);
+        }
+        assert_eq!(h.count(), 100);
+        // p50/p95 land in the 1µs bucket; p99 lands in the slow bucket,
+        // whose upper bound is 2^20µs = 1.048576s.
+        assert!((h.p50() - 1e-6).abs() < 1e-12);
+        assert!((h.p95() - 1e-6).abs() < 1e-12);
+        assert!((h.p99() - 1.048576).abs() < 1e-9);
+        assert!((h.sum_secs() - (98.0 * 1e-6 + 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bucket_index_is_smallest_covering_power() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    /// Golden test for the exposition grammar: exact text for a family
+    /// of each type, plus schema-wide invariants (every family emits
+    /// `# HELP` then `# TYPE`, and the required families exist even in
+    /// a fresh registry).
+    #[test]
+    fn golden_exposition_format() {
+        let reg = Registry::new();
+        reg.store_bytes_read.add(4096);
+        reg.server_queue_depth.set(3);
+        reg.query_latency.observe_secs(1e-6);
+        reg.query_latency.observe_secs(3e-6);
+        let text = reg.render_prometheus();
+
+        // counter family, exact shape
+        assert!(text.contains(
+            "# HELP lorif_store_bytes_read_total Bytes read from the gradient store (on-disk encoded size).\n\
+             # TYPE lorif_store_bytes_read_total counter\n\
+             lorif_store_bytes_read_total 4096\n"
+        ));
+        // gauge family, exact shape
+        assert!(text.contains(
+            "# TYPE lorif_server_queue_depth gauge\nlorif_server_queue_depth 3\n"
+        ));
+        // histogram family: cumulative buckets, +Inf, sum, count
+        assert!(text.contains(
+            "# TYPE lorif_query_latency_seconds histogram\n\
+             lorif_query_latency_seconds_bucket{le=\"0.000001\"} 1\n\
+             lorif_query_latency_seconds_bucket{le=\"0.000002\"} 1\n\
+             lorif_query_latency_seconds_bucket{le=\"0.000004\"} 2\n\
+             lorif_query_latency_seconds_bucket{le=\"+Inf\"} 2\n\
+             lorif_query_latency_seconds_sum 0.000004\n\
+             lorif_query_latency_seconds_count 2\n"
+        ));
+
+        // schema-wide: every family present with HELP immediately
+        // followed by TYPE, and seconds counters render as floats
+        for family in [
+            "lorif_store_bytes_skipped_total",
+            "lorif_store_bytes_from_cache_total",
+            "lorif_cache_hits_total",
+            "lorif_prune_chunks_skipped_total",
+            "lorif_exec_load_seconds_total",
+            "lorif_pool_jobs_total",
+            "lorif_server_submitted_total",
+            "lorif_server_batch_wall_seconds",
+        ] {
+            assert!(text.contains(&format!("# HELP {family} ")), "{family} missing HELP");
+            assert!(text.contains(&format!("# TYPE {family} ")), "{family} missing TYPE");
+        }
+        assert!(text.contains("lorif_exec_load_seconds_total 0.000000\n"));
+        let helps = text.lines().filter(|l| l.starts_with("# HELP")).count();
+        let types = text.lines().filter(|l| l.starts_with("# TYPE")).count();
+        assert_eq!(helps, types);
+        assert_eq!(helps, reg.table().len());
+    }
+
+    /// The ledger shape survives a registry round trip: read + skipped
+    /// published separately still sum to the full-scan total.
+    #[test]
+    fn ledger_sums_through_the_registry() {
+        let reg = Registry::new();
+        let full_scan = 1_000_000u64;
+        reg.store_bytes_read.add(300_000);
+        reg.store_bytes_skipped.add(700_000);
+        assert_eq!(
+            reg.store_bytes_read.get() + reg.store_bytes_skipped.get(),
+            full_scan
+        );
+    }
+}

@@ -1,0 +1,267 @@
+//! Hierarchical trace spans emitted as Chrome trace-event JSON
+//! (`catapult` format), viewable in Perfetto / `chrome://tracing`.
+//!
+//! Tracing is off unless `--trace-out <path>` installs the process-wide
+//! writer; with no writer installed, [`span`] returns `None` and the
+//! hot paths pay a single static load.  Each query pass gets a fresh
+//! trace ID ([`TraceCtx::next_query`]) that rides the thread-local
+//! telemetry context (`telemetry::with_ctx`) from the server through
+//! the engine and executor down to per-chunk reads — the worker pool
+//! re-installs the spawning thread's context inside each job, so the
+//! shard fan-out stays attached to its query.
+//!
+//! Events are "complete" spans (`ph:"X"`, begin timestamp + duration in
+//! microseconds) written one JSON object per line after an opening
+//! `[` — the trace-event JSON-array format, which Perfetto accepts
+//! without a closing bracket, so a crashed process still leaves a
+//! loadable trace.  One span tree per query: the track ID (`tid`) is
+//! `trace_id * 4096 + lane`, where lane 0 is the query root and lane
+//! `1 + shard` carries that shard's chunk visits, so a query's fan-out
+//! groups into adjacent tracks.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Per-query trace identity carried in the thread-local telemetry
+/// context: a process-unique query ID plus the lane (track) within
+/// that query's span tree.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub id: u64,
+    pub lane: u32,
+}
+
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+impl TraceCtx {
+    /// Allocate a fresh trace ID for a new query pass (lane 0 = root).
+    pub fn next_query() -> TraceCtx {
+        TraceCtx { id: NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed), lane: 0 }
+    }
+
+    /// The same query on a different track (shard workers use
+    /// `lane = 1 + shard` so each shard's chunk spans nest cleanly).
+    pub fn with_lane(self, lane: u32) -> TraceCtx {
+        TraceCtx { id: self.id, lane }
+    }
+
+    fn tid(self) -> u64 {
+        self.id * 4096 + self.lane as u64
+    }
+}
+
+/// A trace-event sink: one output file plus the monotonic epoch all
+/// event timestamps are relative to.  Instantiable for tests; the
+/// process-wide instance is installed once by [`init`].
+pub struct TraceWriter {
+    out: Mutex<BufWriter<File>>,
+    epoch: Instant,
+}
+
+impl TraceWriter {
+    pub fn create(path: &Path) -> std::io::Result<TraceWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "[")?;
+        out.flush()?;
+        Ok(TraceWriter { out: Mutex::new(out), epoch: Instant::now() })
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// `args` values must already be rendered JSON (numbers, or strings
+    /// via [`Value::Str`]).
+    fn render_args(args: &[(&'static str, String)], ctx: TraceCtx) -> String {
+        let mut a = format!("\"trace_id\":{}", ctx.id);
+        for (k, v) in args {
+            a.push_str(&format!(",{}:{v}", Value::Str((*k).to_string())));
+        }
+        a
+    }
+
+    pub fn complete_event(
+        &self,
+        name: &str,
+        ctx: TraceCtx,
+        start_us: u64,
+        dur_us: u64,
+        args: &[(&'static str, String)],
+    ) {
+        let line = format!(
+            "{{\"name\":{},\"cat\":\"lorif\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{start_us},\"dur\":{dur_us},\"args\":{{{}}}}}",
+            Value::Str(name.to_string()),
+            ctx.tid(),
+            Self::render_args(args, ctx),
+        );
+        self.write_line(&line);
+    }
+
+    /// Thread-scoped instant event (prune skips, cache hits, ...).
+    pub fn instant_event(&self, name: &str, ctx: TraceCtx, args: &[(&'static str, String)]) {
+        let line = format!(
+            "{{\"name\":{},\"cat\":\"lorif\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\"ts\":{},\"args\":{{{}}}}}",
+            Value::Str(name.to_string()),
+            ctx.tid(),
+            self.now_us(),
+            Self::render_args(args, ctx),
+        );
+        self.write_line(&line);
+    }
+
+    fn write_line(&self, line: &str) {
+        // a poisoned writer just means another emitter panicked mid-line;
+        // tracing is diagnostic, so drop the event rather than propagate
+        if let Ok(mut out) = self.out.lock() {
+            let _ = writeln!(out, "{line},");
+            let _ = out.flush();
+        }
+    }
+}
+
+static WRITER: OnceLock<TraceWriter> = OnceLock::new();
+
+/// Install the process-wide trace writer (the `--trace-out` knob).
+/// Idempotent: the first path wins, later calls are no-ops.
+pub fn init(path: &Path) -> std::io::Result<()> {
+    if WRITER.get().is_some() {
+        return Ok(());
+    }
+    let w = TraceWriter::create(path)?;
+    let _ = WRITER.set(w);
+    Ok(())
+}
+
+pub fn enabled() -> bool {
+    WRITER.get().is_some()
+}
+
+/// An in-flight span: emits one complete event on drop.  `None` when
+/// tracing is disabled, so call sites write
+/// `let _sp = trace::span("load");` and pay nothing in the common case.
+pub struct Span {
+    name: &'static str,
+    ctx: TraceCtx,
+    start_us: u64,
+    t0: Instant,
+    args: Vec<(&'static str, String)>,
+}
+
+/// Open a span on the current thread's trace track.
+pub fn span(name: &'static str) -> Option<Span> {
+    let ctx = WRITER.get().map(|_| super::current_ctx().trace)?;
+    span_ctx(name, ctx)
+}
+
+/// Open a span on lane `lane` of the current query's track group —
+/// shard workers use `lane = 1 + shard` so each shard's chunk visits
+/// render on their own Perfetto track.
+pub fn span_on(name: &'static str, lane: u32) -> Option<Span> {
+    let ctx = WRITER.get().map(|_| super::current_ctx().trace.with_lane(lane))?;
+    span_ctx(name, ctx)
+}
+
+fn span_ctx(name: &'static str, ctx: TraceCtx) -> Option<Span> {
+    let w = WRITER.get()?;
+    Some(Span { name, ctx, start_us: w.now_us(), t0: Instant::now(), args: Vec::new() })
+}
+
+impl Span {
+    /// Attach a numeric argument (rendered as a bare JSON number).
+    pub fn arg<T: std::fmt::Display>(&mut self, key: &'static str, value: T) {
+        self.args.push((key, value.to_string()));
+    }
+
+    /// Attach a string argument (JSON-escaped).
+    pub fn arg_str(&mut self, key: &'static str, value: &str) {
+        self.args.push((key, Value::Str(value.to_string()).to_string()));
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(w) = WRITER.get() {
+            let dur = self.t0.elapsed().as_micros() as u64;
+            w.complete_event(self.name, self.ctx, self.start_us, dur, &self.args);
+        }
+    }
+}
+
+/// Emit an instant event on the current thread's trace track.
+pub fn instant(name: &'static str, args: &[(&'static str, String)]) {
+    if let Some(w) = WRITER.get() {
+        w.instant_event(name, super::current_ctx().trace, args);
+    }
+}
+
+/// Emit an instant event on lane `lane` of the current query's track
+/// group (see [`span_on`]).
+pub fn instant_on(name: &'static str, lane: u32, args: &[(&'static str, String)]) {
+    if let Some(w) = WRITER.get() {
+        w.instant_event(name, super::current_ctx().trace.with_lane(lane), args);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every line after the opening `[` must parse as a standalone JSON
+    /// object (modulo the trailing comma) with the trace-event fields —
+    /// that is exactly what Perfetto's tolerant array reader consumes.
+    #[test]
+    fn trace_file_lines_are_valid_trace_events() {
+        let dir = std::env::temp_dir().join(format!("lorif-trace-test-{}", std::process::id()));
+        let path = dir.join("trace.json");
+        let w = TraceWriter::create(&path).unwrap();
+        let ctx = TraceCtx { id: 7, lane: 0 };
+        w.complete_event("query", ctx, 10, 25, &[("bytes", "4096".to_string())]);
+        w.instant_event("prune_skip", ctx.with_lane(2), &[]);
+        drop(w);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some("["));
+        let events: Vec<Value> = lines
+            .map(|l| Value::parse(l.trim_end_matches(',')).expect("event line parses"))
+            .collect();
+        assert_eq!(events.len(), 2);
+        let q = &events[0];
+        assert_eq!(q.get("name").and_then(Value::as_str), Some("query"));
+        assert_eq!(q.get("ph").and_then(Value::as_str), Some("X"));
+        assert_eq!(q.get("ts").and_then(Value::as_f64), Some(10.0));
+        assert_eq!(q.get("dur").and_then(Value::as_f64), Some(25.0));
+        assert_eq!(q.get("tid").and_then(Value::as_f64), Some((7 * 4096) as f64));
+        assert_eq!(
+            q.get("args").and_then(|a| a.get("trace_id")).and_then(Value::as_f64),
+            Some(7.0)
+        );
+        assert_eq!(
+            q.get("args").and_then(|a| a.get("bytes")).and_then(Value::as_f64),
+            Some(4096.0)
+        );
+        let i = &events[1];
+        assert_eq!(i.get("ph").and_then(Value::as_str), Some("i"));
+        assert_eq!(i.get("tid").and_then(Value::as_f64), Some((7 * 4096 + 2) as f64));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_lanes_offset_the_track() {
+        let a = TraceCtx::next_query();
+        let b = TraceCtx::next_query();
+        assert_ne!(a.id, b.id);
+        assert_eq!(a.with_lane(3).tid(), a.id * 4096 + 3);
+    }
+}

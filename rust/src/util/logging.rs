@@ -1,8 +1,11 @@
 //! Tiny stderr logger wired to the `log` facade.
 //!
-//! Level comes from `LORIF_LOG` (error|warn|info|debug|trace, default
-//! info).  Timestamps are monotonic seconds since logger init — good
-//! enough for correlating pipeline stages in experiment logs.
+//! Level comes from `LORIF_LOG` (off|error|warn|info|debug|trace,
+//! default info).  An unrecognized value falls back to `info` with a
+//! one-line stderr warning naming the bad value — a typo'd `LORIF_LOG`
+//! must not silently change what gets logged.  Timestamps are monotonic
+//! seconds since logger init — good enough for correlating pipeline
+//! stages in experiment logs.
 
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -33,17 +36,38 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Resolve a `LORIF_LOG` value (`None` = unset) to a level filter.
+/// Returns the filter plus, for an unrecognized value, the warning line
+/// to print — split out so both outcomes are unit-testable without
+/// touching process environment or the global logger.
+fn parse_level(raw: Option<&str>) -> (log::LevelFilter, Option<String>) {
+    match raw {
+        None => (log::LevelFilter::Info, None),
+        Some("off") => (log::LevelFilter::Off, None),
+        Some("error") => (log::LevelFilter::Error, None),
+        Some("warn") => (log::LevelFilter::Warn, None),
+        Some("info") => (log::LevelFilter::Info, None),
+        Some("debug") => (log::LevelFilter::Debug, None),
+        Some("trace") => (log::LevelFilter::Trace, None),
+        Some(other) => (
+            log::LevelFilter::Info,
+            Some(format!(
+                "lorif: unknown LORIF_LOG level {other:?} — falling back to \"info\" \
+                 (expected off|error|warn|info|debug|trace)"
+            )),
+        ),
+    }
+}
+
 static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
 /// Install the logger (idempotent).
 pub fn init() {
-    let level = match std::env::var("LORIF_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
-    };
+    let raw = std::env::var("LORIF_LOG").ok();
+    let (level, warning) = parse_level(raw.as_deref());
+    if let Some(w) = warning {
+        eprintln!("{w}");
+    }
     let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
     // set_logger fails if already set (e.g. by a second init call) — fine.
     let _ = log::set_logger(logger);
@@ -52,10 +76,38 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke");
+    }
+
+    #[test]
+    fn known_levels_parse_without_warning() {
+        for (raw, want) in [
+            (None, log::LevelFilter::Info),
+            (Some("off"), log::LevelFilter::Off),
+            (Some("error"), log::LevelFilter::Error),
+            (Some("warn"), log::LevelFilter::Warn),
+            (Some("info"), log::LevelFilter::Info),
+            (Some("debug"), log::LevelFilter::Debug),
+            (Some("trace"), log::LevelFilter::Trace),
+        ] {
+            let (level, warning) = parse_level(raw);
+            assert_eq!(level, want, "{raw:?}");
+            assert!(warning.is_none(), "{raw:?} should not warn");
+        }
+    }
+
+    #[test]
+    fn unknown_level_warns_naming_the_value_and_falls_back_to_info() {
+        let (level, warning) = parse_level(Some("verbose"));
+        assert_eq!(level, log::LevelFilter::Info);
+        let w = warning.expect("unknown level must produce a warning");
+        assert!(w.contains("\"verbose\""), "{w}");
+        assert!(w.contains("LORIF_LOG"), "{w}");
     }
 }

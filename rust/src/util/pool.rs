@@ -47,8 +47,25 @@ where
         return Ok(Vec::new());
     }
     let workers = effective_threads(threads).min(jobs);
+    // Capture the caller's telemetry scope (registry override + trace
+    // track) and re-install it inside every job, so a query's metrics
+    // and trace spans follow the fan-out across worker threads.
+    let ctx = crate::telemetry::current_ctx();
+    let reg = ctx.registry.clone().unwrap_or_else(crate::telemetry::global);
+    let tracked = |i: usize| {
+        reg.pool_jobs.inc();
+        crate::telemetry::with_ctx(ctx.clone(), || f(i))
+    };
     if workers <= 1 {
-        return (0..jobs).map(&f).collect();
+        return (0..jobs)
+            .map(|i| {
+                let r = tracked(i);
+                if r.is_err() {
+                    reg.pool_job_errors.inc();
+                }
+                r
+            })
+            .collect();
     }
     let next = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
@@ -64,7 +81,7 @@ where
                 if i >= jobs {
                     break;
                 }
-                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| tracked(i)))
                     .unwrap_or_else(|payload| {
                         Err(anyhow::anyhow!(
                             "worker job {i} panicked: {}",
@@ -72,6 +89,7 @@ where
                         ))
                     });
                 if out.is_err() {
+                    reg.pool_job_errors.inc();
                     failed.store(true, Ordering::Relaxed);
                 }
                 // a poisoned slot just means some other access panicked
@@ -165,5 +183,28 @@ mod tests {
     fn effective_threads_resolves_auto() {
         assert!(effective_threads(0) >= 1);
         assert_eq!(effective_threads(7), 7);
+    }
+
+    #[test]
+    fn telemetry_scope_propagates_into_workers() {
+        use std::sync::Arc;
+        let reg = Arc::new(crate::telemetry::Registry::new());
+        let out = crate::telemetry::with_registry(reg.clone(), || {
+            run(4, 20, |i| {
+                // each worker job must see the caller's registry override
+                let seen = crate::telemetry::current_registry();
+                anyhow::ensure!(Arc::ptr_eq(&seen, &reg), "scope lost in worker");
+                if i == 13 {
+                    anyhow::bail!("planned failure");
+                }
+                Ok(i)
+            })
+        });
+        assert!(out.is_err());
+        // every claimed job was counted into the injected registry, and
+        // exactly one error (later claims stop after the failure)
+        let jobs = reg.pool_jobs.get();
+        assert!(jobs >= 1 && jobs <= 20, "{jobs}");
+        assert_eq!(reg.pool_job_errors.get(), 1);
     }
 }

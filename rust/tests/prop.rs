@@ -2297,3 +2297,156 @@ fn prop_codec_quant_scoring_equals_decode_then_score() {
         }
     });
 }
+
+#[test]
+fn prop_registry_counters_match_the_score_report_ledger_bit_for_bit() {
+    // The telemetry registry is DERIVED from the per-pass ledgers: a
+    // scoring pass run under `telemetry::with_registry` must publish
+    // byte/cache counters into the scoped registry that equal the
+    // pass's own ScoreReport fields exactly — across full, pruned,
+    // cached, and quantized passes, at any thread count (the worker
+    // pool re-installs the scope inside each shard job).  The ledger
+    // invariant survives the indirection: registry bytes_read +
+    // bytes_skipped of a pruned pass == the full pass's bytes_read.
+    use lorif::attribution::graddot::GradDotScorer;
+    use lorif::attribution::{QueryGrads, QueryLayer, Scorer, SinkSpec};
+    use lorif::sketch::PruneMode;
+    use lorif::store::{
+        recode_store, ChunkCache, CodecId, QuantScore, RecodeOptions,
+    };
+    use lorif::telemetry::{with_registry, Registry};
+    use std::sync::Arc;
+
+    for_each_case("registry-ledger", |seed, rng| {
+        let n_layers = 1 + rng.below(2);
+        let dims: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| (3 + rng.below(3), 3 + rng.below(3))).collect();
+        let grid = 3 + rng.below(5);
+        let n = 4 * grid + rng.below(3 * grid);
+        let nq = 1 + rng.below(3);
+        let shards = 2 + rng.below(3);
+        let k = 1 + rng.below(4);
+        let threads = 1 + rng.below(3);
+
+        // clustered records (strong first chunk) so pruning really skips
+        let data: Vec<LayerGrads> = dims
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(n, d1 * d2);
+                for t in 0..n {
+                    let scale = if t < grid { 4.0 } else { 0.02 };
+                    for x in g.row_mut(t) {
+                        *x = scale * (1.0 + 0.1 * rng.normal() as f32);
+                    }
+                }
+                LayerGrads { g, u: Mat::zeros(n, d1), v: Mat::zeros(n, d2) }
+            })
+            .collect();
+        let meta = StoreMeta {
+            kind: StoreKind::Dense,
+            tier: "small".into(),
+            f: 4,
+            c: 1,
+            layers: dims.clone(),
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Bf16,
+        };
+        let base = prop_tmp_base("registry_ledger", seed);
+        let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+        w.set_summary_chunk(grid).unwrap();
+        append_in_batches(&data, n, &mut Rng::labeled(seed, "rb"), |b| w.append(b).unwrap());
+        w.finalize().unwrap();
+
+        let qlayers: Vec<QueryLayer> = dims
+            .iter()
+            .map(|&(d1, d2)| {
+                let mut g = Mat::zeros(nq, d1 * d2);
+                for x in g.data.iter_mut() {
+                    *x = 1.0 + 0.1 * rng.normal() as f32;
+                }
+                QueryLayer { g, u: Mat::zeros(nq, d1), v: Mat::zeros(nq, d2) }
+            })
+            .collect();
+        let qg = QueryGrads { n_query: nq, c: 1, proj_dims: dims.clone(), layers: qlayers };
+
+        // run one pass against a FRESH registry; check every counter the
+        // report also carries for exact equality
+        let scoped = |scorer: &mut dyn Scorer, sink: Option<usize>| {
+            let reg = Arc::new(Registry::new());
+            let report = with_registry(Arc::clone(&reg), || match sink {
+                Some(k) => scorer.score_sink(&qg, SinkSpec::TopK(k)),
+                None => scorer.score(&qg),
+            })
+            .unwrap();
+            assert_eq!(reg.exec_passes.get(), 1, "seed {seed}: one pass, one publication");
+            assert_eq!(reg.store_bytes_read.get(), report.bytes_read, "seed {seed}");
+            assert_eq!(reg.store_bytes_skipped.get(), report.bytes_skipped, "seed {seed}");
+            assert_eq!(
+                reg.store_bytes_from_cache.get(),
+                report.bytes_from_cache,
+                "seed {seed}"
+            );
+            assert_eq!(reg.cache_hits.get(), report.cache_hits as u64, "seed {seed}");
+            assert_eq!(reg.cache_misses.get(), report.cache_misses as u64, "seed {seed}");
+            assert_eq!(
+                reg.prune_bytes_skipped.get(),
+                report.bytes_skipped,
+                "seed {seed}: prune family mirrors the skip ledger"
+            );
+            (report, reg)
+        };
+
+        let open = || ShardSet::open(&base).unwrap();
+
+        // full pass: everything read, nothing skipped
+        let mut gd = GradDotScorer::new(open());
+        gd.score_threads = threads;
+        let (full, full_reg) = scoped(&mut gd, None);
+        assert_eq!(full.bytes_skipped, 0, "seed {seed}: full pass skips nothing");
+
+        // pruned top-k pass: the registry preserves the byte ledger
+        let mut gd = GradDotScorer::new(open());
+        gd.score_threads = threads;
+        gd.prune = PruneMode::Exact;
+        let (_, pruned_reg) = scoped(&mut gd, Some(k));
+        assert_eq!(
+            pruned_reg.store_bytes_read.get() + pruned_reg.store_bytes_skipped.get(),
+            full_reg.store_bytes_read.get(),
+            "seed {seed}: bytes_read + bytes_skipped must equal the full-scan bytes \
+             when read entirely through the registry"
+        );
+
+        // cached passes: hits/insertions surface in the scoped registry
+        let mut warm_set = open();
+        warm_set.set_cache(Some(ChunkCache::with_capacity(32 << 20)));
+        let mut warm = GradDotScorer::new(warm_set);
+        warm.score_threads = threads;
+        let (cold, cold_reg) = scoped(&mut warm, None);
+        assert_eq!(cold.cache_hits, 0, "seed {seed}: first pass is cold");
+        assert!(cold_reg.cache_insertions.get() > 0, "seed {seed}: cold pass fills the cache");
+        let (hot, hot_reg) = scoped(&mut warm, None);
+        assert!(hot.cache_hits > 0, "seed {seed}: second pass hits");
+        assert_eq!(hot_reg.cache_misses.get(), 0, "seed {seed}");
+        assert_eq!(
+            hot_reg.store_bytes_from_cache.get(),
+            hot_reg.store_bytes_read.get(),
+            "seed {seed}: a fully warm pass reads only from the cache"
+        );
+
+        // quantized-domain pass on an int8 recode of the same store
+        let q8 = prop_tmp_base("registry_ledger_int8", seed);
+        recode_store(
+            &base,
+            &q8,
+            &RecodeOptions { codec: Some(CodecId::Int8), ..Default::default() },
+        )
+        .unwrap();
+        let mut qs = GradDotScorer::new(ShardSet::open(&q8).unwrap());
+        qs.score_threads = threads;
+        qs.quant = QuantScore::On;
+        let (quant, _) = scoped(&mut qs, Some(k));
+        assert!(quant.bytes_read > 0, "seed {seed}: quant pass streamed the store");
+    });
+}

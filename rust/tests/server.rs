@@ -382,6 +382,95 @@ fn stats_endpoint_reports_counters_and_cache_hit_rate() {
     finish(r);
 }
 
+/// One sample value from a Prometheus text exposition (plain counter /
+/// gauge lines, not `_bucket` series).
+fn metric_value(text: &str, name: &str) -> u64 {
+    let prefix = format!("{name} ");
+    let line = text
+        .lines()
+        .find(|l| l.starts_with(&prefix))
+        .unwrap_or_else(|| panic!("exposition missing sample for {name}"));
+    line[prefix.len()..].trim().parse::<f64>().expect("numeric sample") as u64
+}
+
+#[test]
+fn metrics_exposition_reconciles_under_concurrent_load() {
+    // a small queue + slow extraction so a concurrent burst takes every
+    // path: served, and usually some shed; the registry must reconcile
+    // exactly whatever mix happens
+    let r = start_server(
+        "metrics_load",
+        |c| {
+            c.max_batch = 2;
+            c.window_ms = 2;
+            c.queue_cap = 2;
+        },
+        10,
+    );
+    let addr = r.addr;
+    let clients = stress_clients().max(8);
+    let barrier = Arc::new(std::sync::Barrier::new(clients));
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let v = request(addr, &format!("{{\"tokens\": [{}, {}]}}", c % 8, (c + 1) % 8));
+                assert!(
+                    v.get("topk").is_some() || code_of(&v) == Some("overloaded"),
+                    "unexpected reply {v}"
+                );
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // scrape the Prometheus exposition over the wire: it rides the
+    // line protocol as one JSON string
+    let m = request(addr, "{\"cmd\": \"metrics\"}");
+    assert_eq!(m.get("ok").and_then(Value::as_bool), Some(true), "{m}");
+    let text = m.get("metrics").and_then(Value::as_str).unwrap().to_string();
+    assert!(
+        text.contains("# TYPE lorif_server_submitted_total counter"),
+        "exposition lost its TYPE lines"
+    );
+
+    // every submitted query landed in exactly one outcome bucket —
+    // asserted through the exposition, not the internal structs
+    let submitted = metric_value(&text, "lorif_server_submitted_total");
+    let served = metric_value(&text, "lorif_server_served_total");
+    let shed = metric_value(&text, "lorif_server_shed_total");
+    let failed = metric_value(&text, "lorif_server_failed_total");
+    let dropped = metric_value(&text, "lorif_server_dropped_total");
+    assert_eq!(submitted, clients as u64, "each client submitted exactly one query");
+    assert_eq!(
+        served + shed + failed + dropped,
+        submitted,
+        "outcome counters must reconcile: {served} + {shed} + {failed} + {dropped} != {submitted}"
+    );
+    assert_eq!(metric_value(&text, "lorif_server_queue_depth"), 0, "queue drained");
+    assert!(served >= 1, "at least one query scored");
+    // the scoring passes published the store families into THIS
+    // server's registry (the with_ctx scoping the workers run under)
+    assert!(metric_value(&text, "lorif_store_bytes_read_total") > 0, "store pass published");
+    assert!(metric_value(&text, "lorif_server_batch_wall_seconds_count") >= 1);
+
+    // the stats verb derives from the same registry — the two views
+    // cannot disagree
+    let stats = request(addr, "{\"cmd\": \"stats\"}");
+    assert_eq!(stats.get("submitted").and_then(Value::as_usize), Some(submitted as usize));
+    assert_eq!(stats.get("served").and_then(Value::as_usize), Some(served as usize));
+    assert!(stats.get("uptime_s").and_then(Value::as_f64).unwrap() > 0.0);
+    let p95 = stats.get("batch_wall_p95_s").and_then(Value::as_f64).unwrap();
+    assert!(p95 > 0.0, "batch wall percentiles populated: {stats}");
+
+    let summary = finish(r);
+    assert_eq!(summary.served as u64, served, "summary is the registry's view");
+    assert_eq!(summary.shed as u64, shed);
+}
+
 #[test]
 fn cached_and_cold_replies_are_bit_identical() {
     // same request against a cache-backed pool and a cold pool: the
