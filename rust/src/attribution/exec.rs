@@ -121,6 +121,16 @@ pub trait ChunkKernel: Sync {
         let _ = (s, q);
         None
     }
+
+    /// Bound evaluations performed since `precondition` — kernels that
+    /// answer `upper_bound` from a `sketch::QueryBounds` report its
+    /// counter; the default (kernels that opt out of pruning) is 0.
+    /// The executor publishes this as `lorif_prune_bound_evals_total`,
+    /// so the metric reflects the evaluations that actually happened
+    /// rather than a derived chunks × queries estimate.
+    fn bound_evals(&self) -> u64 {
+        0
+    }
 }
 
 /// Where a scorer pass puts its scores.  Implementations consume
@@ -264,8 +274,6 @@ struct ShardRun<S> {
     stats: StreamStats,
     /// peak score elements the sink held during this shard's pass
     peak: usize,
-    /// pruning bound evaluations this shard performed (0 unpruned)
-    bound_evals: u64,
 }
 
 /// Publish one completed pass into the scoped metrics registry
@@ -318,6 +326,12 @@ pub fn execute<K: ChunkKernel>(
     );
     let n = set.meta.n_examples;
     let nq = queries.n_query;
+    // seed the cache residency gauges into the scoped registry up front:
+    // a configured but still-cold cache must scrape with its real
+    // capacity, not wait for the first insert to publish it
+    if let Some(cache) = set.cache() {
+        cache.publish_gauges(&crate::telemetry::current_registry());
+    }
     let mut timer = PhaseTimer::new();
     timer.time("precondition", || {
         let _sp = crate::telemetry::trace::span("precondition");
@@ -356,7 +370,11 @@ pub fn execute<K: ChunkKernel>(
                 FullMatrixSink::new(nq, r.start, r.count)
             })?;
             let peak: usize = runs.iter().map(|r| r.peak).sum();
-            let bound_evals: u64 = runs.iter().map(|r| r.bound_evals).sum();
+            // read back from the kernel's own counter (incremented inside
+            // `upper_bound`) so the published metric cannot diverge from
+            // the evaluations that actually ran; 0 here — a full-matrix
+            // sink never prunes
+            let bound_evals = kernel.bound_evals();
             let mut agg = StreamStats::default();
             let parts: Vec<ShardScores> = runs
                 .into_iter()
@@ -426,16 +444,19 @@ pub fn execute<K: ChunkKernel>(
             let mut compute = Duration::ZERO;
             let mut agg = StreamStats::default();
             let mut peak = 0usize;
-            let mut bound_evals = 0u64;
             let mut shard_heaps = Vec::with_capacity(runs.len());
             for r in runs {
                 io += r.io;
                 compute += r.compute;
                 agg.merge(&r.stats);
                 peak += r.peak;
-                bound_evals += r.bound_evals;
                 shard_heaps.push(r.sink.heaps);
             }
+            // the kernel's `QueryBounds` counter is the single source of
+            // truth for bound evaluations: it covers the eligibility
+            // probe above plus every per-(chunk, query) bound the shard
+            // workers computed while building their visit orders
+            let bound_evals = kernel.bound_evals();
             let heaps = parallel::merge_topk(nq, k, shard_heaps);
             timer.add("load", io);
             timer.add("compute", compute);
@@ -645,17 +666,14 @@ where
                 }
             }
             let stats = cur.stats().clone();
-            // each chunk's bound was evaluated once per query when the
-            // visit order was built
-            let bound_evals = (chunks.len() * nq) as u64;
-            Ok(ShardRun { sink, io: cur.io_time(), compute, stats, peak, bound_evals })
+            Ok(ShardRun { sink, io: cur.io_time(), compute, stats, peak })
         } else {
             let (io, stats) = reader.stream(opts.chunk_size, prefetch, |chunk| {
                 compute += score_one(chunk, &mut sink, &mut block, &mut scratch)?;
                 peak = peak.max(sink.allocated_elems());
                 Ok(())
             })?;
-            Ok(ShardRun { sink, io, compute, stats, peak, bound_evals: 0 })
+            Ok(ShardRun { sink, io, compute, stats, peak })
         }
     })
 }

@@ -120,6 +120,10 @@ impl ChunkKernel for GradDotKernel {
     fn upper_bound(&self, s: &ChunkSummary, q: usize) -> Option<f32> {
         self.bounds.as_ref().map(|b| b.upper_bound(s, q))
     }
+
+    fn bound_evals(&self) -> u64 {
+        self.bounds.as_ref().map_or(0, |b| b.evals())
+    }
 }
 
 impl Scorer for GradDotScorer {

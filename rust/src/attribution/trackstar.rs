@@ -174,6 +174,10 @@ impl ChunkKernel for TrackStarKernel<'_> {
             u / s.max_norm.max(1e-12)
         })
     }
+
+    fn bound_evals(&self) -> u64 {
+        self.bounds.as_ref().map_or(0, |b| b.evals())
+    }
 }
 
 impl Scorer for TrackStarScorer {

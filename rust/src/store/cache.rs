@@ -226,6 +226,21 @@ impl ChunkCache {
         reg.cache_entries.set(entries);
     }
 
+    /// Publish the residency gauges (capacity, resident bytes, entries)
+    /// into `reg`.  The executor calls this at pass start so a
+    /// configured but not-yet-populated cache scrapes with its real
+    /// capacity instead of 0 — without it the gauges would only appear
+    /// as a side effect of the first insert.
+    pub fn publish_gauges(&self, reg: &crate::telemetry::Registry) {
+        let (bytes, entries) = {
+            let ring = self.ring.lock().expect("chunk cache lock");
+            (ring.bytes, ring.map.len() as u64)
+        };
+        reg.cache_capacity_bytes.set(self.capacity);
+        reg.cache_resident_bytes.set(bytes);
+        reg.cache_entries.set(entries);
+    }
+
     pub fn stats(&self) -> CacheStats {
         let ring = self.ring.lock().expect("chunk cache lock");
         CacheStats {
@@ -405,6 +420,23 @@ mod tests {
         assert!(ChunkCache::from_mb(0).is_none());
         let c = ChunkCache::from_mb(2).unwrap();
         assert_eq!(c.capacity(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn publish_gauges_seeds_capacity_for_a_cold_cache() {
+        // a configured but never-inserted cache must scrape with its
+        // real capacity, not 0 (gauges used to appear only on insert)
+        let reg = crate::telemetry::Registry::new();
+        let cache = ChunkCache::with_capacity(3 * 128);
+        cache.publish_gauges(&reg);
+        assert_eq!(reg.cache_capacity_bytes.get(), 3 * 128);
+        assert_eq!(reg.cache_resident_bytes.get(), 0);
+        assert_eq!(reg.cache_entries.get(), 0);
+        // and after population it reports the live residency
+        cache.insert((0, 0, 4, false), &chunk(0, 4, 8));
+        cache.publish_gauges(&reg);
+        assert_eq!(reg.cache_resident_bytes.get(), 128);
+        assert_eq!(reg.cache_entries.get(), 1);
     }
 
     #[test]

@@ -295,34 +295,41 @@ impl StoreReader {
         let cache = self.cache.clone();
         let shard = self.shard;
         let encoded = self.encoded;
+        // Carry the caller's telemetry scope (registry override + trace
+        // context) across the thread boundary, mirroring util::pool::run:
+        // fetch_chunk publishes cache metrics via current_registry(), which
+        // would otherwise resolve to the process-global registry here.
+        let ctx = crate::telemetry::current_ctx();
         let handle = std::thread::spawn(move || {
-            let run = || -> anyhow::Result<()> {
-                let mut file = std::fs::File::open(&path)?;
-                let mut start = 0usize;
-                let mut raw = Vec::new();
-                while start < n {
-                    let count = chunk_size.min(n - start);
-                    let key = (shard, global_off + start, count, encoded);
-                    let msg = fetch_chunk(
-                        &meta,
-                        cache.as_ref(),
-                        key,
-                        &mut file,
-                        &mut raw,
-                        global_off + start,
-                        count * stride,
-                        encoded,
-                    )?;
-                    if tx.send(Ok(msg)).is_err() {
-                        return Ok(()); // consumer hung up
+            crate::telemetry::with_ctx(ctx, move || {
+                let run = || -> anyhow::Result<()> {
+                    let mut file = std::fs::File::open(&path)?;
+                    let mut start = 0usize;
+                    let mut raw = Vec::new();
+                    while start < n {
+                        let count = chunk_size.min(n - start);
+                        let key = (shard, global_off + start, count, encoded);
+                        let msg = fetch_chunk(
+                            &meta,
+                            cache.as_ref(),
+                            key,
+                            &mut file,
+                            &mut raw,
+                            global_off + start,
+                            count * stride,
+                            encoded,
+                        )?;
+                        if tx.send(Ok(msg)).is_err() {
+                            return Ok(()); // consumer hung up
+                        }
+                        start += count;
                     }
-                    start += count;
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    let _ = tx.send(Err(e));
                 }
-                Ok(())
-            };
-            if let Err(e) = run() {
-                let _ = tx.send(Err(e));
-            }
+            })
         });
 
         let mut io_total = Duration::ZERO;

@@ -63,15 +63,19 @@ static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
 /// Install the logger (idempotent).
 pub fn init() {
-    let raw = std::env::var("LORIF_LOG").ok();
-    let (level, warning) = parse_level(raw.as_deref());
-    if let Some(w) = warning {
-        eprintln!("{w}");
-    }
-    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
+    // parse (and warn about a bad LORIF_LOG) only on the first init:
+    // later calls must not re-print the warning line
+    let logger = LOGGER.get_or_init(|| {
+        let raw = std::env::var("LORIF_LOG").ok();
+        let (level, warning) = parse_level(raw.as_deref());
+        if let Some(w) = warning {
+            eprintln!("{w}");
+        }
+        StderrLogger { start: Instant::now(), level }
+    });
     // set_logger fails if already set (e.g. by a second init call) — fine.
     let _ = log::set_logger(logger);
-    log::set_max_level(level);
+    log::set_max_level(logger.level);
 }
 
 #[cfg(test)]
