@@ -96,6 +96,21 @@ pub fn build_store_scorer_pool(
     method: Method,
     workers: usize,
 ) -> anyhow::Result<Vec<Box<dyn Scorer + Send>>> {
+    build_store_scorer_pool_subset(p, method, workers, None)
+}
+
+/// Like [`build_store_scorer_pool`], but opening only `subset` of the
+/// store's manifest shards (shard-node serving mode).  Scores stay in
+/// GLOBAL example coordinates — subset spans keep their manifest
+/// offsets — so a coordinator can merge heaps from disjoint nodes
+/// without any index translation.
+#[cfg(feature = "xla")]
+pub fn build_store_scorer_pool_subset(
+    p: &Pipeline,
+    method: Method,
+    workers: usize,
+    subset: Option<&[usize]>,
+) -> anyhow::Result<Vec<Box<dyn Scorer + Send>>> {
     use std::sync::Arc;
 
     let workers = workers.max(1);
@@ -110,7 +125,7 @@ pub fn build_store_scorer_pool(
             anyhow::bail!("use build_repsim_scorer / build_ekfac_scorer for {method:?}")
         }
     };
-    let mut set = ShardSet::open(&base)?;
+    let mut set = ShardSet::open_subset(&base, subset)?;
     if let Some(cache) = crate::store::ChunkCache::from_mb(p.cfg.chunk_cache_mb) {
         set.set_cache(Some(cache));
     }

@@ -14,7 +14,8 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const SWITCHES: &[&str] = &["help", "verbose", "cached-projections", "no-prefetch", "full"];
+const SWITCHES: &[&str] =
+    &["help", "verbose", "cached-projections", "no-prefetch", "full", "coordinator", "node"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
@@ -157,6 +158,18 @@ mod tests {
         assert!((a.get_f32("train-lr").unwrap().unwrap() - 0.003).abs() < 1e-9);
         assert_eq!(a.get_usize("missing").unwrap(), None);
         assert!(parse(&["x", "--r", "abc"]).get_usize("r").is_err());
+    }
+
+    #[test]
+    fn serve_mode_switches_take_no_value() {
+        // --coordinator / --node are switches: the token after them is a
+        // flag, not their value
+        let a = parse(&["serve", "--coordinator", "--nodes", "a:1=0"]);
+        assert!(a.has("coordinator"));
+        assert_eq!(a.get("nodes"), Some("a:1=0"));
+        let a = parse(&["serve", "--node", "--node-shards", "0-2"]);
+        assert!(a.has("node"));
+        assert_eq!(a.get("node-shards"), Some("0-2"));
     }
 
     #[test]

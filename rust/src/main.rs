@@ -28,7 +28,10 @@
 //!   --quant-score on|off|auto --trace-out PATH
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 //! Serve flags: --addr A --max-batch N --window-ms N --topk K
-//!   --score-workers N --queue-cap N
+//!   --score-workers N --queue-cap N --io-timeout-ms N
+//!   --node --node-shards LIST     serve a manifest-shard subset (node mode)
+//!   --coordinator --nodes addr=shards[/replica],... [--total-shards N]
+//!                 [--vocab N --seq-len N]   scatter-gather front end (pure CPU)
 //! Store recode flags: --out BASE --codec bf16|int8|int4 [--shards S]
 //!   [--summary-chunk G] [--chunk-size N] [--cluster K]
 
@@ -83,6 +86,10 @@ fn run() -> anyhow::Result<()> {
         "info" => info(&cfg),
         "store" => store_cmd(&args),
         "metrics" => metrics_cmd(&args),
+        // the scatter-gather coordinator never touches the model — it
+        // forwards validated token rows and merges node heaps — so it
+        // dispatches BEFORE the xla gate and works in pure-CPU builds
+        "serve" if args.has("coordinator") => serve_coordinator(&args),
         #[cfg(feature = "xla")]
         "gen-corpus" => {
             let p = Pipeline::new(cfg)?;
@@ -205,6 +212,60 @@ fn metrics_cmd(args: &Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown metrics subcommand '{other}' (usage: lorif metrics dump)"),
     }
+}
+
+/// `lorif serve --coordinator` — the scatter-gather front end.  Speaks
+/// the same line protocol as a single server: clients send token rows;
+/// each admitted batch is scattered to every shard node
+/// (`--nodes host:port=shards[/replica],...`), the per-node top-k heaps
+/// are gathered and merged with the executor's own reduction, so
+/// answers are bit-for-bit what one process over the whole store would
+/// return.  Pure CPU: no model runtime, no store, no artifacts.
+fn serve_coordinator(args: &Args) -> anyhow::Result<()> {
+    use lorif::query::{RemotePlane, Server, ServerConfig, ShardPlane, TokenSource, Topology};
+
+    let spec = args.get("nodes").ok_or_else(|| {
+        anyhow::anyhow!("--coordinator needs --nodes host:port=shards[/replica],...")
+    })?;
+    let topology = Topology::parse(spec, args.get_usize("total-shards")?)?;
+    let io_timeout_ms = args.get_u64("io-timeout-ms")?.unwrap_or(0);
+    let io_timeout = (io_timeout_ms > 0).then(|| std::time::Duration::from_millis(io_timeout_ms));
+    // one RemotePlane per scoring worker: batch N+1 scatters while
+    // batch N is still in flight on the nodes
+    let workers = args.get_usize("score-workers")?.unwrap_or(2).max(1);
+    let planes: Vec<Box<dyn ShardPlane + Send>> = (0..workers)
+        .map(|_| {
+            Box::new(RemotePlane { topology: topology.clone(), io_timeout })
+                as Box<dyn ShardPlane + Send>
+        })
+        .collect();
+    // admission validates tokens exactly as the nodes will; override
+    // --vocab/--seq-len when fronting a store built for another model
+    let source = TokenSource {
+        vocab: args.get_usize("vocab")?.unwrap_or(lorif::model::spec::VOCAB),
+        seq_len: args.get_usize("seq-len")?.unwrap_or(lorif::model::spec::SEQ_LEN),
+    };
+    let sc = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7979").to_string(),
+        max_batch: args.get_usize("max-batch")?.unwrap_or(16),
+        window_ms: args.get_u64("window-ms")?.unwrap_or(20),
+        topk: args.get_usize("topk")?.unwrap_or(10),
+        queue_cap: args.get_usize("queue-cap")?.unwrap_or(64),
+        io_timeout_ms,
+        shards_served: 0,
+    };
+    log::info!(
+        "coordinator on {} over {} node(s) / {} shard(s)",
+        sc.addr,
+        topology.nodes.len(),
+        topology.total_shards
+    );
+    let summary = Server::bind(sc)?.run_planes(source, planes)?;
+    println!(
+        "coordinated {} queries in {} batches ({} shed, {} failed, {} dropped at shutdown)",
+        summary.served, summary.batches, summary.shed, summary.failed, summary.dropped
+    );
+    Ok(())
 }
 
 fn info(cfg: &Config) -> anyhow::Result<()> {
@@ -410,10 +471,23 @@ fn serve(cfg: Config, args: &Args) -> anyhow::Result<()> {
         &train,
         Stage1Options { write_dense: method.needs_dense_store(), ..Default::default() },
     )?;
+    // node mode (`--node [--node-shards 0-2]`): serve only a subset of
+    // the store's manifest shards.  Subset spans keep their GLOBAL
+    // offsets, so this node's heap entries carry original example
+    // indices a coordinator can merge without translation.
+    let subset = if args.has("node") {
+        args.get("node-shards").map(lorif::query::parse_shard_list).transpose()?
+    } else {
+        anyhow::ensure!(
+            args.get("node-shards").is_none(),
+            "--node-shards needs --node (shard-node serving mode)"
+        );
+        None
+    };
     // a pool of scoring workers sharing one Arc'd store + chunk cache;
     // batch N+1's gradient extraction overlaps batch N's store pass
     let workers = args.get_usize("score-workers")?.unwrap_or(2).max(1);
-    let scorers = app::build_store_scorer_pool(&p, method, workers)?;
+    let scorers = app::build_store_scorer_pool_subset(&p, method, workers, subset.as_deref())?;
     let extractor = GradExtractor::new(&p.rt, p.cfg.tier, p.cfg.f, p.cfg.c)?;
     let sc = ServerConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7979").to_string(),
@@ -421,7 +495,12 @@ fn serve(cfg: Config, args: &Args) -> anyhow::Result<()> {
         window_ms: args.get_u64("window-ms")?.unwrap_or(20),
         topk: args.get_usize("topk")?.unwrap_or(10),
         queue_cap: args.get_usize("queue-cap")?.unwrap_or(64),
+        io_timeout_ms: args.get_u64("io-timeout-ms")?.unwrap_or(0),
+        shards_served: subset.as_ref().map_or(0, Vec::len),
     };
+    if let Some(s) = &subset {
+        log::info!("node mode: serving manifest shards {s:?}");
+    }
     let source =
         lorif::query::server::XlaGradSource { rt: &p.rt, extractor: &extractor, params: &lit };
     let summary = lorif::query::serve(source, scorers, sc)?;
@@ -552,8 +631,12 @@ fn print_help() {
                        --codec bf16|int8|int4 --quant-score on|off|auto\n\
                        --work-dir DIR --artifacts-dir DIR --trace-out PATH\n\
          serve flags:  --addr A --max-batch N --window-ms N --topk K\n\
-                       --score-workers N --queue-cap N\n\
-         pure-CPU builds support `info`, `store`, and `metrics`; the rest need --features xla\n\
+                       --score-workers N --queue-cap N --io-timeout-ms N\n\
+         distributed:  serve --node [--node-shards 0-2+5]   (shard node)\n\
+                       serve --coordinator --nodes addr=shards[/replica],...\n\
+                             [--total-shards N] [--vocab N] [--seq-len N]\n\
+         pure-CPU builds support `info`, `store`, `metrics`, and `serve\n\
+         --coordinator`; the rest need --features xla\n\
          see rust/README.md for a walkthrough."
     );
 }

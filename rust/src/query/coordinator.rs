@@ -1,0 +1,587 @@
+//! Scatter-gather coordinator: the remote half of the shard plane.
+//!
+//! A shard NODE is just the existing attribution server started over a
+//! subset-opened store (`ShardSet::open_subset`, `lorif serve --node
+//! --node-shards lo-hi`): because subset spans keep their GLOBAL start
+//! offsets, every heap entry a node returns already carries the
+//! original example index.  The COORDINATOR (`lorif serve --coordinator
+//! --nodes ...`) runs the same server pipeline with a [`RemotePlane`]:
+//! each admitted batch's validated token rows are forwarded — NOT
+//! gradients; each node re-extracts deterministically, so nothing lossy
+//! crosses the wire — to every node in parallel, the per-node top-k
+//! heaps are rebuilt from the replies' `topk_bits` (exact f32 bit
+//! patterns), and `query::parallel::merge_topk` folds them with the
+//! same descending-score / ascending-index tie-break the local executor
+//! uses.
+//!
+//! **Exactness.** A local pass computes per-shard heaps and merges them
+//! once.  The distributed pass merges each node's shard heaps on the
+//! node, then merges the node heaps here — a two-level application of
+//! the same associative reduction (property-tested in `tests/prop.rs`),
+//! over the same per-shard inputs (deterministic extraction, global
+//! coordinates, exact prune mode).  Distributed ≡ local, bit for bit.
+//!
+//! **Failover.** Each node may declare a replica serving the same shard
+//! subset.  A scatter leg that fails (connect refused, io timeout, bad
+//! reply) is retried once against the replica; only if both fail does
+//! the batch fail.  Retries and failovers are counted in the
+//! `lorif_coord_*` families and surfaced per node in the reply's
+//! `"nodes"` array.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::engine::LatencyBreakdown;
+use super::parallel::{merge_topk, TopK};
+use super::plane::{NodeStat, PlaneBatch, PlaneReply, ShardPlane};
+use super::server::GradSource;
+use crate::attribution::QueryGrads;
+use crate::telemetry;
+use crate::util::json::{obj, Value};
+
+/// One shard node: the address that serves `shards`, plus an optional
+/// replica serving the same subset.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub addr: String,
+    /// manifest shard indices this node serves (sorted, deduplicated)
+    pub shards: Vec<usize>,
+    pub replica: Option<String>,
+}
+
+/// A validated cluster layout: every shard in `[0, total_shards)` owned
+/// by exactly one node.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: Vec<NodeSpec>,
+    pub total_shards: usize,
+}
+
+impl Topology {
+    /// Parse and validate a `--nodes` spec:
+    /// `addr=shards[/replica],addr=shards,...` where `shards` is
+    /// `+`-joined terms, each a single index (`3`) or an inclusive
+    /// range (`0-2`).  E.g.
+    /// `127.0.0.1:7001=0-2/127.0.0.1:7101,127.0.0.1:7002=3+5`.
+    ///
+    /// Validation happens HERE, at startup, not on the first query:
+    /// duplicate shard ownership, shards outside `[0, total_shards)`,
+    /// uncovered shards, and `replica == primary` are all clean errors.
+    /// `total_shards = None` infers the total as `max listed + 1`
+    /// (interior gaps are still rejected).
+    pub fn parse(spec: &str, total_shards: Option<usize>) -> anyhow::Result<Topology> {
+        let mut nodes: Vec<NodeSpec> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((addr, rest)) = part.split_once('=') else {
+                anyhow::bail!("node spec '{part}' is missing '=<shards>'");
+            };
+            let addr = addr.trim();
+            anyhow::ensure!(!addr.is_empty(), "node spec '{part}' has an empty address");
+            let (shard_spec, replica) = match rest.split_once('/') {
+                Some((s, r)) => {
+                    let r = r.trim();
+                    anyhow::ensure!(
+                        !r.is_empty(),
+                        "node {addr}: empty replica after '/'"
+                    );
+                    anyhow::ensure!(
+                        r != addr,
+                        "node {addr}: replica must differ from the primary"
+                    );
+                    (s, Some(r.to_string()))
+                }
+                None => (rest, None),
+            };
+            let shards = parse_shard_list(shard_spec)
+                .map_err(|e| anyhow::anyhow!("node {addr}: {e}"))?;
+            nodes.push(NodeSpec { addr: addr.to_string(), shards, replica });
+        }
+        anyhow::ensure!(!nodes.is_empty(), "--nodes names no nodes");
+
+        // exactly-once ownership over [0, total)
+        let total = match total_shards {
+            Some(t) => t,
+            None => 1 + nodes.iter().flat_map(|n| &n.shards).copied().max().unwrap(),
+        };
+        let mut owner: Vec<Option<&str>> = vec![None; total];
+        for n in &nodes {
+            for &s in &n.shards {
+                anyhow::ensure!(
+                    s < total,
+                    "node {} claims shard {s}, but the store has {total} shards",
+                    n.addr
+                );
+                if let Some(prev) = owner[s] {
+                    anyhow::bail!(
+                        "shard {s} is owned by both {prev} and {} — every shard \
+                         must have exactly one primary",
+                        n.addr
+                    );
+                }
+                owner[s] = Some(&n.addr);
+            }
+        }
+        let uncovered: Vec<usize> = (0..total).filter(|&s| owner[s].is_none()).collect();
+        anyhow::ensure!(
+            uncovered.is_empty(),
+            "shards {uncovered:?} are not served by any node (store has {total} shards)"
+        );
+        Ok(Topology { nodes, total_shards: total })
+    }
+}
+
+/// Parse a `+`-joined shard list: each term is a single manifest index
+/// (`3`) or an inclusive range (`0-2`), so `0-2+5` → `[0, 1, 2, 5]`.
+/// Sorted and deduplicated.  This is the shared grammar of a node's
+/// `--node-shards` flag and each `--nodes` entry.
+pub fn parse_shard_list(spec: &str) -> anyhow::Result<Vec<usize>> {
+    let mut shards = Vec::new();
+    for term in spec.split('+') {
+        let term = term.trim();
+        match term.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad shard range '{term}'"))?;
+                let hi: usize = hi
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad shard range '{term}'"))?;
+                anyhow::ensure!(lo <= hi, "empty shard range '{term}'");
+                shards.extend(lo..=hi);
+            }
+            None => shards
+                .push(term.parse().map_err(|_| anyhow::anyhow!("bad shard index '{term}'"))?),
+        }
+    }
+    anyhow::ensure!(!shards.is_empty(), "empty shard list");
+    shards.sort_unstable();
+    shards.dedup();
+    Ok(shards)
+}
+
+/// A `GradSource` for coordinator mode: it knows the vocabulary and
+/// context length (so admission validates tokens exactly as a node
+/// will), but never extracts — the `RemotePlane` forwards raw tokens,
+/// so the coordinator needs no model runtime and builds pure-CPU.
+pub struct TokenSource {
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+impl GradSource for TokenSource {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn extract(&mut self, _tokens: &[i32], _n: usize) -> anyhow::Result<QueryGrads> {
+        anyhow::bail!("coordinator mode forwards tokens; local extraction is never run")
+    }
+}
+
+/// The network plane: scatter each batch's token rows to every node,
+/// gather and merge their heaps.  One instance per scoring worker; each
+/// scatter opens fresh connections (nodes may come and go between
+/// batches — that is what failover is for).
+pub struct RemotePlane {
+    pub topology: Topology,
+    /// connect/read/write timeout for each node leg (`--io-timeout-ms`;
+    /// `None` = block forever, which disables timeout-driven failover)
+    pub io_timeout: Option<Duration>,
+}
+
+/// One node's gathered answer.
+struct NodeAnswer {
+    heaps: Vec<TopK>,
+    breakdown: LatencyBreakdown,
+    stat: NodeStat,
+}
+
+impl ShardPlane for RemotePlane {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn wants_grads(&self) -> bool {
+        false
+    }
+
+    fn score_topk(&mut self, batch: &PlaneBatch, k: usize) -> anyhow::Result<PlaneReply> {
+        let PlaneBatch::Tokens { tokens, n, seq_len } = batch else {
+            anyhow::bail!("remote plane forwards tokens; got extracted gradients");
+        };
+        let (n, seq_len) = (*n, *seq_len);
+        anyhow::ensure!(n > 0 && tokens.len() == n * seq_len, "malformed token batch");
+        let t0 = Instant::now();
+        // capture the scoped registry HERE: the scatter legs run on
+        // fresh threads, where the thread-local telemetry scope would
+        // otherwise fall back to the process global
+        let reg = telemetry::current_registry();
+        let timeout = self.io_timeout;
+        let answers: Vec<anyhow::Result<NodeAnswer>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .topology
+                .nodes
+                .iter()
+                .map(|node| {
+                    let reg = &reg;
+                    s.spawn(move || {
+                        query_node(node, tokens, n, seq_len, timeout, reg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow::anyhow!("scatter thread panicked"))
+                    })
+                })
+                .collect()
+        });
+
+        let mut parts = Vec::with_capacity(answers.len());
+        let mut breakdowns = Vec::with_capacity(answers.len());
+        let mut nodes = Vec::with_capacity(answers.len());
+        for a in answers {
+            let a = a?;
+            parts.push(a.heaps);
+            breakdowns.push(a.breakdown);
+            nodes.push(a.stat);
+        }
+        let topk = merge_topk(n, k, parts);
+        // coordinator overhead = everything the slowest node's own wall
+        // doesn't explain: scatter fan-out, network, rebuild, merge
+        let slowest = breakdowns.iter().fold(0.0f64, |m, b| m.max(b.wall_s));
+        let overhead = (t0.elapsed().as_secs_f64() - slowest).max(0.0);
+        let latency = LatencyBreakdown::merge_distributed(&breakdowns, overhead);
+        Ok(PlaneReply { topk, latency, nodes })
+    }
+}
+
+/// Run one node's scatter leg: primary first, then (on any failure) its
+/// replica.  Counts `lorif_coord_scatter/gather/retry/failover`.
+fn query_node(
+    node: &NodeSpec,
+    tokens: &[i32],
+    n: usize,
+    seq_len: usize,
+    timeout: Option<Duration>,
+    reg: &crate::telemetry::Registry,
+) -> anyhow::Result<NodeAnswer> {
+    let t0 = Instant::now();
+    reg.coord_scatter.inc();
+    match talk(&node.addr, tokens, n, seq_len, timeout) {
+        Ok((heaps, breakdown)) => {
+            reg.coord_gather.inc();
+            let stat = NodeStat {
+                addr: node.addr.clone(),
+                shards: node.shards.clone(),
+                wall_s: t0.elapsed().as_secs_f64(),
+                retries: 0,
+                failover: false,
+            };
+            Ok(NodeAnswer { heaps, breakdown, stat })
+        }
+        Err(primary_err) => {
+            let Some(replica) = &node.replica else {
+                return Err(primary_err
+                    .context(format!("node {} failed (no replica configured)", node.addr)));
+            };
+            log::warn!(
+                "node {} failed ({primary_err:#}); retrying its shards on replica {replica}",
+                node.addr
+            );
+            reg.coord_retry.inc();
+            reg.coord_scatter.inc();
+            match talk(replica, tokens, n, seq_len, timeout) {
+                Ok((heaps, breakdown)) => {
+                    reg.coord_failover.inc();
+                    reg.coord_gather.inc();
+                    let stat = NodeStat {
+                        addr: replica.clone(),
+                        shards: node.shards.clone(),
+                        wall_s: t0.elapsed().as_secs_f64(),
+                        retries: 1,
+                        failover: true,
+                    };
+                    Ok(NodeAnswer { heaps, breakdown, stat })
+                }
+                Err(replica_err) => Err(anyhow::anyhow!(
+                    "node {} failed ({primary_err:#}) and its replica {replica} \
+                     failed too ({replica_err:#})",
+                    node.addr
+                )),
+            }
+        }
+    }
+}
+
+/// One complete conversation with one address: pipeline the batch's
+/// `n` query lines, then read the `n` replies in order, rebuilding the
+/// per-query heaps from `topk_bits` and summing the per-reply ledgers
+/// into one per-node breakdown (the replies are sequential on the node,
+/// so summing `latency_s` into `wall_s` is the sequential-merge case).
+fn talk(
+    addr: &str,
+    tokens: &[i32],
+    n: usize,
+    seq_len: usize,
+    timeout: Option<Duration>,
+) -> anyhow::Result<(Vec<TopK>, LatencyBreakdown)> {
+    let stream = connect(addr, timeout)?;
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    for row in tokens.chunks(seq_len) {
+        let line = obj([(
+            "tokens",
+            Value::Arr(row.iter().map(|&t| (t as usize).into()).collect()),
+        )]);
+        writeln!(stream, "{line}").map_err(io_ctx(addr, "write"))?;
+    }
+    stream.flush().map_err(io_ctx(addr, "flush"))?;
+
+    let mut heaps = Vec::with_capacity(n);
+    let mut breakdown: Option<LatencyBreakdown> = None;
+    let mut line = String::new();
+    for q in 0..n {
+        line.clear();
+        let read = reader.read_line(&mut line).map_err(io_ctx(addr, "read"))?;
+        anyhow::ensure!(read > 0, "{addr}: connection closed after {q} of {n} replies");
+        let v = Value::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("{addr}: unparseable reply: {e}"))?;
+        if let Some(msg) = v.get("error").and_then(Value::as_str) {
+            let code = v.get("code").and_then(Value::as_str).unwrap_or("?");
+            anyhow::bail!("{addr}: node error for query {q}: {msg} (code {code})");
+        }
+        heaps.push(parse_heap(&v, addr)?);
+        let b = parse_breakdown(&v);
+        match breakdown.as_mut() {
+            Some(acc) => acc.merge(&b),
+            None => breakdown = Some(b),
+        }
+    }
+    Ok((heaps, breakdown.unwrap_or_else(zero_breakdown)))
+}
+
+fn connect(addr: &str, timeout: Option<Duration>) -> anyhow::Result<TcpStream> {
+    match timeout {
+        None => TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("{addr}: connect: {e}")),
+        Some(t) => {
+            use std::net::ToSocketAddrs;
+            let sa = addr
+                .to_socket_addrs()
+                .map_err(|e| anyhow::anyhow!("{addr}: resolve: {e}"))?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("{addr}: resolves to no address"))?;
+            TcpStream::connect_timeout(&sa, t)
+                .map_err(|e| anyhow::anyhow!("{addr}: connect: {e}"))
+        }
+    }
+}
+
+fn io_ctx(addr: &str, what: &'static str) -> impl Fn(std::io::Error) -> anyhow::Error + '_ {
+    move |e| {
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            anyhow::anyhow!("{addr}: {what} timed out")
+        } else {
+            anyhow::anyhow!("{addr}: {what}: {e}")
+        }
+    }
+}
+
+/// Rebuild one query's heap from a reply's `topk_bits` — `[index,
+/// f32-bit-pattern]` pairs, best first.  Ordered pushes into a fresh
+/// heap reproduce the node's heap exactly, NaNs and tie-breaks
+/// included (integers ≤ 2^32 cross the f64 JSON number path
+/// bit-for-bit; the f64 `scores` field would have lost NaN to null).
+fn parse_heap(v: &Value, addr: &str) -> anyhow::Result<TopK> {
+    let Some(arr) = v.get("topk_bits").and_then(Value::as_arr) else {
+        anyhow::bail!(
+            "{addr}: reply has no topk_bits — is the node running an older build?"
+        );
+    };
+    let mut heap = TopK::new(arr.len());
+    for pair in arr {
+        let entry = pair.as_arr().filter(|p| p.len() == 2);
+        let (Some(i), Some(bits)) = (
+            entry.and_then(|p| p[0].as_usize()),
+            entry.and_then(|p| p[1].as_f64()),
+        ) else {
+            anyhow::bail!("{addr}: malformed topk_bits entry");
+        };
+        anyhow::ensure!(
+            bits.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&bits),
+            "{addr}: topk_bits pattern {bits} is not a u32"
+        );
+        heap.push(i, f32::from_bits(bits as u32));
+    }
+    Ok(heap)
+}
+
+fn zero_breakdown() -> LatencyBreakdown {
+    LatencyBreakdown::merge_distributed(&[], 0.0)
+}
+
+/// Pull one reply's ledger fields into a breakdown (missing fields read
+/// as zero, so a terse node reply still merges cleanly).
+fn parse_breakdown(v: &Value) -> LatencyBreakdown {
+    let f = |k: &str| v.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+    let u = |k: &str| v.get(k).and_then(Value::as_usize).unwrap_or(0);
+    let (load, compute, pre) = (f("load_s"), f("compute_s"), f("precondition_s"));
+    LatencyBreakdown {
+        load_s: load,
+        compute_s: compute,
+        precondition_s: pre,
+        total_s: load + compute + pre,
+        wall_s: f("latency_s"),
+        bytes_read: u("bytes_read") as u64,
+        bytes_skipped: u("bytes_skipped") as u64,
+        cache_hits: u("cache_hits"),
+        cache_misses: u("cache_misses"),
+        bytes_from_cache: u("bytes_from_cache") as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parses_ranges_lists_and_replicas() {
+        let t = Topology::parse(
+            "127.0.0.1:7001=0-2/127.0.0.1:7101, 127.0.0.1:7002=3+5, 127.0.0.1:7003=4",
+            Some(6),
+        )
+        .unwrap();
+        assert_eq!(t.total_shards, 6);
+        assert_eq!(t.nodes.len(), 3);
+        assert_eq!(t.nodes[0].addr, "127.0.0.1:7001");
+        assert_eq!(t.nodes[0].shards, vec![0, 1, 2]);
+        assert_eq!(t.nodes[0].replica.as_deref(), Some("127.0.0.1:7101"));
+        assert_eq!(t.nodes[1].shards, vec![3, 5]);
+        assert_eq!(t.nodes[1].replica, None);
+        assert_eq!(t.nodes[2].shards, vec![4]);
+    }
+
+    #[test]
+    fn topology_infers_total_when_unspecified() {
+        let t = Topology::parse("a:1=0-1,b:2=2", None).unwrap();
+        assert_eq!(t.total_shards, 3);
+        // an interior gap is still rejected under inference
+        let err = Topology::parse("a:1=0,b:2=2", None).unwrap_err();
+        assert!(format!("{err}").contains("[1]"), "{err}");
+    }
+
+    #[test]
+    fn topology_rejects_duplicate_ownership() {
+        let err = Topology::parse("a:1=0-2,b:2=2-3", Some(4)).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("shard 2"), "{msg}");
+        assert!(msg.contains("a:1") && msg.contains("b:2"), "{msg}");
+    }
+
+    #[test]
+    fn topology_rejects_uncovered_and_out_of_range_shards() {
+        let err = Topology::parse("a:1=0,b:2=1", Some(4)).unwrap_err();
+        assert!(format!("{err}").contains("[2, 3]"), "{err}");
+        let err = Topology::parse("a:1=0-5", Some(3)).unwrap_err();
+        assert!(format!("{err}").contains("shard 3"), "{err}");
+    }
+
+    #[test]
+    fn topology_rejects_replica_equal_to_primary() {
+        let err = Topology::parse("a:1=0/a:1", Some(1)).unwrap_err();
+        assert!(format!("{err}").contains("replica"), "{err}");
+    }
+
+    #[test]
+    fn topology_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "a:1",        // no '='
+            "a:1=",       // no shards
+            "=0",         // no addr
+            "a:1=x",      // non-numeric
+            "a:1=3-1",    // inverted range
+            "a:1=0/",     // empty replica
+        ] {
+            assert!(Topology::parse(bad, None).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn shard_list_grammar_sorts_and_dedups() {
+        assert_eq!(parse_shard_list("0-2+5").unwrap(), vec![0, 1, 2, 5]);
+        assert_eq!(parse_shard_list("3").unwrap(), vec![3]);
+        assert_eq!(parse_shard_list("2+0-2").unwrap(), vec![0, 1, 2]);
+        for bad in ["", "x", "3-1", "1+"] {
+            assert!(parse_shard_list(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn token_source_never_extracts() {
+        let mut s = TokenSource { vocab: 64, seq_len: 8 };
+        assert_eq!(s.vocab(), 64);
+        assert_eq!(s.seq_len(), 8);
+        assert!(s.extract(&[0; 8], 1).is_err());
+    }
+
+    #[test]
+    fn parse_heap_round_trips_bits_including_nan() {
+        let nan = f32::NAN.to_bits();
+        let v = Value::parse(&format!(
+            "{{\"topk_bits\": [[7, {nan}], [2, {}], [9, {}]]}}",
+            1.5f32.to_bits(),
+            (-2.0f32).to_bits()
+        ))
+        .unwrap();
+        let h = parse_heap(&v, "t").unwrap();
+        let e = h.entries();
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[0].1, 7);
+        assert!(e[0].0.is_nan(), "NaN survives the wire (total_cmp ranks it first)");
+        assert_eq!(e[1], (1.5, 2));
+        assert_eq!(e[2], (-2.0, 9));
+        // missing field and malformed entries are clean errors
+        assert!(parse_heap(&Value::parse("{}").unwrap(), "t").is_err());
+        let bad = Value::parse("{\"topk_bits\": [[1, 0.5]]}").unwrap();
+        assert!(parse_heap(&bad, "t").is_err());
+    }
+
+    #[test]
+    fn parse_breakdown_reads_reply_fields() {
+        let v = Value::parse(
+            "{\"latency_s\": 0.5, \"load_s\": 0.2, \"compute_s\": 0.1, \
+             \"precondition_s\": 0.05, \"bytes_read\": 100, \"bytes_skipped\": 50, \
+             \"cache_hits\": 3, \"cache_misses\": 1, \"bytes_from_cache\": 10}",
+        )
+        .unwrap();
+        let b = parse_breakdown(&v);
+        assert!((b.wall_s - 0.5).abs() < 1e-12);
+        assert!((b.total_s - 0.35).abs() < 1e-12);
+        assert_eq!(b.bytes_read + b.bytes_skipped, 150);
+        assert_eq!(b.cache_hits, 3);
+        assert_eq!(b.bytes_from_cache, 10);
+        // terse reply: everything zero, nothing panics
+        let z = parse_breakdown(&Value::parse("{}").unwrap());
+        assert_eq!(z.bytes_read, 0);
+        assert_eq!(z.wall_s, 0.0);
+    }
+}

@@ -74,6 +74,39 @@ impl LatencyBreakdown {
         self.bytes_from_cache += other.bytes_from_cache;
     }
 
+    /// Aggregate breakdowns from nodes that ran CONCURRENTLY (the
+    /// coordinator's scatter-gather): CPU-style fields (phase times,
+    /// byte/cache ledgers) still sum — the work genuinely happened on
+    /// every node, and `bytes_read + bytes_skipped` summed over nodes
+    /// reconciles to the full-scan byte count exactly as a local pass
+    /// does — but `wall_s` is the MAX over nodes plus the coordinator's
+    /// own overhead (scatter + gather + merge), because the slowest
+    /// node gates the gather and the others overlap inside it.
+    pub fn merge_distributed(
+        nodes: &[LatencyBreakdown],
+        coord_overhead_s: f64,
+    ) -> LatencyBreakdown {
+        let mut out = LatencyBreakdown {
+            load_s: 0.0,
+            compute_s: 0.0,
+            precondition_s: 0.0,
+            total_s: 0.0,
+            wall_s: 0.0,
+            bytes_read: 0,
+            bytes_skipped: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            bytes_from_cache: 0,
+        };
+        let mut slowest = 0.0f64;
+        for n in nodes {
+            out.merge(n);
+            slowest = slowest.max(n.wall_s);
+        }
+        out.wall_s = slowest + coord_overhead_s;
+        out
+    }
+
     /// Share of the pass's CPU time spent on store I/O (load / total).
     /// Both operands sum across parallel shard workers, so the ratio is
     /// a CPU-time share, not a share of elapsed time.
@@ -275,6 +308,38 @@ mod tests {
         assert_eq!(a.cache_hits, 5);
         assert_eq!(a.cache_misses, 1);
         assert_eq!(a.bytes_from_cache, 500);
+    }
+
+    #[test]
+    fn distributed_merge_takes_max_wall_and_sums_ledgers() {
+        // three nodes ran CONCURRENTLY: CPU phase times and byte
+        // ledgers sum (the work happened on every node), but the gather
+        // finishes when the slowest node does — wall is max + overhead,
+        // NOT the sequential-batch sum
+        let mut a = breakdown(0.3, 0.1, 0.05, 0.50, 1000);
+        a.bytes_skipped = 200;
+        a.cache_hits = 2;
+        let mut b = breakdown(0.2, 0.2, 0.00, 0.90, 2000);
+        b.bytes_skipped = 100;
+        b.bytes_from_cache = 64;
+        let c = breakdown(0.5, 0.1, 0.05, 0.40, 3000);
+        let m = LatencyBreakdown::merge_distributed(&[a, b, c], 0.03);
+        assert!((m.load_s - 1.0).abs() < 1e-12);
+        assert!((m.compute_s - 0.4).abs() < 1e-12);
+        assert!((m.precondition_s - 0.1).abs() < 1e-12);
+        assert!((m.total_s - 1.5).abs() < 1e-12);
+        assert!((m.wall_s - 0.93).abs() < 1e-12, "max(0.5, 0.9, 0.4) + 0.03");
+        assert!(m.wall_s < 0.5 + 0.9 + 0.4, "must not sum walls CPU-style");
+        // the full-scan ledger reconciles summed over nodes
+        assert_eq!(m.bytes_read, 6000);
+        assert_eq!(m.bytes_skipped, 300);
+        assert_eq!(m.bytes_read + m.bytes_skipped, 6300);
+        assert_eq!(m.cache_hits, 2);
+        assert_eq!(m.bytes_from_cache, 64);
+        // degenerate: no nodes -> pure coordinator overhead
+        let empty = LatencyBreakdown::merge_distributed(&[], 0.01);
+        assert!((empty.wall_s - 0.01).abs() < 1e-12);
+        assert_eq!(empty.bytes_read, 0);
     }
 
     #[test]

@@ -5,10 +5,14 @@
 //! XLA-backed gradient source (`server::XlaGradSource`) needs the `xla`
 //! feature.
 
+pub mod coordinator;
 pub mod engine;
 pub mod parallel;
+pub mod plane;
 pub mod server;
 
+pub use coordinator::{parse_shard_list, NodeSpec, RemotePlane, TokenSource, Topology};
 pub use engine::{LatencyBreakdown, QueryEngine, QueryResult};
 pub use parallel::{map_shards, merge_scores, merge_topk, ShardScores, TopK};
+pub use plane::{LocalPlane, NodeStat, PlaneBatch, PlaneReply, ShardPlane};
 pub use server::{serve, GradSource, ServeSummary, Server, ServerConfig};

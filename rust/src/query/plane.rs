@@ -1,0 +1,179 @@
+//! The shard execution plane: where a query batch's scores come from.
+//!
+//! The serving pipeline (`query::server`) used to be welded to one
+//! in-process scorer pool.  The plane seam splits "how a batch is
+//! scored" from "how the service admits, batches, and answers":
+//!
+//!   * [`LocalPlane`] wraps a `Scorer` over an in-process `ShardSet` —
+//!     the classic single-machine path, behavior-identical to calling
+//!     `score_sink(SinkSpec::TopK(k))` directly.
+//!   * `RemotePlane` (`query::coordinator`) scatters the batch to shard
+//!     nodes over the line protocol and merges their heaps with the
+//!     same `merge_topk` reduction the local executor uses, so the two
+//!     planes are bit-for-bit interchangeable.
+//!
+//! The seam is the batch payload, [`PlaneBatch`]: a local plane wants
+//! EXTRACTED gradients (the batcher runs `GradSource::extract`), while
+//! a remote plane forwards the RAW validated token rows — each node
+//! re-extracts deterministically, which is what makes the distributed
+//! result exact rather than a lossy gradient serialization.  A plane
+//! declares which payload it consumes via
+//! [`ShardPlane::wants_grads`], and the server's batcher builds the
+//! matching variant.
+
+use std::time::Instant;
+
+use super::engine::LatencyBreakdown;
+use super::parallel::TopK;
+use crate::attribution::{QueryGrads, ScoreOutput, Scorer, SinkSpec};
+
+/// One batch handed to a plane: extracted gradients (local) or the raw
+/// zero-padded token rows (remote; `tokens.len() == n * seq_len`).
+pub enum PlaneBatch {
+    Grads(QueryGrads),
+    Tokens { tokens: Vec<i32>, n: usize, seq_len: usize },
+}
+
+impl PlaneBatch {
+    pub fn n_queries(&self) -> usize {
+        match self {
+            PlaneBatch::Grads(q) => q.n_query,
+            PlaneBatch::Tokens { n, .. } => *n,
+        }
+    }
+}
+
+/// Per-node accounting of one scattered batch, surfaced in the
+/// coordinator's reply (`"nodes": [...]`) next to the merged scores.
+#[derive(Clone, Debug)]
+pub struct NodeStat {
+    /// address that ANSWERED (the replica's after a failover)
+    pub addr: String,
+    /// manifest shards this node covered
+    pub shards: Vec<usize>,
+    /// wall seconds for this node's whole scatter+gather round trip
+    pub wall_s: f64,
+    /// scatter attempts beyond the first (primary retries + failover)
+    pub retries: usize,
+    /// whether the answer came from the configured replica
+    pub failover: bool,
+}
+
+/// What a plane returns for one batch: per-query top-k heaps in
+/// ORIGINAL example coordinates (ready for `merge_topk`-style
+/// consumption), the aggregated latency/byte ledger, and — on the
+/// remote plane — per-node stats.
+pub struct PlaneReply {
+    pub topk: Vec<TopK>,
+    pub latency: LatencyBreakdown,
+    pub nodes: Vec<NodeStat>,
+}
+
+/// A transport for scoring one batch against the sharded store.
+pub trait ShardPlane: Send {
+    fn name(&self) -> &'static str;
+
+    /// Whether this plane consumes [`PlaneBatch::Grads`] (the batcher
+    /// must run gradient extraction) or [`PlaneBatch::Tokens`].
+    fn wants_grads(&self) -> bool;
+
+    /// Score one batch, returning per-query top-k heaps.
+    fn score_topk(&mut self, batch: &PlaneBatch, k: usize) -> anyhow::Result<PlaneReply>;
+}
+
+/// The in-process plane: one scorer over a local (possibly
+/// subset-opened) `ShardSet`.  Exactly today's serving path — the heaps
+/// come straight out of the streaming top-k sink.
+pub struct LocalPlane {
+    pub scorer: Box<dyn Scorer + Send>,
+}
+
+impl ShardPlane for LocalPlane {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn wants_grads(&self) -> bool {
+        true
+    }
+
+    fn score_topk(&mut self, batch: &PlaneBatch, k: usize) -> anyhow::Result<PlaneReply> {
+        let PlaneBatch::Grads(queries) = batch else {
+            anyhow::bail!("local plane needs extracted gradients, got raw tokens");
+        };
+        let t0 = Instant::now();
+        let report = self.scorer.score_sink(queries, SinkSpec::TopK(k))?;
+        let latency = LatencyBreakdown::from_report(&report, t0.elapsed());
+        let topk = match report.output {
+            ScoreOutput::TopK(heaps) => heaps,
+            // a scorer without a streaming sink answered with the full
+            // matrix: reduce it with the same ordered pushes (ties
+            // toward the lower index) the sink would have applied
+            ScoreOutput::Full(m) => (0..m.rows)
+                .map(|q| {
+                    let mut h = TopK::new(k);
+                    for (i, &s) in m.row(q).iter().enumerate() {
+                        h.push(i, s);
+                    }
+                    h
+                })
+                .collect(),
+        };
+        Ok(PlaneReply { topk, latency, nodes: Vec::new() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::ScoreReport;
+    use crate::linalg::Mat;
+    use crate::util::timer::PhaseTimer;
+
+    struct FakeScorer;
+    impl Scorer for FakeScorer {
+        fn name(&self) -> &'static str {
+            "fake"
+        }
+        fn index_bytes(&self) -> u64 {
+            0
+        }
+        fn score(&mut self, q: &QueryGrads) -> anyhow::Result<ScoreReport> {
+            let mut scores = Mat::zeros(q.n_query, 6);
+            for i in 0..6 {
+                *scores.at_mut(0, i) = [3.0, 1.0, 3.0, 7.0, 0.5, 7.0][i];
+            }
+            Ok(ScoreReport::full(scores, PhaseTimer::new(), 64))
+        }
+    }
+
+    #[test]
+    fn local_plane_reduces_like_the_streaming_sink() {
+        let mut plane = LocalPlane { scorer: Box::new(FakeScorer) };
+        assert!(plane.wants_grads());
+        let q = QueryGrads { n_query: 1, c: 1, proj_dims: vec![], layers: vec![] };
+        let rep = plane.score_topk(&PlaneBatch::Grads(q), 4).unwrap();
+        assert_eq!(rep.topk.len(), 1);
+        // ties break toward the LOWER original index: 7@3 before 7@5,
+        // 3@0 before 3@2
+        assert_eq!(rep.topk[0].entries(), &[(7.0, 3), (7.0, 5), (3.0, 0), (3.0, 2)]);
+        assert!(rep.nodes.is_empty());
+        assert_eq!(rep.latency.bytes_read, 64);
+        // a token batch is a contract violation, not a panic
+        let t = PlaneBatch::Tokens { tokens: vec![0; 8], n: 1, seq_len: 8 };
+        assert!(plane.score_topk(&t, 4).is_err());
+    }
+
+    #[test]
+    fn plane_batch_counts_queries() {
+        let g = PlaneBatch::Grads(QueryGrads {
+            n_query: 3,
+            c: 1,
+            proj_dims: vec![],
+            layers: vec![],
+        });
+        assert_eq!(g.n_queries(), 3);
+        let t = PlaneBatch::Tokens { tokens: vec![0; 16], n: 2, seq_len: 8 };
+        assert_eq!(t.n_queries(), 2);
+    }
+}

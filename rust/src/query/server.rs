@@ -23,9 +23,14 @@
 //!
 //! Protocol (newline-delimited JSON):
 //!   -> {"tokens": [t0, t1, ...]}            (<= seq_len token ids)
-//!   <- {"topk": [...], "scores": [...], "latency_s": x, "batch": b,
-//!       "bytes_read": n, "bytes_skipped": m, "cache_hits": h,
-//!       "cache_misses": mm, "bytes_from_cache": c}
+//!   <- {"topk": [...], "scores": [...], "topk_bits": [[i, b], ...],
+//!       "latency_s": x, "load_s": l, "compute_s": c2,
+//!       "precondition_s": p, "batch": b, "bytes_read": n,
+//!       "bytes_skipped": m, "cache_hits": h, "cache_misses": mm,
+//!       "bytes_from_cache": c}
+//!      (`topk_bits` pairs each original index with the f32 score's
+//!      exact bit pattern — the lossless channel a scatter-gather
+//!      coordinator merges on; `scores` is f64 and loses NaN to null)
 //!   -> {"cmd": "stats"}
 //!   <- {"served": n, "submitted": n, "shed": n, "failed": n,
 //!       "batches": n, ..., "queue_depth": d, "cache_hit_rate": r,
@@ -49,6 +54,7 @@
 //! Errors are structured: {"error": msg, "code": c[, "index": i]} with
 //! codes `bad_json`, `bad_request`, `invalid_tokens` (naming the first
 //! offending token index), `overloaded` (load shed), `batch_failed`,
+//! `timeout` (the connection sat idle/stalled past `--io-timeout-ms`),
 //! and `shutdown`.
 //!
 //! Tokens are validated up front — non-numeric, non-integer,
@@ -82,7 +88,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::attribution::{QueryGrads, Scorer, SinkSpec};
+use super::plane::{LocalPlane, PlaneBatch, ShardPlane};
+use crate::attribution::{QueryGrads, Scorer};
 use crate::telemetry::{self, Registry, TelemetryCtx, TraceCtx};
 use crate::util::json::{obj, Value};
 
@@ -141,6 +148,16 @@ pub struct ServerConfig {
     /// handlers and the batcher.  A full queue sheds new requests with
     /// a structured `overloaded` error (`--queue-cap`).
     pub queue_cap: usize,
+    /// Per-connection socket read/write timeout in milliseconds
+    /// (`--io-timeout-ms`; 0 = never time out).  A peer that stalls
+    /// mid-line gets a structured `timeout` error and its connection
+    /// closed, so it can no longer pin a handler thread — and, in node
+    /// mode, can no longer hang a coordinator's gather.
+    pub io_timeout_ms: u64,
+    /// Manifest shards this process serves (`--node-shards`; 0 = all).
+    /// Purely informational at this layer — published as the
+    /// `lorif_node_shards` gauge so a scrape identifies shard nodes.
+    pub shards_served: usize,
 }
 
 impl Default for ServerConfig {
@@ -151,6 +168,8 @@ impl Default for ServerConfig {
             window_ms: 20,
             topk: 10,
             queue_cap: 64,
+            io_timeout_ms: 0,
+            shards_served: 0,
         }
     }
 }
@@ -236,9 +255,11 @@ enum Incoming {
     Shutdown,
 }
 
-/// One validated batch handed from the batcher to the scoring workers.
+/// One validated batch handed from the batcher to the scoring workers:
+/// extracted gradients for a local plane, raw token rows for a remote
+/// one (`ShardPlane::wants_grads` picks the variant).
 struct Job {
-    queries: QueryGrads,
+    batch: PlaneBatch,
     replies: Vec<mpsc::Sender<String>>,
     /// when the batch's first query was ADMITTED (not when the batcher
     /// dequeued it): reply latency covers queue wait under overload,
@@ -281,16 +302,41 @@ impl Server {
     /// chunk cache.
     pub fn run<G: GradSource>(
         self,
-        mut source: G,
+        source: G,
         scorers: Vec<Box<dyn Scorer + Send>>,
     ) -> anyhow::Result<ServeSummary> {
-        anyhow::ensure!(!scorers.is_empty(), "serve needs at least one scoring worker");
+        let planes = scorers
+            .into_iter()
+            .map(|scorer| Box::new(LocalPlane { scorer }) as Box<dyn ShardPlane + Send>)
+            .collect();
+        self.run_planes(source, planes)
+    }
+
+    /// Run the pipeline over an explicit set of shard planes — the seam
+    /// the coordinator uses (`query::coordinator::RemotePlane` plus a
+    /// `TokenSource`).  All planes must agree on `wants_grads`: the
+    /// batcher either extracts gradients once per batch or forwards the
+    /// raw token rows, not both.
+    pub fn run_planes<G: GradSource>(
+        self,
+        mut source: G,
+        planes: Vec<Box<dyn ShardPlane + Send>>,
+    ) -> anyhow::Result<ServeSummary> {
+        anyhow::ensure!(!planes.is_empty(), "serve needs at least one scoring worker");
+        let wants_grads = planes[0].wants_grads();
+        anyhow::ensure!(
+            planes.iter().all(|p| p.wants_grads() == wants_grads),
+            "mixed local/remote planes in one server"
+        );
         let cfg = &self.cfg;
         let seq_len = source.seq_len();
         let vocab = source.vocab();
-        let n_workers = scorers.len();
+        let n_workers = planes.len();
         let stats = Arc::new(ServerStats::new());
         stats.reg.server_workers.set(n_workers as u64);
+        stats.reg.node_shards.set(cfg.shards_served as u64);
+        let io_timeout = (cfg.io_timeout_ms > 0)
+            .then(|| Duration::from_millis(cfg.io_timeout_ms));
         // shared with the (detached) conn handlers too: once set, they
         // stop admitting queries, which closes most of the window where
         // a request could race the final queue drain
@@ -351,6 +397,7 @@ impl Server {
                                 std::thread::spawn(move || {
                                     let _ = handle_conn(
                                         stream, tx, stats, flag, seq_len, vocab, n_workers,
+                                        io_timeout,
                                     );
                                 });
                             }
@@ -367,12 +414,12 @@ impl Server {
                 })
             };
 
-            // scoring workers: each owns one scorer; the shared
+            // scoring workers: each owns one plane; the shared
             // receiver hands jobs to whichever worker is free
             let topk = cfg.topk;
-            let workers: Vec<_> = scorers
+            let workers: Vec<_> = planes
                 .into_iter()
-                .map(|mut scorer| {
+                .map(|mut plane| {
                     let jrx = Arc::clone(&jrx);
                     let stats = Arc::clone(&stats);
                     s.spawn(move || loop {
@@ -381,7 +428,7 @@ impl Server {
                             guard.recv()
                         };
                         let Ok(job) = job else { break };
-                        score_job(scorer.as_mut(), job, topk, &stats);
+                        score_job(plane.as_mut(), job, topk, &stats);
                     })
                 })
                 .collect();
@@ -423,7 +470,8 @@ impl Server {
                         }
                     }
                 }
-                let workers_alive = dispatch_batch(&mut source, batch, seq_len, t0, &jtx, &stats);
+                let workers_alive =
+                    dispatch_batch(&mut source, batch, seq_len, wants_grads, t0, &jtx, &stats);
                 if shutdown_after || !workers_alive {
                     break;
                 }
@@ -475,15 +523,19 @@ impl Server {
     }
 }
 
-/// Extract a batch's gradients and hand it to the scoring workers.  An
-/// extraction failure answers exactly this batch's clients with a
-/// structured error — one poisoned batch must never kill the service.
-/// Returns `false` when the scoring workers are gone (all panicked),
-/// which tells the batcher to stop instead of serving a dead pipeline.
+/// Prepare a batch for the planes — extract its gradients (local
+/// planes) or package the raw token rows (remote planes) — and hand it
+/// to the scoring workers.  An extraction failure answers exactly this
+/// batch's clients with a structured error — one poisoned batch must
+/// never kill the service.  Returns `false` when the scoring workers
+/// are gone (all panicked), which tells the batcher to stop instead of
+/// serving a dead pipeline.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_batch<G: GradSource>(
     source: &mut G,
     batch: Vec<(Vec<i32>, mpsc::Sender<String>)>,
     seq_len: usize,
+    wants_grads: bool,
     t0: Instant,
     jtx: &mpsc::SyncSender<Job>,
     stats: &ServerStats,
@@ -498,10 +550,15 @@ fn dispatch_batch<G: GradSource>(
         tokens.extend_from_slice(&t);
         replies.push(r);
     }
-    match source.extract(&tokens, n) {
-        Ok(queries) => {
+    let prepared = if wants_grads {
+        source.extract(&tokens, n).map(PlaneBatch::Grads)
+    } else {
+        Ok(PlaneBatch::Tokens { tokens, n, seq_len })
+    };
+    match prepared {
+        Ok(batch) => {
             stats.reg.server_batches.inc();
-            if jtx.send(Job { queries, replies, t0 }).is_err() {
+            if jtx.send(Job { batch, replies, t0 }).is_err() {
                 // every worker died: the handlers see the dropped reply
                 // senders and answer with `shutdown`; stop the batcher
                 // so run() reports the worker panic
@@ -525,13 +582,15 @@ fn dispatch_batch<G: GradSource>(
     true
 }
 
-/// Score one batch on a worker and answer its clients.  A scoring error
-/// answers this batch's clients with `batch_failed` and the worker
-/// keeps pulling jobs.
-fn score_job(scorer: &mut dyn Scorer, job: Job, k: usize, stats: &ServerStats) {
+/// Score one batch on a worker — through whatever plane the worker
+/// owns, in-process or scatter-gather — and answer its clients.  A
+/// scoring error answers this batch's clients with `batch_failed` and
+/// the worker keeps pulling jobs.
+fn score_job(plane: &mut dyn ShardPlane, job: Job, k: usize, stats: &ServerStats) {
     let n = job.replies.len();
-    // the whole store pass runs scoped to THIS server's registry (so
-    // the executor/reader/cache families it publishes land here, not in
+    // the whole pass runs scoped to THIS server's registry (so the
+    // executor/reader/cache families a local plane publishes — and the
+    // coord_* families a remote plane publishes — land here, not in
     // the process global) and on a fresh trace track — one span tree
     // per scored batch, shard lanes nested under it
     let ctx =
@@ -540,37 +599,80 @@ fn score_job(scorer: &mut dyn Scorer, job: Job, k: usize, stats: &ServerStats) {
         let mut sp = telemetry::trace::span("server_batch");
         if let Some(s) = sp.as_mut() {
             s.arg("batch", n);
+            s.arg_str("plane", plane.name());
         }
-        scorer.score_sink(&job.queries, SinkSpec::TopK(k))
+        plane.score_topk(&job.batch, k)
     });
     match result {
-        Ok(report) => {
-            let topk = report.topk_with_scores(k);
+        Ok(rep) => {
+            let lat = &rep.latency;
             let latency = job.t0.elapsed().as_secs_f64();
             // counters land BEFORE the replies so a client that probes
             // `stats` right after its answer sees itself counted (the
             // cache/byte families were published by the pass itself)
             stats.reg.server_batch_wall.observe_secs(latency);
             stats.reg.server_served.add(n as u64);
+            stats.reg.node_queries.add(n as u64);
+            // per-node stats of a scatter-gather pass; empty (and
+            // omitted from replies) on the local plane
+            let node_stats: Vec<Value> = rep
+                .nodes
+                .iter()
+                .map(|ns| {
+                    obj([
+                        ("addr", ns.addr.as_str().into()),
+                        (
+                            "shards",
+                            Value::Arr(ns.shards.iter().map(|&s| s.into()).collect()),
+                        ),
+                        ("wall_s", ns.wall_s.into()),
+                        ("retries", ns.retries.into()),
+                        ("failover", ns.failover.into()),
+                    ])
+                })
+                .collect();
             for (q, reply) in job.replies.iter().enumerate() {
-                let top = &topk[q];
-                let resp = obj([
-                    ("topk", Value::Arr(top.iter().map(|&(i, _)| i.into()).collect())),
+                let top = rep.topk[q].entries();
+                // `scores` (f64) is for humans and loses NaN to JSON's
+                // null; `topk_bits` carries each f32 score's exact bit
+                // pattern as an integer (integers <= 2^32 survive the
+                // f64 JSON number path bit-for-bit), which is what lets
+                // a coordinator rebuild this node's heaps and merge
+                // them IDENTICALLY to a local pass
+                let bits = top
+                    .iter()
+                    .map(|&(s, i)| {
+                        Value::Arr(vec![i.into(), (s.to_bits() as usize).into()])
+                    })
+                    .collect();
+                let mut fields = vec![
+                    ("topk", Value::Arr(top.iter().map(|&(_, i)| i.into()).collect())),
                     (
                         "scores",
-                        Value::Arr(top.iter().map(|&(_, s)| (s as f64).into()).collect()),
+                        Value::Arr(top.iter().map(|&(s, _)| (s as f64).into()).collect()),
                     ),
+                    ("topk_bits", Value::Arr(bits)),
                     ("latency_s", latency.into()),
+                    // per-phase CPU seconds of the pass, so a
+                    // coordinator can aggregate a cross-node
+                    // LatencyBreakdown (sum phases, max walls)
+                    ("load_s", lat.load_s.into()),
+                    ("compute_s", lat.compute_s.into()),
+                    ("precondition_s", lat.precondition_s.into()),
                     ("batch", n.into()),
-                    ("bytes_read", (report.bytes_read as usize).into()),
-                    ("bytes_skipped", (report.bytes_skipped as usize).into()),
-                    ("cache_hits", report.cache_hits.into()),
-                    ("cache_misses", report.cache_misses.into()),
-                    ("bytes_from_cache", (report.bytes_from_cache as usize).into()),
-                ]);
+                    ("bytes_read", (lat.bytes_read as usize).into()),
+                    ("bytes_skipped", (lat.bytes_skipped as usize).into()),
+                    ("cache_hits", lat.cache_hits.into()),
+                    ("cache_misses", lat.cache_misses.into()),
+                    ("bytes_from_cache", (lat.bytes_from_cache as usize).into()),
+                ];
+                if !node_stats.is_empty() {
+                    fields.push(("nodes", Value::Arr(node_stats.clone())));
+                }
+                let resp = obj(fields);
                 let _ = reply.send(resp.to_string());
             }
-            log::info!("served batch of {n} in {latency:.3}s");
+            log::info!("served batch of {n} in {latency:.3}s via the {} plane", plane.name());
         }
         Err(e) => {
             stats.reg.server_batch_errors.inc();
@@ -645,6 +747,7 @@ fn parse_tokens(
     Ok(out)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     tx: mpsc::SyncSender<Incoming>,
@@ -653,15 +756,39 @@ fn handle_conn(
     seq_len: usize,
     vocab: usize,
     workers: usize,
+    io_timeout: Option<Duration>,
 ) -> anyhow::Result<()> {
     let peer = stream.peer_addr()?;
+    // a peer that stalls mid-line (or never writes) trips the socket
+    // timeout instead of pinning this handler thread forever
+    stream.set_read_timeout(io_timeout)?;
+    stream.set_write_timeout(io_timeout)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // connection closed
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // connection closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // structured goodbye, then close: the peer held the
+                // connection open past the io timeout without
+                // completing a request line
+                log::warn!("closing idle/stalled connection from {peer}");
+                let _ = writeln!(
+                    stream,
+                    "{}",
+                    error_json("connection idle past the io timeout", "timeout", None)
+                );
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
         }
         let v = match Value::parse(line.trim()) {
             Ok(v) => v,

@@ -551,6 +551,9 @@ pub struct ShardSpan {
     pub path: PathBuf,
     pub start: usize,
     pub count: usize,
+    /// this shard's index in the MANIFEST — differs from its position
+    /// in `ShardSet::spans` when the set was opened over a subset
+    pub shard: usize,
 }
 
 /// An opened store: v1 single file (one pseudo-shard) or v2 shard files.
@@ -574,11 +577,28 @@ pub struct ShardSet {
 
 impl ShardSet {
     pub fn open(base: &Path) -> anyhow::Result<ShardSet> {
+        ShardSet::open_subset(base, None)
+    }
+
+    /// Open only the manifest shards listed in `subset` (strictly
+    /// increasing manifest indices), validating just those data files.
+    /// Spans keep their GLOBAL `start` offsets from the full manifest,
+    /// so every score this set produces carries the same original
+    /// example index a full open would — the property that lets a node
+    /// serving a shard subset feed the coordinator's `merge_topk`
+    /// without any coordinate translation.  `None` opens every shard.
+    pub fn open_subset(base: &Path, subset: Option<&[usize]>) -> anyhow::Result<ShardSet> {
         let meta = StoreMeta::load(base)?;
         let stride = meta.bytes_per_example() as u64;
         let mut spans = Vec::new();
         match meta.shards.clone() {
             None => {
+                if let Some(sel) = subset {
+                    anyhow::ensure!(
+                        sel == [0],
+                        "shard subset {sel:?} on an unsharded (v1) store: only shard 0 exists"
+                    );
+                }
                 let path = StoreMeta::data_path(base);
                 let size = std::fs::metadata(&path)?.len();
                 anyhow::ensure!(
@@ -587,19 +607,37 @@ impl ShardSet {
                     size,
                     meta.total_bytes()
                 );
-                spans.push(ShardSpan { path, start: 0, count: meta.n_examples });
+                spans.push(ShardSpan { path, start: 0, count: meta.n_examples, shard: 0 });
             }
             Some(counts) => {
+                if let Some(sel) = subset {
+                    anyhow::ensure!(!sel.is_empty(), "shard subset is empty");
+                    anyhow::ensure!(
+                        sel.windows(2).all(|w| w[0] < w[1]),
+                        "shard subset {sel:?} must be strictly increasing (no duplicates)"
+                    );
+                    let last = *sel.last().unwrap();
+                    anyhow::ensure!(
+                        last < counts.len(),
+                        "shard subset names shard {last} but the manifest has {} shards",
+                        counts.len()
+                    );
+                }
+                // global start offsets come from the FULL manifest even
+                // when only a subset is opened
                 let mut start = 0usize;
                 for (i, &count) in counts.iter().enumerate() {
-                    let path = StoreMeta::shard_data_path(base, i);
-                    let size = std::fs::metadata(&path)?.len();
-                    anyhow::ensure!(
-                        size == count as u64 * stride,
-                        "shard {i} size mismatch: {size} B on disk vs {count} examples \
-                         x {stride} B/example in the manifest"
-                    );
-                    spans.push(ShardSpan { path, start, count });
+                    let wanted = subset.map_or(true, |sel| sel.contains(&i));
+                    if wanted {
+                        let path = StoreMeta::shard_data_path(base, i);
+                        let size = std::fs::metadata(&path)?.len();
+                        anyhow::ensure!(
+                            size == count as u64 * stride,
+                            "shard {i} size mismatch: {size} B on disk vs {count} examples \
+                             x {stride} B/example in the manifest"
+                        );
+                        spans.push(ShardSpan { path, start, count, shard: i });
+                    }
                     start += count;
                 }
             }
@@ -666,7 +704,10 @@ impl ShardSet {
         self.cache.as_ref()
     }
 
-    /// A reader over shard `i`, reporting global example indices.
+    /// A reader over the set's `i`-th span, reporting global example
+    /// indices.  The reader's `shard` (cache key, trace lane) is the
+    /// span's MANIFEST index, so a subset-opened set shares cache
+    /// entries with a full open of the same store.
     pub fn reader(&self, i: usize) -> StoreReader {
         let s = &self.spans[i];
         StoreReader {
@@ -675,7 +716,7 @@ impl ShardSet {
             start: s.start,
             count: s.count,
             prefetch_depth: self.prefetch_depth,
-            shard: i,
+            shard: s.shard,
             cache: self.cache.clone(),
             encoded: false,
         }
@@ -1044,6 +1085,35 @@ mod tests {
         for i in 0..set.n_shards() {
             assert!(sums.find(set.shard(i).start).is_some(), "shard {i}");
         }
+    }
+
+    #[test]
+    fn subset_open_keeps_global_offsets_and_validates() {
+        let (base, meta) = write_sharded(StoreKind::Dense, 20, 1, 3, "subset_open");
+        let counts = meta.shards.clone().unwrap();
+        let full = ShardSet::open(&base.path).unwrap();
+        // the middle shard alone: one span, at its FULL-manifest offset
+        let sub = ShardSet::open_subset(&base.path, Some(&[1])).unwrap();
+        assert_eq!(sub.n_shards(), 1);
+        assert_eq!(sub.shard(0).start, full.shard(1).start);
+        assert_eq!(sub.shard(0).count, counts[1]);
+        assert_eq!(sub.shard(0).shard, 1);
+        // a subset reader reports the same global coordinates
+        let r = sub.reader(0);
+        assert_eq!((r.start, r.count), (full.shard(1).start, counts[1]));
+        // malformed subsets are clean errors
+        for bad in [&[][..], &[1, 1][..], &[2, 1][..], &[3][..]] {
+            assert!(ShardSet::open_subset(&base.path, Some(bad)).is_err(), "{bad:?}");
+        }
+        // a missing NON-subset shard file doesn't block a subset open
+        std::fs::remove_file(StoreMeta::shard_data_path(&base.path, 0)).unwrap();
+        assert!(ShardSet::open_subset(&base.path, Some(&[1, 2])).is_ok());
+        assert!(ShardSet::open(&base.path).is_err());
+
+        // v1 store: only the trivial subset exists
+        let (mono, _) = write_store(StoreKind::Dense, 7, 1);
+        assert!(ShardSet::open_subset(&mono.path, Some(&[0])).is_ok());
+        assert!(ShardSet::open_subset(&mono.path, Some(&[1])).is_err());
     }
 
     #[test]

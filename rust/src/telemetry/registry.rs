@@ -219,6 +219,13 @@ pub struct Registry {
     pub server_queue_depth: Gauge,
     pub server_workers: Gauge,
     pub server_batch_wall: Histogram,
+    // -- distributed plane (source: `query::coordinator` + node mode) --
+    pub coord_scatter: Counter,
+    pub coord_gather: Counter,
+    pub coord_retry: Counter,
+    pub coord_failover: Counter,
+    pub node_queries: Counter,
+    pub node_shards: Gauge,
 }
 
 /// How a registry field renders: plain counter, seconds-valued counter,
@@ -405,6 +412,36 @@ impl Registry {
                 "Wall time from batch admission to reply.",
                 H(&self.server_batch_wall),
             ),
+            (
+                "lorif_coord_scatter_total",
+                "Per-node scatter requests issued by the coordinator.",
+                C(&self.coord_scatter),
+            ),
+            (
+                "lorif_coord_gather_total",
+                "Per-node replies gathered and merged by the coordinator.",
+                C(&self.coord_gather),
+            ),
+            (
+                "lorif_coord_retry_total",
+                "Scatter attempts retried after a node error or timeout.",
+                C(&self.coord_retry),
+            ),
+            (
+                "lorif_coord_failover_total",
+                "Scatter attempts answered by a replica after its primary failed.",
+                C(&self.coord_failover),
+            ),
+            (
+                "lorif_node_queries_total",
+                "Query batches scored by this process in shard-node mode.",
+                C(&self.node_queries),
+            ),
+            (
+                "lorif_node_shards",
+                "Manifest shards this process serves (node mode; 0 = all).",
+                G(&self.node_shards),
+            ),
         ]
     }
 
@@ -560,6 +597,12 @@ mod tests {
             "lorif_pool_jobs_total",
             "lorif_server_submitted_total",
             "lorif_server_batch_wall_seconds",
+            "lorif_coord_scatter_total",
+            "lorif_coord_gather_total",
+            "lorif_coord_retry_total",
+            "lorif_coord_failover_total",
+            "lorif_node_queries_total",
+            "lorif_node_shards",
         ] {
             assert!(text.contains(&format!("# HELP {family} ")), "{family} missing HELP");
             assert!(text.contains(&format!("# TYPE {family} ")), "{family} missing TYPE");

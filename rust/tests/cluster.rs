@@ -1,0 +1,469 @@
+//! Distributed-serving integration tests: an in-process cluster of
+//! shard nodes behind a scatter-gather coordinator.
+//!
+//! The invariant every scenario asserts is the tentpole claim of the
+//! distributed mode: **distributed ≡ local, bit for bit**.  Each node
+//! is the ordinary attribution server over a SUBSET-opened store
+//! (`ShardSet::open_subset` keeps global example coordinates); the
+//! coordinator forwards raw token rows, gathers the per-node heaps via
+//! the lossless `topk_bits` channel, and merges them with the same
+//! `merge_topk` reduction the local executor uses.  We compare the
+//! coordinator's wire replies against a direct local `score_sink` pass
+//! over the full store — same kernel, same curvature, same deterministic
+//! gradient extraction — as raw `(index, f32-bit-pattern)` pairs, for
+//! all four store kernels and both exact prune modes.
+//!
+//! The failover scenario kills one node's primary mid-run and asserts
+//! the replica answers its shards with the SAME exact results, and that
+//! the retry is visible in `lorif_coord_retry/failover_total`.
+//!
+//! `LORIF_CLUSTER_NODES` raises the node count (the CI nightly
+//! hardening job runs a wider cluster than the per-PR default of 3).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use lorif::attribution::{QueryGrads, QueryLayer, ScoreOutput, Scorer, SinkSpec};
+use lorif::curvature::{DenseCurvature, TruncatedCurvature};
+use lorif::linalg::Mat;
+use lorif::query::server::{GradSource, ServeSummary, Server, ServerConfig};
+use lorif::query::{RemotePlane, ShardPlane, TokenSource, Topology};
+use lorif::runtime::{ExtractBatch, LayerGrads};
+use lorif::sketch::PruneMode;
+use lorif::store::{CodecId, ShardSet, ShardedWriter, StoreKind, StoreMeta};
+use lorif::util::json::Value;
+use lorif::util::prng::Rng;
+
+const VOCAB: usize = 64;
+const SEQ_LEN: usize = 8;
+const DIMS: [(usize, usize); 2] = [(4, 6), (3, 5)];
+const C: usize = 2;
+const N_QUERIES: usize = 5;
+const K: usize = 7;
+
+fn cluster_nodes() -> usize {
+    std::env::var("LORIF_CLUSTER_NODES")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 2)
+        .unwrap_or(3)
+}
+
+/// Deterministic CPU gradient source — a pure function of the token
+/// row, so every node and the local reference extract IDENTICAL query
+/// gradients (the property the exactness argument leans on).
+struct FakeSource;
+
+impl GradSource for FakeSource {
+    fn vocab(&self) -> usize {
+        VOCAB
+    }
+
+    fn seq_len(&self) -> usize {
+        SEQ_LEN
+    }
+
+    fn extract(&mut self, tokens: &[i32], n: usize) -> anyhow::Result<QueryGrads> {
+        assert_eq!(tokens.len(), n * SEQ_LEN, "batcher must hand fixed-length rows");
+        let layers = DIMS
+            .iter()
+            .enumerate()
+            .map(|(l, &(d1, d2))| {
+                let mut g = Mat::zeros(n, d1 * d2);
+                let mut u = Mat::zeros(n, d1 * C);
+                let mut v = Mat::zeros(n, d2 * C);
+                for q in 0..n {
+                    let row = &tokens[q * SEQ_LEN..(q + 1) * SEQ_LEN];
+                    for (j, x) in g.row_mut(q).iter_mut().enumerate() {
+                        *x = (row[j % SEQ_LEN] as f32 - 31.5) * 0.0625
+                            + (l + 1) as f32 * 0.125 * ((j % 5) as f32 - 2.0);
+                    }
+                    for (j, x) in u.row_mut(q).iter_mut().enumerate() {
+                        *x = row[(j + 1) % SEQ_LEN] as f32 * 0.03125 - 0.75;
+                    }
+                    for (j, x) in v.row_mut(q).iter_mut().enumerate() {
+                        *x = row[(j + 2) % SEQ_LEN] as f32 * 0.015625 + 0.25;
+                    }
+                }
+                QueryLayer { g, u, v }
+            })
+            .collect();
+        Ok(QueryGrads { n_query: n, c: C, proj_dims: DIMS.to_vec(), layers })
+    }
+}
+
+fn query_tokens(q: usize) -> Vec<i32> {
+    (0..SEQ_LEN).map(|j| ((q * 13 + j * 5 + 3) % VOCAB) as i32).collect()
+}
+
+fn tokens_line(tokens: &[i32]) -> String {
+    let list: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    format!("{{\"tokens\": [{}]}}", list.join(", "))
+}
+
+/// The on-disk fixtures every setup shares: one dense + one factored
+/// sharded store, and ONE curvature per family built from the FULL
+/// store — exactly as production stage 2 does, so nodes and the local
+/// reference precondition identically.
+struct Stores {
+    dense: PathBuf,
+    factored: PathBuf,
+    curv_dense: Arc<DenseCurvature>,
+    curv_trunc: Arc<TruncatedCurvature>,
+}
+
+fn build_stores(name: &str, shards: usize, n: usize) -> Stores {
+    let dir = std::env::temp_dir().join("lorif_cluster_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(271);
+    let mut write = |kind: StoreKind, tag: &str| -> PathBuf {
+        let base = dir.join(format!("{name}_{tag}"));
+        let meta = StoreMeta {
+            kind,
+            tier: "small".into(),
+            f: 4,
+            c: C,
+            layers: DIMS.to_vec(),
+            n_examples: 0,
+            shards: None,
+            summary_chunk: None,
+            codec: CodecId::Bf16,
+        };
+        let layers: Vec<LayerGrads> = DIMS
+            .iter()
+            .map(|&(d1, d2)| LayerGrads {
+                g: Mat::random_normal(n, d1 * d2, 1.0, &mut rng),
+                u: Mat::random_normal(n, d1 * C, 1.0, &mut rng),
+                v: Mat::random_normal(n, d2 * C, 1.0, &mut rng),
+            })
+            .collect();
+        let mut w = ShardedWriter::create(&base, meta, shards, n).unwrap();
+        w.append(&ExtractBatch { losses: vec![0.0; n], layers, valid: n }).unwrap();
+        w.finalize().unwrap();
+        base
+    };
+    let dense = write(StoreKind::Dense, "dense");
+    let factored = write(StoreKind::Factored, "factored");
+    let curv_dense = Arc::new(DenseCurvature::build(&ShardSet::open(&dense).unwrap(), 0.1).unwrap());
+    let curv_trunc =
+        Arc::new(TruncatedCurvature::build(&ShardSet::open(&factored).unwrap(), 6, 8, 3, 0.1, 0).unwrap());
+    Stores { dense, factored, curv_dense, curv_trunc }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Kernel {
+    GradDot,
+    Logra,
+    TrackStar,
+    Lorif,
+}
+
+const KERNELS: [Kernel; 4] = [Kernel::GradDot, Kernel::Logra, Kernel::TrackStar, Kernel::Lorif];
+
+/// One scorer over `subset` of the store's manifest shards (`None` =
+/// the full store: the local reference).  Small chunks so the tiny
+/// fixtures still exercise chunk streaming and the pruner.
+fn make_scorer(
+    kernel: Kernel,
+    stores: &Stores,
+    subset: Option<&[usize]>,
+    prune: PruneMode,
+) -> Box<dyn Scorer + Send> {
+    match kernel {
+        Kernel::GradDot => {
+            let mut s = lorif::attribution::graddot::GradDotScorer::new(
+                ShardSet::open_subset(&stores.dense, subset).unwrap(),
+            );
+            s.chunk_size = 5;
+            s.score_threads = 1;
+            s.prune = prune;
+            Box::new(s)
+        }
+        Kernel::Logra => {
+            let mut s = lorif::attribution::logra::LograScorer::new(
+                ShardSet::open_subset(&stores.dense, subset).unwrap(),
+                Arc::clone(&stores.curv_dense),
+            );
+            s.chunk_size = 5;
+            s.score_threads = 1;
+            s.prune = prune;
+            Box::new(s)
+        }
+        Kernel::TrackStar => {
+            let mut s = lorif::attribution::trackstar::TrackStarScorer::new(
+                ShardSet::open_subset(&stores.dense, subset).unwrap(),
+                Arc::clone(&stores.curv_dense),
+            );
+            s.chunk_size = 5;
+            s.score_threads = 1;
+            s.prune = prune;
+            Box::new(s)
+        }
+        Kernel::Lorif => {
+            let mut s = lorif::attribution::LorifScorer::new(
+                ShardSet::open_subset(&stores.factored, subset).unwrap(),
+                Arc::clone(&stores.curv_trunc),
+            );
+            s.chunk_size = 5;
+            s.score_threads = 1;
+            s.prune = prune;
+            Box::new(s)
+        }
+    }
+}
+
+struct Running {
+    addr: SocketAddr,
+    handle: std::thread::JoinHandle<anyhow::Result<ServeSummary>>,
+}
+
+fn start_node(
+    kernel: Kernel,
+    stores: &Stores,
+    subset: Vec<usize>,
+    prune: PruneMode,
+) -> Running {
+    let scorers = vec![make_scorer(kernel, stores, Some(&subset), prune)];
+    let server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        window_ms: 0,
+        topk: K,
+        queue_cap: 32,
+        io_timeout_ms: 0,
+        shards_served: subset.len(),
+    })
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run(FakeSource, scorers));
+    Running { addr, handle }
+}
+
+fn start_coordinator(spec: &str, io_timeout_ms: u64) -> Running {
+    let topology = Topology::parse(spec, None).unwrap();
+    let planes: Vec<Box<dyn ShardPlane + Send>> = vec![Box::new(RemotePlane {
+        topology,
+        io_timeout: (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms)),
+    })];
+    let server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        window_ms: 0,
+        topk: K,
+        queue_cap: 32,
+        io_timeout_ms,
+        shards_served: 0,
+    })
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || {
+        server.run_planes(TokenSource { vocab: VOCAB, seq_len: SEQ_LEN }, planes)
+    });
+    Running { addr, handle }
+}
+
+/// One request, one reply line, parsed.
+fn request(addr: SocketAddr, line: &str) -> Value {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    writeln!(s, "{line}").unwrap();
+    let mut r = BufReader::new(s);
+    let mut resp = String::new();
+    r.read_line(&mut resp).expect("read reply");
+    assert!(!resp.trim().is_empty(), "server must always reply (got EOF)");
+    Value::parse(resp.trim()).expect("reply is JSON")
+}
+
+fn shutdown(r: Running) -> ServeSummary {
+    let v = request(r.addr, "{\"cmd\": \"shutdown\"}");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+    r.handle.join().expect("server thread").expect("serve result")
+}
+
+/// The local reference for one query: top-k as exact `(index, bits)`
+/// pairs, plus the pass's total byte ledger (`read + skipped`, which is
+/// scan-order-invariant even when pruning decisions differ).
+fn local_reference(
+    local: &mut Box<dyn Scorer + Send>,
+    tokens: &[i32],
+) -> (Vec<(usize, u32)>, u64) {
+    let qg = FakeSource.extract(tokens, 1).unwrap();
+    let rep = local.score_sink(&qg, SinkSpec::TopK(K)).unwrap();
+    let total = rep.bytes_read + rep.bytes_skipped;
+    let ScoreOutput::TopK(heaps) = &rep.output else {
+        panic!("topk sink must produce heaps")
+    };
+    let bits = heaps[0].entries().iter().map(|&(s, i)| (i, s.to_bits())).collect();
+    (bits, total)
+}
+
+/// The coordinator reply's top-k as exact `(index, bits)` pairs.
+fn wire_bits(v: &Value) -> Vec<(usize, u32)> {
+    v.get("topk_bits")
+        .and_then(Value::as_arr)
+        .unwrap_or_else(|| panic!("reply missing topk_bits: {v}"))
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().expect("pair");
+            (p[0].as_usize().unwrap(), p[1].as_f64().unwrap() as u32)
+        })
+        .collect()
+}
+
+/// One sample value from a Prometheus text exposition.
+fn metric_value(text: &str, name: &str) -> u64 {
+    let prefix = format!("{name} ");
+    let line = text
+        .lines()
+        .find(|l| l.starts_with(&prefix))
+        .unwrap_or_else(|| panic!("exposition missing sample for {name}"));
+    line[prefix.len()..].trim().parse::<f64>().expect("numeric sample") as u64
+}
+
+#[test]
+fn distributed_equals_local_bit_for_bit_across_kernels_and_prune_modes() {
+    let n_nodes = cluster_nodes();
+    let shards = 2 * n_nodes;
+    let stores = build_stores("exact", shards, shards * 8);
+
+    for kernel in KERNELS {
+        for prune in [PruneMode::Off, PruneMode::Exact] {
+            // one node per contiguous shard pair
+            let nodes: Vec<Running> = (0..n_nodes)
+                .map(|i| start_node(kernel, &stores, vec![2 * i, 2 * i + 1], prune))
+                .collect();
+            let spec = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| format!("{}={}-{}", n.addr, 2 * i, 2 * i + 1))
+                .collect::<Vec<_>>()
+                .join(",");
+            let coord = start_coordinator(&spec, 0);
+
+            let mut local = make_scorer(kernel, &stores, None, prune);
+            for q in 0..N_QUERIES {
+                let tokens = query_tokens(q);
+                let (want, local_scan) = local_reference(&mut local, &tokens);
+                let v = request(coord.addr, &tokens_line(&tokens));
+                let got = wire_bits(&v);
+                assert_eq!(
+                    got, want,
+                    "{kernel:?} prune {prune:?} query {q}: distributed != local"
+                );
+
+                // the reply's per-node stats cover the whole cluster,
+                // nobody failed over
+                let stats = v.get("nodes").and_then(Value::as_arr).unwrap_or_else(|| {
+                    panic!("coordinator reply missing nodes array: {v}")
+                });
+                assert_eq!(stats.len(), n_nodes);
+                assert!(stats
+                    .iter()
+                    .all(|s| s.get("failover").and_then(Value::as_bool) == Some(false)));
+
+                // byte-ledger reconciliation: summed over nodes,
+                // read + skipped still equals the local full-scan count
+                // (what WAS read may differ under pruning — per-node
+                // thresholds evolve independently — but the total is
+                // invariant)
+                let dist_scan = (v.get("bytes_read").and_then(Value::as_usize).unwrap()
+                    + v.get("bytes_skipped").and_then(Value::as_usize).unwrap())
+                    as u64;
+                assert_eq!(
+                    dist_scan, local_scan,
+                    "{kernel:?} prune {prune:?} query {q}: byte ledgers do not reconcile"
+                );
+            }
+
+            let summary = shutdown(coord);
+            assert_eq!(summary.served, N_QUERIES, "{kernel:?} {prune:?}");
+            assert_eq!(summary.failed, 0);
+            for n in nodes {
+                let s = shutdown(n);
+                assert_eq!(s.served, N_QUERIES, "every node scored every query");
+            }
+        }
+    }
+}
+
+#[test]
+fn killing_a_node_mid_run_fails_over_to_its_replica_with_exact_results() {
+    let n_nodes = cluster_nodes();
+    let shards = 2 * n_nodes;
+    let stores = build_stores("failover", shards, shards * 8);
+    let (kernel, prune) = (Kernel::GradDot, PruneMode::Exact);
+
+    let primaries: Vec<Running> = (0..n_nodes)
+        .map(|i| start_node(kernel, &stores, vec![2 * i, 2 * i + 1], prune))
+        .collect();
+    // node 0's replica serves the SAME shard subset
+    let replica = start_node(kernel, &stores, vec![0, 1], prune);
+    let spec = primaries
+        .iter()
+        .enumerate()
+        .map(|(i, n)| {
+            if i == 0 {
+                format!("{}=0-1/{}", n.addr, replica.addr)
+            } else {
+                format!("{}={}-{}", n.addr, 2 * i, 2 * i + 1)
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    let coord = start_coordinator(&spec, 2000);
+
+    let mut local = make_scorer(kernel, &stores, None, prune);
+    // healthy phase: primaries answer, no failover
+    for q in 0..2 {
+        let tokens = query_tokens(q);
+        let (want, _) = local_reference(&mut local, &tokens);
+        let v = request(coord.addr, &tokens_line(&tokens));
+        assert_eq!(wire_bits(&v), want, "healthy query {q}");
+    }
+
+    // kill node 0's primary MID-RUN (join so its port is fully released
+    // before the next scatter tries it)
+    let mut primaries = primaries.into_iter();
+    let primary0 = primaries.next().unwrap();
+    shutdown(primary0);
+
+    // degraded phase: results must be COMPLETE and exact — shard 0-1
+    // answered by the replica
+    for q in 2..N_QUERIES {
+        let tokens = query_tokens(q);
+        let (want, _) = local_reference(&mut local, &tokens);
+        let v = request(coord.addr, &tokens_line(&tokens));
+        assert_eq!(wire_bits(&v), want, "failover query {q}: result incomplete or inexact");
+        let stats = v.get("nodes").and_then(Value::as_arr).unwrap();
+        let fo: Vec<&Value> = stats
+            .iter()
+            .filter(|s| s.get("failover").and_then(Value::as_bool) == Some(true))
+            .collect();
+        assert_eq!(fo.len(), 1, "exactly node 0 fails over: {v}");
+        assert_eq!(
+            fo[0].get("addr").and_then(Value::as_str),
+            Some(replica.addr.to_string().as_str()),
+            "the replica answered"
+        );
+        assert_eq!(fo[0].get("retries").and_then(Value::as_usize), Some(1));
+    }
+
+    // the retry is visible in the coordinator's own registry
+    let m = request(coord.addr, "{\"cmd\": \"metrics\"}");
+    let text = m.get("metrics").and_then(Value::as_str).unwrap().to_string();
+    let failovers = metric_value(&text, "lorif_coord_failover_total");
+    assert!(failovers >= 1, "failover not counted: {failovers}");
+    assert!(metric_value(&text, "lorif_coord_retry_total") >= failovers);
+    assert!(metric_value(&text, "lorif_coord_gather_total") >= 1);
+
+    let summary = shutdown(coord);
+    assert_eq!(summary.served, N_QUERIES, "every query answered despite the kill");
+    assert_eq!(summary.failed, 0);
+    for n in primaries {
+        shutdown(n);
+    }
+    let s = shutdown(replica);
+    assert_eq!(s.served, N_QUERIES - 2, "replica served exactly the post-kill queries");
+}

@@ -610,6 +610,74 @@ fn prop_parallel_topk_equals_stable_argsort() {
 }
 
 #[test]
+fn prop_merge_topk_two_level_equals_one_shot() {
+    // The distributed exactness argument: a node merges its own shards'
+    // heaps, the coordinator merges the node heaps — and that two-level
+    // reduction must equal merging ALL shard heaps at once, for ANY
+    // grouping of shards onto nodes (including orderings that interleave
+    // shard index ranges), with NaN scores and exact-duplicate scores
+    // forcing the ascending-index tie-break to decide entries.
+    use lorif::query::{merge_topk, TopK};
+    for_each_case("merge-topk-two-level", |seed, rng| {
+        let nq = 1 + rng.below(3);
+        let n_shards = 2 + rng.below(6);
+        let k = 1 + rng.below(10);
+        // per-shard heaps over disjoint global index ranges, scores
+        // drawn from a tiny quantized set so duplicates are common
+        let mut start = 0usize;
+        let shard_heaps: Vec<Vec<TopK>> = (0..n_shards)
+            .map(|_| {
+                let count = 1 + rng.below(30);
+                let heaps: Vec<TopK> = (0..nq)
+                    .map(|_| {
+                        let mut h = TopK::new(k);
+                        for i in 0..count {
+                            let r = rng.below(16);
+                            let s =
+                                if r == 0 { f32::NAN } else { (r as f32 - 8.0) * 0.5 };
+                            h.push(start + i, s);
+                        }
+                        h
+                    })
+                    .collect();
+                start += count;
+                heaps
+            })
+            .collect();
+
+        // one-shot reference: every shard heap merged in one reduction
+        let one_shot = merge_topk(nq, k, shard_heaps.clone());
+
+        // random shard -> node assignment (possibly interleaving index
+        // ranges across nodes), then the coordinator-style second level
+        let n_nodes = 1 + rng.below(n_shards);
+        let mut groups: Vec<Vec<Vec<TopK>>> = vec![Vec::new(); n_nodes];
+        for heaps in &shard_heaps {
+            groups[rng.below(n_nodes)].push(heaps.clone());
+        }
+        let node_heaps: Vec<Vec<TopK>> = groups
+            .into_iter()
+            .filter(|g| !g.is_empty())
+            .map(|g| merge_topk(nq, k, g))
+            .collect();
+        let two_level = merge_topk(nq, k, node_heaps);
+
+        // bit-exact comparison (f64 would erase NaN identity)
+        let flat = |heaps: &[TopK]| -> Vec<Vec<(u32, usize)>> {
+            heaps
+                .iter()
+                .map(|h| h.entries().iter().map(|&(s, i)| (s.to_bits(), i)).collect())
+                .collect()
+        };
+        assert_eq!(
+            flat(&two_level),
+            flat(&one_shot),
+            "seed {seed} (nq={nq} shards={n_shards} nodes={n_nodes} k={k})"
+        );
+    });
+}
+
+#[test]
 fn prop_shard_boundaries_partition_examples() {
     // ShardedWriter splits N examples into contiguous shards that
     // partition [0, N): sizes sum to N, every shard (except possibly

@@ -143,6 +143,8 @@ fn start_server(name: &str, cfg_mut: impl FnOnce(&mut ServerConfig), delay_ms: u
         window_ms: 5,
         topk: 3,
         queue_cap: 32,
+        io_timeout_ms: 0,
+        shards_served: 0,
     };
     cfg_mut(&mut cfg);
     let scorers = scorer_pool(&base, 2);
@@ -382,6 +384,27 @@ fn stats_endpoint_reports_counters_and_cache_hit_rate() {
     finish(r);
 }
 
+#[test]
+fn stalled_connection_times_out_with_structured_error() {
+    let r = start_server("io_timeout", |c| c.io_timeout_ms = 150, 0);
+    let addr = r.addr;
+    // a client that stalls mid-line: without --io-timeout-ms it would
+    // pin its handler thread forever; with it, the read times out and
+    // the server answers with a structured timeout error, then closes
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "{{\"tokens\": [1,").unwrap(); // no newline: the line never completes
+    s.flush().unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("timeout error reply");
+    let v = Value::parse(resp.trim()).expect("reply is JSON");
+    assert_eq!(code_of(&v), Some("timeout"), "{v}");
+    // the service stays healthy for well-behaved clients
+    let v = request(addr, "{\"tokens\": [1, 2]}");
+    assert!(v.get("topk").is_some(), "{v}");
+    finish(r);
+}
+
 /// One sample value from a Prometheus text exposition (plain counter /
 /// gauge lines, not `_bucket` series).
 fn metric_value(text: &str, name: &str) -> u64 {
@@ -497,6 +520,8 @@ fn cached_and_cold_replies_are_bit_identical() {
             window_ms: 0,
             topk: 5,
             queue_cap: 8,
+            io_timeout_ms: 0,
+            shards_served: 0,
         })
         .unwrap();
         let addr = server.local_addr();
