@@ -14,8 +14,38 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const SWITCHES: &[&str] =
-    &["help", "verbose", "cached-projections", "no-prefetch", "full", "coordinator", "node"];
+const SWITCHES: &[&str] = &[
+    "help",
+    "verbose",
+    "cached-projections",
+    "no-prefetch",
+    "full",
+    "coordinator",
+    "node",
+    "json",
+];
+
+/// Parse a `k=v,k2=v2` label spec (the `metrics dump --label` flag)
+/// into ordered pairs.  Keys must be non-empty and `=`-free; values may
+/// contain anything except the `,` separator (escaping for the
+/// Prometheus text format happens at render time, see
+/// `telemetry::escape_label_value`).
+pub fn parse_label_spec(spec: &str) -> anyhow::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("label '{part}' is not k=v"))?;
+        anyhow::ensure!(!k.is_empty(), "label '{part}' has an empty key");
+        out.push((k.to_string(), v.to_string()));
+    }
+    anyhow::ensure!(!out.is_empty(), "--label needs at least one k=v pair");
+    Ok(out)
+}
 
 impl Args {
     pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
@@ -237,6 +267,25 @@ mod tests {
         let mut cfg = crate::config::Config::default();
         a.apply_to_config(&mut cfg).unwrap();
         assert_eq!(cfg.prune, crate::sketch::PruneMode::Off);
+    }
+
+    #[test]
+    fn label_spec_parses_pairs_and_rejects_malformed() {
+        assert_eq!(
+            parse_label_spec("role=coordinator,env=ci").unwrap(),
+            vec![
+                ("role".to_string(), "coordinator".to_string()),
+                ("env".to_string(), "ci".to_string())
+            ]
+        );
+        // values may carry '=' (only the first splits)
+        assert_eq!(
+            parse_label_spec("q=a=b").unwrap(),
+            vec![("q".to_string(), "a=b".to_string())]
+        );
+        assert!(parse_label_spec("novalue").is_err());
+        assert!(parse_label_spec("=x").is_err());
+        assert!(parse_label_spec("").is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!   store inspect   print a store's manifest/layout/codec/byte report
 //!   store recode    migrate a store between codecs/layouts (streaming)
 //!   metrics dump    print the telemetry registry (Prometheus text)
+//!   slowlog         fetch a running server's slow-query log
 //!   gen-corpus      generate + persist the synthetic topic corpus [xla]
 //!   train           train the base model (cached checkpoint)      [xla]
 //!   build-index     stage 1 (gradient stores) + stage 2 (curvature) [xla]
@@ -28,10 +29,12 @@
 //!   --quant-score on|off|auto --trace-out PATH
 //!   --method lorif|logra|graddot|trackstar|repsim|ekfac
 //! Serve flags: --addr A --max-batch N --window-ms N --topk K
-//!   --score-workers N --queue-cap N --io-timeout-ms N
+//!   --score-workers N --queue-cap N --io-timeout-ms N --slowlog K
 //!   --node --node-shards LIST     serve a manifest-shard subset (node mode)
 //!   --coordinator --nodes addr=shards[/replica],... [--total-shards N]
 //!                 [--vocab N --seq-len N]   scatter-gather front end (pure CPU)
+//! Coordinator fleet flags: --probe-interval-ms N --probe-timeout-ms N
+//!   --probe-failures N --scrape-interval-ms N --event-log PATH
 //! Store recode flags: --out BASE --codec bf16|int8|int4 [--shards S]
 //!   [--summary-chunk G] [--chunk-size N] [--cluster K]
 
@@ -86,6 +89,7 @@ fn run() -> anyhow::Result<()> {
         "info" => info(&cfg),
         "store" => store_cmd(&args),
         "metrics" => metrics_cmd(&args),
+        "slowlog" => slowlog_cmd(&args),
         // the scatter-gather coordinator never touches the model — it
         // forwards validated token rows and merges node heaps — so it
         // dispatches BEFORE the xla gate and works in pure-CPU builds
@@ -207,11 +211,103 @@ fn metrics_cmd(args: &Args) -> anyhow::Result<()> {
     let verb = args.positional.first().map(String::as_str).unwrap_or("");
     match verb {
         "dump" => {
-            print!("{}", lorif::telemetry::global().render_prometheus());
+            // `--label k=v,k2=v2` stamps base labels on every sample —
+            // the same label grammar the coordinator's federation uses
+            // (values are escaped per the Prometheus text format)
+            match args.get("label") {
+                Some(spec) => {
+                    let labels = lorif::cli::parse_label_spec(spec)?;
+                    let pairs: Vec<(&str, &str)> =
+                        labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+                    print!(
+                        "{}",
+                        lorif::telemetry::global().render_prometheus_with(&pairs)
+                    );
+                }
+                None => print!("{}", lorif::telemetry::global().render_prometheus()),
+            }
             Ok(())
         }
         other => anyhow::bail!("unknown metrics subcommand '{other}' (usage: lorif metrics dump)"),
     }
+}
+
+/// `lorif slowlog --addr host:port [--json]` — fetch a running
+/// server's (or coordinator's) slow-query log over the line protocol
+/// and print the K slowest batches, slowest-first.
+fn slowlog_cmd(args: &Args) -> anyhow::Result<()> {
+    use lorif::util::json::Value;
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7979");
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    writeln!(stream, "{{\"cmd\": \"slowlog\"}}")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let v = Value::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("unparseable reply from {addr}: {e}"))?;
+    if let Some(msg) = v.get("error").and_then(Value::as_str) {
+        anyhow::bail!("{addr}: {msg}");
+    }
+    let entries = v
+        .get("slowlog")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("{addr}: reply carries no slowlog array"))?;
+    if args.has("json") {
+        println!("{}", Value::Arr(entries.to_vec()));
+        return Ok(());
+    }
+    if entries.is_empty() {
+        println!("slowlog of {addr}: empty (no batches scored yet, or --slowlog 0)");
+        return Ok(());
+    }
+    println!("slowlog of {addr}: {} slowest batches", entries.len());
+    for (rank, e) in entries.iter().enumerate() {
+        let f = |k: &str| e.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        let u = |k: &str| e.get(k).and_then(Value::as_usize).unwrap_or(0);
+        let lat = e.get("latency");
+        let lf = |k: &str| {
+            lat.and_then(|l| l.get(k)).and_then(Value::as_f64).unwrap_or(0.0)
+        };
+        println!(
+            "#{:<2} wall {:.3}s  batch {:<3} trace {:<6} at +{:.1}s  \
+             (load {:.3}s compute {:.3}s pre {:.3}s, {:.1} MB read)",
+            rank + 1,
+            f("wall_s"),
+            u("batch"),
+            u("trace_id"),
+            f("ts_s"),
+            lf("load_s"),
+            lf("compute_s"),
+            lf("precondition_s"),
+            lf("bytes_read") / 1e6,
+        );
+        if let Some(nodes) = e.get("nodes").and_then(Value::as_arr) {
+            for n in nodes {
+                let addr = n.get("addr").and_then(Value::as_str).unwrap_or("?");
+                let wall = n.get("wall_s").and_then(Value::as_f64).unwrap_or(0.0);
+                let retries = n.get("retries").and_then(Value::as_usize).unwrap_or(0);
+                let failover =
+                    n.get("failover").and_then(Value::as_bool).unwrap_or(false);
+                let proactive =
+                    n.get("proactive").and_then(Value::as_bool).unwrap_or(false);
+                let mut flags = String::new();
+                if proactive {
+                    flags.push_str(" proactive-failover");
+                } else if failover {
+                    flags.push_str(" failover");
+                }
+                if retries > 0 {
+                    flags.push_str(&format!(" retries={retries}"));
+                }
+                println!("     node {addr}: {wall:.3}s{flags}");
+            }
+        }
+    }
+    Ok(())
 }
 
 /// `lorif serve --coordinator` — the scatter-gather front end.  Speaks
@@ -222,21 +318,56 @@ fn metrics_cmd(args: &Args) -> anyhow::Result<()> {
 /// answers are bit-for-bit what one process over the whole store would
 /// return.  Pure CPU: no model runtime, no store, no artifacts.
 fn serve_coordinator(args: &Args) -> anyhow::Result<()> {
-    use lorif::query::{RemotePlane, Server, ServerConfig, ShardPlane, TokenSource, Topology};
+    use lorif::query::{
+        Fleet, FleetOptions, RemotePlane, Server, ServerConfig, ShardPlane, TokenSource,
+        Topology,
+    };
+    use std::time::Duration;
 
     let spec = args.get("nodes").ok_or_else(|| {
         anyhow::anyhow!("--coordinator needs --nodes host:port=shards[/replica],...")
     })?;
     let topology = Topology::parse(spec, args.get_usize("total-shards")?)?;
     let io_timeout_ms = args.get_u64("io-timeout-ms")?.unwrap_or(0);
-    let io_timeout = (io_timeout_ms > 0).then(|| std::time::Duration::from_millis(io_timeout_ms));
+    let io_timeout = (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms));
+    // the fleet monitor: health probes + metrics federation over the
+    // same topology the planes scatter to.  Sharing one Arc is what
+    // lets scatter legs route PROACTIVELY around a probed-down primary
+    // instead of paying --io-timeout-ms to discover it per batch.
+    let defaults = FleetOptions::default();
+    let fleet = Fleet::new(
+        topology.clone(),
+        FleetOptions {
+            probe_interval: Duration::from_millis(
+                args.get_u64("probe-interval-ms")?
+                    .unwrap_or(defaults.probe_interval.as_millis() as u64),
+            ),
+            probe_timeout: Duration::from_millis(
+                args.get_u64("probe-timeout-ms")?
+                    .unwrap_or(defaults.probe_timeout.as_millis() as u64)
+                    .max(1),
+            ),
+            scrape_interval: Duration::from_millis(
+                args.get_u64("scrape-interval-ms")?
+                    .unwrap_or(defaults.scrape_interval.as_millis() as u64),
+            ),
+            fail_threshold: args
+                .get_u64("probe-failures")?
+                .unwrap_or(defaults.fail_threshold as u64)
+                .max(1) as u32,
+            event_log: args.get("event-log").map(std::path::PathBuf::from),
+        },
+    )?;
     // one RemotePlane per scoring worker: batch N+1 scatters while
     // batch N is still in flight on the nodes
     let workers = args.get_usize("score-workers")?.unwrap_or(2).max(1);
     let planes: Vec<Box<dyn ShardPlane + Send>> = (0..workers)
         .map(|_| {
-            Box::new(RemotePlane { topology: topology.clone(), io_timeout })
-                as Box<dyn ShardPlane + Send>
+            Box::new(RemotePlane {
+                topology: topology.clone(),
+                io_timeout,
+                fleet: Some(fleet.clone()),
+            }) as Box<dyn ShardPlane + Send>
         })
         .collect();
     // admission validates tokens exactly as the nodes will; override
@@ -253,6 +384,7 @@ fn serve_coordinator(args: &Args) -> anyhow::Result<()> {
         queue_cap: args.get_usize("queue-cap")?.unwrap_or(64),
         io_timeout_ms,
         shards_served: 0,
+        slowlog_cap: args.get_usize("slowlog")?.unwrap_or(32),
     };
     log::info!(
         "coordinator on {} over {} node(s) / {} shard(s)",
@@ -260,7 +392,9 @@ fn serve_coordinator(args: &Args) -> anyhow::Result<()> {
         topology.nodes.len(),
         topology.total_shards
     );
-    let summary = Server::bind(sc)?.run_planes(source, planes)?;
+    let mut server = Server::bind(sc)?;
+    server.set_fleet(fleet);
+    let summary = server.run_planes(source, planes)?;
     println!(
         "coordinated {} queries in {} batches ({} shed, {} failed, {} dropped at shutdown)",
         summary.served, summary.batches, summary.shed, summary.failed, summary.dropped
@@ -497,6 +631,7 @@ fn serve(cfg: Config, args: &Args) -> anyhow::Result<()> {
         queue_cap: args.get_usize("queue-cap")?.unwrap_or(64),
         io_timeout_ms: args.get_u64("io-timeout-ms")?.unwrap_or(0),
         shards_served: subset.as_ref().map_or(0, Vec::len),
+        slowlog_cap: args.get_usize("slowlog")?.unwrap_or(32),
     };
     if let Some(s) = &subset {
         log::info!("node mode: serving manifest shards {s:?}");
@@ -621,7 +756,8 @@ fn print_help() {
          store tools: store inspect <base>\n\
                       store recode <base> --out <base> --codec bf16|int8|int4\n\
                                    [--shards S] [--summary-chunk G] [--cluster K]\n\
-         telemetry:   metrics dump   (Prometheus text exposition)\n\
+         telemetry:   metrics dump [--label k=v,...]   (Prometheus text)\n\
+                      slowlog --addr A [--json]   (K slowest batches)\n\
                       --trace-out PATH   (Chrome trace-event spans, Perfetto)\n\
          common flags: --tier small|medium|large --f N --c N --r N\n\
                        --n-train N --n-query N --seed S --method NAME\n\
@@ -632,9 +768,13 @@ fn print_help() {
                        --work-dir DIR --artifacts-dir DIR --trace-out PATH\n\
          serve flags:  --addr A --max-batch N --window-ms N --topk K\n\
                        --score-workers N --queue-cap N --io-timeout-ms N\n\
+                       --slowlog K   (slow-query ring capacity, default 32)\n\
          distributed:  serve --node [--node-shards 0-2+5]   (shard node)\n\
                        serve --coordinator --nodes addr=shards[/replica],...\n\
                              [--total-shards N] [--vocab N] [--seq-len N]\n\
+                             [--probe-interval-ms N] [--probe-timeout-ms N]\n\
+                             [--probe-failures N] [--scrape-interval-ms N]\n\
+                             [--event-log PATH]   (fleet monitor knobs)\n\
          pure-CPU builds support `info`, `store`, `metrics`, and `serve\n\
          --coordinator`; the rest need --features xla\n\
          see rust/README.md for a walkthrough."

@@ -26,13 +26,26 @@
 //! reply) is retried once against the replica; only if both fail does
 //! the batch fail.  Retries and failovers are counted in the
 //! `lorif_coord_*` families and surfaced per node in the reply's
-//! `"nodes"` array.
+//! `"nodes"` array.  With a [`Fleet`] monitor attached (`query::fleet`),
+//! routing becomes PROACTIVE: a primary the health probes already
+//! marked down is skipped entirely and its replica queried first
+//! (`lorif_coord_reroute_total`, `NodeStat::proactive`), so a hung
+//! primary costs nothing per batch instead of one `--io-timeout-ms`
+//! penalty each; scatter outcomes feed back into the fleet's health
+//! state machine and JSONL event log.
+//!
+//! **Traces.** Each scatter leg forwards the coordinator query's trace
+//! ID over the line protocol (`"trace"` field), so the node-side
+//! `server_batch` span tree lands under the same `trace_id` as the
+//! coordinator's `scatter` span in a merged Perfetto timeline.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::engine::LatencyBreakdown;
+use super::fleet::Fleet;
 use super::parallel::{merge_topk, TopK};
 use super::plane::{NodeStat, PlaneBatch, PlaneReply, ShardPlane};
 use super::server::GradSource;
@@ -198,6 +211,10 @@ pub struct RemotePlane {
     /// connect/read/write timeout for each node leg (`--io-timeout-ms`;
     /// `None` = block forever, which disables timeout-driven failover)
     pub io_timeout: Option<Duration>,
+    /// health monitor shared with the serving loop: routes scatters
+    /// around probe-down primaries and receives scatter-outcome
+    /// evidence (`None` = reactive-only failover, the pre-fleet path)
+    pub fleet: Option<Arc<Fleet>>,
 }
 
 /// One node's gathered answer.
@@ -223,33 +240,48 @@ impl ShardPlane for RemotePlane {
         let (n, seq_len) = (*n, *seq_len);
         anyhow::ensure!(n > 0 && tokens.len() == n * seq_len, "malformed token batch");
         let t0 = Instant::now();
-        // capture the scoped registry HERE: the scatter legs run on
-        // fresh threads, where the thread-local telemetry scope would
-        // otherwise fall back to the process global
-        let reg = telemetry::current_registry();
+        // capture the FULL telemetry ctx HERE: the scatter legs run on
+        // fresh threads, where the thread-local scope would otherwise
+        // fall back to the process-global registry — and the trace ID
+        // must ride along so each leg's span (and the trace ID the leg
+        // forwards to its node) stays attached to this query
+        let ctx = telemetry::current_ctx();
         let timeout = self.io_timeout;
-        let answers: Vec<anyhow::Result<NodeAnswer>> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .topology
-                .nodes
-                .iter()
-                .map(|node| {
-                    let reg = &reg;
-                    s.spawn(move || {
-                        query_node(node, tokens, n, seq_len, timeout, reg)
+        let fleet = self.fleet.clone();
+        let answers: Vec<anyhow::Result<NodeAnswer>> = {
+            let mut sp = telemetry::trace::span("scatter");
+            if let Some(sp) = sp.as_mut() {
+                sp.arg("nodes", self.topology.nodes.len());
+                sp.arg("queries", n);
+            }
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .topology
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, node)| {
+                        let ctx = ctx.clone();
+                        let fleet = fleet.as_deref();
+                        s.spawn(move || {
+                            telemetry::with_ctx(ctx, || {
+                                query_node(node, i, tokens, n, seq_len, timeout, fleet)
+                            })
+                        })
                     })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join().unwrap_or_else(|_| {
-                        Err(anyhow::anyhow!("scatter thread panicked"))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(anyhow::anyhow!("scatter thread panicked"))
+                        })
                     })
-                })
-                .collect()
-        });
+                    .collect()
+            })
+        };
 
+        let mut gsp = telemetry::trace::span("gather_merge");
         let mut parts = Vec::with_capacity(answers.len());
         let mut breakdowns = Vec::with_capacity(answers.len());
         let mut nodes = Vec::with_capacity(answers.len());
@@ -259,7 +291,11 @@ impl ShardPlane for RemotePlane {
             breakdowns.push(a.breakdown);
             nodes.push(a.stat);
         }
+        if let Some(sp) = gsp.as_mut() {
+            sp.arg("heaps", parts.len());
+        }
         let topk = merge_topk(n, k, parts);
+        drop(gsp);
         // coordinator overhead = everything the slowest node's own wall
         // doesn't explain: scatter fan-out, network, rebuild, merge
         let slowest = breakdowns.iter().fold(0.0f64, |m, b| m.max(b.wall_s));
@@ -269,59 +305,118 @@ impl ShardPlane for RemotePlane {
     }
 }
 
-/// Run one node's scatter leg: primary first, then (on any failure) its
-/// replica.  Counts `lorif_coord_scatter/gather/retry/failover`.
+/// Run one node's scatter leg.  Without a fleet: primary first, then
+/// (on any failure) its replica.  With a fleet: [`Fleet::route`] may
+/// send the leg straight to the replica of a probe-down primary
+/// (proactive reroute — no io-timeout paid), with the primary as the
+/// fall-back.  Counts `lorif_coord_scatter/gather/retry/failover/
+/// reroute` and reports every attempt's outcome to the fleet.
 fn query_node(
     node: &NodeSpec,
+    node_idx: usize,
     tokens: &[i32],
     n: usize,
     seq_len: usize,
     timeout: Option<Duration>,
-    reg: &crate::telemetry::Registry,
+    fleet: Option<&Fleet>,
 ) -> anyhow::Result<NodeAnswer> {
     let t0 = Instant::now();
+    let reg = telemetry::current_registry();
+    let trace_id = telemetry::current_ctx().trace.id;
+    let (first, proactive) = match fleet {
+        Some(f) => f.route(node),
+        None => (node.addr.clone(), false),
+    };
+    let mut sp = telemetry::trace::span_on("scatter_node", 1 + node_idx as u32);
+    if let Some(sp) = sp.as_mut() {
+        sp.arg_str("addr", &first);
+        sp.arg("proactive", proactive);
+        sp.arg("queries", n);
+    }
     reg.coord_scatter.inc();
-    match talk(&node.addr, tokens, n, seq_len, timeout) {
+    if proactive {
+        reg.coord_reroute.inc();
+    }
+    match talk(&first, tokens, n, seq_len, timeout, trace_id) {
         Ok((heaps, breakdown)) => {
             reg.coord_gather.inc();
+            if let Some(f) = fleet {
+                f.observe(&first, true);
+                if proactive {
+                    f.note_failover(&node.addr, &first, true);
+                }
+            }
+            if proactive {
+                reg.coord_failover.inc();
+            }
             let stat = NodeStat {
-                addr: node.addr.clone(),
+                addr: first,
                 shards: node.shards.clone(),
                 wall_s: t0.elapsed().as_secs_f64(),
                 retries: 0,
-                failover: false,
+                failover: proactive,
+                proactive,
             };
             Ok(NodeAnswer { heaps, breakdown, stat })
         }
-        Err(primary_err) => {
-            let Some(replica) = &node.replica else {
-                return Err(primary_err
+        Err(first_err) => {
+            let timed_out = format!("{first_err:#}").contains("timed out");
+            if let Some(f) = fleet {
+                f.observe(&first, false);
+                if timed_out {
+                    f.event("timeout", &first, vec![]);
+                }
+            }
+            // the alternate endpoint: normally the replica; the primary
+            // itself when the proactive route already chose the replica
+            let alt = if proactive { Some(node.addr.clone()) } else { node.replica.clone() };
+            let Some(alt) = alt else {
+                return Err(first_err
                     .context(format!("node {} failed (no replica configured)", node.addr)));
             };
             log::warn!(
-                "node {} failed ({primary_err:#}); retrying its shards on replica {replica}",
+                "node {}: endpoint {first} failed ({first_err:#}); retrying its \
+                 shards on {alt}",
                 node.addr
             );
             reg.coord_retry.inc();
             reg.coord_scatter.inc();
-            match talk(replica, tokens, n, seq_len, timeout) {
+            match talk(&alt, tokens, n, seq_len, timeout, trace_id) {
                 Ok((heaps, breakdown)) => {
-                    reg.coord_failover.inc();
                     reg.coord_gather.inc();
+                    if let Some(f) = fleet {
+                        f.observe(&alt, true);
+                    }
+                    // answered by the replica after the primary failed =
+                    // classic reactive failover; answered by the PRIMARY
+                    // after a proactive reroute bounced is a fail-back
+                    let failover = !proactive;
+                    if failover {
+                        reg.coord_failover.inc();
+                        if let Some(f) = fleet {
+                            f.note_failover(&node.addr, &alt, false);
+                        }
+                    }
                     let stat = NodeStat {
-                        addr: replica.clone(),
+                        addr: alt,
                         shards: node.shards.clone(),
                         wall_s: t0.elapsed().as_secs_f64(),
                         retries: 1,
-                        failover: true,
+                        failover,
+                        proactive: false,
                     };
                     Ok(NodeAnswer { heaps, breakdown, stat })
                 }
-                Err(replica_err) => Err(anyhow::anyhow!(
-                    "node {} failed ({primary_err:#}) and its replica {replica} \
-                     failed too ({replica_err:#})",
-                    node.addr
-                )),
+                Err(alt_err) => {
+                    if let Some(f) = fleet {
+                        f.observe(&alt, false);
+                    }
+                    Err(anyhow::anyhow!(
+                        "node {}: {first} failed ({first_err:#}) and {alt} failed \
+                         too ({alt_err:#})",
+                        node.addr
+                    ))
+                }
             }
         }
     }
@@ -332,12 +427,15 @@ fn query_node(
 /// per-query heaps from `topk_bits` and summing the per-reply ledgers
 /// into one per-node breakdown (the replies are sequential on the node,
 /// so summing `latency_s` into `wall_s` is the sequential-merge case).
+/// A nonzero `trace_id` rides each query line as the `"trace"` field,
+/// so the node scores the batch on the coordinator query's trace track.
 fn talk(
     addr: &str,
     tokens: &[i32],
     n: usize,
     seq_len: usize,
     timeout: Option<Duration>,
+    trace_id: u64,
 ) -> anyhow::Result<(Vec<TopK>, LatencyBreakdown)> {
     let stream = connect(addr, timeout)?;
     stream.set_read_timeout(timeout)?;
@@ -345,10 +443,14 @@ fn talk(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     for row in tokens.chunks(seq_len) {
-        let line = obj([(
+        let mut pairs = vec![(
             "tokens",
             Value::Arr(row.iter().map(|&t| (t as usize).into()).collect()),
-        )]);
+        )];
+        if trace_id != 0 {
+            pairs.push(("trace", (trace_id as usize).into()));
+        }
+        let line = obj(pairs);
         writeln!(stream, "{line}").map_err(io_ctx(addr, "write"))?;
     }
     stream.flush().map_err(io_ctx(addr, "flush"))?;
@@ -376,7 +478,9 @@ fn talk(
     Ok((heaps, breakdown.unwrap_or_else(zero_breakdown)))
 }
 
-fn connect(addr: &str, timeout: Option<Duration>) -> anyhow::Result<TcpStream> {
+/// Open a connection with an optional connect timeout (shared with the
+/// fleet monitor's probe/scrape loops).
+pub(crate) fn connect(addr: &str, timeout: Option<Duration>) -> anyhow::Result<TcpStream> {
     match timeout {
         None => TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("{addr}: connect: {e}")),
         Some(t) => {

@@ -8,6 +8,7 @@
 
 use crate::attribution::{QueryGrads, ScoreReport, Scorer, SinkMode, SinkSpec};
 use crate::linalg::Mat;
+use crate::util::json::Value;
 
 #[derive(Debug, Clone)]
 pub struct LatencyBreakdown {
@@ -105,6 +106,25 @@ impl LatencyBreakdown {
         }
         out.wall_s = slowest + coord_overhead_s;
         out
+    }
+
+    /// The breakdown as JSON object fields — one canonical
+    /// serialization shared by the slow-query log (`query::slowlog`)
+    /// and reporting paths, so the field names can never drift between
+    /// the `slowlog` verb and the documented reply schema.
+    pub fn json_fields(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("load_s", self.load_s.into()),
+            ("compute_s", self.compute_s.into()),
+            ("precondition_s", self.precondition_s.into()),
+            ("total_s", self.total_s.into()),
+            ("wall_s", self.wall_s.into()),
+            ("bytes_read", (self.bytes_read as usize).into()),
+            ("bytes_skipped", (self.bytes_skipped as usize).into()),
+            ("cache_hits", self.cache_hits.into()),
+            ("cache_misses", self.cache_misses.into()),
+            ("bytes_from_cache", (self.bytes_from_cache as usize).into()),
+        ]
     }
 
     /// Share of the pass's CPU time spent on store I/O (load / total).
@@ -213,6 +233,30 @@ mod tests {
             }
             Ok(ScoreReport::full(scores, timer, 42))
         }
+    }
+
+    #[test]
+    fn json_fields_carry_the_whole_breakdown() {
+        let lat = LatencyBreakdown {
+            load_s: 1.5,
+            compute_s: 0.5,
+            precondition_s: 0.25,
+            total_s: 2.25,
+            wall_s: 0.75,
+            bytes_read: 1024,
+            bytes_skipped: 4096,
+            cache_hits: 3,
+            cache_misses: 1,
+            bytes_from_cache: 512,
+        };
+        let v = crate::util::json::obj(lat.json_fields());
+        assert_eq!(v.get("load_s").and_then(Value::as_f64), Some(1.5));
+        assert_eq!(v.get("wall_s").and_then(Value::as_f64), Some(0.75));
+        assert_eq!(v.get("bytes_read").and_then(Value::as_usize), Some(1024));
+        assert_eq!(v.get("bytes_skipped").and_then(Value::as_usize), Some(4096));
+        assert_eq!(v.get("cache_hits").and_then(Value::as_usize), Some(3));
+        assert_eq!(v.get("bytes_from_cache").and_then(Value::as_usize), Some(512));
+        assert_eq!(v.get("total_s").and_then(Value::as_f64), Some(2.25));
     }
 
     #[test]

@@ -1,0 +1,848 @@
+//! Fleet monitor: health probes, the endpoint state machine, the
+//! federation scrape loop, and the structured JSONL event log.
+//!
+//! One [`Fleet`] is shared between the coordinator's serving loop and
+//! its `RemotePlane`s.  Two background threads (started by
+//! [`Fleet::start`] under the server's captured telemetry ctx, so their
+//! metrics land in the server's scoped registry like every pool thread):
+//!
+//! - the **probe loop** issues `{"cmd":"health"}` to every primary and
+//!   replica on `probe_interval` with its own short `probe_timeout`
+//!   (independent of `--io-timeout-ms`), feeding the per-endpoint
+//!   state machine below;
+//! - the **scrape loop** issues `{"cmd":"metrics"}` on
+//!   `scrape_interval` and stores each member's exposition verbatim, so
+//!   [`Fleet::federate`] can merge the whole fleet into one labeled
+//!   page (`telemetry::federation`) with synthesized
+//!   `lorif_fleet_up` / `lorif_fleet_scrape_duration_seconds` /
+//!   `lorif_fleet_scrape_age_seconds` / `lorif_fleet_health_state`
+//!   per-node gauges.
+//!
+//! # State machine
+//!
+//! `Healthy → Degraded` on the first failure, `→ Down` after
+//! `fail_threshold` CONSECUTIVE failures (or any failure while
+//! half-open).  A success while `Down` re-opens the endpoint HALF-OPEN
+//! (state `Degraded`): one more success promotes it to `Healthy`, one
+//! failure sends it straight back to `Down` without burning the full
+//! threshold again.  Scatter outcomes ([`Fleet::observe`]) feed the same
+//! machine as probes, so a batch-visible failure counts as evidence
+//! between probe ticks.  [`Fleet::route`] consults the machine: a
+//! `Down` primary with a not-`Down` replica routes proactively to the
+//! replica — the scatter never touches the primary, so a hung node
+//! costs nothing per batch instead of one io-timeout each.
+//!
+//! # Event log
+//!
+//! `--event-log PATH` appends one JSON object per line:
+//! `{"ts_ms": <monotonic ms since fleet start>, "seq": n, "event":
+//! "node_up|node_down|failover|shed|timeout", "node": "host:port", ...}`.
+//! Timestamps are monotonic (not wall-clock) so ordering survives NTP
+//! steps; `seq` breaks ties within one millisecond.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::coordinator::{connect, NodeSpec, Topology};
+use crate::telemetry::{self, federation, trace, Registry, TelemetryCtx};
+use crate::util::json::{obj, Value};
+
+/// Endpoint health as seen by the probe state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+    Down,
+}
+
+impl Health {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Down => "down",
+        }
+    }
+
+    /// Numeric encoding for the `lorif_fleet_health_state` gauge.
+    fn as_level(self) -> u64 {
+        match self {
+            Health::Healthy => 0,
+            Health::Degraded => 1,
+            Health::Down => 2,
+        }
+    }
+}
+
+/// Knobs for the monitor loops (`--probe-interval-ms` etc.).
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    pub probe_interval: Duration,
+    /// connect/read timeout for ONE probe — deliberately much shorter
+    /// than `--io-timeout-ms`, so a hung node is detected in probe time
+    pub probe_timeout: Duration,
+    pub scrape_interval: Duration,
+    /// consecutive probe/scatter failures before `Degraded → Down`
+    pub fail_threshold: u32,
+    pub event_log: Option<PathBuf>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            probe_interval: Duration::from_millis(1000),
+            probe_timeout: Duration::from_millis(250),
+            scrape_interval: Duration::from_millis(5000),
+            fail_threshold: 3,
+            event_log: None,
+        }
+    }
+}
+
+/// Mutable monitor state for one primary or replica endpoint.
+struct Endpoint {
+    addr: String,
+    node: usize,
+    is_replica: bool,
+    health: Health,
+    /// `Down` endpoint answered one probe; next observation decides
+    half_open: bool,
+    consecutive_failures: u32,
+    failovers: u64,
+    last_probe: Option<Instant>,
+    last_scrape: Option<Instant>,
+    last_scrape_ok: bool,
+    scrape_duration_s: f64,
+    exposition: Option<String>,
+    /// queue depth + served count from the last good health reply
+    probe_depth: Option<u64>,
+    probe_served: Option<u64>,
+    last_error: Option<String>,
+}
+
+impl Endpoint {
+    fn new(addr: String, node: usize, is_replica: bool) -> Endpoint {
+        Endpoint {
+            addr,
+            node,
+            is_replica,
+            health: Health::Healthy,
+            half_open: false,
+            consecutive_failures: 0,
+            failovers: 0,
+            last_probe: None,
+            last_scrape: None,
+            last_scrape_ok: false,
+            scrape_duration_s: 0.0,
+            exposition: None,
+            probe_depth: None,
+            probe_served: None,
+            last_error: None,
+        }
+    }
+}
+
+/// One observation through the state machine.  Pure so the transition
+/// table is unit-testable without sockets; returns the new
+/// `(health, half_open, consecutive_failures)`.
+fn step(
+    health: Health,
+    half_open: bool,
+    fails: u32,
+    ok: bool,
+    threshold: u32,
+) -> (Health, bool, u32) {
+    if ok {
+        match health {
+            // a down endpoint answered: half-open trial, not yet healthy
+            Health::Down => (Health::Degraded, true, 0),
+            Health::Degraded | Health::Healthy => (Health::Healthy, false, 0),
+        }
+    } else {
+        let fails = fails.saturating_add(1);
+        if half_open {
+            // failed its half-open trial: straight back down
+            (Health::Down, false, fails)
+        } else {
+            match health {
+                Health::Down => (Health::Down, false, fails),
+                _ if fails >= threshold => (Health::Down, false, fails),
+                _ => (Health::Degraded, false, fails),
+            }
+        }
+    }
+}
+
+/// The shared fleet monitor (see module docs).
+pub struct Fleet {
+    topology: Topology,
+    opts: FleetOptions,
+    endpoints: Mutex<Vec<Endpoint>>,
+    stop: AtomicBool,
+    epoch: Instant,
+    events: Option<Mutex<BufWriter<File>>>,
+    seq: AtomicU64,
+}
+
+impl Fleet {
+    pub fn new(topology: Topology, opts: FleetOptions) -> anyhow::Result<Arc<Fleet>> {
+        let mut endpoints = Vec::new();
+        for (i, node) in topology.nodes.iter().enumerate() {
+            endpoints.push(Endpoint::new(node.addr.clone(), i, false));
+            if let Some(r) = &node.replica {
+                endpoints.push(Endpoint::new(r.clone(), i, true));
+            }
+        }
+        let events = match &opts.event_log {
+            Some(path) => {
+                if let Some(dir) = path.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                let f = File::create(path).map_err(|e| {
+                    anyhow::anyhow!("--event-log {}: {e}", path.display())
+                })?;
+                Some(Mutex::new(BufWriter::new(f)))
+            }
+            None => None,
+        };
+        Ok(Arc::new(Fleet {
+            topology,
+            opts,
+            endpoints: Mutex::new(endpoints),
+            stop: AtomicBool::new(false),
+            epoch: Instant::now(),
+            events,
+            seq: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn options(&self) -> &FleetOptions {
+        &self.opts
+    }
+
+    /// Spawn the probe and scrape loops.  `ctx` is the SPAWNING scope's
+    /// telemetry ctx, captured by the caller and re-installed inside
+    /// each thread (the same pattern as `util::pool::run` and the
+    /// reader prefetch thread), so probe/scrape metrics land in the
+    /// server's scoped registry rather than the process-global one.
+    pub fn start(self: &Arc<Self>, ctx: TelemetryCtx) -> Vec<JoinHandle<()>> {
+        let probe = {
+            let fleet = Arc::clone(self);
+            let ctx = ctx.clone();
+            std::thread::Builder::new()
+                .name("lorif-fleet-probe".into())
+                .spawn(move || {
+                    telemetry::with_ctx(ctx, || {
+                        // probe immediately so a dead node is detected
+                        // within the first interval, not after it
+                        while !fleet.stop.load(Ordering::Relaxed) {
+                            fleet.probe_round();
+                            fleet.sleep(fleet.opts.probe_interval);
+                        }
+                    })
+                })
+                .expect("spawn probe loop")
+        };
+        let scrape = {
+            let fleet = Arc::clone(self);
+            std::thread::Builder::new()
+                .name("lorif-fleet-scrape".into())
+                .spawn(move || {
+                    telemetry::with_ctx(ctx, || {
+                        while !fleet.stop.load(Ordering::Relaxed) {
+                            fleet.scrape_round();
+                            fleet.sleep(fleet.opts.scrape_interval);
+                        }
+                    })
+                })
+                .expect("spawn scrape loop")
+        };
+        vec![probe, scrape]
+    }
+
+    /// Signal the loops to exit (join the handles from [`Fleet::start`]
+    /// afterwards).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Interruptible sleep: wakes within ~10ms of [`Fleet::stop`].
+    fn sleep(&self, d: Duration) {
+        let deadline = Instant::now() + d;
+        while Instant::now() < deadline && !self.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(10).min(d));
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    // -- routing + evidence (called from the scatter path) -------------
+
+    /// Pick the endpoint a scatter leg should try FIRST: the primary,
+    /// unless probes marked it `Down` and its replica is not — then the
+    /// replica, flagged proactive.  A node whose endpoints are all down
+    /// still returns the primary (the leg must try something; reactive
+    /// failover remains as the backstop).
+    pub fn route(&self, node: &NodeSpec) -> (String, bool) {
+        let eps = self.endpoints.lock().unwrap();
+        let primary_down = eps
+            .iter()
+            .find(|e| !e.is_replica && e.addr == node.addr)
+            .map(|e| e.health == Health::Down)
+            .unwrap_or(false);
+        if primary_down {
+            if let Some(replica) = &node.replica {
+                let replica_down = eps
+                    .iter()
+                    .find(|e| e.is_replica && e.addr == *replica)
+                    .map(|e| e.health == Health::Down)
+                    .unwrap_or(false);
+                if !replica_down {
+                    return (replica.clone(), true);
+                }
+            }
+        }
+        (node.addr.clone(), false)
+    }
+
+    /// Feed one scatter attempt's outcome into the state machine (same
+    /// transitions as a probe, without the probe counters).
+    pub fn observe(&self, addr: &str, ok: bool) {
+        self.apply(addr, ok, None);
+    }
+
+    /// Record a failover decision against the node's primary endpoint
+    /// and log it (`proactive` = the replica was chosen before any
+    /// attempt, off probe evidence alone).
+    pub fn note_failover(&self, primary: &str, answered_by: &str, proactive: bool) {
+        {
+            let mut eps = self.endpoints.lock().unwrap();
+            if let Some(ep) = eps.iter_mut().find(|e| !e.is_replica && e.addr == primary) {
+                ep.failovers += 1;
+            }
+        }
+        self.event(
+            "failover",
+            primary,
+            vec![
+                ("replica", answered_by.to_string().into()),
+                ("proactive", proactive.into()),
+            ],
+        );
+    }
+
+    // -- state machine --------------------------------------------------
+
+    /// Apply one observation to `addr`'s endpoint.  `error` doubles as
+    /// the probe/scrape error detail kept for the stats verb.
+    fn apply(&self, addr: &str, ok: bool, error: Option<String>) {
+        let reg = telemetry::current_registry();
+        let mut transition: Option<(Health, Health)> = None;
+        {
+            let mut eps = self.endpoints.lock().unwrap();
+            let Some(ep) = eps.iter_mut().find(|e| e.addr == addr) else {
+                return;
+            };
+            let from = ep.health;
+            let (health, half_open, fails) = step(
+                from,
+                ep.half_open,
+                ep.consecutive_failures,
+                ok,
+                self.opts.fail_threshold,
+            );
+            ep.health = health;
+            ep.half_open = half_open;
+            ep.consecutive_failures = fails;
+            if !ok {
+                ep.last_error = error;
+            } else {
+                ep.last_error = None;
+            }
+            if from != health {
+                transition = Some((from, health));
+            }
+            self.publish_state_gauges(&reg, &eps);
+        }
+        if let Some((from, to)) = transition {
+            reg.probe_transitions.inc();
+            let kind = match to {
+                Health::Down => Some("node_down"),
+                Health::Healthy => Some("node_up"),
+                Health::Degraded => None,
+            };
+            trace::instant(
+                "health_transition",
+                &[
+                    ("from", Value::Str(from.as_str().into()).to_string()),
+                    ("to", Value::Str(to.as_str().into()).to_string()),
+                ],
+            );
+            log::info!("fleet: {addr} {} -> {}", from.as_str(), to.as_str());
+            if let Some(kind) = kind {
+                self.event(
+                    kind,
+                    addr,
+                    vec![("from", from.as_str().to_string().into())],
+                );
+            }
+        }
+    }
+
+    fn publish_state_gauges(&self, reg: &Registry, eps: &[Endpoint]) {
+        let count = |h: Health| eps.iter().filter(|e| e.health == h).count() as u64;
+        reg.fleet_nodes_healthy.set(count(Health::Healthy));
+        reg.fleet_nodes_degraded.set(count(Health::Degraded));
+        reg.fleet_nodes_down.set(count(Health::Down));
+    }
+
+    // -- probe loop -----------------------------------------------------
+
+    fn probe_round(&self) {
+        let reg = telemetry::current_registry();
+        let mut sp = trace::span("probe_round");
+        let addrs: Vec<String> = {
+            let mut eps = self.endpoints.lock().unwrap();
+            let now = Instant::now();
+            for ep in eps.iter_mut() {
+                ep.last_probe = Some(now);
+            }
+            eps.iter().map(|e| e.addr.clone()).collect()
+        };
+        let mut failures = 0usize;
+        for addr in &addrs {
+            reg.probe_attempts.inc();
+            match self.exchange(addr, "health", self.opts.probe_timeout) {
+                Ok((v, _)) if v.get("ok").and_then(Value::as_bool) == Some(true) => {
+                    let depth = v.get("queue_depth").and_then(Value::as_usize);
+                    let served = v.get("served").and_then(Value::as_usize);
+                    {
+                        let mut eps = self.endpoints.lock().unwrap();
+                        if let Some(ep) = eps.iter_mut().find(|e| e.addr == *addr) {
+                            ep.probe_depth = depth.map(|d| d as u64);
+                            ep.probe_served = served.map(|s| s as u64);
+                        }
+                    }
+                    self.apply(addr, true, None);
+                }
+                Ok(_) => {
+                    reg.probe_failures.inc();
+                    failures += 1;
+                    self.apply(addr, false, Some("health verb answered not-ok".into()));
+                }
+                Err(e) => {
+                    reg.probe_failures.inc();
+                    failures += 1;
+                    self.apply(addr, false, Some(format!("{e:#}")));
+                }
+            }
+        }
+        if let Some(sp) = sp.as_mut() {
+            sp.arg("endpoints", addrs.len());
+            sp.arg("failures", failures);
+        }
+    }
+
+    // -- scrape loop ----------------------------------------------------
+
+    fn scrape_round(&self) {
+        let reg = telemetry::current_registry();
+        let mut sp = trace::span("scrape_round");
+        let addrs: Vec<String> = {
+            let eps = self.endpoints.lock().unwrap();
+            eps.iter().map(|e| e.addr.clone()).collect()
+        };
+        let mut errors = 0usize;
+        for addr in &addrs {
+            reg.fleet_scrapes.inc();
+            let t0 = Instant::now();
+            // scrapes reuse the probe timeout: a metrics page is small
+            // and a slow scrape must never wedge the loop for a round
+            let got = self.exchange(addr, "metrics", self.opts.probe_timeout);
+            let dur = t0.elapsed().as_secs_f64();
+            let mut eps = self.endpoints.lock().unwrap();
+            let Some(ep) = eps.iter_mut().find(|e| e.addr == *addr) else { continue };
+            ep.last_scrape = Some(Instant::now());
+            ep.scrape_duration_s = dur;
+            match got {
+                Ok((v, _)) => match v.get("metrics").and_then(Value::as_str) {
+                    Some(text) => {
+                        ep.exposition = Some(text.to_string());
+                        ep.last_scrape_ok = true;
+                    }
+                    None => {
+                        reg.fleet_scrape_errors.inc();
+                        errors += 1;
+                        ep.last_scrape_ok = false;
+                    }
+                },
+                Err(_) => {
+                    reg.fleet_scrape_errors.inc();
+                    errors += 1;
+                    ep.last_scrape_ok = false;
+                }
+            }
+        }
+        if let Some(sp) = sp.as_mut() {
+            sp.arg("endpoints", addrs.len());
+            sp.arg("errors", errors);
+        }
+    }
+
+    /// One `{"cmd": <verb>}` round trip with `timeout` on connect,
+    /// write, and read.
+    fn exchange(
+        &self,
+        addr: &str,
+        verb: &str,
+        timeout: Duration,
+    ) -> anyhow::Result<(Value, Duration)> {
+        let t0 = Instant::now();
+        let stream = connect(addr, Some(timeout))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut stream = stream;
+        writeln!(stream, "{}", obj([("cmd", verb.into())]))
+            .map_err(|e| anyhow::anyhow!("{addr}: write: {e}"))?;
+        stream.flush().map_err(|e| anyhow::anyhow!("{addr}: flush: {e}"))?;
+        let mut line = String::new();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| anyhow::anyhow!("{addr}: read: {e}"))?;
+        anyhow::ensure!(n > 0, "{addr}: connection closed before reply");
+        let v = Value::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("{addr}: unparseable reply: {e}"))?;
+        Ok((v, t0.elapsed()))
+    }
+
+    // -- event log ------------------------------------------------------
+
+    /// Append one structured JSONL event (no-op without `--event-log`).
+    pub fn event(&self, kind: &str, node: &str, extra: Vec<(&'static str, Value)>) {
+        let Some(events) = &self.events else { return };
+        let mut fields: Vec<(&'static str, Value)> = vec![
+            ("ts_ms", (self.now_ms() as usize).into()),
+            ("seq", (self.seq.fetch_add(1, Ordering::Relaxed) as usize).into()),
+            ("event", kind.to_string().into()),
+            ("node", node.to_string().into()),
+        ];
+        fields.extend(extra);
+        if let Ok(mut out) = events.lock() {
+            let _ = writeln!(out, "{}", obj(fields));
+            let _ = out.flush();
+        }
+    }
+
+    // -- views ----------------------------------------------------------
+
+    /// Per-endpoint health snapshot for the coordinator `stats` verb:
+    /// state, consecutive failures, last probe/scrape age, failover
+    /// count, and the last good health-reply numbers.
+    pub fn health_json(&self) -> Value {
+        let eps = self.endpoints.lock().unwrap();
+        let age = |t: Option<Instant>| -> Value {
+            match t {
+                Some(t) => t.elapsed().as_secs_f64().into(),
+                None => Value::Null,
+            }
+        };
+        Value::Arr(
+            eps.iter()
+                .map(|ep| {
+                    obj([
+                        ("addr", ep.addr.clone().into()),
+                        ("node", ep.node.into()),
+                        (
+                            "role",
+                            if ep.is_replica { "replica" } else { "primary" }.into(),
+                        ),
+                        ("state", ep.health.as_str().into()),
+                        ("half_open", ep.half_open.into()),
+                        ("consecutive_failures", (ep.consecutive_failures as usize).into()),
+                        ("failovers", (ep.failovers as usize).into()),
+                        ("last_probe_age_s", age(ep.last_probe)),
+                        ("last_scrape_age_s", age(ep.last_scrape)),
+                        (
+                            "queue_depth",
+                            ep.probe_depth.map(|d| (d as usize).into()).unwrap_or(Value::Null),
+                        ),
+                        (
+                            "served",
+                            ep.probe_served.map(|s| (s as usize).into()).unwrap_or(Value::Null),
+                        ),
+                        (
+                            "last_error",
+                            ep.last_error.clone().map(Value::Str).unwrap_or(Value::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// The merged fleet exposition: the coordinator's own registry
+    /// labeled `{role="coordinator"}`, every scraped member page
+    /// relabeled `{node="host:port",role="node"}`, plus the synthesized
+    /// per-endpoint fleet gauges.  One scrape of the coordinator shows
+    /// the whole fleet.
+    pub fn federate(&self, coord: &Registry) -> String {
+        let own = coord.render_prometheus_with(&[("role", "coordinator")]);
+        let eps = self.endpoints.lock().unwrap();
+        let mut pages = vec![federation::Page::new(&[("role", "coordinator")], &own)];
+        for ep in eps.iter() {
+            if let Some(text) = &ep.exposition {
+                pages.push(federation::Page {
+                    labels: vec![
+                        ("node".to_string(), ep.addr.clone()),
+                        ("role".to_string(), "node".to_string()),
+                    ],
+                    text,
+                });
+            }
+        }
+        let mut out = federation::merge(&pages);
+        // synthesized per-endpoint gauges (one family block each)
+        let fam = |out: &mut String, name: &str, help: &str| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+        };
+        let lb = |ep: &Endpoint| {
+            format!("{{node=\"{}\"}}", telemetry::escape_label_value(&ep.addr))
+        };
+        fam(
+            &mut out,
+            "lorif_fleet_up",
+            "Whether the last scrape of this endpoint succeeded.",
+        );
+        for ep in eps.iter() {
+            out.push_str(&format!(
+                "lorif_fleet_up{} {}\n",
+                lb(ep),
+                if ep.last_scrape_ok { 1 } else { 0 }
+            ));
+        }
+        fam(
+            &mut out,
+            "lorif_fleet_scrape_duration_seconds",
+            "Duration of the last scrape of this endpoint.",
+        );
+        for ep in eps.iter() {
+            out.push_str(&format!(
+                "lorif_fleet_scrape_duration_seconds{} {:.6}\n",
+                lb(ep),
+                ep.scrape_duration_s
+            ));
+        }
+        fam(
+            &mut out,
+            "lorif_fleet_scrape_age_seconds",
+            "Seconds since this endpoint was last scraped.",
+        );
+        for ep in eps.iter() {
+            let age = ep.last_scrape.map(|t| t.elapsed().as_secs_f64());
+            out.push_str(&format!(
+                "lorif_fleet_scrape_age_seconds{} {:.6}\n",
+                lb(ep),
+                age.unwrap_or(-1.0)
+            ));
+        }
+        fam(
+            &mut out,
+            "lorif_fleet_health_state",
+            "Probe state machine position (0=healthy, 1=degraded, 2=down).",
+        );
+        for ep in eps.iter() {
+            out.push_str(&format!(
+                "lorif_fleet_health_state{} {}\n",
+                lb(ep),
+                ep.health.as_level()
+            ));
+        }
+        out
+    }
+
+    /// The topology this fleet monitors (shared with the planes).
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(threshold: u32, event_log: Option<PathBuf>) -> Arc<Fleet> {
+        let topo = Topology::parse("p:1=0/r:1,q:2=1", Some(2)).unwrap();
+        Fleet::new(
+            topo,
+            FleetOptions { fail_threshold: threshold, event_log, ..FleetOptions::default() },
+        )
+        .unwrap()
+    }
+
+    fn state_of(f: &Fleet, addr: &str) -> (String, bool, usize) {
+        let v = f.health_json();
+        let arr = v.as_arr().unwrap();
+        let ep = arr
+            .iter()
+            .find(|e| e.get("addr").and_then(Value::as_str) == Some(addr))
+            .unwrap();
+        (
+            ep.get("state").and_then(Value::as_str).unwrap().to_string(),
+            ep.get("half_open").and_then(Value::as_bool).unwrap(),
+            ep.get("consecutive_failures").and_then(Value::as_usize).unwrap(),
+        )
+    }
+
+    /// The transition table: healthy → degraded on the first failure,
+    /// → down at the threshold, half-open on the first success while
+    /// down, healthy after the second, and straight back down on a
+    /// failed half-open trial.
+    #[test]
+    fn state_machine_thresholds_and_half_open() {
+        assert_eq!(
+            step(Health::Healthy, false, 0, false, 3),
+            (Health::Degraded, false, 1)
+        );
+        assert_eq!(
+            step(Health::Degraded, false, 1, false, 3),
+            (Health::Degraded, false, 2)
+        );
+        assert_eq!(step(Health::Degraded, false, 2, false, 3), (Health::Down, false, 3));
+        // down stays down on more failures
+        assert_eq!(step(Health::Down, false, 3, false, 3), (Health::Down, false, 4));
+        // first success while down: half-open degraded
+        assert_eq!(step(Health::Down, false, 4, true, 3), (Health::Degraded, true, 0));
+        // half-open success: healthy
+        assert_eq!(
+            step(Health::Degraded, true, 0, true, 3),
+            (Health::Healthy, false, 0)
+        );
+        // half-open FAILURE: straight back down, no threshold grace
+        assert_eq!(step(Health::Degraded, true, 0, false, 3), (Health::Down, false, 1));
+        // a plain degraded endpoint recovers in one success
+        assert_eq!(
+            step(Health::Degraded, false, 1, true, 3),
+            (Health::Healthy, false, 0)
+        );
+        // threshold 1: first failure goes straight down
+        assert_eq!(step(Health::Healthy, false, 0, false, 1), (Health::Down, false, 1));
+    }
+
+    #[test]
+    fn observe_drives_states_and_routing() {
+        let f = fleet(2, None);
+        let node = f.topology().nodes[0].clone();
+        // healthy primary routes to itself
+        assert_eq!(f.route(&node), ("p:1".to_string(), false));
+        f.observe("p:1", false);
+        assert_eq!(state_of(&f, "p:1").0, "degraded");
+        // degraded still routes to the primary (only Down reroutes)
+        assert_eq!(f.route(&node), ("p:1".to_string(), false));
+        f.observe("p:1", false);
+        assert_eq!(state_of(&f, "p:1").0, "down");
+        // down primary + live replica: proactive reroute
+        assert_eq!(f.route(&node), ("r:1".to_string(), true));
+        // replica down too: fall back to trying the primary
+        f.observe("r:1", false);
+        f.observe("r:1", false);
+        assert_eq!(f.route(&node), ("p:1".to_string(), false));
+        // primary recovers through half-open
+        f.observe("p:1", true);
+        let (state, half_open, fails) = state_of(&f, "p:1");
+        assert_eq!((state.as_str(), half_open, fails), ("degraded", true, 0));
+        f.observe("p:1", true);
+        assert_eq!(state_of(&f, "p:1").0, "healthy");
+        // a node with no replica entry never reroutes
+        let lone = f.topology().nodes[1].clone();
+        f.observe("q:2", false);
+        f.observe("q:2", false);
+        assert_eq!(f.route(&lone), ("q:2".to_string(), false));
+    }
+
+    /// Transitions and failovers land in the JSONL event log with
+    /// monotone timestamps and the documented schema.
+    #[test]
+    fn event_log_records_transitions_and_failovers() {
+        let dir = std::env::temp_dir().join(format!("lorif-fleet-ev-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let f = fleet(2, Some(path.clone()));
+        f.observe("p:1", false);
+        f.observe("p:1", false); // -> down  => node_down
+        f.note_failover("p:1", "r:1", true); // => failover
+        f.observe("p:1", true); // -> half-open degraded (no event)
+        f.observe("p:1", true); // -> healthy => node_up
+        f.event("shed", "client", vec![("queue_depth", 9.into())]);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let events: Vec<Value> =
+            text.lines().map(|l| Value::parse(l).expect("jsonl line parses")).collect();
+        assert_eq!(events.len(), 4);
+        let kinds: Vec<&str> =
+            events.iter().map(|e| e.get("event").and_then(Value::as_str).unwrap()).collect();
+        assert_eq!(kinds, vec!["node_down", "failover", "node_up", "shed"]);
+        // schema: every event has monotone ts_ms + seq + node
+        let mut prev = (0.0, -1.0);
+        for e in &events {
+            let ts = e.get("ts_ms").and_then(Value::as_f64).unwrap();
+            let seq = e.get("seq").and_then(Value::as_f64).unwrap();
+            assert!(e.get("node").and_then(Value::as_str).is_some());
+            assert!(ts >= prev.0, "ts_ms must be monotone");
+            assert!(seq > prev.1, "seq must strictly increase");
+            prev = (ts, seq);
+        }
+        assert_eq!(
+            events[1].get("proactive").and_then(Value::as_bool),
+            Some(true)
+        );
+        assert_eq!(events[1].get("replica").and_then(Value::as_str), Some("r:1"));
+        assert_eq!(events[3].get("queue_depth").and_then(Value::as_f64), Some(9.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// State gauges land in the SCOPED registry installed at observe
+    /// time (the ctx-capture contract the serving loop relies on).
+    #[test]
+    fn state_gauges_publish_into_the_scoped_registry() {
+        let f = fleet(1, None);
+        let reg = Arc::new(Registry::new());
+        telemetry::with_registry(reg.clone(), || {
+            f.observe("p:1", false); // threshold 1: down immediately
+        });
+        assert_eq!(reg.fleet_nodes_down.get(), 1);
+        assert_eq!(reg.fleet_nodes_healthy.get(), 2);
+        assert_eq!(reg.probe_transitions.get(), 1);
+    }
+
+    /// `federate` with no scrapes yet still yields a valid page: the
+    /// coordinator's own labeled series plus the synthesized fleet
+    /// gauges for every endpoint.
+    #[test]
+    fn federate_renders_own_page_and_synthesized_gauges() {
+        let f = fleet(3, None);
+        let reg = Registry::new();
+        reg.server_served.add(4);
+        let page = f.federate(&reg);
+        assert!(page.contains("lorif_server_served_total{role=\"coordinator\"} 4\n"));
+        assert!(page.contains("# TYPE lorif_fleet_up gauge\n"));
+        for addr in ["p:1", "r:1", "q:2"] {
+            assert!(
+                page.contains(&format!("lorif_fleet_up{{node=\"{addr}\"}} 0\n")),
+                "missing up sample for {addr}"
+            );
+            assert!(page.contains(&format!("lorif_fleet_health_state{{node=\"{addr}\"}} 0\n")));
+        }
+        // never-scraped endpoints report age -1
+        assert!(page.contains("lorif_fleet_scrape_age_seconds{node=\"p:1\"} -1.000000\n"));
+    }
+}

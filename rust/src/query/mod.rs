@@ -7,12 +7,16 @@
 
 pub mod coordinator;
 pub mod engine;
+pub mod fleet;
 pub mod parallel;
 pub mod plane;
 pub mod server;
+pub mod slowlog;
 
 pub use coordinator::{parse_shard_list, NodeSpec, RemotePlane, TokenSource, Topology};
 pub use engine::{LatencyBreakdown, QueryEngine, QueryResult};
+pub use fleet::{Fleet, FleetOptions, Health};
 pub use parallel::{map_shards, merge_scores, merge_topk, ShardScores, TopK};
 pub use plane::{LocalPlane, NodeStat, PlaneBatch, PlaneReply, ShardPlane};
 pub use server::{serve, GradSource, ServeSummary, Server, ServerConfig};
+pub use slowlog::{SlowEntry, SlowLog};

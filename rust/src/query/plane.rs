@@ -57,6 +57,26 @@ pub struct NodeStat {
     pub retries: usize,
     /// whether the answer came from the configured replica
     pub failover: bool,
+    /// replica was chosen BEFORE any attempt because the health probe
+    /// had already marked the primary down (no io-timeout was paid)
+    pub proactive: bool,
+}
+
+impl NodeStat {
+    /// The canonical JSON shape of one node's scatter accounting — the
+    /// SAME object appears in coordinator replies (`"nodes": [...]`)
+    /// and in slow-query-log entries, so the two can never drift.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj([
+            ("addr", self.addr.as_str().into()),
+            ("shards", Value::Arr(self.shards.iter().map(|&s| s.into()).collect())),
+            ("wall_s", self.wall_s.into()),
+            ("retries", self.retries.into()),
+            ("failover", self.failover.into()),
+            ("proactive", self.proactive.into()),
+        ])
+    }
 }
 
 /// What a plane returns for one batch: per-query top-k heaps in
@@ -162,6 +182,33 @@ mod tests {
         // a token batch is a contract violation, not a panic
         let t = PlaneBatch::Tokens { tokens: vec![0; 8], n: 1, seq_len: 8 };
         assert!(plane.score_topk(&t, 4).is_err());
+    }
+
+    #[test]
+    fn node_stat_json_has_the_documented_fields() {
+        use crate::util::json::Value;
+        let ns = NodeStat {
+            addr: "127.0.0.1:7001".into(),
+            shards: vec![0, 2],
+            wall_s: 0.125,
+            retries: 1,
+            failover: true,
+            proactive: false,
+        };
+        let v = ns.to_json();
+        assert_eq!(v.get("addr").and_then(Value::as_str), Some("127.0.0.1:7001"));
+        let shards: Vec<usize> = v
+            .get("shards")
+            .and_then(Value::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Value::as_usize)
+            .collect();
+        assert_eq!(shards, vec![0, 2]);
+        assert_eq!(v.get("wall_s").and_then(Value::as_f64), Some(0.125));
+        assert_eq!(v.get("retries").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("failover").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("proactive").and_then(Value::as_bool), Some(false));
     }
 
     #[test]

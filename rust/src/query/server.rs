@@ -23,6 +23,12 @@
 //!
 //! Protocol (newline-delimited JSON):
 //!   -> {"tokens": [t0, t1, ...]}            (<= seq_len token ids)
+//!      An optional `"trace": id` field (a positive integer) adopts the
+//!      CALLER's trace ID for the batch this query lands in — the
+//!      coordinator forwards its own ID so a node's `server_batch` span
+//!      tree lands under the coordinator's scatter span when the
+//!      per-process trace files are concatenated (see
+//!      `telemetry::trace`).
 //!   <- {"topk": [...], "scores": [...], "topk_bits": [[i, b], ...],
 //!       "latency_s": x, "load_s": l, "compute_s": c2,
 //!       "precondition_s": p, "batch": b, "bytes_read": n,
@@ -39,7 +45,22 @@
 //!   <- {"ok": true, "metrics": "# HELP lorif_...\n..."}
 //!      (Prometheus text exposition of this server's registry, embedded
 //!      as one JSON string — the newline-delimited protocol cannot
-//!      carry raw multi-line text)
+//!      carry raw multi-line text.  On a coordinator with a
+//!      [`Fleet`](super::fleet::Fleet) attached this is the MERGED
+//!      fleet exposition: the coordinator's own series labeled
+//!      `{role="coordinator"}`, every scraped member page relabeled
+//!      `{node="host:port",role="node"}`, plus per-endpoint
+//!      `lorif_fleet_up` / scrape / health-state gauges)
+//!   -> {"cmd": "health"}
+//!   <- {"ok": true, "queue_depth": d, "workers": w, "served": n,
+//!       "uptime_s": t, "shards": s}
+//!      (cheap liveness probe answered straight from the handler
+//!      thread — observable even when the scoring path is saturated;
+//!      what the fleet monitor's probe loop polls)
+//!   -> {"cmd": "slowlog"}
+//!   <- {"ok": true, "slowlog": [entry, ...]}
+//!      (the K slowest batches, slowest-first — see `query::slowlog`
+//!      for the entry shape and the admission/eviction rules)
 //!   -> {"cmd": "shutdown"}     (stops the server; used by tests)
 //!   <- {"ok": true}
 //!
@@ -88,7 +109,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::plane::{LocalPlane, PlaneBatch, ShardPlane};
+use super::fleet::Fleet;
+use super::plane::{LocalPlane, NodeStat, PlaneBatch, ShardPlane};
+use super::slowlog::{SlowEntry, SlowLog};
 use crate::attribution::{QueryGrads, Scorer};
 use crate::telemetry::{self, Registry, TelemetryCtx, TraceCtx};
 use crate::util::json::{obj, Value};
@@ -158,6 +181,9 @@ pub struct ServerConfig {
     /// Purely informational at this layer — published as the
     /// `lorif_node_shards` gauge so a scrape identifies shard nodes.
     pub shards_served: usize,
+    /// Capacity of the slow-query log (`--slowlog`; 0 disables it).
+    /// The K slowest batches stay inspectable via the `slowlog` verb.
+    pub slowlog_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -170,6 +196,7 @@ impl Default for ServerConfig {
             queue_cap: 64,
             io_timeout_ms: 0,
             shards_served: 0,
+            slowlog_cap: 32,
         }
     }
 }
@@ -204,11 +231,18 @@ pub struct ServeSummary {
 struct ServerStats {
     reg: Arc<Registry>,
     start: Instant,
+    /// slow-query ring (see `query::slowlog`); touched once per scored
+    /// batch and read by the `slowlog` verb
+    slow: Mutex<SlowLog>,
 }
 
 impl ServerStats {
-    fn new() -> ServerStats {
-        ServerStats { reg: Arc::new(Registry::new()), start: Instant::now() }
+    fn new(slowlog_cap: usize) -> ServerStats {
+        ServerStats {
+            reg: Arc::new(Registry::new()),
+            start: Instant::now(),
+            slow: Mutex::new(SlowLog::new(slowlog_cap)),
+        }
     }
 
     fn snapshot_json(&self, workers: usize) -> Value {
@@ -251,6 +285,9 @@ enum Incoming {
         /// when the request was admitted — reply latency covers queue
         /// wait + batching window + extraction + scoring
         arrived: Instant,
+        /// caller-supplied trace ID (the coordinator forwards its own
+        /// so a node's span tree nests under the coordinator's)
+        trace: Option<u64>,
     },
     Shutdown,
 }
@@ -265,6 +302,10 @@ struct Job {
     /// dequeued it): reply latency covers queue wait under overload,
     /// the batching window, extraction, and scoring
     t0: Instant,
+    /// adopted trace ID: the batch's FIRST query names the track (one
+    /// span tree per batch; a batch mixing traced and untraced queries
+    /// follows its first)
+    trace: Option<u64>,
 }
 
 /// A bound attribution service.  `bind` first, read `local_addr` (tests
@@ -274,6 +315,10 @@ pub struct Server {
     listener: TcpListener,
     local: SocketAddr,
     cfg: ServerConfig,
+    /// fleet monitor, coordinator mode only (`set_fleet`): starts the
+    /// probe/scrape loops with `run`, federates the `metrics` verb, and
+    /// extends the `stats` verb with per-endpoint health
+    fleet: Option<Arc<Fleet>>,
 }
 
 /// Bind + run in one call (the CLI path).
@@ -289,11 +334,19 @@ impl Server {
     pub fn bind(cfg: ServerConfig) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let local = listener.local_addr()?;
-        Ok(Server { listener, local, cfg })
+        Ok(Server { listener, local, cfg, fleet: None })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
         self.local
+    }
+
+    /// Attach a fleet monitor (coordinator mode).  `run` starts its
+    /// probe/scrape loops scoped to this server's registry and stops
+    /// them at shutdown; share the SAME `Arc` with the `RemotePlane`s
+    /// so scatter legs route on the probes' verdicts.
+    pub fn set_fleet(&mut self, fleet: Arc<Fleet>) {
+        self.fleet = Some(fleet);
     }
 
     /// Run until a shutdown command arrives.  One scoring worker per
@@ -332,9 +385,21 @@ impl Server {
         let seq_len = source.seq_len();
         let vocab = source.vocab();
         let n_workers = planes.len();
-        let stats = Arc::new(ServerStats::new());
+        let stats = Arc::new(ServerStats::new(cfg.slowlog_cap));
         stats.reg.server_workers.set(n_workers as u64);
         stats.reg.node_shards.set(cfg.shards_served as u64);
+        // coordinator mode: start the probe/scrape loops now, scoped to
+        // THIS server's registry (the ctx is captured here and
+        // re-installed inside each monitor thread — the same pattern as
+        // the worker pool and the reader prefetch thread — so probe and
+        // federation metrics land next to the serving counters)
+        let fleet = self.fleet.clone();
+        let fleet_threads = fleet.as_ref().map(|f| {
+            f.start(TelemetryCtx {
+                registry: Some(Arc::clone(&stats.reg)),
+                trace: TraceCtx::default(),
+            })
+        });
         let io_timeout = (cfg.io_timeout_ms > 0)
             .then(|| Duration::from_millis(cfg.io_timeout_ms));
         // shared with the (detached) conn handlers too: once set, they
@@ -381,6 +446,7 @@ impl Server {
             let acceptor = {
                 let tx = tx.clone();
                 let stats = Arc::clone(&stats);
+                let fleet = fleet.clone();
                 s.spawn(move || {
                     while !shutting_down.load(Ordering::SeqCst) {
                         match listener.accept() {
@@ -394,10 +460,11 @@ impl Server {
                                 let tx = tx.clone();
                                 let stats = Arc::clone(&stats);
                                 let flag = Arc::clone(shutting_down);
+                                let fleet = fleet.clone();
                                 std::thread::spawn(move || {
                                     let _ = handle_conn(
                                         stream, tx, stats, flag, seq_len, vocab, n_workers,
-                                        io_timeout,
+                                        io_timeout, fleet,
                                     );
                                 });
                             }
@@ -439,10 +506,10 @@ impl Server {
 
             // batcher (this thread): collect a window, extract, dispatch
             loop {
-                let (first, t0) = match rx.recv() {
-                    Ok(Incoming::Query { tokens, reply, arrived }) => {
+                let (first, t0, trace) = match rx.recv() {
+                    Ok(Incoming::Query { tokens, reply, arrived, trace }) => {
                         stats.reg.server_queue_depth.sub(1);
-                        ((tokens, reply), arrived)
+                        ((tokens, reply), arrived, trace)
                     }
                     Ok(Incoming::Shutdown) | Err(_) => break,
                 };
@@ -470,8 +537,9 @@ impl Server {
                         }
                     }
                 }
-                let workers_alive =
-                    dispatch_batch(&mut source, batch, seq_len, wants_grads, t0, &jtx, &stats);
+                let workers_alive = dispatch_batch(
+                    &mut source, batch, seq_len, wants_grads, t0, trace, &jtx, &stats,
+                );
                 if shutdown_after || !workers_alive {
                     break;
                 }
@@ -508,7 +576,19 @@ impl Server {
                 dropped: stats.reg.server_dropped.get() as usize,
                 batches: stats.reg.server_batches.get() as usize,
             })
-        })?;
+        });
+        // monitor loops are plain (unscoped) threads holding only the
+        // fleet Arc; stop + join them whether the scope succeeded or
+        // not so `run` never leaks probers against a dead topology
+        if let Some(f) = &fleet {
+            f.stop();
+        }
+        if let Some(handles) = fleet_threads {
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        let summary = summary?;
         log::info!(
             "attribution service stopped: {} served, {} shed, {} failed, {} dropped \
              over {} batches",
@@ -537,6 +617,7 @@ fn dispatch_batch<G: GradSource>(
     seq_len: usize,
     wants_grads: bool,
     t0: Instant,
+    trace: Option<u64>,
     jtx: &mpsc::SyncSender<Job>,
     stats: &ServerStats,
 ) -> bool {
@@ -558,7 +639,7 @@ fn dispatch_batch<G: GradSource>(
     match prepared {
         Ok(batch) => {
             stats.reg.server_batches.inc();
-            if jtx.send(Job { batch, replies, t0 }).is_err() {
+            if jtx.send(Job { batch, replies, t0, trace }).is_err() {
                 // every worker died: the handlers see the dropped reply
                 // senders and answer with `shutdown`; stop the batcher
                 // so run() reports the worker panic
@@ -591,10 +672,14 @@ fn score_job(plane: &mut dyn ShardPlane, job: Job, k: usize, stats: &ServerStats
     // the whole pass runs scoped to THIS server's registry (so the
     // executor/reader/cache families a local plane publishes — and the
     // coord_* families a remote plane publishes — land here, not in
-    // the process global) and on a fresh trace track — one span tree
-    // per scored batch, shard lanes nested under it
-    let ctx =
-        TelemetryCtx { registry: Some(Arc::clone(&stats.reg)), trace: TraceCtx::next_query() };
+    // the process global) and on one trace track per batch: a
+    // caller-forwarded `"trace"` ID is adopted (so a node's span tree
+    // shares the coordinator's trace ID), otherwise a fresh one
+    let trace = job
+        .trace
+        .map(|id| TraceCtx { id, lane: 0 })
+        .unwrap_or_else(TraceCtx::next_query);
+    let ctx = TelemetryCtx { registry: Some(Arc::clone(&stats.reg)), trace };
     let result = telemetry::with_ctx(ctx, || {
         let mut sp = telemetry::trace::span("server_batch");
         if let Some(s) = sp.as_mut() {
@@ -613,24 +698,27 @@ fn score_job(plane: &mut dyn ShardPlane, job: Job, k: usize, stats: &ServerStats
             stats.reg.server_batch_wall.observe_secs(latency);
             stats.reg.server_served.add(n as u64);
             stats.reg.node_queries.add(n as u64);
+            // offer the finished batch to the slow-query ring (keeps
+            // the K slowest; the trace ID ties an entry back to its
+            // span tree in a --trace-out file)
+            if let Ok(mut slow) = stats.slow.lock() {
+                let admitted = slow.offer(SlowEntry {
+                    trace_id: trace.id,
+                    wall_s: latency,
+                    batch: n,
+                    ts_s: stats.start.elapsed().as_secs_f64(),
+                    latency: rep.latency.clone(),
+                    nodes: rep.nodes.clone(),
+                    seq: 0,
+                });
+                if admitted {
+                    stats.reg.slowlog_admitted.inc();
+                }
+                stats.reg.slowlog_entries.set(slow.len() as u64);
+            }
             // per-node stats of a scatter-gather pass; empty (and
             // omitted from replies) on the local plane
-            let node_stats: Vec<Value> = rep
-                .nodes
-                .iter()
-                .map(|ns| {
-                    obj([
-                        ("addr", ns.addr.as_str().into()),
-                        (
-                            "shards",
-                            Value::Arr(ns.shards.iter().map(|&s| s.into()).collect()),
-                        ),
-                        ("wall_s", ns.wall_s.into()),
-                        ("retries", ns.retries.into()),
-                        ("failover", ns.failover.into()),
-                    ])
-                })
-                .collect();
+            let node_stats: Vec<Value> = rep.nodes.iter().map(NodeStat::to_json).collect();
             for (q, reply) in job.replies.iter().enumerate() {
                 let top = rep.topk[q].entries();
                 // `scores` (f64) is for humans and loses NaN to JSON's
@@ -757,6 +845,7 @@ fn handle_conn(
     vocab: usize,
     workers: usize,
     io_timeout: Option<Duration>,
+    fleet: Option<Arc<Fleet>>,
 ) -> anyhow::Result<()> {
     let peer = stream.peer_addr()?;
     // a peer that stalls mid-line (or never writes) trips the socket
@@ -807,19 +896,56 @@ fn handle_conn(
             }
             Some("stats") => {
                 // served straight from the handler: stats stay
-                // observable even when the scoring path is saturated
-                let _ = writeln!(stream, "{}", stats.snapshot_json(workers));
+                // observable even when the scoring path is saturated.
+                // With a fleet attached, a `fleet` array extends the
+                // blob with per-endpoint health (state, consecutive
+                // failures, probe/scrape ages, failover counts).
+                let mut v = stats.snapshot_json(workers);
+                if let (Some(f), Value::Obj(m)) = (&fleet, &mut v) {
+                    m.insert("fleet".to_string(), f.health_json());
+                }
+                let _ = writeln!(stream, "{v}");
                 continue;
             }
             Some("metrics") => {
                 // the full Prometheus exposition of this server's
                 // registry, embedded as one JSON string — the
                 // newline-delimited protocol can't carry raw multi-line
-                // text (a scraping sidecar unescapes `metrics`)
+                // text (a scraping sidecar unescapes `metrics`).  In
+                // coordinator mode this is the MERGED fleet page: own
+                // series labeled {role="coordinator"}, scraped member
+                // pages relabeled {node=...,role="node"}, plus the
+                // synthesized lorif_fleet_* per-endpoint gauges.
+                let text = match &fleet {
+                    Some(f) => f.federate(&stats.reg),
+                    None => stats.reg.render_prometheus(),
+                };
+                let resp = obj([("ok", true.into()), ("metrics", text.into())]);
+                let _ = writeln!(stream, "{resp}");
+                continue;
+            }
+            Some("health") => {
+                // the probe loop's target: cheap, handler-local, and
+                // meaningful even while the scoring path is saturated
+                let r = &stats.reg;
                 let resp = obj([
                     ("ok", true.into()),
-                    ("metrics", stats.reg.render_prometheus().into()),
+                    ("queue_depth", (r.server_queue_depth.get() as usize).into()),
+                    ("workers", workers.into()),
+                    ("served", (r.server_served.get() as usize).into()),
+                    ("uptime_s", stats.start.elapsed().as_secs_f64().into()),
+                    ("shards", (r.node_shards.get() as usize).into()),
                 ]);
+                let _ = writeln!(stream, "{resp}");
+                continue;
+            }
+            Some("slowlog") => {
+                let entries = stats
+                    .slow
+                    .lock()
+                    .map(|s| s.snapshot_json())
+                    .unwrap_or_else(|_| Value::Arr(Vec::new()));
+                let resp = obj([("ok", true.into()), ("slowlog", entries)]);
                 let _ = writeln!(stream, "{resp}");
                 continue;
             }
@@ -840,6 +966,15 @@ fn handle_conn(
                 continue;
             }
         };
+        // optional caller trace ID: a positive integer adopts the
+        // caller's span-tree identity for this query's batch; anything
+        // malformed is ignored (tracing is diagnostic, never a reason
+        // to reject a valid query)
+        let trace = v
+            .get("trace")
+            .and_then(Value::as_f64)
+            .filter(|x| x.fract() == 0.0 && *x >= 1.0 && *x <= u64::MAX as f64)
+            .map(|x| x as u64);
         if shutting_down.load(Ordering::SeqCst) {
             // stop admitting during teardown so queries cannot race the
             // final queue drain and escape the summary accounting
@@ -855,12 +990,23 @@ fn handle_conn(
         // count before sending so the depth never underflows; undone on
         // the shed path (the batcher decrements accepted entries)
         stats.reg.server_queue_depth.add(1);
-        match tx.try_send(Incoming::Query { tokens, reply: rtx, arrived: Instant::now() }) {
+        match tx.try_send(Incoming::Query {
+            tokens,
+            reply: rtx,
+            arrived: Instant::now(),
+            trace,
+        }) {
             Ok(()) => {}
             Err(mpsc::TrySendError::Full(_)) => {
                 stats.reg.server_queue_depth.sub(1);
                 stats.reg.server_shed.inc();
                 let depth = stats.reg.server_queue_depth.get() as usize;
+                // sheds are fleet-level incidents too: with an event
+                // log attached, each one lands as a JSONL line next to
+                // node_down/failover so overload and failure correlate
+                if let Some(f) = &fleet {
+                    f.event("shed", "coordinator", vec![("queue_depth", depth.into())]);
+                }
                 let resp = obj([
                     ("error", "server overloaded: admission queue full".into()),
                     ("code", "overloaded".into()),
@@ -961,7 +1107,7 @@ mod tests {
 
     #[test]
     fn stats_snapshot_has_the_documented_fields() {
-        let stats = ServerStats::new();
+        let stats = ServerStats::new(32);
         stats.reg.server_served.add(5);
         stats.reg.cache_hits.add(3);
         stats.reg.cache_misses.add(1);
@@ -995,7 +1141,7 @@ mod tests {
         // what the `{"cmd":"metrics"}` verb serves on a fresh instance:
         // every family pre-registered, so a scrape before the first
         // query still sees the full schema at zero
-        let stats = ServerStats::new();
+        let stats = ServerStats::new(32);
         let text = stats.reg.render_prometheus();
         for family in
             ["lorif_server_submitted_total", "lorif_server_batch_wall_seconds", "lorif_cache_hits_total"]

@@ -1,0 +1,254 @@
+//! Slow-query log: a fixed-capacity ring of the K slowest scored
+//! batches, kept in memory by the server and served over the line
+//! protocol (`{"cmd": "slowlog"}`) and the `lorif slowlog` CLI.
+//!
+//! Each entry captures everything needed to go from "that query was
+//! slow" to "here is why": the full [`LatencyBreakdown`] of the pass
+//! (phase seconds + byte/cache ledger), the per-node [`NodeStat`]s of a
+//! scatter-gather pass (which node gated the gather, whether a failover
+//! happened), and the batch's trace ID — the handle that finds the
+//! matching span tree in a `--trace-out` Perfetto file.
+//!
+//! Admission keeps the K slowest batches seen so far, deterministically:
+//!
+//!   * below capacity, everything is admitted;
+//!   * at capacity, a new batch is admitted iff its wall time is at
+//!     least the current minimum, and it replaces that minimum —
+//!     with ties at the minimum broken toward the OLDEST entry (lowest
+//!     admission sequence number), so a stream of equal-wall batches
+//!     rotates through the ring (newest wins) instead of pinning the
+//!     first arrivals forever.
+//!
+//! [`snapshot_json`](SlowLog::snapshot_json) renders entries sorted
+//! slowest-first (ties oldest-first), so the verb's reply is stable
+//! under re-ordering of the internal ring.
+
+use super::engine::LatencyBreakdown;
+use super::plane::NodeStat;
+use crate::util::json::{obj, Value};
+
+/// One retained slow batch.
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    /// trace ID of the pass (matches the `trace_id` arg on the span
+    /// tree in a `--trace-out` file; 0 when tracing never assigned one)
+    pub trace_id: u64,
+    /// reply latency of the batch: queue wait + window + extraction +
+    /// scoring (what the admission decision ranks on)
+    pub wall_s: f64,
+    /// queries in the batch
+    pub batch: usize,
+    /// seconds since server start when the batch finished
+    pub ts_s: f64,
+    /// the pass's full phase/byte breakdown
+    pub latency: LatencyBreakdown,
+    /// per-node scatter accounting (empty on a local plane)
+    pub nodes: Vec<NodeStat>,
+    /// admission sequence number (monotone; breaks wall-time ties)
+    pub seq: u64,
+}
+
+impl SlowEntry {
+    /// JSON shape served by the `slowlog` verb: top-level wall/batch/
+    /// trace fields plus the canonical breakdown and node objects.
+    pub fn to_json(&self) -> Value {
+        let mut fields: Vec<(&'static str, Value)> = vec![
+            ("trace_id", (self.trace_id as usize).into()),
+            ("wall_s", self.wall_s.into()),
+            ("batch", self.batch.into()),
+            ("ts_s", self.ts_s.into()),
+            ("seq", (self.seq as usize).into()),
+            ("latency", obj(self.latency.json_fields())),
+        ];
+        if !self.nodes.is_empty() {
+            fields.push(("nodes", Value::Arr(self.nodes.iter().map(NodeStat::to_json).collect())));
+        }
+        obj(fields)
+    }
+}
+
+/// The ring itself.  Not internally synchronized — the server holds it
+/// behind a `Mutex` and touches it once per scored batch, far off any
+/// hot path.
+pub struct SlowLog {
+    cap: usize,
+    entries: Vec<SlowEntry>,
+    seq: u64,
+}
+
+impl SlowLog {
+    pub fn new(cap: usize) -> SlowLog {
+        SlowLog { cap, entries: Vec::with_capacity(cap.min(64)), seq: 0 }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Offer one finished batch; returns whether it was admitted.  The
+    /// `seq` field of `entry` is overwritten with the next admission
+    /// sequence number (callers pass 0).
+    pub fn offer(&mut self, mut entry: SlowEntry) -> bool {
+        if self.cap == 0 {
+            return false;
+        }
+        self.seq += 1;
+        entry.seq = self.seq;
+        if self.entries.len() < self.cap {
+            self.entries.push(entry);
+            return true;
+        }
+        // evict the minimum: slowest-ranked ring keeps the K largest
+        // walls; ties at the minimum evict the OLDEST (lowest seq)
+        let (idx, min_wall) = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.wall_s
+                    .partial_cmp(&b.wall_s)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.seq.cmp(&b.seq))
+            })
+            .map(|(i, e)| (i, e.wall_s))
+            .expect("non-empty ring at capacity");
+        if entry.wall_s >= min_wall {
+            self.entries[idx] = entry;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Entries sorted slowest-first (ties oldest-first).
+    pub fn snapshot(&self) -> Vec<SlowEntry> {
+        let mut out = self.entries.clone();
+        out.sort_by(|a, b| {
+            b.wall_s
+                .partial_cmp(&a.wall_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.seq.cmp(&b.seq))
+        });
+        out
+    }
+
+    /// The `slowlog` verb's payload: `[entry, ...]` slowest-first.
+    pub fn snapshot_json(&self) -> Value {
+        Value::Arr(self.snapshot().iter().map(SlowEntry::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(wall_s: f64) -> SlowEntry {
+        SlowEntry {
+            trace_id: 0,
+            wall_s,
+            batch: 1,
+            ts_s: 0.0,
+            latency: LatencyBreakdown {
+                load_s: 0.0,
+                compute_s: 0.0,
+                precondition_s: 0.0,
+                total_s: 0.0,
+                wall_s,
+                bytes_read: 0,
+                bytes_skipped: 0,
+                cache_hits: 0,
+                cache_misses: 0,
+                bytes_from_cache: 0,
+            },
+            nodes: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    fn walls(log: &SlowLog) -> Vec<f64> {
+        log.snapshot().iter().map(|e| e.wall_s).collect()
+    }
+
+    #[test]
+    fn fills_to_capacity_then_keeps_the_slowest() {
+        let mut log = SlowLog::new(3);
+        assert!(log.is_empty());
+        for w in [0.3, 0.1, 0.2] {
+            assert!(log.offer(entry(w)), "below capacity admits everything");
+        }
+        assert_eq!(log.len(), 3);
+        // faster than the min: rejected, ring unchanged
+        assert!(!log.offer(entry(0.05)));
+        assert_eq!(walls(&log), vec![0.3, 0.2, 0.1]);
+        // slower than the min: evicts exactly the min
+        assert!(log.offer(entry(0.5)));
+        assert_eq!(walls(&log), vec![0.5, 0.3, 0.2]);
+    }
+
+    #[test]
+    fn ties_at_the_minimum_evict_the_oldest_entry() {
+        let mut log = SlowLog::new(2);
+        assert!(log.offer(entry(0.2))); // seq 1
+        assert!(log.offer(entry(0.2))); // seq 2
+        // equal wall: admitted, replacing the OLDEST tied minimum
+        // (seq 1), so the ring now holds seqs 2 and 3
+        assert!(log.offer(entry(0.2))); // seq 3
+        let snap = log.snapshot();
+        let seqs: Vec<u64> = snap.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3], "ties rotate oldest-out, ordered oldest-first");
+        // a strictly slower batch still evicts a tied minimum
+        assert!(log.offer(entry(0.4))); // seq 4 evicts seq 2
+        let seqs: Vec<u64> = log.snapshot().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![4, 3], "slowest-first, the 0.4 leads");
+    }
+
+    #[test]
+    fn snapshot_sorts_slowest_first_and_zero_capacity_rejects() {
+        let mut log = SlowLog::new(8);
+        for w in [0.1, 0.4, 0.2, 0.3] {
+            log.offer(entry(w));
+        }
+        assert_eq!(walls(&log), vec![0.4, 0.3, 0.2, 0.1]);
+        let mut off = SlowLog::new(0);
+        assert!(!off.offer(entry(9.0)), "cap 0 disables the log");
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn entry_json_carries_trace_latency_and_nodes() {
+        let mut e = entry(0.25);
+        e.trace_id = 42;
+        e.batch = 3;
+        e.latency.bytes_read = 1024;
+        e.nodes.push(NodeStat {
+            addr: "127.0.0.1:7001".into(),
+            shards: vec![0],
+            wall_s: 0.2,
+            retries: 0,
+            failover: false,
+            proactive: true,
+        });
+        e.seq = 7;
+        let v = e.to_json();
+        assert_eq!(v.get("trace_id").and_then(Value::as_usize), Some(42));
+        assert_eq!(v.get("wall_s").and_then(Value::as_f64), Some(0.25));
+        assert_eq!(v.get("batch").and_then(Value::as_usize), Some(3));
+        assert_eq!(v.get("seq").and_then(Value::as_usize), Some(7));
+        let lat = v.get("latency").expect("latency object");
+        assert_eq!(lat.get("bytes_read").and_then(Value::as_usize), Some(1024));
+        let nodes = v.get("nodes").and_then(Value::as_arr).expect("nodes array");
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].get("proactive").and_then(Value::as_bool), Some(true));
+        // local-plane entries omit the nodes field entirely
+        let local = entry(0.1).to_json();
+        assert!(local.get("nodes").is_none());
+    }
+}

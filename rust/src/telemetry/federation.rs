@@ -1,0 +1,369 @@
+//! Metrics federation: parse, relabel, and merge Prometheus text
+//! expositions from many fleet members into one page.
+//!
+//! The coordinator's scrape loop collects each member's `{"cmd":"metrics"}`
+//! exposition verbatim; [`merge`] re-renders the set as a single valid
+//! exposition by injecting page-level labels (`node="host:port"`,
+//! `role="node"`) into every sample line while emitting each family's
+//! `# HELP`/`# TYPE` metadata exactly once.  Family ordering is stable:
+//! first-seen across pages in page order, so the coordinator's own
+//! families lead and every scrape of the same fleet renders families in
+//! the same order.
+//!
+//! Parsing keeps sample values as their original strings (no
+//! float-roundtrip drift); [`sample_value`] / [`samples`] parse a merged
+//! page back into per-member numbers — the same helpers the cluster
+//! tests use to reconcile the federated byte ledger against a local
+//! full scan.
+
+use std::collections::HashMap;
+
+use super::registry::escape_label_value;
+
+/// One scraped exposition plus the labels to inject into all its samples.
+pub struct Page<'a> {
+    pub labels: Vec<(String, String)>,
+    pub text: &'a str,
+}
+
+impl<'a> Page<'a> {
+    pub fn new(labels: &[(&str, &str)], text: &'a str) -> Page<'a> {
+        Page {
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            text,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Family {
+    help: Option<String>,
+    typ: Option<String>,
+    samples: Vec<String>,
+}
+
+fn touch<'m>(
+    fams: &'m mut HashMap<String, Family>,
+    order: &mut Vec<String>,
+    name: &str,
+) -> &'m mut Family {
+    if !fams.contains_key(name) {
+        order.push(name.to_string());
+        fams.insert(name.to_string(), Family::default());
+    }
+    fams.get_mut(name).unwrap()
+}
+
+/// Merge expositions into one page.  Page labels are injected ahead of
+/// any labels a sample already carries (so `le` stays last on histogram
+/// buckets); on a name collision the page label wins.  `# HELP`/`# TYPE`
+/// come from the first page that declares the family.
+pub fn merge(pages: &[Page]) -> String {
+    let mut fams: HashMap<String, Family> = HashMap::new();
+    let mut order: Vec<String> = Vec::new();
+    for page in pages {
+        // samples are grouped under the most recent `# TYPE`/`# HELP`
+        // family header, which is how `render_prometheus` lays them out
+        // (`_bucket`/`_sum`/`_count` suffixes belong to the histogram
+        // family, not a family of their own)
+        let mut current = String::new();
+        for line in page.text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) = rest.split_once(' ').unwrap_or((rest, ""));
+                current = name.to_string();
+                let f = touch(&mut fams, &mut order, name);
+                f.help.get_or_insert_with(|| help.to_string());
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, typ) = rest.split_once(' ').unwrap_or((rest, ""));
+                current = name.to_string();
+                let f = touch(&mut fams, &mut order, name);
+                f.typ.get_or_insert_with(|| typ.to_string());
+            } else if let Some((name, labels, value)) = parse_sample_line(line) {
+                let fam = if !current.is_empty() && name.starts_with(current.as_str()) {
+                    current.clone()
+                } else {
+                    name.clone()
+                };
+                let f = touch(&mut fams, &mut order, &fam);
+                f.samples.push(relabel_line(&name, &page.labels, &labels, &value));
+            }
+        }
+    }
+    let mut out = String::new();
+    for name in &order {
+        let f = &fams[name];
+        if let Some(h) = &f.help {
+            out.push_str(&format!("# HELP {name} {h}\n"));
+        }
+        if let Some(t) = &f.typ {
+            out.push_str(&format!("# TYPE {name} {t}\n"));
+        }
+        for s in &f.samples {
+            out.push_str(s);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Rebuild one sample line with `page` labels injected ahead of the
+/// labels it already carries; a page label shadows a same-named one.
+fn relabel_line(
+    name: &str,
+    page: &[(String, String)],
+    existing: &[(String, String)],
+    value: &str,
+) -> String {
+    let mut all: Vec<(&str, &str)> =
+        page.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    for (k, v) in existing {
+        if !all.iter().any(|(pk, _)| pk == k) {
+            all.push((k, v));
+        }
+    }
+    if all.is_empty() {
+        return format!("{name} {value}");
+    }
+    let body: Vec<String> = all
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    format!("{name}{{{}}} {value}", body.join(","))
+}
+
+/// Parse one exposition sample line into (metric name, labels, value
+/// string).  Comment/blank lines return `None`.  Label values are
+/// unescaped (`\\` `\"` `\n`), so a parse of a rendered line round-trips
+/// the original value.
+pub fn parse_sample_line(line: &str) -> Option<(String, Vec<(String, String)>, String)> {
+    let line = line.trim_end();
+    if line.is_empty() || line.starts_with('#') {
+        return None;
+    }
+    let split = line.find(|c: char| c == '{' || c.is_whitespace())?;
+    let name = line[..split].to_string();
+    if name.is_empty() {
+        return None;
+    }
+    let (labels, rest) = if line[split..].starts_with('{') {
+        let (labels, consumed) = parse_labels(&line[split + 1..])?;
+        (labels, &line[split + 1 + consumed..])
+    } else {
+        (Vec::new(), &line[split..])
+    };
+    let value = rest.trim().to_string();
+    if value.is_empty() {
+        return None;
+    }
+    Some((name, labels, value))
+}
+
+/// Parse a label body starting just past `{`; returns the labels and
+/// the byte offset just past the closing `}`.
+fn parse_labels(s: &str) -> Option<(Vec<(String, String)>, usize)> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    let mut labels = Vec::new();
+    loop {
+        while i < b.len() && (b[i] == b',' || b[i] == b' ') {
+            i += 1;
+        }
+        if i < b.len() && b[i] == b'}' {
+            return Some((labels, i + 1));
+        }
+        let k0 = i;
+        while i < b.len() && b[i] != b'=' {
+            i += 1;
+        }
+        if i >= b.len() {
+            return None;
+        }
+        let key = s[k0..i].trim().to_string();
+        i += 1; // '='
+        if i >= b.len() || b[i] != b'"' {
+            return None;
+        }
+        i += 1;
+        let mut val = String::new();
+        loop {
+            if i >= b.len() {
+                return None;
+            }
+            match b[i] {
+                b'\\' => {
+                    if i + 1 >= b.len() {
+                        return None;
+                    }
+                    match b[i + 1] {
+                        b'\\' => val.push('\\'),
+                        b'"' => val.push('"'),
+                        b'n' => val.push('\n'),
+                        c => {
+                            val.push('\\');
+                            val.push(c as char);
+                        }
+                    }
+                    i += 2;
+                }
+                b'"' => {
+                    i += 1;
+                    break;
+                }
+                _ => {
+                    let ch = s[i..].chars().next()?;
+                    val.push(ch);
+                    i += ch.len_utf8();
+                }
+            }
+        }
+        labels.push((key, val));
+    }
+}
+
+/// First sample of `name` whose label set contains every `(k, v)` in
+/// `labels`, parsed as f64.
+pub fn sample_value(text: &str, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+    for line in text.lines() {
+        let Some((n, ls, value)) = parse_sample_line(line) else { continue };
+        if n != name {
+            continue;
+        }
+        if labels.iter().all(|(k, v)| ls.iter().any(|(lk, lv)| lk == k && lv == v)) {
+            return value.parse().ok();
+        }
+    }
+    None
+}
+
+/// All samples of `name`: (labels, value) per matching line, in order.
+pub fn samples(text: &str, name: &str) -> Vec<(Vec<(String, String)>, f64)> {
+    text.lines()
+        .filter_map(parse_sample_line)
+        .filter(|(n, _, _)| n == name)
+        .filter_map(|(_, ls, v)| v.parse().ok().map(|f| (ls, f)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    /// A rendered label survives the parse: escape → render → parse
+    /// recovers the original bytes, including `\` `"` and newlines.
+    #[test]
+    fn label_escaping_round_trips_through_the_parser() {
+        let nasty = "path\\to \"x\"\nline2";
+        let reg = Registry::new();
+        reg.server_served.add(5);
+        let text = reg.render_prometheus_with(&[("node", nasty)]);
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("lorif_server_served_total{"))
+            .unwrap();
+        let (name, labels, value) = parse_sample_line(line).unwrap();
+        assert_eq!(name, "lorif_server_served_total");
+        assert_eq!(labels, vec![("node".to_string(), nasty.to_string())]);
+        assert_eq!(value, "5");
+    }
+
+    #[test]
+    fn parse_sample_line_shapes() {
+        assert_eq!(
+            parse_sample_line("m_total 3"),
+            Some(("m_total".to_string(), vec![], "3".to_string()))
+        );
+        let (n, ls, v) =
+            parse_sample_line("h_bucket{node=\"a:1\",le=\"+Inf\"} 12").unwrap();
+        assert_eq!(n, "h_bucket");
+        assert_eq!(ls.len(), 2);
+        assert_eq!(ls[1], ("le".to_string(), "+Inf".to_string()));
+        assert_eq!(v, "12");
+        assert_eq!(parse_sample_line("# HELP m help"), None);
+        assert_eq!(parse_sample_line(""), None);
+        assert_eq!(parse_sample_line("dangling{k=\"v\" "), None);
+    }
+
+    /// Merging two node pages: families keep first-seen order, metadata
+    /// is emitted once, every sample gains the page's `node` label ahead
+    /// of existing labels (`le` stays last), and the merged page parses
+    /// back into the per-node values that went in.
+    #[test]
+    fn merge_relabels_and_parses_back() {
+        let a = Registry::new();
+        a.store_bytes_read.add(100);
+        a.store_bytes_skipped.add(40);
+        a.query_latency.observe_secs(1e-6);
+        let b = Registry::new();
+        b.store_bytes_read.add(250);
+        let ta = a.render_prometheus();
+        let tb = b.render_prometheus();
+        let merged = merge(&[
+            Page::new(&[("node", "n0:1"), ("role", "node")], &ta),
+            Page::new(&[("node", "n1:2"), ("role", "node")], &tb),
+        ]);
+
+        // metadata once per family, unlabeled
+        assert_eq!(
+            merged.matches("# TYPE lorif_store_bytes_read_total counter\n").count(),
+            1
+        );
+        // one sample per page, labeled
+        assert!(merged.contains("lorif_store_bytes_read_total{node=\"n0:1\",role=\"node\"} 100\n"));
+        assert!(merged.contains("lorif_store_bytes_read_total{node=\"n1:2\",role=\"node\"} 250\n"));
+        // histogram bucket: node labels first, `le` last, under the
+        // histogram family's metadata (not a family of its own)
+        assert!(merged.contains(
+            "lorif_query_latency_seconds_bucket{node=\"n0:1\",role=\"node\",le=\"0.000001\"} 1\n"
+        ));
+        assert!(!merged.contains("# TYPE lorif_query_latency_seconds_bucket"));
+
+        // family order is first-seen page order == the registry table order
+        let first = merged.find("# TYPE lorif_store_bytes_read_total").unwrap();
+        let later = merged.find("# TYPE lorif_query_latency_seconds h").unwrap();
+        assert!(first < later);
+
+        // parse-back: per-node values recoverable from the merged page
+        assert_eq!(
+            sample_value(&merged, "lorif_store_bytes_read_total", &[("node", "n0:1")]),
+            Some(100.0)
+        );
+        assert_eq!(
+            sample_value(&merged, "lorif_store_bytes_read_total", &[("node", "n1:2")]),
+            Some(250.0)
+        );
+        let all = samples(&merged, "lorif_store_bytes_read_total");
+        assert_eq!(all.len(), 2);
+        assert_eq!(all.iter().map(|(_, v)| *v).sum::<f64>(), 350.0);
+        // the n0 ledger reconciles: read + skipped == 140
+        let skipped =
+            sample_value(&merged, "lorif_store_bytes_skipped_total", &[("node", "n0:1")]);
+        assert_eq!(skipped, Some(40.0));
+    }
+
+    /// Stable ordering across scrapes: merging the same fleet twice
+    /// yields identical family order even if a later page declares a
+    /// family the first page lacked.
+    #[test]
+    fn family_order_is_first_seen_and_deterministic() {
+        let pa = "# HELP a ha\n# TYPE a counter\na 1\n";
+        let pb = "# HELP b hb\n# TYPE b counter\nb 2\n# HELP a ha\n# TYPE a counter\na 3\n";
+        let m1 = merge(&[Page::new(&[("node", "x")], pa), Page::new(&[("node", "y")], pb)]);
+        let m2 = merge(&[Page::new(&[("node", "x")], pa), Page::new(&[("node", "y")], pb)]);
+        assert_eq!(m1, m2);
+        // `a` seen first (page order), so it renders before `b`
+        assert!(m1.find("# TYPE a counter").unwrap() < m1.find("# TYPE b counter").unwrap());
+        // both pages' `a` samples collected under one family block
+        assert!(m1.contains("a{node=\"x\"} 1\n"));
+        assert!(m1.contains("a{node=\"y\"} 3\n"));
+    }
+
+    /// A page label shadows a same-named label already on the sample —
+    /// the scraper's identity wins over whatever the member claimed.
+    #[test]
+    fn page_label_shadows_existing_label() {
+        let page = "# TYPE m counter\nm{role=\"imposter\",zone=\"z1\"} 9\n";
+        let merged = merge(&[Page::new(&[("role", "node")], page)]);
+        assert!(merged.contains("m{role=\"node\",zone=\"z1\"} 9\n"));
+    }
+}

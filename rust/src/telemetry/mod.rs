@@ -14,10 +14,16 @@
 //!   in `tests/prop.rs`).
 //! - Exposition: [`Registry::render_prometheus`], served by the
 //!   `{"cmd":"metrics"}` server verb and the `lorif metrics dump`
-//!   subcommand.
+//!   subcommand; [`Registry::render_prometheus_with`] attaches a base
+//!   label set (`{node="host:port",role="..."}`) to every sample.
+//! - [`federation`]: parse/relabel/merge of scraped expositions — the
+//!   coordinator's scrape loop federates every node's page into one
+//!   merged exposition with per-node labels (see `query::fleet`).
 //! - [`trace`]: Chrome trace-event spans behind `--trace-out <path>`,
 //!   with per-query trace IDs threaded server → engine → executor →
-//!   reader via the thread-local context below.
+//!   reader via the thread-local context below, and propagated over the
+//!   line protocol (`"trace"` field) so node-side spans join the
+//!   coordinator's query span in one Perfetto timeline.
 //!
 //! # Registry scoping
 //!
@@ -32,10 +38,11 @@
 //! thread's context inside every worker job, so the override (and the
 //! trace ID) follows the shard fan-out across threads.
 
+pub mod federation;
 pub mod registry;
 pub mod trace;
 
-pub use registry::{Counter, Gauge, Histogram, Registry};
+pub use registry::{escape_label_value, Counter, Gauge, Histogram, Registry};
 pub use trace::TraceCtx;
 
 use std::cell::RefCell;

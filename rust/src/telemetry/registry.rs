@@ -226,6 +226,21 @@ pub struct Registry {
     pub coord_failover: Counter,
     pub node_queries: Counter,
     pub node_shards: Gauge,
+    /// Scatter requests sent straight to a replica because the health
+    /// probe already marked the primary down (no io-timeout paid).
+    pub coord_reroute: Counter,
+    // -- fleet monitor (source: `query::fleet::Fleet`) --
+    pub probe_attempts: Counter,
+    pub probe_failures: Counter,
+    pub probe_transitions: Counter,
+    pub fleet_scrapes: Counter,
+    pub fleet_scrape_errors: Counter,
+    pub fleet_nodes_healthy: Gauge,
+    pub fleet_nodes_degraded: Gauge,
+    pub fleet_nodes_down: Gauge,
+    // -- slow-query ring (source: `query::server` via `query::slowlog`) --
+    pub slowlog_admitted: Counter,
+    pub slowlog_entries: Gauge,
 }
 
 /// How a registry field renders: plain counter, seconds-valued counter,
@@ -442,30 +457,96 @@ impl Registry {
                 "Manifest shards this process serves (node mode; 0 = all).",
                 G(&self.node_shards),
             ),
+            (
+                "lorif_coord_reroute_total",
+                "Scatter requests routed proactively to a replica of a probe-down primary.",
+                C(&self.coord_reroute),
+            ),
+            (
+                "lorif_probe_attempts_total",
+                "Health probes issued by the fleet monitor.",
+                C(&self.probe_attempts),
+            ),
+            (
+                "lorif_probe_failures_total",
+                "Health probes that failed (connect error, timeout, or bad reply).",
+                C(&self.probe_failures),
+            ),
+            (
+                "lorif_probe_transitions_total",
+                "Endpoint health-state transitions (probe- or scatter-evidenced).",
+                C(&self.probe_transitions),
+            ),
+            (
+                "lorif_fleet_scrapes_total",
+                "Federation scrapes of member metrics expositions.",
+                C(&self.fleet_scrapes),
+            ),
+            (
+                "lorif_fleet_scrape_errors_total",
+                "Federation scrapes that failed.",
+                C(&self.fleet_scrape_errors),
+            ),
+            (
+                "lorif_fleet_nodes_healthy",
+                "Monitored endpoints currently in the healthy state.",
+                G(&self.fleet_nodes_healthy),
+            ),
+            (
+                "lorif_fleet_nodes_degraded",
+                "Monitored endpoints currently in the degraded state.",
+                G(&self.fleet_nodes_degraded),
+            ),
+            (
+                "lorif_fleet_nodes_down",
+                "Monitored endpoints currently in the down state.",
+                G(&self.fleet_nodes_down),
+            ),
+            (
+                "lorif_slowlog_admitted_total",
+                "Batches admitted into the slow-query ring.",
+                C(&self.slowlog_admitted),
+            ),
+            (
+                "lorif_slowlog_entries",
+                "Entries currently resident in the slow-query ring.",
+                G(&self.slowlog_entries),
+            ),
         ]
     }
 
     /// Prometheus text exposition (version 0.0.4) of every family.
     pub fn render_prometheus(&self) -> String {
+        self.render_prometheus_with(&[])
+    }
+
+    /// Exposition with a base label set attached to every sample line
+    /// (`{node="host:port",role="node"}`).  `# HELP`/`# TYPE` lines are
+    /// per-family and stay unlabeled; histogram samples merge the base
+    /// labels with their `le` bucket label (base labels first, so a
+    /// federated exposition groups by node before bucket).  An empty
+    /// label set renders byte-identically to [`Registry::render_prometheus`].
+    pub fn render_prometheus_with(&self, labels: &[(&str, &str)]) -> String {
+        let lb = label_block(labels);
         let mut out = String::new();
         for (name, help, slot) in self.table() {
             out.push_str(&format!("# HELP {name} {help}\n"));
             match slot {
                 Slot::C(c) => {
                     out.push_str(&format!("# TYPE {name} counter\n"));
-                    out.push_str(&format!("{name} {}\n", c.get()));
+                    out.push_str(&format!("{name}{lb} {}\n", c.get()));
                 }
                 Slot::S(c) => {
                     out.push_str(&format!("# TYPE {name} counter\n"));
-                    out.push_str(&format!("{name} {}\n", fmt_secs(c.get())));
+                    out.push_str(&format!("{name}{lb} {}\n", fmt_secs(c.get())));
                 }
                 Slot::G(g) => {
                     out.push_str(&format!("# TYPE {name} gauge\n"));
-                    out.push_str(&format!("{name} {}\n", g.get()));
+                    out.push_str(&format!("{name}{lb} {}\n", g.get()));
                 }
                 Slot::H(h) => {
                     out.push_str(&format!("# TYPE {name} histogram\n"));
-                    render_histogram(&mut out, name, h);
+                    render_histogram(&mut out, name, h, labels);
                 }
             }
         }
@@ -473,11 +554,45 @@ impl Registry {
     }
 }
 
+/// Escape a label value per the Prometheus text format (0.0.4):
+/// backslash, double quote, and newline get backslash escapes.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `{k="v",...}` with escaped values; empty input renders as the
+/// empty string so unlabeled expositions keep their exact legacy shape.
+pub fn label_block(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
 /// Cumulative `_bucket{le=...}` lines up to the highest non-empty
 /// bucket, then `+Inf`, `_sum`, `_count` — the standard histogram
 /// exposition shape.  An empty histogram renders just the `+Inf`
 /// bucket so the family is still present and parseable.
-fn render_histogram(out: &mut String, name: &str, h: &Histogram) {
+fn render_histogram(out: &mut String, name: &str, h: &Histogram, labels: &[(&str, &str)]) {
+    let le_block = |bound: &str| {
+        let mut pairs: Vec<(&str, &str)> = labels.to_vec();
+        pairs.push(("le", bound));
+        label_block(&pairs)
+    };
+    let lb = label_block(labels);
     let counts: Vec<u64> =
         h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
     let last = counts.iter().rposition(|&c| c > 0);
@@ -486,14 +601,14 @@ fn render_histogram(out: &mut String, name: &str, h: &Histogram) {
         for (i, c) in counts.iter().enumerate().take(last + 1) {
             cum += c;
             out.push_str(&format!(
-                "{name}_bucket{{le=\"{}\"}} {cum}\n",
-                fmt_secs(bucket_bound_us(i))
+                "{name}_bucket{} {cum}\n",
+                le_block(&fmt_secs(bucket_bound_us(i)))
             ));
         }
     }
-    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
-    out.push_str(&format!("{name}_sum {}\n", fmt_secs(h.sum_us.load(Ordering::Relaxed))));
-    out.push_str(&format!("{name}_count {}\n", h.count()));
+    out.push_str(&format!("{name}_bucket{} {}\n", le_block("+Inf"), h.count()));
+    out.push_str(&format!("{name}_sum{lb} {}\n", fmt_secs(h.sum_us.load(Ordering::Relaxed))));
+    out.push_str(&format!("{name}_count{lb} {}\n", h.count()));
 }
 
 #[cfg(test)]
@@ -603,6 +718,17 @@ mod tests {
             "lorif_coord_failover_total",
             "lorif_node_queries_total",
             "lorif_node_shards",
+            "lorif_coord_reroute_total",
+            "lorif_probe_attempts_total",
+            "lorif_probe_failures_total",
+            "lorif_probe_transitions_total",
+            "lorif_fleet_scrapes_total",
+            "lorif_fleet_scrape_errors_total",
+            "lorif_fleet_nodes_healthy",
+            "lorif_fleet_nodes_degraded",
+            "lorif_fleet_nodes_down",
+            "lorif_slowlog_admitted_total",
+            "lorif_slowlog_entries",
         ] {
             assert!(text.contains(&format!("# HELP {family} ")), "{family} missing HELP");
             assert!(text.contains(&format!("# TYPE {family} ")), "{family} missing TYPE");
@@ -612,6 +738,56 @@ mod tests {
         let types = text.lines().filter(|l| l.starts_with("# TYPE")).count();
         assert_eq!(helps, types);
         assert_eq!(helps, reg.table().len());
+    }
+
+    /// Base labels attach to every sample line but never to `# HELP` /
+    /// `# TYPE`; histograms merge base labels ahead of `le`; values are
+    /// escaped per Prometheus 0.0.4; and the empty label set renders
+    /// byte-identically to the unlabeled exposition.
+    #[test]
+    fn labeled_exposition_and_escaping() {
+        let reg = Registry::new();
+        reg.store_bytes_read.add(7);
+        reg.server_queue_depth.set(2);
+        reg.query_latency.observe_secs(1e-6);
+        let text = reg.render_prometheus_with(&[("node", "127.0.0.1:7001"), ("role", "node")]);
+
+        assert!(text.contains(
+            "# TYPE lorif_store_bytes_read_total counter\n\
+             lorif_store_bytes_read_total{node=\"127.0.0.1:7001\",role=\"node\"} 7\n"
+        ));
+        assert!(text.contains(
+            "lorif_server_queue_depth{node=\"127.0.0.1:7001\",role=\"node\"} 2\n"
+        ));
+        // histogram: base labels first, `le` last; sum/count labeled too
+        assert!(text.contains(
+            "lorif_query_latency_seconds_bucket{node=\"127.0.0.1:7001\",role=\"node\",le=\"0.000001\"} 1\n"
+        ));
+        assert!(text.contains(
+            "lorif_query_latency_seconds_bucket{node=\"127.0.0.1:7001\",role=\"node\",le=\"+Inf\"} 1\n"
+        ));
+        assert!(text.contains(
+            "lorif_query_latency_seconds_count{node=\"127.0.0.1:7001\",role=\"node\"} 1\n"
+        ));
+        // HELP/TYPE lines stay unlabeled
+        for line in text.lines().filter(|l| l.starts_with('#')) {
+            assert!(!line.contains('{'), "metadata line must be unlabeled: {line}");
+        }
+
+        assert_eq!(reg.render_prometheus(), reg.render_prometheus_with(&[]));
+    }
+
+    #[test]
+    fn label_values_escape_backslash_quote_newline() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape_label_value("two\nlines"), "two\\nlines");
+        assert_eq!(
+            label_block(&[("k", "v\\\"\n")]),
+            "{k=\"v\\\\\\\"\\n\"}"
+        );
+        assert_eq!(label_block(&[]), "");
     }
 
     /// The ledger shape survives a registry round trip: read + skipped

@@ -17,7 +17,13 @@
 //! loadable trace.  One span tree per query: the track ID (`tid`) is
 //! `trace_id * 4096 + lane`, where lane 0 is the query root and lane
 //! `1 + shard` carries that shard's chunk visits, so a query's fan-out
-//! groups into adjacent tracks.
+//! groups into adjacent tracks.  The event `pid` is the real OS process
+//! ID, so per-process trace files from a coordinator and its shard
+//! nodes concatenate into one timeline with distinct process groups —
+//! and because the coordinator forwards its trace ID over the line
+//! protocol (`"trace"` field), a node's `server_batch` track for a
+//! scattered query carries the same `trace_id` as the coordinator's
+//! scatter span.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -100,8 +106,9 @@ impl TraceWriter {
         args: &[(&'static str, String)],
     ) {
         let line = format!(
-            "{{\"name\":{},\"cat\":\"lorif\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{start_us},\"dur\":{dur_us},\"args\":{{{}}}}}",
+            "{{\"name\":{},\"cat\":\"lorif\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{start_us},\"dur\":{dur_us},\"args\":{{{}}}}}",
             Value::Str(name.to_string()),
+            std::process::id(),
             ctx.tid(),
             Self::render_args(args, ctx),
         );
@@ -111,8 +118,9 @@ impl TraceWriter {
     /// Thread-scoped instant event (prune skips, cache hits, ...).
     pub fn instant_event(&self, name: &str, ctx: TraceCtx, args: &[(&'static str, String)]) {
         let line = format!(
-            "{{\"name\":{},\"cat\":\"lorif\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\"ts\":{},\"args\":{{{}}}}}",
+            "{{\"name\":{},\"cat\":\"lorif\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{},\"tid\":{},\"ts\":{},\"args\":{{{}}}}}",
             Value::Str(name.to_string()),
+            std::process::id(),
             ctx.tid(),
             self.now_us(),
             Self::render_args(args, ctx),
@@ -243,6 +251,11 @@ mod tests {
         assert_eq!(q.get("ts").and_then(Value::as_f64), Some(10.0));
         assert_eq!(q.get("dur").and_then(Value::as_f64), Some(25.0));
         assert_eq!(q.get("tid").and_then(Value::as_f64), Some((7 * 4096) as f64));
+        // pid is the real OS pid so multi-process traces merge cleanly
+        assert_eq!(
+            q.get("pid").and_then(Value::as_f64),
+            Some(std::process::id() as f64)
+        );
         assert_eq!(
             q.get("args").and_then(|a| a.get("trace_id")).and_then(Value::as_f64),
             Some(7.0)

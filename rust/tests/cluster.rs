@@ -17,20 +17,30 @@
 //! the replica answers its shards with the SAME exact results, and that
 //! the retry is visible in `lorif_coord_retry/failover_total`.
 //!
+//! The fleet scenarios attach a `Fleet` monitor to the coordinator:
+//! health probes must mark a black-holed (accepts, never replies)
+//! primary `down` and route its scatter legs PROACTIVELY to the
+//! replica — far under the io-timeout the reactive path would pay —
+//! with the decisions visible in the reply's `NodeStat`s, the JSONL
+//! event log, and the slow-query log; and the federation scrape loop
+//! must merge every node's exposition into one labeled page whose
+//! summed per-node byte ledger equals the local full-scan ledger.
+//!
 //! `LORIF_CLUSTER_NODES` raises the node count (the CI nightly
 //! hardening job runs a wider cluster than the per-PR default of 3).
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use lorif::attribution::{QueryGrads, QueryLayer, ScoreOutput, Scorer, SinkSpec};
 use lorif::curvature::{DenseCurvature, TruncatedCurvature};
 use lorif::linalg::Mat;
 use lorif::query::server::{GradSource, ServeSummary, Server, ServerConfig};
-use lorif::query::{RemotePlane, ShardPlane, TokenSource, Topology};
+use lorif::query::{Fleet, FleetOptions, RemotePlane, ShardPlane, TokenSource, Topology};
+use lorif::telemetry::federation;
 use lorif::runtime::{ExtractBatch, LayerGrads};
 use lorif::sketch::PruneMode;
 use lorif::store::{CodecId, ShardSet, ShardedWriter, StoreKind, StoreMeta};
@@ -235,6 +245,7 @@ fn start_node(
         queue_cap: 32,
         io_timeout_ms: 0,
         shards_served: subset.len(),
+        slowlog_cap: 0,
     })
     .unwrap();
     let addr = server.local_addr();
@@ -247,6 +258,7 @@ fn start_coordinator(spec: &str, io_timeout_ms: u64) -> Running {
     let planes: Vec<Box<dyn ShardPlane + Send>> = vec![Box::new(RemotePlane {
         topology,
         io_timeout: (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms)),
+        fleet: None,
     })];
     let server = Server::bind(ServerConfig {
         addr: "127.0.0.1:0".into(),
@@ -256,6 +268,7 @@ fn start_coordinator(spec: &str, io_timeout_ms: u64) -> Running {
         queue_cap: 32,
         io_timeout_ms,
         shards_served: 0,
+        slowlog_cap: 8,
     })
     .unwrap();
     let addr = server.local_addr();
@@ -263,6 +276,68 @@ fn start_coordinator(spec: &str, io_timeout_ms: u64) -> Running {
         server.run_planes(TokenSource { vocab: VOCAB, seq_len: SEQ_LEN }, planes)
     });
     Running { addr, handle }
+}
+
+/// A coordinator with a [`Fleet`] monitor attached: probe/scrape loops,
+/// proactive routing, federated `metrics`, the `fleet` stats section,
+/// and (optionally) the JSONL event log.
+fn start_fleet_coordinator(
+    spec: &str,
+    io_timeout_ms: u64,
+    opts: FleetOptions,
+) -> (Running, Arc<Fleet>) {
+    let topology = Topology::parse(spec, None).unwrap();
+    let fleet = Fleet::new(topology.clone(), opts).unwrap();
+    let planes: Vec<Box<dyn ShardPlane + Send>> = vec![Box::new(RemotePlane {
+        topology,
+        io_timeout: (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms)),
+        fleet: Some(Arc::clone(&fleet)),
+    })];
+    let mut server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        window_ms: 0,
+        topk: K,
+        queue_cap: 32,
+        io_timeout_ms,
+        shards_served: 0,
+        slowlog_cap: 8,
+    })
+    .unwrap();
+    server.set_fleet(Arc::clone(&fleet));
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || {
+        server.run_planes(TokenSource { vocab: VOCAB, seq_len: SEQ_LEN }, planes)
+    });
+    (Running { addr, handle }, fleet)
+}
+
+/// A TCP endpoint that accepts connections and then NEVER replies — the
+/// hung-node case, where only a read timeout (not a connect error)
+/// reveals death.  Returns the address and a handle whose drop stops
+/// the listener.
+fn black_hole() -> (SocketAddr, std::sync::mpsc::Sender<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    std::thread::spawn(move || {
+        listener.set_nonblocking(true).unwrap();
+        let mut held: Vec<TcpStream> = Vec::new();
+        loop {
+            match rx.try_recv() {
+                Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                _ => return,
+            }
+            match listener.accept() {
+                Ok((s, _)) => held.push(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => return,
+            }
+        }
+    });
+    (addr, tx)
 }
 
 /// One request, one reply line, parsed.
@@ -466,4 +541,292 @@ fn killing_a_node_mid_run_fails_over_to_its_replica_with_exact_results() {
     }
     let s = shutdown(replica);
     assert_eq!(s.served, N_QUERIES - 2, "replica served exactly the post-kill queries");
+}
+
+/// A hung primary (accepts, never replies) is detected by the health
+/// probes and routed around PROACTIVELY: scatter legs go straight to
+/// the replica, so every query answers far under the `--io-timeout-ms`
+/// the reactive retry path would have paid.  The decision is visible in
+/// the reply's `NodeStat`s (`proactive`, zero retries), the `stats`
+/// verb's fleet section, the federated metrics, the slow-query log, and
+/// the JSONL event log.
+#[test]
+fn probe_marked_down_primary_is_routed_around_before_io_timeout() {
+    let n_nodes = cluster_nodes();
+    let shards = 2 * n_nodes;
+    let stores = build_stores("probe", shards, shards * 8);
+    let (kernel, prune) = (Kernel::GradDot, PruneMode::Off);
+
+    // node 0's primary is a black hole; its REPLICA is the real server
+    let (bh_addr, bh_stop) = black_hole();
+    let replica = start_node(kernel, &stores, vec![0, 1], prune);
+    let others: Vec<Running> =
+        (1..n_nodes).map(|i| start_node(kernel, &stores, vec![2 * i, 2 * i + 1], prune)).collect();
+    let mut parts = vec![format!("{bh_addr}=0-1/{}", replica.addr)];
+    parts.extend(
+        others.iter().enumerate().map(|(j, n)| format!("{}={}-{}", n.addr, 2 * (j + 1), 2 * (j + 1) + 1)),
+    );
+    let spec = parts.join(",");
+
+    let dir = std::env::temp_dir().join(format!("lorif_cluster_events_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let events = dir.join("probe_failover.jsonl");
+    let io_timeout_ms: u64 = 4000; // the bound the proactive route must beat
+    let (coord, _fleet) = start_fleet_coordinator(
+        &spec,
+        io_timeout_ms,
+        FleetOptions {
+            probe_interval: Duration::from_millis(50),
+            probe_timeout: Duration::from_millis(200),
+            scrape_interval: Duration::from_millis(200),
+            fail_threshold: 2,
+            event_log: Some(events.clone()),
+        },
+    );
+
+    // the probe loop alone (NO query traffic) must flip the black hole
+    // to `down` within fail_threshold probe rounds plus slack
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let v = request(coord.addr, "{\"cmd\": \"stats\"}");
+        let fleet_arr = v
+            .get("fleet")
+            .and_then(Value::as_arr)
+            .expect("coordinator stats must carry a fleet section");
+        assert_eq!(fleet_arr.len(), n_nodes + 1, "one endpoint per primary + replica");
+        let state = fleet_arr
+            .iter()
+            .find(|e| e.get("addr").and_then(Value::as_str) == Some(bh_addr.to_string().as_str()))
+            .and_then(|e| e.get("state").and_then(Value::as_str))
+            .expect("black-hole endpoint listed")
+            .to_string();
+        if state == "down" {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "probes never marked the hung primary down (state {state})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // every query: exact results, answered by the replica with zero
+    // retries, and far under the io-timeout (the reactive path would
+    // block the full 4s on the black hole first)
+    let mut local = make_scorer(kernel, &stores, None, prune);
+    for q in 0..N_QUERIES {
+        let tokens = query_tokens(q);
+        let (want, _) = local_reference(&mut local, &tokens);
+        let t0 = Instant::now();
+        let v = request(coord.addr, &tokens_line(&tokens));
+        let elapsed = t0.elapsed();
+        assert_eq!(wire_bits(&v), want, "proactive query {q}: result incomplete or inexact");
+        assert!(
+            elapsed < Duration::from_millis(io_timeout_ms / 2),
+            "query {q} took {elapsed:?}: the scatter paid the io-timeout it must avoid"
+        );
+        let stats = v.get("nodes").and_then(Value::as_arr).unwrap();
+        let fo: Vec<&Value> = stats
+            .iter()
+            .filter(|s| s.get("failover").and_then(Value::as_bool) == Some(true))
+            .collect();
+        assert_eq!(fo.len(), 1, "exactly node 0 fails over: {v}");
+        assert_eq!(fo[0].get("addr").and_then(Value::as_str), Some(replica.addr.to_string().as_str()));
+        assert_eq!(fo[0].get("proactive").and_then(Value::as_bool), Some(true));
+        assert_eq!(fo[0].get("retries").and_then(Value::as_usize), Some(0), "proactive = no retry");
+    }
+
+    // the decisions are visible in the federated exposition (the
+    // coordinator's own series now carry {role="coordinator"})
+    let m = request(coord.addr, "{\"cmd\": \"metrics\"}");
+    let text = m.get("metrics").and_then(Value::as_str).unwrap().to_string();
+    let bh = bh_addr.to_string();
+    let reroutes =
+        federation::sample_value(&text, "lorif_coord_reroute_total", &[("role", "coordinator")])
+            .expect("reroute counter present");
+    assert!(reroutes >= N_QUERIES as f64, "every scatter leg rerouted: {reroutes}");
+    assert_eq!(
+        federation::sample_value(&text, "lorif_fleet_health_state", &[("node", &bh)]),
+        Some(2.0),
+        "black hole gauged down"
+    );
+    assert_eq!(
+        federation::sample_value(&text, "lorif_fleet_up", &[("node", &bh)]),
+        Some(0.0),
+        "black hole never scraped"
+    );
+
+    // slowlog entries carry the per-node scatter stats of the pass
+    let s = request(coord.addr, "{\"cmd\": \"slowlog\"}");
+    let entries = s.get("slowlog").and_then(Value::as_arr).expect("slowlog array");
+    assert_eq!(entries.len(), N_QUERIES);
+    for e in entries {
+        let nodes = e.get("nodes").and_then(Value::as_arr).expect("slowlog entry has nodes");
+        assert_eq!(nodes.len(), n_nodes);
+        assert!(
+            nodes.iter().any(|n| n.get("proactive").and_then(Value::as_bool) == Some(true)),
+            "the proactive leg is recorded: {e}"
+        );
+    }
+
+    let summary = shutdown(coord);
+    assert_eq!(summary.served, N_QUERIES);
+    assert_eq!(summary.failed, 0);
+    let s = shutdown(replica);
+    assert_eq!(s.served, N_QUERIES, "the replica answered every query");
+    for n in others {
+        shutdown(n);
+    }
+    drop(bh_stop);
+
+    // the JSONL event log: documented schema, monotone timestamps, and
+    // the node_down + proactive-failover story
+    let text = std::fs::read_to_string(&events).unwrap();
+    let parsed: Vec<Value> =
+        text.lines().map(|l| Value::parse(l).expect("event line parses")).collect();
+    assert!(!parsed.is_empty());
+    let mut prev = (0.0, -1.0);
+    for e in &parsed {
+        let ts = e.get("ts_ms").and_then(Value::as_f64).expect("ts_ms");
+        let seq = e.get("seq").and_then(Value::as_f64).expect("seq");
+        assert!(e.get("event").and_then(Value::as_str).is_some());
+        assert!(e.get("node").and_then(Value::as_str).is_some());
+        assert!(ts >= prev.0, "ts_ms must be monotone");
+        assert!(seq > prev.1, "seq must strictly increase");
+        prev = (ts, seq);
+    }
+    assert!(
+        parsed.iter().any(|e| e.get("event").and_then(Value::as_str) == Some("node_down")
+            && e.get("node").and_then(Value::as_str) == Some(bh.as_str())),
+        "node_down logged for the black hole"
+    );
+    assert!(
+        parsed.iter().any(|e| e.get("event").and_then(Value::as_str) == Some("failover")
+            && e.get("node").and_then(Value::as_str) == Some(bh.as_str())
+            && e.get("proactive").and_then(Value::as_bool) == Some(true)
+            && e.get("replica").and_then(Value::as_str)
+                == Some(replica.addr.to_string().as_str())),
+        "proactive failover logged against the primary"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One scrape of the coordinator shows the whole fleet: the federated
+/// exposition carries every node's store ledger under its own `node`
+/// label, the per-node sums reconcile with the local full-scan ledger,
+/// and the coordinator's own series are labeled `{role="coordinator"}`.
+#[test]
+fn federated_metrics_carry_every_nodes_labeled_ledger() {
+    let n_nodes = cluster_nodes();
+    let shards = 2 * n_nodes;
+    let stores = build_stores("fleet", shards, shards * 8);
+    let (kernel, prune) = (Kernel::Lorif, PruneMode::Off);
+
+    let nodes: Vec<Running> =
+        (0..n_nodes).map(|i| start_node(kernel, &stores, vec![2 * i, 2 * i + 1], prune)).collect();
+    let spec = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| format!("{}={}-{}", n.addr, 2 * i, 2 * i + 1))
+        .collect::<Vec<_>>()
+        .join(",");
+    let (coord, _fleet) = start_fleet_coordinator(
+        &spec,
+        0,
+        FleetOptions {
+            probe_interval: Duration::from_millis(100),
+            probe_timeout: Duration::from_millis(250),
+            scrape_interval: Duration::from_millis(100),
+            fail_threshold: 3,
+            event_log: None,
+        },
+    );
+
+    let mut local = make_scorer(kernel, &stores, None, prune);
+    let mut local_total = 0u64;
+    for q in 0..N_QUERIES {
+        let tokens = query_tokens(q);
+        let (want, scan) = local_reference(&mut local, &tokens);
+        local_total += scan;
+        let v = request(coord.addr, &tokens_line(&tokens));
+        assert_eq!(wire_bits(&v), want, "query {q}");
+    }
+
+    // poll until a scrape AFTER the last query landed: summed over the
+    // fleet's labeled series, read + skipped equals the local full-scan
+    // ledger (the registry counters preserve the same invariant the
+    // per-reply ledgers do)
+    let node_addrs: Vec<String> = nodes.iter().map(|n| n.addr.to_string()).collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let text = loop {
+        let m = request(coord.addr, "{\"cmd\": \"metrics\"}");
+        let text = m.get("metrics").and_then(Value::as_str).unwrap().to_string();
+        let sum: f64 = node_addrs
+            .iter()
+            .map(|a| {
+                let labels: &[(&str, &str)] = &[("node", a.as_str()), ("role", "node")];
+                federation::sample_value(&text, "lorif_store_bytes_read_total", labels)
+                    .unwrap_or(0.0)
+                    + federation::sample_value(&text, "lorif_store_bytes_skipped_total", labels)
+                        .unwrap_or(0.0)
+            })
+            .sum();
+        if sum as u64 == local_total {
+            break text;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "federated ledger never reconciled: fleet sum {sum}, local {local_total}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+
+    // every node contributes its own distinctly-labeled series, every
+    // endpoint scrapes up, and the coordinator's own counters are there
+    // under {role="coordinator"}
+    for a in &node_addrs {
+        let labels: &[(&str, &str)] = &[("node", a.as_str()), ("role", "node")];
+        assert!(
+            federation::sample_value(&text, "lorif_store_bytes_read_total", labels).is_some(),
+            "node {a} missing from the federated page"
+        );
+        assert_eq!(
+            federation::sample_value(&text, "lorif_fleet_up", &[("node", a.as_str())]),
+            Some(1.0),
+            "node {a} not scraped up"
+        );
+    }
+    let distinct: std::collections::BTreeSet<String> =
+        federation::samples(&text, "lorif_store_bytes_read_total")
+            .into_iter()
+            .filter_map(|(ls, _)| ls.into_iter().find(|(k, _)| k == "node").map(|(_, v)| v))
+            .collect();
+    assert_eq!(distinct.len(), n_nodes, "one node label per member");
+    assert_eq!(
+        federation::sample_value(&text, "lorif_server_served_total", &[("role", "coordinator")]),
+        Some(N_QUERIES as f64),
+        "coordinator's own series labeled and current"
+    );
+
+    // the coordinator's slow-query log retained every (tiny) batch,
+    // slowest-first, each with a trace ID and full per-node stats
+    let s = request(coord.addr, "{\"cmd\": \"slowlog\"}");
+    let entries = s.get("slowlog").and_then(Value::as_arr).expect("slowlog array");
+    assert_eq!(entries.len(), N_QUERIES);
+    let walls: Vec<f64> =
+        entries.iter().map(|e| e.get("wall_s").and_then(Value::as_f64).unwrap()).collect();
+    assert!(walls.windows(2).all(|w| w[0] >= w[1]), "slowlog sorted slowest-first: {walls:?}");
+    for e in entries {
+        assert!(e.get("trace_id").and_then(Value::as_usize).unwrap() >= 1);
+        assert!(e.get("latency").and_then(|l| l.get("bytes_read")).is_some());
+        assert_eq!(e.get("nodes").and_then(Value::as_arr).map(|n| n.len()), Some(n_nodes));
+    }
+
+    let summary = shutdown(coord);
+    assert_eq!(summary.served, N_QUERIES);
+    assert_eq!(summary.failed, 0);
+    for n in nodes {
+        let s = shutdown(n);
+        assert_eq!(s.served, N_QUERIES);
+    }
 }

@@ -145,6 +145,7 @@ fn start_server(name: &str, cfg_mut: impl FnOnce(&mut ServerConfig), delay_ms: u
         queue_cap: 32,
         io_timeout_ms: 0,
         shards_served: 0,
+        slowlog_cap: 32,
     };
     cfg_mut(&mut cfg);
     let scorers = scorer_pool(&base, 2);
@@ -495,6 +496,112 @@ fn metrics_exposition_reconciles_under_concurrent_load() {
 }
 
 #[test]
+fn health_verb_reports_liveness_fields() {
+    let r = start_server(
+        "health",
+        |c| {
+            c.max_batch = 1;
+            c.window_ms = 0;
+        },
+        0,
+    );
+    let addr = r.addr;
+    // probe before any query: health must be observable on a fresh server
+    let h = request(addr, "{\"cmd\": \"health\"}");
+    assert_eq!(h.get("ok").and_then(Value::as_bool), Some(true), "{h}");
+    assert_eq!(h.get("served").and_then(Value::as_usize), Some(0));
+    assert_eq!(h.get("workers").and_then(Value::as_usize), Some(2));
+    assert_eq!(h.get("queue_depth").and_then(Value::as_usize), Some(0));
+    assert!(h.get("uptime_s").and_then(Value::as_f64).unwrap() >= 0.0);
+    assert!(h.get("shards").and_then(Value::as_usize).is_some());
+    // ...and it tracks the served counter
+    let v = request(addr, "{\"tokens\": [2, 3]}");
+    assert!(v.get("topk").is_some(), "{v}");
+    let h = request(addr, "{\"cmd\": \"health\"}");
+    assert_eq!(h.get("served").and_then(Value::as_usize), Some(1), "{h}");
+    finish(r);
+}
+
+#[test]
+fn slowlog_verb_returns_slowest_batches_with_breakdowns() {
+    let r = start_server(
+        "slowlog",
+        |c| {
+            c.max_batch = 1;
+            c.window_ms = 0;
+            c.slowlog_cap = 2;
+        },
+        5,
+    );
+    let addr = r.addr;
+    // empty before any batch
+    let v = request(addr, "{\"cmd\": \"slowlog\"}");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v}");
+    assert!(v.get("slowlog").and_then(Value::as_arr).unwrap().is_empty());
+    // three single-query batches into a cap-2 ring: the ring keeps the
+    // two slowest (whichever they are — asserting the SHAPE and the
+    // slowest-first ordering, which is deterministic)
+    for t in 0..3 {
+        let v = request(addr, &format!("{{\"tokens\": [{t}, 2]}}"));
+        assert!(v.get("topk").is_some(), "{v}");
+    }
+    let v = request(addr, "{\"cmd\": \"slowlog\"}");
+    let entries = v.get("slowlog").and_then(Value::as_arr).unwrap();
+    assert_eq!(entries.len(), 2, "cap-2 ring holds exactly 2 of the 3 batches: {v}");
+    let walls: Vec<f64> =
+        entries.iter().map(|e| e.get("wall_s").and_then(Value::as_f64).unwrap()).collect();
+    assert!(walls[0] >= walls[1], "slowest-first ordering: {walls:?}");
+    for e in entries {
+        assert_eq!(e.get("batch").and_then(Value::as_usize), Some(1), "{e}");
+        assert!(e.get("trace_id").and_then(Value::as_usize).is_some(), "{e}");
+        assert!(e.get("ts_s").and_then(Value::as_f64).unwrap() >= 0.0, "{e}");
+        let lat = e.get("latency").expect("latency breakdown");
+        assert!(lat.get("bytes_read").and_then(Value::as_usize).unwrap() > 0, "{e}");
+        assert!(lat.get("compute_s").and_then(Value::as_f64).is_some(), "{e}");
+        // local plane: no nodes array
+        assert!(e.get("nodes").is_none(), "{e}");
+    }
+    // the registry tracked admissions and occupancy
+    let m = request(addr, "{\"cmd\": \"metrics\"}");
+    let text = m.get("metrics").and_then(Value::as_str).unwrap().to_string();
+    assert!(metric_value(&text, "lorif_slowlog_admitted_total") >= 2);
+    assert_eq!(metric_value(&text, "lorif_slowlog_entries"), 2);
+    finish(r);
+}
+
+#[test]
+fn caller_trace_id_is_adopted_and_malformed_trace_is_ignored() {
+    let r = start_server(
+        "trace_field",
+        |c| {
+            c.max_batch = 1;
+            c.window_ms = 0;
+            c.slowlog_cap = 8;
+        },
+        0,
+    );
+    let addr = r.addr;
+    // a forwarded trace ID must label the batch's slowlog entry — the
+    // handle that joins a coordinator's trace file with the node's
+    let v = request(addr, "{\"tokens\": [1, 2], \"trace\": 777}");
+    assert!(v.get("topk").is_some(), "{v}");
+    // malformed trace values are ignored, never rejected
+    for bad in ["\"x\"", "-3", "1.5", "0"] {
+        let v = request(addr, &format!("{{\"tokens\": [3], \"trace\": {bad}}}"));
+        assert!(v.get("topk").is_some(), "trace {bad} must not reject the query: {v}");
+    }
+    let v = request(addr, "{\"cmd\": \"slowlog\"}");
+    let entries = v.get("slowlog").and_then(Value::as_arr).unwrap();
+    assert_eq!(entries.len(), 5, "{v}");
+    let with_777 = entries
+        .iter()
+        .filter(|e| e.get("trace_id").and_then(Value::as_usize) == Some(777))
+        .count();
+    assert_eq!(with_777, 1, "exactly the forwarded ID is adopted: {v}");
+    finish(r);
+}
+
+#[test]
 fn cached_and_cold_replies_are_bit_identical() {
     // same request against a cache-backed pool and a cold pool: the
     // top-k indices and scores in the reply must match exactly
@@ -522,6 +629,7 @@ fn cached_and_cold_replies_are_bit_identical() {
             queue_cap: 8,
             io_timeout_ms: 0,
             shards_served: 0,
+            slowlog_cap: 32,
         })
         .unwrap();
         let addr = server.local_addr();
